@@ -1,0 +1,70 @@
+//! The Table 4 / Fig. 5 study: how the noise/signal ratio of the Eq. 7
+//! synthetic series drives discord-search complexity, with an ASCII
+//! rendering of the D-/T-speedup curves.
+//!
+//! ```bash
+//! cargo run --release --example noise_complexity [-- --n 20000 --runs 3]
+//! ```
+
+use hstime::algo::{self, Algorithm};
+use hstime::metrics::{cps, d_speedup, t_speedup};
+use hstime::prelude::*;
+use hstime::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.get_usize("n", 10_000);
+    let runs = args.get_usize("runs", 2);
+    let s = 120;
+
+    println!("Eq. 7 noise sweep: N={n}, s={s}, P=4, alphabet=4, {runs} runs\n");
+    println!(
+        "{:>8} {:>13} {:>12} {:>8} {:>8} {:>10} {:>10}",
+        "E", "HOT SAX", "HST", "HS cps", "HST cps", "D-speedup", "T-speedup"
+    );
+
+    let mut curve: Vec<(f64, f64)> = Vec::new();
+    for &e in &hstime::tables::NOISE_LEVELS {
+        let ts = generators::sine_with_noise(n, e, 424_242).into_series("sine");
+        let (mut hs_c, mut hst_c) = (0u64, 0u64);
+        let (mut hs_t, mut hst_t) = (0.0f64, 0.0f64);
+        for r in 0..runs {
+            let params = SearchParams::new(s, 4, 4).with_seed(r as u64);
+            let hs = algo::hotsax::HotSax.run(&ts, &params)?;
+            let hst = algo::hst::HstSearch::default().run(&ts, &params)?;
+            assert!((hs.discords[0].nnd - hst.discords[0].nnd).abs() < 1e-9);
+            hs_c += hs.distance_calls;
+            hst_c += hst.distance_calls;
+            hs_t += hs.elapsed.as_secs_f64();
+            hst_t += hst.elapsed.as_secs_f64();
+        }
+        let (hs_c, hst_c) = (hs_c / runs as u64, hst_c / runs as u64);
+        let nseq = ts.num_sequences(s);
+        let dsp = d_speedup(hs_c, hst_c);
+        println!(
+            "{:>8} {:>13} {:>12} {:>8.0} {:>8.0} {:>9.2}x {:>9.2}x",
+            e,
+            hs_c,
+            hst_c,
+            cps(hs_c, nseq, 1),
+            cps(hst_c, nseq, 1),
+            dsp,
+            t_speedup(hs_t, hst_t)
+        );
+        curve.push((e, dsp));
+    }
+
+    // ASCII rendering of Fig. 5 (log-x, linear-y)
+    println!("\nD-speedup vs noise amplitude (Fig. 5):");
+    let max_sp = curve.iter().map(|&(_, y)| y).fold(1.0, f64::max);
+    for &(e, y) in &curve {
+        let bars = ((y / max_sp) * 56.0).round() as usize;
+        println!("E={e:<8} {:>6.1}x |{}", y, "#".repeat(bars.max(1)));
+    }
+    println!(
+        "\npaper's shape: speedup is largest at very low noise (>100x at\n\
+         E=1e-4), dips toward E≈0.5–1, and degrades for both algorithms\n\
+         when noise dominates (E=10)."
+    );
+    Ok(())
+}

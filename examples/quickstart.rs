@@ -1,0 +1,48 @@
+//! Quickstart: find the top-3 discords of a synthetic ECG with HST.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use hstime::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Get a time series. Here: 20 000 points of ECG-like data with two
+    //    injected rhythm disturbances (in real use: ts::io::load_text).
+    let ts = generators::ecg_like(20_000, 260, 2, 42).into_series("demo-ecg");
+
+    // 2. Configure the search: discord length s = 300, SAX with P = 4
+    //    segments over a 4-letter alphabet (the paper's ECG settings).
+    let params = SearchParams::new(300, 4, 4).with_discords(3).with_seed(1);
+
+    // 3. Run HOT SAX Time.
+    let report = algo::hst::HstSearch::default().run(&ts, &params)?;
+
+    println!(
+        "searched {} sequences with {} distance calls (cps {:.1}) in {:.3}s",
+        report.n_sequences,
+        report.distance_calls,
+        report.cps(),
+        report.elapsed.as_secs_f64()
+    );
+    for (rank, d) in report.discords.iter().enumerate() {
+        println!(
+            "#{} discord at t={:<6} nnd={:.4}  nearest neighbor at t={}",
+            rank + 1,
+            d.position,
+            d.nnd,
+            d.neighbor
+        );
+    }
+
+    // 4. Exactness check against the O(N²) brute force (small series only).
+    let small = ts.slice_prefix(4_000);
+    let hst = algo::hst::HstSearch::default().run(&small, &params)?;
+    let brute = algo::brute::BruteForce.run(&small, &params)?;
+    assert!((hst.discords[0].nnd - brute.discords[0].nnd).abs() < 1e-9);
+    println!(
+        "\nexactness check vs brute force: OK ({}x fewer distance calls)",
+        brute.distance_calls / hst.distance_calls.max(1)
+    );
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Batch-search service demo: start the coordinator + TCP server, submit
+//! a mixed workload through the JSON-lines client, collect results, shut
+//! down. This is the "deployment" path of the framework.
+//!
+//! ```bash
+//! cargo run --release --example service_demo
+//! ```
+
+use std::sync::mpsc;
+
+use hstime::service::{serve, Client};
+use hstime::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    // server on an ephemeral port, in a background thread
+    let (tx, rx) = mpsc::channel();
+    let server = std::thread::spawn(move || {
+        serve("127.0.0.1:0", 3, 16, move |addr| {
+            tx.send(addr).unwrap();
+        })
+        .expect("server failed");
+    });
+    let addr = rx.recv()?;
+    println!("service up at {addr}");
+
+    let mut client = Client::connect(addr)?;
+
+    // a mixed workload: three datasets × two algorithms
+    let jobs: Vec<(String, u64)> = ["ECG 15", "Shuttle TEK 16", "NPRS 43"]
+        .iter()
+        .flat_map(|ds| ["hst", "hotsax"].map(|algo| (ds.to_string(), algo)))
+        .map(|(ds, algo)| {
+            let d = hstime::ts::datasets::by_name(&ds).unwrap();
+            let req = Json::obj()
+                .set("cmd", "submit")
+                .set("dataset", ds.as_str())
+                .set("algo", algo)
+                .set("scale_div", 4u64)
+                .set(
+                    "params",
+                    Json::obj()
+                        .set("s", d.s)
+                        .set("p", d.p)
+                        .set("alphabet", d.alphabet)
+                        .set("k", 2u64),
+                );
+            let id = client.submit(req).expect("submit");
+            (format!("{ds}/{algo}"), id)
+        })
+        .collect();
+    println!("submitted {} jobs", jobs.len());
+
+    for (label, id) in jobs {
+        let reply = client.wait(id)?;
+        let report = reply.get("report").expect("report");
+        println!(
+            "  {label:<24} calls={:<9} cps={:<7.1} elapsed={:.3}s discords={}",
+            report.get("distance_calls").unwrap().as_u64().unwrap(),
+            report.get("cps").unwrap().as_f64().unwrap(),
+            report.get("elapsed_secs").unwrap().as_f64().unwrap(),
+            report.get("discords").unwrap().as_arr().unwrap().len(),
+        );
+    }
+
+    // demonstrate input validation through the protocol
+    let bad = client.call(&Json::parse(r#"{"cmd":"submit","dataset":"nope","params":{"s":64}}"#).unwrap())?;
+    println!(
+        "\nbad dataset handled: ok={} ({})",
+        bad.get("ok").unwrap().as_bool().unwrap(),
+        bad.get("error").and_then(|e| e.as_str()).unwrap_or("job queued; will fail at run")
+    );
+
+    client.shutdown()?;
+    // unblock the accept loop
+    let _ = std::net::TcpStream::connect(addr);
+    let _ = server.join();
+    println!("service shut down cleanly");
+    Ok(())
+}

@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels for the hstime distance hot-spot.
+
+All kernels are authored for the TPU memory model (BlockSpec-driven HBM->VMEM
+staging, MXU-friendly dot products) but are lowered with ``interpret=True`` so
+the resulting HLO runs on the CPU PJRT plugin used by the Rust runtime.
+
+Exports:
+    pair_dist      -- row-wise Euclidean distance between two [B, s] blocks
+    batch_dist     -- distances from one query row to a [B, s] candidate block
+    mp_tile        -- [TA, TB] distance tile via an MXU dot product
+"""
+from .pair_dist import pair_dist
+from .batch_dist import batch_dist
+from .mp_tile import mp_tile
+
+__all__ = ["pair_dist", "batch_dist", "mp_tile"]

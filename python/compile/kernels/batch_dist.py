@@ -1,0 +1,67 @@
+"""Pallas kernel: distances from one query to a block of candidates.
+
+This is the hot-spot of the HST inner loop's *clarification* step: when a
+sequence survives pruning it becomes a good discord candidate and its
+distance to (almost) every other sequence must be computed (paper Sec. 3.1).
+The Rust coordinator chunks the candidate set and early-exits between chunks
+when the running minimum drops below ``bestDist``.
+
+The kernel uses the scalar-product identity the paper itself recommends
+(Eq. 3, after Zhu et al. 2018):
+
+    d(q, c)^2 = ||q||^2 + ||c||^2 - 2 q.c
+
+For z-normalized rows ``||.||^2 == s`` but we compute the norms in-kernel so
+the artifact is also correct for raw (non-normalized) inputs, e.g. the DADD
+protocol of Table 7.  The ``q.c`` term is a matvec -- on a real TPU this is
+an MXU job; under ``interpret=True`` it lowers to a plain HLO dot.
+
+Grid: candidate row-blocks.  Per step the kernel stages the full query
+(``[1, s_pad]``) plus a ``[block_b, s_pad]`` candidate slab into VMEM.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _batch_dist_kernel(q_ref, c_ref, o_ref):
+    q = q_ref[...]          # [1, s_pad]
+    c = c_ref[...]          # [block_b, s_pad]
+    qq = jnp.sum(q * q)     # scalar ||q||^2
+    cc = jnp.sum(c * c, axis=-1)            # [block_b]
+    qc = jnp.sum(c * q, axis=-1)            # [block_b] dot(q, c_i)
+    sq = jnp.maximum(qq + cc - 2.0 * qc, 0.0)
+    o_ref[...] = jnp.sqrt(sq)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def batch_dist(q, c, *, block_b=128):
+    """Euclidean distances from query ``q`` to every row of ``c``.
+
+    Args:
+        q: f32[s_pad] query sequence (z-normalized + zero-padded by caller).
+        c: f32[B, s_pad] candidate block.
+        block_b: rows per grid step (static).
+
+    Returns:
+        f32[B] distances.
+    """
+    (s_pad,) = q.shape
+    b, s_pad_c = c.shape
+    assert s_pad == s_pad_c, (q.shape, c.shape)
+    assert b % block_b == 0, f"B={b} must be a multiple of block_b={block_b}"
+    q2 = q.reshape(1, s_pad)
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _batch_dist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, s_pad), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, s_pad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), c.dtype),
+        interpret=True,
+    )(q2, c)

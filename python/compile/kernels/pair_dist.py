@@ -1,0 +1,61 @@
+"""Pallas kernel: row-wise Euclidean distance between two blocks.
+
+This is the compute hot-spot of the HST *warm-up* phase (paper Sec. 3.3):
+a chain of distance calls between consecutive sequences in the shuffled
+cluster order -- N independent pair distances, which batch perfectly.
+
+Inputs are rows that the Rust coordinator has already z-normalized and
+zero-padded to ``s_pad``.  Zero padding leaves the Euclidean distance
+unchanged because both operands are zero in the padded tail, so a single
+AOT artifact serves every sequence length ``s <= s_pad``.
+
+TPU mapping: the grid iterates over row-blocks of size ``block_b``; each
+step stages an ``[block_b, s_pad]`` slab of X and Y into VMEM (BlockSpec),
+does a vectorized squared-difference reduction on the VPU, and writes a
+``[block_b]`` strip of the output.  VMEM footprint per step is
+``2 * block_b * s_pad * 4`` bytes (+ the output strip), far below the
+~16 MiB VMEM budget for the shipped configurations.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pair_dist_kernel(x_ref, y_ref, o_ref):
+    """o[i] = || x[i, :] - y[i, :] ||_2 for the rows of this block."""
+    x = x_ref[...]
+    y = y_ref[...]
+    diff = x - y
+    sq = jnp.sum(diff * diff, axis=-1)
+    o_ref[...] = jnp.sqrt(sq)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def pair_dist(x, y, *, block_b=128):
+    """Row-wise Euclidean distance between ``x`` and ``y``.
+
+    Args:
+        x: f32[B, s_pad] -- z-normalized, zero-padded sequences.
+        y: f32[B, s_pad] -- same shape as ``x``.
+        block_b: rows per grid step (static).
+
+    Returns:
+        f32[B] distances.
+    """
+    b, s_pad = x.shape
+    assert y.shape == (b, s_pad), (x.shape, y.shape)
+    assert b % block_b == 0, f"B={b} must be a multiple of block_b={block_b}"
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _pair_dist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, s_pad), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, s_pad), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the Pallas kernels (the correctness contract).
+
+Every kernel in this package must match its ``ref_*`` twin to float32
+tolerance across the pytest shape/dtype sweeps in python/tests/.
+"""
+import jax.numpy as jnp
+
+
+def znorm(x, axis=-1, eps=0.0):
+    """Z-normalize along ``axis`` (population std, matching the Rust side)."""
+    mu = jnp.mean(x, axis=axis, keepdims=True)
+    sd = jnp.std(x, axis=axis, keepdims=True)
+    return (x - mu) / (sd + eps)
+
+
+def ref_pair_dist(x, y):
+    """Row-wise Euclidean distance: f32[B, s], f32[B, s] -> f32[B]."""
+    d = x - y
+    return jnp.sqrt(jnp.sum(d * d, axis=-1))
+
+
+def ref_batch_dist(q, c):
+    """Distances from query f32[s] to each row of f32[B, s] -> f32[B]."""
+    d = c - q[None, :]
+    return jnp.sqrt(jnp.sum(d * d, axis=-1))
+
+
+def ref_mp_tile(a, b):
+    """Dense distance tile: f32[TA, s], f32[TB, s] -> f32[TA, TB]."""
+    d = a[:, None, :] - b[None, :, :]
+    return jnp.sqrt(jnp.sum(d * d, axis=-1))
+
+
+def ref_znorm_dist_eq2(pk, pl_):
+    """Paper Eq. 2: explicit z-normalized distance between two raw sequences."""
+    return ref_pair_dist(znorm(pk)[None, :], znorm(pl_)[None, :])[0]
+
+
+def ref_znorm_dist_eq3(pk, pl_):
+    """Paper Eq. 3: the scalar-product identity for the same quantity."""
+    s = pk.shape[-1]
+    mu_k, mu_l = jnp.mean(pk), jnp.mean(pl_)
+    sd_k, sd_l = jnp.std(pk), jnp.std(pl_)
+    dot = jnp.dot(pk, pl_)
+    corr = (dot - s * mu_k * mu_l) / (s * sd_k * sd_l)
+    return jnp.sqrt(jnp.maximum(2.0 * s * (1.0 - corr), 0.0))

@@ -1,0 +1,66 @@
+"""Layer-2 JAX compute graphs for hstime (build-time only).
+
+The paper's "model" is not a neural network -- it is the distance pipeline of
+the discord search.  This module composes the Layer-1 Pallas kernels with the
+jnp epilogues (reductions, exclusion-band masking) and is what aot.py lowers
+to the HLO-text artifacts the Rust runtime executes.
+
+Functions
+---------
+warmup_chain(x, y)
+    N pair distances of the HST warm-up / short-range-topology phases.
+query_row(q, c)
+    One inner-loop clarification chunk: distances from a candidate discord
+    to a block of sequences, plus the chunk min/argmin so the coordinator
+    can early-exit without scanning the returned vector.
+mp_tile_masked(a, b, row0, col0, excl)
+    One SCAMP tile: dense distances with the non-self-match band
+    |global_row - global_col| < excl masked out, reduced to per-row and
+    per-column (min, argmin) profiles.
+"""
+import jax
+import jax.numpy as jnp
+
+from .kernels import pair_dist, batch_dist, mp_tile
+
+BIG = jnp.float32(3.0e38)  # sentinel for masked entries (< f32 inf, PJRT-safe)
+
+
+def warmup_chain(x, y):
+    """Row-wise distances d(x[i], y[i]).  f32[B,s_pad] x2 -> f32[B]."""
+    return (pair_dist(x, y),)
+
+
+def query_row(q, c):
+    """Distances from query ``q`` to candidate block ``c`` + chunk min.
+
+    Returns (dists f32[B], dmin f32[], argmin i32[]).
+    """
+    d = batch_dist(q, c)
+    return d, jnp.min(d), jnp.argmin(d).astype(jnp.int32)
+
+
+def mp_tile_masked(a, b, row0, col0, excl):
+    """One masked SCAMP tile with row/column profile reductions.
+
+    Args:
+        a: f32[TA, s_pad] block of z-normalized sequences (rows row0..row0+TA).
+        b: f32[TB, s_pad] block (rows col0..col0+TB).
+        row0, col0: i32[] global offsets of the two blocks.
+        excl: i32[] non-self-match exclusion half-width (the sequence length).
+
+    Returns:
+        rowmin f32[TA], rowarg i32[TA], colmin f32[TB], colarg i32[TB]
+        (argmins are *global* indices; masked-out rows/cols report BIG).
+    """
+    d = mp_tile(a, b)                     # [TA, TB]
+    ta, tb = d.shape
+    gi = row0 + jax.lax.iota(jnp.int32, ta)[:, None]   # global row ids
+    gj = col0 + jax.lax.iota(jnp.int32, tb)[None, :]   # global col ids
+    self_match = jnp.abs(gi - gj) < excl
+    dm = jnp.where(self_match, BIG, d)
+    rowmin = jnp.min(dm, axis=1)
+    rowarg = (col0 + jnp.argmin(dm, axis=1).astype(jnp.int32))
+    colmin = jnp.min(dm, axis=0)
+    colarg = (row0 + jnp.argmin(dm, axis=0).astype(jnp.int32))
+    return rowmin, rowarg, colmin, colarg

@@ -1,0 +1,43 @@
+"""AOT pipeline tests: lowering produces parseable HLO text + manifest."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+def test_every_artifact_lowers_to_hlo_text():
+    for name, lowered, in_desc, out_desc in aot.artifacts():
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        assert "ROOT" in text, name
+        # return_tuple=True contract for the rust loader's to_tuple()
+        assert "tuple" in text, name
+
+
+def test_manifest_descriptors_are_well_formed():
+    for name, _, in_desc, out_desc in aot.artifacts():
+        for field in in_desc.split(";"):
+            pname, ty = field.split(":")
+            assert pname and ty.startswith(("f32[", "i32[")), field
+        for field in out_desc.split(";"):
+            assert field.startswith(("f32[", "i32[")), field
+
+
+def test_aot_main_idempotent(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    cwd = os.path.join(os.path.dirname(__file__), "..")
+    cmd = [sys.executable, "-m", "compile.aot", "--outdir", str(out)]
+    r1 = subprocess.run(cmd, cwd=cwd, env=env, capture_output=True, text=True)
+    assert r1.returncode == 0, r1.stderr
+    assert (out / "manifest.txt").exists()
+    wrote_first = r1.stdout.count("wrote")
+    r2 = subprocess.run(cmd, cwd=cwd, env=env, capture_output=True, text=True)
+    assert r2.returncode == 0, r2.stderr
+    assert "wrote" not in r2.stdout.replace("wrote 0", ""), (
+        "second run must be a no-op:\n" + r2.stdout
+    )
+    assert wrote_first == 3

@@ -1,0 +1,78 @@
+"""Contract tests on the emitted artifact set itself (the files the Rust
+runtime consumes). These pin the interchange format: HLO text, tuple
+roots, parameter shapes matching the manifest."""
+import os
+import re
+
+import pytest
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACT_DIR, "manifest.txt")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def read_manifest():
+    entries = []
+    config = {}
+    with open(os.path.join(ARTIFACT_DIR, "manifest.txt")) as f:
+        for line in f:
+            line = line.strip()
+            if line.startswith("config"):
+                for kv in line.split()[1:]:
+                    k, v = kv.split("=")
+                    config[k] = int(v)
+            elif line.startswith("artifact"):
+                _, name, fname, in_desc, out_desc = line.split(" ", 4)
+                entries.append((name, fname, in_desc, out_desc))
+    return config, entries
+
+
+def test_manifest_lists_three_artifacts_with_config():
+    config, entries = read_manifest()
+    assert {e[0] for e in entries} == {"pair_dist", "query_row", "mp_tile"}
+    for key in ("s_pad", "pair_b", "query_b", "tile"):
+        assert config[key] > 0
+
+
+def test_hlo_files_exist_and_are_text_with_tuple_root():
+    _, entries = read_manifest()
+    for name, fname, _, _ in entries:
+        path = os.path.join(ARTIFACT_DIR, fname)
+        with open(path) as f:
+            text = f.read()
+        assert text.startswith("HloModule"), name
+        assert "ROOT" in text, name
+        # the rust loader calls to_tuple(): root must be a tuple
+        root_lines = [l for l in text.splitlines() if "ROOT" in l]
+        assert any("tuple" in l or "(" in l for l in root_lines), name
+
+
+def test_parameter_shapes_match_manifest():
+    config, entries = read_manifest()
+    for name, fname, in_desc, _ in entries:
+        path = os.path.join(ARTIFACT_DIR, fname)
+        with open(path) as f:
+            text = f.read()
+        # the ENTRY computation declares typed parameters; every input shape
+        # from the manifest must appear in the HLO text
+        for field in in_desc.split("=", 1)[1].split(";"):
+            _, ty = field.split(":")
+            m = re.match(r"(f32|i32)\[([0-9,]*)\]", ty)
+            assert m, field
+            dtype, dims = m.group(1), m.group(2)
+            hlo_dtype = {"i32": "s32"}.get(dtype, dtype)  # HLO spells it s32
+            want = f"{hlo_dtype}[{dims}]"
+            assert want in text, f"{name}: {want} missing from HLO"
+
+
+def test_artifacts_contain_no_mosaic_custom_calls():
+    """interpret=True contract: CPU PJRT cannot run Mosaic custom-calls."""
+    _, entries = read_manifest()
+    for name, fname, _, _ in entries:
+        with open(os.path.join(ARTIFACT_DIR, fname)) as f:
+            text = f.read()
+        assert "tpu_custom_call" not in text, name
+        assert "mosaic" not in text.lower(), name

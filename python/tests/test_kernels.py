@@ -1,0 +1,144 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+The offline image has no `hypothesis`, so we sweep seeded random shape/dtype
+cases explicitly -- same coverage intent: many (shape, seed) combinations,
+exact oracle comparison with float32 tolerances.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import pair_dist, batch_dist, mp_tile
+from compile.kernels import ref
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def rand(shape, seed, scale=1.0, offset=0.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        (rng.standard_normal(shape) * scale + offset).astype(np.float32)
+    )
+
+
+# ---------------------------------------------------------------- pair_dist
+PAIR_CASES = [
+    # (B, s_pad, block_b, seed)
+    (128, 64, 64, 0),
+    (128, 128, 128, 1),
+    (256, 512, 128, 2),
+    (512, 32, 64, 3),
+    (64, 256, 32, 4),
+    (1024, 512, 128, 5),
+]
+
+
+@pytest.mark.parametrize("b,s_pad,block_b,seed", PAIR_CASES)
+def test_pair_dist_matches_ref(b, s_pad, block_b, seed):
+    x = rand((b, s_pad), seed)
+    y = rand((b, s_pad), seed + 1000)
+    got = pair_dist(x, y, block_b=block_b)
+    want = ref.ref_pair_dist(x, y)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_pair_dist_zero_padding_invariance():
+    """Zero-padding the tail must not change distances (artifact contract)."""
+    b, s, s_pad = 64, 100, 512
+    x = ref.znorm(rand((b, s), 7))
+    y = ref.znorm(rand((b, s), 8))
+    xp = jnp.pad(x, ((0, 0), (0, s_pad - s)))
+    yp = jnp.pad(y, ((0, 0), (0, s_pad - s)))
+    got = pair_dist(xp, yp, block_b=64)
+    want = ref.ref_pair_dist(x, y)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_pair_dist_identical_rows_zero():
+    x = rand((128, 64), 9)
+    got = pair_dist(x, x, block_b=64)
+    np.testing.assert_allclose(got, jnp.zeros(128), atol=ATOL)
+
+
+def test_pair_dist_rejects_bad_block():
+    x = rand((100, 64), 0)
+    with pytest.raises(AssertionError):
+        pair_dist(x, x, block_b=64)
+
+
+# --------------------------------------------------------------- batch_dist
+BATCH_CASES = [
+    (128, 64, 64, 10),
+    (256, 128, 128, 11),
+    (512, 512, 128, 12),
+    (64, 32, 32, 13),
+    (128, 256, 64, 14),
+]
+
+
+@pytest.mark.parametrize("b,s_pad,block_b,seed", BATCH_CASES)
+def test_batch_dist_matches_ref(b, s_pad, block_b, seed):
+    q = rand((s_pad,), seed)
+    c = rand((b, s_pad), seed + 2000)
+    got = batch_dist(q, c, block_b=block_b)
+    want = ref.ref_batch_dist(q, c)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=1e-4)
+
+
+def test_batch_dist_non_normalized_inputs():
+    """The dot-product form must hold for raw (non z-normalized) data too --
+    required by the DADD (Table 7) protocol which skips z-normalization."""
+    q = rand((128,), 20, scale=5.0, offset=3.0)
+    c = rand((64, 128), 21, scale=0.1, offset=-7.0)
+    got = batch_dist(q, c, block_b=32)
+    want = ref.ref_batch_dist(q, c)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_batch_dist_self_row_is_zero():
+    c = rand((64, 96), 22)
+    got = batch_dist(c[17], c, block_b=32)
+    assert got[17] < 1e-3
+    want = ref.ref_batch_dist(c[17], c)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=1e-4)
+
+
+# ------------------------------------------------------------------ mp_tile
+TILE_CASES = [
+    (16, 16, 64, 30),
+    (128, 128, 512, 31),
+    (64, 128, 128, 32),
+    (128, 64, 256, 33),
+    (8, 8, 32, 34),
+]
+
+
+@pytest.mark.parametrize("ta,tb,s_pad,seed", TILE_CASES)
+def test_mp_tile_matches_ref(ta, tb, s_pad, seed):
+    a = rand((ta, s_pad), seed)
+    b = rand((tb, s_pad), seed + 3000)
+    got = mp_tile(a, b)
+    want = ref.ref_mp_tile(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_mp_tile_symmetry():
+    a = rand((32, 64), 40)
+    d_ab = mp_tile(a, a)
+    np.testing.assert_allclose(d_ab, jnp.transpose(d_ab), rtol=1e-5, atol=1e-4)
+    # the dot-product form cancels catastrophically at d ~ 0: |q|^2+|c|^2-2qc
+    # loses ~7 digits in f32, so the floor is ~sqrt(eps * |q|^2) ~ 5e-3.
+    np.testing.assert_allclose(jnp.diagonal(d_ab), jnp.zeros(32), atol=7e-3)
+
+
+# ------------------------------------------------ paper Eq.2 == Eq.3 identity
+@pytest.mark.parametrize("seed", range(5))
+def test_eq2_equals_eq3(seed):
+    s = 128
+    pk = rand((s,), seed, scale=2.0, offset=1.0)
+    pl_ = rand((s,), seed + 500, scale=0.5, offset=-2.0)
+    d2 = ref.ref_znorm_dist_eq2(pk, pl_)
+    d3 = ref.ref_znorm_dist_eq3(pk, pl_)
+    np.testing.assert_allclose(d2, d3, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,117 @@
+//! `cargo bench --bench microbench_distance` — hot-path microbenchmarks:
+//! the scalar distance function (the >90%-of-runtime function), SAX
+//! indexing, warm-up, and the XLA batched engines. These are the numbers
+//! the §Perf log in EXPERIMENTS.md tracks.
+
+use hstime::bench::harness::{bench_fn, black_box, fmt_secs};
+use hstime::dist::{CountingDistance, DistanceKind};
+use hstime::prelude::*;
+use hstime::runtime::{ArtifactSet, PreparedSeqs};
+use hstime::sax::SaxIndex;
+use hstime::ts::SeqStats;
+
+fn main() {
+    let n = 60_000;
+    let ts = generators::ecg_like(n, 260, 3, 1).into_series("bench-ecg");
+
+    println!("== scalar distance (per call, s sweep) ==");
+    for s in [128usize, 300, 512, 1024] {
+        let stats = SeqStats::compute(&ts, s);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        let pairs: Vec<(usize, usize)> = (0..512)
+            .map(|t| (t * 97 % (n - s - 1), (t * 131 + 7 * s) % (n - s - 1)))
+            .filter(|(a, b)| a.abs_diff(*b) >= s)
+            .collect();
+        let r = bench_fn(&format!("znorm_dist s={s} x{}", pairs.len()), 3, 20, || {
+            let mut acc = 0.0;
+            for &(i, j) in &pairs {
+                acc += dist.dist(i, j);
+            }
+            black_box(acc)
+        });
+        let per_call = r.mean_secs() / pairs.len() as f64;
+        println!("{}   -> {} per call", r.report_line(), fmt_secs(per_call));
+
+        let r = bench_fn(
+            &format!("znorm_dist_early s={s} cutoff=1.0"),
+            3,
+            20,
+            || {
+                let mut acc = 0.0;
+                for &(i, j) in &pairs {
+                    acc += dist.dist_early(i, j, 1.0);
+                }
+                black_box(acc)
+            },
+        );
+        println!("{}", r.report_line());
+    }
+
+    println!("\n== substrate phases (N = {n}, s = 300) ==");
+    let s = 300;
+    let r = bench_fn("SeqStats::compute", 1, 10, || {
+        black_box(SeqStats::compute(&ts, s))
+    });
+    println!("{}", r.report_line());
+    let stats = SeqStats::compute(&ts, s);
+    let sax = hstime::config::SaxParams::new(s, 4, 4);
+    let r = bench_fn("SaxIndex::build", 1, 10, || {
+        black_box(SaxIndex::build(&ts, &stats, &sax))
+    });
+    println!("{}", r.report_line());
+
+    let idx = SaxIndex::build(&ts, &stats, &sax);
+    let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+    let r = bench_fn("warmup chain", 1, 5, || {
+        let mut profile = hstime::discord::NndProfile::new(idx.len());
+        let mut rng = Rng64::new(3);
+        hstime::algo::hst::warmup::warmup(&dist, &idx, &mut profile, s, false, &mut rng);
+        black_box(profile)
+    });
+    println!("{}", r.report_line());
+
+    println!("\n== full searches (N = {n}) ==");
+    for algo_name in ["hst", "hotsax"] {
+        let engine = hstime::algo::by_name(algo_name).unwrap();
+        let params = SearchParams::new(s, 4, 4).with_seed(2);
+        let r = bench_fn(&format!("{algo_name} k=1"), 0, 3, || {
+            black_box(engine.run(&ts, &params).unwrap().distance_calls)
+        });
+        println!("{}", r.report_line());
+    }
+
+    println!("\n== XLA batched engines (requires `make artifacts`) ==");
+    match ArtifactSet::load_default() {
+        Err(e) => println!("skipped: {e:#}"),
+        Ok(arts) => {
+            let small = ts.slice_prefix(12_000);
+            let sstats = SeqStats::compute(&small, s);
+            let prep = PreparedSeqs::build(&arts, &small, &sstats, true).unwrap();
+            let ia: Vec<usize> = (0..4_096).collect();
+            let ib: Vec<usize> = ia.iter().map(|&i| i + 6_000).collect();
+            let r = bench_fn("xla pair_dist_chain 4096 pairs", 1, 5, || {
+                black_box(arts.pair_dist_chain(&prep, &ia, &ib).unwrap())
+            });
+            let per = r.mean_secs() / ia.len() as f64;
+            println!("{}   -> {} per pair", r.report_line(), fmt_secs(per));
+
+            let cands: Vec<usize> = (2_000..2_000 + arts.query_b()).collect();
+            let r = bench_fn("xla query_row_chunk 512 cands", 1, 5, || {
+                black_box(arts.query_row_chunk(&prep, 0, &cands).unwrap())
+            });
+            println!("{}", r.report_line());
+
+            let r = bench_fn("xla mp_tile 128x128", 1, 5, || {
+                let mut profile = hstime::discord::NndProfile::new(prep.n);
+                arts.mp_tile_update(&prep, 0, 4_000, s, &mut profile).unwrap();
+                black_box(profile)
+            });
+            let pairs = (arts.tile() * arts.tile()) as f64;
+            println!(
+                "{}   -> {} per pair",
+                r.report_line(),
+                fmt_secs(r.mean_secs() / pairs)
+            );
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! `cargo bench --bench table6_rra` — regenerates Table 6 (RRA vs HST).
+//!
+//! Flags (after `--`): --scale-div N (default 8), --runs N, --seed N,
+//! --full (paper scale), --json.
+
+use hstime::tables::{self, BenchConfig};
+use hstime::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let mut cfg = if args.has("full") { BenchConfig::full() } else { BenchConfig::default() };
+    cfg.scale_div = args.get_usize("scale-div", cfg.scale_div);
+    cfg.runs = args.get_usize("runs", cfg.runs);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    let t0 = std::time::Instant::now();
+    let table = tables::table6(&cfg);
+    if args.has("json") {
+        println!("{}", table.to_json());
+    } else {
+        println!("{}", table.render());
+    }
+    eprintln!("[table6_rra] total {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,178 @@
+//! Brute-force discord search: the O(N²) ground truth (paper Sec. 2.3).
+//!
+//! Computes the exact nnd profile by evaluating every non-self-match pair
+//! once (symmetric update), then extracts the k discords by repeated argmax
+//! under the exclusion zones. Used as the correctness oracle for every
+//! other engine; only suitable for small N.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::config::SearchParams;
+use crate::discord::{Discord, ExclusionZones, NndProfile};
+use crate::dist::{CountingDistance, DistanceKind};
+use crate::ts::{SeqStats, TimeSeries};
+
+use super::{non_self_match, Algorithm, SearchReport};
+
+/// The brute-force engine.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct BruteForce;
+
+impl BruteForce {
+    /// Exact nnd profile of the whole series (every pair evaluated once).
+    pub fn exact_profile(
+        ts: &TimeSeries,
+        _stats: &SeqStats,
+        params: &SearchParams,
+        dist: &CountingDistance,
+    ) -> NndProfile {
+        let n = ts.num_sequences(params.sax.s);
+        let s = params.sax.s;
+        let mut profile = NndProfile::new(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if non_self_match(i, j, s, params.allow_self_match) {
+                    let d = dist.dist(i, j);
+                    profile.observe(i, j, d);
+                }
+            }
+        }
+        profile
+    }
+
+    /// Extract the top-k discords from an exact profile.
+    pub fn discords_from_profile(
+        profile: &NndProfile,
+        s: usize,
+        k: usize,
+    ) -> Vec<Discord> {
+        let mut zones = ExclusionZones::new();
+        let mut out = Vec::new();
+        for _ in 0..k {
+            let mut best: Option<usize> = None;
+            for i in 0..profile.len() {
+                if !zones.allowed(i, s) {
+                    continue;
+                }
+                if profile.nnd[i].is_finite()
+                    && best.map(|b| profile.nnd[i] > profile.nnd[b]).unwrap_or(true)
+                {
+                    best = Some(i);
+                }
+            }
+            let Some(b) = best else { break };
+            out.push(Discord {
+                position: b,
+                nnd: profile.nnd[b],
+                neighbor: profile.ngh[b],
+            });
+            zones.add(b, s);
+        }
+        out
+    }
+}
+
+impl Algorithm for BruteForce {
+    fn name(&self) -> &'static str {
+        "brute"
+    }
+
+    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport> {
+        let s = params.sax.s;
+        let n = ts.num_sequences(s);
+        ensure!(n >= 2, "series too short for s={s}");
+        let start = Instant::now();
+        let stats = SeqStats::compute(ts, s);
+        let kind = if params.znormalize {
+            DistanceKind::Znorm
+        } else {
+            DistanceKind::Raw
+        };
+        let dist = CountingDistance::new(ts, &stats, kind);
+        let profile = Self::exact_profile(ts, &stats, params, &dist);
+        let discords = Self::discords_from_profile(&profile, s, params.k);
+        Ok(SearchReport {
+            algo: self.name().to_string(),
+            discords,
+            distance_calls: dist.calls(),
+            elapsed: start.elapsed(),
+            n_sequences: n,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ts::generators;
+    use crate::ts::series::IntoSeries;
+
+    #[test]
+    fn finds_injected_anomaly() {
+        // A flat sine with one injected bump: the discord must cover it.
+        let mut pts = generators::sine_with_noise(1_200, 0.05, 3);
+        let mut rng = crate::util::rng::Rng64::new(1);
+        generators::inject(&mut pts, 600, 64, generators::Anomaly::Bump, &mut rng);
+        let ts = pts.into_series("bump");
+        let params = SearchParams::new(64, 4, 4);
+        let rep = BruteForce.run(&ts, &params).unwrap();
+        let d = &rep.discords[0];
+        assert!(
+            (537..=663).contains(&d.position),
+            "discord at {} should overlap the bump at 600..664",
+            d.position
+        );
+        assert!(d.nnd > 0.0);
+    }
+
+    #[test]
+    fn call_count_is_all_pairs() {
+        let ts = generators::sine_with_noise(300, 0.5, 1).into_series("t");
+        let s = 50;
+        let params = SearchParams::new(s, 5, 4);
+        let rep = BruteForce.run(&ts, &params).unwrap();
+        let n = ts.num_sequences(s);
+        let mut expect = 0u64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if j - i >= s {
+                    expect += 1;
+                }
+            }
+        }
+        assert_eq!(rep.distance_calls, expect);
+    }
+
+    #[test]
+    fn k_discords_do_not_overlap() {
+        let ts = generators::ecg_like(2_000, 120, 2, 9).into_series("ecg");
+        let params = SearchParams::new(100, 4, 4).with_discords(4);
+        let rep = BruteForce.run(&ts, &params).unwrap();
+        assert!(rep.discords.len() >= 2);
+        for (a_idx, a) in rep.discords.iter().enumerate() {
+            for b in &rep.discords[a_idx + 1..] {
+                assert!(
+                    a.position.abs_diff(b.position) >= 100,
+                    "{} vs {}",
+                    a.position,
+                    b.position
+                );
+            }
+        }
+        // sorted by nnd descending
+        for w in rep.discords.windows(2) {
+            assert!(w[0].nnd >= w[1].nnd - 1e-12);
+        }
+    }
+
+    #[test]
+    fn neighbor_is_not_self_match() {
+        let ts = generators::valve_like(1_500, 150, 1, 4).into_series("v");
+        let params = SearchParams::new(128, 4, 4);
+        let rep = BruteForce.run(&ts, &params).unwrap();
+        let d = &rep.discords[0];
+        assert!(d.position.abs_diff(d.neighbor) >= 128);
+    }
+}

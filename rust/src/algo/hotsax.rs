@@ -1,0 +1,225 @@
+//! HOT SAX (Keogh, Lin & Fu, ICDM 2005): the baseline HST improves on.
+//!
+//! Outer loop: sequences ordered by ascending SAX-cluster size (small
+//! clusters first — likely "isolated" sequences), shuffled within a
+//! cluster. Inner loop: same-cluster members first, then all remaining
+//! sequences in pseudo-random order; abandons a candidate as soon as its
+//! running nnd drops below the best-so-far discord distance.
+//!
+//! Faithful to the paper's comparison setup: for k discords the search is
+//! repeated per discord with fresh state (no carried-over nnd profile —
+//! that carry-over is exactly one of HST's improvements, Sec. 3.2), adding
+//! exclusion zones for the already-found discords.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::config::SearchParams;
+use crate::discord::{Discord, ExclusionZones};
+use crate::dist::{CountingDistance, DistanceKind};
+use crate::sax::SaxIndex;
+use crate::ts::{SeqStats, TimeSeries};
+use crate::util::rng::Rng64;
+
+use super::{non_self_match, Algorithm, SearchReport};
+
+/// The HOT SAX engine.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct HotSax;
+
+/// One full HOT SAX pass: find the single best discord not excluded by
+/// `zones`. Returns None when every position is excluded.
+fn find_one(
+    dist: &CountingDistance,
+    idx: &SaxIndex,
+    params: &SearchParams,
+    zones: &ExclusionZones,
+    rng: &mut Rng64,
+) -> Option<Discord> {
+    let s = params.sax.s;
+    let n = idx.len();
+    let allow = params.allow_self_match;
+
+    // ---- outer order: clusters by ascending size, members shuffled ----
+    let mut outer: Vec<usize> = Vec::with_capacity(n);
+    for &cid in &idx.by_size {
+        let mut members = idx.clusters[cid].clone();
+        rng.shuffle(&mut members);
+        outer.extend(members);
+    }
+
+    // ---- random tail order for the inner loop (fixed per pass) ----
+    let mut random_order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut random_order);
+
+    let mut best_dist = 0.0f64;
+    let mut best: Option<Discord> = None;
+
+    for &i in &outer {
+        if !zones.allowed(i, s) {
+            continue;
+        }
+        let mut nnd_i = f64::INFINITY;
+        let mut ngh_i = usize::MAX;
+        let mut pruned = false;
+
+        // phase 1: same-cluster members first (likely close neighbors,
+        // best chance of an early prune)…
+        for &j in idx.cluster_members(i) {
+            if !non_self_match(i, j, s, allow) || i == j {
+                continue;
+            }
+            let d = dist.dist_early(i, j, nnd_i);
+            if d < nnd_i {
+                nnd_i = d;
+                ngh_i = j;
+                if nnd_i < best_dist {
+                    pruned = true;
+                    break; // cannot be the discord
+                }
+            }
+        }
+
+        // …phase 2: everything else in the pseudo-random order.
+        if !pruned {
+            let own_cluster = idx.cluster_of[i];
+            for &j in &random_order {
+                if idx.cluster_of[j] == own_cluster {
+                    continue; // already visited in phase 1
+                }
+                if !non_self_match(i, j, s, allow) {
+                    continue;
+                }
+                let d = dist.dist_early(i, j, nnd_i);
+                if d < nnd_i {
+                    nnd_i = d;
+                    ngh_i = j;
+                    if nnd_i < best_dist {
+                        pruned = true;
+                        break;
+                    }
+                }
+            }
+        }
+
+        if !pruned && nnd_i.is_finite() && nnd_i >= best_dist {
+            best_dist = nnd_i;
+            best = Some(Discord {
+                position: i,
+                nnd: nnd_i,
+                neighbor: ngh_i,
+            });
+        }
+    }
+    best
+}
+
+impl Algorithm for HotSax {
+    fn name(&self) -> &'static str {
+        "hotsax"
+    }
+
+    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport> {
+        let s = params.sax.s;
+        let n = ts.num_sequences(s);
+        ensure!(n >= 2, "series too short for s={s}");
+        let start = Instant::now();
+        let stats = SeqStats::compute(ts, s);
+        let kind = if params.znormalize {
+            DistanceKind::Znorm
+        } else {
+            DistanceKind::Raw
+        };
+        let dist = CountingDistance::new(ts, &stats, kind);
+        let idx = SaxIndex::build(ts, &stats, &params.sax);
+        let mut rng = Rng64::new(params.seed ^ 0x4853_5458); // "HSTX"
+
+        let mut zones = ExclusionZones::new();
+        let mut discords = Vec::new();
+        for _ in 0..params.k {
+            match find_one(&dist, &idx, params, &zones, &mut rng) {
+                Some(d) => {
+                    zones.add(d.position, s);
+                    discords.push(d);
+                }
+                None => break,
+            }
+        }
+
+        Ok(SearchReport {
+            algo: self.name().to_string(),
+            discords,
+            distance_calls: dist.calls(),
+            elapsed: start.elapsed(),
+            n_sequences: n,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::brute::BruteForce;
+    use crate::ts::generators;
+    use crate::ts::series::IntoSeries;
+
+    fn agree_with_brute(ts: &TimeSeries, params: &SearchParams) {
+        let hs = HotSax.run(ts, params).unwrap();
+        let bf = BruteForce.run(ts, params).unwrap();
+        assert_eq!(hs.discords.len(), bf.discords.len());
+        for (h, b) in hs.discords.iter().zip(&bf.discords) {
+            // positions can differ on exact ties; nnd values must agree
+            assert!(
+                (h.nnd - b.nnd).abs() < 5e-8,
+                "nnd mismatch: {} vs {} (pos {} vs {})",
+                h.nnd,
+                b.nnd,
+                h.position,
+                b.position
+            );
+        }
+    }
+
+    #[test]
+    fn exact_on_ecg() {
+        let ts = generators::ecg_like(1_500, 100, 1, 11).into_series("e");
+        agree_with_brute(&ts, &SearchParams::new(80, 4, 4));
+    }
+
+    #[test]
+    fn exact_on_sine_low_noise() {
+        let ts = generators::sine_with_noise(1_000, 0.01, 5).into_series("s");
+        agree_with_brute(&ts, &SearchParams::new(64, 4, 4));
+    }
+
+    #[test]
+    fn exact_on_three_discords() {
+        let ts = generators::valve_like(1_800, 150, 2, 7).into_series("v");
+        agree_with_brute(&ts, &SearchParams::new(100, 4, 4).with_discords(3));
+    }
+
+    #[test]
+    fn uses_fewer_calls_than_brute() {
+        let ts = generators::ecg_like(3_000, 120, 1, 2).into_series("e");
+        let params = SearchParams::new(100, 4, 4);
+        let hs = HotSax.run(&ts, &params).unwrap();
+        let bf = BruteForce.run(&ts, &params).unwrap();
+        assert!(
+            hs.distance_calls < bf.distance_calls / 2,
+            "hotsax {} vs brute {}",
+            hs.distance_calls,
+            bf.distance_calls
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ts = generators::respiration_like(2_000, 130, 1, 8).into_series("r");
+        let params = SearchParams::new(128, 4, 4).with_seed(99);
+        let a = HotSax.run(&ts, &params).unwrap();
+        let b = HotSax.run(&ts, &params).unwrap();
+        assert_eq!(a.distance_calls, b.distance_calls);
+        assert_eq!(a.discords[0].position, b.discords[0].position);
+    }
+}

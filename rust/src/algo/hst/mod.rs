@@ -1,0 +1,402 @@
+//! HOT SAX Time (HST) — the paper's exact discord-search algorithm.
+//!
+//! HST keeps HOT SAX's SAX-guided minimization but adds four devices
+//! (paper Sec. 3):
+//!
+//! 1. **Warm-up** ([`warmup`]): a chain of ~N distance calls through the
+//!    shuffled, size-ordered SAX clusters gives every sequence an
+//!    approximate nnd *before* the first discord search begins.
+//! 2. **Short-range time topology** ([`topology::short_range`]): the CNP
+//!    property (`ngh(i±1) ≈ ngh(i)±1`) upgrades the warm-up profile with
+//!    ~N more targeted calls.
+//! 3. **Re-ordered, dynamic external loop**: sequences are visited in
+//!    descending order of (moving-averaged) approximate nnd, and the
+//!    remaining order is re-sorted every time a good discord candidate is
+//!    confirmed.
+//! 4. **Long-range time topology** ([`topology::long_range`]): after a
+//!    candidate's clarification, its ≤ s time-neighbors (the rest of the
+//!    nnd-profile *peak*) get their nnds lowered with ≤ 2s targeted calls,
+//!    levelling the peak without independent inner loops.
+//!
+//! The approximate-nnd profile persists across the k-discord loop
+//! (Sec. 3.2), which is where most of the k > 1 speedup comes from.
+
+pub mod topology;
+pub mod warmup;
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::config::SearchParams;
+use crate::discord::{Discord, ExclusionZones, NndProfile};
+use crate::dist::{CountingDistance, DistanceKind};
+use crate::sax::SaxIndex;
+use crate::ts::{SeqStats, TimeSeries};
+use crate::util::rng::Rng64;
+
+use super::{non_self_match, Algorithm, SearchReport};
+
+/// Tuning knobs (defaults follow the paper).
+#[derive(Debug, Clone)]
+pub struct HstSearch {
+    /// Smear the initial external-loop order with the Eq. 6 moving average.
+    pub smear_initial_order: bool,
+    /// Run the long-range topology peak-levelling functions.
+    pub long_range: bool,
+    /// Re-sort the remaining external loop after each good candidate.
+    pub dynamic_reorder: bool,
+    /// Run the warm-up chain (disable only for ablations).
+    pub warmup: bool,
+    /// Run the short-range topology pass (disable only for ablations).
+    pub short_range: bool,
+}
+
+impl Default for HstSearch {
+    fn default() -> HstSearch {
+        HstSearch {
+            smear_initial_order: true,
+            long_range: true,
+            dynamic_reorder: true,
+            warmup: true,
+            short_range: true,
+        }
+    }
+}
+
+/// Per-pass cluster scan order: members of each cluster pre-shuffled once
+/// (the paper's "pseudo-random order" of the inner loop).
+pub(crate) struct ScanOrder {
+    clusters: Vec<Vec<usize>>,
+}
+
+impl ScanOrder {
+    fn build(idx: &SaxIndex, rng: &mut Rng64) -> ScanOrder {
+        let mut clusters = idx.clusters.clone();
+        for c in &mut clusters {
+            rng.shuffle(c);
+        }
+        ScanOrder { clusters }
+    }
+
+    #[inline]
+    fn cluster(&self, cid: usize) -> &[usize] {
+        &self.clusters[cid]
+    }
+}
+
+/// The inner minimization for candidate `i` (the HOT SAX inner loop with
+/// profile maintenance): same-cluster first, then remaining clusters from
+/// smallest to biggest. Returns `true` if `i` survived — in which case
+/// `profile.nnd[i]` is its *exact* nnd.
+fn minimize(
+    i: usize,
+    dist: &CountingDistance,
+    idx: &SaxIndex,
+    scan: &ScanOrder,
+    profile: &mut NndProfile,
+    best_dist: f64,
+    s: usize,
+    allow: bool,
+) -> bool {
+    let own = idx.cluster_of[i];
+
+    // Current_cluster(): the candidate's own SAX cluster.
+    for &j in scan.cluster(own) {
+        if i == j || !non_self_match(i, j, s, allow) {
+            continue;
+        }
+        let cutoff = profile.nnd[i].max(profile.nnd[j]);
+        let d = dist.dist_early(i, j, cutoff);
+        if d < cutoff {
+            profile.observe(i, j, d); // exact evaluation
+        }
+        if profile.nnd[i] < best_dist {
+            return false; // cannot be a discord
+        }
+    }
+
+    // Other_clusters(): smallest clusters first.
+    for &cid in &idx.by_size {
+        if cid == own {
+            continue;
+        }
+        for &j in scan.cluster(cid) {
+            if !non_self_match(i, j, s, allow) {
+                continue;
+            }
+            let cutoff = profile.nnd[i].max(profile.nnd[j]);
+            let d = dist.dist_early(i, j, cutoff);
+            if d < cutoff {
+                profile.observe(i, j, d);
+            }
+            if profile.nnd[i] < best_dist {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Sort `slice` by descending profile nnd (ties by index for determinism).
+fn sort_by_nnd_desc(slice: &mut [usize], key: &[f64]) {
+    slice.sort_unstable_by(|&a, &b| {
+        key[b]
+            .partial_cmp(&key[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+}
+
+impl HstSearch {
+    /// Run one external-loop pass: find the best discord not excluded by
+    /// `zones`, given (and refining) the shared approximate profile.
+    #[allow(clippy::too_many_arguments)]
+    fn pass(
+        &self,
+        dist: &CountingDistance,
+        idx: &SaxIndex,
+        profile: &mut NndProfile,
+        zones: &ExclusionZones,
+        params: &SearchParams,
+        rng: &mut Rng64,
+        first_pass: bool,
+    ) -> Option<Discord> {
+        let s = params.sax.s;
+        let n = idx.len();
+        let allow = params.allow_self_match;
+        let scan = ScanOrder::build(idx, rng);
+
+        // Sort_External(): candidates in descending approximate-nnd order.
+        // First pass smears with the Eq. 6 moving average to kill lone
+        // spikes; later passes use the (now much better) raw profile.
+        let mut order: Vec<usize> =
+            (0..n).filter(|&i| zones.allowed(i, s)).collect();
+        let initial_key: Vec<f64> = if first_pass && self.smear_initial_order {
+            profile.smeared(s)
+        } else {
+            profile.nnd.clone()
+        };
+        sort_by_nnd_desc(&mut order, &initial_key);
+
+        let mut best_dist = 0.0f64;
+        let mut best: Option<Discord> = None;
+
+        let mut pos = 0;
+        while pos < order.len() {
+            let i = order[pos];
+            pos += 1;
+
+            // Avoid_low_nnds(): the carried-over approximate nnd already
+            // rules most sequences out.
+            let mut can_be_discord = profile.nnd[i] >= best_dist;
+
+            if can_be_discord {
+                can_be_discord =
+                    minimize(i, dist, idx, &scan, profile, best_dist, s, allow);
+            }
+
+            // Long-range topology: level the peak around i (Listing 2 runs
+            // these regardless of can_be_discord).
+            if self.long_range {
+                topology::long_range_forw(i, dist, profile, best_dist, n, s, allow);
+                topology::long_range_back(i, dist, profile, best_dist, n, s, allow);
+            }
+
+            // A sequence with no admissible comparison partner keeps the ∞
+            // sentinel; its nnd is undefined, so (like the other engines)
+            // it cannot be reported as a discord.
+            if can_be_discord && profile.nnd[i].is_finite() {
+                // i is a good discord candidate: nnd[i] is exact and is the
+                // highest exact value so far.
+                best_dist = profile.nnd[i];
+                best = Some(Discord {
+                    position: i,
+                    nnd: profile.nnd[i],
+                    neighbor: profile.ngh[i],
+                });
+                // Sort_Remaining_Ext(): the inner loop just touched almost
+                // every sequence — re-aim the external loop.
+                if self.dynamic_reorder {
+                    sort_by_nnd_desc(&mut order[pos..], &profile.nnd);
+                }
+            }
+        }
+        best
+    }
+}
+
+impl Algorithm for HstSearch {
+    fn name(&self) -> &'static str {
+        "hst"
+    }
+
+    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport> {
+        let s = params.sax.s;
+        let n = ts.num_sequences(s);
+        ensure!(n >= 2, "series too short for s={s}");
+        let start = Instant::now();
+        let stats = SeqStats::compute(ts, s);
+        let kind = if params.znormalize {
+            DistanceKind::Znorm
+        } else {
+            DistanceKind::Raw
+        };
+        let dist = CountingDistance::new(ts, &stats, kind);
+        let idx = SaxIndex::build(ts, &stats, &params.sax);
+        let mut rng = Rng64::new(params.seed ^ 0x4853_5400); // "HST"
+
+        // nnd = ∞ sentinel; then warm-up + short-range topology build the
+        // approximate profile at ~2 calls per sequence.
+        let mut profile = NndProfile::new(n);
+        if self.warmup {
+            warmup::warmup(&dist, &idx, &mut profile, s, params.allow_self_match, &mut rng);
+        }
+        if self.short_range {
+            topology::short_range(&dist, &mut profile, n, s, params.allow_self_match);
+        }
+
+        let mut zones = ExclusionZones::new();
+        let mut discords = Vec::new();
+        for ki in 0..params.k {
+            match self.pass(&dist, &idx, &mut profile, &zones, params, &mut rng, ki == 0)
+            {
+                Some(d) => {
+                    zones.add(d.position, s);
+                    discords.push(d);
+                }
+                None => break,
+            }
+        }
+
+        Ok(SearchReport {
+            algo: self.name().to_string(),
+            discords,
+            distance_calls: dist.calls(),
+            elapsed: start.elapsed(),
+            n_sequences: n,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::brute::BruteForce;
+    use crate::ts::generators;
+    use crate::ts::series::IntoSeries;
+
+    fn agree_with_brute(ts: &TimeSeries, params: &SearchParams) {
+        let hst = HstSearch::default().run(ts, params).unwrap();
+        let bf = BruteForce.run(ts, params).unwrap();
+        assert_eq!(hst.discords.len(), bf.discords.len());
+        for (h, b) in hst.discords.iter().zip(&bf.discords) {
+            assert!(
+                (h.nnd - b.nnd).abs() < 5e-8,
+                "nnd mismatch: {} vs {} (pos {} vs {})",
+                h.nnd,
+                b.nnd,
+                h.position,
+                b.position
+            );
+        }
+    }
+
+    #[test]
+    fn exact_on_ecg() {
+        let ts = generators::ecg_like(1_500, 100, 1, 21).into_series("e");
+        agree_with_brute(&ts, &SearchParams::new(80, 4, 4));
+    }
+
+    #[test]
+    fn exact_on_low_noise_sine() {
+        // the regime where HOT SAX struggles (Table 4)
+        let ts = generators::sine_with_noise(1_200, 0.0001, 31).into_series("s");
+        agree_with_brute(&ts, &SearchParams::new(64, 4, 4));
+    }
+
+    #[test]
+    fn exact_on_high_noise_sine() {
+        let ts = generators::sine_with_noise(1_200, 10.0, 32).into_series("s");
+        agree_with_brute(&ts, &SearchParams::new(64, 4, 4));
+    }
+
+    #[test]
+    fn exact_on_five_discords() {
+        let ts = generators::valve_like(2_200, 150, 2, 33).into_series("v");
+        agree_with_brute(&ts, &SearchParams::new(100, 4, 4).with_discords(5));
+    }
+
+    #[test]
+    fn exact_with_every_feature_disabled() {
+        // ablation sanity: each device is an optimization, not a
+        // correctness requirement.
+        let ts = generators::ecg_like(1_200, 90, 1, 34).into_series("e");
+        let params = SearchParams::new(72, 4, 4).with_discords(2);
+        let plain = HstSearch {
+            smear_initial_order: false,
+            long_range: false,
+            dynamic_reorder: false,
+            warmup: false,
+            short_range: false,
+        };
+        let a = plain.run(&ts, &params).unwrap();
+        let b = BruteForce.run(&ts, &params).unwrap();
+        for (x, y) in a.discords.iter().zip(&b.discords) {
+            assert!((x.nnd - y.nnd).abs() < 5e-8);
+        }
+    }
+
+    #[test]
+    fn beats_hotsax_on_low_noise() {
+        use crate::algo::hotsax::HotSax;
+        let ts = generators::sine_with_noise(4_000, 0.001, 35).into_series("s");
+        let params = SearchParams::new(120, 4, 4);
+        let hst = HstSearch::default().run(&ts, &params).unwrap();
+        let hs = HotSax.run(&ts, &params).unwrap();
+        assert!(
+            hst.distance_calls < hs.distance_calls,
+            "hst {} vs hotsax {}",
+            hst.distance_calls,
+            hs.distance_calls
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ts = generators::respiration_like(2_500, 140, 1, 36).into_series("r");
+        let params = SearchParams::new(128, 4, 4).with_seed(5).with_discords(3);
+        let a = HstSearch::default().run(&ts, &params).unwrap();
+        let b = HstSearch::default().run(&ts, &params).unwrap();
+        assert_eq!(a.distance_calls, b.distance_calls);
+        assert_eq!(
+            a.discords.iter().map(|d| d.position).collect::<Vec<_>>(),
+            b.discords.iter().map(|d| d.position).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn profile_stays_upper_bound_of_exact() {
+        // after a full run, every profile value must be >= the exact nnd
+        // (approximate nnds are upper bounds by construction)
+        let ts = generators::ecg_like(900, 80, 1, 37).into_series("e");
+        let params = SearchParams::new(64, 4, 4);
+        let s = params.sax.s;
+        let stats = crate::ts::SeqStats::compute(&ts, s);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        let idx = SaxIndex::build(&ts, &stats, &params.sax);
+        let mut rng = Rng64::new(1);
+        let mut profile = NndProfile::new(idx.len());
+        warmup::warmup(&dist, &idx, &mut profile, s, false, &mut rng);
+        topology::short_range(&dist, &mut profile, idx.len(), s, false);
+        let exact = BruteForce::exact_profile(&ts, &stats, &params, &dist);
+        for i in 0..idx.len() {
+            assert!(
+                profile.nnd[i] >= exact.nnd[i] - 5e-8,
+                "i={i}: approx {} < exact {}",
+                profile.nnd[i],
+                exact.nnd[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,285 @@
+//! Time-topology refinements (paper Sec. 3.4 & 3.6).
+//!
+//! Time series exhibit the Consecutive Neighborhood Preserving property
+//! (Zhu et al. 2018): the nearest neighbor of sequence i+1 is very often
+//! ngh(i)+1. Both functions here turn that into targeted distance calls.
+
+use crate::discord::{NndProfile, NO_NEIGHBOR};
+use crate::dist::CountingDistance;
+
+use crate::algo::non_self_match;
+
+/// Short-range pass (Sec. 3.4): one forward sweep proposing
+/// `ngh(i)+1` as the neighbor of `i+1`, one backward sweep proposing
+/// `ngh(i)−1` for `i−1`. ~≤ 2N distance calls, usually far fewer because
+/// proposals already in place are skipped.
+pub fn short_range(
+    dist: &CountingDistance,
+    profile: &mut NndProfile,
+    n: usize,
+    s: usize,
+    allow_self_match: bool,
+) {
+    // forward: i -> i+1
+    for i in 0..n.saturating_sub(1) {
+        let g = profile.ngh[i];
+        if g == NO_NEIGHBOR {
+            continue;
+        }
+        try_suggest(dist, profile, i + 1, g + 1, n, s, allow_self_match);
+    }
+    // backward: i -> i-1
+    for i in (1..n).rev() {
+        let g = profile.ngh[i];
+        if g == NO_NEIGHBOR || g == 0 {
+            continue;
+        }
+        try_suggest(dist, profile, i - 1, g - 1, n, s, allow_self_match);
+    }
+}
+
+/// Evaluate the suggestion "cand is tgt's neighbor" if it is admissible
+/// and not already recorded. Exact evaluations update both endpoints.
+#[inline]
+fn try_suggest(
+    dist: &CountingDistance,
+    profile: &mut NndProfile,
+    tgt: usize,
+    cand: usize,
+    n: usize,
+    s: usize,
+    allow: bool,
+) {
+    if tgt >= n || cand >= n {
+        return;
+    }
+    if profile.ngh[tgt] == cand {
+        return; // already known
+    }
+    if !non_self_match(tgt, cand, s, allow) {
+        return;
+    }
+    let cutoff = profile.nnd[tgt].max(profile.nnd[cand]);
+    let d = dist.dist_early(tgt, cand, cutoff);
+    if d < cutoff {
+        profile.observe(tgt, cand, d);
+    }
+}
+
+/// Long-range forward topology (paper Listing 1): after sequence `i` got
+/// an exact (or strongly refined) nnd, walk its forward time-neighbors
+/// `i+1 … i+s` proposing `ngh(i)+j`, stopping as soon as
+/// (a) the peak has ended (`nnd[i+j] < best_dist`),
+/// (b) the proposal is already in place,
+/// (c) bounds run out, or
+/// (d) the topology loses coherence (no improvement).
+pub fn long_range_forw(
+    i: usize,
+    dist: &CountingDistance,
+    profile: &mut NndProfile,
+    best_dist: f64,
+    n: usize,
+    s: usize,
+    allow: bool,
+) {
+    let g = profile.ngh[i];
+    if g == NO_NEIGHBOR {
+        return;
+    }
+    for j in 1..=s {
+        let t = i + j;
+        let c = g + j;
+        if t >= n || c >= n {
+            return; // outside time-series limits
+        }
+        if profile.nnd[t] < best_dist {
+            return; // not a discord: peak has ended
+        }
+        if profile.ngh[t] == c {
+            return; // distance already calculated
+        }
+        if !non_self_match(t, c, s, allow) {
+            return;
+        }
+        let old = profile.nnd[t];
+        let cutoff = old.max(profile.nnd[c]);
+        let d = dist.dist_early(t, c, cutoff);
+        if d < cutoff {
+            profile.observe(t, c, d);
+        }
+        if d >= old {
+            return; // the time topology provides no improvement
+        }
+    }
+}
+
+/// Long-range backward topology (mirror of [`long_range_forw`]).
+pub fn long_range_back(
+    i: usize,
+    dist: &CountingDistance,
+    profile: &mut NndProfile,
+    best_dist: f64,
+    _n: usize,
+    s: usize,
+    allow: bool,
+) {
+    let g = profile.ngh[i];
+    if g == NO_NEIGHBOR {
+        return;
+    }
+    for j in 1..=s {
+        if i < j || g < j {
+            return; // outside time-series limits
+        }
+        let t = i - j;
+        let c = g - j;
+        if profile.nnd[t] < best_dist {
+            return;
+        }
+        if profile.ngh[t] == c {
+            return;
+        }
+        if !non_self_match(t, c, s, allow) {
+            return;
+        }
+        let old = profile.nnd[t];
+        let cutoff = old.max(profile.nnd[c]);
+        let d = dist.dist_early(t, c, cutoff);
+        if d < cutoff {
+            profile.observe(t, c, d);
+        }
+        if d >= old {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::hst::warmup::warmup;
+    use crate::config::SearchParams;
+    use crate::dist::DistanceKind;
+    use crate::sax::SaxIndex;
+    use crate::ts::series::IntoSeries;
+    use crate::ts::{generators, SeqStats, TimeSeries};
+    use crate::util::rng::Rng64;
+
+    fn warm_profile(
+        ts: &TimeSeries,
+        s: usize,
+    ) -> (SeqStats, SearchParams, NndProfile) {
+        let stats = SeqStats::compute(ts, s);
+        let params = SearchParams::new(s, 4, 4);
+        let idx = SaxIndex::build(ts, &stats, &params.sax);
+        let dist = CountingDistance::new(ts, &stats, DistanceKind::Znorm);
+        let mut profile = NndProfile::new(idx.len());
+        let mut rng = Rng64::new(7);
+        warmup(&dist, &idx, &mut profile, s, false, &mut rng);
+        (stats, params, profile)
+    }
+
+    #[test]
+    fn short_range_improves_profile_quality() {
+        let ts = generators::ecg_like(4_000, 100, 1, 60).into_series("e");
+        let s = 100;
+        let (stats, _params, mut profile) = warm_profile(&ts, s);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        let before: f64 = profile.nnd.iter().filter(|v| v.is_finite()).sum();
+        let n = profile.len();
+        short_range(&dist, &mut profile, n, s, false);
+        let after: f64 = profile.nnd.iter().filter(|v| v.is_finite()).sum();
+        assert!(
+            after < before,
+            "profile mass should shrink: {after} !< {before}"
+        );
+        // bounded cost: at most 2N suggestions
+        assert!(dist.calls() <= 2 * n as u64);
+    }
+
+    #[test]
+    fn short_range_never_breaks_upper_bound_invariant() {
+        let ts = generators::sine_with_noise(1_200, 0.3, 61).into_series("s");
+        let s = 64;
+        let (stats, params, mut profile) = warm_profile(&ts, s);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        let n = profile.len();
+        short_range(&dist, &mut profile, n, s, false);
+        let exact = crate::algo::brute::BruteForce::exact_profile(
+            &ts, &stats, &params, &dist,
+        );
+        for i in 0..n {
+            assert!(profile.nnd[i] >= exact.nnd[i] - 5e-8, "i={i}");
+        }
+    }
+
+    #[test]
+    fn long_range_levels_a_peak() {
+        // Build a profile, clarify one sequence exactly, then check that
+        // the long-range pass lowers its time-neighbors' nnds.
+        let ts = generators::valve_like(3_000, 200, 1, 62).into_series("v");
+        let s = 128;
+        let (stats, _params, mut profile) = warm_profile(&ts, s);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        let n = profile.len();
+        short_range(&dist, &mut profile, n, s, false);
+
+        // exact nnd for the middle sequence
+        let i = n / 2;
+        for j in 0..n {
+            if j.abs_diff(i) >= s {
+                let d = dist.dist(i, j);
+                profile.observe(i, j, d);
+            }
+        }
+        let before: Vec<f64> = (1..=s)
+            .filter(|&j| i + j < n)
+            .map(|j| profile.nnd[i + j])
+            .collect();
+        long_range_forw(i, &dist, &mut profile, 0.0, n, s, false);
+        let after: Vec<f64> = (1..=s)
+            .filter(|&j| i + j < n)
+            .map(|j| profile.nnd[i + j])
+            .collect();
+        assert!(
+            after.iter().zip(&before).all(|(a, b)| a <= b),
+            "nnds can only decrease"
+        );
+        // either the walk improved a neighbor, or the profile was already
+        // time-coherent at i+1 (warm-up can get lucky on smooth series)
+        let g = profile.ngh[i];
+        let improved = after.iter().zip(&before).any(|(a, b)| a < b);
+        assert!(
+            improved || profile.ngh[i + 1] == g + 1,
+            "no improvement and no pre-existing coherence"
+        );
+    }
+
+    #[test]
+    fn long_range_respects_best_dist_stop() {
+        let ts = generators::ecg_like(2_000, 90, 1, 63).into_series("e");
+        let s = 80;
+        let (stats, _params, mut profile) = warm_profile(&ts, s);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        let n = profile.len();
+        let i = n / 3;
+        // huge best_dist: every nnd < best_dist, so the walk stops at j=1
+        let calls_before = dist.calls();
+        long_range_forw(i, &dist, &mut profile, f64::INFINITY, n, s, false);
+        assert_eq!(dist.calls(), calls_before, "no calls when peak ended");
+    }
+
+    #[test]
+    fn bounds_are_respected_at_series_edges() {
+        let ts = generators::sine_with_noise(600, 0.2, 64).into_series("s");
+        let s = 64;
+        let (stats, _params, mut profile) = warm_profile(&ts, s);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        let n = profile.len();
+        // must not panic at either edge
+        long_range_forw(n - 1, &dist, &mut profile, 0.0, n, s, false);
+        long_range_back(0, &dist, &mut profile, 0.0, n, s, false);
+        long_range_forw(0, &dist, &mut profile, 0.0, n, s, false);
+        long_range_back(n - 1, &dist, &mut profile, 0.0, n, s, false);
+    }
+}

@@ -1,0 +1,121 @@
+//! The HST warm-up procedure (paper Sec. 3.3, Fig. 1 left).
+//!
+//! Builds the first approximate nnd profile with ~N distance calls:
+//!
+//! 1. shuffle the members of every SAX cluster (avoids chains of
+//!    time-consecutive sequences, which would all be self-matches);
+//! 2. concatenate the clusters from the smallest to the biggest;
+//! 3. walk the resulting order calling the distance function between each
+//!    pair of consecutive sequences — the last sequence of a cluster is
+//!    coupled with the first of the next — skipping self-match pairs.
+//!
+//! Every computed distance upper-bounds the nnd of *both* endpoints, so
+//! after the walk almost every sequence has a finite approximate nnd;
+//! sequences whose links were all self-matches keep the ∞ sentinel ("no
+//! possible discord candidate is neglected").
+
+use crate::discord::NndProfile;
+use crate::dist::CountingDistance;
+use crate::sax::SaxIndex;
+use crate::util::rng::Rng64;
+
+use crate::algo::non_self_match;
+
+/// Run the warm-up chain over `profile`.
+pub fn warmup(
+    dist: &CountingDistance,
+    idx: &SaxIndex,
+    profile: &mut NndProfile,
+    s: usize,
+    allow_self_match: bool,
+    rng: &mut Rng64,
+) {
+    let mut prev: Option<usize> = None;
+    for &cid in &idx.by_size {
+        let mut members = idx.clusters[cid].clone();
+        rng.shuffle(&mut members);
+        for seq in members {
+            if let Some(p) = prev {
+                if non_self_match(p, seq, s, allow_self_match) {
+                    let d = dist.dist(p, seq);
+                    profile.observe(p, seq, d);
+                }
+            }
+            prev = Some(seq);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SearchParams;
+    use crate::dist::DistanceKind;
+    use crate::ts::series::IntoSeries;
+    use crate::ts::{generators, SeqStats};
+
+    fn setup(
+        n: usize,
+        s: usize,
+    ) -> (crate::ts::TimeSeries, SeqStats, SearchParams) {
+        let ts = generators::ecg_like(n, 90, 1, 50).into_series("e");
+        let stats = SeqStats::compute(&ts, s);
+        let params = SearchParams::new(s, 4, 4);
+        (ts, stats, params)
+    }
+
+    #[test]
+    fn costs_about_one_call_per_sequence() {
+        let (ts, stats, params) = setup(3_000, 100);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        let idx = SaxIndex::build(&ts, &stats, &params.sax);
+        let mut profile = NndProfile::new(idx.len());
+        let mut rng = Rng64::new(0);
+        warmup(&dist, &idx, &mut profile, 100, false, &mut rng);
+        let n = idx.len() as u64;
+        assert!(dist.calls() <= n, "{} calls > N={}", dist.calls(), n);
+        assert!(dist.calls() >= n / 2, "{} calls suspiciously few", dist.calls());
+    }
+
+    #[test]
+    fn most_sequences_get_finite_nnd() {
+        let (ts, stats, params) = setup(3_000, 100);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        let idx = SaxIndex::build(&ts, &stats, &params.sax);
+        let mut profile = NndProfile::new(idx.len());
+        let mut rng = Rng64::new(1);
+        warmup(&dist, &idx, &mut profile, 100, false, &mut rng);
+        let finite = profile.nnd.iter().filter(|v| v.is_finite()).count();
+        assert!(
+            finite * 10 >= profile.len() * 8,
+            "only {}/{} finite",
+            finite,
+            profile.len()
+        );
+        // neighbors recorded consistently and non-self-match
+        for i in 0..profile.len() {
+            if profile.nnd[i].is_finite() {
+                let g = profile.ngh[i];
+                assert_ne!(g, crate::discord::NO_NEIGHBOR);
+                assert!(i.abs_diff(g) >= 100);
+            }
+        }
+    }
+
+    #[test]
+    fn skips_self_matches() {
+        // tiny cluster of overlapping sequences: no valid link possible,
+        // sentinel survives (paper's sequence-11 example in Fig. 1)
+        let (ts, stats, params) = setup(400, 152);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        let idx = SaxIndex::build(&ts, &stats, &params.sax);
+        let mut profile = NndProfile::new(idx.len());
+        let mut rng = Rng64::new(2);
+        warmup(&dist, &idx, &mut profile, 152, false, &mut rng);
+        for i in 0..profile.len() {
+            if profile.nnd[i].is_finite() {
+                assert!(i.abs_diff(profile.ngh[i]) >= 152);
+            }
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! MERLIN (Nakamura, Imamura, Mercer & Keogh, ICDM 2020): parameter-free
+//! discovery of discords of *every* length in a range.
+//!
+//! The paper's related-work section points to MERLIN as the DADD-based
+//! successor for arbitrary-length discord scans; it is the natural
+//! "extension feature" for an HST framework and reuses our [`Dadd`]
+//! engine as its inner oracle.
+//!
+//! Algorithm (following the MERLIN paper's r-selection schedule):
+//! * L = minL: start r = 2·√L (an upper bound for z-normalized distance)
+//!   and halve until DRAG succeeds.
+//! * next 4 lengths: r = 0.99 · (previous length's discord nnd).
+//! * afterwards: r = μ − 2σ of the last 5 discord nnds; on failure retry
+//!   with r ← 0.99·r.
+
+use anyhow::{ensure, Result};
+
+use crate::config::SearchParams;
+use crate::discord::Discord;
+use crate::dist::{CountingDistance, DistanceKind};
+use crate::ts::{SeqStats, TimeSeries};
+
+use super::dadd::Dadd;
+
+/// One per-length result.
+#[derive(Debug, Clone)]
+pub struct LengthDiscord {
+    /// Sequence length L.
+    pub s: usize,
+    /// Top discord at that length.
+    pub discord: Discord,
+    /// The r value DRAG finally succeeded with.
+    pub r_used: f64,
+    /// DRAG attempts needed (r re-selections).
+    pub attempts: usize,
+}
+
+/// MERLIN driver over our DADD engine.
+#[derive(Debug, Clone)]
+pub struct Merlin {
+    /// Inclusive length range to scan.
+    pub min_len: usize,
+    pub max_len: usize,
+    /// Step between scanned lengths (1 in the original; larger steps make
+    /// coarse scans cheap).
+    pub step: usize,
+}
+
+impl Merlin {
+    pub fn new(min_len: usize, max_len: usize) -> Merlin {
+        Merlin {
+            min_len,
+            max_len,
+            step: 1,
+        }
+    }
+
+    pub fn with_step(mut self, step: usize) -> Merlin {
+        self.step = step.max(1);
+        self
+    }
+
+    /// Scan all lengths; returns one discord per length plus the total
+    /// distance-call count.
+    pub fn run(&self, ts: &TimeSeries) -> Result<(Vec<LengthDiscord>, u64)> {
+        ensure!(self.min_len >= 4, "min_len too small");
+        ensure!(self.min_len <= self.max_len, "empty length range");
+        ensure!(
+            ts.n_total() >= 2 * self.max_len,
+            "series too short for max_len {}",
+            self.max_len
+        );
+
+        let mut out: Vec<LengthDiscord> = Vec::new();
+        let mut total_calls = 0u64;
+        let mut recent: Vec<f64> = Vec::new(); // last discord nnds
+
+        let mut s = self.min_len;
+        while s <= self.max_len {
+            let stats = SeqStats::compute(ts, s);
+            let dist = CountingDistance::new(ts, &stats, DistanceKind::Znorm);
+            let params = SearchParams::new(s, pick_p(s), 4);
+
+            // r schedule
+            let mut r = match recent.len() {
+                0 => 2.0 * (s as f64).sqrt(),
+                1..=4 => 0.99 * recent.last().unwrap(),
+                _ => {
+                    let tail = &recent[recent.len() - 5..];
+                    let mu = tail.iter().sum::<f64>() / 5.0;
+                    let var =
+                        tail.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / 5.0;
+                    (mu - 2.0 * var.sqrt()).max(1e-6)
+                }
+            };
+
+            let mut attempts = 0;
+            let found = loop {
+                attempts += 1;
+                ensure!(attempts <= 64, "MERLIN failed to converge at L={s}");
+                let dadd = Dadd {
+                    r,
+                    page_size: 10_000,
+                };
+                let outcome = dadd.run_detailed(ts, &params, &dist);
+                if let Some(d) = outcome.discords.first() {
+                    break d.clone();
+                }
+                // r too big: the discord's nnd is below r
+                r *= if recent.is_empty() { 0.5 } else { 0.99 };
+            };
+            total_calls += dist.calls();
+            recent.push(found.nnd);
+            out.push(LengthDiscord {
+                s,
+                discord: found,
+                r_used: r,
+                attempts,
+            });
+            s += self.step;
+        }
+        Ok((out, total_calls))
+    }
+}
+
+/// Largest P <= 8 dividing s (MERLIN itself is SAX-free; P only matters
+/// because our DADD shares the search-params plumbing).
+fn pick_p(s: usize) -> usize {
+    for p in [8usize, 6, 5, 4, 3, 2] {
+        if s % p == 0 {
+            return p;
+        }
+    }
+    1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{brute::BruteForce, Algorithm};
+    use crate::ts::generators;
+    use crate::ts::series::IntoSeries;
+
+    #[test]
+    fn per_length_discords_match_brute() {
+        let ts = generators::ecg_like(1_400, 100, 1, 400).into_series("e");
+        let merlin = Merlin::new(60, 72).with_step(4);
+        let (found, calls) = merlin.run(&ts).unwrap();
+        assert_eq!(found.len(), 4); // 60, 64, 68, 72
+        assert!(calls > 0);
+        for ld in &found {
+            let params = SearchParams::new(ld.s, pick_p(ld.s), 4);
+            let truth = BruteForce.run(&ts, &params).unwrap();
+            assert!(
+                (ld.discord.nnd - truth.discords[0].nnd).abs() < 5e-8,
+                "L={}: merlin {} vs brute {}",
+                ld.s,
+                ld.discord.nnd,
+                truth.discords[0].nnd
+            );
+        }
+    }
+
+    #[test]
+    fn r_schedule_warm_starts_after_first_length() {
+        let ts = generators::valve_like(1_600, 150, 1, 401).into_series("v");
+        let merlin = Merlin::new(96, 104).with_step(2);
+        let (found, _) = merlin.run(&ts).unwrap();
+        // after the cold start, the warm-started lengths converge fast
+        for ld in &found[1..] {
+            assert!(ld.attempts <= 8, "L={} took {} attempts", ld.s, ld.attempts);
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_ranges() {
+        let ts = generators::sine_with_noise(500, 0.1, 402).into_series("s");
+        assert!(Merlin::new(100, 50).run(&ts).is_err());
+        assert!(Merlin::new(100, 400).run(&ts).is_err(), "series too short");
+    }
+}

@@ -1,0 +1,122 @@
+//! Discord-search algorithms.
+//!
+//! * [`brute`] — O(N²) ground truth (the correctness oracle for tests).
+//! * [`hotsax`] — the 2005 baseline (Keogh, Lin & Fu).
+//! * [`hst`] — **the paper's contribution**: HOT SAX Time.
+//! * [`dadd`] — Disk-Aware Discord Discovery / DRAG (Yankov et al. 2008).
+//! * [`rra`] — Rare Rule Anomaly via Sequitur (Senin et al. 2015).
+//! * [`scamp`] — exact matrix profile (SCAMP/STOMP-style; serial + XLA-tiled).
+//!
+//! Every engine implements [`Algorithm`] and returns a [`SearchReport`]
+//! carrying the discord set, the distance-call count (the paper's primary
+//! metric), and wall-clock time.
+
+pub mod brute;
+pub mod dadd;
+pub mod merlin;
+pub mod parallel;
+pub mod prescrimp;
+pub mod hotsax;
+pub mod hst;
+pub mod rra;
+pub mod scamp;
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::SearchParams;
+use crate::discord::DiscordSet;
+use crate::ts::TimeSeries;
+
+/// Outcome of one discord search.
+#[derive(Debug, Clone)]
+pub struct SearchReport {
+    /// Algorithm identifier.
+    pub algo: String,
+    /// Discords in rank order (1st = highest nnd).
+    pub discords: DiscordSet,
+    /// Total calls to the sequence-distance function.
+    pub distance_calls: u64,
+    /// Wall-clock time of the search proper (excludes series generation).
+    pub elapsed: Duration,
+    /// Number of sequences N in the search space.
+    pub n_sequences: usize,
+}
+
+impl SearchReport {
+    /// Cost per sequence for this search (paper Sec. 4.2).
+    pub fn cps(&self) -> f64 {
+        crate::metrics::cps(
+            self.distance_calls,
+            self.n_sequences,
+            self.discords.len().max(1),
+        )
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj()
+            .set("algo", self.algo.as_str())
+            .set(
+                "discords",
+                self.discords.iter().map(|d| d.to_json()).collect::<Vec<_>>(),
+            )
+            .set("distance_calls", self.distance_calls)
+            .set("elapsed_secs", self.elapsed.as_secs_f64())
+            .set("n_sequences", self.n_sequences)
+            .set("cps", self.cps())
+    }
+}
+
+/// A discord-search engine.
+pub trait Algorithm {
+    /// Short identifier ("hst", "hotsax", …).
+    fn name(&self) -> &'static str;
+
+    /// Find the first `params.k` discords of `ts`.
+    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport>;
+}
+
+/// Look up an algorithm by name (CLI / service entry point).
+pub fn by_name(name: &str) -> Option<Box<dyn Algorithm + Send + Sync>> {
+    match name.to_ascii_lowercase().as_str() {
+        "brute" => Some(Box::new(brute::BruteForce)),
+        "hotsax" | "hot-sax" | "hot_sax" => Some(Box::new(hotsax::HotSax)),
+        "hst" | "hotsaxtime" => Some(Box::new(hst::HstSearch::default())),
+        "dadd" | "drag" => Some(Box::new(dadd::Dadd::default())),
+        "rra" => Some(Box::new(rra::Rra::default())),
+        "scamp" | "stomp" => Some(Box::new(scamp::Scamp::default())),
+        "scamp-par" => Some(Box::new(parallel::ParallelScamp::default())),
+        "prescrimp" => Some(Box::new(prescrimp::PreScrimp::default())),
+        _ => None,
+    }
+}
+
+/// Self-match predicate shared by all engines: sequences overlap when
+/// |i − j| < s (unless the Table 7 protocol allows self-matches).
+#[inline]
+pub(crate) fn non_self_match(i: usize, j: usize, s: usize, allow: bool) -> bool {
+    allow || i.abs_diff(j) >= s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_engines() {
+        for n in ["brute", "hotsax", "hst", "dadd", "rra", "scamp", "scamp-par", "prescrimp"] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn self_match_predicate() {
+        assert!(!non_self_match(10, 15, 10, false));
+        assert!(non_self_match(10, 20, 10, false));
+        assert!(non_self_match(20, 10, 10, false));
+        assert!(non_self_match(10, 11, 10, true), "table 7 protocol");
+    }
+}

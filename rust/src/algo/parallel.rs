@@ -1,0 +1,285 @@
+//! Parallel engines — the paper's "natural follow up" (Sec. 5:
+//! "Parallelizing HST is also a natural follow up of the present work").
+//!
+//! Two pieces are embarrassingly parallel and implemented here with
+//! std scoped threads (no external runtime):
+//!
+//! * [`ParallelScamp`] — the exact matrix profile split by diagonal
+//!   ranges, one partial profile per worker, merged at the end. This is
+//!   the same decomposition SCAMP uses across GPU thread blocks.
+//! * [`par_warmup_profile`] — the HST warm-up + short-range topology over
+//!   P disjoint chunks of the cluster chain, giving HST a parallel
+//!   initialization while the (inherently sequential) pruning loop stays
+//!   serial.
+//!
+//! Each worker owns its own [`CountingDistance`] (the counter is a
+//! `Cell`, deliberately not `Sync`); call counts are summed afterwards so
+//! the accounting stays exact.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::config::SearchParams;
+use crate::discord::NndProfile;
+use crate::dist::{CountingDistance, DistanceKind};
+use crate::sax::SaxIndex;
+use crate::ts::{SeqStats, TimeSeries};
+use crate::util::rng::Rng64;
+
+use super::{brute::BruteForce, non_self_match, Algorithm, SearchReport};
+
+/// Merge `other` into `base` (pointwise min, keeping neighbors).
+pub fn merge_profiles(base: &mut NndProfile, other: &NndProfile) {
+    for i in 0..base.len() {
+        if other.nnd[i] < base.nnd[i] {
+            base.nnd[i] = other.nnd[i];
+            base.ngh[i] = other.ngh[i];
+        }
+    }
+}
+
+/// Exact matrix profile with `threads` workers over diagonal ranges.
+pub fn par_matrix_profile(
+    ts: &TimeSeries,
+    stats: &SeqStats,
+    threads: usize,
+) -> (NndProfile, u64) {
+    let s = stats.s;
+    let n = stats.len();
+    let threads = threads.max(1).min(n.saturating_sub(s).max(1));
+    let pts = &ts.points;
+    let sf = s as f64;
+
+    let mut results: Vec<(NndProfile, u64)> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..threads {
+            handles.push(scope.spawn(move || {
+                let mut profile = NndProfile::new(n);
+                let mut pairs = 0u64;
+                // interleaved diagonals: balanced load (long diagonals are
+                // spread across workers)
+                let mut diag = s + w;
+                while diag < n {
+                    let mut qt = 0.0;
+                    for t in 0..s {
+                        qt += pts[t] * pts[diag + t];
+                    }
+                    let mut i = 0usize;
+                    loop {
+                        let j = i + diag;
+                        let corr = (qt - sf * stats.mean[i] * stats.mean[j])
+                            / (sf * stats.std[i] * stats.std[j]);
+                        let d = (2.0 * sf * (1.0 - corr)).max(0.0).sqrt();
+                        profile.observe(i, j, d);
+                        pairs += 1;
+                        i += 1;
+                        if i + diag >= n {
+                            break;
+                        }
+                        qt += pts[i + s - 1] * pts[i + diag + s - 1]
+                            - pts[i - 1] * pts[i + diag - 1];
+                    }
+                    diag += threads;
+                }
+                (profile, pairs)
+            }));
+        }
+        for h in handles {
+            results.push(h.join().expect("scamp worker panicked"));
+        }
+    });
+
+    let mut merged = NndProfile::new(n);
+    let mut total_pairs = 0u64;
+    for (p, c) in results {
+        merge_profiles(&mut merged, &p);
+        total_pairs += c;
+    }
+    (merged, total_pairs)
+}
+
+/// Multi-threaded SCAMP engine.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelScamp {
+    /// Worker threads (0 = available parallelism).
+    pub threads: usize,
+}
+
+impl Default for ParallelScamp {
+    fn default() -> ParallelScamp {
+        ParallelScamp { threads: 0 }
+    }
+}
+
+impl ParallelScamp {
+    fn n_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        }
+    }
+}
+
+impl Algorithm for ParallelScamp {
+    fn name(&self) -> &'static str {
+        "scamp-par"
+    }
+
+    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport> {
+        let s = params.sax.s;
+        let n = ts.num_sequences(s);
+        ensure!(n >= 2, "series too short for s={s}");
+        ensure!(params.znormalize, "matrix profile is z-normalized only");
+        let start = Instant::now();
+        let stats = SeqStats::compute(ts, s);
+        let (profile, pairs) = par_matrix_profile(ts, &stats, self.n_threads());
+        let discords = BruteForce::discords_from_profile(&profile, s, params.k);
+        Ok(SearchReport {
+            algo: self.name().to_string(),
+            discords,
+            distance_calls: pairs,
+            elapsed: start.elapsed(),
+            n_sequences: n,
+        })
+    }
+}
+
+/// Parallel HST initialization: split the shuffled cluster chain into
+/// `threads` contiguous segments, run the warm-up links and the
+/// short-range sweeps per segment, and merge. Returns (profile, calls).
+pub fn par_warmup_profile(
+    ts: &TimeSeries,
+    stats: &SeqStats,
+    idx: &SaxIndex,
+    params: &SearchParams,
+    threads: usize,
+) -> (NndProfile, u64) {
+    let s = params.sax.s;
+    let n = idx.len();
+    let threads = threads.max(1);
+    let allow = params.allow_self_match;
+
+    // build the global chain exactly like the serial warm-up
+    let mut rng = Rng64::new(params.seed ^ 0x4853_5400);
+    let mut chain: Vec<usize> = Vec::with_capacity(n);
+    for &cid in &idx.by_size {
+        let mut members = idx.clusters[cid].clone();
+        rng.shuffle(&mut members);
+        chain.extend(members);
+    }
+
+    let kind = if params.znormalize {
+        DistanceKind::Znorm
+    } else {
+        DistanceKind::Raw
+    };
+
+    let seg = n.div_ceil(threads);
+    let mut results: Vec<(NndProfile, u64)> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..threads {
+            let chain = &chain;
+            let lo = w * seg;
+            if lo >= n {
+                break;
+            }
+            // overlap by one so the link crossing the boundary is computed
+            let hi = ((w + 1) * seg + 1).min(n);
+            handles.push(scope.spawn(move || {
+                let dist = CountingDistance::new(ts, stats, kind);
+                let mut profile = NndProfile::new(n);
+                for t in lo..hi.saturating_sub(1) {
+                    let (a, b) = (chain[t], chain[t + 1]);
+                    if non_self_match(a, b, s, allow) {
+                        let d = dist.dist(a, b);
+                        profile.observe(a, b, d);
+                    }
+                }
+                (profile, dist.calls())
+            }));
+        }
+        for h in handles {
+            results.push(h.join().expect("warmup worker panicked"));
+        }
+    });
+
+    let mut merged = NndProfile::new(n);
+    let mut calls = 0u64;
+    for (p, c) in results {
+        merge_profiles(&mut merged, &p);
+        calls += c;
+    }
+
+    // short-range topology stays serial (it chains through the profile)
+    let dist = CountingDistance::new(ts, stats, kind);
+    crate::algo::hst::topology::short_range(&dist, &mut merged, n, s, allow);
+    (merged, calls + dist.calls())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::scamp::Scamp;
+    use crate::ts::generators;
+    use crate::ts::series::IntoSeries;
+
+    #[test]
+    fn parallel_profile_equals_serial() {
+        let ts = generators::ecg_like(1_600, 110, 1, 700).into_series("e");
+        let stats = SeqStats::compute(&ts, 96);
+        let (serial, serial_pairs) = Scamp::matrix_profile(&ts, &stats);
+        for threads in [1, 2, 4, 7] {
+            let (par, pairs) = par_matrix_profile(&ts, &stats, threads);
+            assert_eq!(pairs, serial_pairs, "threads={threads}");
+            for i in 0..serial.len() {
+                assert!(
+                    (par.nnd[i] - serial.nnd[i]).abs() < 5e-8,
+                    "threads={threads} i={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_scamp_engine_matches_brute() {
+        let ts = generators::valve_like(1_200, 140, 1, 701).into_series("v");
+        let params = SearchParams::new(96, 4, 4).with_discords(2);
+        let par = ParallelScamp { threads: 3 }.run(&ts, &params).unwrap();
+        let bf = BruteForce.run(&ts, &params).unwrap();
+        for (a, b) in par.discords.iter().zip(&bf.discords) {
+            assert!((a.nnd - b.nnd).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn par_warmup_is_valid_upper_bound_and_cheap() {
+        let ts = generators::respiration_like(2_400, 130, 1, 702).into_series("r");
+        let s = 128;
+        let stats = SeqStats::compute(&ts, s);
+        let params = SearchParams::new(s, 4, 4);
+        let idx = SaxIndex::build(&ts, &stats, &params.sax);
+        let (profile, calls) = par_warmup_profile(&ts, &stats, &idx, &params, 4);
+        // cost stays ~2 calls/sequence (+ thread-boundary overlaps)
+        assert!(calls <= 3 * idx.len() as u64 + 8);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        let exact = BruteForce::exact_profile(&ts, &stats, &params, &dist);
+        for i in 0..idx.len() {
+            assert!(profile.nnd[i] >= exact.nnd[i] - 5e-8, "i={i}");
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_pair_total() {
+        let ts = generators::sine_with_noise(900, 0.2, 703).into_series("s");
+        let stats = SeqStats::compute(&ts, 64);
+        let (_, p1) = par_matrix_profile(&ts, &stats, 1);
+        let (_, p8) = par_matrix_profile(&ts, &stats, 8);
+        assert_eq!(p1, p8);
+    }
+}

@@ -1,0 +1,187 @@
+//! preSCRIMP (Zhu et al., ICDM 2018): the approximate matrix-profile pass
+//! the paper's Sec. 4.5 discusses as the anytime alternative to SCAMP.
+//!
+//! Instead of every diagonal, preSCRIMP evaluates anchor pairs on a
+//! `stride`-spaced sample of positions and then *extends* each anchor
+//! match forward/backward while it keeps improving the profile (the same
+//! CNP property HST's time topology exploits). The result is an
+//! approximate profile whose maxima usually coincide with the true
+//! discords — but, as the paper notes for all approximate methods, with
+//! no exactness guarantee; it serves as a baseline and as an ablation
+//! reference for HST's warm-up quality.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::config::SearchParams;
+use crate::discord::NndProfile;
+use crate::dist::{CountingDistance, DistanceKind};
+use crate::ts::{SeqStats, TimeSeries};
+
+use super::{brute::BruteForce, Algorithm, SearchReport};
+
+/// The preSCRIMP engine.
+#[derive(Debug, Clone, Copy)]
+pub struct PreScrimp {
+    /// Sampling stride (in sequences); the original uses s/4.
+    /// 0 = auto (s/4).
+    pub stride: usize,
+}
+
+impl Default for PreScrimp {
+    fn default() -> PreScrimp {
+        PreScrimp { stride: 0 }
+    }
+}
+
+impl PreScrimp {
+    /// Approximate profile + pair-evaluation count.
+    pub fn approx_profile(
+        &self,
+        ts: &TimeSeries,
+        stats: &SeqStats,
+        seed: u64,
+    ) -> (NndProfile, u64) {
+        let s = stats.s;
+        let n = stats.len();
+        let stride = if self.stride == 0 {
+            (s / 4).max(1)
+        } else {
+            self.stride
+        };
+        let _ = seed; // sampling is deterministic; seed kept for API parity
+        let dist = CountingDistance::new(ts, stats, DistanceKind::Znorm);
+        let mut profile = NndProfile::new(n);
+
+        // anchor pass: each sampled i gets its nn among sampled js
+        let samples: Vec<usize> = (0..n).step_by(stride).collect();
+        for &i in &samples {
+            // random subset of partners (anytime flavour): all samples here
+            for &j in &samples {
+                if i < j && j - i >= s {
+                    let cutoff = profile.nnd[i].max(profile.nnd[j]);
+                    let d = dist.dist_early(i, j, cutoff);
+                    if d < cutoff {
+                        profile.observe(i, j, d);
+                    }
+                }
+            }
+        }
+
+        // extension pass: walk each anchor match diagonally while improving
+        for &i in &samples {
+            let g = profile.ngh[i];
+            if g == crate::discord::NO_NEIGHBOR {
+                continue;
+            }
+            for dir in [1isize, -1isize] {
+                let mut step = 1isize;
+                loop {
+                    let t = i as isize + dir * step;
+                    let c = g as isize + dir * step;
+                    if t < 0 || c < 0 || t >= n as isize || c >= n as isize {
+                        break;
+                    }
+                    let (t, c) = (t as usize, c as usize);
+                    if t.abs_diff(c) < s {
+                        break;
+                    }
+                    let old = profile.nnd[t];
+                    let d = dist.dist_early(t, c, old);
+                    if d < old {
+                        profile.observe(t, c, d);
+                    } else {
+                        break; // diagonal stopped improving
+                    }
+                    step += 1;
+                    if step as usize > stride {
+                        break; // next anchor takes over
+                    }
+                }
+            }
+        }
+        let calls = dist.calls();
+        (profile, calls)
+    }
+}
+
+impl Algorithm for PreScrimp {
+    fn name(&self) -> &'static str {
+        "prescrimp"
+    }
+
+    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport> {
+        let s = params.sax.s;
+        let n = ts.num_sequences(s);
+        ensure!(n >= 2, "series too short for s={s}");
+        ensure!(params.znormalize, "preSCRIMP is z-normalized only");
+        let start = Instant::now();
+        let stats = SeqStats::compute(ts, s);
+        let (profile, calls) = self.approx_profile(ts, &stats, params.seed);
+        let discords = BruteForce::discords_from_profile(&profile, s, params.k);
+        Ok(SearchReport {
+            algo: self.name().to_string(),
+            discords,
+            distance_calls: calls,
+            elapsed: start.elapsed(),
+            n_sequences: n,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::scamp::Scamp;
+    use crate::ts::generators;
+    use crate::ts::series::IntoSeries;
+
+    #[test]
+    fn profile_upper_bounds_exact_everywhere() {
+        let ts = generators::ecg_like(1_500, 110, 1, 600).into_series("e");
+        let s = 96;
+        let stats = SeqStats::compute(&ts, s);
+        let (approx, _) = PreScrimp::default().approx_profile(&ts, &stats, 1);
+        let (exact, _) = Scamp::matrix_profile(&ts, &stats);
+        for i in 0..exact.len() {
+            assert!(
+                approx.nnd[i] >= exact.nnd[i] - 5e-8,
+                "i={i}: {} < exact {}",
+                approx.nnd[i],
+                exact.nnd[i]
+            );
+        }
+    }
+
+    #[test]
+    fn far_cheaper_than_exact_profile() {
+        let ts = generators::sine_with_noise(3_000, 0.1, 601).into_series("s");
+        let s = 120;
+        let stats = SeqStats::compute(&ts, s);
+        let (_, approx_calls) = PreScrimp::default().approx_profile(&ts, &stats, 2);
+        let (_, exact_pairs) = Scamp::matrix_profile(&ts, &stats);
+        assert!(
+            approx_calls * 10 < exact_pairs,
+            "prescrimp {} vs scamp {}",
+            approx_calls,
+            exact_pairs
+        );
+    }
+
+    #[test]
+    fn usually_finds_a_strong_injected_discord() {
+        let mut pts = generators::sine_with_noise(2_400, 0.05, 602);
+        let mut rng = crate::util::rng::Rng64::new(3);
+        generators::inject(&mut pts, 1_200, 96, generators::Anomaly::Bump, &mut rng);
+        let ts = pts.into_series("bump");
+        let params = SearchParams::new(96, 4, 4);
+        let rep = PreScrimp::default().run(&ts, &params).unwrap();
+        let d = &rep.discords[0];
+        assert!(
+            d.position.abs_diff(1_200 + 48) <= 144,
+            "approx discord at {} should be near the bump",
+            d.position
+        );
+    }
+}

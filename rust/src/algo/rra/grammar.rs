@@ -1,0 +1,172 @@
+//! Grammar induction for RRA: Re-Pair over a symbol stream.
+//!
+//! Grammarviz's RRA uses Sequitur; Re-Pair is the batch member of the same
+//! grammar-compression family (repeatedly replace the most frequent digram
+//! with a fresh nonterminal until no digram repeats). What RRA consumes is
+//! not the grammar itself but the *rule coverage density*: how many rule
+//! applications span each position of the input — well-compressed (rule
+//! dense) regions are grammatically "ordinary", rule-sparse regions are
+//! candidate anomalies. Re-Pair yields the same density signal with a
+//! simpler, more testable implementation (see DESIGN.md substitutions).
+
+use std::collections::HashMap;
+
+/// Result of grammar induction.
+#[derive(Debug, Clone)]
+pub struct GrammarResult {
+    /// Number of rule applications covering each input symbol position.
+    pub coverage: Vec<u32>,
+    /// Number of distinct rules created.
+    pub n_rules: usize,
+    /// Length of the fully-compressed top-level sequence.
+    pub final_len: usize,
+}
+
+/// One stream element: current symbol + the input interval it expands to.
+#[derive(Debug, Clone, Copy)]
+struct Elem {
+    sym: u32,
+    start: u32,
+    end: u32, // exclusive
+}
+
+/// Run Re-Pair on `symbols`. Terminals must be < `u32::MAX / 2`;
+/// nonterminals are allocated above the maximum input symbol.
+pub fn repair(symbols: &[u32]) -> GrammarResult {
+    let n = symbols.len();
+    let mut coverage = vec![0u32; n];
+    if n < 2 {
+        return GrammarResult {
+            coverage,
+            n_rules: 0,
+            final_len: n,
+        };
+    }
+    let mut stream: Vec<Elem> = symbols
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| Elem {
+            sym: s,
+            start: i as u32,
+            end: (i + 1) as u32,
+        })
+        .collect();
+    let mut next_sym = symbols.iter().copied().max().unwrap_or(0) + 1;
+    let mut n_rules = 0usize;
+
+    loop {
+        // count digrams
+        let mut counts: HashMap<(u32, u32), u32> = HashMap::new();
+        for w in stream.windows(2) {
+            *counts.entry((w[0].sym, w[1].sym)).or_insert(0) += 1;
+        }
+        // most frequent repeating digram (deterministic tie-break)
+        let Some((&digram, &cnt)) = counts
+            .iter()
+            .max_by_key(|&(&(a, b), &c)| (c, std::cmp::Reverse((a, b))))
+        else {
+            break;
+        };
+        if cnt < 2 {
+            break;
+        }
+
+        // replace non-overlapping occurrences left-to-right
+        let rule_sym = next_sym;
+        next_sym += 1;
+        n_rules += 1;
+        let mut out: Vec<Elem> = Vec::with_capacity(stream.len());
+        let mut i = 0;
+        while i < stream.len() {
+            if i + 1 < stream.len()
+                && (stream[i].sym, stream[i + 1].sym) == digram
+            {
+                let start = stream[i].start;
+                let end = stream[i + 1].end;
+                // one more rule application covers [start, end)
+                for c in &mut coverage[start as usize..end as usize] {
+                    *c += 1;
+                }
+                out.push(Elem {
+                    sym: rule_sym,
+                    start,
+                    end,
+                });
+                i += 2;
+            } else {
+                out.push(stream[i]);
+                i += 1;
+            }
+        }
+        stream = out;
+    }
+
+    GrammarResult {
+        coverage,
+        n_rules,
+        final_len: stream.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(repair(&[]).final_len, 0);
+        let r = repair(&[5]);
+        assert_eq!(r.final_len, 1);
+        assert_eq!(r.n_rules, 0);
+        assert_eq!(r.coverage, vec![0]);
+    }
+
+    #[test]
+    fn repetitive_input_compresses_hard() {
+        // abab abab abab abab
+        let syms: Vec<u32> = (0..32).map(|i| (i % 2) as u32).collect();
+        let r = repair(&syms);
+        assert!(r.final_len <= 4, "final len {}", r.final_len);
+        assert!(r.n_rules >= 2);
+        // every position covered by at least one rule
+        assert!(r.coverage.iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn unique_symbols_do_not_compress() {
+        let syms: Vec<u32> = (0..16).collect();
+        let r = repair(&syms);
+        assert_eq!(r.final_len, 16);
+        assert_eq!(r.n_rules, 0);
+        assert!(r.coverage.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn anomalous_region_gets_lower_coverage() {
+        // long repeating background with a unique block in the middle
+        let mut syms: Vec<u32> = Vec::new();
+        for i in 0..40 {
+            syms.push((i % 4) as u32);
+        }
+        syms.extend([90, 91, 92, 93]); // the anomaly: unique symbols
+        for i in 0..40 {
+            syms.push((i % 4) as u32);
+        }
+        let r = repair(&syms);
+        let bg: f64 = r.coverage[..40].iter().map(|&c| c as f64).sum::<f64>() / 40.0;
+        let an: f64 = r.coverage[40..44].iter().map(|&c| c as f64).sum::<f64>() / 4.0;
+        assert!(
+            an < bg,
+            "anomaly coverage {an} should be below background {bg}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let syms: Vec<u32> = (0..200).map(|i| (i * i % 7) as u32).collect();
+        let a = repair(&syms);
+        let b = repair(&syms);
+        assert_eq!(a.coverage, b.coverage);
+        assert_eq!(a.n_rules, b.n_rules);
+    }
+}

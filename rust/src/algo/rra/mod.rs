@@ -1,0 +1,243 @@
+//! RRA — Rare Rule Anomaly (Senin et al., EDBT 2015), the Table 6 baseline.
+//!
+//! Pipeline (strategy NONE, the only strategy the paper deems a fair
+//! comparison — Sec. 4.3):
+//!
+//! 1. SAX-discretize all sequences and apply *numerosity reduction* (keep
+//!    a word only where it differs from the previously kept one).
+//! 2. Grammar induction over the reduced word stream ([`grammar::repair`],
+//!    a Sequitur-family compressor) → per-position *rule coverage*.
+//! 3. Rule-sparse (low-coverage) intervals are the candidate anomalies;
+//!    the outer search loop visits sequences in ascending mean coverage.
+//! 4. Refinement: HOT SAX-style inner loop with best-so-far pruning over
+//!    that outer order, counting distance calls.
+//!
+//! Like Grammarviz's RRA, the quality of the result hinges on how well
+//! rule-sparseness predicts discords; the distance-call count is the
+//! comparable cost metric. (Our refinement scans all sequences, so the
+//! returned discord is exact — the original may return near-discords; the
+//! call-count comparison is what Table 6 reproduces.)
+
+pub mod grammar;
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::config::SearchParams;
+use crate::discord::{Discord, ExclusionZones};
+use crate::dist::{CountingDistance, DistanceKind};
+use crate::sax::SaxIndex;
+use crate::ts::{SeqStats, TimeSeries};
+use crate::util::rng::Rng64;
+
+use super::{non_self_match, Algorithm, SearchReport};
+
+/// The RRA engine.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Rra;
+
+/// Mean rule coverage per sequence start (the rarity score; low = rare).
+pub fn coverage_curve(idx: &SaxIndex, n_points: usize, s: usize) -> Vec<f64> {
+    let n = idx.len();
+    // numerosity reduction over the word stream
+    let mut kept_syms: Vec<u32> = Vec::new();
+    let mut kept_pos: Vec<usize> = Vec::new();
+    let mut prev: Option<usize> = None;
+    for i in 0..n {
+        let cid = idx.cluster_of[i];
+        if prev != Some(cid) {
+            kept_syms.push(cid as u32);
+            kept_pos.push(i);
+            prev = Some(cid);
+        }
+    }
+    let g = grammar::repair(&kept_syms);
+
+    // spread symbol coverage back over the points each kept word spans
+    let mut point_cov = vec![0.0f64; n_points];
+    for (t, &pos) in kept_pos.iter().enumerate() {
+        let end = if t + 1 < kept_pos.len() {
+            kept_pos[t + 1]
+        } else {
+            n
+        };
+        let c = g.coverage[t] as f64;
+        // the word at `pos` describes the window [pos, pos+s); attribute
+        // its coverage to the points up to the next kept word
+        for p in pos..end.min(n_points) {
+            point_cov[p] += c;
+        }
+    }
+
+    // mean coverage per sequence window
+    let mut prefix = vec![0.0f64; n_points + 1];
+    for (i, &c) in point_cov.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + c;
+    }
+    (0..n)
+        .map(|i| (prefix[(i + s).min(n_points)] - prefix[i]) / s as f64)
+        .collect()
+}
+
+/// One refinement pass: best discord not excluded, outer loop in ascending
+/// coverage order.
+fn find_one(
+    dist: &CountingDistance,
+    order: &[usize],
+    random_order: &[usize],
+    params: &SearchParams,
+    zones: &ExclusionZones,
+) -> Option<Discord> {
+    let s = params.sax.s;
+    let allow = params.allow_self_match;
+    let mut best_dist = 0.0f64;
+    let mut best: Option<Discord> = None;
+    for &i in order {
+        if !zones.allowed(i, s) {
+            continue;
+        }
+        let mut nnd_i = f64::INFINITY;
+        let mut ngh_i = usize::MAX;
+        let mut pruned = false;
+        for &j in random_order {
+            if i == j || !non_self_match(i, j, s, allow) {
+                continue;
+            }
+            let d = dist.dist_early(i, j, nnd_i);
+            if d < nnd_i {
+                nnd_i = d;
+                ngh_i = j;
+                if nnd_i < best_dist {
+                    pruned = true;
+                    break;
+                }
+            }
+        }
+        if !pruned && nnd_i.is_finite() && nnd_i >= best_dist {
+            best_dist = nnd_i;
+            best = Some(Discord {
+                position: i,
+                nnd: nnd_i,
+                neighbor: ngh_i,
+            });
+        }
+    }
+    best
+}
+
+impl Algorithm for Rra {
+    fn name(&self) -> &'static str {
+        "rra"
+    }
+
+    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport> {
+        let s = params.sax.s;
+        let n = ts.num_sequences(s);
+        ensure!(n >= 2, "series too short for s={s}");
+        let start = Instant::now();
+        let stats = SeqStats::compute(ts, s);
+        let kind = if params.znormalize {
+            DistanceKind::Znorm
+        } else {
+            DistanceKind::Raw
+        };
+        let dist = CountingDistance::new(ts, &stats, kind);
+        let idx = SaxIndex::build(ts, &stats, &params.sax);
+        let mut rng = Rng64::new(params.seed ^ 0x5252_4100); // "RRA"
+
+        // rarity ordering from grammar coverage
+        let cov = coverage_curve(&idx, ts.n_total(), s);
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            cov[a]
+                .partial_cmp(&cov[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut random_order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut random_order);
+
+        let mut zones = ExclusionZones::new();
+        let mut discords = Vec::new();
+        for _ in 0..params.k {
+            match find_one(&dist, &order, &random_order, params, &zones) {
+                Some(d) => {
+                    zones.add(d.position, s);
+                    discords.push(d);
+                }
+                None => break,
+            }
+        }
+
+        Ok(SearchReport {
+            algo: self.name().to_string(),
+            discords,
+            distance_calls: dist.calls(),
+            elapsed: start.elapsed(),
+            n_sequences: n,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::brute::BruteForce;
+    use crate::ts::generators;
+    use crate::ts::series::IntoSeries;
+
+    #[test]
+    fn refinement_returns_the_exact_discord() {
+        let ts = generators::ecg_like(1_500, 100, 1, 90).into_series("e");
+        let params = SearchParams::new(80, 4, 4);
+        let rra = Rra.run(&ts, &params).unwrap();
+        let bf = BruteForce.run(&ts, &params).unwrap();
+        assert!((rra.discords[0].nnd - bf.discords[0].nnd).abs() < 5e-8);
+    }
+
+    #[test]
+    fn coverage_curve_has_right_length_and_sign() {
+        let ts = generators::valve_like(2_000, 150, 1, 91).into_series("v");
+        let s = 128;
+        let params = SearchParams::new(s, 4, 4);
+        let stats = SeqStats::compute(&ts, s);
+        let idx = SaxIndex::build(&ts, &stats, &params.sax);
+        let cov = coverage_curve(&idx, ts.n_total(), s);
+        assert_eq!(cov.len(), ts.num_sequences(s));
+        assert!(cov.iter().all(|&c| c >= 0.0));
+        assert!(cov.iter().any(|&c| c > 0.0), "periodic data must compress");
+    }
+
+    #[test]
+    fn anomaly_region_is_rule_sparse() {
+        // periodic valve data with an injected glitch: the glitch window's
+        // coverage should sit in the lower half of the distribution
+        let mut pts = generators::valve_like(3_000, 200, 0, 92);
+        let mut rng = crate::util::rng::Rng64::new(4);
+        generators::inject(&mut pts, 1_500, 128, generators::Anomaly::Bump, &mut rng);
+        let ts = pts.into_series("v");
+        let s = 128;
+        let params = SearchParams::new(s, 4, 4);
+        let stats = SeqStats::compute(&ts, s);
+        let idx = SaxIndex::build(&ts, &stats, &params.sax);
+        let cov = coverage_curve(&idx, ts.n_total(), s);
+        let mut sorted = cov.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2];
+        assert!(
+            cov[1_500] <= median,
+            "glitch coverage {} should be <= median {median}",
+            cov[1_500]
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ts = generators::respiration_like(1_800, 120, 1, 93).into_series("r");
+        let params = SearchParams::new(100, 4, 4).with_seed(3);
+        let a = Rra.run(&ts, &params).unwrap();
+        let b = Rra.run(&ts, &params).unwrap();
+        assert_eq!(a.distance_calls, b.distance_calls);
+    }
+}

@@ -1,0 +1,170 @@
+//! SCAMP/STOMP-style exact matrix profile (the Sec. 4.5 baseline).
+//!
+//! Computes the full self-join matrix profile — the exact nnd of *every*
+//! sequence — in O(N²) time and O(N) space with the streaming dot-product
+//! recurrence along diagonals:
+//!
+//!   QT(i+1, j+1) = QT(i, j) − p_i·p_j + p_{i+s}·p_{j+s}
+//!
+//! and the paper's Eq. 3 to turn dots into z-normalized distances. The
+//! paper notes single-core SCAMP is essentially STOMP; that is what the
+//! serial path implements. An XLA-tiled variant (the `mp_tile` Pallas
+//! artifact) lives in [`crate::runtime`] and is exercised by the fig6
+//! bench and the end-to-end example.
+//!
+//! "Distance calls" for SCAMP are the number of evaluated pairs — the
+//! paper compares it by runtime only (its cost is data-independent), but
+//! counting keeps the reports uniform.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::config::SearchParams;
+use crate::discord::NndProfile;
+use crate::dist::DistanceKind;
+use crate::ts::{SeqStats, TimeSeries};
+
+use super::{brute::BruteForce, Algorithm, SearchReport};
+
+/// The serial matrix-profile engine.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Scamp;
+
+impl Scamp {
+    /// Exact matrix profile (z-normalized Euclidean, non-self-match band
+    /// of half-width s). Returns the profile and the number of evaluated
+    /// pairs.
+    pub fn matrix_profile(ts: &TimeSeries, stats: &SeqStats) -> (NndProfile, u64) {
+        let s = stats.s;
+        let n = stats.len();
+        let pts = &ts.points;
+        let mut profile = NndProfile::new(n);
+        let mut pairs = 0u64;
+        let sf = s as f64;
+
+        // Walk diagonals j - i = diag for diag in s..n (the exclusion band
+        // |i-j| < s is skipped entirely).
+        for diag in s..n {
+            // initial dot product QT(0, diag)
+            let mut qt = 0.0;
+            for t in 0..s {
+                qt += pts[t] * pts[diag + t];
+            }
+            let mut i = 0usize;
+            loop {
+                let j = i + diag;
+                // Eq. 3: d = sqrt(2s(1 − (qt − s·μiμj) / (s·σiσj)))
+                let corr = (qt - sf * stats.mean[i] * stats.mean[j])
+                    / (sf * stats.std[i] * stats.std[j]);
+                let d = (2.0 * sf * (1.0 - corr)).max(0.0).sqrt();
+                profile.observe(i, j, d);
+                pairs += 1;
+                i += 1;
+                if i + diag >= n {
+                    break;
+                }
+                // slide the window: remove head product, add tail product
+                qt += pts[i + s - 1] * pts[i + diag + s - 1] - pts[i - 1] * pts[i + diag - 1];
+            }
+        }
+        (profile, pairs)
+    }
+}
+
+impl Algorithm for Scamp {
+    fn name(&self) -> &'static str {
+        "scamp"
+    }
+
+    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport> {
+        let s = params.sax.s;
+        let n = ts.num_sequences(s);
+        ensure!(n >= 2, "series too short for s={s}");
+        ensure!(
+            params.znormalize,
+            "matrix-profile path is z-normalized only"
+        );
+        ensure!(
+            !params.allow_self_match,
+            "matrix profile uses the standard exclusion band"
+        );
+        let _ = DistanceKind::Znorm;
+        let start = Instant::now();
+        let stats = SeqStats::compute(ts, s);
+        let (profile, pairs) = Self::matrix_profile(ts, &stats);
+        let discords = BruteForce::discords_from_profile(&profile, s, params.k);
+        Ok(SearchReport {
+            algo: self.name().to_string(),
+            discords,
+            distance_calls: pairs,
+            elapsed: start.elapsed(),
+            n_sequences: n,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::brute::BruteForce;
+    use crate::config::SearchParams;
+    use crate::ts::generators;
+    use crate::ts::series::IntoSeries;
+
+    #[test]
+    fn profile_matches_brute_force() {
+        let ts = generators::ecg_like(1_000, 90, 1, 80).into_series("e");
+        let s = 64;
+        let params = SearchParams::new(s, 4, 4);
+        let stats = SeqStats::compute(&ts, s);
+        let dist = crate::dist::CountingDistance::new(
+            &ts,
+            &stats,
+            crate::dist::DistanceKind::Znorm,
+        );
+        let exact = BruteForce::exact_profile(&ts, &stats, &params, &dist);
+        let (mp, _) = Scamp::matrix_profile(&ts, &stats);
+        for i in 0..mp.len() {
+            assert!(
+                (mp.nnd[i] - exact.nnd[i]).abs() < 1e-6,
+                "i={i}: {} vs {}",
+                mp.nnd[i],
+                exact.nnd[i]
+            );
+        }
+    }
+
+    #[test]
+    fn discords_match_brute() {
+        let ts = generators::sine_with_noise(1_500, 0.05, 81).into_series("s");
+        let params = SearchParams::new(100, 4, 4).with_discords(3);
+        let sc = Scamp.run(&ts, &params).unwrap();
+        let bf = BruteForce.run(&ts, &params).unwrap();
+        for (a, b) in sc.discords.iter().zip(&bf.discords) {
+            assert!((a.nnd - b.nnd).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn pair_count_is_quadratic_and_data_independent() {
+        let s = 50;
+        let params = SearchParams::new(s, 5, 4);
+        let a = generators::ecg_like(800, 70, 1, 1).into_series("a");
+        let b = generators::random_walk(800, 1.0, 2).into_series("b");
+        let ra = Scamp.run(&a, &params).unwrap();
+        let rb = Scamp.run(&b, &params).unwrap();
+        assert_eq!(ra.distance_calls, rb.distance_calls);
+        let n = a.num_sequences(s) as u64;
+        // all pairs above the band: sum_{diag=s}^{n-1} (n - diag)
+        let expect: u64 = (s as u64..n).map(|d| n - d).sum();
+        assert_eq!(ra.distance_calls, expect);
+    }
+
+    #[test]
+    fn rejects_incompatible_protocols() {
+        let ts = generators::ecg_like(600, 70, 1, 82).into_series("e");
+        let raw = SearchParams::new(64, 4, 4).dadd_protocol();
+        assert!(Scamp.run(&ts, &raw).is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! Tiny criterion-style timing harness: N warmup runs, M measured runs,
+//! mean/std/min/percentiles, and a one-line report format used by every
+//! `cargo bench` target.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// Result of timing one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    /// `name  mean ± std  [min … max]  (n iters)` with adaptive units.
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12} ± {:<10} [{} … {}]  ({} iters)",
+            self.name,
+            fmt_secs(self.summary.mean),
+            fmt_secs(self.summary.std),
+            fmt_secs(self.summary.min),
+            fmt_secs(self.summary.max),
+            self.iters
+        )
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.summary.mean
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        return "n/a".to_string();
+    }
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `iters` measured runs.
+/// The closure's return value is black-boxed to keep the optimizer honest.
+pub fn bench_fn<T>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> T,
+) -> BenchResult {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: iters.max(1),
+        summary: Summary::of(&samples),
+    }
+}
+
+/// Minimal black_box (std::hint::black_box is stable — use it).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Time a single run of `f` (used when one run is already seconds long).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_positive_time() {
+        let r = bench_fn("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.summary.mean > 0.0);
+        assert!(r.summary.min <= r.summary.mean);
+        assert!(r.report_line().contains("spin"));
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_secs(2.5).ends_with('s'));
+        assert!(fmt_secs(2.5e-3).ends_with("ms"));
+        assert!(fmt_secs(2.5e-6).ends_with("µs"));
+        assert!(fmt_secs(2.5e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Micro-benchmark harness (the offline registry has no criterion, so the
+//! crate ships its own: warmup, timed iterations, summary statistics).
+
+pub mod harness;
+
+pub use harness::{bench_fn, BenchResult};

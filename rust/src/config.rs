@@ -1,0 +1,171 @@
+//! Search configuration types shared by every algorithm, the CLI, the
+//! service protocol, and the bench harness.
+
+use crate::util::json::Json;
+
+/// SAX discretization parameters (paper notation: s, P, alphabet).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SaxParams {
+    /// Sequence (discord) length s.
+    pub s: usize,
+    /// PAA segments P; must divide s.
+    pub p: usize,
+    /// Alphabet size (2..=20).
+    pub alphabet: usize,
+}
+
+impl SaxParams {
+    pub fn new(s: usize, p: usize, alphabet: usize) -> SaxParams {
+        let sp = SaxParams { s, p, alphabet };
+        sp.validate().expect("invalid SAX params");
+        sp
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.s == 0 {
+            return Err("s must be > 0".into());
+        }
+        if self.p == 0 || self.s % self.p != 0 {
+            return Err(format!("P={} must divide s={}", self.p, self.s));
+        }
+        if !(2..=20).contains(&self.alphabet) {
+            return Err(format!("alphabet={} out of 2..=20", self.alphabet));
+        }
+        Ok(())
+    }
+}
+
+/// Full search request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchParams {
+    pub sax: SaxParams,
+    /// How many discords to report (k).
+    pub k: usize,
+    /// Seed for the pseudo-random choices (shuffles, inner-loop order).
+    pub seed: u64,
+    /// Z-normalize sequences before distance (paper default: yes;
+    /// the DADD comparison of Table 7 turns it off).
+    pub znormalize: bool,
+    /// Allow overlapping (self-match) comparisons (Table 7 protocol only).
+    pub allow_self_match: bool,
+}
+
+impl SearchParams {
+    /// Standard paper-protocol search.
+    pub fn new(s: usize, p: usize, alphabet: usize) -> SearchParams {
+        SearchParams {
+            sax: SaxParams::new(s, p, alphabet),
+            k: 1,
+            seed: 0,
+            znormalize: true,
+            allow_self_match: false,
+        }
+    }
+
+    pub fn with_discords(mut self, k: usize) -> SearchParams {
+        self.k = k;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> SearchParams {
+        self.seed = seed;
+        self
+    }
+
+    /// Table 7 (DADD) protocol: raw Euclidean distance, overlaps allowed.
+    pub fn dadd_protocol(mut self) -> SearchParams {
+        self.znormalize = false;
+        self.allow_self_match = true;
+        self
+    }
+
+    /// Serialize for the service protocol / reports.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("s", self.sax.s)
+            .set("p", self.sax.p)
+            .set("alphabet", self.sax.alphabet)
+            .set("k", self.k)
+            .set("seed", self.seed)
+            .set("znormalize", self.znormalize)
+            .set("allow_self_match", self.allow_self_match)
+    }
+
+    /// Parse from the service protocol. Missing fields get defaults.
+    pub fn from_json(v: &Json) -> Result<SearchParams, String> {
+        let u = |key: &str, default: usize| -> Result<usize, String> {
+            match v.get(key) {
+                None => Ok(default),
+                Some(j) => j
+                    .as_u64()
+                    .map(|x| x as usize)
+                    .ok_or_else(|| format!("field `{key}` must be an integer")),
+            }
+        };
+        let s = u("s", 0)?;
+        if s == 0 {
+            return Err("field `s` is required".into());
+        }
+        let p = u("p", 4.min(s))?;
+        let alphabet = u("alphabet", 4)?;
+        let sax = SaxParams { s, p, alphabet };
+        sax.validate()?;
+        Ok(SearchParams {
+            sax,
+            k: u("k", 1)?,
+            seed: v.get("seed").and_then(|j| j.as_u64()).unwrap_or(0),
+            znormalize: v
+                .get("znormalize")
+                .and_then(|j| j.as_bool())
+                .unwrap_or(true),
+            allow_self_match: v
+                .get("allow_self_match")
+                .and_then(|j| j.as_bool())
+                .unwrap_or(false),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_catches_bad_params() {
+        assert!(SaxParams { s: 0, p: 1, alphabet: 4 }.validate().is_err());
+        assert!(SaxParams { s: 10, p: 3, alphabet: 4 }.validate().is_err());
+        assert!(SaxParams { s: 10, p: 5, alphabet: 1 }.validate().is_err());
+        assert!(SaxParams { s: 10, p: 5, alphabet: 4 }.validate().is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = SearchParams::new(120, 4, 4).with_discords(10).with_seed(7);
+        let j = p.to_json();
+        let back = SearchParams::from_json(&j).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn from_json_defaults() {
+        let j = Json::parse(r#"{"s": 128}"#).unwrap();
+        let p = SearchParams::from_json(&j).unwrap();
+        assert_eq!(p.sax.p, 4);
+        assert_eq!(p.sax.alphabet, 4);
+        assert_eq!(p.k, 1);
+        assert!(p.znormalize);
+    }
+
+    #[test]
+    fn from_json_requires_s() {
+        let j = Json::parse(r#"{"k": 3}"#).unwrap();
+        assert!(SearchParams::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn dadd_protocol_flags() {
+        let p = SearchParams::new(512, 4, 4).dadd_protocol();
+        assert!(!p.znormalize);
+        assert!(p.allow_self_match);
+    }
+}

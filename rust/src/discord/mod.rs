@@ -1,0 +1,214 @@
+//! Discord definitions: results, exclusion zones, and the nnd profile.
+//!
+//! A *discord* is the sequence with the highest nearest-neighbor distance
+//! (nnd) under the non-self-match condition |i − j| >= s; the k-th discord
+//! additionally must not overlap any of the previous k−1 (paper Sec. 2.2).
+
+pub mod significance;
+
+use crate::util::json::Json;
+
+/// One discovered discord.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Discord {
+    /// Start position of the sequence.
+    pub position: usize,
+    /// Its exact nearest-neighbor distance.
+    pub nnd: f64,
+    /// Position of its nearest neighbor.
+    pub neighbor: usize,
+}
+
+impl Discord {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("position", self.position)
+            .set("nnd", self.nnd)
+            .set("neighbor", self.neighbor)
+    }
+}
+
+/// An ordered set of discords (1st, 2nd, … k-th).
+pub type DiscordSet = Vec<Discord>;
+
+/// Tracks the exclusion zones created by already-found discords: a
+/// candidate for the k-th discord may not overlap any previous discord.
+#[derive(Debug, Clone, Default)]
+pub struct ExclusionZones {
+    /// (start, s) of each found discord.
+    zones: Vec<(usize, usize)>,
+}
+
+impl ExclusionZones {
+    pub fn new() -> ExclusionZones {
+        ExclusionZones { zones: Vec::new() }
+    }
+
+    pub fn add(&mut self, position: usize, s: usize) {
+        self.zones.push((position, s));
+    }
+
+    /// May sequence `i` (length `s`) still become a discord?
+    /// Overlap means |i − z| < s (sequences share at least one point).
+    #[inline]
+    pub fn allowed(&self, i: usize, s: usize) -> bool {
+        self.zones.iter().all(|&(z, zs)| {
+            let sep = if i >= z { i - z } else { z - i };
+            sep >= s.max(zs)
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.zones.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.zones.is_empty()
+    }
+}
+
+/// The evolving approximate nnd profile HST maintains: for each sequence,
+/// the best-so-far (smallest) distance seen and the neighbor achieving it.
+/// Values are *upper bounds* of the exact nnds by construction.
+#[derive(Debug, Clone)]
+pub struct NndProfile {
+    /// Approximate nnd per sequence (init: +inf-like sentinel).
+    pub nnd: Vec<f64>,
+    /// Neighbor achieving `nnd` (usize::MAX = none yet).
+    pub ngh: Vec<usize>,
+}
+
+/// Initialization sentinel ("99999999.9" in the paper's Listing 2).
+pub const NND_INIT: f64 = f64::INFINITY;
+
+/// "no neighbor yet" marker.
+pub const NO_NEIGHBOR: usize = usize::MAX;
+
+impl NndProfile {
+    pub fn new(n: usize) -> NndProfile {
+        NndProfile {
+            nnd: vec![NND_INIT; n],
+            ngh: vec![NO_NEIGHBOR; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nnd.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nnd.is_empty()
+    }
+
+    /// Record an observed distance d(i, j), updating both endpoints
+    /// (every distance call upper-bounds *two* nnds — Sec. 3.2).
+    #[inline]
+    pub fn observe(&mut self, i: usize, j: usize, d: f64) {
+        if d < self.nnd[i] {
+            self.nnd[i] = d;
+            self.ngh[i] = j;
+        }
+        if d < self.nnd[j] {
+            self.nnd[j] = d;
+            self.ngh[j] = i;
+        }
+    }
+
+    /// Record for `i` only (when d may be an abandoned upper bound for the
+    /// pair but is still a valid bound for i's minimization target — not
+    /// used for j whose bound quality is unknown).
+    #[inline]
+    pub fn observe_one(&mut self, i: usize, j: usize, d: f64) {
+        if d < self.nnd[i] {
+            self.nnd[i] = d;
+            self.ngh[i] = j;
+        }
+    }
+
+    /// Moving average over a centered window of s+1 entries (paper Eq. 6);
+    /// borders keep the raw values. Entries still at the init sentinel are
+    /// treated as missing and skipped (a raw +inf would poison the window).
+    pub fn smeared(&self, s: usize) -> Vec<f64> {
+        let n = self.nnd.len();
+        let half = s / 2;
+        let mut out = self.nnd.clone();
+        for (i, o) in out.iter_mut().enumerate() {
+            if i < half || i + half >= n {
+                continue; // border: keep raw value
+            }
+            let mut acc = 0.0;
+            let mut cnt = 0usize;
+            for j in (i - half)..=(i + half) {
+                let v = self.nnd[j];
+                if v.is_finite() {
+                    acc += v;
+                    cnt += 1;
+                }
+            }
+            if cnt > 0 {
+                *o = acc / cnt as f64;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exclusion_zone_overlap_rules() {
+        let mut ez = ExclusionZones::new();
+        assert!(ez.allowed(50, 10));
+        ez.add(100, 10);
+        assert!(!ez.allowed(100, 10));
+        assert!(!ez.allowed(95, 10), "overlaps by 5");
+        assert!(!ez.allowed(109, 10), "overlaps by 1");
+        assert!(ez.allowed(110, 10), "adjacent, no shared point");
+        assert!(ez.allowed(90, 10));
+        assert!(!ez.allowed(91, 10));
+    }
+
+    #[test]
+    fn observe_updates_both_endpoints() {
+        let mut p = NndProfile::new(10);
+        p.observe(2, 7, 1.5);
+        assert_eq!(p.nnd[2], 1.5);
+        assert_eq!(p.ngh[2], 7);
+        assert_eq!(p.nnd[7], 1.5);
+        assert_eq!(p.ngh[7], 2);
+        // worse distance does not overwrite
+        p.observe(2, 3, 9.0);
+        assert_eq!(p.nnd[2], 1.5);
+        assert_eq!(p.nnd[3], 9.0);
+    }
+
+    #[test]
+    fn observe_one_leaves_j_untouched() {
+        let mut p = NndProfile::new(5);
+        p.observe_one(1, 4, 2.0);
+        assert_eq!(p.nnd[1], 2.0);
+        assert_eq!(p.nnd[4], NND_INIT);
+    }
+
+    #[test]
+    fn smear_averages_window_and_keeps_borders() {
+        let mut p = NndProfile::new(9);
+        p.nnd = vec![1.0, 1.0, 1.0, 1.0, 9.0, 1.0, 1.0, 1.0, 1.0];
+        let sm = p.smeared(4); // window of 5
+        assert_eq!(sm[0], 1.0, "border untouched");
+        assert_eq!(sm[1], 1.0, "border untouched");
+        assert!((sm[4] - (9.0 + 4.0) / 5.0).abs() < 1e-12, "spike averaged");
+        assert!(sm[4] < 9.0);
+    }
+
+    #[test]
+    fn smear_skips_unset_entries() {
+        let mut p = NndProfile::new(7);
+        p.nnd = vec![1.0, 1.0, NND_INIT, 1.0, 1.0, 1.0, 1.0];
+        let sm = p.smeared(4);
+        assert!(sm[3].is_finite(), "window containing inf stays finite");
+        assert!((sm[3] - 1.0).abs() < 1e-12);
+    }
+}

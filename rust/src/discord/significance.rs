@@ -1,0 +1,137 @@
+//! Significant discords (paper Sec. 4.5, after Avogadro, Palonca &
+//! Dominoni 2020).
+//!
+//! Every time series has O(N/s) discords — they are just the maxima of
+//! the matrix profile — but only those whose nnd is an *outlier* with
+//! respect to the profile's bulk distribution mark real anomalies. The
+//! paper uses this to argue that computing hundreds of discords (where
+//! SCAMP would shine) is rarely useful: e.g. ECG 300 has only 5
+//! significant discords of length 300.
+//!
+//! The significance test is the classic Tukey fence over the finite values
+//! of the nnd profile: a discord is significant when
+//! `nnd > Q3 + k_fence · IQR` (k_fence = 3.0 — "far out" — by default).
+
+use crate::discord::{Discord, NndProfile};
+use crate::util::stats::percentile_sorted;
+
+/// Significance classifier built from an nnd profile.
+#[derive(Debug, Clone)]
+pub struct SignificanceTest {
+    /// Third quartile of the profile values.
+    pub q3: f64,
+    /// Interquartile range.
+    pub iqr: f64,
+    /// Fence multiplier (Tukey: 1.5 = "outside", 3.0 = "far out").
+    pub k_fence: f64,
+}
+
+impl SignificanceTest {
+    /// Fit the fences on every finite value of `profile`.
+    pub fn fit(profile: &NndProfile, k_fence: f64) -> SignificanceTest {
+        let mut vals: Vec<f64> = profile
+            .nnd
+            .iter()
+            .copied()
+            .filter(|v| v.is_finite())
+            .collect();
+        assert!(!vals.is_empty(), "profile has no finite values");
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q1 = percentile_sorted(&vals, 0.25);
+        let q3 = percentile_sorted(&vals, 0.75);
+        SignificanceTest {
+            q3,
+            iqr: (q3 - q1).max(0.0),
+            k_fence,
+        }
+    }
+
+    /// Default "far out" fence.
+    pub fn fit_default(profile: &NndProfile) -> SignificanceTest {
+        Self::fit(profile, 3.0)
+    }
+
+    /// The significance threshold.
+    pub fn threshold(&self) -> f64 {
+        self.q3 + self.k_fence * self.iqr
+    }
+
+    /// Is this discord a significant anomaly?
+    pub fn is_significant(&self, d: &Discord) -> bool {
+        d.nnd > self.threshold()
+    }
+
+    /// Partition a discord set into (significant, ordinary).
+    pub fn split<'a>(
+        &self,
+        discords: &'a [Discord],
+    ) -> (Vec<&'a Discord>, Vec<&'a Discord>) {
+        discords.iter().partition(|d| self.is_significant(d))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{scamp::Scamp, Algorithm};
+    use crate::config::SearchParams;
+    use crate::ts::series::IntoSeries;
+    use crate::ts::{generators, SeqStats};
+
+    #[test]
+    fn injected_anomaly_is_significant_background_is_not() {
+        // smooth sine + one strong bump: exactly one significant discord
+        let mut pts = generators::sine_with_noise(3_000, 0.02, 500);
+        let mut rng = crate::util::rng::Rng64::new(1);
+        generators::inject(&mut pts, 1_500, 96, generators::Anomaly::Bump, &mut rng);
+        let ts = pts.into_series("bump");
+        let s = 96;
+        let stats = SeqStats::compute(&ts, s);
+        let (profile, _) = Scamp::matrix_profile(&ts, &stats);
+        let test = SignificanceTest::fit_default(&profile);
+
+        let params = SearchParams::new(s, 4, 4).with_discords(8);
+        let rep = Scamp.run(&ts, &params).unwrap();
+        let (sig, ord) = test.split(&rep.discords);
+        assert!(
+            !sig.is_empty(),
+            "the injected bump must be significant (threshold {:.3})",
+            test.threshold()
+        );
+        assert!(
+            sig.len() <= 2,
+            "background repeats must not be significant: {} flagged",
+            sig.len()
+        );
+        assert!(!ord.is_empty());
+        // the top discord is the significant one
+        assert!(test.is_significant(&rep.discords[0]));
+    }
+
+    #[test]
+    fn pure_noise_has_few_significant_discords() {
+        let ts = generators::random_walk(2_000, 1.0, 501).into_series("rw");
+        let s = 64;
+        let stats = SeqStats::compute(&ts, s);
+        let (profile, _) = Scamp::matrix_profile(&ts, &stats);
+        let test = SignificanceTest::fit_default(&profile);
+        let params = SearchParams::new(s, 4, 4).with_discords(10);
+        let rep = Scamp.run(&ts, &params).unwrap();
+        let (sig, _) = test.split(&rep.discords);
+        assert!(
+            sig.len() <= 3,
+            "random walk should have mostly ordinary discords, {} flagged",
+            sig.len()
+        );
+    }
+
+    #[test]
+    fn threshold_monotone_in_fence() {
+        let ts = generators::ecg_like(1_500, 100, 1, 502).into_series("e");
+        let stats = SeqStats::compute(&ts, 80);
+        let (profile, _) = Scamp::matrix_profile(&ts, &stats);
+        let loose = SignificanceTest::fit(&profile, 1.5);
+        let strict = SignificanceTest::fit(&profile, 3.0);
+        assert!(strict.threshold() >= loose.threshold());
+    }
+}

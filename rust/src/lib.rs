@@ -1,0 +1,57 @@
+//! # hstime — HOT SAX Time (HST) discord search framework
+//!
+//! A production-grade reproduction of *"A fast algorithm for complex discord
+//! searches in time series: HOT SAX Time"* (Avogadro & Dominoni, 2021).
+//!
+//! The crate is the **Layer-3 Rust coordinator** of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the discord-search engines (HST, HOT SAX, brute
+//!   force, DADD/DRAG, RRA, SCAMP/STOMP), the SAX substrate, dataset
+//!   generators, the batch-search service coordinator, metrics (cost per
+//!   sequence, D-/T-speedups), and the benchmark harness that regenerates
+//!   every table and figure of the paper.
+//! * **L2 (python/compile/model.py, build-time only)** — JAX compute graphs
+//!   (batched z-normalized distance, matrix-profile tiles) AOT-lowered to
+//!   HLO text artifacts.
+//! * **L1 (python/compile/kernels/, build-time only)** — Pallas kernels for
+//!   the distance hot-spot, lowered (interpret=True) into the same HLO.
+//!
+//! The [`runtime`] module loads the AOT artifacts via the PJRT C API
+//! (`xla` crate) so that Python is never on the search path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use hstime::prelude::*;
+//!
+//! let ts = generators::sine_with_noise(20_000, 0.1, 42).into_series("demo");
+//! let params = SearchParams::new(120, 4, 4).with_discords(1);
+//! let report = algo::hst::HstSearch::default().run(&ts, &params).unwrap();
+//! println!("discord @ {} nnd={:.4} calls={}",
+//!          report.discords[0].position, report.discords[0].nnd, report.distance_calls);
+//! ```
+pub mod algo;
+pub mod bench;
+pub mod config;
+pub mod discord;
+pub mod dist;
+pub mod metrics;
+pub mod runtime;
+pub mod sax;
+pub mod service;
+pub mod tables;
+pub mod ts;
+pub mod util;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::algo::{self, Algorithm, SearchReport};
+    pub use crate::config::{SearchParams, SaxParams};
+    pub use crate::discord::{Discord, DiscordSet, NndProfile};
+    pub use crate::dist::{CountingDistance, DistanceKind, ZnormStats};
+    pub use crate::metrics::{cps, d_speedup, t_speedup};
+    pub use crate::sax::{SaxIndex, SaxWord};
+    pub use crate::ts::series::IntoSeries;
+    pub use crate::ts::{generators, TimeSeries};
+    pub use crate::util::rng::Rng64;
+}

@@ -1,0 +1,346 @@
+//! `hst` — the command-line launcher for the hstime framework.
+//!
+//! Subcommands:
+//!   discover <dataset>   run a discord search and print the result
+//!   table <id|all>       regenerate a paper table/figure (see DESIGN.md)
+//!   generate <dataset>   write a synthetic dataset to a text file
+//!   serve                start the batch-search TCP service
+//!   submit               submit a job to a running service and wait
+//!   info                 registry, artifact, and build information
+//!
+//! Common flags: --scale-div N (dataset length divisor, default 8),
+//! --full (paper scale), --runs N, --seed N, --json, --algo NAME.
+
+use anyhow::{bail, Context, Result};
+
+use hstime::algo::{self, Algorithm as _};
+use hstime::config::SearchParams;
+use hstime::service;
+use hstime::tables::{self, BenchConfig};
+use hstime::ts::{datasets, io as ts_io};
+use hstime::util::cli::Args;
+use hstime::util::json::Json;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("discover") => discover(args),
+        Some("table") => table(args),
+        Some("report") => report(args),
+        Some("plot") => plot(args),
+        Some("merlin") => merlin(args),
+        Some("monitor") => monitor(args),
+        Some("generate") => generate(args),
+        Some("serve") => serve(args),
+        Some("submit") => submit(args),
+        Some("info") => info(args),
+        Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "usage: hst <discover|table|report|plot|merlin|monitor|generate|serve|submit|info> [flags]
+  hst discover 'ECG 108' --algo hst --k 3 --scale-div 8
+  hst discover synthetic --noise 0.001 --n 20000 --s 120
+  hst table all --scale-div 8 --runs 3
+  hst table 4 --full
+  hst report --out report.md --scale-div 8
+  hst plot 'Shuttle TEK 14' --k 2
+  hst merlin 'ECG 108' --min-len 80 --max-len 120 --step 8
+  hst monitor 'ECG 15' --window 4000 --batch 1000
+  hst generate 'Shuttle TEK 14' --out tek14.txt
+  hst serve --addr 127.0.0.1:7878 --workers 4
+  hst submit --addr 127.0.0.1:7878 --dataset 'ECG 15' --algo hst --k 2
+  hst info";
+
+fn bench_config(args: &Args) -> BenchConfig {
+    let mut cfg = if args.has("full") {
+        BenchConfig::full()
+    } else {
+        BenchConfig::default()
+    };
+    cfg.scale_div = args.get_usize("scale-div", cfg.scale_div);
+    cfg.runs = args.get_usize("runs", cfg.runs);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg
+}
+
+fn discover(args: &Args) -> Result<()> {
+    let name = args
+        .positionals
+        .first()
+        .context("discover needs a dataset name (see `hst info`)")?;
+    let algo_name = args.get_or("algo", "hst");
+    let engine = algo::by_name(algo_name)
+        .with_context(|| format!("unknown algorithm {algo_name:?}"))?;
+
+    let (ts, default_params) = if name == "synthetic" {
+        let n = args.get_usize("n", 20_000);
+        let e = args.get_f64("noise", 0.1);
+        let seed = args.get_u64("gen-seed", 0);
+        let pts = hstime::ts::generators::sine_with_noise(n, e, seed);
+        (
+            hstime::ts::TimeSeries::new(format!("synthetic(E={e})"), pts),
+            SearchParams::new(120, 4, 4),
+        )
+    } else {
+        let d = datasets::by_name(name)
+            .with_context(|| format!("unknown dataset {name:?}"))?;
+        let ts = d.generate_scaled(args.get_usize("scale-div", 8));
+        (ts, SearchParams::new(d.s, d.p, d.alphabet))
+    };
+
+    let s = args.get_usize("s", default_params.sax.s);
+    let p = args.get_usize("p", if s % default_params.sax.p == 0 { default_params.sax.p } else { 4 });
+    let alpha = args.get_usize("alphabet", default_params.sax.alphabet);
+    let params = SearchParams::new(s, p, alpha)
+        .with_discords(args.get_usize("k", 1))
+        .with_seed(args.get_u64("seed", 0));
+
+    let report = engine.run(&ts, &params)?;
+    if args.has("json") {
+        println!("{}", report.to_json().set("dataset", ts.name.as_str()));
+    } else {
+        println!(
+            "dataset {} ({} points, N={} sequences, s={})",
+            ts.name,
+            ts.n_total(),
+            report.n_sequences,
+            s
+        );
+        println!(
+            "algo {}  distance calls {}  cps {:.1}  elapsed {:.3}s",
+            report.algo,
+            report.distance_calls,
+            report.cps(),
+            report.elapsed.as_secs_f64()
+        );
+        for (rank, d) in report.discords.iter().enumerate() {
+            println!(
+                "  #{:<2} discord @ {:<8} nnd {:<10.4} neighbor @ {}",
+                rank + 1,
+                d.position,
+                d.nnd,
+                d.neighbor
+            );
+        }
+    }
+    Ok(())
+}
+
+fn table(args: &Args) -> Result<()> {
+    let id = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let cfg = bench_config(args);
+    let ids: Vec<&str> = if id == "all" {
+        tables::ALL_IDS.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        let gen = tables::by_id(id).with_context(|| format!("unknown table {id:?}"))?;
+        let t = gen(&cfg);
+        if args.has("json") {
+            println!("{}", t.to_json());
+        } else {
+            println!("{}", t.render());
+        }
+    }
+    Ok(())
+}
+
+fn report(args: &Args) -> Result<()> {
+    let cfg = bench_config(args);
+    let ids: Vec<&str> = match args.positionals.first() {
+        Some(one) => vec![one.as_str()],
+        None => hstime::tables::ALL_IDS.to_vec(),
+    };
+    let text = hstime::tables::report::generate(&cfg, &ids);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!("wrote report to {path}");
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+fn plot(args: &Args) -> Result<()> {
+    let name = args.positionals.first().context("plot needs a dataset")?;
+    let d = datasets::by_name(name)
+        .with_context(|| format!("unknown dataset {name:?}"))?;
+    let ts = d.generate_scaled(args.get_usize("scale-div", 8));
+    let width = args.get_usize("width", 100);
+    println!("{}", hstime::ts::plot::plot_series(&ts, width, 10));
+    // discords + profile
+    let k = args.get_usize("k", 3);
+    let params = SearchParams::new(d.s, d.p, d.alphabet).with_discords(k);
+    let rep = algo::hst::HstSearch::default().run(&ts, &params)?;
+    let stats = hstime::ts::SeqStats::compute(&ts, d.s);
+    let (profile, _) = algo::scamp::Scamp::matrix_profile(&ts, &stats);
+    println!(
+        "{}",
+        hstime::ts::plot::plot_profile_with_discords(&profile.nnd, &rep.discords, width, 8)
+    );
+    for (rank, disc) in rep.discords.iter().enumerate() {
+        println!("#{} discord @ {} nnd {:.4}", rank + 1, disc.position, disc.nnd);
+    }
+    Ok(())
+}
+
+fn merlin(args: &Args) -> Result<()> {
+    let name = args.positionals.first().context("merlin needs a dataset")?;
+    let d = datasets::by_name(name)
+        .with_context(|| format!("unknown dataset {name:?}"))?;
+    let ts = d.generate_scaled(args.get_usize("scale-div", 8));
+    let scan = algo::merlin::Merlin::new(
+        args.get_usize("min-len", d.s / 2),
+        args.get_usize("max-len", d.s),
+    )
+    .with_step(args.get_usize("step", (d.s / 8).max(1)));
+    let (found, calls) = scan.run(&ts)?;
+    println!(
+        "MERLIN over L in [{}, {}] step {} — {} lengths, {} distance calls",
+        scan.min_len,
+        scan.max_len,
+        scan.step,
+        found.len(),
+        calls
+    );
+    for ld in &found {
+        println!(
+            "  L={:<5} discord @ {:<8} nnd {:<10.4} (r={:.4}, {} attempts)",
+            ld.s, ld.discord.position, ld.discord.nnd, ld.r_used, ld.attempts
+        );
+    }
+    Ok(())
+}
+
+fn monitor(args: &Args) -> Result<()> {
+    let name = args.positionals.first().context("monitor needs a dataset")?;
+    let d = datasets::by_name(name)
+        .with_context(|| format!("unknown dataset {name:?}"))?;
+    let ts = d.generate_scaled(args.get_usize("scale-div", 8));
+    let window = args.get_usize("window", (8 * d.s).max(2_000));
+    let batch = args.get_usize("batch", window / 4);
+    let params = SearchParams::new(d.s, d.p, d.alphabet)
+        .with_discords(args.get_usize("k", 1));
+    let mut mon = hstime::service::online::OnlineMonitor::new(params, window, batch);
+    println!(
+        "streaming {} ({} pts) through a {window}-pt window, batch {batch}",
+        ts.name,
+        ts.n_total()
+    );
+    let mut total_alerts = 0;
+    for chunk in ts.points.chunks(batch) {
+        for alert in mon.push(chunk)? {
+            total_alerts += 1;
+            println!(
+                "  t={:<8} nnd {:<9.4} {}",
+                alert.global_position,
+                alert.nnd,
+                if alert.significant { "SIGNIFICANT" } else { "" }
+            );
+        }
+    }
+    println!("{total_alerts} alerts emitted");
+    Ok(())
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let name = args
+        .positionals
+        .first()
+        .context("generate needs a dataset name")?;
+    let d = datasets::by_name(name)
+        .with_context(|| format!("unknown dataset {name:?}"))?;
+    let ts = d.generate_scaled(args.get_usize("scale-div", 1));
+    let out = args.get("out").context("--out <file> required")?;
+    ts_io::save_text(&ts, std::path::Path::new(out))?;
+    println!("wrote {} points to {}", ts.n_total(), out);
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
+    let workers = args.get_usize("workers", 4);
+    let capacity = args.get_usize("capacity", 64);
+    println!("hstime service: workers={workers} capacity={capacity}");
+    service::serve(addr.as_str(), workers, capacity, |bound| {
+        println!("listening on {bound}");
+    })
+}
+
+fn submit(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
+    let dataset = args.get_or("dataset", "ECG 15").to_string();
+    let s = args.get_usize("s", datasets::by_name(&dataset).map(|d| d.s).unwrap_or(128));
+    let req = Json::obj()
+        .set("cmd", "submit")
+        .set("dataset", dataset.as_str())
+        .set("algo", args.get_or("algo", "hst"))
+        .set("scale_div", args.get_usize("scale-div", 8))
+        .set(
+            "params",
+            Json::obj()
+                .set("s", s)
+                .set("p", args.get_usize("p", 4))
+                .set("alphabet", args.get_usize("alphabet", 4))
+                .set("k", args.get_usize("k", 1))
+                .set("seed", args.get_u64("seed", 0)),
+        );
+    let mut client = service::Client::connect(addr.as_str())?;
+    let job = client.submit(req)?;
+    println!("job {job} submitted; waiting…");
+    let reply = client.wait(job)?;
+    println!("{reply}");
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    println!("hstime {} — HOT SAX Time reproduction", env!("CARGO_PKG_VERSION"));
+    println!("\ndatasets (paper Tables 1/6):");
+    for d in datasets::registry() {
+        println!(
+            "  {:<16} len {:>7}  s={:<5} P={:<3} alphabet={} family {:?}",
+            d.name, d.paper_len, d.s, d.p, d.alphabet, d.family
+        );
+    }
+    println!("\nalgorithms: brute, hotsax, hst, dadd, rra, scamp");
+    let dir = hstime::runtime::default_artifact_dir();
+    match hstime::runtime::Manifest::load(&dir) {
+        Ok(m) => println!(
+            "\nartifacts: {} entries in {} (s_pad={}, query_b={}, tile={})",
+            m.entries.len(),
+            dir.display(),
+            m.s_pad,
+            m.query_b,
+            m.tile
+        ),
+        Err(e) => println!(
+            "\nartifacts: not available ({e:#}) — run `make artifacts`"
+        ),
+    }
+    if args.has("verbose") {
+        println!("\ntables: {}", tables::ALL_IDS.join(", "));
+    }
+    Ok(())
+}

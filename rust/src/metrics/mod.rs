@@ -1,0 +1,69 @@
+//! Evaluation metrics: cost per sequence (the paper's new complexity
+//! indicator, Sec. 4.2) and the D-/T-speedups used throughout Sec. 4.
+
+/// Cost per sequence: distance calls / (N · k) — the paper's indicator for
+/// comparing searches across series lengths. ~2 means "perfect magic"
+/// (one call discards each non-discord), ~N means brute force.
+pub fn cps(distance_calls: u64, n_sequences: usize, k_discords: usize) -> f64 {
+    assert!(n_sequences > 0 && k_discords > 0);
+    distance_calls as f64 / (n_sequences as f64 * k_discords as f64)
+}
+
+/// D-speedup: ratio of distance calls (baseline / candidate). > 1 means
+/// the candidate is faster.
+pub fn d_speedup(baseline_calls: u64, candidate_calls: u64) -> f64 {
+    assert!(candidate_calls > 0);
+    baseline_calls as f64 / candidate_calls as f64
+}
+
+/// T-speedup: ratio of wall-clock runtimes (baseline / candidate).
+pub fn t_speedup(baseline_secs: f64, candidate_secs: f64) -> f64 {
+    assert!(candidate_secs > 0.0);
+    baseline_secs / candidate_secs
+}
+
+/// The paper's rule of thumb (Sec. 4.7): extrapolate total distance calls
+/// for a long series from a short-extract cps measurement.
+/// calls ≈ cps · N · k.
+pub fn extrapolate_calls(cps_measured: f64, n_sequences: usize, k_discords: usize) -> f64 {
+    cps_measured * n_sequences as f64 * k_discords as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cps_definition() {
+        // Table 3: ECG 0606 — 20 621 calls, N = 2299-120+1 = 2180, k=1 → ~9
+        let v = cps(20_621, 2_180, 1);
+        assert!((v - 9.459).abs() < 0.01);
+    }
+
+    #[test]
+    fn cps_perfect_magic_is_about_two() {
+        let n = 10_000;
+        let v = cps(2 * (n as u64 - 1), n, 1);
+        assert!((v - 2.0).abs() < 0.001);
+    }
+
+    #[test]
+    fn speedups() {
+        assert!((d_speedup(819_802, 260_615) - 3.1457).abs() < 0.001);
+        assert!((t_speedup(14.40, 0.94) - 15.319).abs() < 0.01);
+    }
+
+    #[test]
+    fn extrapolation_inverts_cps() {
+        let calls = 123_456u64;
+        let n = 5_000;
+        let c = cps(calls, n, 2);
+        assert!((extrapolate_calls(c, n, 2) - calls as f64).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_candidate_calls_panics() {
+        d_speedup(10, 0);
+    }
+}

@@ -1,0 +1,361 @@
+//! PJRT runtime: load + execute the AOT artifacts from `make artifacts`.
+//!
+//! Python is build-time only; this module is the entire runtime bridge:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute` (the pattern of /opt/xla-example/load_hlo). The interchange
+//! format is HLO **text** — xla_extension 0.5.1 rejects jax≥0.5's
+//! serialized protos (64-bit instruction ids), while the text parser
+//! reassigns ids.
+//!
+//! Artifacts (see python/compile/aot.py):
+//! * `pair_dist`  — f32[PAIR_B, S_PAD] ×2 → f32[PAIR_B] (warm-up chains)
+//! * `query_row`  — f32[S_PAD], f32[QUERY_B, S_PAD] → (dists, min, argmin)
+//! * `mp_tile`    — two f32[TILE, S_PAD] blocks + (row0, col0, excl) →
+//!                  masked (rowmin, rowarg, colmin, colarg)
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::discord::NndProfile;
+use crate::ts::{SeqStats, TimeSeries};
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub s_pad: usize,
+    pub pair_b: usize,
+    pub query_b: usize,
+    pub tile: usize,
+    /// (name, file) pairs.
+    pub entries: Vec<(String, String)>,
+}
+
+impl Manifest {
+    /// Parse the manifest file written by `python -m compile.aot`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut m = Manifest {
+            s_pad: 0,
+            pair_b: 0,
+            query_b: 0,
+            tile: 0,
+            entries: Vec::new(),
+        };
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            match fields.first() {
+                Some(&"config") => {
+                    for kv in &fields[1..] {
+                        let Some((k, v)) = kv.split_once('=') else {
+                            bail!("bad config field {kv:?}");
+                        };
+                        let v: usize = v.parse().context("config value")?;
+                        match k {
+                            "s_pad" => m.s_pad = v,
+                            "pair_b" => m.pair_b = v,
+                            "query_b" => m.query_b = v,
+                            "tile" => m.tile = v,
+                            _ => {} // forward compatible
+                        }
+                    }
+                }
+                Some(&"artifact") => {
+                    if fields.len() < 3 {
+                        bail!("bad artifact line {line:?}");
+                    }
+                    m.entries.push((fields[1].to_string(), fields[2].to_string()));
+                }
+                _ => bail!("unrecognized manifest line {line:?}"),
+            }
+        }
+        if m.s_pad == 0 || m.entries.is_empty() {
+            bail!("manifest incomplete: {m:?}");
+        }
+        Ok(m)
+    }
+}
+
+/// Compiled executables for all shipped artifacts.
+pub struct ArtifactSet {
+    manifest: Manifest,
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pair_dist: xla::PjRtLoadedExecutable,
+    query_row: xla::PjRtLoadedExecutable,
+    mp_tile: xla::PjRtLoadedExecutable,
+}
+
+/// Default artifact directory (relative to the crate root / cwd).
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("HSTIME_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // try cwd, then the cargo manifest dir (tests run from target dirs)
+    let cwd = PathBuf::from("artifacts");
+    if cwd.join("manifest.txt").exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+impl ArtifactSet {
+    /// Compile all artifacts on the CPU PJRT client. Fails with a clear
+    /// message when `make artifacts` has not been run.
+    pub fn load(dir: &Path) -> Result<ArtifactSet> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes: Vec<(String, xla::PjRtLoadedExecutable)> = Vec::new();
+        for (name, file) in &manifest.entries {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            exes.push((name.clone(), exe));
+        }
+        let mut take = |want: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let pos = exes
+                .iter()
+                .position(|(n, _)| n == want)
+                .with_context(|| format!("manifest missing artifact {want}"))?;
+            Ok(exes.remove(pos).1)
+        };
+        let pair_dist = take("pair_dist")?;
+        let query_row = take("query_row")?;
+        let mp_tile = take("mp_tile")?;
+        Ok(ArtifactSet {
+            manifest,
+            client,
+            pair_dist,
+            query_row,
+            mp_tile,
+        })
+    }
+
+    /// Load from [`default_artifact_dir`].
+    pub fn load_default() -> Result<ArtifactSet> {
+        Self::load(&default_artifact_dir())
+    }
+
+    pub fn s_pad(&self) -> usize {
+        self.manifest.s_pad
+    }
+
+    pub fn pair_b(&self) -> usize {
+        self.manifest.pair_b
+    }
+
+    pub fn query_b(&self) -> usize {
+        self.manifest.query_b
+    }
+
+    pub fn tile(&self) -> usize {
+        self.manifest.tile
+    }
+
+    /// Chain distances d(ia[t], ib[t]) via the `pair_dist` artifact.
+    pub fn pair_dist_chain(
+        &self,
+        prep: &PreparedSeqs,
+        ia: &[usize],
+        ib: &[usize],
+    ) -> Result<Vec<f64>> {
+        assert_eq!(ia.len(), ib.len());
+        let b = self.pair_b();
+        let s_pad = self.s_pad();
+        let mut out = Vec::with_capacity(ia.len());
+        let mut x = vec![0.0f32; b * s_pad];
+        let mut y = vec![0.0f32; b * s_pad];
+        for chunk_start in (0..ia.len()).step_by(b) {
+            let chunk = (ia.len() - chunk_start).min(b);
+            x[..].fill(0.0);
+            y[..].fill(0.0);
+            for t in 0..chunk {
+                x[t * s_pad..(t + 1) * s_pad]
+                    .copy_from_slice(prep.row(ia[chunk_start + t]));
+                y[t * s_pad..(t + 1) * s_pad]
+                    .copy_from_slice(prep.row(ib[chunk_start + t]));
+            }
+            let lx = xla::Literal::vec1(&x).reshape(&[b as i64, s_pad as i64])?;
+            let ly = xla::Literal::vec1(&y).reshape(&[b as i64, s_pad as i64])?;
+            let res = self.pair_dist.execute::<xla::Literal>(&[lx, ly])?[0][0]
+                .to_literal_sync()?;
+            let d = res.to_tuple1()?.to_vec::<f32>()?;
+            out.extend(d[..chunk].iter().map(|&v| v as f64));
+        }
+        Ok(out)
+    }
+
+    /// One `query_row` chunk: distances from `query` to `cands`
+    /// (|cands| <= query_b). Returns (dists, min over the real entries).
+    pub fn query_row_chunk(
+        &self,
+        prep: &PreparedSeqs,
+        query: usize,
+        cands: &[usize],
+    ) -> Result<(Vec<f64>, f64)> {
+        let b = self.query_b();
+        let s_pad = self.s_pad();
+        assert!(cands.len() <= b, "chunk larger than QUERY_B");
+        let mut c = vec![0.0f32; b * s_pad];
+        for (t, &j) in cands.iter().enumerate() {
+            c[t * s_pad..(t + 1) * s_pad].copy_from_slice(prep.row(j));
+        }
+        // padding rows are zero vectors; their distance to the query is
+        // |q| which is harmless because we ignore entries >= cands.len()
+        let lq = xla::Literal::vec1(prep.row(query));
+        let lc = xla::Literal::vec1(&c).reshape(&[b as i64, s_pad as i64])?;
+        let res = self.query_row.execute::<xla::Literal>(&[lq, lc])?[0][0]
+            .to_literal_sync()?;
+        let parts = res.to_tuple()?;
+        let d32 = parts[0].to_vec::<f32>()?;
+        let dists: Vec<f64> = d32[..cands.len()].iter().map(|&v| v as f64).collect();
+        let dmin = dists.iter().cloned().fold(f64::INFINITY, f64::min);
+        Ok((dists, dmin))
+    }
+
+    /// One masked matrix-profile tile: rows `row0..row0+TILE` vs columns
+    /// `col0..col0+TILE`, exclusion half-width `excl`. Merges the returned
+    /// row/col minima into `profile` (entries beyond `prep.n` skipped).
+    pub fn mp_tile_update(
+        &self,
+        prep: &PreparedSeqs,
+        row0: usize,
+        col0: usize,
+        excl: usize,
+        profile: &mut NndProfile,
+    ) -> Result<()> {
+        let t = self.tile();
+        let s_pad = self.s_pad();
+        let fill = |start: usize| -> Vec<f32> {
+            let mut m = vec![0.0f32; t * s_pad];
+            for r in 0..t {
+                if start + r < prep.n {
+                    m[r * s_pad..(r + 1) * s_pad].copy_from_slice(prep.row(start + r));
+                }
+            }
+            m
+        };
+        let a = fill(row0);
+        let b = fill(col0);
+        let la = xla::Literal::vec1(&a).reshape(&[t as i64, s_pad as i64])?;
+        let lb = xla::Literal::vec1(&b).reshape(&[t as i64, s_pad as i64])?;
+        let res = self
+            .mp_tile
+            .execute::<xla::Literal>(&[
+                la,
+                lb,
+                xla::Literal::scalar(row0 as i32),
+                xla::Literal::scalar(col0 as i32),
+                xla::Literal::scalar(excl as i32),
+            ])?[0][0]
+            .to_literal_sync()?;
+        let parts = res.to_tuple()?;
+        let rowmin = parts[0].to_vec::<f32>()?;
+        let rowarg = parts[1].to_vec::<i32>()?;
+        let colmin = parts[2].to_vec::<f32>()?;
+        let colarg = parts[3].to_vec::<i32>()?;
+        const BIG: f32 = 1.0e38;
+        for r in 0..t {
+            let gi = row0 + r;
+            if gi >= prep.n || rowmin[r] >= BIG {
+                continue;
+            }
+            let j = rowarg[r] as usize;
+            if j < prep.n {
+                profile.observe_one(gi, j, rowmin[r] as f64);
+            }
+        }
+        for cidx in 0..t {
+            let gj = col0 + cidx;
+            if gj >= prep.n || colmin[cidx] >= BIG {
+                continue;
+            }
+            let i = colarg[cidx] as usize;
+            if i < prep.n {
+                profile.observe_one(gj, i, colmin[cidx] as f64);
+            }
+        }
+        Ok(())
+    }
+
+    /// Full matrix profile via tiles (the XLA SCAMP path). Covers every
+    /// (row-block, col-block) pair on and above the diagonal; the masked
+    /// kernel updates both row and column profiles, so each unordered pair
+    /// is evaluated once.
+    pub fn matrix_profile(&self, prep: &PreparedSeqs, s: usize) -> Result<NndProfile> {
+        let t = self.tile();
+        let n = prep.n;
+        let mut profile = NndProfile::new(n);
+        let mut row0 = 0;
+        while row0 < n {
+            let mut col0 = row0;
+            while col0 < n {
+                self.mp_tile_update(prep, row0, col0, s, &mut profile)?;
+                col0 += t;
+            }
+            row0 += t;
+        }
+        Ok(profile)
+    }
+}
+
+/// All sequences of one series, z-normalized (or raw) and zero-padded to
+/// `s_pad`, as f32 rows ready for literal upload.
+pub struct PreparedSeqs {
+    /// Number of sequences.
+    pub n: usize,
+    s_pad: usize,
+    data: Vec<f32>,
+}
+
+impl PreparedSeqs {
+    /// Prepare every sequence of `ts`. Fails when `s > s_pad` (caller
+    /// should fall back to the scalar engine).
+    pub fn build(
+        arts: &ArtifactSet,
+        ts: &TimeSeries,
+        stats: &SeqStats,
+        znormalize: bool,
+    ) -> Result<PreparedSeqs> {
+        let s = stats.s;
+        let s_pad = arts.s_pad();
+        if s > s_pad {
+            bail!("sequence length {s} exceeds artifact s_pad {s_pad}");
+        }
+        let n = stats.len();
+        let mut data = vec![0.0f32; n * s_pad];
+        let mut buf = vec![0.0f64; s];
+        for k in 0..n {
+            let row = &mut data[k * s_pad..k * s_pad + s];
+            if znormalize {
+                stats.znorm_into(ts, k, &mut buf);
+                for (o, &v) in row.iter_mut().zip(&buf) {
+                    *o = v as f32;
+                }
+            } else {
+                for (o, &v) in row.iter_mut().zip(ts.seq(k, s)) {
+                    *o = v as f32;
+                }
+            }
+        }
+        Ok(PreparedSeqs { n, s_pad, data })
+    }
+
+    /// Row `k` (zero-padded).
+    #[inline]
+    pub fn row(&self, k: usize) -> &[f32] {
+        &self.data[k * self.s_pad..(k + 1) * self.s_pad]
+    }
+}

@@ -1,0 +1,79 @@
+//! Gaussian breakpoints for SAX quantization.
+//!
+//! For an alphabet of size `a`, the breakpoints are the a−1 quantiles of the
+//! standard normal that split it into `a` equiprobable regions — computed
+//! here with the inverse normal CDF instead of a hard-coded table, so any
+//! alphabet in 2..=20 works (the paper uses 3 and 4).
+
+use crate::util::stats::inv_norm_cdf;
+
+/// Breakpoints β_1 < … < β_{a−1} for alphabet size `a`.
+pub fn breakpoints(alphabet: usize) -> Vec<f64> {
+    assert!(
+        (2..=20).contains(&alphabet),
+        "alphabet must be in 2..=20, got {alphabet}"
+    );
+    (1..alphabet)
+        .map(|i| inv_norm_cdf(i as f64 / alphabet as f64))
+        .collect()
+}
+
+/// Quantize one PAA value into a symbol 0..alphabet-1.
+#[inline]
+pub fn symbolize(value: f64, beta: &[f64]) -> u8 {
+    // binary search: first breakpoint > value
+    match beta.binary_search_by(|b| b.partial_cmp(&value).unwrap()) {
+        Ok(i) => (i + 1) as u8, // value == breakpoint goes to upper cell
+        Err(i) => i as u8,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alphabet3_matches_sax_table() {
+        let b = breakpoints(3);
+        assert_eq!(b.len(), 2);
+        assert!((b[0] + 0.4307).abs() < 1e-3, "{}", b[0]);
+        assert!((b[1] - 0.4307).abs() < 1e-3, "{}", b[1]);
+    }
+
+    #[test]
+    fn alphabet4_matches_sax_table() {
+        let b = breakpoints(4);
+        // classic table: -0.67, 0, 0.67
+        assert!((b[0] + 0.6745).abs() < 1e-3);
+        assert!(b[1].abs() < 1e-9);
+        assert!((b[2] - 0.6745).abs() < 1e-3);
+    }
+
+    #[test]
+    fn breakpoints_monotone_for_all_alphabets() {
+        for a in 2..=20 {
+            let b = breakpoints(a);
+            assert_eq!(b.len(), a - 1);
+            for w in b.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn symbolize_cells() {
+        let b = breakpoints(4);
+        assert_eq!(symbolize(-2.0, &b), 0);
+        assert_eq!(symbolize(-0.3, &b), 1);
+        assert_eq!(symbolize(0.3, &b), 2);
+        assert_eq!(symbolize(2.0, &b), 3);
+        // boundary goes up
+        assert_eq!(symbolize(b[1], &b), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "alphabet")]
+    fn rejects_tiny_alphabet() {
+        breakpoints(1);
+    }
+}

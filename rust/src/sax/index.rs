@@ -1,0 +1,167 @@
+//! The SAX index: word per sequence + clusters grouped by word.
+//!
+//! This is the `SAX()` step of both HOT SAX and HST (Listing 2, line 3):
+//! every sequence start is mapped to its SAX word; sequences sharing a word
+//! form a cluster. Clusters are exposed sorted by size (ascending) because
+//! both algorithms scan "from the smallest to the biggest" cluster.
+
+use std::collections::HashMap;
+
+use crate::config::SaxParams;
+use crate::ts::{SeqStats, TimeSeries};
+
+use super::breakpoints::{breakpoints, symbolize};
+use super::paa::paa_into;
+use super::word::SaxWord;
+
+/// SAX index over all sequences of one series for fixed (s, P, alphabet).
+#[derive(Debug, Clone)]
+pub struct SaxIndex {
+    /// Word of each sequence start (len = N).
+    pub words: Vec<SaxWord>,
+    /// Cluster id of each sequence start (len = N); ids index `clusters`.
+    pub cluster_of: Vec<usize>,
+    /// Members of each cluster, in time order.
+    pub clusters: Vec<Vec<usize>>,
+    /// Cluster ids sorted by ascending size (ties by id for determinism).
+    pub by_size: Vec<usize>,
+}
+
+impl SaxIndex {
+    /// Build the index. `stats` must have been computed with `params.s`.
+    pub fn build(ts: &TimeSeries, stats: &SeqStats, params: &SaxParams) -> SaxIndex {
+        assert_eq!(stats.s, params.s, "stats were computed for a different s");
+        let n = stats.len();
+        let beta = breakpoints(params.alphabet);
+        let mut znorm_buf = vec![0.0; params.s];
+        let mut paa_buf = vec![0.0; params.p];
+        let mut sym_buf = vec![0u8; params.p];
+
+        let mut words = Vec::with_capacity(n);
+        let mut map: HashMap<SaxWord, usize> = HashMap::new();
+        let mut clusters: Vec<Vec<usize>> = Vec::new();
+        let mut cluster_of = Vec::with_capacity(n);
+
+        for k in 0..n {
+            stats.znorm_into(ts, k, &mut znorm_buf);
+            paa_into(&znorm_buf, &mut paa_buf);
+            for (sy, &v) in sym_buf.iter_mut().zip(&paa_buf) {
+                *sy = symbolize(v, &beta);
+            }
+            let w = SaxWord::new(&sym_buf);
+            let id = *map.entry(w.clone()).or_insert_with(|| {
+                clusters.push(Vec::new());
+                clusters.len() - 1
+            });
+            clusters[id].push(k);
+            cluster_of.push(id);
+            words.push(w);
+        }
+
+        let mut by_size: Vec<usize> = (0..clusters.len()).collect();
+        by_size.sort_by_key(|&id| (clusters[id].len(), id));
+
+        SaxIndex {
+            words,
+            cluster_of,
+            clusters,
+            by_size,
+        }
+    }
+
+    /// Number of sequences indexed.
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Members of the cluster containing sequence `i`.
+    pub fn cluster_members(&self, i: usize) -> &[usize] {
+        &self.clusters[self.cluster_of[i]]
+    }
+
+    /// Size of the cluster containing sequence `i`.
+    pub fn cluster_size(&self, i: usize) -> usize {
+        self.cluster_members(i).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SaxParams;
+    use crate::ts::generators;
+    use crate::ts::series::IntoSeries;
+
+    fn small_index() -> (TimeSeries, SeqStats, SaxIndex) {
+        let ts = generators::sine_with_noise(2_000, 0.1, 42).into_series("sine");
+        let params = SaxParams {
+            s: 120,
+            p: 4,
+            alphabet: 4,
+        };
+        let stats = SeqStats::compute(&ts, params.s);
+        let idx = SaxIndex::build(&ts, &stats, &params);
+        (ts, stats, idx)
+    }
+
+    #[test]
+    fn partitions_all_sequences() {
+        let (ts, _, idx) = small_index();
+        let n = ts.num_sequences(120);
+        assert_eq!(idx.len(), n);
+        let total: usize = idx.clusters.iter().map(|c| c.len()).sum();
+        assert_eq!(total, n, "clusters partition the sequence set");
+        // membership is consistent
+        for (k, &cid) in idx.cluster_of.iter().enumerate() {
+            assert!(idx.clusters[cid].contains(&k));
+        }
+    }
+
+    #[test]
+    fn same_cluster_means_same_word() {
+        let (_, _, idx) = small_index();
+        for members in &idx.clusters {
+            let w0 = &idx.words[members[0]];
+            for &m in members {
+                assert_eq!(&idx.words[m], w0);
+            }
+        }
+    }
+
+    #[test]
+    fn by_size_is_ascending() {
+        let (_, _, idx) = small_index();
+        let sizes: Vec<usize> = idx.by_size.iter().map(|&id| idx.clusters[id].len()).collect();
+        for w in sizes.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn periodic_series_clusters_tightly() {
+        // near-noiseless sine: few clusters, all fairly large
+        let ts = generators::sine_with_noise(3_000, 0.0001, 1).into_series("s");
+        let params = SaxParams { s: 120, p: 4, alphabet: 4 };
+        let stats = SeqStats::compute(&ts, 120);
+        let idx = SaxIndex::build(&ts, &stats, &params);
+        assert!(
+            idx.clusters.len() < 64,
+            "expected few clusters, got {}",
+            idx.clusters.len()
+        );
+    }
+
+    #[test]
+    fn members_in_time_order() {
+        let (_, _, idx) = small_index();
+        for members in &idx.clusters {
+            for w in members.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! SAX MINDIST: the classic lower bound on z-normalized Euclidean distance.
+//!
+//! Not used by the search algorithms themselves (HOT SAX/HST only use SAX
+//! to *order* the search), but it is the contract that makes SAX clusters
+//! meaningful — "sequences belonging to the same SAX cluster can also be
+//! Euclidean neighbors". The property tests verify
+//! `MINDIST(ŵ_a, ŵ_b) <= d(a, b)` on random data, which pins down the
+//! breakpoint table and PAA implementation.
+
+use super::breakpoints::breakpoints;
+use super::word::SaxWord;
+
+/// Pairwise symbol distance table: dist(r, c) = 0 if |r−c| <= 1 else
+/// β_{max(r,c)−1} − β_{min(r,c)} (Lin et al. 2003, Table 3).
+pub fn cell_table(alphabet: usize) -> Vec<Vec<f64>> {
+    let beta = breakpoints(alphabet);
+    let mut t = vec![vec![0.0; alphabet]; alphabet];
+    for (r, row) in t.iter_mut().enumerate() {
+        for (c, v) in row.iter_mut().enumerate() {
+            if r.abs_diff(c) > 1 {
+                let hi = r.max(c);
+                let lo = r.min(c);
+                *v = beta[hi - 1] - beta[lo];
+            }
+        }
+    }
+    t
+}
+
+/// MINDIST between two SAX words of sequences of original length `s`.
+pub fn mindist(a: &SaxWord, b: &SaxWord, s: usize, table: &[Vec<f64>]) -> f64 {
+    assert_eq!(a.len(), b.len(), "words must share P");
+    let p = a.len();
+    let mut acc = 0.0;
+    for (&sa, &sb) in a.symbols().iter().zip(b.symbols()) {
+        let d = table[sa as usize][sb as usize];
+        acc += d * d;
+    }
+    ((s as f64 / p as f64) * acc).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_words_have_zero_mindist() {
+        let t = cell_table(4);
+        let w = SaxWord::new(&[0, 1, 2, 3]);
+        assert_eq!(mindist(&w, &w, 128, &t), 0.0);
+    }
+
+    #[test]
+    fn adjacent_symbols_cost_zero() {
+        let t = cell_table(4);
+        let a = SaxWord::new(&[0, 1, 2, 3]);
+        let b = SaxWord::new(&[1, 2, 3, 2]);
+        assert_eq!(mindist(&a, &b, 128, &t), 0.0);
+    }
+
+    #[test]
+    fn far_symbols_cost_positive_and_symmetric() {
+        let t = cell_table(4);
+        let a = SaxWord::new(&[0, 0, 0, 0]);
+        let b = SaxWord::new(&[3, 3, 3, 3]);
+        let d_ab = mindist(&a, &b, 128, &t);
+        let d_ba = mindist(&b, &a, 128, &t);
+        assert!(d_ab > 0.0);
+        assert_eq!(d_ab, d_ba);
+    }
+
+    #[test]
+    fn table_values_match_literature_alphabet4() {
+        let t = cell_table(4);
+        // dist(a, c) = beta_2 - beta_1 = 0 - (-0.6745) = 0.6745
+        assert!((t[0][2] - 0.6745).abs() < 1e-3);
+        // dist(a, d) = beta_3 - beta_1 = 0.6745 + 0.6745
+        assert!((t[0][3] - 1.349).abs() < 2e-3);
+        assert_eq!(t[1][2], 0.0);
+    }
+
+    #[test]
+    fn grows_with_s() {
+        let t = cell_table(4);
+        let a = SaxWord::new(&[0, 0, 0, 0]);
+        let b = SaxWord::new(&[3, 0, 0, 0]);
+        assert!(mindist(&a, &b, 256, &t) > mindist(&a, &b, 64, &t));
+    }
+}

@@ -1,0 +1,17 @@
+//! Symbolic Aggregate approXimation (SAX) substrate (Lin et al., 2003).
+//!
+//! SAX is the dimensionality-reduction device both HOT SAX and HST use to
+//! organize their search: each z-normalized sequence is reduced by PAA to
+//! `P` segment means, each mean is quantized against Gaussian breakpoints
+//! into one of `alphabet` symbols, and sequences sharing a symbolic word
+//! form a *cluster*. Small clusters hint at isolated sequences (discord
+//! candidates); same-cluster members are likely Euclidean neighbors.
+
+pub mod breakpoints;
+pub mod index;
+pub mod mindist;
+pub mod paa;
+pub mod word;
+
+pub use index::SaxIndex;
+pub use word::SaxWord;

@@ -1,0 +1,71 @@
+//! Piecewise Aggregate Approximation (PAA).
+//!
+//! Reduces a z-normalized sequence of length `s` to `p` segment means.
+//! Like the paper's implementation, `p` must divide `s` exactly ("our code
+//! requires that the number of parts of the PAA is an exact divisor of the
+//! length of the sequences", Sec. 4.3).
+
+/// PAA of `seq` (length s) into `out` (length p). `s % p == 0`.
+pub fn paa_into(seq: &[f64], out: &mut [f64]) {
+    let s = seq.len();
+    let p = out.len();
+    assert!(p > 0 && s % p == 0, "P={p} must divide s={s}");
+    let w = s / p;
+    let inv_w = 1.0 / w as f64;
+    for (i, o) in out.iter_mut().enumerate() {
+        let seg = &seq[i * w..(i + 1) * w];
+        *o = seg.iter().sum::<f64>() * inv_w;
+    }
+}
+
+/// Allocating variant of [`paa_into`].
+pub fn paa(seq: &[f64], p: usize) -> Vec<f64> {
+    let mut out = vec![0.0; p];
+    paa_into(seq, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn averages_segments() {
+        let seq = [1.0, 3.0, 2.0, 4.0, 10.0, 20.0];
+        assert_eq!(paa(&seq, 3), vec![2.0, 3.0, 15.0]);
+        let p2 = paa(&seq, 2);
+        assert!((p2[0] - 2.0).abs() < 1e-12);
+        assert!((p2[1] - 34.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn identity_when_p_equals_s() {
+        let seq = [1.5, -2.0, 0.25];
+        assert_eq!(paa(&seq, 3), seq.to_vec());
+    }
+
+    #[test]
+    fn p_one_is_global_mean() {
+        let seq = [2.0, 4.0, 6.0, 8.0];
+        assert_eq!(paa(&seq, 1), vec![5.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn rejects_non_divisor() {
+        paa(&[0.0; 10], 3);
+    }
+
+    #[test]
+    fn preserves_mean() {
+        // PAA of a z-normalized (zero-mean) sequence stays zero-mean.
+        let mut rng = crate::util::rng::Rng64::new(1);
+        let mut seq: Vec<f64> = (0..120).map(|_| rng.normal()).collect();
+        let m = seq.iter().sum::<f64>() / 120.0;
+        for v in &mut seq {
+            *v -= m;
+        }
+        let red = paa(&seq, 4);
+        assert!(red.iter().sum::<f64>().abs() < 1e-10);
+    }
+}

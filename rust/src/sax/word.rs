@@ -1,0 +1,123 @@
+//! SAX words: fixed-length symbol strings.
+//!
+//! Words are at most 32 symbols (the paper's largest P is 15; Sec. 4.6 uses
+//! P = 128, for which we fall back to a hashed 32-symbol digest of the
+//! word — cluster identity only needs equality, and digest collisions
+//! merely merge clusters, which is a performance (not correctness) effect
+//! for HOT SAX/HST since SAX only *orders* the search).
+
+use std::fmt;
+
+/// Maximum symbols stored inline.
+pub const MAX_INLINE: usize = 32;
+
+/// A SAX word (cluster key).
+#[derive(Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SaxWord {
+    len: u8,
+    sym: [u8; MAX_INLINE],
+}
+
+impl SaxWord {
+    /// Build from raw symbols. Words longer than [`MAX_INLINE`] are folded
+    /// (xor-rotate) into 32 bytes.
+    pub fn new(symbols: &[u8]) -> SaxWord {
+        let mut sym = [0u8; MAX_INLINE];
+        if symbols.len() <= MAX_INLINE {
+            sym[..symbols.len()].copy_from_slice(symbols);
+            SaxWord {
+                len: symbols.len() as u8,
+                sym,
+            }
+        } else {
+            for (i, &s) in symbols.iter().enumerate() {
+                let slot = i % MAX_INLINE;
+                sym[slot] = sym[slot].rotate_left(3) ^ s.wrapping_add(i as u8);
+            }
+            SaxWord {
+                len: MAX_INLINE as u8,
+                sym,
+            }
+        }
+    }
+
+    /// Symbols as a slice (digest bytes if the word was folded).
+    pub fn symbols(&self) -> &[u8] {
+        &self.sym[..self.len as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn write_letters(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // letters a, b, c… like the SAX literature
+        for &s in self.symbols() {
+            let c = if s < 26 { (b'a' + s) as char } else { '#' };
+            write!(f, "{c}")?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for SaxWord {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.write_letters(f)
+    }
+}
+
+impl fmt::Display for SaxWord {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.write_letters(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equality_and_hash_on_symbols() {
+        use std::collections::HashMap;
+        let a = SaxWord::new(&[0, 1, 2, 3]);
+        let b = SaxWord::new(&[0, 1, 2, 3]);
+        let c = SaxWord::new(&[0, 1, 2, 2]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let mut m = HashMap::new();
+        m.insert(a.clone(), 1);
+        assert_eq!(m.get(&b), Some(&1));
+        assert_eq!(m.get(&c), None);
+    }
+
+    #[test]
+    fn display_as_letters() {
+        let w = SaxWord::new(&[0, 1, 3, 2]);
+        assert_eq!(w.to_string(), "abdc");
+    }
+
+    #[test]
+    fn long_words_fold_deterministically() {
+        let long: Vec<u8> = (0..128).map(|i| (i % 4) as u8).collect();
+        let a = SaxWord::new(&long);
+        let b = SaxWord::new(&long);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), MAX_INLINE);
+        // a different long word should (almost surely) differ
+        let mut other = long.clone();
+        other[50] = 3 - other[50];
+        assert_ne!(a, SaxWord::new(&other));
+    }
+
+    #[test]
+    fn length_prefix_distinguishes() {
+        // "ab" != "ab\0" even though padding bytes match
+        let a = SaxWord::new(&[0, 1]);
+        let b = SaxWord::new(&[0, 1, 0]);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,352 @@
+//! The job coordinator: bounded queue, worker pool, job registry.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Result};
+
+use crate::algo;
+use crate::config::SearchParams;
+use crate::ts::{datasets, TimeSeries};
+use crate::util::json::Json;
+
+/// A search job.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Registry dataset name (or "synthetic:noise=E,n=N" forms).
+    pub dataset: String,
+    /// Length divisor applied to the registry's paper length.
+    pub scale_div: usize,
+    /// Algorithm name (see [`crate::algo::by_name`]).
+    pub algo: String,
+    pub params: SearchParams,
+}
+
+impl JobSpec {
+    pub fn from_json(v: &Json) -> Result<JobSpec, String> {
+        let dataset = v
+            .get("dataset")
+            .and_then(|d| d.as_str())
+            .ok_or("field `dataset` required")?
+            .to_string();
+        let algo = v
+            .get("algo")
+            .and_then(|d| d.as_str())
+            .unwrap_or("hst")
+            .to_string();
+        let scale_div = v
+            .get("scale_div")
+            .and_then(|d| d.as_u64())
+            .unwrap_or(1) as usize;
+        let params = match v.get("params") {
+            Some(p) => SearchParams::from_json(p)?,
+            None => return Err("field `params` required".into()),
+        };
+        Ok(JobSpec {
+            dataset,
+            scale_div,
+            algo,
+            params,
+        })
+    }
+
+    /// Materialize the requested series.
+    pub fn series(&self) -> Result<TimeSeries> {
+        if let Some(rest) = self.dataset.strip_prefix("synthetic:") {
+            // synthetic:noise=0.1,n=20000,seed=4
+            let mut noise = 0.1f64;
+            let mut n = 20_000usize;
+            let mut seed = 0u64;
+            for kv in rest.split(',') {
+                match kv.split_once('=') {
+                    Some(("noise", v)) => noise = v.parse()?,
+                    Some(("n", v)) => n = v.parse()?,
+                    Some(("seed", v)) => seed = v.parse()?,
+                    _ => bail!("bad synthetic spec field {kv:?}"),
+                }
+            }
+            return Ok(crate::ts::series::IntoSeries::into_series(
+                crate::ts::generators::sine_with_noise(n, noise, seed),
+                &format!("synthetic(E={noise},n={n})"),
+            ));
+        }
+        match datasets::by_name(&self.dataset) {
+            Some(d) => Ok(d.generate_scaled(self.scale_div)),
+            None => bail!("unknown dataset {:?}", self.dataset),
+        }
+    }
+}
+
+/// Lifecycle of a job.
+#[derive(Debug, Clone)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done(Json),
+    Failed(String),
+}
+
+impl JobState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done(_) => "done",
+            JobState::Failed(_) => "failed",
+        }
+    }
+}
+
+struct Inner {
+    queue: VecDeque<(u64, JobSpec)>,
+    jobs: HashMap<u64, JobState>,
+    next_id: u64,
+    shutdown: bool,
+    running: usize,
+}
+
+/// Thread-pool coordinator with a bounded queue (backpressure: `submit`
+/// rejects when full, so upstream callers must retry/slow down — the same
+/// contract a production ingestion tier would expose).
+pub struct Coordinator {
+    inner: Arc<(Mutex<Inner>, Condvar)>,
+    workers: Vec<JoinHandle<()>>,
+    capacity: usize,
+}
+
+impl Coordinator {
+    /// Start `n_workers` workers with a queue bound of `capacity`.
+    pub fn start(n_workers: usize, capacity: usize) -> Coordinator {
+        let inner = Arc::new((
+            Mutex::new(Inner {
+                queue: VecDeque::new(),
+                jobs: HashMap::new(),
+                next_id: 1,
+                shutdown: false,
+                running: 0,
+            }),
+            Condvar::new(),
+        ));
+        let workers = (0..n_workers.max(1))
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                std::thread::spawn(move || worker_loop(inner))
+            })
+            .collect();
+        Coordinator {
+            inner,
+            workers,
+            capacity,
+        }
+    }
+
+    /// Submit a job; returns its id, or an error when the queue is full
+    /// (backpressure) or the coordinator is shutting down.
+    pub fn submit(&self, spec: JobSpec) -> Result<u64> {
+        let (lock, cvar) = &*self.inner;
+        let mut g = lock.lock().unwrap();
+        if g.shutdown {
+            bail!("coordinator is shut down");
+        }
+        if g.queue.len() >= self.capacity {
+            bail!("queue full ({} jobs): backpressure, retry later", self.capacity);
+        }
+        let id = g.next_id;
+        g.next_id += 1;
+        g.jobs.insert(id, JobState::Queued);
+        g.queue.push_back((id, spec));
+        cvar.notify_one();
+        Ok(id)
+    }
+
+    /// Current state of a job.
+    pub fn status(&self, id: u64) -> Option<JobState> {
+        let (lock, _) = &*self.inner;
+        lock.lock().unwrap().jobs.get(&id).cloned()
+    }
+
+    /// All job ids with their state labels.
+    pub fn list(&self) -> Vec<(u64, String)> {
+        let (lock, _) = &*self.inner;
+        let g = lock.lock().unwrap();
+        let mut v: Vec<(u64, String)> = g
+            .jobs
+            .iter()
+            .map(|(&id, st)| (id, st.label().to_string()))
+            .collect();
+        v.sort_by_key(|&(id, _)| id);
+        v
+    }
+
+    /// Block until job `id` leaves the queue/running states.
+    pub fn wait(&self, id: u64) -> Option<JobState> {
+        loop {
+            match self.status(id) {
+                Some(JobState::Queued) | Some(JobState::Running) => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                other => return other,
+            }
+        }
+    }
+
+    /// Drain the queue and stop the workers.
+    pub fn shutdown(mut self) {
+        let (lock, cvar) = &*self.inner;
+        {
+            let mut g = lock.lock().unwrap();
+            g.shutdown = true;
+            cvar.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<(Mutex<Inner>, Condvar)>) {
+    loop {
+        let (id, spec) = {
+            let (lock, cvar) = &*inner;
+            let mut g = lock.lock().unwrap();
+            loop {
+                if let Some(job) = g.queue.pop_front() {
+                    g.running += 1;
+                    *g.jobs.get_mut(&job.0).unwrap() = JobState::Running;
+                    break job;
+                }
+                if g.shutdown {
+                    return;
+                }
+                g = cvar.wait(g).unwrap();
+            }
+        };
+        let outcome = run_job(&spec);
+        let (lock, _) = &*inner;
+        let mut g = lock.lock().unwrap();
+        g.running -= 1;
+        *g.jobs.get_mut(&id).unwrap() = match outcome {
+            Ok(report) => JobState::Done(report),
+            Err(e) => JobState::Failed(format!("{e:#}")),
+        };
+    }
+}
+
+fn run_job(spec: &JobSpec) -> Result<Json> {
+    let Some(engine) = algo::by_name(&spec.algo) else {
+        bail!("unknown algorithm {:?}", spec.algo);
+    };
+    let ts = spec.series()?;
+    let report = engine.run(&ts, &spec.params)?;
+    Ok(report
+        .to_json()
+        .set("dataset", spec.dataset.as_str())
+        .set("n_points", ts.n_total()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_spec(algo: &str) -> JobSpec {
+        JobSpec {
+            dataset: "synthetic:noise=0.5,n=1500,seed=1".into(),
+            scale_div: 1,
+            algo: algo.into(),
+            params: SearchParams::new(64, 4, 4),
+        }
+    }
+
+    #[test]
+    fn submits_runs_and_completes() {
+        let c = Coordinator::start(2, 16);
+        let id = c.submit(quick_spec("hst")).unwrap();
+        match c.wait(id) {
+            Some(JobState::Done(j)) => {
+                assert_eq!(j.get("algo").unwrap().as_str(), Some("hst"));
+                assert!(j.get("distance_calls").unwrap().as_u64().unwrap() > 0);
+            }
+            other => panic!("unexpected state {other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn bad_algo_fails_cleanly() {
+        let c = Coordinator::start(1, 4);
+        let id = c.submit(quick_spec("not-an-algo")).unwrap();
+        match c.wait(id) {
+            Some(JobState::Failed(msg)) => assert!(msg.contains("unknown algorithm")),
+            other => panic!("unexpected state {other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let c = Coordinator::start(1, 1);
+        // saturate: one running + one queued, then the next submit fails
+        let _a = c.submit(quick_spec("hst")).unwrap();
+        let mut rejected = false;
+        for _ in 0..50 {
+            if c.submit(quick_spec("hst")).is_err() {
+                rejected = true;
+                break;
+            }
+        }
+        assert!(rejected, "bounded queue must eventually reject");
+        c.shutdown();
+    }
+
+    #[test]
+    fn parallel_jobs_all_finish() {
+        let c = Coordinator::start(4, 64);
+        let ids: Vec<u64> = (0..8)
+            .map(|i| {
+                let mut s = quick_spec(if i % 2 == 0 { "hst" } else { "hotsax" });
+                s.params = s.params.with_seed(i as u64);
+                c.submit(s).unwrap()
+            })
+            .collect();
+        for id in ids {
+            match c.wait(id) {
+                Some(JobState::Done(_)) => {}
+                other => panic!("job {id}: {other:?}"),
+            }
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_dataset_fails() {
+        let c = Coordinator::start(1, 4);
+        let mut s = quick_spec("hst");
+        s.dataset = "does-not-exist".into();
+        let id = c.submit(s).unwrap();
+        match c.wait(id) {
+            Some(JobState::Failed(msg)) => assert!(msg.contains("unknown dataset")),
+            other => panic!("unexpected {other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn registry_dataset_scaled_runs() {
+        let c = Coordinator::start(1, 4);
+        let spec = JobSpec {
+            dataset: "Shuttle TEK 14".into(),
+            scale_div: 4,
+            algo: "hst".into(),
+            params: SearchParams::new(128, 4, 4),
+        };
+        let id = c.submit(spec).unwrap();
+        match c.wait(id) {
+            Some(JobState::Done(j)) => {
+                assert!(j.get("n_sequences").unwrap().as_u64().unwrap() > 0)
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        c.shutdown();
+    }
+}

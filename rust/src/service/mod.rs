@@ -1,0 +1,23 @@
+//! Batch discord-search service: the deployment-facing coordinator.
+//!
+//! A thread-pool job runner with bounded-queue backpressure plus a TCP
+//! JSON-lines front end. (The offline registry has no tokio; the
+//! coordinator uses std threads + condvar — the concurrency pattern, not
+//! the framework, is what matters at this scale.)
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! → {"cmd":"submit","dataset":"ECG 300","scale_div":8,"algo":"hst","params":{"s":300,"p":4,"alphabet":4,"k":3}}
+//! ← {"ok":true,"job":1}
+//! → {"cmd":"status","job":1}
+//! ← {"ok":true,"job":1,"state":"done","report":{...}}
+//! → {"cmd":"list"} | {"cmd":"shutdown"}
+//! ```
+
+pub mod coordinator;
+pub mod online;
+pub mod server;
+
+pub use coordinator::{Coordinator, JobSpec, JobState};
+pub use server::{serve, Client};

@@ -1,0 +1,195 @@
+//! TCP JSON-lines front end over the [`Coordinator`] plus a blocking
+//! [`Client`] for the CLI, examples, and integration tests.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::coordinator::{Coordinator, JobSpec, JobState};
+
+/// Serve until a `shutdown` command arrives. Returns the bound local
+/// address through `on_bound` (use port 0 to pick a free port).
+pub fn serve<A: ToSocketAddrs>(
+    addr: A,
+    n_workers: usize,
+    capacity: usize,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    let listener = TcpListener::bind(addr).context("binding service socket")?;
+    on_bound(listener.local_addr()?);
+    let coord = Arc::new(Coordinator::start(n_workers, capacity));
+    let stop = Arc::new(AtomicBool::new(false));
+    // accept loop: one handler thread per connection (few clients, long
+    // jobs — thread-per-conn is the right tradeoff here). Handlers are
+    // detached: joining them would deadlock shutdown while another client
+    // keeps its connection open; they exit when their peer disconnects.
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = stream?;
+        let coord = Arc::clone(&coord);
+        let stop2 = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let _ = handle_conn(stream, &coord, &stop2);
+        });
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.shutdown(),
+        Err(_) => {} // a handler still holds it; workers die with process
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    coord: &Coordinator,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = dispatch(&line, coord, stop);
+        writeln!(writer, "{reply}")?;
+        if stop.load(Ordering::SeqCst) {
+            // unblock the accept loop with a dummy connection
+            let _ = TcpStream::connect(writer.local_addr()?);
+            break;
+        }
+    }
+    let _ = peer;
+    Ok(())
+}
+
+fn err_reply(msg: &str) -> Json {
+    Json::obj().set("ok", false).set("error", msg)
+}
+
+fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
+    let req = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return err_reply(&format!("bad json: {e}")),
+    };
+    match req.get("cmd").and_then(|c| c.as_str()) {
+        Some("submit") => match JobSpec::from_json(&req) {
+            Ok(spec) => match coord.submit(spec) {
+                Ok(id) => Json::obj().set("ok", true).set("job", id),
+                Err(e) => err_reply(&format!("{e:#}")),
+            },
+            Err(e) => err_reply(&e),
+        },
+        Some("status") => {
+            let Some(id) = req.get("job").and_then(|j| j.as_u64()) else {
+                return err_reply("field `job` required");
+            };
+            match coord.status(id) {
+                None => err_reply("no such job"),
+                Some(st) => {
+                    let mut out = Json::obj()
+                        .set("ok", true)
+                        .set("job", id)
+                        .set("state", st.label());
+                    match st {
+                        JobState::Done(report) => out = out.set("report", report),
+                        JobState::Failed(msg) => out = out.set("error", msg),
+                        _ => {}
+                    }
+                    out
+                }
+            }
+        }
+        Some("wait") => {
+            let Some(id) = req.get("job").and_then(|j| j.as_u64()) else {
+                return err_reply("field `job` required");
+            };
+            match coord.wait(id) {
+                None => err_reply("no such job"),
+                Some(JobState::Done(report)) => Json::obj()
+                    .set("ok", true)
+                    .set("job", id)
+                    .set("state", "done")
+                    .set("report", report),
+                Some(JobState::Failed(msg)) => Json::obj()
+                    .set("ok", false)
+                    .set("job", id)
+                    .set("state", "failed")
+                    .set("error", msg),
+                _ => unreachable!("wait returns terminal states"),
+            }
+        }
+        Some("list") => {
+            let jobs: Vec<Json> = coord
+                .list()
+                .into_iter()
+                .map(|(id, st)| Json::obj().set("job", id).set("state", st))
+                .collect();
+            Json::obj().set("ok", true).set("jobs", jobs)
+        }
+        Some("shutdown") => {
+            stop.store(true, Ordering::SeqCst);
+            Json::obj().set("ok", true).set("bye", true)
+        }
+        _ => err_reply("unknown cmd (submit|status|wait|list|shutdown)"),
+    }
+}
+
+/// Blocking client for the JSON-lines protocol.
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting to service")?;
+        let writer = stream.try_clone()?;
+        Ok(Client {
+            writer,
+            reader: BufReader::new(stream),
+        })
+    }
+
+    /// Send one request, read one reply.
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        writeln!(self.writer, "{req}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+    }
+
+    pub fn submit(&mut self, spec_json: Json) -> Result<u64> {
+        let reply = self.call(&spec_json)?;
+        if reply.get("ok").and_then(|b| b.as_bool()) != Some(true) {
+            anyhow::bail!(
+                "submit rejected: {}",
+                reply.get("error").and_then(|e| e.as_str()).unwrap_or("?")
+            );
+        }
+        reply
+            .get("job")
+            .and_then(|j| j.as_u64())
+            .context("reply missing job id")
+    }
+
+    pub fn wait(&mut self, job: u64) -> Result<Json> {
+        self.call(&Json::obj().set("cmd", "wait").set("job", job))
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        let _ = self.call(&Json::obj().set("cmd", "shutdown"))?;
+        Ok(())
+    }
+}

@@ -1,0 +1,179 @@
+//! Registry of the paper's evaluation datasets.
+//!
+//! Each entry records the paper's search parameters (sequence length `s`,
+//! PAA segments `p`, alphabet size) and length from Tables 1/6, plus the
+//! synthetic generator family that substitutes for the original recording
+//! (see DESIGN.md "Offline-environment substitutions").
+//!
+//! `Dataset::generate` materializes the series at full paper length;
+//! `generate_scaled(f)` shrinks the length by `f` (keeping it ≥ 4·s) so the
+//! whole benchmark suite runs in minutes instead of hours. Every table in
+//! EXPERIMENTS.md records which scale was used.
+
+use super::generators as g;
+use super::series::TimeSeries;
+
+/// Generator family for a dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    Ecg,
+    Respiration,
+    Valve,
+    Power,
+    Regime,
+    Insect,
+}
+
+/// A registry entry: the paper's parameters plus our synthetic stand-in.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Paper's dataset name (e.g. "ECG 300").
+    pub name: &'static str,
+    /// Full length used in the paper.
+    pub paper_len: usize,
+    /// Sequence (discord) length s.
+    pub s: usize,
+    /// PAA segments P (must divide s).
+    pub p: usize,
+    /// SAX alphabet size.
+    pub alphabet: usize,
+    /// Synthetic family standing in for the recording.
+    pub family: Family,
+    /// Dominant pattern period fed to the generator.
+    pub period: usize,
+    /// Number of injected anomalies.
+    pub anomalies: usize,
+    /// Seed so the series is stable across runs.
+    pub seed: u64,
+}
+
+impl Dataset {
+    /// Materialize at a given length.
+    pub fn generate_len(&self, n: usize) -> TimeSeries {
+        let pts = match self.family {
+            Family::Ecg => g::ecg_like(n, self.period, self.anomalies, self.seed),
+            Family::Respiration => {
+                g::respiration_like(n, self.period, self.anomalies, self.seed)
+            }
+            Family::Valve => g::valve_like(n, self.period, self.anomalies, self.seed),
+            Family::Power => g::power_like(n, self.period, self.anomalies, self.seed),
+            Family::Regime => g::regime_like(n, self.period, self.anomalies, self.seed),
+            Family::Insect => g::insect_feeding_like(n, self.anomalies, self.seed),
+        };
+        TimeSeries::new(self.name, pts)
+    }
+
+    /// Materialize at full paper length.
+    pub fn generate(&self) -> TimeSeries {
+        self.generate_len(self.paper_len)
+    }
+
+    /// Materialize at `paper_len / scale_div`, floored at `4·s` points.
+    pub fn generate_scaled(&self, scale_div: usize) -> TimeSeries {
+        let n = (self.paper_len / scale_div.max(1)).max(4 * self.s);
+        self.generate_len(n)
+    }
+
+    /// Max number of non-overlapping discords this dataset supports at the
+    /// scaled length (paper: at most N/s + 1).
+    pub fn max_discords(&self, n: usize) -> usize {
+        (n.saturating_sub(self.s) + 1) / self.s + 1
+    }
+}
+
+/// The 14 datasets of Tables 1/3/6 with the paper's (s, P, alphabet).
+pub fn registry() -> Vec<Dataset> {
+    vec![
+        Dataset { name: "Daily commute", paper_len: 17_175, s: 345, p: 15, alphabet: 4, family: Family::Regime,      period: 690,  anomalies: 2, seed: 101 },
+        Dataset { name: "Dutch Power",   paper_len: 35_040, s: 750, p: 6,  alphabet: 3, family: Family::Power,       period: 96,   anomalies: 1, seed: 102 },
+        Dataset { name: "ECG 0606",      paper_len: 2_299,  s: 120, p: 4,  alphabet: 4, family: Family::Ecg,         period: 110,  anomalies: 1, seed: 103 },
+        Dataset { name: "ECG 308",       paper_len: 5_400,  s: 300, p: 4,  alphabet: 4, family: Family::Ecg,         period: 260,  anomalies: 1, seed: 104 },
+        Dataset { name: "ECG 15",        paper_len: 15_000, s: 300, p: 4,  alphabet: 4, family: Family::Ecg,         period: 280,  anomalies: 2, seed: 105 },
+        Dataset { name: "ECG 108",       paper_len: 21_600, s: 300, p: 4,  alphabet: 4, family: Family::Ecg,         period: 250,  anomalies: 2, seed: 106 },
+        Dataset { name: "ECG 300",       paper_len: 536_976, s: 300, p: 4, alphabet: 4, family: Family::Ecg,         period: 270,  anomalies: 5, seed: 107 },
+        Dataset { name: "ECG 318",       paper_len: 586_086, s: 300, p: 4, alphabet: 4, family: Family::Ecg,         period: 290,  anomalies: 5, seed: 108 },
+        Dataset { name: "NPRS 43",       paper_len: 4_000,  s: 128, p: 4,  alphabet: 4, family: Family::Respiration, period: 130,  anomalies: 1, seed: 109 },
+        Dataset { name: "NPRS 44",       paper_len: 24_125, s: 128, p: 4,  alphabet: 4, family: Family::Respiration, period: 140,  anomalies: 2, seed: 110 },
+        Dataset { name: "Video",         paper_len: 11_251, s: 150, p: 5,  alphabet: 3, family: Family::Regime,      period: 450,  anomalies: 2, seed: 111 },
+        Dataset { name: "Shuttle TEK 14", paper_len: 5_000, s: 128, p: 4,  alphabet: 4, family: Family::Valve,       period: 250,  anomalies: 1, seed: 112 },
+        Dataset { name: "Shuttle TEK 16", paper_len: 5_000, s: 128, p: 4,  alphabet: 4, family: Family::Valve,       period: 200,  anomalies: 1, seed: 113 },
+        Dataset { name: "Shuttle TEK 17", paper_len: 5_000, s: 128, p: 4,  alphabet: 4, family: Family::Valve,       period: 230,  anomalies: 1, seed: 114 },
+    ]
+}
+
+/// Look up a dataset by (case- and punctuation-insensitive) name.
+pub fn by_name(name: &str) -> Option<Dataset> {
+    let norm = |s: &str| {
+        s.chars()
+            .filter(|c| c.is_ascii_alphanumeric())
+            .map(|c| c.to_ascii_lowercase())
+            .collect::<String>()
+    };
+    let want = norm(name);
+    registry().into_iter().find(|d| norm(d.name) == want)
+}
+
+/// The long-series case study of Sec. 4.6 (scaled stand-in).
+pub fn insect_dataset() -> Dataset {
+    Dataset {
+        name: "Insect EPG (Sec 4.6)",
+        paper_len: 170_326_411,
+        s: 512,
+        p: 128,
+        alphabet: 4,
+        family: Family::Insect,
+        period: 160,
+        anomalies: 10,
+        seed: 115,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_params_are_consistent() {
+        for d in registry() {
+            assert_eq!(d.s % d.p, 0, "{}: P must divide s", d.name);
+            assert!(d.alphabet >= 2 && d.alphabet <= 20, "{}", d.name);
+            assert!(d.paper_len > 4 * d.s, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn fourteen_datasets_like_the_paper() {
+        assert_eq!(registry().len(), 14);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("ECG 300").is_some());
+        assert!(by_name("ecg300").is_some());
+        assert!(by_name("shuttle-tek-14").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn generate_scaled_respects_floor() {
+        let d = by_name("ECG 0606").unwrap();
+        let ts = d.generate_scaled(1000);
+        assert!(ts.n_total() >= 4 * d.s);
+        let full = d.generate_scaled(1);
+        assert_eq!(full.n_total(), d.paper_len);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let d = by_name("NPRS 43").unwrap();
+        assert_eq!(d.generate().points, d.generate().points);
+    }
+
+    #[test]
+    fn max_discords_bound() {
+        let d = by_name("Shuttle TEK 14").unwrap();
+        // paper: at most N/s + 1 discords
+        let n = 5_000;
+        assert!(d.max_discords(n) >= 10, "suite uses 10 discords");
+    }
+}

@@ -1,0 +1,386 @@
+//! Synthetic time-series generators.
+//!
+//! The paper validates on (a) a heterogeneous suite of real recordings
+//! (ECG, respiration, shuttle valve, power demand, commute, video) and (b)
+//! a controlled synthetic family (Eq. 7: rescaled sine + uniform noise).
+//! The real recordings are not redistributable/offline, so each dataset
+//! *family* gets a generator that reproduces the structural properties that
+//! drive discord-search complexity: quasi-periodicity, the number of
+//! distinct repeated patterns, the noise/signal ratio, and a small number
+//! of injected anomalies (the discords to be found). See DESIGN.md
+//! ("Offline-environment substitutions").
+//!
+//! All generators are deterministic functions of their seed.
+
+use crate::util::rng::Rng64;
+
+/// Paper Eq. 7: `p_i = (sin(0.1 i) + E ε + 1) / 2.5`, ε ~ U(0,1).
+///
+/// `e` is the noise amplitude studied in Table 4 / Fig. 5. One anomaly is
+/// *implicit*: with pure low-noise sine every sequence repeats, so the
+/// discord is whichever window the noise makes rarest — exactly the
+/// "easy-looking but hard to search" regime the paper analyses.
+pub fn sine_with_noise(n: usize, e: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Rng64::new(seed);
+    (0..n)
+        .map(|i| ((0.1 * i as f64).sin() + e * rng.f64() + 1.0) / 2.5)
+        .collect()
+}
+
+/// Kinds of injected anomalies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Anomaly {
+    /// Flatten a window to its mean (sensor dropout / apnea).
+    Flatline,
+    /// Add a transient bump (ectopic beat, valve glitch).
+    Bump,
+    /// Locally stretch time (rhythm disturbance).
+    Stretch,
+    /// Invert the window around its mean.
+    Invert,
+}
+
+/// Inject `kind` into `pts[pos..pos+len]` (clamped to bounds).
+pub fn inject(pts: &mut [f64], pos: usize, len: usize, kind: Anomaly, rng: &mut Rng64) {
+    let end = (pos + len).min(pts.len());
+    if pos >= end {
+        return;
+    }
+    let w = end - pos;
+    let mean = pts[pos..end].iter().sum::<f64>() / w as f64;
+    match kind {
+        Anomaly::Flatline => {
+            for p in &mut pts[pos..end] {
+                *p = mean + 0.002 * rng.normal();
+            }
+        }
+        Anomaly::Bump => {
+            let amp = (pts[pos..end]
+                .iter()
+                .map(|p| (p - mean).abs())
+                .fold(0.0, f64::max))
+            .max(0.1)
+                * 1.6;
+            for (i, p) in pts[pos..end].iter_mut().enumerate() {
+                let t = (i as f64 / w as f64 - 0.5) * 6.0;
+                *p += amp * (-t * t).exp();
+            }
+        }
+        Anomaly::Stretch => {
+            let src: Vec<f64> = pts[pos..end].to_vec();
+            for (i, p) in pts[pos..end].iter_mut().enumerate() {
+                // resample at 0.5x speed from the window start
+                let j = (i as f64 * 0.5) as usize;
+                *p = src[j.min(w - 1)];
+            }
+        }
+        Anomaly::Invert => {
+            for p in &mut pts[pos..end] {
+                *p = 2.0 * mean - *p;
+            }
+        }
+    }
+}
+
+/// One synthetic "heartbeat" of unit period: P, QRS complex, T bumps.
+fn heartbeat(phase: f64) -> f64 {
+    let bump = |c: f64, w: f64, a: f64| {
+        let d = (phase - c) / w;
+        a * (-d * d).exp()
+    };
+    bump(0.18, 0.045, 0.12)        // P
+        + bump(0.38, 0.016, -0.18) // Q
+        + bump(0.41, 0.018, 1.0)   // R
+        + bump(0.45, 0.018, -0.25) // S
+        + bump(0.68, 0.07, 0.28)   // T
+}
+
+/// ECG-like series: beat train with period jitter, baseline wander, noise,
+/// and `n_anomalies` injected rhythm disturbances.
+pub fn ecg_like(n: usize, beat_len: usize, n_anomalies: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng64::new(seed);
+    let mut pts = Vec::with_capacity(n);
+    let mut t_in_beat = 0.0f64;
+    let mut period = beat_len as f64;
+    for i in 0..n {
+        let wander = 0.05 * (2.0 * std::f64::consts::PI * i as f64 / 1500.0).sin();
+        pts.push(heartbeat(t_in_beat / period) + wander + 0.015 * rng.normal());
+        t_in_beat += 1.0;
+        if t_in_beat >= period {
+            t_in_beat = 0.0;
+            period = beat_len as f64 * (1.0 + 0.04 * rng.normal());
+        }
+    }
+    for a in 0..n_anomalies {
+        let pos = placed(n, beat_len, a, n_anomalies, &mut rng);
+        let kind = match a % 3 {
+            0 => Anomaly::Bump,
+            1 => Anomaly::Stretch,
+            _ => Anomaly::Invert,
+        };
+        inject(&mut pts, pos, beat_len, kind, &mut rng);
+    }
+    pts
+}
+
+/// Respiration-like series (NPRS family): slow oscillation with amplitude
+/// modulation, drift, breath-by-breath period variation; anomalies are
+/// apnea-like flat spells.
+pub fn respiration_like(n: usize, breath_len: usize, n_anomalies: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng64::new(seed);
+    let mut pts = Vec::with_capacity(n);
+    let mut phase = 0.0f64;
+    let mut period = breath_len as f64;
+    let mut amp = 1.0;
+    for i in 0..n {
+        let drift = 0.2 * (2.0 * std::f64::consts::PI * i as f64 / 4000.0).sin();
+        pts.push(amp * (2.0 * std::f64::consts::PI * phase).sin() + drift + 0.05 * rng.normal());
+        phase += 1.0 / period;
+        if phase >= 1.0 {
+            phase -= 1.0;
+            period = breath_len as f64 * (1.0 + 0.10 * rng.normal()).max(0.5);
+            amp = (amp + 0.08 * rng.normal()).clamp(0.6, 1.4);
+        }
+    }
+    for a in 0..n_anomalies {
+        let pos = placed(n, breath_len * 2, a, n_anomalies, &mut rng);
+        inject(&mut pts, pos, breath_len, Anomaly::Flatline, &mut rng);
+    }
+    pts
+}
+
+/// Shuttle-valve-like series (TEK family): repeating actuation cycles —
+/// sharp rise, ringing decay, quiet tail. "Easy looking" (few, very similar
+/// patterns) which is exactly the high-cps regime of Table 3. Anomalies are
+/// one-off glitches inside a cycle.
+pub fn valve_like(n: usize, cycle_len: usize, n_anomalies: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng64::new(seed);
+    let mut pts = Vec::with_capacity(n);
+    for i in 0..n {
+        let ph = (i % cycle_len) as f64 / cycle_len as f64;
+        let v = if ph < 0.08 {
+            ph / 0.08 // sharp ramp
+        } else if ph < 0.5 {
+            // ringing decay
+            let t = (ph - 0.08) / 0.42;
+            (1.0 - t) * (2.0 * std::f64::consts::PI * 6.0 * t).cos() * 0.8 + 0.1
+        } else {
+            0.05
+        };
+        pts.push(v + 0.01 * rng.normal());
+    }
+    for a in 0..n_anomalies {
+        let pos = placed(n, cycle_len, a, n_anomalies, &mut rng);
+        inject(&mut pts, pos, cycle_len / 2, Anomaly::Bump, &mut rng);
+    }
+    pts
+}
+
+/// Power-demand-like series (Dutch Power family): daily cycle × weekly
+/// structure (5 work days, 2 low days); the anomaly is a "holiday week"
+/// where workday demand stays low — the classic discord in this dataset.
+pub fn power_like(n: usize, day_len: usize, n_anomalies: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng64::new(seed);
+    let week = day_len * 7;
+    let mut pts = Vec::with_capacity(n);
+    for i in 0..n {
+        let day = (i / day_len) % 7;
+        let ph = (i % day_len) as f64 / day_len as f64;
+        let workday = day < 5;
+        let daily = if workday {
+            // morning + evening peaks
+            let m = (-((ph - 0.35) / 0.1).powi(2)).exp();
+            let e = 0.7 * (-((ph - 0.8) / 0.12).powi(2)).exp();
+            0.3 + m + e
+        } else {
+            0.3 + 0.25 * (-((ph - 0.5) / 0.25).powi(2)).exp()
+        };
+        pts.push(daily + 0.03 * rng.normal());
+    }
+    // holiday weeks: suppress workday peaks
+    for a in 0..n_anomalies {
+        let wk = placed(n.saturating_sub(week), week, a, n_anomalies, &mut rng) / week;
+        let start = wk * week;
+        for i in start..(start + day_len * 5).min(n) {
+            let ph = (i % day_len) as f64 / day_len as f64;
+            pts[i] = 0.3 + 0.25 * (-((ph - 0.5) / 0.25).powi(2)).exp() + 0.03 * rng.normal();
+        }
+    }
+    pts
+}
+
+/// Commute/gesture-like series (Daily commute / Video families):
+/// piecewise regimes — segments of distinct quasi-periodic activity with
+/// random-walk transitions; anomalies are rare one-off movements.
+pub fn regime_like(n: usize, seg_len: usize, n_anomalies: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng64::new(seed);
+    let mut pts = Vec::with_capacity(n);
+    let mut level = 0.0f64;
+    let mut freq = 0.05;
+    let mut amp = 0.5;
+    for i in 0..n {
+        if i % seg_len == 0 {
+            level += 0.3 * rng.normal();
+            freq = rng.range_f64(0.02, 0.15);
+            amp = rng.range_f64(0.2, 0.8);
+        }
+        pts.push(level + amp * (freq * i as f64).sin() + 0.05 * rng.normal());
+    }
+    for a in 0..n_anomalies {
+        let pos = placed(n, seg_len, a, n_anomalies, &mut rng);
+        inject(&mut pts, pos, seg_len / 2, Anomaly::Invert, &mut rng);
+    }
+    pts
+}
+
+/// Insect-feeding-like series (the 1.7e8-point EPG recording of Sec. 4.6):
+/// long alternating regimes of distinct waveform families.
+pub fn insect_feeding_like(n: usize, n_anomalies: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng64::new(seed);
+    let mut pts = Vec::with_capacity(n);
+    let mut regime = 0usize;
+    let mut until = 0usize;
+    for i in 0..n {
+        if i >= until {
+            regime = rng.below(3);
+            until = i + rng.range(2_000, 12_000);
+        }
+        let t = i as f64;
+        let v = match regime {
+            0 => 0.6 * (0.08 * t).sin() + 0.2 * (0.31 * t).sin(), // probing
+            1 => {
+                // ingestion: sawtooth-ish
+                let ph = (i % 160) as f64 / 160.0;
+                ph * 0.9 - 0.45
+            }
+            _ => 0.1 * (0.02 * t).sin(), // rest
+        };
+        pts.push(v + 0.04 * rng.normal());
+    }
+    for a in 0..n_anomalies {
+        let pos = placed(n, 1024, a, n_anomalies, &mut rng);
+        inject(&mut pts, pos, 512, Anomaly::Bump, &mut rng);
+    }
+    pts
+}
+
+/// Pure random walk (high-noise control).
+pub fn random_walk(n: usize, step: f64, seed: u64) -> Vec<f64> {
+    let mut rng = Rng64::new(seed);
+    let mut v = 0.0;
+    (0..n)
+        .map(|_| {
+            v += step * rng.normal();
+            v
+        })
+        .collect()
+}
+
+/// Spread anomaly `a` of `total` across the series, jittered, keeping a
+/// margin of `unit` at both ends so sequences containing the anomaly are
+/// complete.
+fn placed(n: usize, unit: usize, a: usize, total: usize, rng: &mut Rng64) -> usize {
+    if n <= 4 * unit {
+        return n / 2;
+    }
+    let span = n - 2 * unit;
+    let base = unit + span * (a + 1) / (total + 1);
+    let jitter = rng.range(0, unit.max(1));
+    (base + jitter).min(n - 2 * unit)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(sine_with_noise(100, 0.1, 7), sine_with_noise(100, 0.1, 7));
+        assert_ne!(sine_with_noise(100, 0.1, 7), sine_with_noise(100, 0.1, 8));
+        assert_eq!(
+            ecg_like(1000, 120, 2, 3),
+            ecg_like(1000, 120, 2, 3)
+        );
+    }
+
+    #[test]
+    fn eq7_range() {
+        // For E <= 1: p in [(sin-1+0)/2.5, (sin+1+E)/2.5] ⊂ [0, 1.2]
+        let pts = sine_with_noise(10_000, 1.0, 1);
+        assert!(pts.iter().all(|&p| (0.0..=1.2).contains(&p)));
+        let lo = sine_with_noise(10_000, 0.0001, 1);
+        // almost pure sine: amplitude ~ (1±1)/2.5
+        let (mn, mx) = (
+            lo.iter().cloned().fold(f64::INFINITY, f64::min),
+            lo.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        );
+        assert!(mn >= -0.01 && mn <= 0.05, "min {mn}");
+        assert!((0.79..=0.85).contains(&mx), "max {mx}");
+    }
+
+    #[test]
+    fn lengths_match() {
+        for n in [10, 1000, 4321] {
+            assert_eq!(sine_with_noise(n, 0.1, 0).len(), n);
+            assert_eq!(ecg_like(n, 100, 1, 0).len(), n);
+            assert_eq!(respiration_like(n, 100, 1, 0).len(), n);
+            assert_eq!(valve_like(n, 100, 1, 0).len(), n);
+            assert_eq!(power_like(n, 96, 1, 0).len(), n);
+            assert_eq!(regime_like(n, 200, 1, 0).len(), n);
+            assert_eq!(insect_feeding_like(n, 1, 0).len(), n);
+            assert_eq!(random_walk(n, 1.0, 0).len(), n);
+        }
+    }
+
+    #[test]
+    fn injection_changes_window_only() {
+        let mut rng = Rng64::new(0);
+        let base = ecg_like(2000, 120, 0, 5);
+        let mut modified = base.clone();
+        inject(&mut modified, 800, 120, Anomaly::Bump, &mut rng);
+        assert_eq!(&modified[..800], &base[..800]);
+        assert_eq!(&modified[920..], &base[920..]);
+        assert!(modified[800..920]
+            .iter()
+            .zip(&base[800..920])
+            .any(|(a, b)| (a - b).abs() > 0.05));
+    }
+
+    #[test]
+    fn flatline_flattens() {
+        let mut rng = Rng64::new(1);
+        let mut pts = respiration_like(3000, 150, 0, 2);
+        inject(&mut pts, 1000, 150, Anomaly::Flatline, &mut rng);
+        let w = &pts[1000..1150];
+        let m = w.iter().sum::<f64>() / w.len() as f64;
+        let dev = w.iter().map(|p| (p - m).abs()).fold(0.0, f64::max);
+        assert!(dev < 0.02, "flatline dev {dev}");
+    }
+
+    #[test]
+    fn valve_cycles_repeat() {
+        let pts = valve_like(5000, 250, 0, 9);
+        // windows one cycle apart should be near-identical (low noise)
+        let a = &pts[500..750];
+        let b = &pts[750..1000];
+        let d: f64 = a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f64>().sqrt();
+        assert!(d < 0.5, "cycle distance {d}");
+    }
+
+    #[test]
+    fn power_has_weekly_structure() {
+        let day = 96;
+        let pts = power_like(day * 7 * 4, day, 0, 3);
+        // workday mean exceeds weekend mean
+        let mut work = 0.0;
+        let mut wend = 0.0;
+        for (i, p) in pts.iter().enumerate() {
+            if (i / day) % 7 < 5 {
+                work += p;
+            } else {
+                wend += p;
+            }
+        }
+        assert!(work / (5.0 * 4.0) > wend / (2.0 * 4.0));
+    }
+}

@@ -1,0 +1,111 @@
+//! Loading and saving time series as plain text (one value per line, the
+//! format used by the paper's dataset suite / Grammarviz) or CSV columns.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::series::TimeSeries;
+
+/// Load a series from a text file: one f64 per line; blank lines and lines
+/// starting with `#` are skipped. For CSV/TSV rows, `column` selects the
+/// field (split on `,`, `;`, tab, or whitespace).
+pub fn load_text(path: &Path, column: usize) -> Result<TimeSeries> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "series".to_string());
+    let mut points = Vec::new();
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = trimmed
+            .split(|c: char| c == ',' || c == ';' || c.is_whitespace())
+            .filter(|t| !t.is_empty())
+            .collect();
+        let Some(field) = fields.get(column) else {
+            bail!(
+                "{}:{}: no column {} in {:?}",
+                path.display(),
+                lineno + 1,
+                column,
+                trimmed
+            );
+        };
+        let v: f64 = field.parse().with_context(|| {
+            format!("{}:{}: bad number {:?}", path.display(), lineno + 1, field)
+        })?;
+        points.push(v);
+    }
+    if points.is_empty() {
+        bail!("{}: no data points", path.display());
+    }
+    Ok(TimeSeries::new(name, points))
+}
+
+/// Save a series as one value per line (round-trips with [`load_text`]).
+pub fn save_text(ts: &TimeSeries, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?,
+    );
+    writeln!(f, "# {}", ts.name)?;
+    for p in &ts.points {
+        writeln!(f, "{p}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("hstime_io_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ts = TimeSeries::new("rt", vec![1.0, -2.5, 3.25e-3]);
+        let path = tmp("roundtrip.txt");
+        save_text(&ts, &path).unwrap();
+        let back = load_text(&path, 0).unwrap();
+        assert_eq!(back.points, ts.points);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn csv_column_selection() {
+        let path = tmp("cols.csv");
+        std::fs::write(&path, "1,10\n2,20\n# comment\n3,30\n").unwrap();
+        let c0 = load_text(&path, 0).unwrap();
+        let c1 = load_text(&path, 1).unwrap();
+        assert_eq!(c0.points, vec![1.0, 2.0, 3.0]);
+        assert_eq!(c1.points, vec![10.0, 20.0, 30.0]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn missing_column_is_error() {
+        let path = tmp("missing.csv");
+        std::fs::write(&path, "1\n").unwrap();
+        assert!(load_text(&path, 3).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn empty_file_is_error() {
+        let path = tmp("empty.txt");
+        std::fs::write(&path, "# only comments\n\n").unwrap();
+        assert!(load_text(&path, 0).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,12 @@
+//! Time-series substrate: containers, rolling statistics, I/O, synthetic
+//! generators, and the paper-dataset registry.
+
+pub mod datasets;
+pub mod generators;
+pub mod io;
+pub mod plot;
+pub mod series;
+pub mod stats;
+
+pub use series::TimeSeries;
+pub use stats::SeqStats;

@@ -1,0 +1,134 @@
+//! ASCII plotting for terminals: series strips, nnd-profile plots with
+//! discord markers, and log-x speedup curves. Used by the CLI (`hst plot`)
+//! and the examples; keeps the repo dependency-free while still giving
+//! the Fig. 2/3/5-style visuals.
+
+use crate::discord::Discord;
+use crate::ts::TimeSeries;
+
+/// Downsample `values` into `width` columns (mean per bucket).
+fn buckets(values: &[f64], width: usize) -> Vec<f64> {
+    assert!(width > 0);
+    let n = values.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    (0..width.min(n))
+        .map(|c| {
+            let lo = c * n / width.min(n);
+            let hi = ((c + 1) * n / width.min(n)).max(lo + 1);
+            values[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+        })
+        .collect()
+}
+
+/// Render a series as a `height`-row ASCII strip.
+pub fn plot_series(ts: &TimeSeries, width: usize, height: usize) -> String {
+    plot_values(&ts.points, width, height, &format!("{} ({} pts)", ts.name, ts.n_total()))
+}
+
+/// Render any value vector (e.g. an nnd profile).
+pub fn plot_values(values: &[f64], width: usize, height: usize, title: &str) -> String {
+    let height = height.max(2);
+    let cols = buckets(
+        &values
+            .iter()
+            .map(|v| if v.is_finite() { *v } else { 0.0 })
+            .collect::<Vec<_>>(),
+        width,
+    );
+    if cols.is_empty() {
+        return format!("{title}\n(empty)\n");
+    }
+    let lo = cols.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = cols.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let mut grid = vec![vec![' '; cols.len()]; height];
+    for (c, v) in cols.iter().enumerate() {
+        let r = (((v - lo) / span) * (height - 1) as f64).round() as usize;
+        for (row, row_cells) in grid.iter_mut().enumerate() {
+            let level = height - 1 - row; // top row = max
+            if level == r {
+                row_cells[c] = '*';
+            } else if level < r {
+                row_cells[c] = '.';
+            }
+        }
+    }
+    let mut out = format!("{title}  [min {lo:.3}, max {hi:.3}]\n");
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(cols.len()));
+    out.push('\n');
+    out
+}
+
+/// Profile plot with `^` markers under discord positions.
+pub fn plot_profile_with_discords(
+    profile: &[f64],
+    discords: &[Discord],
+    width: usize,
+    height: usize,
+) -> String {
+    let mut out = plot_values(profile, width, height, "nnd profile");
+    let n = profile.len().max(1);
+    let w = width.min(n);
+    let mut marks = vec![' '; w];
+    for d in discords {
+        let c = d.position * w / n;
+        marks[c.min(w - 1)] = '^';
+    }
+    out.push(' ');
+    out.extend(marks);
+    out.push_str("  (^ = discord)\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ts::generators;
+    use crate::ts::series::IntoSeries;
+
+    #[test]
+    fn plot_has_expected_shape() {
+        let ts = generators::sine_with_noise(1_000, 0.1, 1).into_series("sine");
+        let p = plot_series(&ts, 60, 8);
+        let lines: Vec<&str> = p.lines().collect();
+        assert_eq!(lines.len(), 1 + 8 + 1); // title + rows + axis
+        assert!(lines[0].contains("sine"));
+        assert!(lines.iter().any(|l| l.contains('*')));
+        assert!(lines.last().unwrap().starts_with('+'));
+    }
+
+    #[test]
+    fn constant_series_does_not_divide_by_zero() {
+        let ts = crate::ts::TimeSeries::new("flat", vec![2.0; 100]);
+        let p = plot_series(&ts, 30, 4);
+        assert!(p.contains("flat"));
+    }
+
+    #[test]
+    fn discord_markers_land_in_range() {
+        let profile: Vec<f64> = (0..500).map(|i| (i as f64 * 0.1).sin()).collect();
+        let ds = vec![
+            Discord { position: 0, nnd: 1.0, neighbor: 100 },
+            Discord { position: 499, nnd: 0.9, neighbor: 10 },
+        ];
+        let p = plot_profile_with_discords(&profile, &ds, 50, 6);
+        let marker_line = p.lines().last().unwrap();
+        assert!(marker_line.contains('^'));
+    }
+
+    #[test]
+    fn handles_short_input() {
+        let p = plot_values(&[1.0, 2.0], 80, 5, "two");
+        assert!(p.contains("two"));
+        let p = plot_values(&[], 80, 5, "none");
+        assert!(p.contains("empty"));
+    }
+}

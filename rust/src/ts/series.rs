@@ -1,0 +1,114 @@
+//! The core time-series container.
+
+/// An in-memory univariate time series.
+///
+/// Terminology follows the paper (Sec. 2.1): the series has `n_total()`
+/// points; a *sequence* of length `s` starting at time `k` is the window
+/// `points[k..k + s]`; there are `num_sequences(s) = n_total - s + 1`
+/// complete sequences.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimeSeries {
+    /// Human-readable identifier (dataset name).
+    pub name: String,
+    /// The raw points p_j.
+    pub points: Vec<f64>,
+}
+
+impl TimeSeries {
+    /// Build a series from raw points.
+    pub fn new(name: impl Into<String>, points: Vec<f64>) -> TimeSeries {
+        TimeSeries {
+            name: name.into(),
+            points,
+        }
+    }
+
+    /// Total number of points N_tot.
+    #[inline]
+    pub fn n_total(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Number of complete sequences of length `s`: N = N_tot - s + 1.
+    /// Returns 0 when the series is shorter than `s`.
+    #[inline]
+    pub fn num_sequences(&self, s: usize) -> usize {
+        if self.points.len() >= s {
+            self.points.len() - s + 1
+        } else {
+            0
+        }
+    }
+
+    /// Borrow the sequence starting at `k` (length `s`).
+    #[inline]
+    pub fn seq(&self, k: usize, s: usize) -> &[f64] {
+        &self.points[k..k + s]
+    }
+
+    /// Truncate to the first `n` points (paper Sec. 4.5 slices ECG 300).
+    pub fn slice_prefix(&self, n: usize) -> TimeSeries {
+        let n = n.min(self.points.len());
+        TimeSeries {
+            name: format!("{}[:{}]", self.name, n),
+            points: self.points[..n].to_vec(),
+        }
+    }
+
+    /// Min/max of the raw points (NaN-free input assumed).
+    pub fn min_max(&self) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &p in &self.points {
+            lo = lo.min(p);
+            hi = hi.max(p);
+        }
+        (lo, hi)
+    }
+}
+
+/// Helper trait so generators can end with `.into_series(name)`.
+pub trait IntoSeries {
+    fn into_series(self, name: &str) -> TimeSeries;
+}
+
+impl IntoSeries for Vec<f64> {
+    fn into_series(self, name: &str) -> TimeSeries {
+        TimeSeries::new(name, self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequence_counting() {
+        let ts = TimeSeries::new("t", vec![0.0; 100]);
+        assert_eq!(ts.n_total(), 100);
+        assert_eq!(ts.num_sequences(10), 91);
+        assert_eq!(ts.num_sequences(100), 1);
+        assert_eq!(ts.num_sequences(101), 0);
+    }
+
+    #[test]
+    fn seq_borrows_window() {
+        let ts = TimeSeries::new("t", (0..10).map(|i| i as f64).collect());
+        assert_eq!(ts.seq(3, 4), &[3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn slice_prefix_truncates() {
+        let ts = TimeSeries::new("t", (0..10).map(|i| i as f64).collect());
+        let sl = ts.slice_prefix(4);
+        assert_eq!(sl.points, vec![0.0, 1.0, 2.0, 3.0]);
+        let over = ts.slice_prefix(99);
+        assert_eq!(over.n_total(), 10);
+    }
+
+    #[test]
+    fn min_max() {
+        let ts = TimeSeries::new("t", vec![3.0, -1.0, 2.0]);
+        assert_eq!(ts.min_max(), (-1.0, 3.0));
+    }
+}

@@ -1,0 +1,166 @@
+//! Rolling per-sequence statistics.
+//!
+//! The paper's memory-saving trick (Sec. 2.1, Eq. 2/3): instead of storing
+//! z-normalized copies of every sequence, store each sequence's mean μ_k and
+//! standard deviation σ_k and fold the normalization into the distance
+//! function. Both are computed for all N sequence starts in O(N) from
+//! prefix sums of p and p².
+//!
+//! Numerical note: naive prefix-sum variance cancels catastrophically for
+//! long series with large offsets, so sums are accumulated over points
+//! re-centered by the global mean first (a standard stabilization that keeps
+//! the O(N) cost).
+
+use super::series::TimeSeries;
+
+/// Per-sequence-start rolling mean and standard deviation for a fixed
+/// sequence length `s`.
+#[derive(Debug, Clone)]
+pub struct SeqStats {
+    /// Sequence length the stats were computed for.
+    pub s: usize,
+    /// mean[k] = μ of points[k..k+s]
+    pub mean: Vec<f64>,
+    /// std[k] = population σ of points[k..k+s]; floored at `SIGMA_FLOOR`
+    /// so constant sequences don't divide by zero.
+    pub std: Vec<f64>,
+}
+
+/// Lower bound on σ: constant (or numerically-constant) windows get this
+/// value so z-normalization maps them to the zero vector instead of NaN.
+pub const SIGMA_FLOOR: f64 = 1e-12;
+
+impl SeqStats {
+    /// Compute rolling stats for every complete window of length `s`.
+    pub fn compute(ts: &TimeSeries, s: usize) -> SeqStats {
+        let n = ts.num_sequences(s);
+        assert!(s >= 1, "sequence length must be >= 1");
+        assert!(n > 0, "series shorter than sequence length");
+        let pts = &ts.points;
+
+        // Re-center by the global mean for numerical stability.
+        let g_mean = pts.iter().sum::<f64>() / pts.len() as f64;
+
+        let mut prefix = Vec::with_capacity(pts.len() + 1);
+        let mut prefix_sq = Vec::with_capacity(pts.len() + 1);
+        prefix.push(0.0);
+        prefix_sq.push(0.0);
+        let mut acc = 0.0;
+        let mut acc_sq = 0.0;
+        for &p in pts {
+            let c = p - g_mean;
+            acc += c;
+            acc_sq += c * c;
+            prefix.push(acc);
+            prefix_sq.push(acc_sq);
+        }
+
+        let inv_s = 1.0 / s as f64;
+        let mut mean = Vec::with_capacity(n);
+        let mut std = Vec::with_capacity(n);
+        for k in 0..n {
+            let sum = prefix[k + s] - prefix[k];
+            let sum_sq = prefix_sq[k + s] - prefix_sq[k];
+            let m_c = sum * inv_s; // mean of re-centered window
+            let var = (sum_sq * inv_s - m_c * m_c).max(0.0);
+            mean.push(m_c + g_mean);
+            std.push(var.sqrt().max(SIGMA_FLOOR));
+        }
+        SeqStats { s, mean, std }
+    }
+
+    /// Number of sequence starts covered.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.mean.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.mean.is_empty()
+    }
+
+    /// Z-normalize the sequence starting at `k` into `out` (len `s`).
+    pub fn znorm_into(&self, ts: &TimeSeries, k: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.s);
+        let mu = self.mean[k];
+        let inv_sd = 1.0 / self.std[k];
+        for (o, &p) in out.iter_mut().zip(ts.seq(k, self.s)) {
+            *o = (p - mu) * inv_sd;
+        }
+    }
+
+    /// Allocating variant of [`znorm_into`].
+    pub fn znorm(&self, ts: &TimeSeries, k: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.s];
+        self.znorm_into(ts, k, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_stats(pts: &[f64], k: usize, s: usize) -> (f64, f64) {
+        let w = &pts[k..k + s];
+        let m = w.iter().sum::<f64>() / s as f64;
+        let v = w.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / s as f64;
+        (m, v.sqrt())
+    }
+
+    #[test]
+    fn matches_naive_computation() {
+        let mut rng = crate::util::rng::Rng64::new(3);
+        let pts: Vec<f64> = (0..500).map(|_| rng.normal() * 3.0 + 7.0).collect();
+        let ts = TimeSeries::new("t", pts.clone());
+        let st = SeqStats::compute(&ts, 32);
+        assert_eq!(st.len(), 500 - 32 + 1);
+        for k in [0, 1, 100, 468] {
+            let (m, sd) = naive_stats(&pts, k, 32);
+            assert!((st.mean[k] - m).abs() < 1e-9, "mean k={k}");
+            assert!((st.std[k] - sd).abs() < 1e-9, "std k={k}");
+        }
+    }
+
+    #[test]
+    fn stable_with_large_offset() {
+        // 1e8 offset: naive prefix-of-squares would lose ~16 digits.
+        let mut rng = crate::util::rng::Rng64::new(4);
+        let pts: Vec<f64> = (0..2000).map(|_| 1.0e8 + rng.normal()).collect();
+        let ts = TimeSeries::new("t", pts.clone());
+        let st = SeqStats::compute(&ts, 64);
+        for k in [0, 999, 1936] {
+            let (m, sd) = naive_stats(&pts, k, 64);
+            assert!((st.mean[k] - m).abs() / m.abs() < 1e-12);
+            assert!(
+                (st.std[k] - sd).abs() < 1e-6,
+                "k={k}: {} vs naive {}",
+                st.std[k],
+                sd
+            );
+        }
+    }
+
+    #[test]
+    fn constant_window_gets_floor() {
+        let ts = TimeSeries::new("t", vec![5.0; 100]);
+        let st = SeqStats::compute(&ts, 10);
+        assert!(st.std.iter().all(|&sd| sd == SIGMA_FLOOR));
+        let z = st.znorm(&ts, 0);
+        assert!(z.iter().all(|&v| v == 0.0), "constant -> zero vector");
+    }
+
+    #[test]
+    fn znorm_has_zero_mean_unit_std() {
+        let mut rng = crate::util::rng::Rng64::new(5);
+        let pts: Vec<f64> = (0..200).map(|_| rng.normal() * 2.0 + 3.0).collect();
+        let ts = TimeSeries::new("t", pts);
+        let st = SeqStats::compute(&ts, 50);
+        let z = st.znorm(&ts, 77);
+        let m = z.iter().sum::<f64>() / 50.0;
+        let v = z.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / 50.0;
+        assert!(m.abs() < 1e-10);
+        assert!((v - 1.0).abs() < 1e-10);
+    }
+}

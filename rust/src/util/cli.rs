@@ -1,0 +1,153 @@
+//! Tiny argv parser for the `hst` binary and the bench/example drivers.
+//!
+//! Grammar: `prog <subcommand> [positional...] [--flag] [--key value]`.
+//! `--key=value` is also accepted. Unknown flags are collected so callers
+//! can reject them with a helpful message.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    order: Vec<String>,
+}
+
+pub const FLAG_SET: &str = "true";
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), v.to_string()),
+                    None => {
+                        // value is the next token unless it's another flag
+                        let takes_value = it
+                            .peek()
+                            .map(|n| !n.starts_with("--"))
+                            .unwrap_or(false);
+                        if takes_value {
+                            (rest.to_string(), it.next().unwrap())
+                        } else {
+                            (rest.to_string(), FLAG_SET.to_string())
+                        }
+                    }
+                };
+                out.order.push(key.clone());
+                out.flags.insert(key, val);
+            } else if out.subcommand.is_none() && out.positionals.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects an integer, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects an integer, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects a number, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    /// Flags the caller did not recognize (for strict validation).
+    pub fn unknown_flags(&self, known: &[&str]) -> Vec<String> {
+        self.order
+            .iter()
+            .filter(|k| !known.contains(&k.as_str()))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("discover ecg300 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("discover"));
+        assert_eq!(a.positionals, vec!["ecg300", "extra"]);
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse("table 1 --seed 9 --runs=3 --full");
+        assert_eq!(a.get_u64("seed", 0), 9);
+        assert_eq!(a.get_usize("runs", 1), 3);
+        assert!(a.has("full"));
+        assert!(!a.has("absent"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --verbose --k 10");
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_usize("k", 1), 10);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_or("name", "d"), "d");
+        assert_eq!(a.get_f64("noise", 0.5), 0.5);
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("x --good 1 --oops 2");
+        assert_eq!(a.unknown_flags(&["good"]), vec!["oops".to_string()]);
+    }
+}

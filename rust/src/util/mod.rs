@@ -1,0 +1,14 @@
+//! Small self-contained utilities.
+//!
+//! The offline build environment ships only the `xla` crate's dependency
+//! closure, so the conveniences a networked project would pull from
+//! crates.io (`rand`, `serde_json`, `clap`, `proptest`) are implemented
+//! here from scratch: a seeded xoshiro256++ PRNG, a minimal JSON
+//! reader/writer, a tiny argv parser, summary statistics, and a
+//! generative property-test harness used by `rust/tests/`.
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,166 @@
+//! A small generative property-testing harness (the offline registry has no
+//! `proptest`, so the crate ships its own).
+//!
+//! A property is a closure over a [`Gen`] (a seeded random source with
+//! convenience samplers). [`check`] runs it for `cases` seeds; on failure it
+//! re-runs a deterministic shrink pass over the *size* parameters the
+//! property exposed via [`Gen::size`], then panics with the failing seed so
+//! the case can be replayed exactly.
+
+use crate::util::rng::Rng64;
+
+/// Random source handed to properties.
+pub struct Gen {
+    pub rng: Rng64,
+    pub seed: u64,
+    /// Scale factor in (0, 1]; shrinking lowers it to re-run the property
+    /// on smaller inputs.
+    pub scale: f64,
+}
+
+impl Gen {
+    /// A size in [lo, hi], scaled down during shrinking (never below lo).
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.scale).round() as usize;
+        if span == 0 {
+            lo
+        } else {
+            self.rng.range(lo, lo + span + 1)
+        }
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// Vector of standard-normal samples.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+}
+
+/// Outcome of a property: Ok or a failure message.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` for `cases` deterministic seeds derived from `base_seed`.
+///
+/// Panics (with replay info) on the first failing case after attempting a
+/// 4-step shrink by re-running the same seed at smaller `scale`.
+pub fn check<F>(name: &str, base_seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let run = |scale: f64, prop: &mut F| -> PropResult {
+            let mut g = Gen {
+                rng: Rng64::new(seed),
+                seed,
+                scale,
+            };
+            prop(&mut g)
+        };
+        if let Err(msg) = run(1.0, &mut prop) {
+            // Shrink: same seed, smaller sizes. Report the smallest failure.
+            let mut final_msg = msg;
+            let mut final_scale = 1.0;
+            for &scale in &[0.5, 0.25, 0.1, 0.05] {
+                if let Err(m) = run(scale, &mut prop) {
+                    final_msg = m;
+                    final_scale = scale;
+                }
+            }
+            panic!(
+                "property `{name}` failed (case {case}, seed {seed}, \
+                 scale {final_scale}):\n  {final_msg}\n  \
+                 replay: check(\"{name}\", {base_seed}, ...) case {case}"
+            );
+        }
+    }
+}
+
+/// Assert helper returning PropResult.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always-ok", 1, 25, |g| {
+            count += 1;
+            let n = g.size(1, 100);
+            if n >= 1 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        // 25 cases, one invocation each (no shrink attempts on success)
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_name() {
+        check("fails", 2, 5, |g| {
+            let n = g.size(10, 50);
+            if n < 10 {
+                Ok(())
+            } else {
+                Err(format!("n = {n} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut first: Vec<usize> = Vec::new();
+        check("det-a", 7, 3, |g| {
+            first.push(g.size(0, 1000));
+            Ok(())
+        });
+        let mut second: Vec<usize> = Vec::new();
+        check("det-b", 7, 3, |g| {
+            second.push(g.size(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn shrinking_reduces_size() {
+        let mut g_full = Gen {
+            rng: Rng64::new(3),
+            seed: 3,
+            scale: 1.0,
+        };
+        let mut g_small = Gen {
+            rng: Rng64::new(3),
+            seed: 3,
+            scale: 0.05,
+        };
+        let a = g_full.size(10, 1000);
+        let b = g_small.size(10, 1000);
+        assert!(b <= a, "shrunk size {b} <= full size {a}");
+        assert!(b <= 10 + ((1000 - 10) as f64 * 0.05).round() as usize);
+    }
+}

@@ -1,0 +1,95 @@
+//! Baseline engines (DADD, RRA, SCAMP) against ground truth, plus a smoke
+//! pass over the table harness so every paper experiment stays runnable.
+
+use hstime::algo::{self, dadd::Dadd, Algorithm};
+use hstime::prelude::*;
+use hstime::tables::{self, BenchConfig};
+
+#[test]
+fn scamp_equals_brute_on_every_family() {
+    let cases: Vec<(TimeSeries, usize)> = vec![
+        (generators::ecg_like(1_200, 100, 1, 300).into_series("e"), 80),
+        (generators::respiration_like(1_000, 120, 1, 301).into_series("r"), 96),
+        (generators::sine_with_noise(900, 0.01, 302).into_series("s"), 64),
+    ];
+    for (ts, s) in cases {
+        let params = SearchParams::new(s, 4, 4).with_discords(2);
+        let sc = algo::scamp::Scamp.run(&ts, &params).unwrap();
+        let bf = algo::brute::BruteForce.run(&ts, &params).unwrap();
+        for (a, b) in sc.discords.iter().zip(&bf.discords) {
+            assert!((a.nnd - b.nnd).abs() < 1e-6, "{}", ts.name);
+        }
+    }
+}
+
+#[test]
+fn dadd_r_sensitivity_curve() {
+    // the paper: DADD cost grows as r moves below the exact k-th nnd
+    let ts = generators::ecg_like(2_000, 110, 1, 303).into_series("e");
+    let params = SearchParams::new(96, 4, 4);
+    let truth = algo::brute::BruteForce.run(&ts, &params).unwrap();
+    let r = truth.discords[0].nnd;
+    let mut last_calls = 0u64;
+    for factor in [0.999, 0.9, 0.7] {
+        let rep = Dadd { r: r * factor, page_size: 500 }
+            .run(&ts, &params)
+            .unwrap();
+        assert!((rep.discords[0].nnd - r).abs() < 5e-8, "factor {factor}");
+        assert!(
+            rep.distance_calls >= last_calls,
+            "smaller r should not get cheaper (factor {factor})"
+        );
+        last_calls = rep.distance_calls;
+    }
+}
+
+#[test]
+fn rra_finds_exact_discord_with_counted_calls() {
+    let ts = generators::valve_like(2_000, 160, 1, 304).into_series("v");
+    let params = SearchParams::new(128, 4, 4);
+    let rra = algo::rra::Rra.run(&ts, &params).unwrap();
+    let bf = algo::brute::BruteForce.run(&ts, &params).unwrap();
+    assert!((rra.discords[0].nnd - bf.discords[0].nnd).abs() < 5e-8);
+    assert!(rra.distance_calls > 0);
+    assert!(rra.distance_calls < bf.distance_calls);
+}
+
+#[test]
+fn table_harness_smoke_all_ids() {
+    // every table/figure generator must run end-to-end at smoke scale
+    let cfg = BenchConfig::smoke();
+    for id in tables::ALL_IDS {
+        let gen = tables::by_id(id).unwrap();
+        let t = gen(&cfg);
+        assert!(!t.header.is_empty(), "{id}");
+        assert!(!t.rows.is_empty(), "{id} produced no rows");
+        // renders without panicking and mentions its id
+        let text = t.render();
+        assert!(text.contains(id), "{id}");
+        // json round-trips
+        let j = t.to_json().to_string();
+        assert!(hstime::util::json::Json::parse(&j).is_ok(), "{id}");
+    }
+}
+
+#[test]
+fn table3_orders_by_hotsax_cps() {
+    let cfg = BenchConfig::smoke();
+    let t = tables::table3(&cfg);
+    let col: Vec<f64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+    for w in col.windows(2) {
+        assert!(w[0] <= w[1], "table3 must be sorted by HS cps");
+    }
+}
+
+#[test]
+fn dadd_page_size_does_not_change_result() {
+    let ts = generators::respiration_like(1_600, 130, 1, 305).into_series("r");
+    let params = SearchParams::new(96, 4, 4);
+    let truth = algo::brute::BruteForce.run(&ts, &params).unwrap();
+    let r = truth.discords[0].nnd * 0.999;
+    let a = Dadd { r, page_size: 100 }.run(&ts, &params).unwrap();
+    let b = Dadd { r, page_size: 5_000 }.run(&ts, &params).unwrap();
+    assert_eq!(a.discords[0].position, b.discords[0].position);
+    assert!((a.discords[0].nnd - b.discords[0].nnd).abs() < 1e-12);
+}

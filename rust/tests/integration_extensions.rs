@@ -1,0 +1,139 @@
+//! Integration tests for the extension features (paper Sec. 4.5 / Sec. 5
+//! future work): MERLIN length scans, significance classification,
+//! preSCRIMP, parallel engines, the online monitor, and ASCII plotting —
+//! all through the public API.
+
+use hstime::algo::merlin::Merlin;
+use hstime::algo::parallel::{par_matrix_profile, ParallelScamp};
+use hstime::algo::{self, Algorithm};
+use hstime::discord::significance::SignificanceTest;
+use hstime::prelude::*;
+use hstime::service::online::OnlineMonitor;
+use hstime::ts::{plot, SeqStats};
+
+#[test]
+fn merlin_localizes_an_injected_glitch_across_lengths() {
+    let mut pts = generators::valve_like(3_000, 220, 0, 900);
+    let mut rng = Rng64::new(2);
+    generators::inject(&mut pts, 1_500, 120, generators::Anomaly::Bump, &mut rng);
+    let ts = pts.into_series("v");
+    let (found, _) = Merlin::new(96, 144).with_step(16).run(&ts).unwrap();
+    assert_eq!(found.len(), 4);
+    // at least half the lengths should localize the glitch (at other
+    // lengths a background irregularity may legitimately out-score it)
+    let near = found
+        .iter()
+        .filter(|ld| ld.discord.position.abs_diff(1_500) <= 2 * ld.s)
+        .count();
+    assert!(near >= 2, "only {near}/4 lengths found the glitch");
+    // and every per-length result must be the exact discord
+    for ld in &found {
+        let p = if ld.s % 4 == 0 { 4 } else { 1 };
+        let truth = algo::brute::BruteForce
+            .run(&ts, &SearchParams::new(ld.s, p, 4))
+            .unwrap();
+        assert!(
+            (ld.discord.nnd - truth.discords[0].nnd).abs() < 5e-8,
+            "L={}: merlin {} vs brute {}",
+            ld.s,
+            ld.discord.nnd,
+            truth.discords[0].nnd
+        );
+    }
+    // nnd grows with L (z-norm distances scale with sqrt(L))
+    for w in found.windows(2) {
+        assert!(w[1].discord.nnd + 1e-9 >= w[0].discord.nnd * 0.5);
+    }
+}
+
+#[test]
+fn significance_splits_injected_from_background() {
+    let mut pts = generators::sine_with_noise(2_500, 0.03, 901);
+    let mut rng = Rng64::new(3);
+    generators::inject(&mut pts, 1_200, 80, generators::Anomaly::Invert, &mut rng);
+    let ts = pts.into_series("s");
+    let s = 80;
+    let stats = SeqStats::compute(&ts, s);
+    let (profile, _) = algo::scamp::Scamp::matrix_profile(&ts, &stats);
+    let test = SignificanceTest::fit_default(&profile);
+    let rep = algo::scamp::Scamp
+        .run(&ts, &SearchParams::new(s, 4, 4).with_discords(6))
+        .unwrap();
+    let (sig, ord) = test.split(&rep.discords);
+    assert!(!sig.is_empty(), "injected inversion must be significant");
+    assert!(sig.len() < rep.discords.len(), "not everything is anomalous");
+    assert!(!ord.is_empty());
+}
+
+#[test]
+fn parallel_scamp_agrees_with_serial_and_counts_match() {
+    let ts = generators::ecg_like(2_000, 120, 1, 902).into_series("e");
+    let params = SearchParams::new(96, 4, 4).with_discords(3);
+    let serial = algo::scamp::Scamp.run(&ts, &params).unwrap();
+    let par = ParallelScamp { threads: 4 }.run(&ts, &params).unwrap();
+    assert_eq!(serial.distance_calls, par.distance_calls);
+    for (a, b) in par.discords.iter().zip(&serial.discords) {
+        assert!((a.nnd - b.nnd).abs() < 5e-8);
+    }
+}
+
+#[test]
+fn parallel_profile_is_deterministic_across_thread_counts() {
+    let ts = generators::regime_like(1_500, 250, 1, 903).into_series("g");
+    let stats = SeqStats::compute(&ts, 100);
+    let (p2, _) = par_matrix_profile(&ts, &stats, 2);
+    let (p5, _) = par_matrix_profile(&ts, &stats, 5);
+    for i in 0..p2.len() {
+        assert!((p2.nnd[i] - p5.nnd[i]).abs() < 1e-12, "i={i}");
+    }
+}
+
+#[test]
+fn prescrimp_is_usable_as_hst_warmup_quality_reference() {
+    // preSCRIMP's approximate profile should be a better (tighter) upper
+    // bound than warm-up alone, at comparable extra cost
+    let ts = generators::ecg_like(2_400, 130, 1, 904).into_series("e");
+    let params = SearchParams::new(96, 4, 4);
+    let rep = algo::prescrimp::PreScrimp::default().run(&ts, &params).unwrap();
+    assert!(!rep.discords.is_empty());
+    assert!(rep.distance_calls > 0);
+    let exact = algo::brute::BruteForce.run(&ts, &params).unwrap();
+    // approximate: nnd may exceed the true discord's but never the brute
+    // profile's upper bound semantics
+    assert!(rep.discords[0].nnd + 1e-9 >= exact.discords[0].nnd * 0.5);
+}
+
+#[test]
+fn online_monitor_emits_global_alerts() {
+    let s = 64;
+    let params = SearchParams::new(s, 4, 4);
+    let mut mon = OnlineMonitor::new(params, 1_000, 500);
+    let stream = generators::ecg_like(3_000, 90, 2, 905);
+    let mut alerts = Vec::new();
+    for chunk in stream.chunks(250) {
+        alerts.extend(mon.push(chunk).unwrap());
+    }
+    assert!(!alerts.is_empty());
+    for a in &alerts {
+        assert!(a.global_position < 3_000);
+        assert!(a.nnd.is_finite());
+    }
+}
+
+#[test]
+fn plots_render_for_every_dataset_family() {
+    for d in hstime::ts::datasets::registry().into_iter().take(5) {
+        let ts = d.generate_scaled(32);
+        let p = plot::plot_series(&ts, 72, 8);
+        assert!(p.contains('*'), "{}", d.name);
+    }
+}
+
+#[test]
+fn report_generator_produces_comparable_markdown() {
+    let cfg = hstime::tables::BenchConfig::smoke();
+    let text = hstime::tables::report::generate(&cfg, &["table3", "ablation"]);
+    assert!(text.contains("## table3"));
+    assert!(text.contains("## ablation"));
+    assert!(text.contains("paper expectation"));
+}

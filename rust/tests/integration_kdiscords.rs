@@ -1,0 +1,88 @@
+//! k-discord semantics: ordering, non-overlap, exclusion-zone behavior,
+//! and the carried-over-profile speedup HST claims for k > 1 (Sec. 3.2).
+
+use hstime::algo::{self, Algorithm};
+use hstime::prelude::*;
+
+#[test]
+fn k_discords_match_brute_on_all_engines() {
+    let ts = generators::ecg_like(2_600, 130, 3, 200).into_series("e");
+    let params = SearchParams::new(100, 4, 4).with_discords(5);
+    let brute = algo::brute::BruteForce.run(&ts, &params).unwrap();
+    for name in ["hst", "hotsax"] {
+        let rep = algo::by_name(name).unwrap().run(&ts, &params).unwrap();
+        assert_eq!(rep.discords.len(), brute.discords.len(), "{name}");
+        for (a, b) in rep.discords.iter().zip(&brute.discords) {
+            assert!((a.nnd - b.nnd).abs() < 5e-8, "{name}");
+        }
+    }
+}
+
+#[test]
+fn discords_are_sorted_and_disjoint() {
+    let ts = generators::valve_like(3_000, 200, 2, 201).into_series("v");
+    let params = SearchParams::new(128, 4, 4).with_discords(6);
+    let rep = algo::hst::HstSearch::default().run(&ts, &params).unwrap();
+    assert!(rep.discords.len() >= 3);
+    for w in rep.discords.windows(2) {
+        assert!(w[0].nnd >= w[1].nnd - 1e-12, "sorted by nnd");
+    }
+    for (i, a) in rep.discords.iter().enumerate() {
+        for b in &rep.discords[i + 1..] {
+            assert!(a.position.abs_diff(b.position) >= 128, "non-overlap");
+        }
+    }
+}
+
+#[test]
+fn k_capped_by_series_capacity() {
+    // at most (N/s)+1 non-overlapping discords exist (paper Sec. 4.1)
+    let ts = generators::sine_with_noise(700, 0.3, 202).into_series("s");
+    let s = 64;
+    let params = SearchParams::new(s, 4, 4).with_discords(1_000);
+    let rep = algo::hst::HstSearch::default().run(&ts, &params).unwrap();
+    let n = ts.num_sequences(s);
+    assert!(rep.discords.len() <= n / s + 1);
+    assert!(!rep.discords.is_empty());
+}
+
+#[test]
+fn hst_kth_discord_is_cheaper_than_first() {
+    // the carried-over profile makes later discords cheap (Sec. 3.2):
+    // 10 discords should cost far less than 10 × the first
+    let ts = generators::ecg_like(8_000, 240, 2, 203).into_series("e");
+    let p1 = SearchParams::new(200, 4, 4).with_seed(9);
+    let p10 = p1.clone().with_discords(10);
+    let one = algo::hst::HstSearch::default().run(&ts, &p1).unwrap();
+    let ten = algo::hst::HstSearch::default().run(&ts, &p10).unwrap();
+    assert_eq!(ten.discords.len(), 10);
+    assert!(
+        ten.distance_calls < 6 * one.distance_calls,
+        "10 discords {} should be << 10x first {}",
+        ten.distance_calls,
+        one.distance_calls
+    );
+}
+
+#[test]
+fn neighbors_may_live_inside_exclusion_zones() {
+    // exclusion only restricts candidates, not neighbors: the nnd of the
+    // 2nd discord may legitimately point into the 1st discord's zone
+    let ts = generators::ecg_like(2_400, 120, 2, 204).into_series("e");
+    let params = SearchParams::new(100, 4, 4).with_discords(4);
+    let rep = algo::brute::BruteForce.run(&ts, &params).unwrap();
+    for d in &rep.discords {
+        // neighbor is a valid sequence index and non-self-match
+        assert!(d.neighbor < ts.num_sequences(100));
+        assert!(d.position.abs_diff(d.neighbor) >= 100);
+    }
+}
+
+#[test]
+fn exhausting_discords_stops_gracefully() {
+    let ts = generators::sine_with_noise(400, 0.2, 205).into_series("s");
+    let params = SearchParams::new(64, 4, 4).with_discords(50);
+    let a = algo::hst::HstSearch::default().run(&ts, &params).unwrap();
+    let b = algo::brute::BruteForce.run(&ts, &params).unwrap();
+    assert_eq!(a.discords.len(), b.discords.len());
+}

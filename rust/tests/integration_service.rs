@@ -1,0 +1,141 @@
+//! Full service-path integration: TCP server + JSON-lines protocol +
+//! coordinator + engines, including failure injection (bad JSON, bad
+//! specs, unknown jobs) and concurrent clients.
+
+use std::sync::mpsc;
+
+use hstime::service::{serve, Client};
+use hstime::util::json::Json;
+
+fn start_server(workers: usize, capacity: usize) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        serve("127.0.0.1:0", workers, capacity, move |addr| {
+            tx.send(addr).unwrap();
+        })
+        .expect("serve failed");
+    });
+    (rx.recv().unwrap(), handle)
+}
+
+fn stop_server(addr: std::net::SocketAddr, handle: std::thread::JoinHandle<()>) {
+    if let Ok(mut c) = Client::connect(addr) {
+        let _ = c.shutdown();
+    }
+    // wake the accept loop
+    let _ = std::net::TcpStream::connect(addr);
+    let _ = handle.join();
+}
+
+fn submit_req(dataset: &str, algo: &str, s: usize, k: usize) -> Json {
+    Json::obj()
+        .set("cmd", "submit")
+        .set("dataset", dataset)
+        .set("algo", algo)
+        .set("scale_div", 8u64)
+        .set(
+            "params",
+            Json::obj().set("s", s).set("p", 4u64).set("alphabet", 4u64).set("k", k),
+        )
+}
+
+#[test]
+fn submit_wait_roundtrip() {
+    let (addr, handle) = start_server(2, 16);
+    let mut client = Client::connect(addr).unwrap();
+    let job = client
+        .submit(submit_req("synthetic:noise=0.3,n=2000,seed=3", "hst", 64, 2))
+        .unwrap();
+    let reply = client.wait(job).unwrap();
+    assert_eq!(reply.get("state").unwrap().as_str(), Some("done"));
+    let report = reply.get("report").unwrap();
+    assert_eq!(report.get("algo").unwrap().as_str(), Some("hst"));
+    assert!(report.get("cps").unwrap().as_f64().unwrap() >= 2.0);
+    let discords = report.get("discords").unwrap().as_arr().unwrap();
+    assert_eq!(discords.len(), 2);
+    stop_server(addr, handle);
+}
+
+#[test]
+fn malformed_requests_are_rejected_not_fatal() {
+    let (addr, handle) = start_server(1, 8);
+    let mut client = Client::connect(addr).unwrap();
+    // raw garbage
+    let r = client.call(&Json::Str("{not json".into())).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    // unknown command
+    let r = client.call(&Json::obj().set("cmd", "frobnicate")).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    // submit without params
+    let r = client
+        .call(&Json::obj().set("cmd", "submit").set("dataset", "ECG 15"))
+        .unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    // invalid sax params (P does not divide s)
+    let bad = Json::obj()
+        .set("cmd", "submit")
+        .set("dataset", "ECG 15")
+        .set("params", Json::obj().set("s", 100u64).set("p", 3u64));
+    let r = client.call(&bad).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    // status of a job that does not exist
+    let r = client
+        .call(&Json::obj().set("cmd", "status").set("job", 999u64))
+        .unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    // the server is still alive after all that
+    let job = client
+        .submit(submit_req("synthetic:noise=0.5,n=1200,seed=1", "hotsax", 64, 1))
+        .unwrap();
+    let reply = client.wait(job).unwrap();
+    assert_eq!(reply.get("state").unwrap().as_str(), Some("done"));
+    stop_server(addr, handle);
+}
+
+#[test]
+fn failed_job_reports_error_state() {
+    let (addr, handle) = start_server(1, 8);
+    let mut client = Client::connect(addr).unwrap();
+    let job = client
+        .submit(submit_req("unknown-dataset-xyz", "hst", 64, 1))
+        .unwrap();
+    let reply = client.wait(job).unwrap();
+    assert_eq!(reply.get("state").unwrap().as_str(), Some("failed"));
+    assert!(reply
+        .get("error")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("unknown dataset"));
+    stop_server(addr, handle);
+}
+
+#[test]
+fn concurrent_clients_share_the_pool() {
+    let (addr, handle) = start_server(3, 32);
+    let mut joins = Vec::new();
+    for t in 0..4 {
+        joins.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            let job = client
+                .submit(submit_req(
+                    &format!("synthetic:noise=0.4,n=1500,seed={t}"),
+                    "hst",
+                    64,
+                    1,
+                ))
+                .unwrap();
+            let reply = client.wait(job).unwrap();
+            assert_eq!(reply.get("state").unwrap().as_str(), Some("done"));
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    // list shows all four jobs done
+    let mut client = Client::connect(addr).unwrap();
+    let listed = client.call(&Json::obj().set("cmd", "list")).unwrap();
+    let jobs = listed.get("jobs").unwrap().as_arr().unwrap();
+    assert!(jobs.len() >= 4);
+    stop_server(addr, handle);
+}

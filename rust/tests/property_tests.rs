@@ -1,0 +1,263 @@
+//! Generative property tests over the invariants listed in DESIGN.md,
+//! using the in-repo harness (`hstime::util::proptest`) — seeded random
+//! inputs, automatic size shrinking on failure.
+
+use hstime::algo::{self, Algorithm};
+use hstime::config::{SaxParams, SearchParams};
+use hstime::dist::{CountingDistance, DistanceKind};
+use hstime::prelude::*;
+use hstime::prop_assert;
+use hstime::sax::{breakpoints, mindist, SaxIndex};
+use hstime::ts::SeqStats;
+use hstime::util::proptest::{check, Gen};
+
+/// Random series from a random generator family.
+fn random_series(g: &mut Gen, n: usize) -> TimeSeries {
+    let fam = g.rng.below(5);
+    let seed = g.rng.next_u64();
+    let period = g.size(40, 200);
+    let pts = match fam {
+        0 => generators::ecg_like(n, period, 1, seed),
+        1 => generators::respiration_like(n, period, 1, seed),
+        2 => generators::valve_like(n, period, 1, seed),
+        3 => generators::sine_with_noise(n, g.f64_in(0.0001, 2.0), seed),
+        _ => generators::random_walk(n, 0.5, seed),
+    };
+    TimeSeries::new(format!("prop-fam{fam}"), pts)
+}
+
+/// A random valid (s, P, alphabet).
+fn random_params(g: &mut Gen) -> SaxParams {
+    let p = *g.choose(&[2usize, 4, 5, 8]);
+    let s = p * g.size(8, 32);
+    let alphabet = g.size(3, 6);
+    SaxParams { s, p, alphabet }
+}
+
+#[test]
+fn prop_hst_exactness_vs_brute() {
+    check("hst==brute", 11, 12, |g| {
+        let sax = random_params(g);
+        let n = sax.s * g.size(6, 14);
+        let ts = random_series(g, n);
+        let k = g.size(1, 3);
+        let params = SearchParams {
+            sax,
+            k,
+            seed: g.rng.next_u64(),
+            znormalize: true,
+            allow_self_match: false,
+        };
+        let hst = algo::hst::HstSearch::default().run(&ts, &params).unwrap();
+        let bf = algo::brute::BruteForce.run(&ts, &params).unwrap();
+        prop_assert!(
+            hst.discords.len() == bf.discords.len(),
+            "count {} vs {}",
+            hst.discords.len(),
+            bf.discords.len()
+        );
+        for (a, b) in hst.discords.iter().zip(&bf.discords) {
+            prop_assert!(
+                (a.nnd - b.nnd).abs() < 5e-8,
+                "nnd {} vs {} (pos {} vs {}) on {} s={} P={} a={} k={}",
+                a.nnd,
+                b.nnd,
+                a.position,
+                b.position,
+                ts.name,
+                sax.s,
+                sax.p,
+                sax.alphabet,
+                k
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_warmup_profile_upper_bounds_exact() {
+    check("warmup-upper-bound", 13, 10, |g| {
+        let sax = random_params(g);
+        let n = sax.s * g.size(5, 10);
+        let ts = random_series(g, n);
+        let stats = SeqStats::compute(&ts, sax.s);
+        let idx = SaxIndex::build(&ts, &stats, &sax);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        let mut profile = hstime::discord::NndProfile::new(idx.len());
+        let mut rng = Rng64::new(g.rng.next_u64());
+        algo::hst::warmup::warmup(&dist, &idx, &mut profile, sax.s, false, &mut rng);
+        algo::hst::topology::short_range(&dist, &mut profile, idx.len(), sax.s, false);
+        let params = SearchParams {
+            sax,
+            k: 1,
+            seed: 0,
+            znormalize: true,
+            allow_self_match: false,
+        };
+        let exact = algo::brute::BruteForce::exact_profile(&ts, &stats, &params, &dist);
+        for i in 0..idx.len() {
+            prop_assert!(
+                profile.nnd[i] >= exact.nnd[i] - 5e-8,
+                "i={i}: approx {} < exact {}",
+                profile.nnd[i],
+                exact.nnd[i]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sax_mindist_lower_bounds_distance() {
+    check("mindist-lower-bound", 17, 15, |g| {
+        let sax = random_params(g);
+        let n = sax.s * g.size(5, 9);
+        let ts = random_series(g, n);
+        let stats = SeqStats::compute(&ts, sax.s);
+        let idx = SaxIndex::build(&ts, &stats, &sax);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        let table = mindist::cell_table(sax.alphabet);
+        let nseq = idx.len();
+        for _ in 0..30 {
+            let i = g.rng.below(nseq);
+            let j = g.rng.below(nseq);
+            if i.abs_diff(j) < sax.s {
+                continue;
+            }
+            let lb = mindist::mindist(&idx.words[i], &idx.words[j], sax.s, &table);
+            let d = dist.dist(i, j);
+            prop_assert!(
+                lb <= d + 1e-6,
+                "MINDIST {} > d {} for ({i},{j}) s={} P={} a={}",
+                lb,
+                d,
+                sax.s,
+                sax.p,
+                sax.alphabet
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_distance_is_metric_like() {
+    check("distance-metric", 19, 10, |g| {
+        let s = 16 * g.size(2, 8);
+        let n = s * 8;
+        let ts = random_series(g, n);
+        let stats = SeqStats::compute(&ts, s);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        let nseq = stats.len();
+        for _ in 0..20 {
+            let i = g.rng.below(nseq);
+            let j = g.rng.below(nseq);
+            let d_ij = dist.dist(i, j);
+            prop_assert!(d_ij >= 0.0, "negative distance");
+            prop_assert!(
+                (d_ij - dist.dist(j, i)).abs() < 5e-8,
+                "asymmetric at ({i},{j})"
+            );
+            // z-normalized distance is bounded by 2*sqrt(s)
+            prop_assert!(
+                d_ij <= 2.0 * (s as f64).sqrt() + 1e-6,
+                "d {} exceeds bound for s={}",
+                d_ij,
+                s
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scamp_profile_equals_brute() {
+    check("scamp==brute-profile", 23, 8, |g| {
+        let s = 8 * g.size(4, 12);
+        let n = s * g.size(5, 9);
+        let ts = random_series(g, n);
+        let stats = SeqStats::compute(&ts, s);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        let params = SearchParams::new(s, 8, 4);
+        let exact = algo::brute::BruteForce::exact_profile(&ts, &stats, &params, &dist);
+        let (mp, _) = algo::scamp::Scamp::matrix_profile(&ts, &stats);
+        for i in 0..mp.len() {
+            prop_assert!(
+                (mp.nnd[i] - exact.nnd[i]).abs() < 1e-5,
+                "i={i}: {} vs {}",
+                mp.nnd[i],
+                exact.nnd[i]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cps_bounds() {
+    check("cps-bounds", 29, 10, |g| {
+        let sax = random_params(g);
+        let n = sax.s * g.size(6, 12);
+        let ts = random_series(g, n);
+        let params = SearchParams {
+            sax,
+            k: 1,
+            seed: g.rng.next_u64(),
+            znormalize: true,
+            allow_self_match: false,
+        };
+        let rep = algo::hst::HstSearch::default().run(&ts, &params).unwrap();
+        let c = rep.cps();
+        // floor: warm-up+short-range ≈ 2 calls/seq; ceiling: brute force
+        prop_assert!(c >= 0.5, "cps {} suspiciously low", c);
+        prop_assert!(
+            c <= rep.n_sequences as f64,
+            "cps {} above brute-force ceiling",
+            c
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_breakpoints_partition_is_equiprobable() {
+    check("breakpoint-partition", 31, 5, |g| {
+        let a = g.size(2, 12);
+        let beta = breakpoints::breakpoints(a);
+        // sampling the standard normal must land ~uniformly in the cells
+        let mut counts = vec![0usize; a];
+        let samples = 20_000;
+        for _ in 0..samples {
+            let x = g.rng.normal();
+            counts[breakpoints::symbolize(x, &beta) as usize] += 1;
+        }
+        let expect = samples as f64 / a as f64;
+        for (cell, &c) in counts.iter().enumerate() {
+            prop_assert!(
+                (c as f64 - expect).abs() < 5.0 * expect.sqrt() + 0.02 * expect,
+                "cell {cell}/{a}: {c} vs expected {expect}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_reports() {
+    check("report-json-roundtrip", 37, 8, |g| {
+        let s = 16 * g.size(2, 6);
+        let ts = random_series(g, s * 8);
+        let params = SearchParams::new(s, 4, 4).with_discords(g.size(1, 3));
+        let rep = algo::hst::HstSearch::default().run(&ts, &params).unwrap();
+        let j = rep.to_json().to_string();
+        let back = hstime::util::json::Json::parse(&j)
+            .map_err(|e| format!("unparseable report: {e}"))?;
+        prop_assert!(
+            back.get("distance_calls").and_then(|v| v.as_u64())
+                == Some(rep.distance_calls),
+            "calls lost in roundtrip"
+        );
+        Ok(())
+    });
+}
