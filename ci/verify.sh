@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Full local verification for the hstime workspace.
+#
+# Tier-1 (the driver's gate) is just:
+#     cargo build --release && cargo test -q
+# This script runs that plus the documentation/lint gates this repo holds
+# itself to. Run from the repository root. Offline-safe: the default
+# feature set depends only on `anyhow`, and the `pjrt` feature resolves
+# against the in-repo xla stub.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+step() { printf '\n==> %s\n' "$*"; }
+
+step "tier-1: cargo build --release"
+cargo build --release
+
+step "tier-1: cargo test -q (default features)"
+cargo test -q
+
+step "doctests: cargo test --doc"
+cargo test -q --doc
+
+step "feature matrix: compile + tests with --features pjrt (xla stub)"
+cargo test -q --features pjrt
+
+step "clippy (all targets, warnings are errors)"
+cargo clippy --all-targets -- -D warnings
+
+step "clippy with --features pjrt (covers the gated runtime/xla code)"
+cargo clippy --all-targets --features pjrt -- -D warnings
+
+step "docs must build warning-free"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+step "bench targets compile"
+cargo build --release --benches
+
+echo
+echo "verify: all gates passed"

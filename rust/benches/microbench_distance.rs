@@ -6,7 +6,6 @@
 use hstime::bench::harness::{bench_fn, black_box, fmt_secs};
 use hstime::dist::{CountingDistance, DistanceKind};
 use hstime::prelude::*;
-use hstime::runtime::{ArtifactSet, PreparedSeqs};
 use hstime::sax::SaxIndex;
 use hstime::ts::SeqStats;
 
@@ -79,6 +78,20 @@ fn main() {
         });
         println!("{}", r.report_line());
     }
+
+    xla_benches(&ts, s);
+}
+
+/// XLA-side microbenchmarks: need the `pjrt` feature *and* artifacts.
+#[cfg(not(feature = "pjrt"))]
+fn xla_benches(_ts: &TimeSeries, _s: usize) {
+    println!("\n== XLA batched engines ==");
+    println!("skipped: built without the `pjrt` feature");
+}
+
+#[cfg(feature = "pjrt")]
+fn xla_benches(ts: &TimeSeries, s: usize) {
+    use hstime::runtime::{ArtifactSet, PreparedSeqs};
 
     println!("\n== XLA batched engines (requires `make artifacts`) ==");
     match ArtifactSet::load_default() {

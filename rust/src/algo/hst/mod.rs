@@ -13,7 +13,8 @@
 //!    descending order of (moving-averaged) approximate nnd, and the
 //!    remaining order is re-sorted every time a good discord candidate is
 //!    confirmed.
-//! 4. **Long-range time topology** ([`topology::long_range`]): after a
+//! 4. **Long-range time topology** ([`topology::long_range_forw`] /
+//!    [`topology::long_range_back`]): after a
 //!    candidate's clarification, its ≤ s time-neighbors (the rest of the
 //!    nnd-profile *peak*) get their nnds lowered with ≤ 2s targeted calls,
 //!    levelling the peak without independent inner loops.
@@ -89,6 +90,7 @@ impl ScanOrder {
 /// profile maintenance): same-cluster first, then remaining clusters from
 /// smallest to biggest. Returns `true` if `i` survived — in which case
 /// `profile.nnd[i]` is its *exact* nnd.
+#[allow(clippy::too_many_arguments)]
 fn minimize(
     i: usize,
     dist: &CountingDistance,

@@ -38,8 +38,9 @@ pub struct LengthDiscord {
 /// MERLIN driver over our DADD engine.
 #[derive(Debug, Clone)]
 pub struct Merlin {
-    /// Inclusive length range to scan.
+    /// Smallest discord length scanned (inclusive).
     pub min_len: usize,
+    /// Largest discord length scanned (inclusive).
     pub max_len: usize,
     /// Step between scanned lengths (1 in the original; larger steps make
     /// coarse scans cheap).
@@ -47,6 +48,7 @@ pub struct Merlin {
 }
 
 impl Merlin {
+    /// Scan every length in `[min_len, max_len]` (step 1).
     pub fn new(min_len: usize, max_len: usize) -> Merlin {
         Merlin {
             min_len,
@@ -55,6 +57,7 @@ impl Merlin {
         }
     }
 
+    /// Coarser scan: only every `step`-th length.
     pub fn with_step(mut self, step: usize) -> Merlin {
         self.step = step.max(1);
         self

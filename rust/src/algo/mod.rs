@@ -54,6 +54,7 @@ impl SearchReport {
         )
     }
 
+    /// Serialize for reports and the service protocol.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         Json::obj()

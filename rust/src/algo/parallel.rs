@@ -101,16 +101,10 @@ pub fn par_matrix_profile(
 }
 
 /// Multi-threaded SCAMP engine.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy)]
 pub struct ParallelScamp {
-    /// Worker threads (0 = available parallelism).
+    /// Worker threads (0, the default = available parallelism).
     pub threads: usize,
-}
-
-impl Default for ParallelScamp {
-    fn default() -> ParallelScamp {
-        ParallelScamp { threads: 0 }
-    }
 }
 
 impl ParallelScamp {

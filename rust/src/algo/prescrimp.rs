@@ -22,17 +22,11 @@ use crate::ts::{SeqStats, TimeSeries};
 use super::{brute::BruteForce, Algorithm, SearchReport};
 
 /// The preSCRIMP engine.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Default, Clone, Copy)]
 pub struct PreScrimp {
     /// Sampling stride (in sequences); the original uses s/4.
-    /// 0 = auto (s/4).
+    /// 0 (the default) = auto (s/4).
     pub stride: usize,
-}
-
-impl Default for PreScrimp {
-    fn default() -> PreScrimp {
-        PreScrimp { stride: 0 }
-    }
 }
 
 impl PreScrimp {

@@ -9,8 +9,11 @@ use crate::util::stats::Summary;
 /// Result of timing one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Case label, as printed in the report line.
     pub name: String,
+    /// Measured iterations (excluding warmup).
     pub iters: usize,
+    /// Timing statistics over the measured iterations, in seconds.
     pub summary: Summary,
 }
 
@@ -28,6 +31,7 @@ impl BenchResult {
         )
     }
 
+    /// Mean wall-clock seconds per iteration.
     pub fn mean_secs(&self) -> f64 {
         self.summary.mean
     }

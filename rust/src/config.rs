@@ -15,12 +15,15 @@ pub struct SaxParams {
 }
 
 impl SaxParams {
+    /// Build and validate; panics on invalid combinations (use
+    /// [`validate`](Self::validate) for fallible construction).
     pub fn new(s: usize, p: usize, alphabet: usize) -> SaxParams {
         let sp = SaxParams { s, p, alphabet };
         sp.validate().expect("invalid SAX params");
         sp
     }
 
+    /// Check the paper's constraints: s > 0, P divides s, alphabet 2..=20.
     pub fn validate(&self) -> Result<(), String> {
         if self.s == 0 {
             return Err("s must be > 0".into());
@@ -38,6 +41,7 @@ impl SaxParams {
 /// Full search request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SearchParams {
+    /// SAX discretization parameters (s, P, alphabet).
     pub sax: SaxParams,
     /// How many discords to report (k).
     pub k: usize,
@@ -62,11 +66,13 @@ impl SearchParams {
         }
     }
 
+    /// Set the number of discords to report.
     pub fn with_discords(mut self, k: usize) -> SearchParams {
         self.k = k;
         self
     }
 
+    /// Set the seed for the pseudo-random search-order choices.
     pub fn with_seed(mut self, seed: u64) -> SearchParams {
         self.seed = seed;
         self

@@ -20,6 +20,7 @@ pub struct Discord {
 }
 
 impl Discord {
+    /// Serialize for reports and the service protocol.
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("position", self.position)
@@ -40,10 +41,12 @@ pub struct ExclusionZones {
 }
 
 impl ExclusionZones {
+    /// No zones yet (before the first discord is found).
     pub fn new() -> ExclusionZones {
         ExclusionZones { zones: Vec::new() }
     }
 
+    /// Exclude the sequence of length `s` starting at `position`.
     pub fn add(&mut self, position: usize, s: usize) {
         self.zones.push((position, s));
     }
@@ -58,10 +61,12 @@ impl ExclusionZones {
         })
     }
 
+    /// Number of recorded zones.
     pub fn len(&self) -> usize {
         self.zones.len()
     }
 
+    /// Whether no zone has been recorded.
     pub fn is_empty(&self) -> bool {
         self.zones.is_empty()
     }
@@ -85,6 +90,7 @@ pub const NND_INIT: f64 = f64::INFINITY;
 pub const NO_NEIGHBOR: usize = usize::MAX;
 
 impl NndProfile {
+    /// Fresh profile: every entry at the ∞ sentinel, no neighbors.
     pub fn new(n: usize) -> NndProfile {
         NndProfile {
             nnd: vec![NND_INIT; n],
@@ -92,10 +98,12 @@ impl NndProfile {
         }
     }
 
+    /// Number of sequences covered.
     pub fn len(&self) -> usize {
         self.nnd.len()
     }
 
+    /// Whether the profile covers no sequences.
     pub fn is_empty(&self) -> bool {
         self.nnd.is_empty()
     }
@@ -138,8 +146,7 @@ impl NndProfile {
             }
             let mut acc = 0.0;
             let mut cnt = 0usize;
-            for j in (i - half)..=(i + half) {
-                let v = self.nnd[j];
+            for &v in &self.nnd[i - half..=i + half] {
                 if v.is_finite() {
                     acc += v;
                     cnt += 1;

@@ -1,0 +1,277 @@
+//! Sequence-distance backends.
+//!
+//! The distance function is the paper's unit of cost: every engine reports
+//! how many times it was called, and every comparison (Tables 1–7) is a
+//! comparison of call counts. This module supplies:
+//!
+//! * [`CountingDistance`] — the scalar fallback backend, always compiled.
+//!   It folds z-normalization into the distance loop using the rolling
+//!   (μ, σ) of [`SeqStats`](crate::ts::SeqStats) (paper Sec. 2.1, Eq. 2),
+//!   supports early abandoning at a cutoff, and counts calls through a
+//!   `Cell` (deliberately `!Sync`: parallel engines give each worker its
+//!   own counter and sum afterwards, keeping the accounting exact).
+//! * `xla_engine` *(requires the `pjrt` cargo feature)* — the batched
+//!   backend that evaluates distance chunks through the AOT-compiled XLA
+//!   artifacts of [`crate::runtime`].
+//! * [`Backend`] / [`active_backend`] — which of the two this build
+//!   prefers for batch work.
+//!
+//! Exactness contract (every engine relies on it): whenever the true
+//! distance is **below** the cutoff, [`CountingDistance::dist_early`]
+//! returns the exact value, bit-identical to [`CountingDistance::dist`] —
+//! the accumulation order never changes, abandoning only skips work once
+//! the partial sum already proves `d >= cutoff`.
+
+#[cfg(feature = "pjrt")]
+pub mod xla_engine;
+
+use std::cell::Cell;
+
+use crate::ts::{SeqStats, TimeSeries};
+
+/// The per-sequence rolling statistics the z-normalized distance is
+/// defined over (alias of [`crate::ts::SeqStats`], re-exported here
+/// because the distance backends are its primary consumer).
+pub use crate::ts::SeqStats as ZnormStats;
+
+/// Which sequence distance to compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DistanceKind {
+    /// Euclidean distance between z-normalized sequences (paper default).
+    Znorm,
+    /// Euclidean distance between raw sequences (the Table 7 DADD
+    /// protocol).
+    Raw,
+}
+
+/// Distance-evaluation backends a build may provide.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// The pure-Rust scalar engine: always available, the fallback.
+    Scalar,
+    /// XLA artifacts executed through PJRT (needs the `pjrt` feature and
+    /// `make artifacts`).
+    XlaPjrt,
+}
+
+/// The batch backend this build prefers: [`Backend::XlaPjrt`] when
+/// compiled with the `pjrt` feature, otherwise the scalar fallback.
+pub fn active_backend() -> Backend {
+    if cfg!(feature = "pjrt") {
+        Backend::XlaPjrt
+    } else {
+        Backend::Scalar
+    }
+}
+
+/// Partial sums are checked against the cutoff once per this many points:
+/// often enough to abandon early, rarely enough to stay out of the way of
+/// the accumulation loop.
+const ABANDON_CHECK_EVERY: usize = 16;
+
+/// The scalar distance backend with exact call accounting.
+///
+/// Holds borrows of the series and its rolling stats; normalization is
+/// folded into the loop (`(p − μ)/σ` per point), so no normalized copies
+/// of the sequences are ever materialized — the paper's memory trick.
+/// Deliberately not `Clone`: a copied live counter would double-count
+/// calls — workers construct their own instance and sum `calls()` after.
+#[derive(Debug)]
+pub struct CountingDistance<'a> {
+    ts: &'a TimeSeries,
+    stats: &'a SeqStats,
+    kind: DistanceKind,
+    calls: Cell<u64>,
+}
+
+impl<'a> CountingDistance<'a> {
+    /// New backend over `ts` with the stats computed for the search's `s`.
+    pub fn new(
+        ts: &'a TimeSeries,
+        stats: &'a SeqStats,
+        kind: DistanceKind,
+    ) -> CountingDistance<'a> {
+        debug_assert!(
+            stats.len() <= ts.num_sequences(stats.s),
+            "stats cover more sequences than the series has"
+        );
+        CountingDistance {
+            ts,
+            stats,
+            kind,
+            calls: Cell::new(0),
+        }
+    }
+
+    /// The distance variant this backend computes.
+    pub fn kind(&self) -> DistanceKind {
+        self.kind
+    }
+
+    /// Number of distance calls so far (each [`dist`](Self::dist) or
+    /// [`dist_early`](Self::dist_early) invocation counts once, abandoned
+    /// or not — matching the paper's accounting).
+    pub fn calls(&self) -> u64 {
+        self.calls.get()
+    }
+
+    /// Exact distance between the sequences starting at `i` and `j`.
+    #[inline]
+    pub fn dist(&self, i: usize, j: usize) -> f64 {
+        self.dist_early(i, j, f64::INFINITY)
+    }
+
+    /// Early-abandoning distance: returns the exact distance when it is
+    /// below `cutoff`; otherwise may abandon once the running sum proves
+    /// `d >= cutoff` and returns that partial lower bound (which is then
+    /// `>= cutoff`, so callers comparing `d < cutoff` never observe an
+    /// inexact value).
+    pub fn dist_early(&self, i: usize, j: usize, cutoff: f64) -> f64 {
+        self.calls.set(self.calls.get() + 1);
+        let s = self.stats.s;
+        let a = self.ts.seq(i, s);
+        let b = self.ts.seq(j, s);
+        let limit = if cutoff.is_finite() {
+            cutoff * cutoff
+        } else {
+            f64::INFINITY
+        };
+        let mut acc = 0.0f64;
+        match self.kind {
+            DistanceKind::Znorm => {
+                let mu_a = self.stats.mean[i];
+                let mu_b = self.stats.mean[j];
+                let inv_sa = 1.0 / self.stats.std[i];
+                let inv_sb = 1.0 / self.stats.std[j];
+                for (ca, cb) in a
+                    .chunks(ABANDON_CHECK_EVERY)
+                    .zip(b.chunks(ABANDON_CHECK_EVERY))
+                {
+                    for (&x, &y) in ca.iter().zip(cb) {
+                        let d = (x - mu_a) * inv_sa - (y - mu_b) * inv_sb;
+                        acc += d * d;
+                    }
+                    if acc > limit {
+                        return acc.sqrt();
+                    }
+                }
+            }
+            DistanceKind::Raw => {
+                for (ca, cb) in a
+                    .chunks(ABANDON_CHECK_EVERY)
+                    .zip(b.chunks(ABANDON_CHECK_EVERY))
+                {
+                    for (&x, &y) in ca.iter().zip(cb) {
+                        let d = x - y;
+                        acc += d * d;
+                    }
+                    if acc > limit {
+                        return acc.sqrt();
+                    }
+                }
+            }
+        }
+        acc.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ts::generators;
+    use crate::ts::series::IntoSeries;
+
+    fn setup(n: usize, s: usize) -> (TimeSeries, SeqStats) {
+        let ts = generators::ecg_like(n, 90, 1, 11).into_series("d");
+        let stats = SeqStats::compute(&ts, s);
+        (ts, stats)
+    }
+
+    fn naive_znorm_dist(ts: &TimeSeries, stats: &SeqStats, i: usize, j: usize) -> f64 {
+        let zi = stats.znorm(ts, i);
+        let zj = stats.znorm(ts, j);
+        zi.iter()
+            .zip(&zj)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    #[test]
+    fn znorm_matches_naive_normalize_then_subtract() {
+        let (ts, stats) = setup(800, 64);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        for (i, j) in [(0, 100), (3, 700), (250, 330), (0, 736)] {
+            let got = dist.dist(i, j);
+            let want = naive_znorm_dist(&ts, &stats, i, j);
+            assert!((got - want).abs() < 1e-9, "({i},{j}): {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn raw_is_plain_euclidean() {
+        let (ts, stats) = setup(500, 50);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Raw);
+        let want = ts
+            .seq(10, 50)
+            .iter()
+            .zip(ts.seq(200, 50))
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!((dist.dist(10, 200) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn early_abandon_returns_exact_below_cutoff() {
+        let (ts, stats) = setup(1_000, 80);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        for (i, j) in [(0, 100), (50, 400), (111, 911)] {
+            let exact = dist.dist(i, j);
+            let with_cutoff = dist.dist_early(i, j, exact + 1.0);
+            assert_eq!(exact, with_cutoff, "must be bit-identical below cutoff");
+        }
+    }
+
+    #[test]
+    fn early_abandon_bound_is_at_least_cutoff() {
+        let (ts, stats) = setup(1_000, 80);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        for (i, j) in [(0, 100), (50, 400), (111, 911)] {
+            let exact = dist.dist(i, j);
+            let cutoff = exact * 0.5;
+            let d = dist.dist_early(i, j, cutoff);
+            assert!(d >= cutoff, "abandoned value {d} below cutoff {cutoff}");
+            assert!(d <= exact + 1e-12, "partial sum cannot exceed the exact distance");
+        }
+    }
+
+    #[test]
+    fn every_call_is_counted_once() {
+        let (ts, stats) = setup(600, 60);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        assert_eq!(dist.calls(), 0);
+        let _ = dist.dist(0, 100);
+        let _ = dist.dist_early(0, 200, 0.001); // abandons, still counted
+        let _ = dist.dist_early(0, 300, f64::INFINITY);
+        assert_eq!(dist.calls(), 3);
+    }
+
+    #[test]
+    fn symmetric_and_zero_on_self() {
+        let (ts, stats) = setup(700, 64);
+        for kind in [DistanceKind::Znorm, DistanceKind::Raw] {
+            let dist = CountingDistance::new(&ts, &stats, kind);
+            assert!((dist.dist(20, 500) - dist.dist(500, 20)).abs() < 5e-8);
+            assert!(dist.dist(123, 123) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn scalar_backend_is_the_default_fallback() {
+        match active_backend() {
+            Backend::Scalar => assert!(!cfg!(feature = "pjrt")),
+            Backend::XlaPjrt => assert!(cfg!(feature = "pjrt")),
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Batched distance evaluation through the PJRT runtime (the `pjrt`
+//! feature's replacement for hot inner loops).
+//!
+//! [`XlaBatchEngine`] owns the device-ready row matrix
+//! ([`PreparedSeqs`]) for one series and streams candidate sets through
+//! the `query_row` artifact in `QUERY_B`-sized chunks, stopping between
+//! chunks as soon as a distance below the caller's threshold shows up —
+//! the batched analogue of the scalar engine's early abandoning. Chunk
+//! granularity is the trade: the scalar engine abandons per *point*, this
+//! engine per *chunk of pairs*, winning whenever the accelerator evaluates
+//! a chunk faster than the CPU evaluates the abandoned prefix.
+//!
+//! Accounting: `pair_evals` counts evaluated pairs (one per candidate in
+//! each executed chunk) so XLA-side work remains comparable with the
+//! scalar engine's `calls()` in cps terms.
+
+use anyhow::Result;
+
+use crate::runtime::{ArtifactSet, PreparedSeqs};
+use crate::ts::{SeqStats, TimeSeries};
+
+/// Batched distance engine over one prepared series.
+pub struct XlaBatchEngine<'a> {
+    arts: &'a ArtifactSet,
+    prep: PreparedSeqs,
+    /// Pair distances evaluated so far (the XLA-side cost counter).
+    pub pair_evals: u64,
+}
+
+impl<'a> XlaBatchEngine<'a> {
+    /// Prepare every sequence of `ts` (z-normalized when `znormalize`)
+    /// for artifact upload. Fails when `stats.s` exceeds the artifacts'
+    /// padded length — callers fall back to the scalar engine.
+    pub fn new(
+        arts: &'a ArtifactSet,
+        ts: &TimeSeries,
+        stats: &SeqStats,
+        znormalize: bool,
+    ) -> Result<XlaBatchEngine<'a>> {
+        let prep = PreparedSeqs::build(arts, ts, stats, znormalize)?;
+        Ok(XlaBatchEngine {
+            arts,
+            prep,
+            pair_evals: 0,
+        })
+    }
+
+    /// Number of prepared sequences.
+    pub fn len(&self) -> usize {
+        self.prep.n
+    }
+
+    /// Whether the series has no prepared sequences.
+    pub fn is_empty(&self) -> bool {
+        self.prep.n == 0
+    }
+
+    /// The device-ready rows (for callers composing their own artifact
+    /// invocations).
+    pub fn prepared(&self) -> &PreparedSeqs {
+        &self.prep
+    }
+
+    /// Distances from `query` to `cands`, evaluated chunk-by-chunk.
+    ///
+    /// Stops after the first chunk containing a distance strictly below
+    /// `stop_below` (the candidate is disqualified — no point refining
+    /// further). Returns how many candidates were evaluated and their
+    /// distances, in candidate order.
+    pub fn query_row(
+        &mut self,
+        query: usize,
+        cands: &[usize],
+        stop_below: f64,
+    ) -> Result<(usize, Vec<f64>)> {
+        let b = self.arts.query_b();
+        let mut dists: Vec<f64> = Vec::with_capacity(cands.len().min(b));
+        let mut done = 0usize;
+        for chunk in cands.chunks(b) {
+            let (d, dmin) = self.arts.query_row_chunk(&self.prep, query, chunk)?;
+            done += chunk.len();
+            self.pair_evals += chunk.len() as u64;
+            dists.extend(d);
+            if dmin < stop_below {
+                break;
+            }
+        }
+        Ok((done, dists))
+    }
+
+    /// Chain distances `d(ia[t], ib[t])` through the `pair_dist` artifact
+    /// (the batched warm-up path).
+    pub fn pair_chain(&mut self, ia: &[usize], ib: &[usize]) -> Result<Vec<f64>> {
+        let out = self.arts.pair_dist_chain(&self.prep, ia, ib)?;
+        self.pair_evals += out.len() as u64;
+        Ok(out)
+    }
+}

@@ -16,20 +16,27 @@
 //! * **L1 (python/compile/kernels/, build-time only)** — Pallas kernels for
 //!   the distance hot-spot, lowered (interpret=True) into the same HLO.
 //!
-//! The [`runtime`] module loads the AOT artifacts via the PJRT C API
-//! (`xla` crate) so that Python is never on the search path.
+//! With the off-by-default **`pjrt`** cargo feature, the [`runtime`] module
+//! loads the AOT artifacts via the PJRT C API (`xla` crate) so that Python
+//! is never on the search path; the default build is pure Rust and always
+//! falls back to the scalar [`dist::CountingDistance`] backend.
 //!
 //! ## Quickstart
 //!
-//! ```no_run
+//! ```
 //! use hstime::prelude::*;
 //!
-//! let ts = generators::sine_with_noise(20_000, 0.1, 42).into_series("demo");
+//! let ts = generators::sine_with_noise(4_000, 0.1, 42).into_series("demo");
 //! let params = SearchParams::new(120, 4, 4).with_discords(1);
 //! let report = algo::hst::HstSearch::default().run(&ts, &params).unwrap();
+//! let top = &report.discords[0];
 //! println!("discord @ {} nnd={:.4} calls={}",
-//!          report.discords[0].position, report.discords[0].nnd, report.distance_calls);
+//!          top.position, top.nnd, report.distance_calls);
+//! assert!(top.nnd > 0.0);
+//! assert!(report.distance_calls > 0);
 //! ```
+#![warn(missing_docs)]
+
 pub mod algo;
 pub mod bench;
 pub mod config;
@@ -46,7 +53,7 @@ pub mod util;
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::algo::{self, Algorithm, SearchReport};
-    pub use crate::config::{SearchParams, SaxParams};
+    pub use crate::config::{SaxParams, SearchParams};
     pub use crate::discord::{Discord, DiscordSet, NndProfile};
     pub use crate::dist::{CountingDistance, DistanceKind, ZnormStats};
     pub use crate::metrics::{cps, d_speedup, t_speedup};

@@ -325,6 +325,15 @@ fn info(args: &Args) -> Result<()> {
         );
     }
     println!("\nalgorithms: brute, hotsax, hst, dadd, rra, scamp");
+    println!(
+        "distance backend: {:?}{}",
+        hstime::dist::active_backend(),
+        if cfg!(feature = "pjrt") {
+            ""
+        } else {
+            " (build with --features pjrt for the XLA/PJRT runtime)"
+        }
+    );
     let dir = hstime::runtime::default_artifact_dir();
     match hstime::runtime::Manifest::load(&dir) {
         Ok(m) => println!(

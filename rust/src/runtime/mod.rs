@@ -1,11 +1,16 @@
 //! PJRT runtime: load + execute the AOT artifacts from `make artifacts`.
 //!
-//! Python is build-time only; this module is the entire runtime bridge:
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
-//! `execute` (the pattern of /opt/xla-example/load_hlo). The interchange
-//! format is HLO **text** — xla_extension 0.5.1 rejects jax≥0.5's
-//! serialized protos (64-bit instruction ids), while the text parser
-//! reassigns ids.
+//! Python is build-time only; this module is the entire runtime bridge.
+//! It has two halves:
+//!
+//! * **Manifest layer** (always compiled) — [`Manifest`] parses
+//!   `artifacts/manifest.txt` and [`default_artifact_dir`] locates it, so
+//!   tooling (`hst info`) can inspect artifacts in any build.
+//! * **Execution layer** (`pjrt` cargo feature) — `ArtifactSet` compiles
+//!   the HLO text through the `xla` crate's PJRT client and executes it;
+//!   `PreparedSeqs` holds the padded f32 rows ready for upload. Without
+//!   the feature these types do not exist and the scalar engine
+//!   ([`crate::dist::CountingDistance`]) is the only backend.
 //!
 //! Artifacts (see python/compile/aot.py):
 //! * `pair_dist`  — f32[PAIR_B, S_PAD] ×2 → f32[PAIR_B] (warm-up chains)
@@ -13,19 +18,26 @@
 //! * `mp_tile`    — two f32[TILE, S_PAD] blocks + (row0, col0, excl) →
 //!                  masked (rowmin, rowarg, colmin, colarg)
 
+#[cfg(feature = "pjrt")]
+mod exec;
+
+#[cfg(feature = "pjrt")]
+pub use exec::{ArtifactSet, PreparedSeqs};
+
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::discord::NndProfile;
-use crate::ts::{SeqStats, TimeSeries};
-
 /// Parsed `artifacts/manifest.txt`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Padded sequence length the artifacts were lowered for.
     pub s_pad: usize,
+    /// Batch size of the `pair_dist` artifact.
     pub pair_b: usize,
+    /// Batch size of the `query_row` artifact.
     pub query_b: usize,
+    /// Edge length of one `mp_tile` block.
     pub tile: usize,
     /// (name, file) pairs.
     pub entries: Vec<(String, String)>,
@@ -82,16 +94,6 @@ impl Manifest {
     }
 }
 
-/// Compiled executables for all shipped artifacts.
-pub struct ArtifactSet {
-    manifest: Manifest,
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    pair_dist: xla::PjRtLoadedExecutable,
-    query_row: xla::PjRtLoadedExecutable,
-    mp_tile: xla::PjRtLoadedExecutable,
-}
-
 /// Default artifact directory (relative to the crate root / cwd).
 pub fn default_artifact_dir() -> PathBuf {
     if let Ok(dir) = std::env::var("HSTIME_ARTIFACTS") {
@@ -105,257 +107,65 @@ pub fn default_artifact_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-impl ArtifactSet {
-    /// Compile all artifacts on the CPU PJRT client. Fails with a clear
-    /// message when `make artifacts` has not been run.
-    pub fn load(dir: &Path) -> Result<ArtifactSet> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut exes: Vec<(String, xla::PjRtLoadedExecutable)> = Vec::new();
-        for (name, file) in &manifest.entries {
-            let path = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not utf-8")?,
-            )
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compiling {name}"))?;
-            exes.push((name.clone(), exe));
-        }
-        let mut take = |want: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let pos = exes
-                .iter()
-                .position(|(n, _)| n == want)
-                .with_context(|| format!("manifest missing artifact {want}"))?;
-            Ok(exes.remove(pos).1)
-        };
-        let pair_dist = take("pair_dist")?;
-        let query_row = take("query_row")?;
-        let mp_tile = take("mp_tile")?;
-        Ok(ArtifactSet {
-            manifest,
-            client,
-            pair_dist,
-            query_row,
-            mp_tile,
-        })
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(name: &str, body: &str) -> PathBuf {
+        let mut dir = std::env::temp_dir();
+        dir.push(format!("hstime_manifest_{}_{}", std::process::id(), name));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), body).unwrap();
+        dir
     }
 
-    /// Load from [`default_artifact_dir`].
-    pub fn load_default() -> Result<ArtifactSet> {
-        Self::load(&default_artifact_dir())
+    #[test]
+    fn parses_config_and_artifacts() {
+        let dir = write_manifest(
+            "ok",
+            "# comment\n\
+             config s_pad=512 pair_b=256 query_b=512 tile=128\n\
+             artifact pair_dist pair_dist.hlo.txt\n\
+             artifact query_row query_row.hlo.txt\n\
+             artifact mp_tile mp_tile.hlo.txt\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.s_pad, 512);
+        assert_eq!(m.pair_b, 256);
+        assert_eq!(m.query_b, 512);
+        assert_eq!(m.tile, 128);
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.entries[0].0, "pair_dist");
+        std::fs::remove_dir_all(dir).ok();
     }
 
-    pub fn s_pad(&self) -> usize {
-        self.manifest.s_pad
+    #[test]
+    fn incomplete_manifest_is_an_error() {
+        let dir = write_manifest("incomplete", "config pair_b=256\n");
+        assert!(Manifest::load(&dir).is_err(), "missing s_pad + artifacts");
+        std::fs::remove_dir_all(dir).ok();
     }
 
-    pub fn pair_b(&self) -> usize {
-        self.manifest.pair_b
+    #[test]
+    fn unknown_lines_are_rejected_unknown_config_keys_ignored() {
+        let dir = write_manifest(
+            "fwd",
+            "config s_pad=64 future_knob=3\nartifact pair_dist p.hlo\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.s_pad, 64);
+        std::fs::remove_dir_all(dir).ok();
+
+        let dir = write_manifest("bad", "bogus line here\n");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
     }
 
-    pub fn query_b(&self) -> usize {
-        self.manifest.query_b
-    }
-
-    pub fn tile(&self) -> usize {
-        self.manifest.tile
-    }
-
-    /// Chain distances d(ia[t], ib[t]) via the `pair_dist` artifact.
-    pub fn pair_dist_chain(
-        &self,
-        prep: &PreparedSeqs,
-        ia: &[usize],
-        ib: &[usize],
-    ) -> Result<Vec<f64>> {
-        assert_eq!(ia.len(), ib.len());
-        let b = self.pair_b();
-        let s_pad = self.s_pad();
-        let mut out = Vec::with_capacity(ia.len());
-        let mut x = vec![0.0f32; b * s_pad];
-        let mut y = vec![0.0f32; b * s_pad];
-        for chunk_start in (0..ia.len()).step_by(b) {
-            let chunk = (ia.len() - chunk_start).min(b);
-            x[..].fill(0.0);
-            y[..].fill(0.0);
-            for t in 0..chunk {
-                x[t * s_pad..(t + 1) * s_pad]
-                    .copy_from_slice(prep.row(ia[chunk_start + t]));
-                y[t * s_pad..(t + 1) * s_pad]
-                    .copy_from_slice(prep.row(ib[chunk_start + t]));
-            }
-            let lx = xla::Literal::vec1(&x).reshape(&[b as i64, s_pad as i64])?;
-            let ly = xla::Literal::vec1(&y).reshape(&[b as i64, s_pad as i64])?;
-            let res = self.pair_dist.execute::<xla::Literal>(&[lx, ly])?[0][0]
-                .to_literal_sync()?;
-            let d = res.to_tuple1()?.to_vec::<f32>()?;
-            out.extend(d[..chunk].iter().map(|&v| v as f64));
-        }
-        Ok(out)
-    }
-
-    /// One `query_row` chunk: distances from `query` to `cands`
-    /// (|cands| <= query_b). Returns (dists, min over the real entries).
-    pub fn query_row_chunk(
-        &self,
-        prep: &PreparedSeqs,
-        query: usize,
-        cands: &[usize],
-    ) -> Result<(Vec<f64>, f64)> {
-        let b = self.query_b();
-        let s_pad = self.s_pad();
-        assert!(cands.len() <= b, "chunk larger than QUERY_B");
-        let mut c = vec![0.0f32; b * s_pad];
-        for (t, &j) in cands.iter().enumerate() {
-            c[t * s_pad..(t + 1) * s_pad].copy_from_slice(prep.row(j));
-        }
-        // padding rows are zero vectors; their distance to the query is
-        // |q| which is harmless because we ignore entries >= cands.len()
-        let lq = xla::Literal::vec1(prep.row(query));
-        let lc = xla::Literal::vec1(&c).reshape(&[b as i64, s_pad as i64])?;
-        let res = self.query_row.execute::<xla::Literal>(&[lq, lc])?[0][0]
-            .to_literal_sync()?;
-        let parts = res.to_tuple()?;
-        let d32 = parts[0].to_vec::<f32>()?;
-        let dists: Vec<f64> = d32[..cands.len()].iter().map(|&v| v as f64).collect();
-        let dmin = dists.iter().cloned().fold(f64::INFINITY, f64::min);
-        Ok((dists, dmin))
-    }
-
-    /// One masked matrix-profile tile: rows `row0..row0+TILE` vs columns
-    /// `col0..col0+TILE`, exclusion half-width `excl`. Merges the returned
-    /// row/col minima into `profile` (entries beyond `prep.n` skipped).
-    pub fn mp_tile_update(
-        &self,
-        prep: &PreparedSeqs,
-        row0: usize,
-        col0: usize,
-        excl: usize,
-        profile: &mut NndProfile,
-    ) -> Result<()> {
-        let t = self.tile();
-        let s_pad = self.s_pad();
-        let fill = |start: usize| -> Vec<f32> {
-            let mut m = vec![0.0f32; t * s_pad];
-            for r in 0..t {
-                if start + r < prep.n {
-                    m[r * s_pad..(r + 1) * s_pad].copy_from_slice(prep.row(start + r));
-                }
-            }
-            m
-        };
-        let a = fill(row0);
-        let b = fill(col0);
-        let la = xla::Literal::vec1(&a).reshape(&[t as i64, s_pad as i64])?;
-        let lb = xla::Literal::vec1(&b).reshape(&[t as i64, s_pad as i64])?;
-        let res = self
-            .mp_tile
-            .execute::<xla::Literal>(&[
-                la,
-                lb,
-                xla::Literal::scalar(row0 as i32),
-                xla::Literal::scalar(col0 as i32),
-                xla::Literal::scalar(excl as i32),
-            ])?[0][0]
-            .to_literal_sync()?;
-        let parts = res.to_tuple()?;
-        let rowmin = parts[0].to_vec::<f32>()?;
-        let rowarg = parts[1].to_vec::<i32>()?;
-        let colmin = parts[2].to_vec::<f32>()?;
-        let colarg = parts[3].to_vec::<i32>()?;
-        const BIG: f32 = 1.0e38;
-        for r in 0..t {
-            let gi = row0 + r;
-            if gi >= prep.n || rowmin[r] >= BIG {
-                continue;
-            }
-            let j = rowarg[r] as usize;
-            if j < prep.n {
-                profile.observe_one(gi, j, rowmin[r] as f64);
-            }
-        }
-        for cidx in 0..t {
-            let gj = col0 + cidx;
-            if gj >= prep.n || colmin[cidx] >= BIG {
-                continue;
-            }
-            let i = colarg[cidx] as usize;
-            if i < prep.n {
-                profile.observe_one(gj, i, colmin[cidx] as f64);
-            }
-        }
-        Ok(())
-    }
-
-    /// Full matrix profile via tiles (the XLA SCAMP path). Covers every
-    /// (row-block, col-block) pair on and above the diagonal; the masked
-    /// kernel updates both row and column profiles, so each unordered pair
-    /// is evaluated once.
-    pub fn matrix_profile(&self, prep: &PreparedSeqs, s: usize) -> Result<NndProfile> {
-        let t = self.tile();
-        let n = prep.n;
-        let mut profile = NndProfile::new(n);
-        let mut row0 = 0;
-        while row0 < n {
-            let mut col0 = row0;
-            while col0 < n {
-                self.mp_tile_update(prep, row0, col0, s, &mut profile)?;
-                col0 += t;
-            }
-            row0 += t;
-        }
-        Ok(profile)
-    }
-}
-
-/// All sequences of one series, z-normalized (or raw) and zero-padded to
-/// `s_pad`, as f32 rows ready for literal upload.
-pub struct PreparedSeqs {
-    /// Number of sequences.
-    pub n: usize,
-    s_pad: usize,
-    data: Vec<f32>,
-}
-
-impl PreparedSeqs {
-    /// Prepare every sequence of `ts`. Fails when `s > s_pad` (caller
-    /// should fall back to the scalar engine).
-    pub fn build(
-        arts: &ArtifactSet,
-        ts: &TimeSeries,
-        stats: &SeqStats,
-        znormalize: bool,
-    ) -> Result<PreparedSeqs> {
-        let s = stats.s;
-        let s_pad = arts.s_pad();
-        if s > s_pad {
-            bail!("sequence length {s} exceeds artifact s_pad {s_pad}");
-        }
-        let n = stats.len();
-        let mut data = vec![0.0f32; n * s_pad];
-        let mut buf = vec![0.0f64; s];
-        for k in 0..n {
-            let row = &mut data[k * s_pad..k * s_pad + s];
-            if znormalize {
-                stats.znorm_into(ts, k, &mut buf);
-                for (o, &v) in row.iter_mut().zip(&buf) {
-                    *o = v as f32;
-                }
-            } else {
-                for (o, &v) in row.iter_mut().zip(ts.seq(k, s)) {
-                    *o = v as f32;
-                }
-            }
-        }
-        Ok(PreparedSeqs { n, s_pad, data })
-    }
-
-    /// Row `k` (zero-padded).
-    #[inline]
-    pub fn row(&self, k: usize) -> &[f32] {
-        &self.data[k * self.s_pad..(k + 1) * self.s_pad]
+    #[test]
+    fn missing_directory_gives_context() {
+        let err = Manifest::load(Path::new("/nonexistent/hstime-artifacts"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("manifest.txt"), "{err}");
     }
 }

@@ -74,6 +74,7 @@ impl SaxIndex {
         self.words.len()
     }
 
+    /// Whether no sequence is indexed.
     pub fn is_empty(&self) -> bool {
         self.words.is_empty()
     }

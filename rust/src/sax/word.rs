@@ -46,10 +46,12 @@ impl SaxWord {
         &self.sym[..self.len as usize]
     }
 
+    /// Number of stored symbols (digest length if folded).
     pub fn len(&self) -> usize {
         self.len as usize
     }
 
+    /// Whether the word holds no symbols.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }

@@ -20,10 +20,12 @@ pub struct JobSpec {
     pub scale_div: usize,
     /// Algorithm name (see [`crate::algo::by_name`]).
     pub algo: String,
+    /// Search parameters forwarded to the engine.
     pub params: SearchParams,
 }
 
 impl JobSpec {
+    /// Parse a `submit` request (protocol documented in [`crate::service`]).
     pub fn from_json(v: &Json) -> Result<JobSpec, String> {
         let dataset = v
             .get("dataset")
@@ -81,13 +83,18 @@ impl JobSpec {
 /// Lifecycle of a job.
 #[derive(Debug, Clone)]
 pub enum JobState {
+    /// Accepted, waiting for a worker.
     Queued,
+    /// A worker is executing the search.
     Running,
+    /// Finished successfully; carries the report JSON.
     Done(Json),
+    /// Finished with an error; carries the message.
     Failed(String),
 }
 
 impl JobState {
+    /// Protocol label of this state (`queued`/`running`/`done`/`failed`).
     pub fn label(&self) -> &'static str {
         match self {
             JobState::Queued => "queued",

@@ -23,6 +23,7 @@ use crate::ts::{SeqStats, TimeSeries};
 pub struct OnlineAlert {
     /// Global position of the anomalous sequence's first point.
     pub global_position: usize,
+    /// Exact nearest-neighbor distance within the evaluation window.
     pub nnd: f64,
     /// Was it flagged significant by the Tukey fence?
     pub significant: bool,

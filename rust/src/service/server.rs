@@ -153,6 +153,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a running service.
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
         let stream = TcpStream::connect(addr).context("connecting to service")?;
         let writer = stream.try_clone()?;
@@ -170,6 +171,7 @@ impl Client {
         Json::parse(&line).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
     }
 
+    /// Submit a prepared request object; returns the job id.
     pub fn submit(&mut self, spec_json: Json) -> Result<u64> {
         let reply = self.call(&spec_json)?;
         if reply.get("ok").and_then(|b| b.as_bool()) != Some(true) {
@@ -184,10 +186,12 @@ impl Client {
             .context("reply missing job id")
     }
 
+    /// Block until `job` reaches a terminal state; returns the reply.
     pub fn wait(&mut self, job: u64) -> Result<Json> {
         self.call(&Json::obj().set("cmd", "wait").set("job", job))
     }
 
+    /// Ask the service to stop accepting connections and drain.
     pub fn shutdown(&mut self) -> Result<()> {
         let _ = self.call(&Json::obj().set("cmd", "shutdown"))?;
         Ok(())

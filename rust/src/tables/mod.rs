@@ -24,8 +24,11 @@ use runners::{avg_runs, AvgResult};
 pub struct Table {
     /// Paper id: "table1" … "fig7".
     pub id: &'static str,
+    /// Human-readable caption (includes the scale/runs configuration).
     pub title: String,
+    /// Column headers.
     pub header: Vec<String>,
+    /// Data rows (cells pre-formatted as strings).
     pub rows: Vec<Vec<String>>,
 }
 
@@ -62,6 +65,7 @@ impl Table {
         out
     }
 
+    /// Serialize for the `--json` flag of the bench/CLI runners.
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("id", self.id)

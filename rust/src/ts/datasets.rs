@@ -16,11 +16,17 @@ use super::series::TimeSeries;
 /// Generator family for a dataset.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Family {
+    /// Heartbeat trains with rhythm anomalies ([`super::generators::ecg_like`]).
     Ecg,
+    /// Breathing oscillation with apnea spells ([`super::generators::respiration_like`]).
     Respiration,
+    /// Actuation cycles with glitches ([`super::generators::valve_like`]).
     Valve,
+    /// Daily/weekly demand with holiday weeks ([`super::generators::power_like`]).
     Power,
+    /// Piecewise activity regimes ([`super::generators::regime_like`]).
     Regime,
+    /// Long alternating feeding waveforms ([`super::generators::insect_feeding_like`]).
     Insect,
 }
 

@@ -69,6 +69,7 @@ impl TimeSeries {
 
 /// Helper trait so generators can end with `.into_series(name)`.
 pub trait IntoSeries {
+    /// Wrap `self` as a named [`TimeSeries`].
     fn into_series(self, name: &str) -> TimeSeries;
 }
 

@@ -75,6 +75,7 @@ impl SeqStats {
         self.mean.len()
     }
 
+    /// Whether no sequence start is covered.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.mean.is_empty()

@@ -9,12 +9,15 @@ use std::collections::BTreeMap;
 /// Parsed command line.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// First bare token (e.g. `discover` in `hst discover ecg300`).
     pub subcommand: Option<String>,
+    /// Remaining bare tokens, in order.
     pub positionals: Vec<String>,
     flags: BTreeMap<String, String>,
     order: Vec<String>,
 }
 
+/// Value stored for boolean flags given without an argument (`--full`).
 pub const FLAG_SET: &str = "true";
 
 impl Args {
@@ -55,18 +58,22 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Was `--key` present (with or without a value)?
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 
+    /// Raw value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// Value of `--key`, or `default` when absent.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// `--key` parsed as usize; panics with a usage message on bad input.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key)
             .map(|v| {
@@ -77,6 +84,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// `--key` parsed as u64; panics with a usage message on bad input.
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key)
             .map(|v| {
@@ -87,6 +95,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// `--key` parsed as f64; panics with a usage message on bad input.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key)
             .map(|v| {

@@ -11,15 +11,22 @@ use std::fmt;
 /// A JSON value. Object keys are ordered (BTreeMap) so output is stable.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object with sorted keys.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// A new empty object (builder entry point for [`set`](Self::set)).
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
@@ -35,6 +42,7 @@ impl Json {
         self
     }
 
+    /// Object field lookup; `None` on non-objects and missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -42,6 +50,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -49,6 +58,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -56,6 +66,7 @@ impl Json {
         }
     }
 
+    /// The value as an exact non-negative integer (≤ 2⁵³), if it is one.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|f| {
             if f >= 0.0 && f.fract() == 0.0 && f <= 2f64.powi(53) {
@@ -66,6 +77,7 @@ impl Json {
         })
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -73,6 +85,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -135,7 +148,9 @@ impl From<Vec<Json>> for Json {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
+    /// Byte offset into the input where parsing failed.
     pub offset: usize,
+    /// Human-readable failure description.
     pub msg: String,
 }
 

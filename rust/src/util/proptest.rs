@@ -11,7 +11,9 @@ use crate::util::rng::Rng64;
 
 /// Random source handed to properties.
 pub struct Gen {
+    /// The seeded generator backing every sampler.
     pub rng: Rng64,
+    /// Seed of this case (printed on failure for replay).
     pub seed: u64,
     /// Scale factor in (0, 1]; shrinking lowers it to re-run the property
     /// on smaller inputs.

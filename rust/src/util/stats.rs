@@ -4,12 +4,19 @@
 /// Summary of a sample of f64 observations.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest observation.
     pub min: f64,
+    /// Largest observation.
     pub max: f64,
+    /// Median (interpolated).
     pub p50: f64,
+    /// 95th percentile (interpolated).
     pub p95: f64,
 }
 

@@ -1,0 +1,206 @@
+//! Offline stand-in for the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The build environment has no `libxla_extension`, so this crate mirrors
+//! the slice of the xla-rs API that `hstime`'s `pjrt` feature compiles
+//! against — [`PjRtClient`], [`HloModuleProto`], [`XlaComputation`],
+//! [`Literal`], [`PjRtLoadedExecutable`] — without being able to execute
+//! anything: [`PjRtClient::cpu`] always returns a descriptive error, so
+//! callers take their documented "artifacts unavailable" skip path.
+//!
+//! Types that can only be obtained *through* a client ([`PjRtClient`],
+//! [`PjRtLoadedExecutable`], [`PjRtBuffer`]) contain an uninhabited void,
+//! making their method bodies statically unreachable rather than panicking.
+//!
+//! To run the real PJRT path, replace the `xla = { path = "xla-stub" }`
+//! dependency in `rust/Cargo.toml` with the actual xla-rs crate and
+//! install `libxla_extension` (see that project's README).
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring xla-rs's: formats the failure, converts cleanly
+/// into `anyhow::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: built against the in-repo xla stub (no libxla_extension); \
+             PJRT execution is unavailable in this environment"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching xla-rs.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Uninhabited marker: values of types containing it cannot exist.
+#[derive(Debug, Clone, Copy)]
+enum Void {}
+
+/// Element types transferable to device literals (subset used by hstime).
+pub trait NativeType: Copy + Default + fmt::Debug + private::Sealed {}
+
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+impl NativeType for f64 {}
+impl NativeType for i64 {}
+
+mod private {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
+    impl Sealed for f64 {}
+    impl Sealed for i64 {}
+}
+
+/// A PJRT client (CPU plugin in the real crate). Unconstructible here.
+#[derive(Debug)]
+pub struct PjRtClient(Void);
+
+impl PjRtClient {
+    /// In the real crate: create the CPU PJRT client. Here: always fails
+    /// with a message pointing at the stub, so artifact loading degrades
+    /// into the documented skip path.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match self.0 {}
+    }
+}
+
+/// A compiled, loaded executable. Only obtainable via [`PjRtClient::compile`].
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(Void);
+
+impl PjRtLoadedExecutable {
+    /// Execute with one argument list; returns per-device, per-output
+    /// buffers (xla-rs shape: `result[device][output]`).
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.0 {}
+    }
+}
+
+/// A device buffer produced by execution.
+#[derive(Debug)]
+pub struct PjRtBuffer(Void);
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self.0 {}
+    }
+}
+
+/// An HLO module in proto form. The stub parses nothing; it only records
+/// that a file was read so the API shape is preserved.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    _source: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO **text** file. The stub verifies the file exists and is
+    /// readable (so manifest/file errors still surface precisely) but does
+    /// not parse the HLO.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::read_to_string(path)
+            .map(|_| HloModuleProto {
+                _source: path.to_string(),
+            })
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))
+    }
+}
+
+/// An XLA computation wrapping an [`HloModuleProto`].
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    /// Wrap a module proto as a computation.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            _proto: proto.clone(),
+        }
+    }
+}
+
+/// A host literal (tensor value). Constructible so upload-side code
+/// compiles; every read-back accessor fails with the stub error (it can
+/// only be reached through an executable, which cannot exist here).
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    _len: usize,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { _len: data.len() }
+    }
+
+    /// Rank-0 literal from a scalar.
+    pub fn scalar<T: NativeType>(_value: T) -> Literal {
+        Literal { _len: 1 }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(self.clone())
+    }
+
+    /// Extract the single element of a 1-tuple literal.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::unavailable("Literal::to_tuple1"))
+    }
+
+    /// Extract all elements of a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    /// Copy out the host data.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_reports_stub() {
+        let err = PjRtClient::cpu().err().expect("stub must not build a client");
+        let msg = err.to_string();
+        assert!(msg.contains("stub"), "{msg}");
+        assert!(msg.contains("PJRT"), "{msg}");
+    }
+
+    #[test]
+    fn upload_side_api_is_usable() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert!(r.to_vec::<f32>().is_err(), "read-back must fail in the stub");
+        let _ = Literal::scalar(7i32);
+    }
+
+    #[test]
+    fn hlo_text_loading_checks_the_file() {
+        assert!(HloModuleProto::from_text_file("/nonexistent/path.hlo").is_err());
+    }
+}
