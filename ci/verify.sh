@@ -22,6 +22,9 @@ cargo test -q
 step "doctests: cargo test --doc"
 cargo test -q --doc
 
+step "formatting: cargo fmt --check"
+cargo fmt --check
+
 step "feature matrix: compile + tests with --features pjrt (xla stub)"
 cargo test -q --features pjrt
 

@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
     let ts = pts.into_series("valve+glitch");
 
     println!("MERLIN scan over L in [96, 160] (step 16) on {}:", ts.name);
-    let (found, calls) = Merlin::new(96, 160).with_step(16).run(&ts)?;
+    let (found, calls) = Merlin::new(96, 160).with_step(16).scan_series(&ts)?;
     for ld in &found {
         println!(
             "  L={:<4} discord @ {:<6} nnd {:<9.4} (r {:.3}, {} DRAG attempts)",

@@ -1,4 +1,5 @@
-//! Quickstart: find the top-3 discords of a synthetic ECG with HST.
+//! Quickstart: find the top-3 discords of a synthetic ECG with HST,
+//! through a prepared `SearchContext` session.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -11,18 +12,24 @@ fn main() -> anyhow::Result<()> {
     //    injected rhythm disturbances (in real use: ts::io::load_text).
     let ts = generators::ecg_like(20_000, 260, 2, 42).into_series("demo-ecg");
 
-    // 2. Configure the search: discord length s = 300, SAX with P = 4
+    // 2. Prepare the session once: the context owns the rolling stats,
+    //    the SAX index cache, the distance backend, and any warm profile
+    //    a search leaves behind.
+    let ctx = SearchContext::builder(&ts).build();
+
+    // 3. Configure the search: discord length s = 300, SAX with P = 4
     //    segments over a 4-letter alphabet (the paper's ECG settings).
     let params = SearchParams::new(300, 4, 4).with_discords(3).with_seed(1);
 
-    // 3. Run HOT SAX Time.
-    let report = algo::hst::HstSearch::default().run(&ts, &params)?;
+    // 4. Run HOT SAX Time through the context.
+    let report = algo::hst::HstSearch::default().run_ctx(&ctx, &params)?;
 
     println!(
-        "searched {} sequences with {} distance calls (cps {:.1}) in {:.3}s",
+        "searched {} sequences with {} distance calls (cps {:.1}, {} spent preparing) in {:.3}s",
         report.n_sequences,
         report.distance_calls,
         report.cps(),
+        report.prep_calls,
         report.elapsed.as_secs_f64()
     );
     for (rank, d) in report.discords.iter().enumerate() {
@@ -35,13 +42,22 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 4. Exactness check against the O(N²) brute force (small series only).
+    // 5. Search again on the warm context: stats, SAX index, and the
+    //    refined nnd profile are all reused — no preparation calls at all.
+    let warm = algo::hst::HstSearch::default().run_ctx(&ctx, &params)?;
+    assert_eq!(warm.prep_calls, 0);
+    println!(
+        "\nwarm re-search: {} distance calls (vs {} cold), 0 spent preparing",
+        warm.distance_calls, report.distance_calls
+    );
+
+    // 6. Exactness check against the O(N²) brute force (small series only).
     let small = ts.slice_prefix(4_000);
     let hst = algo::hst::HstSearch::default().run(&small, &params)?;
     let brute = algo::brute::BruteForce.run(&small, &params)?;
     assert!((hst.discords[0].nnd - brute.discords[0].nnd).abs() < 1e-9);
     println!(
-        "\nexactness check vs brute force: OK ({}x fewer distance calls)",
+        "exactness check vs brute force: OK ({}x fewer distance calls)",
         brute.distance_calls / hst.distance_calls.max(1)
     );
     Ok(())

@@ -10,9 +10,9 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::config::SearchParams;
+use crate::context::SearchContext;
 use crate::discord::{Discord, ExclusionZones, NndProfile};
-use crate::dist::{CountingDistance, DistanceKind};
-use crate::ts::{SeqStats, TimeSeries};
+use crate::dist::Distance;
 
 use super::{non_self_match, Algorithm, SearchReport};
 
@@ -21,17 +21,19 @@ use super::{non_self_match, Algorithm, SearchReport};
 pub struct BruteForce;
 
 impl BruteForce {
-    /// Exact nnd profile of the whole series (every pair evaluated once).
+    /// Exact nnd profile of the context's series (every pair evaluated
+    /// once through `dist`). Checks the context's run controls once per
+    /// outer row.
     pub fn exact_profile(
-        ts: &TimeSeries,
-        _stats: &SeqStats,
+        ctx: &SearchContext,
         params: &SearchParams,
-        dist: &CountingDistance,
-    ) -> NndProfile {
-        let n = ts.num_sequences(params.sax.s);
+        dist: &dyn Distance,
+    ) -> Result<NndProfile> {
         let s = params.sax.s;
+        let n = ctx.series().num_sequences(s);
         let mut profile = NndProfile::new(n);
         for i in 0..n {
+            ctx.check(dist.calls())?;
             for j in (i + 1)..n {
                 if non_self_match(i, j, s, params.allow_self_match) {
                     let d = dist.dist(i, j);
@@ -39,7 +41,7 @@ impl BruteForce {
                 }
             }
         }
-        profile
+        Ok(profile)
     }
 
     /// Extract the top-k discords from an exact profile.
@@ -79,24 +81,32 @@ impl Algorithm for BruteForce {
         "brute"
     }
 
-    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport> {
+    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         let s = params.sax.s;
-        let n = ts.num_sequences(s);
+        let n = ctx.series().num_sequences(s);
         ensure!(n >= 2, "series too short for s={s}");
+        ctx.check(0)?;
         let start = Instant::now();
-        let stats = SeqStats::compute(ts, s);
-        let kind = if params.znormalize {
-            DistanceKind::Znorm
-        } else {
-            DistanceKind::Raw
-        };
-        let dist = CountingDistance::new(ts, &stats, kind);
-        let profile = Self::exact_profile(ts, &stats, params, &dist);
+        ctx.notify_phase(self.name(), "prepare");
+        let stats = ctx.stats(s);
+        let dist = ctx.distance(&stats, params.distance_kind());
+        ctx.notify_phase(self.name(), "search");
+        let profile = Self::exact_profile(ctx, params, dist.as_ref())?;
         let discords = Self::discords_from_profile(&profile, s, params.k);
+        for (rank, d) in discords.iter().enumerate() {
+            ctx.notify_discord(rank, d);
+        }
+        // the exact profile is the best possible warm start for later
+        // searches on this context (exact sessions only — an f32 backend
+        // must not feed the cache)
+        if dist.is_exact() {
+            ctx.store_warm_profile(s, dist.kind(), params.allow_self_match, profile);
+        }
         Ok(SearchReport {
             algo: self.name().to_string(),
             discords,
             distance_calls: dist.calls(),
+            prep_calls: 0,
             elapsed: start.elapsed(),
             n_sequences: n,
         })

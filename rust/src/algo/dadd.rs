@@ -26,9 +26,9 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::config::SearchParams;
+use crate::context::SearchContext;
 use crate::discord::Discord;
-use crate::dist::{CountingDistance, DistanceKind};
-use crate::ts::{SeqStats, TimeSeries};
+use crate::dist::Distance;
 
 use super::{non_self_match, Algorithm, SearchReport};
 
@@ -63,15 +63,17 @@ pub struct DaddOutcome {
 }
 
 impl Dadd {
-    /// Run both phases and return the detailed outcome.
+    /// Run both phases and return the detailed outcome. Checks the
+    /// context's run controls once per streamed sequence (phase 1) and
+    /// once per surviving candidate per page (phase 2).
     pub fn run_detailed(
         &self,
-        ts: &TimeSeries,
+        ctx: &SearchContext,
         params: &SearchParams,
-        dist: &CountingDistance,
-    ) -> DaddOutcome {
+        dist: &dyn Distance,
+    ) -> Result<DaddOutcome> {
         let s = params.sax.s;
-        let n = ts.num_sequences(s);
+        let n = ctx.series().num_sequences(s);
         let allow = params.allow_self_match;
         let r = self.r;
 
@@ -79,6 +81,7 @@ impl Dadd {
         // `alive[c]` = candidate c not yet evicted.
         let mut cands: Vec<usize> = Vec::new();
         for x in 0..n {
+            ctx.check(dist.calls())?;
             let mut is_cand = true;
             let mut w = 0;
             for ci in 0..cands.len() {
@@ -117,6 +120,7 @@ impl Dadd {
                 if !alive[ci] {
                     continue;
                 }
+                ctx.check(dist.calls())?;
                 for x in page_start..page_end {
                     if x == c || !non_self_match(x, c, s, allow) {
                         continue;
@@ -163,11 +167,11 @@ impl Dadd {
             }
         }
         let missing = discords.len() < params.k;
-        DaddOutcome {
+        Ok(DaddOutcome {
             discords,
             phase1_survivors,
             missing,
-        }
+        })
     }
 }
 
@@ -176,24 +180,26 @@ impl Algorithm for Dadd {
         "dadd"
     }
 
-    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport> {
+    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         let s = params.sax.s;
-        let n = ts.num_sequences(s);
+        let n = ctx.series().num_sequences(s);
         ensure!(n >= 2, "series too short for s={s}");
         ensure!(self.r > 0.0, "DADD requires a positive range r");
+        ctx.check(0)?;
         let start = Instant::now();
-        let stats = SeqStats::compute(ts, s);
-        let kind = if params.znormalize {
-            DistanceKind::Znorm
-        } else {
-            DistanceKind::Raw
-        };
-        let dist = CountingDistance::new(ts, &stats, kind);
-        let outcome = self.run_detailed(ts, params, &dist);
+        ctx.notify_phase(self.name(), "prepare");
+        let stats = ctx.stats(s);
+        let dist = ctx.distance(&stats, params.distance_kind());
+        ctx.notify_phase(self.name(), "search");
+        let outcome = self.run_detailed(ctx, params, dist.as_ref())?;
+        for (rank, d) in outcome.discords.iter().enumerate() {
+            ctx.notify_discord(rank, d);
+        }
         Ok(SearchReport {
             algo: self.name().to_string(),
             discords: outcome.discords,
             distance_calls: dist.calls(),
+            prep_calls: 0,
             elapsed: start.elapsed(),
             n_sequences: n,
         })
@@ -237,9 +243,10 @@ mod tests {
             page_size: 500,
         };
         let s = params.sax.s;
-        let stats = crate::ts::SeqStats::compute(&ts, s);
-        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
-        let out = dadd.run_detailed(&ts, &params, &dist);
+        let ctx = SearchContext::builder(&ts).build();
+        let stats = ctx.stats(s);
+        let dist = ctx.distance(&stats, crate::dist::DistanceKind::Znorm);
+        let out = dadd.run_detailed(&ctx, &params, dist.as_ref()).unwrap();
         assert!(out.missing, "r above the discord nnd cannot find it");
     }
 

@@ -16,10 +16,10 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::config::SearchParams;
+use crate::context::SearchContext;
 use crate::discord::{Discord, ExclusionZones};
-use crate::dist::{CountingDistance, DistanceKind};
+use crate::dist::Distance;
 use crate::sax::SaxIndex;
-use crate::ts::{SeqStats, TimeSeries};
 use crate::util::rng::Rng64;
 
 use super::{non_self_match, Algorithm, SearchReport};
@@ -29,14 +29,16 @@ use super::{non_self_match, Algorithm, SearchReport};
 pub struct HotSax;
 
 /// One full HOT SAX pass: find the single best discord not excluded by
-/// `zones`. Returns None when every position is excluded.
+/// `zones`. Returns None when every position is excluded; errors when the
+/// context cancels the search or the call budget runs out.
 fn find_one(
-    dist: &CountingDistance,
+    ctx: &SearchContext,
+    dist: &dyn Distance,
     idx: &SaxIndex,
     params: &SearchParams,
     zones: &ExclusionZones,
     rng: &mut Rng64,
-) -> Option<Discord> {
+) -> Result<Option<Discord>> {
     let s = params.sax.s;
     let n = idx.len();
     let allow = params.allow_self_match;
@@ -60,6 +62,7 @@ fn find_one(
         if !zones.allowed(i, s) {
             continue;
         }
+        ctx.check(dist.calls())?;
         let mut nnd_i = f64::INFINITY;
         let mut ngh_i = usize::MAX;
         let mut pruned = false;
@@ -112,7 +115,7 @@ fn find_one(
             });
         }
     }
-    best
+    Ok(best)
 }
 
 impl Algorithm for HotSax {
@@ -120,27 +123,28 @@ impl Algorithm for HotSax {
         "hotsax"
     }
 
-    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport> {
+    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         let s = params.sax.s;
-        let n = ts.num_sequences(s);
+        let n = ctx.series().num_sequences(s);
         ensure!(n >= 2, "series too short for s={s}");
+        ctx.check(0)?;
         let start = Instant::now();
-        let stats = SeqStats::compute(ts, s);
-        let kind = if params.znormalize {
-            DistanceKind::Znorm
-        } else {
-            DistanceKind::Raw
-        };
-        let dist = CountingDistance::new(ts, &stats, kind);
-        let idx = SaxIndex::build(ts, &stats, &params.sax);
+        ctx.notify_phase(self.name(), "prepare");
+        let (stats, idx) = ctx.prepared(&params.sax);
+        let dist = ctx.distance(&stats, params.distance_kind());
         let mut rng = Rng64::new(params.seed ^ 0x4853_5458); // "HSTX"
 
+        // Faithful to the 2005 comparison protocol: no state carried over
+        // between discords (that carry-over is HST's improvement), so the
+        // context contributes the index/stats but no warm profile.
+        ctx.notify_phase(self.name(), "search");
         let mut zones = ExclusionZones::new();
         let mut discords = Vec::new();
-        for _ in 0..params.k {
-            match find_one(&dist, &idx, params, &zones, &mut rng) {
+        for rank in 0..params.k {
+            match find_one(ctx, dist.as_ref(), &idx, params, &zones, &mut rng)? {
                 Some(d) => {
                     zones.add(d.position, s);
+                    ctx.notify_discord(rank, &d);
                     discords.push(d);
                 }
                 None => break,
@@ -151,6 +155,7 @@ impl Algorithm for HotSax {
             algo: self.name().to_string(),
             discords,
             distance_calls: dist.calls(),
+            prep_calls: 0,
             elapsed: start.elapsed(),
             n_sequences: n,
         })
@@ -163,6 +168,7 @@ mod tests {
     use crate::algo::brute::BruteForce;
     use crate::ts::generators;
     use crate::ts::series::IntoSeries;
+    use crate::ts::TimeSeries;
 
     fn agree_with_brute(ts: &TimeSeries, params: &SearchParams) {
         let hs = HotSax.run(ts, params).unwrap();

@@ -20,7 +20,10 @@
 //!    levelling the peak without independent inner loops.
 //!
 //! The approximate-nnd profile persists across the k-discord loop
-//! (Sec. 3.2), which is where most of the k > 1 speedup comes from.
+//! (Sec. 3.2), which is where most of the k > 1 speedup comes from — and,
+//! through the [`SearchContext`] warm-profile cache, across *searches*:
+//! a second search on a warm context starts from the previous search's
+//! refined profile and skips the warm-up entirely.
 
 pub mod topology;
 pub mod warmup;
@@ -30,10 +33,10 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::config::SearchParams;
+use crate::context::SearchContext;
 use crate::discord::{Discord, ExclusionZones, NndProfile};
-use crate::dist::{CountingDistance, DistanceKind};
+use crate::dist::Distance;
 use crate::sax::SaxIndex;
-use crate::ts::{SeqStats, TimeSeries};
 use crate::util::rng::Rng64;
 
 use super::{non_self_match, Algorithm, SearchReport};
@@ -93,7 +96,7 @@ impl ScanOrder {
 #[allow(clippy::too_many_arguments)]
 fn minimize(
     i: usize,
-    dist: &CountingDistance,
+    dist: &dyn Distance,
     idx: &SaxIndex,
     scan: &ScanOrder,
     profile: &mut NndProfile,
@@ -156,14 +159,15 @@ impl HstSearch {
     #[allow(clippy::too_many_arguments)]
     fn pass(
         &self,
-        dist: &CountingDistance,
+        ctx: &SearchContext,
+        dist: &dyn Distance,
         idx: &SaxIndex,
         profile: &mut NndProfile,
         zones: &ExclusionZones,
         params: &SearchParams,
         rng: &mut Rng64,
         first_pass: bool,
-    ) -> Option<Discord> {
+    ) -> Result<Option<Discord>> {
         let s = params.sax.s;
         let n = idx.len();
         let allow = params.allow_self_match;
@@ -188,6 +192,7 @@ impl HstSearch {
         while pos < order.len() {
             let i = order[pos];
             pos += 1;
+            ctx.check(dist.calls())?;
 
             // Avoid_low_nnds(): the carried-over approximate nnd already
             // rules most sequences out.
@@ -224,7 +229,7 @@ impl HstSearch {
                 }
             }
         }
-        best
+        Ok(best)
     }
 }
 
@@ -233,48 +238,76 @@ impl Algorithm for HstSearch {
         "hst"
     }
 
-    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport> {
+    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         let s = params.sax.s;
-        let n = ts.num_sequences(s);
+        let n = ctx.series().num_sequences(s);
         ensure!(n >= 2, "series too short for s={s}");
+        ctx.check(0)?;
         let start = Instant::now();
-        let stats = SeqStats::compute(ts, s);
-        let kind = if params.znormalize {
-            DistanceKind::Znorm
-        } else {
-            DistanceKind::Raw
-        };
-        let dist = CountingDistance::new(ts, &stats, kind);
-        let idx = SaxIndex::build(ts, &stats, &params.sax);
+        ctx.notify_phase(self.name(), "prepare");
+        let kind = params.distance_kind();
+        let (stats, idx) = ctx.prepared(&params.sax);
+        let dist = ctx.distance(&stats, kind);
+        let dist: &dyn Distance = dist.as_ref();
         let mut rng = Rng64::new(params.seed ^ 0x4853_5400); // "HST"
 
-        // nnd = ∞ sentinel; then warm-up + short-range topology build the
-        // approximate profile at ~2 calls per sequence.
-        let mut profile = NndProfile::new(n);
-        if self.warmup {
-            warmup::warmup(&dist, &idx, &mut profile, s, params.allow_self_match, &mut rng);
-        }
-        if self.short_range {
-            topology::short_range(&dist, &mut profile, n, s, params.allow_self_match);
-        }
+        // Warm start: any profile an earlier search on this context left
+        // behind is a valid upper bound of every exact nnd, so the
+        // warm-up chain + short-range topology (~2 calls per sequence)
+        // are only paid on a cold context. The cache only serves exact
+        // (scalar-compatible) sessions: reduced-precision backends must
+        // neither trust nor feed it.
+        let mut prep_calls = 0u64;
+        let cached = if dist.is_exact() {
+            ctx.warm_profile(s, kind, params.allow_self_match)
+        } else {
+            None
+        };
+        let mut profile = match cached {
+            Some(p) if p.len() == n => p,
+            _ => {
+                let before = dist.calls();
+                let mut p = NndProfile::new(n);
+                if self.warmup {
+                    warmup::warmup(dist, &idx, &mut p, s, params.allow_self_match, &mut rng);
+                }
+                if self.short_range {
+                    topology::short_range(dist, &mut p, n, s, params.allow_self_match);
+                }
+                prep_calls = dist.calls() - before;
+                p
+            }
+        };
+        // The bounded (~2N-call) preparation runs to completion; budget
+        // and cancellation take effect from this checkpoint on.
+        ctx.check(dist.calls())?;
 
+        ctx.notify_phase(self.name(), "search");
         let mut zones = ExclusionZones::new();
         let mut discords = Vec::new();
         for ki in 0..params.k {
-            match self.pass(&dist, &idx, &mut profile, &zones, params, &mut rng, ki == 0)
+            match self.pass(ctx, dist, &idx, &mut profile, &zones, params, &mut rng, ki == 0)?
             {
                 Some(d) => {
                     zones.add(d.position, s);
+                    ctx.notify_discord(ki, &d);
                     discords.push(d);
                 }
                 None => break,
             }
         }
 
+        // Leave the refined profile behind for the next search on this
+        // context (Sec. 3.2's carry-over, extended across searches).
+        if dist.is_exact() {
+            ctx.store_warm_profile(s, kind, params.allow_self_match, profile);
+        }
+
         Ok(SearchReport {
             algo: self.name().to_string(),
             discords,
             distance_calls: dist.calls(),
+            prep_calls,
             elapsed: start.elapsed(),
             n_sequences: n,
         })
@@ -287,6 +320,7 @@ mod tests {
     use crate::algo::brute::BruteForce;
     use crate::ts::generators;
     use crate::ts::series::IntoSeries;
+    use crate::ts::TimeSeries;
 
     fn agree_with_brute(ts: &TimeSeries, params: &SearchParams) {
         let hst = HstSearch::default().run(ts, params).unwrap();
@@ -381,9 +415,11 @@ mod tests {
     fn profile_stays_upper_bound_of_exact() {
         // after a full run, every profile value must be >= the exact nnd
         // (approximate nnds are upper bounds by construction)
+        use crate::dist::{CountingDistance, DistanceKind};
         let ts = generators::ecg_like(900, 80, 1, 37).into_series("e");
         let params = SearchParams::new(64, 4, 4);
         let s = params.sax.s;
+        let ctx = SearchContext::builder(&ts).build();
         let stats = crate::ts::SeqStats::compute(&ts, s);
         let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
         let idx = SaxIndex::build(&ts, &stats, &params.sax);
@@ -391,7 +427,7 @@ mod tests {
         let mut profile = NndProfile::new(idx.len());
         warmup::warmup(&dist, &idx, &mut profile, s, false, &mut rng);
         topology::short_range(&dist, &mut profile, idx.len(), s, false);
-        let exact = BruteForce::exact_profile(&ts, &stats, &params, &dist);
+        let exact = BruteForce::exact_profile(&ctx, &params, &dist).unwrap();
         for i in 0..idx.len() {
             assert!(
                 profile.nnd[i] >= exact.nnd[i] - 5e-8,
@@ -400,5 +436,22 @@ mod tests {
                 exact.nnd[i]
             );
         }
+    }
+
+    #[test]
+    fn warm_context_reuses_the_refined_profile() {
+        let ts = generators::ecg_like(1_400, 100, 1, 38).into_series("e");
+        let params = SearchParams::new(80, 4, 4);
+        let ctx = SearchContext::builder(&ts).build();
+        let cold = HstSearch::default().run_ctx(&ctx, &params).unwrap();
+        let warm = HstSearch::default().run_ctx(&ctx, &params).unwrap();
+        assert!(cold.prep_calls > 0, "cold run pays the warm-up");
+        assert_eq!(warm.prep_calls, 0, "warm run must not re-prepare");
+        // both are exact: same discord, same nnd
+        assert_eq!(cold.discords[0].position, warm.discords[0].position);
+        assert!((cold.discords[0].nnd - warm.discords[0].nnd).abs() < 5e-8);
+        // and the one-shot path agrees
+        let oneshot = HstSearch::default().run(&ts, &params).unwrap();
+        assert_eq!(oneshot.discords[0].position, cold.discords[0].position);
     }
 }

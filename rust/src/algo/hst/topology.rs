@@ -5,7 +5,7 @@
 //! ngh(i)+1. Both functions here turn that into targeted distance calls.
 
 use crate::discord::{NndProfile, NO_NEIGHBOR};
-use crate::dist::CountingDistance;
+use crate::dist::Distance;
 
 use crate::algo::non_self_match;
 
@@ -14,7 +14,7 @@ use crate::algo::non_self_match;
 /// `ngh(i)−1` for `i−1`. ~≤ 2N distance calls, usually far fewer because
 /// proposals already in place are skipped.
 pub fn short_range(
-    dist: &CountingDistance,
+    dist: &dyn Distance,
     profile: &mut NndProfile,
     n: usize,
     s: usize,
@@ -42,7 +42,7 @@ pub fn short_range(
 /// and not already recorded. Exact evaluations update both endpoints.
 #[inline]
 fn try_suggest(
-    dist: &CountingDistance,
+    dist: &dyn Distance,
     profile: &mut NndProfile,
     tgt: usize,
     cand: usize,
@@ -75,7 +75,7 @@ fn try_suggest(
 /// (d) the topology loses coherence (no improvement).
 pub fn long_range_forw(
     i: usize,
-    dist: &CountingDistance,
+    dist: &dyn Distance,
     profile: &mut NndProfile,
     best_dist: f64,
     n: usize,
@@ -116,7 +116,7 @@ pub fn long_range_forw(
 /// Long-range backward topology (mirror of [`long_range_forw`]).
 pub fn long_range_back(
     i: usize,
-    dist: &CountingDistance,
+    dist: &dyn Distance,
     profile: &mut NndProfile,
     best_dist: f64,
     _n: usize,
@@ -159,7 +159,8 @@ mod tests {
     use super::*;
     use crate::algo::hst::warmup::warmup;
     use crate::config::SearchParams;
-    use crate::dist::DistanceKind;
+    use crate::context::SearchContext;
+    use crate::dist::{CountingDistance, DistanceKind};
     use crate::sax::SaxIndex;
     use crate::ts::series::IntoSeries;
     use crate::ts::{generators, SeqStats, TimeSeries};
@@ -205,9 +206,10 @@ mod tests {
         let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
         let n = profile.len();
         short_range(&dist, &mut profile, n, s, false);
-        let exact = crate::algo::brute::BruteForce::exact_profile(
-            &ts, &stats, &params, &dist,
-        );
+        let ctx = SearchContext::builder(&ts).build();
+        let exact =
+            crate::algo::brute::BruteForce::exact_profile(&ctx, &params, &dist)
+                .unwrap();
         for i in 0..n {
             assert!(profile.nnd[i] >= exact.nnd[i] - 5e-8, "i={i}");
         }

@@ -15,7 +15,7 @@
 //! possible discord candidate is neglected").
 
 use crate::discord::NndProfile;
-use crate::dist::CountingDistance;
+use crate::dist::Distance;
 use crate::sax::SaxIndex;
 use crate::util::rng::Rng64;
 
@@ -23,7 +23,7 @@ use crate::algo::non_self_match;
 
 /// Run the warm-up chain over `profile`.
 pub fn warmup(
-    dist: &CountingDistance,
+    dist: &dyn Distance,
     idx: &SaxIndex,
     profile: &mut NndProfile,
     s: usize,
@@ -50,7 +50,7 @@ pub fn warmup(
 mod tests {
     use super::*;
     use crate::config::SearchParams;
-    use crate::dist::DistanceKind;
+    use crate::dist::{CountingDistance, DistanceKind};
     use crate::ts::series::IntoSeries;
     use crate::ts::{generators, SeqStats};
 

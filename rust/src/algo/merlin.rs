@@ -13,14 +13,18 @@
 //! * afterwards: r = μ − 2σ of the last 5 discord nnds; on failure retry
 //!   with r ← 0.99·r.
 
+use std::time::Instant;
+
 use anyhow::{ensure, Result};
 
 use crate::config::SearchParams;
+use crate::context::SearchContext;
 use crate::discord::Discord;
-use crate::dist::{CountingDistance, DistanceKind};
-use crate::ts::{SeqStats, TimeSeries};
+use crate::dist::DistanceKind;
+use crate::ts::TimeSeries;
 
 use super::dadd::Dadd;
+use super::{Algorithm, SearchReport};
 
 /// One per-length result.
 #[derive(Debug, Clone)]
@@ -36,7 +40,12 @@ pub struct LengthDiscord {
 }
 
 /// MERLIN driver over our DADD engine.
-#[derive(Debug, Clone)]
+///
+/// The all-zero [`Default`] is the registry form (`algo::by_name("merlin")`):
+/// it derives the scan range from the search params at
+/// [`run_ctx`](Algorithm::run_ctx) time — lengths `[s/2, s]` in steps of
+/// `max(1, s/8)`.
+#[derive(Debug, Clone, Default)]
 pub struct Merlin {
     /// Smallest discord length scanned (inclusive).
     pub min_len: usize,
@@ -63,9 +72,19 @@ impl Merlin {
         self
     }
 
-    /// Scan all lengths; returns one discord per length plus the total
-    /// distance-call count.
-    pub fn run(&self, ts: &TimeSeries) -> Result<(Vec<LengthDiscord>, u64)> {
+    /// One-shot scan of `ts` through a throwaway context (see
+    /// [`scan`](Self::scan) for the session form).
+    pub fn scan_series(&self, ts: &TimeSeries) -> Result<(Vec<LengthDiscord>, u64)> {
+        let ctx = SearchContext::builder(ts).build();
+        self.scan(&ctx)
+    }
+
+    /// Scan all lengths over the context's series; returns one discord
+    /// per length plus the total distance-call count. The context's stats
+    /// cache is shared across lengths (and with any other engine using
+    /// the same context).
+    pub fn scan(&self, ctx: &SearchContext) -> Result<(Vec<LengthDiscord>, u64)> {
+        let ts = ctx.series();
         ensure!(self.min_len >= 4, "min_len too small");
         ensure!(self.min_len <= self.max_len, "empty length range");
         ensure!(
@@ -80,8 +99,12 @@ impl Merlin {
 
         let mut s = self.min_len;
         while s <= self.max_len {
-            let stats = SeqStats::compute(ts, s);
-            let dist = CountingDistance::new(ts, &stats, DistanceKind::Znorm);
+            // Budget is enforced cumulatively across lengths here; within
+            // one length, DADD checks against the per-length session, so
+            // the overshoot is bounded by one length's cost.
+            ctx.check(total_calls)?;
+            let stats = ctx.stats(s);
+            let dist = ctx.distance(&stats, DistanceKind::Znorm);
             let params = SearchParams::new(s, pick_p(s), 4);
 
             // r schedule
@@ -105,7 +128,7 @@ impl Merlin {
                     r,
                     page_size: 10_000,
                 };
-                let outcome = dadd.run_detailed(ts, &params, &dist);
+                let outcome = dadd.run_detailed(ctx, &params, dist.as_ref())?;
                 if let Some(d) = outcome.discords.first() {
                     break d.clone();
                 }
@@ -123,6 +146,58 @@ impl Merlin {
             s += self.step;
         }
         Ok((out, total_calls))
+    }
+}
+
+impl Algorithm for Merlin {
+    fn name(&self) -> &'static str {
+        "merlin"
+    }
+
+    /// Multi-length scan as a registry engine: lengths come from the
+    /// configured range, or — for the all-zero [`Default`] registry form —
+    /// from `params.sax.s` (lengths `[s/2, s]`, step `max(1, s/8)`).
+    /// The report carries the top `params.k` discords across all lengths,
+    /// ranked by raw nnd (longer sequences naturally score higher —
+    /// callers comparing across lengths should inspect the per-length
+    /// results via [`scan`](Self::scan)).
+    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
+        let s = params.sax.s;
+        ctx.check(0)?;
+        let start = Instant::now();
+        let scan_cfg = if self.max_len == 0 {
+            Merlin {
+                min_len: (s / 2).max(4),
+                max_len: s,
+                step: (s / 8).max(1),
+            }
+        } else {
+            self.clone()
+        };
+        let (found, calls) = scan_cfg.scan(ctx)?;
+        let mut ranked: Vec<&LengthDiscord> = found.iter().collect();
+        ranked.sort_by(|a, b| {
+            b.discord
+                .nnd
+                .partial_cmp(&a.discord.nnd)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let discords: Vec<Discord> = ranked
+            .iter()
+            .take(params.k)
+            .map(|ld| ld.discord.clone())
+            .collect();
+        for (rank, d) in discords.iter().enumerate() {
+            ctx.notify_discord(rank, d);
+        }
+        Ok(SearchReport {
+            algo: self.name().to_string(),
+            discords,
+            distance_calls: calls,
+            prep_calls: 0,
+            elapsed: start.elapsed(),
+            n_sequences: ctx.series().num_sequences(s),
+        })
     }
 }
 
@@ -148,7 +223,7 @@ mod tests {
     fn per_length_discords_match_brute() {
         let ts = generators::ecg_like(1_400, 100, 1, 400).into_series("e");
         let merlin = Merlin::new(60, 72).with_step(4);
-        let (found, calls) = merlin.run(&ts).unwrap();
+        let (found, calls) = merlin.scan_series(&ts).unwrap();
         assert_eq!(found.len(), 4); // 60, 64, 68, 72
         assert!(calls > 0);
         for ld in &found {
@@ -168,7 +243,7 @@ mod tests {
     fn r_schedule_warm_starts_after_first_length() {
         let ts = generators::valve_like(1_600, 150, 1, 401).into_series("v");
         let merlin = Merlin::new(96, 104).with_step(2);
-        let (found, _) = merlin.run(&ts).unwrap();
+        let (found, _) = merlin.scan_series(&ts).unwrap();
         // after the cold start, the warm-started lengths converge fast
         for ld in &found[1..] {
             assert!(ld.attempts <= 8, "L={} took {} attempts", ld.s, ld.attempts);
@@ -178,7 +253,27 @@ mod tests {
     #[test]
     fn rejects_degenerate_ranges() {
         let ts = generators::sine_with_noise(500, 0.1, 402).into_series("s");
-        assert!(Merlin::new(100, 50).run(&ts).is_err());
-        assert!(Merlin::new(100, 400).run(&ts).is_err(), "series too short");
+        assert!(Merlin::new(100, 50).scan_series(&ts).is_err());
+        assert!(
+            Merlin::new(100, 400).scan_series(&ts).is_err(),
+            "series too short"
+        );
+    }
+
+    #[test]
+    fn registry_form_scans_around_params_s() {
+        // by_name("merlin") returns the all-zero Default: the scan range
+        // derives from params.sax.s
+        let ts = generators::ecg_like(900, 80, 1, 403).into_series("e");
+        let engine = crate::algo::by_name("merlin").unwrap();
+        let params = SearchParams::new(48, 4, 4);
+        let rep = engine.run(&ts, &params).unwrap();
+        assert_eq!(rep.algo, "merlin");
+        assert_eq!(rep.discords.len(), 1);
+        assert!(rep.distance_calls > 0);
+        // the reported discord is the best across the scanned lengths, so
+        // it must score at least the exact s-length discord
+        let truth = BruteForce.run(&ts, &params).unwrap();
+        assert!(rep.discords[0].nnd >= truth.discords[0].nnd - 5e-8);
     }
 }

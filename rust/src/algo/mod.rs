@@ -10,6 +10,12 @@
 //! Every engine implements [`Algorithm`] and returns a [`SearchReport`]
 //! carrying the discord set, the distance-call count (the paper's primary
 //! metric), and wall-clock time.
+//!
+//! Engines run through a [`SearchContext`] session
+//! ([`Algorithm::run_ctx`], the primary entry point): the context owns the
+//! prepared per-series state (stats, SAX indexes, warm profiles, distance
+//! backend) so repeated searches skip preparation. [`Algorithm::run`] is
+//! the one-shot convenience wrapper over a throwaway context.
 
 pub mod brute;
 pub mod dadd;
@@ -26,6 +32,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::config::SearchParams;
+use crate::context::SearchContext;
 use crate::discord::DiscordSet;
 use crate::ts::TimeSeries;
 
@@ -36,8 +43,14 @@ pub struct SearchReport {
     pub algo: String,
     /// Discords in rank order (1st = highest nnd).
     pub discords: DiscordSet,
-    /// Total calls to the sequence-distance function.
+    /// Total calls to the sequence-distance function (includes
+    /// `prep_calls`).
     pub distance_calls: u64,
+    /// Distance calls spent preparing shared state during *this* search
+    /// (HST's warm-up + short-range topology). 0 when the preparation was
+    /// served from a warm [`SearchContext`], and for engines whose
+    /// preparation needs no distance calls.
+    pub prep_calls: u64,
     /// Wall-clock time of the search proper (excludes series generation).
     pub elapsed: Duration,
     /// Number of sequences N in the search space.
@@ -64,6 +77,7 @@ impl SearchReport {
                 self.discords.iter().map(|d| d.to_json()).collect::<Vec<_>>(),
             )
             .set("distance_calls", self.distance_calls)
+            .set("prep_calls", self.prep_calls)
             .set("elapsed_secs", self.elapsed.as_secs_f64())
             .set("n_sequences", self.n_sequences)
             .set("cps", self.cps())
@@ -75,8 +89,21 @@ pub trait Algorithm {
     /// Short identifier ("hst", "hotsax", …).
     fn name(&self) -> &'static str;
 
-    /// Find the first `params.k` discords of `ts`.
-    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport>;
+    /// Find the first `params.k` discords of the context's series,
+    /// reusing (and extending) the context's prepared state. The primary
+    /// entry point: drive many searches through one [`SearchContext`] to
+    /// amortize preparation.
+    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams)
+        -> Result<SearchReport>;
+
+    /// One-shot convenience: find the first `params.k` discords of `ts`
+    /// through a throwaway context. Preparation is rebuilt — and the
+    /// series cloned into the context — on every call; use
+    /// [`run_ctx`](Self::run_ctx) to amortize both at scale.
+    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport> {
+        let ctx = SearchContext::builder(ts).build();
+        self.run_ctx(&ctx, params)
+    }
 }
 
 /// Look up an algorithm by name (CLI / service entry point).
@@ -90,6 +117,7 @@ pub fn by_name(name: &str) -> Option<Box<dyn Algorithm + Send + Sync>> {
         "scamp" | "stomp" => Some(Box::new(scamp::Scamp::default())),
         "scamp-par" => Some(Box::new(parallel::ParallelScamp::default())),
         "prescrimp" => Some(Box::new(prescrimp::PreScrimp::default())),
+        "merlin" => Some(Box::new(merlin::Merlin::default())),
         _ => None,
     }
 }
@@ -101,13 +129,42 @@ pub(crate) fn non_self_match(i: usize, j: usize, s: usize, allow: bool) -> bool 
     allow || i.abs_diff(j) >= s
 }
 
+/// Up-front budget check shared by the matrix-profile engines: their cost
+/// is data-independent (all pairs above the exclusion band), so the
+/// context's distance-call budget can be enforced before any work starts.
+pub(crate) fn ensure_profile_budget(
+    ctx: &SearchContext,
+    n: usize,
+    s: usize,
+) -> Result<()> {
+    if let Some(budget) = ctx.budget() {
+        let expected: u64 = (s as u64..n as u64).map(|d| n as u64 - d).sum();
+        anyhow::ensure!(
+            expected <= budget,
+            "distance-call budget {budget} below the {expected} pair \
+             evaluations an exact matrix profile needs"
+        );
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn registry_resolves_all_engines() {
-        for n in ["brute", "hotsax", "hst", "dadd", "rra", "scamp", "scamp-par", "prescrimp"] {
+        for n in [
+            "brute",
+            "hotsax",
+            "hst",
+            "dadd",
+            "rra",
+            "scamp",
+            "scamp-par",
+            "prescrimp",
+            "merlin",
+        ] {
             assert!(by_name(n).is_some(), "{n}");
         }
         assert!(by_name("nope").is_none());

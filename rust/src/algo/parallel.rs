@@ -21,6 +21,7 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::config::SearchParams;
+use crate::context::SearchContext;
 use crate::discord::NndProfile;
 use crate::dist::{CountingDistance, DistanceKind};
 use crate::sax::SaxIndex;
@@ -29,14 +30,10 @@ use crate::util::rng::Rng64;
 
 use super::{brute::BruteForce, non_self_match, Algorithm, SearchReport};
 
-/// Merge `other` into `base` (pointwise min, keeping neighbors).
+/// Merge `other` into `base` (pointwise min, keeping neighbors; see
+/// [`NndProfile::merge_min`]).
 pub fn merge_profiles(base: &mut NndProfile, other: &NndProfile) {
-    for i in 0..base.len() {
-        if other.nnd[i] < base.nnd[i] {
-            base.nnd[i] = other.nnd[i];
-            base.ngh[i] = other.ngh[i];
-        }
-    }
+    base.merge_min(other);
 }
 
 /// Exact matrix profile with `threads` workers over diagonal ranges.
@@ -124,19 +121,29 @@ impl Algorithm for ParallelScamp {
         "scamp-par"
     }
 
-    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport> {
+    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         let s = params.sax.s;
+        let ts = ctx.series();
         let n = ts.num_sequences(s);
         ensure!(n >= 2, "series too short for s={s}");
         ensure!(params.znormalize, "matrix profile is z-normalized only");
+        // data-independent cost: the budget is enforced up front
+        super::ensure_profile_budget(ctx, n, s)?;
+        ctx.check(0)?;
         let start = Instant::now();
-        let stats = SeqStats::compute(ts, s);
+        ctx.notify_phase(self.name(), "prepare");
+        let stats = ctx.stats(s);
+        ctx.notify_phase(self.name(), "search");
         let (profile, pairs) = par_matrix_profile(ts, &stats, self.n_threads());
         let discords = BruteForce::discords_from_profile(&profile, s, params.k);
+        for (rank, d) in discords.iter().enumerate() {
+            ctx.notify_discord(rank, d);
+        }
         Ok(SearchReport {
             algo: self.name().to_string(),
             discords,
             distance_calls: pairs,
+            prep_calls: 0,
             elapsed: start.elapsed(),
             n_sequences: n,
         })
@@ -262,7 +269,8 @@ mod tests {
         // cost stays ~2 calls/sequence (+ thread-boundary overlaps)
         assert!(calls <= 3 * idx.len() as u64 + 8);
         let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
-        let exact = BruteForce::exact_profile(&ts, &stats, &params, &dist);
+        let ctx = SearchContext::builder(&ts).build();
+        let exact = BruteForce::exact_profile(&ctx, &params, &dist).unwrap();
         for i in 0..idx.len() {
             assert!(profile.nnd[i] >= exact.nnd[i] - 5e-8, "i={i}");
         }

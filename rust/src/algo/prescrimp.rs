@@ -15,9 +15,10 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::config::SearchParams;
+use crate::context::SearchContext;
 use crate::discord::NndProfile;
-use crate::dist::{CountingDistance, DistanceKind};
-use crate::ts::{SeqStats, TimeSeries};
+use crate::dist::{Backend, DistanceKind};
+use crate::ts::SeqStats;
 
 use super::{brute::BruteForce, Algorithm, SearchReport};
 
@@ -30,13 +31,15 @@ pub struct PreScrimp {
 }
 
 impl PreScrimp {
-    /// Approximate profile + pair-evaluation count.
+    /// Approximate profile + pair-evaluation count, through the context's
+    /// distance backend. Checks the context's run controls once per
+    /// anchor.
     pub fn approx_profile(
         &self,
-        ts: &TimeSeries,
+        ctx: &SearchContext,
         stats: &SeqStats,
         seed: u64,
-    ) -> (NndProfile, u64) {
+    ) -> Result<(NndProfile, u64)> {
         let s = stats.s;
         let n = stats.len();
         let stride = if self.stride == 0 {
@@ -45,12 +48,13 @@ impl PreScrimp {
             self.stride
         };
         let _ = seed; // sampling is deterministic; seed kept for API parity
-        let dist = CountingDistance::new(ts, stats, DistanceKind::Znorm);
+        let dist = ctx.distance(stats, DistanceKind::Znorm);
         let mut profile = NndProfile::new(n);
 
         // anchor pass: each sampled i gets its nn among sampled js
         let samples: Vec<usize> = (0..n).step_by(stride).collect();
         for &i in &samples {
+            ctx.check(dist.calls())?;
             // random subset of partners (anytime flavour): all samples here
             for &j in &samples {
                 if i < j && j - i >= s {
@@ -65,6 +69,7 @@ impl PreScrimp {
 
         // extension pass: walk each anchor match diagonally while improving
         for &i in &samples {
+            ctx.check(dist.calls())?;
             let g = profile.ngh[i];
             if g == crate::discord::NO_NEIGHBOR {
                 continue;
@@ -96,7 +101,7 @@ impl PreScrimp {
             }
         }
         let calls = dist.calls();
-        (profile, calls)
+        Ok((profile, calls))
     }
 }
 
@@ -105,19 +110,33 @@ impl Algorithm for PreScrimp {
         "prescrimp"
     }
 
-    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport> {
+    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         let s = params.sax.s;
-        let n = ts.num_sequences(s);
+        let n = ctx.series().num_sequences(s);
         ensure!(n >= 2, "series too short for s={s}");
         ensure!(params.znormalize, "preSCRIMP is z-normalized only");
+        ctx.check(0)?;
         let start = Instant::now();
-        let stats = SeqStats::compute(ts, s);
-        let (profile, calls) = self.approx_profile(ts, &stats, params.seed);
+        ctx.notify_phase(self.name(), "prepare");
+        let stats = ctx.stats(s);
+        ctx.notify_phase(self.name(), "search");
+        let (profile, calls) = self.approx_profile(ctx, &stats, params.seed)?;
         let discords = BruteForce::discords_from_profile(&profile, s, params.k);
+        for (rank, d) in discords.iter().enumerate() {
+            ctx.notify_discord(rank, d);
+        }
+        // the approximate profile is still a valid upper bound — merged
+        // into the context cache (pointwise min) to warm later exact
+        // searches. Scalar-backend contexts only, like every cache
+        // feeder (a reduced-precision backend must not feed the cache).
+        if ctx.backend() == Backend::Scalar {
+            ctx.store_warm_profile(s, DistanceKind::Znorm, false, profile);
+        }
         Ok(SearchReport {
             algo: self.name().to_string(),
             discords,
             distance_calls: calls,
+            prep_calls: 0,
             elapsed: start.elapsed(),
             n_sequences: n,
         })
@@ -136,7 +155,10 @@ mod tests {
         let ts = generators::ecg_like(1_500, 110, 1, 600).into_series("e");
         let s = 96;
         let stats = SeqStats::compute(&ts, s);
-        let (approx, _) = PreScrimp::default().approx_profile(&ts, &stats, 1);
+        let ctx = SearchContext::builder(&ts).build();
+        let (approx, _) = PreScrimp::default()
+            .approx_profile(&ctx, &stats, 1)
+            .unwrap();
         let (exact, _) = Scamp::matrix_profile(&ts, &stats);
         for i in 0..exact.len() {
             assert!(
@@ -153,7 +175,10 @@ mod tests {
         let ts = generators::sine_with_noise(3_000, 0.1, 601).into_series("s");
         let s = 120;
         let stats = SeqStats::compute(&ts, s);
-        let (_, approx_calls) = PreScrimp::default().approx_profile(&ts, &stats, 2);
+        let ctx = SearchContext::builder(&ts).build();
+        let (_, approx_calls) = PreScrimp::default()
+            .approx_profile(&ctx, &stats, 2)
+            .unwrap();
         let (_, exact_pairs) = Scamp::matrix_profile(&ts, &stats);
         assert!(
             approx_calls * 10 < exact_pairs,

@@ -25,10 +25,10 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::config::SearchParams;
+use crate::context::SearchContext;
 use crate::discord::{Discord, ExclusionZones};
-use crate::dist::{CountingDistance, DistanceKind};
+use crate::dist::Distance;
 use crate::sax::SaxIndex;
-use crate::ts::{SeqStats, TimeSeries};
 use crate::util::rng::Rng64;
 
 use super::{non_self_match, Algorithm, SearchReport};
@@ -83,12 +83,13 @@ pub fn coverage_curve(idx: &SaxIndex, n_points: usize, s: usize) -> Vec<f64> {
 /// One refinement pass: best discord not excluded, outer loop in ascending
 /// coverage order.
 fn find_one(
-    dist: &CountingDistance,
+    ctx: &SearchContext,
+    dist: &dyn Distance,
     order: &[usize],
     random_order: &[usize],
     params: &SearchParams,
     zones: &ExclusionZones,
-) -> Option<Discord> {
+) -> Result<Option<Discord>> {
     let s = params.sax.s;
     let allow = params.allow_self_match;
     let mut best_dist = 0.0f64;
@@ -97,6 +98,7 @@ fn find_one(
         if !zones.allowed(i, s) {
             continue;
         }
+        ctx.check(dist.calls())?;
         let mut nnd_i = f64::INFINITY;
         let mut ngh_i = usize::MAX;
         let mut pruned = false;
@@ -123,7 +125,7 @@ fn find_one(
             });
         }
     }
-    best
+    Ok(best)
 }
 
 impl Algorithm for Rra {
@@ -131,19 +133,16 @@ impl Algorithm for Rra {
         "rra"
     }
 
-    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport> {
+    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         let s = params.sax.s;
+        let ts = ctx.series();
         let n = ts.num_sequences(s);
         ensure!(n >= 2, "series too short for s={s}");
+        ctx.check(0)?;
         let start = Instant::now();
-        let stats = SeqStats::compute(ts, s);
-        let kind = if params.znormalize {
-            DistanceKind::Znorm
-        } else {
-            DistanceKind::Raw
-        };
-        let dist = CountingDistance::new(ts, &stats, kind);
-        let idx = SaxIndex::build(ts, &stats, &params.sax);
+        ctx.notify_phase(self.name(), "prepare");
+        let (stats, idx) = ctx.prepared(&params.sax);
+        let dist = ctx.distance(&stats, params.distance_kind());
         let mut rng = Rng64::new(params.seed ^ 0x5252_4100); // "RRA"
 
         // rarity ordering from grammar coverage
@@ -158,12 +157,14 @@ impl Algorithm for Rra {
         let mut random_order: Vec<usize> = (0..n).collect();
         rng.shuffle(&mut random_order);
 
+        ctx.notify_phase(self.name(), "search");
         let mut zones = ExclusionZones::new();
         let mut discords = Vec::new();
-        for _ in 0..params.k {
-            match find_one(&dist, &order, &random_order, params, &zones) {
+        for rank in 0..params.k {
+            match find_one(ctx, dist.as_ref(), &order, &random_order, params, &zones)? {
                 Some(d) => {
                     zones.add(d.position, s);
+                    ctx.notify_discord(rank, &d);
                     discords.push(d);
                 }
                 None => break,
@@ -174,6 +175,7 @@ impl Algorithm for Rra {
             algo: self.name().to_string(),
             discords,
             distance_calls: dist.calls(),
+            prep_calls: 0,
             elapsed: start.elapsed(),
             n_sequences: n,
         })
@@ -186,6 +188,7 @@ mod tests {
     use crate::algo::brute::BruteForce;
     use crate::ts::generators;
     use crate::ts::series::IntoSeries;
+    use crate::ts::SeqStats;
 
     #[test]
     fn refinement_returns_the_exact_discord() {

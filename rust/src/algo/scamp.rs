@@ -21,8 +21,8 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::config::SearchParams;
+use crate::context::SearchContext;
 use crate::discord::NndProfile;
-use crate::dist::DistanceKind;
 use crate::ts::{SeqStats, TimeSeries};
 
 use super::{brute::BruteForce, Algorithm, SearchReport};
@@ -77,8 +77,9 @@ impl Algorithm for Scamp {
         "scamp"
     }
 
-    fn run(&self, ts: &TimeSeries, params: &SearchParams) -> Result<SearchReport> {
+    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         let s = params.sax.s;
+        let ts = ctx.series();
         let n = ts.num_sequences(s);
         ensure!(n >= 2, "series too short for s={s}");
         ensure!(
@@ -89,15 +90,27 @@ impl Algorithm for Scamp {
             !params.allow_self_match,
             "matrix profile uses the standard exclusion band"
         );
-        let _ = DistanceKind::Znorm;
+        // data-independent cost: the budget is enforced up front
+        super::ensure_profile_budget(ctx, n, s)?;
+        ctx.check(0)?;
         let start = Instant::now();
-        let stats = SeqStats::compute(ts, s);
+        ctx.notify_phase(self.name(), "prepare");
+        let stats = ctx.stats(s);
+        ctx.notify_phase(self.name(), "search");
         let (profile, pairs) = Self::matrix_profile(ts, &stats);
         let discords = BruteForce::discords_from_profile(&profile, s, params.k);
+        for (rank, d) in discords.iter().enumerate() {
+            ctx.notify_discord(rank, d);
+        }
+        // NOT stored as a context warm profile: Eq. 3 dot-form distances
+        // differ from the scalar Eq. 2 loop by float noise, so this
+        // profile is not a strict upper bound for the Distance-backend
+        // engines.
         Ok(SearchReport {
             algo: self.name().to_string(),
             discords,
             distance_calls: pairs,
+            prep_calls: 0,
             elapsed: start.elapsed(),
             n_sequences: n,
         })
@@ -123,7 +136,8 @@ mod tests {
             &stats,
             crate::dist::DistanceKind::Znorm,
         );
-        let exact = BruteForce::exact_profile(&ts, &stats, &params, &dist);
+        let ctx = SearchContext::builder(&ts).build();
+        let exact = BruteForce::exact_profile(&ctx, &params, &dist).unwrap();
         let (mp, _) = Scamp::matrix_profile(&ts, &stats);
         for i in 0..mp.len() {
             assert!(

@@ -4,7 +4,11 @@
 use crate::util::json::Json;
 
 /// SAX discretization parameters (paper notation: s, P, alphabet).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+///
+/// `Hash`/`Eq` so the type can key prepared-state caches (the
+/// [`SearchContext`](crate::context::SearchContext) index cache, the
+/// service coordinator's context LRU).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct SaxParams {
     /// Sequence (discord) length s.
     pub s: usize,
@@ -85,6 +89,16 @@ impl SearchParams {
         self
     }
 
+    /// The distance variant this protocol implies (shared by every
+    /// engine's session setup).
+    pub fn distance_kind(&self) -> crate::dist::DistanceKind {
+        if self.znormalize {
+            crate::dist::DistanceKind::Znorm
+        } else {
+            crate::dist::DistanceKind::Raw
+        }
+    }
+
     /// Serialize for the service protocol / reports.
     pub fn to_json(&self) -> Json {
         Json::obj()
@@ -112,7 +126,11 @@ impl SearchParams {
         if s == 0 {
             return Err("field `s` is required".into());
         }
-        let p = u("p", 4.min(s))?;
+        // Default P: the largest value <= 4 that divides s, so the default
+        // always passes SaxParams::validate (a plain `4.min(s)` fails for
+        // valid lengths like s = 10).
+        let default_p = (1..=4.min(s)).rev().find(|d| s % d == 0).unwrap_or(1);
+        let p = u("p", default_p)?;
         let alphabet = u("alphabet", 4)?;
         let sax = SaxParams { s, p, alphabet };
         sax.validate()?;
@@ -160,6 +178,29 @@ mod tests {
         assert_eq!(p.sax.alphabet, 4);
         assert_eq!(p.k, 1);
         assert!(p.znormalize);
+    }
+
+    #[test]
+    fn from_json_default_p_always_divides_s() {
+        // regression: s = 10 used to default to p = 4, which fails
+        // SaxParams::validate (4 does not divide 10)
+        for (s, want_p) in [(128usize, 4usize), (10, 2), (9, 3), (7, 1), (12, 4)] {
+            let j = Json::parse(&format!(r#"{{"s": {s}}}"#)).unwrap();
+            let p = SearchParams::from_json(&j)
+                .unwrap_or_else(|e| panic!("s={s}: {e}"));
+            assert_eq!(p.sax.p, want_p, "s={s}");
+            assert_eq!(p.sax.s % p.sax.p, 0, "s={s}");
+        }
+    }
+
+    #[test]
+    fn distance_kind_follows_protocol() {
+        use crate::dist::DistanceKind;
+        assert_eq!(SearchParams::new(64, 4, 4).distance_kind(), DistanceKind::Znorm);
+        assert_eq!(
+            SearchParams::new(64, 4, 4).dadd_protocol().distance_kind(),
+            DistanceKind::Raw
+        );
     }
 
     #[test]

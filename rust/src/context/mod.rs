@@ -1,0 +1,488 @@
+//! The search session layer: prepared state shared across engines and
+//! queries.
+//!
+//! HST's entire speed story (paper Sec. 3) is *reuse* — the warm-up
+//! profile, the SAX clusters, and the evolving nnd state persist across
+//! the k-discord loop. A [`SearchContext`] extends that reuse across
+//! *searches*: it is built once per series and owns everything that does
+//! not depend on an individual query:
+//!
+//! * the rolling z-norm [`SeqStats`], cached per sequence length `s`;
+//! * the [`SaxIndex`], cached per [`SaxParams`];
+//! * warm [`NndProfile`]s left behind by profile-producing engines
+//!   (HST, brute force, SCAMP, preSCRIMP), keyed by
+//!   `(s, DistanceKind, allow_self_match)` — every entry is a valid
+//!   upper bound of the exact nnd, so any later search may start from it;
+//! * the distance backend choice ([`Backend`]): the scalar
+//!   [`CountingDistance`] by default, the `pjrt`-gated XLA pair engine
+//!   behind the same [`Distance`] trait on request;
+//! * cross-cutting run controls: a [`CancellationToken`], an optional
+//!   distance-call budget, and a [`SearchObserver`] progress hook.
+//!
+//! Engines consume a context through
+//! [`Algorithm::run_ctx`](crate::algo::Algorithm::run_ctx); the classic
+//! [`Algorithm::run`](crate::algo::Algorithm::run) is a convenience
+//! wrapper that builds a throwaway context. The service
+//! [`Coordinator`](crate::service::Coordinator) keeps an LRU of contexts
+//! so repeated jobs on the same dataset skip preparation entirely — the
+//! same "precompute once, query many times" split SCAMP (Zimmerman et
+//! al. 2019) and MERLIN (Nakamura et al. 2020) build their serving
+//! stories on.
+//!
+//! ```
+//! use hstime::prelude::*;
+//!
+//! let ts = generators::sine_with_noise(2_000, 0.1, 7).into_series("demo");
+//! let ctx = SearchContext::builder(&ts).build();
+//! let params = SearchParams::new(64, 4, 4);
+//! let cold = algo::hst::HstSearch::default().run_ctx(&ctx, &params).unwrap();
+//! let warm = algo::hst::HstSearch::default().run_ctx(&ctx, &params).unwrap();
+//! assert!(cold.prep_calls > 0);
+//! assert_eq!(warm.prep_calls, 0); // preparation served from the context
+//! ```
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Result};
+
+use crate::config::SaxParams;
+use crate::discord::{Discord, NndProfile};
+use crate::dist::{Backend, CountingDistance, Distance, DistanceKind};
+use crate::sax::SaxIndex;
+use crate::ts::{SeqStats, TimeSeries};
+
+/// A cooperative cancellation flag shared between a [`SearchContext`] and
+/// whoever may want to abort its searches (another thread, a deadline
+/// watchdog, a service shutdown path). Cloning shares the flag.
+#[derive(Debug, Clone, Default)]
+pub struct CancellationToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancellationToken {
+    /// A fresh, un-cancelled token.
+    pub fn new() -> CancellationToken {
+        CancellationToken::default()
+    }
+
+    /// Request cancellation: every search on a context holding this token
+    /// stops at its next checkpoint with an error.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    /// Has [`cancel`](Self::cancel) been called?
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+}
+
+/// Progress hooks a [`SearchContext`] fans engine events out to.
+///
+/// All methods have no-op defaults; implement only what you need. Hooks
+/// are called synchronously from the search thread, so they should be
+/// cheap (push to a channel, bump a metric).
+pub trait SearchObserver: Send + Sync {
+    /// A search entered a named phase (`"prepare"`, `"search"`).
+    fn on_phase(&self, _engine: &str, _phase: &str) {}
+
+    /// A discord was confirmed (`rank` is 0-based).
+    fn on_discord(&self, _rank: usize, _discord: &Discord) {}
+}
+
+/// Key of the warm-profile cache: profiles depend on the sequence length
+/// and the distance protocol, not on the SAX discretization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct ProfileKey {
+    s: usize,
+    kind: DistanceKind,
+    allow_self_match: bool,
+}
+
+/// Builder for [`SearchContext`] (see [`SearchContext::builder`]).
+pub struct ContextBuilder {
+    ts: TimeSeries,
+    backend: Backend,
+    cancel: CancellationToken,
+    budget: Option<u64>,
+    observer: Option<Arc<dyn SearchObserver>>,
+    prepare: Vec<SaxParams>,
+}
+
+impl ContextBuilder {
+    /// Select the distance backend (default: [`Backend::Scalar`]). With
+    /// [`Backend::XlaPjrt`] the context tries the XLA pair engine per
+    /// session and silently falls back to the scalar backend when the
+    /// `pjrt` feature is off or no artifacts are available.
+    pub fn backend(mut self, backend: Backend) -> ContextBuilder {
+        self.backend = backend;
+        self
+    }
+
+    /// Attach a cancellation token (clone it to keep a handle for
+    /// cancelling from elsewhere).
+    pub fn cancel_token(mut self, token: CancellationToken) -> ContextBuilder {
+        self.cancel = token;
+        self
+    }
+
+    /// Cap the distance calls any single search through this context may
+    /// spend. The cap is enforced at the engines' outer-loop checkpoints,
+    /// so a search may overshoot by up to one inner loop — and bounded
+    /// preparation phases (HST's ~2N-call warm-up, one MERLIN length) run
+    /// to completion before their next checkpoint — before erroring.
+    pub fn distance_budget(mut self, max_calls: u64) -> ContextBuilder {
+        self.budget = Some(max_calls);
+        self
+    }
+
+    /// Attach a progress observer.
+    pub fn observer(mut self, observer: Arc<dyn SearchObserver>) -> ContextBuilder {
+        self.observer = Some(observer);
+        self
+    }
+
+    /// Eagerly prepare stats + SAX index for `sax` at build time (useful
+    /// when the context is built off the request path). Silently skipped
+    /// when the series is shorter than `sax.s`.
+    pub fn prepare(mut self, sax: SaxParams) -> ContextBuilder {
+        self.prepare.push(sax);
+        self
+    }
+
+    /// Finish the builder.
+    pub fn build(self) -> SearchContext {
+        let ctx = SearchContext {
+            ts: self.ts,
+            backend: self.backend,
+            cancel: self.cancel,
+            budget: self.budget,
+            observer: self.observer,
+            stats_cache: Mutex::new(HashMap::new()),
+            index_cache: Mutex::new(HashMap::new()),
+            profile_cache: Mutex::new(HashMap::new()),
+            #[cfg(feature = "pjrt")]
+            xla_unavailable: AtomicBool::new(false),
+        };
+        for sax in &self.prepare {
+            if ctx.ts.num_sequences(sax.s) > 0 {
+                let _ = ctx.prepared(sax);
+            }
+        }
+        ctx
+    }
+}
+
+/// Prepared per-series search state: the session every engine runs
+/// through (see the [module docs](self)).
+///
+/// A context is `Send + Sync`; share it behind an `Arc` across worker
+/// threads. All caches use interior mutability, so `&SearchContext` is
+/// all an engine needs.
+pub struct SearchContext {
+    ts: TimeSeries,
+    backend: Backend,
+    cancel: CancellationToken,
+    budget: Option<u64>,
+    observer: Option<Arc<dyn SearchObserver>>,
+    stats_cache: Mutex<HashMap<usize, Arc<SeqStats>>>,
+    index_cache: Mutex<HashMap<SaxParams, Arc<SaxIndex>>>,
+    profile_cache: Mutex<HashMap<ProfileKey, NndProfile>>,
+    /// Once an XLA session fails to construct, stop probing the
+    /// filesystem for artifacts on every later search.
+    #[cfg(feature = "pjrt")]
+    xla_unavailable: AtomicBool,
+}
+
+impl SearchContext {
+    /// Start building a context over a copy of `ts`.
+    pub fn builder(ts: &TimeSeries) -> ContextBuilder {
+        SearchContext::builder_owned(ts.clone())
+    }
+
+    /// Start building a context that takes ownership of `ts` (avoids the
+    /// copy when the caller materialized the series for this context).
+    pub fn builder_owned(ts: TimeSeries) -> ContextBuilder {
+        ContextBuilder {
+            ts,
+            backend: Backend::Scalar,
+            cancel: CancellationToken::new(),
+            budget: None,
+            observer: None,
+            prepare: Vec::new(),
+        }
+    }
+
+    /// The series this context prepares.
+    pub fn series(&self) -> &TimeSeries {
+        &self.ts
+    }
+
+    /// The distance backend this context selects.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// The per-search distance-call budget, if any.
+    pub fn budget(&self) -> Option<u64> {
+        self.budget
+    }
+
+    /// A handle on the context's cancellation token.
+    pub fn cancel_token(&self) -> CancellationToken {
+        self.cancel.clone()
+    }
+
+    /// Rolling stats for sequence length `s`, computed once and cached.
+    ///
+    /// Panics when the series is shorter than `s` (engines guard with
+    /// their `n >= 2` precondition before preparing).
+    pub fn stats(&self, s: usize) -> Arc<SeqStats> {
+        let mut cache = self.stats_cache.lock().unwrap();
+        Arc::clone(
+            cache
+                .entry(s)
+                .or_insert_with(|| Arc::new(SeqStats::compute(&self.ts, s))),
+        )
+    }
+
+    /// SAX index for `sax`, computed once and cached.
+    pub fn index(&self, sax: &SaxParams) -> Arc<SaxIndex> {
+        let stats = self.stats(sax.s);
+        let mut cache = self.index_cache.lock().unwrap();
+        Arc::clone(
+            cache
+                .entry(*sax)
+                .or_insert_with(|| Arc::new(SaxIndex::build(&self.ts, &stats, sax))),
+        )
+    }
+
+    /// Stats and index for `sax` in one call (the common engine preamble).
+    pub fn prepared(&self, sax: &SaxParams) -> (Arc<SeqStats>, Arc<SaxIndex>) {
+        (self.stats(sax.s), self.index(sax))
+    }
+
+    /// Is the SAX index for `sax` already cached? (Diagnostics / tests.)
+    pub fn is_prepared(&self, sax: &SaxParams) -> bool {
+        self.index_cache.lock().unwrap().contains_key(sax)
+    }
+
+    /// A distance session over this context's series for one search.
+    ///
+    /// Each session carries its own call counter, so per-search
+    /// accounting stays exact even when many searches share the context.
+    /// The backend is chosen per the builder: scalar by default; with
+    /// [`Backend::XlaPjrt`] under the `pjrt` feature, the XLA pair engine
+    /// when artifacts load, the scalar fallback otherwise.
+    pub fn distance<'a>(
+        &'a self,
+        stats: &'a SeqStats,
+        kind: DistanceKind,
+    ) -> Box<dyn Distance + 'a> {
+        #[cfg(feature = "pjrt")]
+        if self.backend == Backend::XlaPjrt
+            && !self.xla_unavailable.load(Ordering::Relaxed)
+        {
+            match crate::dist::xla_engine::XlaPairDistance::try_new(
+                &self.ts, stats, kind,
+            ) {
+                Ok(engine) => return Box::new(engine),
+                Err(_) => self.xla_unavailable.store(true, Ordering::Relaxed),
+            }
+        }
+        Box::new(CountingDistance::new(&self.ts, stats, kind))
+    }
+
+    /// Run-control checkpoint: engines call this once per outer-loop
+    /// candidate with their session's current call count. Errors when the
+    /// context was cancelled or the distance-call budget is exhausted.
+    pub fn check(&self, distance_calls: u64) -> Result<()> {
+        ensure!(!self.cancel.is_cancelled(), "search cancelled");
+        if let Some(budget) = self.budget {
+            ensure!(
+                distance_calls <= budget,
+                "distance-call budget exceeded: {distance_calls} calls > budget {budget}"
+            );
+        }
+        Ok(())
+    }
+
+    /// A warm nnd profile for `(s, kind, allow_self_match)`, if an earlier
+    /// search left one behind. Every entry is a valid upper bound of the
+    /// exact nnd, so engines may start minimizing from it directly.
+    pub fn warm_profile(
+        &self,
+        s: usize,
+        kind: DistanceKind,
+        allow_self_match: bool,
+    ) -> Option<NndProfile> {
+        let key = ProfileKey { s, kind, allow_self_match };
+        self.profile_cache.lock().unwrap().get(&key).cloned()
+    }
+
+    /// Store a profile for later searches. Callers must only store
+    /// profiles whose entries upper-bound the exact nnds (every profile
+    /// the engines maintain does, by construction). When an entry already
+    /// exists for the key, the profiles are merged by pointwise minimum,
+    /// so a looser profile can never displace a tighter one.
+    pub fn store_warm_profile(
+        &self,
+        s: usize,
+        kind: DistanceKind,
+        allow_self_match: bool,
+        profile: NndProfile,
+    ) {
+        let key = ProfileKey { s, kind, allow_self_match };
+        let mut cache = self.profile_cache.lock().unwrap();
+        match cache.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut entry) => {
+                let existing = entry.get_mut();
+                if existing.len() == profile.len() {
+                    existing.merge_min(&profile);
+                } else {
+                    *existing = profile;
+                }
+            }
+            std::collections::hash_map::Entry::Vacant(slot) => {
+                slot.insert(profile);
+            }
+        }
+    }
+
+    /// Notify the observer (if any) of a phase change.
+    pub fn notify_phase(&self, engine: &str, phase: &str) {
+        if let Some(obs) = &self.observer {
+            obs.on_phase(engine, phase);
+        }
+    }
+
+    /// Notify the observer (if any) of a confirmed discord.
+    pub fn notify_discord(&self, rank: usize, discord: &Discord) {
+        if let Some(obs) = &self.observer {
+            obs.on_discord(rank, discord);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ts::generators;
+    use crate::ts::series::IntoSeries;
+
+    fn series() -> TimeSeries {
+        generators::sine_with_noise(1_000, 0.2, 11).into_series("ctx")
+    }
+
+    #[test]
+    fn stats_and_index_are_cached_by_key() {
+        let ts = series();
+        let ctx = SearchContext::builder(&ts).build();
+        let sax = SaxParams::new(64, 4, 4);
+        let (s1, i1) = ctx.prepared(&sax);
+        let (s2, i2) = ctx.prepared(&sax);
+        assert!(Arc::ptr_eq(&s1, &s2), "stats must be computed once");
+        assert!(Arc::ptr_eq(&i1, &i2), "index must be computed once");
+        // a different s gets its own stats
+        let s3 = ctx.stats(32);
+        assert!(!Arc::ptr_eq(&s1, &s3));
+        assert!(ctx.is_prepared(&sax));
+        assert!(!ctx.is_prepared(&SaxParams::new(32, 4, 4)));
+    }
+
+    #[test]
+    fn eager_prepare_warms_the_index() {
+        let ts = series();
+        let sax = SaxParams::new(50, 5, 4);
+        let ctx = SearchContext::builder(&ts).prepare(sax).build();
+        assert!(ctx.is_prepared(&sax));
+        // too-long s is skipped, not a panic
+        let long = SaxParams::new(4_000, 4, 4);
+        let ctx = SearchContext::builder(&ts).prepare(long).build();
+        assert!(!ctx.is_prepared(&long));
+    }
+
+    #[test]
+    fn distance_sessions_have_independent_counters() {
+        let ts = series();
+        let ctx = SearchContext::builder(&ts).build();
+        let stats = ctx.stats(64);
+        let a = ctx.distance(&stats, DistanceKind::Znorm);
+        let b = ctx.distance(&stats, DistanceKind::Znorm);
+        let _ = a.dist(0, 500);
+        let _ = a.dist(1, 501);
+        assert_eq!(a.calls(), 2);
+        assert_eq!(b.calls(), 0, "sessions must not share counters");
+    }
+
+    #[test]
+    fn check_enforces_cancellation_and_budget() {
+        let ts = series();
+        let token = CancellationToken::new();
+        let ctx = SearchContext::builder(&ts)
+            .cancel_token(token.clone())
+            .distance_budget(100)
+            .build();
+        assert!(ctx.check(0).is_ok());
+        assert!(ctx.check(100).is_ok(), "budget is inclusive");
+        assert!(ctx.check(101).is_err(), "over budget");
+        token.cancel();
+        let err = ctx.check(0).unwrap_err().to_string();
+        assert!(err.contains("cancelled"), "{err}");
+    }
+
+    #[test]
+    fn warm_profiles_are_keyed_by_protocol() {
+        let ts = series();
+        let ctx = SearchContext::builder(&ts).build();
+        let n = ts.num_sequences(64);
+        let mut p = NndProfile::new(n);
+        p.observe(0, 200, 1.5);
+        ctx.store_warm_profile(64, DistanceKind::Znorm, false, p);
+        let got = ctx.warm_profile(64, DistanceKind::Znorm, false).unwrap();
+        assert_eq!(got.nnd[0], 1.5);
+        assert!(ctx.warm_profile(64, DistanceKind::Raw, false).is_none());
+        assert!(ctx.warm_profile(64, DistanceKind::Znorm, true).is_none());
+        assert!(ctx.warm_profile(32, DistanceKind::Znorm, false).is_none());
+    }
+
+    #[test]
+    fn storing_a_looser_profile_keeps_the_tighter_entries() {
+        let ts = series();
+        let ctx = SearchContext::builder(&ts).build();
+        let n = ts.num_sequences(64);
+        let mut tight = NndProfile::new(n);
+        tight.observe(0, 200, 1.0);
+        tight.observe(1, 300, 2.0);
+        ctx.store_warm_profile(64, DistanceKind::Znorm, false, tight);
+        // a later, mostly-unset profile must not displace the tight bounds
+        let mut loose = NndProfile::new(n);
+        loose.observe(0, 400, 5.0);
+        loose.observe(2, 500, 0.5);
+        ctx.store_warm_profile(64, DistanceKind::Znorm, false, loose);
+        let got = ctx.warm_profile(64, DistanceKind::Znorm, false).unwrap();
+        assert_eq!(got.nnd[0], 1.0, "tighter bound survives");
+        assert_eq!(got.nnd[1], 2.0);
+        assert_eq!(got.nnd[2], 0.5, "new information is merged in");
+    }
+
+    #[test]
+    fn context_is_shareable_across_threads() {
+        let ts = series();
+        let ctx = Arc::new(SearchContext::builder(&ts).build());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let ctx = Arc::clone(&ctx);
+            handles.push(std::thread::spawn(move || {
+                let stats = ctx.stats(64);
+                let dist = ctx.distance(&stats, DistanceKind::Znorm);
+                dist.dist(t as usize, 500 + t as usize)
+            }));
+        }
+        for h in handles {
+            assert!(h.join().unwrap().is_finite());
+        }
+    }
+}

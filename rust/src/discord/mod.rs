@@ -133,6 +133,22 @@ impl NndProfile {
         }
     }
 
+    /// Merge `other` into `self` by pointwise minimum, keeping the
+    /// neighbor that achieves each minimum. The min of two valid
+    /// upper-bound profiles is itself a valid upper-bound profile, so
+    /// merging never loses tightness (used by the parallel workers and
+    /// the [`SearchContext`](crate::context::SearchContext) warm-profile
+    /// cache).
+    pub fn merge_min(&mut self, other: &NndProfile) {
+        debug_assert_eq!(self.len(), other.len());
+        for i in 0..self.nnd.len().min(other.nnd.len()) {
+            if other.nnd[i] < self.nnd[i] {
+                self.nnd[i] = other.nnd[i];
+                self.ngh[i] = other.ngh[i];
+            }
+        }
+    }
+
     /// Moving average over a centered window of s+1 entries (paper Eq. 6);
     /// borders keep the raw values. Entries still at the init sentinel are
     /// treated as missing and skipped (a raw +inf would poison the window).
@@ -197,6 +213,22 @@ mod tests {
         p.observe_one(1, 4, 2.0);
         assert_eq!(p.nnd[1], 2.0);
         assert_eq!(p.nnd[4], NND_INIT);
+    }
+
+    #[test]
+    fn merge_min_takes_pointwise_minimum_with_neighbors() {
+        let mut a = NndProfile::new(4);
+        a.observe(0, 2, 1.0);
+        a.observe(1, 3, 5.0);
+        let mut b = NndProfile::new(4);
+        b.observe(0, 3, 2.0);
+        b.observe(1, 2, 3.0);
+        a.merge_min(&b);
+        assert_eq!(a.nnd[0], 1.0);
+        assert_eq!(a.nnd[1], 3.0);
+        assert_eq!(a.ngh[1], 2, "neighbor follows the winning bound");
+        // entries only one side knows about survive
+        assert_eq!(a.nnd[3], 2.0);
     }
 
     #[test]

@@ -15,6 +15,9 @@
 //!   artifacts of [`crate::runtime`].
 //! * [`Backend`] / [`active_backend`] — which of the two this build
 //!   prefers for batch work.
+//! * [`Distance`] — the object-safe trait both backends sit behind; the
+//!   [`SearchContext`](crate::context::SearchContext) session layer hands
+//!   engines a `Box<dyn Distance>` so the backend is a per-context choice.
 //!
 //! Exactness contract (every engine relies on it): whenever the true
 //! distance is **below** the cutoff, [`CountingDistance::dist_early`]
@@ -35,7 +38,7 @@ use crate::ts::{SeqStats, TimeSeries};
 pub use crate::ts::SeqStats as ZnormStats;
 
 /// Which sequence distance to compute.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DistanceKind {
     /// Euclidean distance between z-normalized sequences (paper default).
     Znorm,
@@ -61,6 +64,58 @@ pub fn active_backend() -> Backend {
         Backend::XlaPjrt
     } else {
         Backend::Scalar
+    }
+}
+
+/// Object-safe interface every distance backend implements — the seam the
+/// [`SearchContext`](crate::context::SearchContext) session layer selects a
+/// backend through. Engines program against `&dyn Distance`; which concrete
+/// backend sits behind it (scalar [`CountingDistance`], or the `pjrt`-gated
+/// XLA pair engine) is a per-context choice, not a per-engine one.
+///
+/// Implementations must uphold the exactness contract documented on
+/// [`CountingDistance::dist_early`]: whenever the true distance is below
+/// `cutoff`, the returned value is exact; otherwise any returned lower
+/// bound must itself be `>= cutoff`.
+pub trait Distance {
+    /// The distance variant this backend computes.
+    fn kind(&self) -> DistanceKind;
+
+    /// Distance calls so far in this session (every invocation counts
+    /// once, abandoned or not — the paper's accounting).
+    fn calls(&self) -> u64;
+
+    /// Early-abandoning distance between the sequences starting at `i`
+    /// and `j`: exact when below `cutoff`, otherwise a partial bound that
+    /// is `>= cutoff`.
+    fn dist_early(&self, i: usize, j: usize, cutoff: f64) -> f64;
+
+    /// Exact distance between the sequences starting at `i` and `j`.
+    fn dist(&self, i: usize, j: usize) -> f64 {
+        self.dist_early(i, j, f64::INFINITY)
+    }
+
+    /// Whether this backend's values are exact f64 distances (bit-level
+    /// compatible with [`CountingDistance`]). Backends computing in
+    /// reduced precision (the XLA f32 path) return `false`; their results
+    /// must not be recorded as strict bounds for exact sessions — the
+    /// warm-profile cache checks this before storing or reusing profiles.
+    fn is_exact(&self) -> bool {
+        true
+    }
+}
+
+impl Distance for CountingDistance<'_> {
+    fn kind(&self) -> DistanceKind {
+        CountingDistance::kind(self)
+    }
+
+    fn calls(&self) -> u64 {
+        CountingDistance::calls(self)
+    }
+
+    fn dist_early(&self, i: usize, j: usize, cutoff: f64) -> f64 {
+        CountingDistance::dist_early(self, i, j, cutoff)
     }
 }
 
@@ -265,6 +320,17 @@ mod tests {
             assert!((dist.dist(20, 500) - dist.dist(500, 20)).abs() < 5e-8);
             assert!(dist.dist(123, 123) < 1e-12);
         }
+    }
+
+    #[test]
+    fn trait_object_dispatch_matches_concrete_calls() {
+        let (ts, stats) = setup(600, 60);
+        let concrete = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        let dyn_dist: &dyn Distance = &concrete;
+        let want = CountingDistance::new(&ts, &stats, DistanceKind::Znorm).dist(5, 300);
+        assert_eq!(dyn_dist.dist(5, 300), want);
+        assert_eq!(dyn_dist.kind(), DistanceKind::Znorm);
+        assert_eq!(dyn_dist.calls(), 1);
     }
 
     #[test]

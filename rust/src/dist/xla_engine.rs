@@ -14,8 +14,11 @@
 //! each executed chunk) so XLA-side work remains comparable with the
 //! scalar engine's `calls()` in cps terms.
 
+use std::cell::Cell;
+
 use anyhow::Result;
 
+use crate::dist::{CountingDistance, Distance, DistanceKind};
 use crate::runtime::{ArtifactSet, PreparedSeqs};
 use crate::ts::{SeqStats, TimeSeries};
 
@@ -94,5 +97,75 @@ impl<'a> XlaBatchEngine<'a> {
         let out = self.arts.pair_dist_chain(&self.prep, ia, ib)?;
         self.pair_evals += out.len() as u64;
         Ok(out)
+    }
+}
+
+/// The XLA backend behind the [`Distance`] trait: one prepared series,
+/// pairs evaluated through the `pair_dist` artifact.
+///
+/// This is the [`SearchContext`](crate::context::SearchContext) session
+/// adapter for `Backend::XlaPjrt`: it owns its [`ArtifactSet`] and the
+/// device-ready rows, so the `Box<dyn Distance>` a context hands out is
+/// self-contained. Two caveats the scalar backend does not have:
+///
+/// * artifacts compute in f32 — distances agree with the scalar engine to
+///   ~1e-6 relative, which is below the paper's comparison tolerances but
+///   not bit-identical;
+/// * per-pair dispatch cannot early-abandon, so `cutoff` is ignored (the
+///   returned distance is always exact, which trivially satisfies the
+///   [`Distance`] contract).
+///
+/// If an individual execution fails mid-session the call is completed by
+/// the embedded scalar fallback, so a flaky device degrades throughput,
+/// never correctness.
+pub struct XlaPairDistance<'a> {
+    arts: ArtifactSet,
+    prep: PreparedSeqs,
+    fallback: CountingDistance<'a>,
+    kind: DistanceKind,
+    calls: Cell<u64>,
+}
+
+impl<'a> XlaPairDistance<'a> {
+    /// Load the default artifacts and prepare every sequence of `ts`.
+    /// Errors (no artifacts, no PJRT client, `s > s_pad`) mean the caller
+    /// should fall back to the scalar backend.
+    pub fn try_new(
+        ts: &'a TimeSeries,
+        stats: &'a SeqStats,
+        kind: DistanceKind,
+    ) -> Result<XlaPairDistance<'a>> {
+        let arts = ArtifactSet::load_default()?;
+        let prep =
+            PreparedSeqs::build(&arts, ts, stats, kind == DistanceKind::Znorm)?;
+        Ok(XlaPairDistance {
+            arts,
+            prep,
+            fallback: CountingDistance::new(ts, stats, kind),
+            kind,
+            calls: Cell::new(0),
+        })
+    }
+}
+
+impl Distance for XlaPairDistance<'_> {
+    fn kind(&self) -> DistanceKind {
+        self.kind
+    }
+
+    fn is_exact(&self) -> bool {
+        false // f32 artifacts: not strict bounds for the f64 scalar path
+    }
+
+    fn calls(&self) -> u64 {
+        self.calls.get()
+    }
+
+    fn dist_early(&self, i: usize, j: usize, cutoff: f64) -> f64 {
+        self.calls.set(self.calls.get() + 1);
+        match self.arts.pair_dist_chain(&self.prep, &[i], &[j]) {
+            Ok(d) if d.len() == 1 => d[0],
+            _ => self.fallback.dist_early(i, j, cutoff),
+        }
     }
 }

@@ -23,23 +23,38 @@
 //!
 //! ## Quickstart
 //!
+//! Prepare a [`context::SearchContext`] once per series — it owns the
+//! rolling stats, the SAX index cache, the distance backend, and any warm
+//! nnd profiles — then drive any engine through it:
+//!
 //! ```
 //! use hstime::prelude::*;
 //!
 //! let ts = generators::sine_with_noise(4_000, 0.1, 42).into_series("demo");
+//! let ctx = SearchContext::builder(&ts).build();
 //! let params = SearchParams::new(120, 4, 4).with_discords(1);
-//! let report = algo::hst::HstSearch::default().run(&ts, &params).unwrap();
+//! let report = algo::hst::HstSearch::default().run_ctx(&ctx, &params).unwrap();
 //! let top = &report.discords[0];
 //! println!("discord @ {} nnd={:.4} calls={}",
 //!          top.position, top.nnd, report.distance_calls);
 //! assert!(top.nnd > 0.0);
 //! assert!(report.distance_calls > 0);
+//!
+//! // The context keeps the prepared state warm: a second search skips
+//! // the stats/index/warm-up work entirely.
+//! let warm = algo::hst::HstSearch::default().run_ctx(&ctx, &params).unwrap();
+//! assert!(report.prep_calls > 0);
+//! assert_eq!(warm.prep_calls, 0);
 //! ```
+//!
+//! For one-shot searches, [`algo::Algorithm::run`] still works — it is a
+//! convenience wrapper that builds a throwaway context.
 #![warn(missing_docs)]
 
 pub mod algo;
 pub mod bench;
 pub mod config;
+pub mod context;
 pub mod discord;
 pub mod dist;
 pub mod metrics;
@@ -54,8 +69,13 @@ pub mod util;
 pub mod prelude {
     pub use crate::algo::{self, Algorithm, SearchReport};
     pub use crate::config::{SaxParams, SearchParams};
+    pub use crate::context::{
+        CancellationToken, ContextBuilder, SearchContext, SearchObserver,
+    };
     pub use crate::discord::{Discord, DiscordSet, NndProfile};
-    pub use crate::dist::{CountingDistance, DistanceKind, ZnormStats};
+    pub use crate::dist::{
+        Backend, CountingDistance, Distance, DistanceKind, ZnormStats,
+    };
     pub use crate::metrics::{cps, d_speedup, t_speedup};
     pub use crate::sax::{SaxIndex, SaxWord};
     pub use crate::ts::series::IntoSeries;

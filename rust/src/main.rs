@@ -216,7 +216,7 @@ fn merlin(args: &Args) -> Result<()> {
         args.get_usize("max-len", d.s),
     )
     .with_step(args.get_usize("step", (d.s / 8).max(1)));
-    let (found, calls) = scan.run(&ts)?;
+    let (found, calls) = scan.scan_series(&ts)?;
     println!(
         "MERLIN over L in [{}, {}] step {} — {} lengths, {} distance calls",
         scan.min_len,
@@ -324,7 +324,10 @@ fn info(args: &Args) -> Result<()> {
             d.name, d.paper_len, d.s, d.p, d.alphabet, d.family
         );
     }
-    println!("\nalgorithms: brute, hotsax, hst, dadd, rra, scamp");
+    println!(
+        "\nalgorithms: brute, hotsax, hst, dadd, rra, scamp, scamp-par, \
+         prescrimp, merlin"
+    );
     println!(
         "distance backend: {:?}{}",
         hstime::dist::active_backend(),

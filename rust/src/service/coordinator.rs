@@ -1,4 +1,13 @@
-//! The job coordinator: bounded queue, worker pool, job registry.
+//! The job coordinator: bounded queue, worker pool, job registry, and the
+//! prepared-context LRU.
+//!
+//! The context cache is the serving-layer payoff of the
+//! [`SearchContext`](crate::context::SearchContext) session API: jobs on
+//! the same `(dataset, scale_div, SaxParams)` share one context, so the
+//! series generation, rolling stats, SAX index, and any warm nnd profile
+//! are paid once and every later job starts searching immediately. Each
+//! job report carries `ctx_cache: "hit" | "miss"` plus the engine's
+//! `prep_calls` so the reuse is observable end to end.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
@@ -7,9 +16,14 @@ use std::thread::JoinHandle;
 use anyhow::{bail, Result};
 
 use crate::algo;
-use crate::config::SearchParams;
+use crate::config::{SaxParams, SearchParams};
+use crate::context::SearchContext;
 use crate::ts::{datasets, TimeSeries};
 use crate::util::json::Json;
+
+/// Contexts kept warm by the coordinator (per-process; each context holds
+/// its series plus prepared state, so the cap bounds memory).
+const CONTEXT_CACHE_CAPACITY: usize = 8;
 
 /// A search job.
 #[derive(Debug, Clone)]
@@ -105,6 +119,81 @@ impl JobState {
     }
 }
 
+/// Key of the coordinator's context LRU.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct ContextKey {
+    dataset: String,
+    scale_div: usize,
+    sax: SaxParams,
+}
+
+struct ContextCacheInner {
+    tick: u64,
+    map: HashMap<ContextKey, (Arc<SearchContext>, u64)>,
+}
+
+/// LRU of prepared [`SearchContext`]s shared by the worker pool.
+struct ContextCache {
+    capacity: usize,
+    inner: Mutex<ContextCacheInner>,
+}
+
+impl ContextCache {
+    fn new(capacity: usize) -> ContextCache {
+        ContextCache {
+            capacity: capacity.max(1),
+            inner: Mutex::new(ContextCacheInner {
+                tick: 0,
+                map: HashMap::new(),
+            }),
+        }
+    }
+
+    /// The context for `spec`, building (series + empty caches) on a
+    /// miss. Returns `(context, was_hit)`.
+    fn get_or_build(&self, spec: &JobSpec) -> Result<(Arc<SearchContext>, bool)> {
+        let key = ContextKey {
+            dataset: spec.dataset.clone(),
+            scale_div: spec.scale_div,
+            sax: spec.params.sax,
+        };
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.tick += 1;
+            let tick = g.tick;
+            if let Some(entry) = g.map.get_mut(&key) {
+                entry.1 = tick;
+                return Ok((Arc::clone(&entry.0), true));
+            }
+        }
+        // Build outside the lock: series generation can be slow and must
+        // not block workers hitting other keys.
+        let ts = spec.series()?;
+        let ctx = Arc::new(SearchContext::builder_owned(ts).build());
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if let Some(entry) = g.map.get_mut(&key) {
+            // a racing worker built it first: share theirs (their context
+            // may already be warm)
+            entry.1 = tick;
+            return Ok((Arc::clone(&entry.0), true));
+        }
+        g.map.insert(key, (Arc::clone(&ctx), tick));
+        if g.map.len() > self.capacity {
+            if let Some(evict) = g
+                .map
+                .iter()
+                .min_by_key(|(_, (_, used))| *used)
+                .map(|(k, _)| k.clone())
+            {
+                g.map.remove(&evict);
+            }
+        }
+        Ok((ctx, false))
+    }
+}
+
 struct Inner {
     queue: VecDeque<(u64, JobSpec)>,
     jobs: HashMap<u64, JobState>,
@@ -115,7 +204,8 @@ struct Inner {
 
 /// Thread-pool coordinator with a bounded queue (backpressure: `submit`
 /// rejects when full, so upstream callers must retry/slow down — the same
-/// contract a production ingestion tier would expose).
+/// contract a production ingestion tier would expose) and a shared
+/// prepared-context LRU.
 pub struct Coordinator {
     inner: Arc<(Mutex<Inner>, Condvar)>,
     workers: Vec<JoinHandle<()>>,
@@ -135,10 +225,12 @@ impl Coordinator {
             }),
             Condvar::new(),
         ));
+        let cache = Arc::new(ContextCache::new(CONTEXT_CACHE_CAPACITY));
         let workers = (0..n_workers.max(1))
             .map(|_| {
                 let inner = Arc::clone(&inner);
-                std::thread::spawn(move || worker_loop(inner))
+                let cache = Arc::clone(&cache);
+                std::thread::spawn(move || worker_loop(inner, cache))
             })
             .collect();
         Coordinator {
@@ -212,7 +304,7 @@ impl Coordinator {
     }
 }
 
-fn worker_loop(inner: Arc<(Mutex<Inner>, Condvar)>) {
+fn worker_loop(inner: Arc<(Mutex<Inner>, Condvar)>, cache: Arc<ContextCache>) {
     loop {
         let (id, spec) = {
             let (lock, cvar) = &*inner;
@@ -229,7 +321,7 @@ fn worker_loop(inner: Arc<(Mutex<Inner>, Condvar)>) {
                 g = cvar.wait(g).unwrap();
             }
         };
-        let outcome = run_job(&spec);
+        let outcome = run_job(&spec, &cache);
         let (lock, _) = &*inner;
         let mut g = lock.lock().unwrap();
         g.running -= 1;
@@ -240,16 +332,17 @@ fn worker_loop(inner: Arc<(Mutex<Inner>, Condvar)>) {
     }
 }
 
-fn run_job(spec: &JobSpec) -> Result<Json> {
+fn run_job(spec: &JobSpec, cache: &ContextCache) -> Result<Json> {
     let Some(engine) = algo::by_name(&spec.algo) else {
         bail!("unknown algorithm {:?}", spec.algo);
     };
-    let ts = spec.series()?;
-    let report = engine.run(&ts, &spec.params)?;
+    let (ctx, cache_hit) = cache.get_or_build(spec)?;
+    let report = engine.run_ctx(&ctx, &spec.params)?;
     Ok(report
         .to_json()
         .set("dataset", spec.dataset.as_str())
-        .set("n_points", ts.n_total()))
+        .set("n_points", ctx.series().n_total())
+        .set("ctx_cache", if cache_hit { "hit" } else { "miss" }))
 }
 
 #[cfg(test)]
@@ -321,6 +414,39 @@ mod tests {
                 Some(JobState::Done(_)) => {}
                 other => panic!("job {id}: {other:?}"),
             }
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn repeated_job_hits_the_context_cache() {
+        let c = Coordinator::start(1, 8);
+        let first = c.submit(quick_spec("hst")).unwrap();
+        let first = match c.wait(first) {
+            Some(JobState::Done(j)) => j,
+            other => panic!("unexpected {other:?}"),
+        };
+        let second = c.submit(quick_spec("hst")).unwrap();
+        let second = match c.wait(second) {
+            Some(JobState::Done(j)) => j,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_eq!(first.get("ctx_cache").unwrap().as_str(), Some("miss"));
+        assert_eq!(second.get("ctx_cache").unwrap().as_str(), Some("hit"));
+        // the warm context serves the preparation: no prep calls at all
+        let cold_prep = first.get("prep_calls").unwrap().as_u64().unwrap();
+        let warm_prep = second.get("prep_calls").unwrap().as_u64().unwrap();
+        assert!(cold_prep > 0, "cold job must pay preparation");
+        assert_eq!(warm_prep, 0, "warm job must not re-prepare");
+        // a different dataset key misses
+        let mut other = quick_spec("hst");
+        other.dataset = "synthetic:noise=0.5,n=1500,seed=2".into();
+        let third = c.submit(other).unwrap();
+        match c.wait(third) {
+            Some(JobState::Done(j)) => {
+                assert_eq!(j.get("ctx_cache").unwrap().as_str(), Some("miss"))
+            }
+            other => panic!("unexpected {other:?}"),
         }
         c.shutdown();
     }

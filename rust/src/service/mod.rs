@@ -14,6 +14,13 @@
 //! ← {"ok":true,"job":1,"state":"done","report":{...}}
 //! → {"cmd":"list"} | {"cmd":"shutdown"}
 //! ```
+//!
+//! Workers run jobs through a shared LRU of prepared
+//! [`SearchContext`](crate::context::SearchContext)s keyed by
+//! `(dataset, scale_div, SaxParams)`: repeated jobs on the same series
+//! skip series generation and preparation. Reports carry
+//! `ctx_cache: "hit" | "miss"` and the engine's `prep_calls` so callers
+//! can observe the reuse.
 
 pub mod coordinator;
 pub mod online;

@@ -1,0 +1,173 @@
+//! SearchContext session API: one context driven through several engines
+//! must agree with the one-shot path, reuse must skip preparation, and
+//! the cross-cutting run controls (cancellation, budget, observer) must
+//! hold across engines.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use hstime::algo::{self, Algorithm};
+use hstime::prelude::*;
+
+fn test_series() -> TimeSeries {
+    generators::ecg_like(1_600, 100, 1, 500).into_series("ctx-ecg")
+}
+
+#[test]
+fn one_context_agrees_with_oneshot_across_engines() {
+    let ts = test_series();
+    let params = SearchParams::new(80, 4, 4);
+    let ctx = SearchContext::builder(&ts).build();
+    // deliberately run the engines in sequence on the SAME context: later
+    // engines inherit earlier engines' prepared state and must still
+    // return the exact discord
+    for name in ["brute", "hotsax", "hst"] {
+        let engine = algo::by_name(name).unwrap();
+        let via_ctx = engine.run_ctx(&ctx, &params).unwrap();
+        let oneshot = engine.run(&ts, &params).unwrap();
+        assert_eq!(
+            via_ctx.discords[0].position, oneshot.discords[0].position,
+            "{name}: context and one-shot paths disagree on the discord"
+        );
+        assert!(
+            (via_ctx.discords[0].nnd - oneshot.discords[0].nnd).abs() < 5e-8,
+            "{name}: nnd {} vs {}",
+            via_ctx.discords[0].nnd,
+            oneshot.discords[0].nnd
+        );
+    }
+    assert!(ctx.is_prepared(&params.sax));
+}
+
+#[test]
+fn warm_context_reports_strictly_fewer_prep_calls() {
+    let ts = test_series();
+    let params = SearchParams::new(80, 4, 4);
+    let ctx = SearchContext::builder(&ts).build();
+    let cold = algo::hst::HstSearch::default().run_ctx(&ctx, &params).unwrap();
+    let warm = algo::hst::HstSearch::default().run_ctx(&ctx, &params).unwrap();
+    assert!(cold.prep_calls > 0, "cold context must pay the warm-up");
+    assert!(
+        warm.prep_calls < cold.prep_calls,
+        "warm context must report strictly fewer preparation calls \
+         ({} vs {})",
+        warm.prep_calls,
+        cold.prep_calls
+    );
+    assert_eq!(warm.prep_calls, 0);
+    // totals include prep, so they remain comparable
+    assert!(cold.distance_calls >= cold.prep_calls);
+}
+
+#[test]
+fn exact_warm_profile_from_brute_accelerates_hst() {
+    let ts = test_series();
+    let params = SearchParams::new(80, 4, 4);
+    let ctx = SearchContext::builder(&ts).build();
+    // brute leaves its exact profile behind …
+    let brute = algo::brute::BruteForce.run_ctx(&ctx, &params).unwrap();
+    // … so HST starts fully warm: no prep calls, exact result
+    let hst = algo::hst::HstSearch::default().run_ctx(&ctx, &params).unwrap();
+    assert_eq!(hst.prep_calls, 0);
+    assert_eq!(hst.discords[0].position, brute.discords[0].position);
+    assert!((hst.discords[0].nnd - brute.discords[0].nnd).abs() < 5e-8);
+}
+
+#[test]
+fn pre_cancelled_context_refuses_to_search() {
+    let ts = test_series();
+    let params = SearchParams::new(80, 4, 4);
+    let token = CancellationToken::new();
+    let ctx = SearchContext::builder(&ts)
+        .cancel_token(token.clone())
+        .build();
+    token.cancel();
+    for name in ["brute", "hotsax", "hst", "rra", "scamp", "prescrimp"] {
+        let engine = algo::by_name(name).unwrap();
+        let err = engine.run_ctx(&ctx, &params).unwrap_err().to_string();
+        assert!(err.contains("cancelled"), "{name}: {err}");
+    }
+}
+
+#[test]
+fn distance_budget_aborts_expensive_searches() {
+    let ts = test_series();
+    let params = SearchParams::new(80, 4, 4);
+    let tight = SearchContext::builder(&ts).distance_budget(50).build();
+    for name in ["brute", "hotsax", "hst", "scamp"] {
+        let engine = algo::by_name(name).unwrap();
+        let err = engine.run_ctx(&tight, &params).unwrap_err().to_string();
+        assert!(err.contains("budget"), "{name}: {err}");
+    }
+    // a generous budget never triggers
+    let roomy = SearchContext::builder(&ts)
+        .distance_budget(u64::MAX)
+        .build();
+    let rep = algo::hst::HstSearch::default().run_ctx(&roomy, &params).unwrap();
+    assert!(!rep.discords.is_empty());
+}
+
+#[derive(Default)]
+struct Recorder {
+    phases: AtomicUsize,
+    discords: AtomicUsize,
+}
+
+impl SearchObserver for Recorder {
+    fn on_phase(&self, _engine: &str, _phase: &str) {
+        self.phases.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn on_discord(&self, _rank: usize, _discord: &Discord) {
+        self.discords.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+#[test]
+fn observer_sees_phases_and_discords() {
+    let ts = test_series();
+    let params = SearchParams::new(80, 4, 4).with_discords(3);
+    let recorder = Arc::new(Recorder::default());
+    let ctx = SearchContext::builder(&ts)
+        .observer(Arc::clone(&recorder))
+        .build();
+    let rep = algo::hst::HstSearch::default().run_ctx(&ctx, &params).unwrap();
+    assert!(recorder.phases.load(Ordering::SeqCst) >= 2, "prepare + search");
+    assert_eq!(
+        recorder.discords.load(Ordering::SeqCst),
+        rep.discords.len(),
+        "one notification per reported discord"
+    );
+}
+
+#[test]
+fn xla_backend_request_falls_back_to_scalar_offline() {
+    // without artifacts (and without the pjrt feature at all) requesting
+    // the XLA backend must silently degrade to the scalar engine and
+    // still produce the exact result
+    let ts = test_series();
+    let params = SearchParams::new(80, 4, 4);
+    let ctx = SearchContext::builder(&ts).backend(Backend::XlaPjrt).build();
+    assert_eq!(ctx.backend(), Backend::XlaPjrt);
+    let via_xla_ctx = algo::hst::HstSearch::default().run_ctx(&ctx, &params).unwrap();
+    let oneshot = algo::hst::HstSearch::default().run(&ts, &params).unwrap();
+    assert_eq!(
+        via_xla_ctx.discords[0].position,
+        oneshot.discords[0].position
+    );
+}
+
+#[test]
+fn merlin_runs_as_a_registered_engine() {
+    let ts = generators::ecg_like(900, 80, 1, 501).into_series("merlin-ecg");
+    let engine = algo::by_name("merlin").unwrap();
+    let params = SearchParams::new(48, 4, 4);
+    let ctx = SearchContext::builder(&ts).build();
+    let rep = engine.run_ctx(&ctx, &params).unwrap();
+    assert_eq!(rep.algo, "merlin");
+    assert_eq!(rep.discords.len(), 1);
+    assert!(rep.distance_calls > 0);
+    // the scan shares the context's stats cache across lengths; at least
+    // the full-length stats must now be warm
+    assert!(ctx.stats(48).len() > 0);
+}

@@ -17,7 +17,7 @@ fn merlin_localizes_an_injected_glitch_across_lengths() {
     let mut rng = Rng64::new(2);
     generators::inject(&mut pts, 1_500, 120, generators::Anomaly::Bump, &mut rng);
     let ts = pts.into_series("v");
-    let (found, _) = Merlin::new(96, 144).with_step(16).run(&ts).unwrap();
+    let (found, _) = Merlin::new(96, 144).with_step(16).scan_series(&ts).unwrap();
     assert_eq!(found.len(), 4);
     // at least half the lengths should localize the glitch (at other
     // lengths a background irregularity may legitimately out-score it)

@@ -93,6 +93,37 @@ fn malformed_requests_are_rejected_not_fatal() {
 }
 
 #[test]
+fn repeated_job_skips_re_preparation_via_context_cache() {
+    let (addr, handle) = start_server(1, 8);
+    let mut client = Client::connect(addr).unwrap();
+    let req = submit_req("synthetic:noise=0.3,n=2000,seed=9", "hst", 64, 1);
+
+    let cold_job = client.submit(req.clone()).unwrap();
+    let cold = client.wait(cold_job).unwrap();
+    let cold_report = cold.get("report").unwrap();
+    assert_eq!(cold_report.get("ctx_cache").unwrap().as_str(), Some("miss"));
+    let cold_prep = cold_report.get("prep_calls").unwrap().as_u64().unwrap();
+    assert!(cold_prep > 0, "first job on a dataset must pay preparation");
+
+    let warm_job = client.submit(req).unwrap();
+    let warm = client.wait(warm_job).unwrap();
+    let warm_report = warm.get("report").unwrap();
+    assert_eq!(warm_report.get("ctx_cache").unwrap().as_str(), Some("hit"));
+    let warm_prep = warm_report.get("prep_calls").unwrap().as_u64().unwrap();
+    assert_eq!(warm_prep, 0, "repeated job must skip preparation entirely");
+    assert!(warm_prep < cold_prep);
+
+    // both runs return the same (exact) discord
+    let cold_top = &cold_report.get("discords").unwrap().as_arr().unwrap()[0];
+    let warm_top = &warm_report.get("discords").unwrap().as_arr().unwrap()[0];
+    assert_eq!(
+        cold_top.get("position").unwrap().as_u64(),
+        warm_top.get("position").unwrap().as_u64()
+    );
+    stop_server(addr, handle);
+}
+
+#[test]
 fn failed_job_reports_error_state() {
     let (addr, handle) = start_server(1, 8);
     let mut client = Client::connect(addr).unwrap();

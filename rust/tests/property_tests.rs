@@ -95,7 +95,9 @@ fn prop_warmup_profile_upper_bounds_exact() {
             znormalize: true,
             allow_self_match: false,
         };
-        let exact = algo::brute::BruteForce::exact_profile(&ts, &stats, &params, &dist);
+        let ctx = SearchContext::builder(&ts).build();
+        let exact = algo::brute::BruteForce::exact_profile(&ctx, &params, &dist)
+            .expect("uncontrolled context cannot abort");
         for i in 0..idx.len() {
             prop_assert!(
                 profile.nnd[i] >= exact.nnd[i] - 5e-8,
@@ -180,7 +182,9 @@ fn prop_scamp_profile_equals_brute() {
         let stats = SeqStats::compute(&ts, s);
         let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
         let params = SearchParams::new(s, 8, 4);
-        let exact = algo::brute::BruteForce::exact_profile(&ts, &stats, &params, &dist);
+        let ctx = SearchContext::builder(&ts).build();
+        let exact = algo::brute::BruteForce::exact_profile(&ctx, &params, &dist)
+            .expect("uncontrolled context cannot abort");
         let (mp, _) = algo::scamp::Scamp::matrix_profile(&ts, &stats);
         for i in 0..mp.len() {
             prop_assert!(
