@@ -1,0 +1,26 @@
+//! `cargo bench --bench par_scaling` — serial vs sharded engines
+//! (`hst` vs `hst-par`, `scamp` vs `scamp-par`) wall-clock scaling.
+//!
+//! Flags (after `--`): --scale-div N (default 8), --runs N, --seed N,
+//! --threads N (measure one worker count instead of the {2, 4} sweep),
+//! --full (paper scale), --json.
+
+use hstime::tables::{self, BenchConfig};
+use hstime::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let mut cfg = if args.has("full") { BenchConfig::full() } else { BenchConfig::default() };
+    cfg.scale_div = args.get_usize("scale-div", cfg.scale_div);
+    cfg.runs = args.get_usize("runs", cfg.runs);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.threads = args.get_usize("threads", cfg.threads);
+    let t0 = std::time::Instant::now();
+    let table = tables::parallel(&cfg);
+    if args.has("json") {
+        println!("{}", table.to_json());
+    } else {
+        println!("{}", table.render());
+    }
+    eprintln!("[par_scaling] total {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -24,7 +24,14 @@
 //! through the [`SearchContext`] warm-profile cache, across *searches*:
 //! a second search on a warm context starts from the previous search's
 //! refined profile and skips the warm-up entirely.
+//!
+//! [`par::HstPar`] (`hst-par`) is the sharded-parallel variant the paper
+//! names as future work (Sec. 5): the outer candidate loop is split over
+//! chunks of the SAX-ordered candidate sequence, every worker pruning
+//! against a shared lock-free best-so-far bound, with results identical
+//! to the serial engine.
 
+pub mod par;
 pub mod topology;
 pub mod warmup;
 
@@ -35,7 +42,7 @@ use anyhow::{ensure, Result};
 use crate::config::SearchParams;
 use crate::context::SearchContext;
 use crate::discord::{Discord, ExclusionZones, NndProfile};
-use crate::dist::Distance;
+use crate::dist::{CountingDistance, Distance};
 use crate::sax::SaxIndex;
 use crate::util::rng::Rng64;
 
@@ -89,18 +96,44 @@ impl ScanOrder {
     }
 }
 
+/// Where the inner loop reads its best-so-far pruning bound from: a plain
+/// `f64` on the serial path, the shared [`exec::AtomicF64`] on the
+/// `hst-par` path. Monomorphized, so the serial loop pays nothing.
+///
+/// [`exec::AtomicF64`]: crate::exec::AtomicF64
+pub(crate) trait BoundSrc {
+    /// The current best-so-far discord distance.
+    fn get(&self) -> f64;
+}
+
+impl BoundSrc for f64 {
+    #[inline]
+    fn get(&self) -> f64 {
+        *self
+    }
+}
+
+impl BoundSrc for crate::exec::AtomicF64 {
+    #[inline]
+    fn get(&self) -> f64 {
+        self.load()
+    }
+}
+
 /// The inner minimization for candidate `i` (the HOT SAX inner loop with
 /// profile maintenance): same-cluster first, then remaining clusters from
 /// smallest to biggest. Returns `true` if `i` survived — in which case
-/// `profile.nnd[i]` is its *exact* nnd.
+/// `profile.nnd[i]` is its *exact* nnd. `best` is re-read at every step,
+/// so a shared bound raised by another worker aborts the loop as early as
+/// a serial bound would.
 #[allow(clippy::too_many_arguments)]
-fn minimize(
+pub(crate) fn minimize<B: BoundSrc>(
     i: usize,
     dist: &dyn Distance,
     idx: &SaxIndex,
     scan: &ScanOrder,
     profile: &mut NndProfile,
-    best_dist: f64,
+    best: &B,
     s: usize,
     allow: bool,
 ) -> bool {
@@ -116,7 +149,7 @@ fn minimize(
         if d < cutoff {
             profile.observe(i, j, d); // exact evaluation
         }
-        if profile.nnd[i] < best_dist {
+        if profile.nnd[i] < best.get() {
             return false; // cannot be a discord
         }
     }
@@ -135,7 +168,7 @@ fn minimize(
             if d < cutoff {
                 profile.observe(i, j, d);
             }
-            if profile.nnd[i] < best_dist {
+            if profile.nnd[i] < best.get() {
                 return false;
             }
         }
@@ -200,7 +233,7 @@ impl HstSearch {
 
             if can_be_discord {
                 can_be_discord =
-                    minimize(i, dist, idx, &scan, profile, best_dist, s, allow);
+                    minimize(i, dist, idx, &scan, profile, &best_dist, s, allow);
             }
 
             // Long-range topology: level the peak around i (Listing 2 runs
@@ -214,18 +247,30 @@ impl HstSearch {
             // sentinel; its nnd is undefined, so (like the other engines)
             // it cannot be reported as a discord.
             if can_be_discord && profile.nnd[i].is_finite() {
-                // i is a good discord candidate: nnd[i] is exact and is the
-                // highest exact value so far.
-                best_dist = profile.nnd[i];
-                best = Some(Discord {
-                    position: i,
-                    nnd: profile.nnd[i],
-                    neighbor: profile.ngh[i],
-                });
-                // Sort_Remaining_Ext(): the inner loop just touched almost
-                // every sequence — re-aim the external loop.
-                if self.dynamic_reorder {
-                    sort_by_nnd_desc(&mut order[pos..], &profile.nnd);
+                // i is a good discord candidate: nnd[i] is exact and at
+                // least ties the highest exact value so far. Exact ties
+                // keep the lowest index — the same deterministic rule the
+                // parallel merge applies, so `hst` and `hst-par` agree
+                // even on tied candidates (e.g. a duplicated anomaly).
+                let nnd_i = profile.nnd[i];
+                let better = match &best {
+                    None => true,
+                    Some(b) => {
+                        nnd_i > b.nnd || (nnd_i == b.nnd && i < b.position)
+                    }
+                };
+                if better {
+                    best_dist = nnd_i;
+                    best = Some(Discord {
+                        position: i,
+                        nnd: nnd_i,
+                        neighbor: profile.ngh[i],
+                    });
+                    // Sort_Remaining_Ext(): the inner loop just touched
+                    // almost every sequence — re-aim the external loop.
+                    if self.dynamic_reorder {
+                        sort_by_nnd_desc(&mut order[pos..], &profile.nnd);
+                    }
                 }
             }
         }
@@ -233,21 +278,34 @@ impl HstSearch {
     }
 }
 
-impl Algorithm for HstSearch {
-    fn name(&self) -> &'static str {
-        "hst"
-    }
-
-    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
+impl HstSearch {
+    /// The full serial search, reporting under `algo_name`. Shared by the
+    /// serial engine and by [`par::HstPar`] when it resolves to a single
+    /// worker (one thread ⇒ the serial algorithm, bit-identical calls
+    /// included). `scalar_only` forces the exact scalar distance backend
+    /// regardless of the context's configured backend — `hst-par` sets it
+    /// so its results do not depend on the resolved thread count even on
+    /// an XLA-backed context (its ≥ 2-worker path is always scalar).
+    pub(crate) fn run_serial(
+        &self,
+        ctx: &SearchContext,
+        params: &SearchParams,
+        algo_name: &'static str,
+        scalar_only: bool,
+    ) -> Result<SearchReport> {
         let s = params.sax.s;
         let n = ctx.series().num_sequences(s);
         ensure!(n >= 2, "series too short for s={s}");
         ctx.check(0)?;
         let start = Instant::now();
-        ctx.notify_phase(self.name(), "prepare");
+        ctx.notify_phase(algo_name, "prepare");
         let kind = params.distance_kind();
         let (stats, idx) = ctx.prepared(&params.sax);
-        let dist = ctx.distance(&stats, kind);
+        let dist: Box<dyn Distance + '_> = if scalar_only {
+            Box::new(CountingDistance::new(ctx.series(), &stats, kind))
+        } else {
+            ctx.distance(&stats, kind)
+        };
         let dist: &dyn Distance = dist.as_ref();
         let mut rng = Rng64::new(params.seed ^ 0x4853_5400); // "HST"
 
@@ -282,7 +340,7 @@ impl Algorithm for HstSearch {
         // and cancellation take effect from this checkpoint on.
         ctx.check(dist.calls())?;
 
-        ctx.notify_phase(self.name(), "search");
+        ctx.notify_phase(algo_name, "search");
         let mut zones = ExclusionZones::new();
         let mut discords = Vec::new();
         for ki in 0..params.k {
@@ -304,13 +362,23 @@ impl Algorithm for HstSearch {
         }
 
         Ok(SearchReport {
-            algo: self.name().to_string(),
+            algo: algo_name.to_string(),
             discords,
             distance_calls: dist.calls(),
             prep_calls,
             elapsed: start.elapsed(),
             n_sequences: n,
         })
+    }
+}
+
+impl Algorithm for HstSearch {
+    fn name(&self) -> &'static str {
+        "hst"
+    }
+
+    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
+        self.run_serial(ctx, params, self.name(), false)
     }
 }
 

@@ -1,0 +1,427 @@
+//! `hst-par` — sharded-parallel HST (the paper's Sec. 5 follow-up:
+//! "Parallelizing HST is also a natural follow up of the present work").
+//!
+//! The decomposition follows the HOTSAX-family GPU work (Zymbler &
+//! Kraeva's PD3 shards the candidate/pruning loops over segments; SCAMP
+//! splits diagonals across thread blocks): the **outer candidate loop**
+//! of each discord pass is split over chunks of the SAX-ordered candidate
+//! sequence and executed by the [`exec`](crate::exec) worker pool.
+//!
+//! Per pass:
+//!
+//! 1. **Seed** — the first candidate (the highest approximate nnd) is
+//!    minimized serially, exactly like serial HST's first outer step.
+//!    Its exact nnd initializes the shared best-so-far bound, so no
+//!    worker ever starts pruning against an empty bound (the cold-bound
+//!    stampede would otherwise make every worker minimize in full).
+//! 2. **Shard** — the remaining candidates are claimed chunk-by-chunk
+//!    from a [`ChunkQueue`](crate::exec::ChunkQueue). Each worker owns a
+//!    clone of the nnd profile, its own
+//!    [`CountingDistance`](crate::dist::CountingDistance) session, and
+//!    prunes against the shared [`AtomicF64`](crate::exec::AtomicF64)
+//!    bound, re-read inside the inner loop; survivors publish their exact
+//!    nnd with a CAS-max.
+//! 3. **Merge** — worker profiles fold into the master by pointwise min
+//!    (in worker order), call counters are summed (exact accounting), and
+//!    the discord is the max exact nnd with ties broken by lowest index.
+//!
+//! **Result determinism.** The reported discord *positions and
+//! distances* are independent of scheduling: a candidate is only ever
+//! discarded when its nnd upper bound drops *strictly* below an exact
+//! nnd achieved by another candidate of the same pass, so the global
+//! maximum always survives with its exact (bit-identical to serial)
+//! distance, for any thread count and any interleaving. Two caveats at
+//! ≥ 2 workers: distance-call *counts* depend on how fast the bound
+//! propagates and may vary run to run (they are always the exact sum of
+//! the per-worker counters), and when a discord's nnd is attained by
+//! several neighbors at *bit-equal* distance, the reported `neighbor`
+//! may be any of them (which worker's observation wins the merge is
+//! timing-dependent; the nnd value itself is unaffected). With one
+//! resolved worker the engine runs the serial algorithm unchanged
+//! (bit-identical calls too, on the scalar backend).
+//!
+//! The parallel workers always run the scalar distance backend (each
+//! worker needs a private counter; the scalar backend is exact, so warm
+//! profiles interoperate with serial `hst` through the
+//! [`SearchContext`](crate::context::SearchContext) cache in both
+//! directions).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::config::SearchParams;
+use crate::context::SearchContext;
+use crate::discord::{Discord, ExclusionZones, NndProfile};
+use crate::dist::CountingDistance;
+use crate::exec::{AtomicF64, ChunkQueue, ExecPolicy};
+use crate::sax::SaxIndex;
+use crate::ts::{SeqStats, TimeSeries};
+use crate::util::rng::Rng64;
+
+use super::super::parallel::par_warmup_profile;
+use super::super::{Algorithm, SearchReport};
+use super::{minimize, sort_by_nnd_desc, topology, HstSearch, ScanOrder};
+
+/// The sharded-parallel HST engine.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct HstPar {
+    /// Worker threads. `0` (the default) falls through to
+    /// [`SearchParams::threads`], then the `HST_THREADS` environment
+    /// variable, then the machine's available parallelism
+    /// (the [`ExecPolicy`] resolution order).
+    ///
+    /// [`SearchParams::threads`]: crate::config::SearchParams::threads
+    pub threads: usize,
+}
+
+/// One worker's contribution to a pass: its refined profile copy, the
+/// candidates it confirmed (position, exact nnd), and its distance calls.
+type WorkerOutcome = Result<(NndProfile, Vec<(usize, f64)>, u64)>;
+
+impl HstPar {
+    fn resolve_threads(&self, params: &SearchParams) -> usize {
+        let requested = if self.threads > 0 {
+            self.threads
+        } else {
+            params.threads
+        };
+        ExecPolicy::new(requested).resolve()
+    }
+
+    /// One parallel external-loop pass: find the best discord not excluded
+    /// by `zones`. Returns the discord (if any) and the pass's exact
+    /// distance-call total (sum of the seed phase and every worker).
+    #[allow(clippy::too_many_arguments)] // mirrors the serial pass signature
+    fn pass_par(
+        &self,
+        ctx: &SearchContext,
+        ts: &TimeSeries,
+        stats: &SeqStats,
+        idx: &SaxIndex,
+        profile: &mut NndProfile,
+        zones: &ExclusionZones,
+        params: &SearchParams,
+        rng: &mut Rng64,
+        first_pass: bool,
+        threads: usize,
+        published: &AtomicU64,
+    ) -> Result<(Option<Discord>, u64)> {
+        let s = params.sax.s;
+        let n = idx.len();
+        let allow = params.allow_self_match;
+        let kind = params.distance_kind();
+        let scan = ScanOrder::build(idx, rng);
+
+        // Sort_External(), exactly as the serial pass.
+        let mut order: Vec<usize> =
+            (0..n).filter(|&i| zones.allowed(i, s)).collect();
+        let initial_key: Vec<f64> = if first_pass {
+            profile.smeared(s)
+        } else {
+            profile.nnd.clone()
+        };
+        sort_by_nnd_desc(&mut order, &initial_key);
+        let Some(&lead) = order.first() else {
+            return Ok((None, 0));
+        };
+
+        // Phase 1 — seed: minimize the top candidate serially on the
+        // master profile (serial HST's first outer step verbatim).
+        let seed_dist = CountingDistance::new(ts, stats, kind);
+        let lead_ok =
+            minimize(lead, &seed_dist, idx, &scan, profile, &0.0f64, s, allow);
+        topology::long_range_forw(lead, &seed_dist, profile, 0.0, n, s, allow);
+        topology::long_range_back(lead, &seed_dist, profile, 0.0, n, s, allow);
+        let mut best: Option<(usize, f64)> = (lead_ok
+            && profile.nnd[lead].is_finite())
+        .then_some((lead, profile.nnd[lead]));
+        let mut pass_calls = seed_dist.calls();
+        published.fetch_add(pass_calls, Ordering::Relaxed);
+        ctx.check(published.load(Ordering::Relaxed))?;
+
+        // Phase 2 — shard the remaining candidates across the pool.
+        let rest = &order[1..];
+        if !rest.is_empty() {
+            let bound = AtomicF64::new(best.map_or(0.0, |(_, nnd)| nnd));
+            let chunk = (rest.len() / (threads * 8)).clamp(16, 1024);
+            let queue = ChunkQueue::new(rest, chunk);
+            let master: &NndProfile = profile;
+
+            let outcomes: Vec<WorkerOutcome> =
+                crate::exec::scope_workers(threads, |_w| {
+                    let dist = CountingDistance::new(ts, stats, kind);
+                    let mut local = master.clone();
+                    let mut winners: Vec<(usize, f64)> = Vec::new();
+                    let mut reported = 0u64;
+                    while let Some((_ci, slice)) = queue.take() {
+                        for &i in slice {
+                            // exact global accounting at checkpoint
+                            // granularity: publish this session's delta,
+                            // then enforce budget/cancellation on the sum
+                            let delta = dist.calls() - reported;
+                            reported = dist.calls();
+                            let total = published
+                                .fetch_add(delta, Ordering::Relaxed)
+                                + delta;
+                            ctx.check(total)?;
+
+                            // Avoid_low_nnds() against the shared bound.
+                            let mut can = local.nnd[i] >= bound.load();
+                            if can {
+                                can = minimize(
+                                    i, &dist, idx, &scan, &mut local, &bound,
+                                    s, allow,
+                                );
+                            }
+                            topology::long_range_forw(
+                                i,
+                                &dist,
+                                &mut local,
+                                bound.load(),
+                                n,
+                                s,
+                                allow,
+                            );
+                            topology::long_range_back(
+                                i,
+                                &dist,
+                                &mut local,
+                                bound.load(),
+                                n,
+                                s,
+                                allow,
+                            );
+                            if can && local.nnd[i].is_finite() {
+                                // exact nnd: publish so every other worker
+                                // prunes against it immediately
+                                bound.fetch_max(local.nnd[i]);
+                                winners.push((i, local.nnd[i]));
+                            }
+                        }
+                    }
+                    published.fetch_add(
+                        dist.calls() - reported,
+                        Ordering::Relaxed,
+                    );
+                    Ok((local, winners, dist.calls()))
+                });
+
+            // Phase 3 — ordered merge (worker 0 first): deterministic
+            // profile fold, exact call sum, lowest-index tie-break.
+            for outcome in outcomes {
+                let (local, winners, calls) = outcome?;
+                profile.merge_min(&local);
+                pass_calls += calls;
+                for (i, nnd) in winners {
+                    best = match best {
+                        None => Some((i, nnd)),
+                        Some((bi, bn)) if nnd > bn || (nnd == bn && i < bi) => {
+                            Some((i, nnd))
+                        }
+                        keep => keep,
+                    };
+                }
+            }
+        }
+
+        let found = best.map(|(i, nnd)| Discord {
+            position: i,
+            nnd,
+            neighbor: profile.ngh[i],
+        });
+        Ok((found, pass_calls))
+    }
+}
+
+impl Algorithm for HstPar {
+    fn name(&self) -> &'static str {
+        "hst-par"
+    }
+
+    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
+        let threads = self.resolve_threads(params);
+        if threads <= 1 {
+            // one worker ⇒ the serial algorithm, bit-identical calls too;
+            // scalar_only keeps the backend independent of the thread
+            // count (the ≥ 2-worker path is always scalar)
+            return HstSearch::default()
+                .run_serial(ctx, params, self.name(), true);
+        }
+
+        let s = params.sax.s;
+        let ts = ctx.series();
+        let n = ts.num_sequences(s);
+        ensure!(n >= 2, "series too short for s={s}");
+        ctx.check(0)?;
+        let start = Instant::now();
+        ctx.notify_phase(self.name(), "prepare");
+        let kind = params.distance_kind();
+        let (stats, idx) = ctx.prepared(&params.sax);
+        let stats: &SeqStats = &stats;
+        let mut rng = Rng64::new(params.seed ^ 0x4853_5400); // "HST"
+
+        // Warm start mirrors serial hst: the scalar workers are exact, so
+        // the context's warm-profile cache serves (and is fed by) both
+        // engines interchangeably. A cold context pays the parallel
+        // warm-up + short-range topology instead of the serial one.
+        let mut prep_calls = 0u64;
+        let mut profile = match ctx.warm_profile(s, kind, params.allow_self_match)
+        {
+            Some(p) if p.len() == n => p,
+            _ => {
+                let (p, calls) =
+                    par_warmup_profile(ts, stats, &idx, params, threads);
+                prep_calls = calls;
+                p
+            }
+        };
+        let published = AtomicU64::new(prep_calls);
+        ctx.check(prep_calls)?;
+
+        ctx.notify_phase(self.name(), "search");
+        let mut zones = ExclusionZones::new();
+        let mut discords = Vec::new();
+        let mut total_calls = prep_calls;
+        for ki in 0..params.k {
+            let (found, calls) = self.pass_par(
+                ctx,
+                ts,
+                stats,
+                &idx,
+                &mut profile,
+                &zones,
+                params,
+                &mut rng,
+                ki == 0,
+                threads,
+                &published,
+            )?;
+            total_calls += calls;
+            match found {
+                Some(d) => {
+                    zones.add(d.position, s);
+                    ctx.notify_discord(ki, &d);
+                    discords.push(d);
+                }
+                None => break,
+            }
+        }
+
+        // Scalar workers are exact: leave the refined profile behind for
+        // the next search (serial or parallel) on this context.
+        ctx.store_warm_profile(s, kind, params.allow_self_match, profile);
+
+        Ok(SearchReport {
+            algo: self.name().to_string(),
+            discords,
+            distance_calls: total_calls,
+            prep_calls,
+            elapsed: start.elapsed(),
+            n_sequences: n,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::brute::BruteForce;
+    use crate::ts::generators;
+    use crate::ts::series::IntoSeries;
+
+    #[test]
+    fn matches_serial_hst_across_thread_counts() {
+        let ts = generators::ecg_like(1_600, 100, 1, 91).into_series("e");
+        let params = SearchParams::new(80, 4, 4).with_discords(3);
+        let serial = HstSearch::default().run(&ts, &params).unwrap();
+        for threads in [1usize, 2, 4] {
+            let par = HstPar { threads }.run(&ts, &params).unwrap();
+            assert_eq!(par.algo, "hst-par");
+            assert_eq!(
+                par.discords.len(),
+                serial.discords.len(),
+                "threads={threads}"
+            );
+            for (p, q) in par.discords.iter().zip(&serial.discords) {
+                assert_eq!(p.position, q.position, "threads={threads}");
+                assert_eq!(
+                    p.nnd.to_bits(),
+                    q.nnd.to_bits(),
+                    "threads={threads}: {} vs {}",
+                    p.nnd,
+                    q.nnd
+                );
+            }
+            assert!(par.distance_calls > 0);
+            if threads == 1 {
+                assert_eq!(
+                    par.distance_calls, serial.distance_calls,
+                    "one worker must be the serial algorithm verbatim"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_against_brute_force() {
+        let ts = generators::valve_like(1_400, 130, 1, 92).into_series("v");
+        let params =
+            SearchParams::new(96, 4, 4).with_discords(2).with_threads(3);
+        let par = HstPar::default().run(&ts, &params).unwrap();
+        let bf = BruteForce.run(&ts, &params).unwrap();
+        assert_eq!(par.discords.len(), bf.discords.len());
+        for (p, b) in par.discords.iter().zip(&bf.discords) {
+            assert!(
+                (p.nnd - b.nnd).abs() < 5e-8,
+                "{} vs {}",
+                p.nnd,
+                b.nnd
+            );
+        }
+    }
+
+    #[test]
+    fn warm_context_serves_both_directions() {
+        let ts = generators::respiration_like(1_800, 120, 1, 93).into_series("r");
+        let params = SearchParams::new(96, 4, 4);
+        // hst warms the context, hst-par reuses it …
+        let ctx = SearchContext::builder(&ts).build();
+        let cold = HstSearch::default().run_ctx(&ctx, &params).unwrap();
+        let warm = HstPar { threads: 2 }.run_ctx(&ctx, &params).unwrap();
+        assert!(cold.prep_calls > 0);
+        assert_eq!(warm.prep_calls, 0, "hst-par must reuse hst's profile");
+        assert_eq!(cold.discords[0].position, warm.discords[0].position);
+        // … and the other way around
+        let ctx2 = SearchContext::builder(&ts).build();
+        let cold2 = HstPar { threads: 2 }.run_ctx(&ctx2, &params).unwrap();
+        let warm2 = HstSearch::default().run_ctx(&ctx2, &params).unwrap();
+        assert!(cold2.prep_calls > 0);
+        assert_eq!(warm2.prep_calls, 0, "hst must reuse hst-par's profile");
+        assert_eq!(cold2.discords[0].position, warm2.discords[0].position);
+    }
+
+    #[test]
+    fn cancellation_propagates_from_workers() {
+        use crate::context::CancellationToken;
+        let ts = generators::sine_with_noise(1_500, 0.4, 94).into_series("s");
+        let token = CancellationToken::new();
+        token.cancel();
+        let ctx = SearchContext::builder(&ts).cancel_token(token).build();
+        let err = HstPar { threads: 2 }
+            .run_ctx(&ctx, &SearchParams::new(64, 4, 4))
+            .unwrap_err();
+        assert!(err.to_string().contains("cancelled"), "{err}");
+    }
+
+    #[test]
+    fn dadd_protocol_is_supported() {
+        let ts = generators::ecg_like(1_200, 90, 1, 95).into_series("e");
+        let params = SearchParams::new(64, 4, 4).dadd_protocol();
+        let serial = HstSearch::default().run(&ts, &params).unwrap();
+        let par = HstPar { threads: 2 }.run(&ts, &params).unwrap();
+        assert_eq!(par.discords[0].position, serial.discords[0].position);
+        assert_eq!(par.discords[0].nnd.to_bits(), serial.discords[0].nnd.to_bits());
+    }
+}

@@ -3,9 +3,13 @@
 //! * [`brute`] — O(N²) ground truth (the correctness oracle for tests).
 //! * [`hotsax`] — the 2005 baseline (Keogh, Lin & Fu).
 //! * [`hst`] — **the paper's contribution**: HOT SAX Time.
+//! * [`hst::par`] — `hst-par`, HST with the outer candidate loop sharded
+//!   over the [`exec`](crate::exec) worker pool (the paper's Sec. 5
+//!   follow-up); results identical to serial `hst`.
 //! * [`dadd`] — Disk-Aware Discord Discovery / DRAG (Yankov et al. 2008).
 //! * [`rra`] — Rare Rule Anomaly via Sequitur (Senin et al. 2015).
-//! * [`scamp`] — exact matrix profile (SCAMP/STOMP-style; serial + XLA-tiled).
+//! * [`scamp`] — exact matrix profile (SCAMP/STOMP-style; serial + XLA-tiled);
+//!   `scamp-par` splits diagonals across the same worker pool.
 //!
 //! Every engine implements [`Algorithm`] and returns a [`SearchReport`]
 //! carrying the discord set, the distance-call count (the paper's primary
@@ -112,6 +116,7 @@ pub fn by_name(name: &str) -> Option<Box<dyn Algorithm + Send + Sync>> {
         "brute" => Some(Box::new(brute::BruteForce)),
         "hotsax" | "hot-sax" | "hot_sax" => Some(Box::new(hotsax::HotSax)),
         "hst" | "hotsaxtime" => Some(Box::new(hst::HstSearch::default())),
+        "hst-par" | "hstpar" | "hst_par" => Some(Box::new(hst::par::HstPar::default())),
         "dadd" | "drag" => Some(Box::new(dadd::Dadd::default())),
         "rra" => Some(Box::new(rra::Rra::default())),
         "scamp" | "stomp" => Some(Box::new(scamp::Scamp::default())),
@@ -158,6 +163,7 @@ mod tests {
             "brute",
             "hotsax",
             "hst",
+            "hst-par",
             "dadd",
             "rra",
             "scamp",

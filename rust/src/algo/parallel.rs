@@ -1,20 +1,23 @@
 //! Parallel engines — the paper's "natural follow up" (Sec. 5:
 //! "Parallelizing HST is also a natural follow up of the present work").
 //!
-//! Two pieces are embarrassingly parallel and implemented here with
-//! std scoped threads (no external runtime):
+//! Both pieces here run on the [`exec`](crate::exec) subsystem (scoped
+//! worker pool, deterministic chunking, ordered merge):
 //!
 //! * [`ParallelScamp`] — the exact matrix profile split by diagonal
-//!   ranges, one partial profile per worker, merged at the end. This is
-//!   the same decomposition SCAMP uses across GPU thread blocks.
+//!   ranges, one partial profile per worker, merged in worker order. This
+//!   is the same decomposition SCAMP uses across GPU thread blocks. The
+//!   worker count resolves through [`ExecPolicy`]
+//!   ([`SearchParams::threads`] → `HST_THREADS` → available parallelism).
 //! * [`par_warmup_profile`] — the HST warm-up + short-range topology over
-//!   P disjoint chunks of the cluster chain, giving HST a parallel
-//!   initialization while the (inherently sequential) pruning loop stays
-//!   serial.
+//!   P disjoint chunks of the cluster chain: the parallel initialization
+//!   shared by [`hst-par`](crate::algo::hst::par::HstPar).
 //!
 //! Each worker owns its own [`CountingDistance`] (the counter is a
 //! `Cell`, deliberately not `Sync`); call counts are summed afterwards so
 //! the accounting stays exact.
+//!
+//! [`SearchParams::threads`]: crate::config::SearchParams::threads
 
 use std::time::Instant;
 
@@ -24,6 +27,7 @@ use crate::config::SearchParams;
 use crate::context::SearchContext;
 use crate::discord::NndProfile;
 use crate::dist::{CountingDistance, DistanceKind};
+use crate::exec::{scope_workers, ExecPolicy};
 use crate::sax::SaxIndex;
 use crate::ts::{SeqStats, TimeSeries};
 use crate::util::rng::Rng64;
@@ -48,44 +52,36 @@ pub fn par_matrix_profile(
     let pts = &ts.points;
     let sf = s as f64;
 
-    let mut results: Vec<(NndProfile, u64)> = Vec::new();
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for w in 0..threads {
-            handles.push(scope.spawn(move || {
-                let mut profile = NndProfile::new(n);
-                let mut pairs = 0u64;
-                // interleaved diagonals: balanced load (long diagonals are
-                // spread across workers)
-                let mut diag = s + w;
-                while diag < n {
-                    let mut qt = 0.0;
-                    for t in 0..s {
-                        qt += pts[t] * pts[diag + t];
-                    }
-                    let mut i = 0usize;
-                    loop {
-                        let j = i + diag;
-                        let corr = (qt - sf * stats.mean[i] * stats.mean[j])
-                            / (sf * stats.std[i] * stats.std[j]);
-                        let d = (2.0 * sf * (1.0 - corr)).max(0.0).sqrt();
-                        profile.observe(i, j, d);
-                        pairs += 1;
-                        i += 1;
-                        if i + diag >= n {
-                            break;
-                        }
-                        qt += pts[i + s - 1] * pts[i + diag + s - 1]
-                            - pts[i - 1] * pts[i + diag - 1];
-                    }
-                    diag += threads;
+    // interleaved diagonals: balanced load (long diagonals are spread
+    // across workers); the per-diagonal recurrence is identical to the
+    // serial engine, so the merged profile is bit-identical to serial
+    let results = scope_workers(threads, |w| {
+        let mut profile = NndProfile::new(n);
+        let mut pairs = 0u64;
+        let mut diag = s + w;
+        while diag < n {
+            let mut qt = 0.0;
+            for t in 0..s {
+                qt += pts[t] * pts[diag + t];
+            }
+            let mut i = 0usize;
+            loop {
+                let j = i + diag;
+                let corr = (qt - sf * stats.mean[i] * stats.mean[j])
+                    / (sf * stats.std[i] * stats.std[j]);
+                let d = (2.0 * sf * (1.0 - corr)).max(0.0).sqrt();
+                profile.observe(i, j, d);
+                pairs += 1;
+                i += 1;
+                if i + diag >= n {
+                    break;
                 }
-                (profile, pairs)
-            }));
+                qt += pts[i + s - 1] * pts[i + diag + s - 1]
+                    - pts[i - 1] * pts[i + diag - 1];
+            }
+            diag += threads;
         }
-        for h in handles {
-            results.push(h.join().expect("scamp worker panicked"));
-        }
+        (profile, pairs)
     });
 
     let mut merged = NndProfile::new(n);
@@ -97,24 +93,14 @@ pub fn par_matrix_profile(
     (merged, total_pairs)
 }
 
-/// Multi-threaded SCAMP engine.
+/// Multi-threaded SCAMP engine. The worker count comes from the shared
+/// [`ExecPolicy`] resolution over [`SearchParams::threads`]
+/// (`0` → `HST_THREADS` → available parallelism) — nothing is hardcoded
+/// in the engine.
+///
+/// [`SearchParams::threads`]: crate::config::SearchParams::threads
 #[derive(Debug, Default, Clone, Copy)]
-pub struct ParallelScamp {
-    /// Worker threads (0, the default = available parallelism).
-    pub threads: usize,
-}
-
-impl ParallelScamp {
-    fn n_threads(&self) -> usize {
-        if self.threads > 0 {
-            self.threads
-        } else {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4)
-        }
-    }
-}
+pub struct ParallelScamp;
 
 impl Algorithm for ParallelScamp {
     fn name(&self) -> &'static str {
@@ -134,7 +120,8 @@ impl Algorithm for ParallelScamp {
         ctx.notify_phase(self.name(), "prepare");
         let stats = ctx.stats(s);
         ctx.notify_phase(self.name(), "search");
-        let (profile, pairs) = par_matrix_profile(ts, &stats, self.n_threads());
+        let threads = ExecPolicy::new(params.threads).resolve();
+        let (profile, pairs) = par_matrix_profile(ts, &stats, threads);
         let discords = BruteForce::discords_from_profile(&profile, s, params.k);
         for (rank, d) in discords.iter().enumerate() {
             ctx.notify_discord(rank, d);
@@ -181,33 +168,21 @@ pub fn par_warmup_profile(
     };
 
     let seg = n.div_ceil(threads);
-    let mut results: Vec<(NndProfile, u64)> = Vec::new();
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for w in 0..threads {
-            let chain = &chain;
-            let lo = w * seg;
-            if lo >= n {
-                break;
+    let chain = &chain;
+    let results = scope_workers(threads, |w| {
+        let lo = (w * seg).min(n);
+        // overlap by one so the link crossing the boundary is computed
+        let hi = ((w + 1) * seg + 1).min(n);
+        let dist = CountingDistance::new(ts, stats, kind);
+        let mut profile = NndProfile::new(n);
+        for t in lo..hi.saturating_sub(1) {
+            let (a, b) = (chain[t], chain[t + 1]);
+            if non_self_match(a, b, s, allow) {
+                let d = dist.dist(a, b);
+                profile.observe(a, b, d);
             }
-            // overlap by one so the link crossing the boundary is computed
-            let hi = ((w + 1) * seg + 1).min(n);
-            handles.push(scope.spawn(move || {
-                let dist = CountingDistance::new(ts, stats, kind);
-                let mut profile = NndProfile::new(n);
-                for t in lo..hi.saturating_sub(1) {
-                    let (a, b) = (chain[t], chain[t + 1]);
-                    if non_self_match(a, b, s, allow) {
-                        let d = dist.dist(a, b);
-                        profile.observe(a, b, d);
-                    }
-                }
-                (profile, dist.calls())
-            }));
         }
-        for h in handles {
-            results.push(h.join().expect("warmup worker panicked"));
-        }
+        (profile, dist.calls())
     });
 
     let mut merged = NndProfile::new(n);
@@ -239,9 +214,11 @@ mod tests {
             let (par, pairs) = par_matrix_profile(&ts, &stats, threads);
             assert_eq!(pairs, serial_pairs, "threads={threads}");
             for i in 0..serial.len() {
-                assert!(
-                    (par.nnd[i] - serial.nnd[i]).abs() < 5e-8,
-                    "threads={threads} i={i}"
+                assert_eq!(
+                    par.nnd[i].to_bits(),
+                    serial.nnd[i].to_bits(),
+                    "threads={threads} i={i}: same per-diagonal recurrence \
+                     must give bit-identical minima"
                 );
             }
         }
@@ -250,8 +227,10 @@ mod tests {
     #[test]
     fn parallel_scamp_engine_matches_brute() {
         let ts = generators::valve_like(1_200, 140, 1, 701).into_series("v");
-        let params = SearchParams::new(96, 4, 4).with_discords(2);
-        let par = ParallelScamp { threads: 3 }.run(&ts, &params).unwrap();
+        let params = SearchParams::new(96, 4, 4)
+            .with_discords(2)
+            .with_threads(3);
+        let par = ParallelScamp.run(&ts, &params).unwrap();
         let bf = BruteForce.run(&ts, &params).unwrap();
         for (a, b) in par.discords.iter().zip(&bf.discords) {
             assert!((a.nnd - b.nnd).abs() < 1e-6);
@@ -283,5 +262,27 @@ mod tests {
         let (_, p1) = par_matrix_profile(&ts, &stats, 1);
         let (_, p8) = par_matrix_profile(&ts, &stats, 8);
         assert_eq!(p1, p8);
+    }
+
+    #[test]
+    fn scamp_par_resolves_threads_from_params() {
+        // any explicit thread count must give the same report as serial
+        let ts = generators::ecg_like(900, 80, 1, 704).into_series("e");
+        let params = SearchParams::new(64, 4, 4);
+        let serial = Scamp.run(&ts, &params).unwrap();
+        for threads in [1usize, 2, 4] {
+            let par = ParallelScamp
+                .run(&ts, &params.clone().with_threads(threads))
+                .unwrap();
+            assert_eq!(par.distance_calls, serial.distance_calls);
+            assert_eq!(
+                par.discords[0].position,
+                serial.discords[0].position
+            );
+            assert_eq!(
+                par.discords[0].nnd.to_bits(),
+                serial.discords[0].nnd.to_bits()
+            );
+        }
     }
 }

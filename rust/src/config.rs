@@ -56,6 +56,12 @@ pub struct SearchParams {
     pub znormalize: bool,
     /// Allow overlapping (self-match) comparisons (Table 7 protocol only).
     pub allow_self_match: bool,
+    /// Worker threads for the parallel engines (`hst-par`, `scamp-par`).
+    /// `0` (the default) resolves through
+    /// [`ExecPolicy`](crate::exec::ExecPolicy): the `HST_THREADS`
+    /// environment variable, then the machine's available parallelism.
+    /// Serial engines ignore it.
+    pub threads: usize,
 }
 
 impl SearchParams {
@@ -67,6 +73,7 @@ impl SearchParams {
             seed: 0,
             znormalize: true,
             allow_self_match: false,
+            threads: 0,
         }
     }
 
@@ -79,6 +86,13 @@ impl SearchParams {
     /// Set the seed for the pseudo-random search-order choices.
     pub fn with_seed(mut self, seed: u64) -> SearchParams {
         self.seed = seed;
+        self
+    }
+
+    /// Request a worker-thread count for the parallel engines (`0` =
+    /// resolve automatically; see the [`threads`](Self::threads) field).
+    pub fn with_threads(mut self, threads: usize) -> SearchParams {
+        self.threads = threads;
         self
     }
 
@@ -109,10 +123,37 @@ impl SearchParams {
             .set("seed", self.seed)
             .set("znormalize", self.znormalize)
             .set("allow_self_match", self.allow_self_match)
+            .set("threads", self.threads)
     }
 
-    /// Parse from the service protocol. Missing fields get defaults.
+    /// Field names [`from_json`](Self::from_json) accepts.
+    pub const JSON_FIELDS: [&'static str; 8] = [
+        "s",
+        "p",
+        "alphabet",
+        "k",
+        "seed",
+        "znormalize",
+        "allow_self_match",
+        "threads",
+    ];
+
+    /// Parse from the service protocol. Missing fields get defaults;
+    /// unknown fields are rejected by name (a typo must not silently run
+    /// a different search).
     pub fn from_json(v: &Json) -> Result<SearchParams, String> {
+        if let Json::Obj(map) = v {
+            if let Some(bad) =
+                map.keys().find(|k| !Self::JSON_FIELDS.contains(&k.as_str()))
+            {
+                return Err(format!(
+                    "unknown field `{bad}` in params (known: {})",
+                    Self::JSON_FIELDS.join(", ")
+                ));
+            }
+        } else {
+            return Err("params must be a JSON object".into());
+        }
         let u = |key: &str, default: usize| -> Result<usize, String> {
             match v.get(key) {
                 None => Ok(default),
@@ -146,6 +187,7 @@ impl SearchParams {
                 .get("allow_self_match")
                 .and_then(|j| j.as_bool())
                 .unwrap_or(false),
+            threads: u("threads", 0)?,
         })
     }
 }
@@ -164,10 +206,32 @@ mod tests {
 
     #[test]
     fn json_roundtrip() {
-        let p = SearchParams::new(120, 4, 4).with_discords(10).with_seed(7);
+        let p = SearchParams::new(120, 4, 4)
+            .with_discords(10)
+            .with_seed(7)
+            .with_threads(4);
         let j = p.to_json();
         let back = SearchParams::from_json(&j).unwrap();
         assert_eq!(p, back);
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_fields_by_name() {
+        // regression: a typo'd field used to be silently ignored, running
+        // a different search than the caller asked for
+        let j = Json::parse(r#"{"s": 64, "treads": 4}"#).unwrap();
+        let err = SearchParams::from_json(&j).unwrap_err();
+        assert!(err.contains("`treads`"), "{err}");
+        assert!(SearchParams::from_json(&Json::Num(3.0)).is_err());
+    }
+
+    #[test]
+    fn threads_defaults_to_auto() {
+        let j = Json::parse(r#"{"s": 64}"#).unwrap();
+        assert_eq!(SearchParams::from_json(&j).unwrap().threads, 0);
+        let j = Json::parse(r#"{"s": 64, "threads": 2}"#).unwrap();
+        assert_eq!(SearchParams::from_json(&j).unwrap().threads, 2);
+        assert_eq!(SearchParams::new(64, 4, 4).threads, 0);
     }
 
     #[test]

@@ -1,0 +1,117 @@
+//! Lock-free shared f64 bound: an `f64` bit-packed into an `AtomicU64`
+//! with CAS-min / CAS-max update loops.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A shared best-so-far value workers prune against.
+///
+/// The value only moves monotonically (via [`fetch_max`](Self::fetch_max)
+/// or [`fetch_min`](Self::fetch_min)), so `Relaxed` ordering is
+/// sufficient: a stale read yields a *looser* bound, which costs pruning
+/// power but never correctness. NaN updates are ignored (a NaN never
+/// compares greater or smaller, so the CAS loop never stores one).
+#[derive(Debug)]
+pub struct AtomicF64 {
+    bits: AtomicU64,
+}
+
+impl AtomicF64 {
+    /// A bound starting at `v`.
+    pub fn new(v: f64) -> AtomicF64 {
+        AtomicF64 {
+            bits: AtomicU64::new(v.to_bits()),
+        }
+    }
+
+    /// The current value.
+    #[inline]
+    pub fn load(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    /// Raise the bound to `v` if `v` is greater; returns the previous
+    /// value. The discord-search direction: the best (largest) confirmed
+    /// nnd so far.
+    pub fn fetch_max(&self, v: f64) -> f64 {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let cf = f64::from_bits(cur);
+            if !(v > cf) {
+                return cf;
+            }
+            match self.bits.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return cf,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Lower the bound to `v` if `v` is smaller; returns the previous
+    /// value. The nearest-neighbor direction: the smallest distance seen
+    /// so far.
+    pub fn fetch_min(&self, v: f64) -> f64 {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let cf = f64::from_bits(cur);
+            if !(v < cf) {
+                return cf;
+            }
+            match self.bits.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return cf,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_and_min_move_monotonically() {
+        let b = AtomicF64::new(0.0);
+        assert_eq!(b.fetch_max(2.5), 0.0);
+        assert_eq!(b.fetch_max(1.0), 2.5, "lower value must not regress");
+        assert_eq!(b.load(), 2.5);
+
+        let m = AtomicF64::new(f64::INFINITY);
+        m.fetch_min(3.0);
+        m.fetch_min(9.0);
+        assert_eq!(m.load(), 3.0);
+    }
+
+    #[test]
+    fn nan_updates_are_ignored() {
+        let b = AtomicF64::new(1.0);
+        b.fetch_max(f64::NAN);
+        b.fetch_min(f64::NAN);
+        assert_eq!(b.load(), 1.0);
+    }
+
+    #[test]
+    fn concurrent_fetch_max_keeps_the_global_maximum() {
+        let b = AtomicF64::new(f64::NEG_INFINITY);
+        std::thread::scope(|scope| {
+            for w in 0..8u32 {
+                let b = &b;
+                scope.spawn(move || {
+                    for i in 0..1_000u32 {
+                        b.fetch_max(f64::from(w * 1_000 + i));
+                    }
+                });
+            }
+        });
+        assert_eq!(b.load(), 7_999.0);
+    }
+}

@@ -1,0 +1,45 @@
+//! The execution subsystem: one place for every thread the engines spawn.
+//!
+//! The paper closes with "Parallelizing HST is also a natural follow up
+//! of the present work" (Sec. 5). Before this module existed, the
+//! crate's parallelism was two ad-hoc `std::thread::scope` blocks with
+//! hardcoded worker counts; every parallel code path now builds on this
+//! module:
+//!
+//! * [`ExecPolicy`] — *how many* workers. One resolution order everywhere:
+//!   an explicit request (engine field, [`SearchParams::threads`], CLI
+//!   `--threads`) wins, then the `HST_THREADS` environment variable, then
+//!   the machine's available parallelism. Used by `hst-par`, `scamp-par`,
+//!   the service worker pool, and the CLI.
+//! * [`scope_workers`] — *where* they run. A scoped worker pool: spawn
+//!   `threads` workers over a shared closure, join all, return their
+//!   results **in worker order** (the ordered merge the deterministic
+//!   engines rely on). Used by every parallel engine.
+//! * [`ChunkQueue`] — *what* they run. Items are split into deterministic
+//!   chunks (chunk boundaries depend only on the input length, never on
+//!   timing); workers claim chunks dynamically for load balance. `hst-par`
+//!   drives it directly because its workers carry per-chunk state (a
+//!   profile clone and a private distance session);
+//!   [`parallel_for_chunks`] is the convenience composition of the two
+//!   for stateless chunk maps, returning per-chunk results in chunk
+//!   order.
+//! * [`AtomicF64`] — *what they share*. A lock-free f64 bound, bit-packed
+//!   in an `AtomicU64` with CAS-min/CAS-max, for the best-so-far value
+//!   every worker prunes against (HST's best discord distance so far, a
+//!   matrix-profile engine's running minimum).
+//!
+//! Distance-call accounting under parallelism follows one rule: each
+//! worker owns its own [`CountingDistance`](crate::dist::CountingDistance)
+//! (its counter is a `Cell`, deliberately not `Sync`) and the per-worker
+//! counts are summed after the join — so `distance_calls` and cps stay
+//! exact, never sampled or approximated.
+//!
+//! [`SearchParams::threads`]: crate::config::SearchParams::threads
+
+mod bound;
+mod policy;
+mod pool;
+
+pub use bound::AtomicF64;
+pub use policy::{ExecPolicy, THREADS_ENV};
+pub use pool::{parallel_for_chunks, scope_workers, ChunkQueue};

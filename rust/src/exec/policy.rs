@@ -1,0 +1,83 @@
+//! Thread-count resolution shared by every parallel code path.
+
+/// Environment variable consulted when no explicit thread count was
+/// requested (CLI `--threads` / [`SearchParams::threads`] /
+/// engine fields all map to an explicit request).
+///
+/// [`SearchParams::threads`]: crate::config::SearchParams::threads
+pub const THREADS_ENV: &str = "HST_THREADS";
+
+/// How many workers a parallel engine should run.
+///
+/// One resolution order for the whole crate (engines, service, CLI,
+/// benches):
+///
+/// 1. an explicit request (`> 0`) — from an engine field, a
+///    [`SearchParams::threads`](crate::config::SearchParams::threads)
+///    value, or the CLI `--threads` flag;
+/// 2. the [`THREADS_ENV`] (`HST_THREADS`) environment variable, when it
+///    parses to a positive integer;
+/// 3. [`std::thread::available_parallelism`] (falling back to 4 when the
+///    platform cannot report it).
+///
+/// The resolved count is always ≥ 1.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecPolicy {
+    requested: usize,
+}
+
+impl ExecPolicy {
+    /// Policy with an explicit request; `0` means "no request" and falls
+    /// through to the environment / hardware defaults.
+    pub fn new(requested: usize) -> ExecPolicy {
+        ExecPolicy { requested }
+    }
+
+    /// No explicit request: resolve from `HST_THREADS`, then hardware.
+    pub fn auto() -> ExecPolicy {
+        ExecPolicy::new(0)
+    }
+
+    /// The explicit request carried by this policy (`0` = none).
+    pub fn request(&self) -> usize {
+        self.requested
+    }
+
+    /// Resolve to a concrete worker count (always ≥ 1; see the type docs
+    /// for the resolution order).
+    pub fn resolve(&self) -> usize {
+        if self.requested > 0 {
+            return self.requested;
+        }
+        if let Ok(v) = std::env::var(THREADS_ENV) {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n > 0 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_request_wins() {
+        assert_eq!(ExecPolicy::new(3).resolve(), 3);
+        assert_eq!(ExecPolicy::new(1).resolve(), 1);
+        assert_eq!(ExecPolicy::new(7).request(), 7);
+    }
+
+    #[test]
+    fn auto_resolves_to_at_least_one() {
+        // no assumptions about the environment beyond positivity
+        assert!(ExecPolicy::auto().resolve() >= 1);
+        assert_eq!(ExecPolicy::auto().request(), 0);
+        assert_eq!(ExecPolicy::default(), ExecPolicy::auto());
+    }
+}

@@ -1,0 +1,193 @@
+//! The scoped worker pool and its chunked work-distribution primitives.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Run `f(worker_id)` on `threads` scoped workers and return the results
+/// **in worker order** (worker 0 first). This ordered merge is what makes
+/// reductions over per-worker partial results deterministic: the merge
+/// sequence depends only on the worker count, never on completion timing.
+///
+/// `threads` is clamped to ≥ 1; with a single worker the closure runs on
+/// the calling thread (no spawn overhead on the serial path).
+///
+/// Panics in a worker propagate as a panic here (an engine bug, not a
+/// recoverable condition — fallible workers should return `Result` as
+/// their `R`).
+pub fn scope_workers<R, F>(threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 {
+        return vec![f(0)];
+    }
+    let mut out: Vec<R> = Vec::with_capacity(threads);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|w| {
+                let f = &f;
+                scope.spawn(move || f(w))
+            })
+            .collect();
+        for h in handles {
+            out.push(h.join().expect("exec worker panicked"));
+        }
+    });
+    out
+}
+
+/// A dynamic queue of deterministic chunks over a shared slice.
+///
+/// Chunk *boundaries* are a pure function of `(items.len(), chunk_size)`;
+/// only the worker→chunk *assignment* is dynamic (an atomic claim
+/// counter), so faster workers take more chunks while every result can
+/// still be keyed by its stable chunk index.
+#[derive(Debug)]
+pub struct ChunkQueue<'a, T> {
+    items: &'a [T],
+    chunk: usize,
+    next: AtomicUsize,
+}
+
+impl<'a, T> ChunkQueue<'a, T> {
+    /// A queue over `items` in chunks of `chunk_size` (clamped to ≥ 1).
+    pub fn new(items: &'a [T], chunk_size: usize) -> ChunkQueue<'a, T> {
+        ChunkQueue {
+            items,
+            chunk: chunk_size.max(1),
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    /// Total number of chunks this queue will hand out.
+    pub fn num_chunks(&self) -> usize {
+        self.items.len().div_ceil(self.chunk)
+    }
+
+    /// Claim the next unclaimed chunk: `(chunk_index, slice)`, or `None`
+    /// once every chunk has been handed out.
+    pub fn take(&self) -> Option<(usize, &'a [T])> {
+        loop {
+            let seen = self.next.load(Ordering::Relaxed);
+            if seen >= self.num_chunks() {
+                return None;
+            }
+            // claim by CAS so `next` never runs away past the chunk count
+            if self
+                .next
+                .compare_exchange_weak(
+                    seen,
+                    seen + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                )
+                .is_err()
+            {
+                continue;
+            }
+            let lo = seen * self.chunk;
+            let hi = (lo + self.chunk).min(self.items.len());
+            return Some((seen, &self.items[lo..hi]));
+        }
+    }
+}
+
+/// Map `f` over deterministic chunks of `items` on `threads` workers and
+/// return the per-chunk results **in chunk order**.
+///
+/// Chunk boundaries depend only on the input length, workers claim chunks
+/// dynamically (load balance), and the ordered merge makes the output
+/// independent of scheduling — the same `Vec` for any thread count.
+pub fn parallel_for_chunks<T, R, F>(
+    items: &[T],
+    threads: usize,
+    chunk_size: usize,
+    f: F,
+) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &[T]) -> R + Sync,
+{
+    let queue = ChunkQueue::new(items, chunk_size);
+    let per_worker = scope_workers(threads, |_w| {
+        let mut got: Vec<(usize, R)> = Vec::new();
+        while let Some((ci, slice)) = queue.take() {
+            got.push((ci, f(ci, slice)));
+        }
+        got
+    });
+    let mut all: Vec<(usize, R)> = per_worker.into_iter().flatten().collect();
+    all.sort_by_key(|&(ci, _)| ci);
+    all.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_workers_returns_in_worker_order() {
+        for threads in [1, 2, 4, 7] {
+            let ids = scope_workers(threads, |w| w);
+            assert_eq!(ids, (0..threads).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn chunk_queue_hands_out_every_item_exactly_once() {
+        let items: Vec<usize> = (0..103).collect();
+        let q = ChunkQueue::new(&items, 10);
+        assert_eq!(q.num_chunks(), 11);
+        let mut seen = Vec::new();
+        while let Some((ci, slice)) = q.take() {
+            assert_eq!(slice[0], ci * 10, "chunk start is deterministic");
+            seen.extend_from_slice(slice);
+        }
+        assert_eq!(seen, items);
+        assert!(q.take().is_none(), "queue stays drained");
+    }
+
+    #[test]
+    fn chunk_queue_concurrent_claims_do_not_overlap() {
+        let items: Vec<usize> = (0..10_000).collect();
+        let q = ChunkQueue::new(&items, 7);
+        let parts = scope_workers(4, |_| {
+            let mut mine = Vec::new();
+            while let Some((_, slice)) = q.take() {
+                mine.extend_from_slice(slice);
+            }
+            mine
+        });
+        let mut all: Vec<usize> = parts.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, items);
+    }
+
+    #[test]
+    fn parallel_for_chunks_is_deterministic_across_thread_counts() {
+        let items: Vec<u64> = (0..1_000).collect();
+        let serial = parallel_for_chunks(&items, 1, 16, |ci, slice| {
+            (ci, slice.iter().sum::<u64>())
+        });
+        for threads in [2, 3, 4, 8] {
+            let par = parallel_for_chunks(&items, threads, 16, |ci, slice| {
+                (ci, slice.iter().sum::<u64>())
+            });
+            assert_eq!(par, serial, "threads={threads}");
+        }
+        // chunk indices arrive in order
+        for (pos, (ci, _)) in serial.iter().enumerate() {
+            assert_eq!(*ci, pos);
+        }
+    }
+
+    #[test]
+    fn empty_input_yields_no_chunks() {
+        let items: [u8; 0] = [];
+        assert!(ChunkQueue::new(&items, 8).take().is_none());
+        let out = parallel_for_chunks(&items, 4, 8, |_, s| s.len());
+        assert!(out.is_empty());
+    }
+}

@@ -5,11 +5,13 @@
 //!
 //! The crate is the **Layer-3 Rust coordinator** of a three-layer stack:
 //!
-//! * **L3 (this crate)** — the discord-search engines (HST, HOT SAX, brute
-//!   force, DADD/DRAG, RRA, SCAMP/STOMP), the SAX substrate, dataset
-//!   generators, the batch-search service coordinator, metrics (cost per
-//!   sequence, D-/T-speedups), and the benchmark harness that regenerates
-//!   every table and figure of the paper.
+//! * **L3 (this crate)** — the discord-search engines (HST and its
+//!   sharded-parallel `hst-par`, HOT SAX, brute force, DADD/DRAG, RRA,
+//!   SCAMP/STOMP serial and parallel), the [`exec`] worker-pool
+//!   subsystem, the SAX substrate, dataset generators, the batch-search
+//!   service coordinator, metrics (cost per sequence, D-/T-speedups), and
+//!   the benchmark harness that regenerates every table and figure of the
+//!   paper.
 //! * **L2 (python/compile/model.py, build-time only)** — JAX compute graphs
 //!   (batched z-normalized distance, matrix-profile tiles) AOT-lowered to
 //!   HLO text artifacts.
@@ -57,6 +59,7 @@ pub mod config;
 pub mod context;
 pub mod discord;
 pub mod dist;
+pub mod exec;
 pub mod metrics;
 pub mod runtime;
 pub mod sax;
@@ -76,6 +79,7 @@ pub mod prelude {
     pub use crate::dist::{
         Backend, CountingDistance, Distance, DistanceKind, ZnormStats,
     };
+    pub use crate::exec::ExecPolicy;
     pub use crate::metrics::{cps, d_speedup, t_speedup};
     pub use crate::sax::{SaxIndex, SaxWord};
     pub use crate::ts::series::IntoSeries;

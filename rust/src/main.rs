@@ -9,7 +9,8 @@
 //!   info                 registry, artifact, and build information
 //!
 //! Common flags: --scale-div N (dataset length divisor, default 8),
-//! --full (paper scale), --runs N, --seed N, --json, --algo NAME.
+//! --full (paper scale), --runs N, --seed N, --json, --algo NAME,
+//! --threads N (parallel engines; 0 = HST_THREADS env, then all cores).
 
 use anyhow::{bail, Context, Result};
 
@@ -55,17 +56,20 @@ fn run(args: &Args) -> Result<()> {
 
 const USAGE: &str = "usage: hst <discover|table|report|plot|merlin|monitor|generate|serve|submit|info> [flags]
   hst discover 'ECG 108' --algo hst --k 3 --scale-div 8
+  hst discover 'ECG 108' --algo hst-par --threads 4
   hst discover synthetic --noise 0.001 --n 20000 --s 120
   hst table all --scale-div 8 --runs 3
   hst table 4 --full
+  hst table parallel --threads 4
   hst report --out report.md --scale-div 8
   hst plot 'Shuttle TEK 14' --k 2
   hst merlin 'ECG 108' --min-len 80 --max-len 120 --step 8
   hst monitor 'ECG 15' --window 4000 --batch 1000
   hst generate 'Shuttle TEK 14' --out tek14.txt
-  hst serve --addr 127.0.0.1:7878 --workers 4
-  hst submit --addr 127.0.0.1:7878 --dataset 'ECG 15' --algo hst --k 2
-  hst info";
+  hst serve --addr 127.0.0.1:7878 --workers 4   (0 = HST_THREADS/all cores)
+  hst submit --addr 127.0.0.1:7878 --dataset 'ECG 15' --algo hst-par --threads 2
+  hst info
+thread control: --threads N on discover/submit/table, or HST_THREADS env";
 
 fn bench_config(args: &Args) -> BenchConfig {
     let mut cfg = if args.has("full") {
@@ -76,6 +80,7 @@ fn bench_config(args: &Args) -> BenchConfig {
     cfg.scale_div = args.get_usize("scale-div", cfg.scale_div);
     cfg.runs = args.get_usize("runs", cfg.runs);
     cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.threads = args.get_usize("threads", cfg.threads);
     cfg
 }
 
@@ -109,7 +114,8 @@ fn discover(args: &Args) -> Result<()> {
     let alpha = args.get_usize("alphabet", default_params.sax.alphabet);
     let params = SearchParams::new(s, p, alpha)
         .with_discords(args.get_usize("k", 1))
-        .with_seed(args.get_u64("seed", 0));
+        .with_seed(args.get_u64("seed", 0))
+        .with_threads(args.get_usize("threads", 0));
 
     let report = engine.run(&ts, &params)?;
     if args.has("json") {
@@ -281,7 +287,9 @@ fn generate(args: &Args) -> Result<()> {
 
 fn serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
-    let workers = args.get_usize("workers", 4);
+    // 0 = size the pool via ExecPolicy (HST_THREADS, then all cores)
+    let workers = hstime::exec::ExecPolicy::new(args.get_usize("workers", 0))
+        .resolve();
     let capacity = args.get_usize("capacity", 64);
     println!("hstime service: workers={workers} capacity={capacity}");
     service::serve(addr.as_str(), workers, capacity, |bound| {
@@ -305,7 +313,8 @@ fn submit(args: &Args) -> Result<()> {
                 .set("p", args.get_usize("p", 4))
                 .set("alphabet", args.get_usize("alphabet", 4))
                 .set("k", args.get_usize("k", 1))
-                .set("seed", args.get_u64("seed", 0)),
+                .set("seed", args.get_u64("seed", 0))
+                .set("threads", args.get_usize("threads", 0)),
         );
     let mut client = service::Client::connect(addr.as_str())?;
     let job = client.submit(req)?;
@@ -325,8 +334,13 @@ fn info(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "\nalgorithms: brute, hotsax, hst, dadd, rra, scamp, scamp-par, \
-         prescrimp, merlin"
+        "\nalgorithms: brute, hotsax, hst, hst-par, dadd, rra, scamp, \
+         scamp-par, prescrimp, merlin"
+    );
+    println!(
+        "threads: --threads N on discover/submit/table, HST_THREADS env, \
+         default all cores (currently resolves to {})",
+        hstime::exec::ExecPolicy::auto().resolve()
     );
     println!(
         "distance backend: {:?}{}",

@@ -39,8 +39,28 @@ pub struct JobSpec {
 }
 
 impl JobSpec {
+    /// Top-level request fields [`from_json`](Self::from_json) accepts.
+    pub const JSON_FIELDS: [&'static str; 6] =
+        ["cmd", "dataset", "scale_div", "algo", "params", "threads"];
+
     /// Parse a `submit` request (protocol documented in [`crate::service`]).
+    ///
+    /// Unknown fields — at the job level and inside `params` — are
+    /// rejected with the offending name: a typo'd field must fail the
+    /// request, not silently search a different series.
     pub fn from_json(v: &Json) -> Result<JobSpec, String> {
+        if let Json::Obj(map) = v {
+            if let Some(bad) =
+                map.keys().find(|k| !Self::JSON_FIELDS.contains(&k.as_str()))
+            {
+                return Err(format!(
+                    "unknown field `{bad}` in job (known: {})",
+                    Self::JSON_FIELDS.join(", ")
+                ));
+            }
+        } else {
+            return Err("job must be a JSON object".into());
+        }
         let dataset = v
             .get("dataset")
             .and_then(|d| d.as_str())
@@ -51,14 +71,25 @@ impl JobSpec {
             .and_then(|d| d.as_str())
             .unwrap_or("hst")
             .to_string();
-        let scale_div = v
-            .get("scale_div")
-            .and_then(|d| d.as_u64())
-            .unwrap_or(1) as usize;
-        let params = match v.get("params") {
+        let scale_div = match v.get("scale_div") {
+            None => 1,
+            Some(d) => d
+                .as_u64()
+                .ok_or("field `scale_div` must be an integer")?
+                as usize,
+        };
+        let mut params = match v.get("params") {
             Some(p) => SearchParams::from_json(p)?,
             None => return Err("field `params` required".into()),
         };
+        // per-job thread override: a top-level `threads` applies when the
+        // params object did not set one itself
+        if let Some(t) = v.get("threads") {
+            let t = t.as_u64().ok_or("field `threads` must be an integer")?;
+            if params.threads == 0 {
+                params.threads = t as usize;
+            }
+        }
         Ok(JobSpec {
             dataset,
             scale_div,
@@ -68,18 +99,48 @@ impl JobSpec {
     }
 
     /// Materialize the requested series.
+    ///
+    /// Synthetic specs (`synthetic:noise=0.1,n=20000,seed=4`) are parsed
+    /// strictly: an unknown key, a pair without `=`, or an unparsable
+    /// value fails with the field named, so a malformed spec can never
+    /// fall back to defaults and search the wrong series.
     pub fn series(&self) -> Result<TimeSeries> {
         if let Some(rest) = self.dataset.strip_prefix("synthetic:") {
-            // synthetic:noise=0.1,n=20000,seed=4
             let mut noise = 0.1f64;
             let mut n = 20_000usize;
             let mut seed = 0u64;
             for kv in rest.split(',') {
-                match kv.split_once('=') {
-                    Some(("noise", v)) => noise = v.parse()?,
-                    Some(("n", v)) => n = v.parse()?,
-                    Some(("seed", v)) => seed = v.parse()?,
-                    _ => bail!("bad synthetic spec field {kv:?}"),
+                let Some((key, val)) = kv.split_once('=') else {
+                    bail!(
+                        "malformed `key=value` pair {kv:?} in synthetic \
+                         spec {:?}",
+                        self.dataset
+                    );
+                };
+                match key {
+                    "noise" => {
+                        noise = val.parse().map_err(|e| {
+                            anyhow::anyhow!(
+                                "synthetic field `noise`={val:?}: {e}"
+                            )
+                        })?
+                    }
+                    "n" => {
+                        n = val.parse().map_err(|e| {
+                            anyhow::anyhow!("synthetic field `n`={val:?}: {e}")
+                        })?
+                    }
+                    "seed" => {
+                        seed = val.parse().map_err(|e| {
+                            anyhow::anyhow!(
+                                "synthetic field `seed`={val:?}: {e}"
+                            )
+                        })?
+                    }
+                    other => bail!(
+                        "unknown synthetic field `{other}` (known: noise, \
+                         n, seed)"
+                    ),
                 }
             }
             return Ok(crate::ts::series::IntoSeries::into_series(
@@ -149,6 +210,11 @@ impl ContextCache {
         }
     }
 
+    /// Number of contexts currently cached (observability).
+    fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
     /// The context for `spec`, building (series + empty caches) on a
     /// miss. Returns `(context, was_hit)`.
     fn get_or_build(&self, spec: &JobSpec) -> Result<(Arc<SearchContext>, bool)> {
@@ -202,6 +268,24 @@ struct Inner {
     running: usize,
 }
 
+/// A point-in-time snapshot of the coordinator's shape (the `stats`
+/// protocol command).
+#[derive(Debug, Clone, Copy)]
+pub struct CoordinatorStats {
+    /// Jobs waiting for a worker.
+    pub queued: usize,
+    /// Jobs currently executing.
+    pub running: usize,
+    /// Worker threads in the pool.
+    pub workers: usize,
+    /// Total jobs ever accepted (any state).
+    pub jobs_total: usize,
+    /// Queue bound (backpressure threshold).
+    pub queue_capacity: usize,
+    /// Prepared contexts currently held by the LRU.
+    pub ctx_cache_entries: usize,
+}
+
 /// Thread-pool coordinator with a bounded queue (backpressure: `submit`
 /// rejects when full, so upstream callers must retry/slow down — the same
 /// contract a production ingestion tier would expose) and a shared
@@ -209,12 +293,21 @@ struct Inner {
 pub struct Coordinator {
     inner: Arc<(Mutex<Inner>, Condvar)>,
     workers: Vec<JoinHandle<()>>,
+    cache: Arc<ContextCache>,
     capacity: usize,
 }
 
 impl Coordinator {
     /// Start `n_workers` workers with a queue bound of `capacity`.
+    /// `n_workers == 0` sizes the pool through
+    /// [`ExecPolicy::auto`](crate::exec::ExecPolicy::auto)
+    /// (`HST_THREADS`, then available parallelism).
     pub fn start(n_workers: usize, capacity: usize) -> Coordinator {
+        let n_workers = if n_workers == 0 {
+            crate::exec::ExecPolicy::auto().resolve()
+        } else {
+            n_workers
+        };
         let inner = Arc::new((
             Mutex::new(Inner {
                 queue: VecDeque::new(),
@@ -226,7 +319,7 @@ impl Coordinator {
             Condvar::new(),
         ));
         let cache = Arc::new(ContextCache::new(CONTEXT_CACHE_CAPACITY));
-        let workers = (0..n_workers.max(1))
+        let workers = (0..n_workers)
             .map(|_| {
                 let inner = Arc::clone(&inner);
                 let cache = Arc::clone(&cache);
@@ -236,6 +329,7 @@ impl Coordinator {
         Coordinator {
             inner,
             workers,
+            cache,
             capacity,
         }
     }
@@ -243,20 +337,55 @@ impl Coordinator {
     /// Submit a job; returns its id, or an error when the queue is full
     /// (backpressure) or the coordinator is shutting down.
     pub fn submit(&self, spec: JobSpec) -> Result<u64> {
+        Ok(self.submit_batch(vec![spec])?[0])
+    }
+
+    /// Submit a batch atomically: either the queue has room for *all*
+    /// jobs (ids returned, in order) or none are enqueued. Batched jobs
+    /// share the prepared-context LRU with everything else, so a batch
+    /// over one dataset pays its preparation once.
+    pub fn submit_batch(&self, specs: Vec<JobSpec>) -> Result<Vec<u64>> {
+        if specs.is_empty() {
+            bail!("empty batch");
+        }
         let (lock, cvar) = &*self.inner;
         let mut g = lock.lock().unwrap();
         if g.shutdown {
             bail!("coordinator is shut down");
         }
-        if g.queue.len() >= self.capacity {
-            bail!("queue full ({} jobs): backpressure, retry later", self.capacity);
+        if g.queue.len() + specs.len() > self.capacity {
+            bail!(
+                "queue cannot hold {} more jobs ({}/{} used): backpressure, \
+                 retry later",
+                specs.len(),
+                g.queue.len(),
+                self.capacity
+            );
         }
-        let id = g.next_id;
-        g.next_id += 1;
-        g.jobs.insert(id, JobState::Queued);
-        g.queue.push_back((id, spec));
-        cvar.notify_one();
-        Ok(id)
+        let mut ids = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let id = g.next_id;
+            g.next_id += 1;
+            g.jobs.insert(id, JobState::Queued);
+            g.queue.push_back((id, spec));
+            ids.push(id);
+        }
+        cvar.notify_all();
+        Ok(ids)
+    }
+
+    /// Snapshot of the coordinator's current shape.
+    pub fn stats(&self) -> CoordinatorStats {
+        let (lock, _) = &*self.inner;
+        let g = lock.lock().unwrap();
+        CoordinatorStats {
+            queued: g.queue.len(),
+            running: g.running,
+            workers: self.workers.len(),
+            jobs_total: g.jobs.len(),
+            queue_capacity: self.capacity,
+            ctx_cache_entries: self.cache.len(),
+        }
     }
 
     /// Current state of a job.
@@ -280,9 +409,28 @@ impl Coordinator {
 
     /// Block until job `id` leaves the queue/running states.
     pub fn wait(&self, id: u64) -> Option<JobState> {
+        self.wait_timeout(id, None)
+    }
+
+    /// Block until job `id` reaches a terminal state or `timeout`
+    /// elapses. On expiry the job's *current* (non-terminal) state is
+    /// returned, so a protocol handler can answer `state: "running"`
+    /// instead of pinning its thread forever. `None` timeout = wait
+    /// indefinitely.
+    pub fn wait_timeout(
+        &self,
+        id: u64,
+        timeout: Option<std::time::Duration>,
+    ) -> Option<JobState> {
+        let deadline = timeout.map(|t| std::time::Instant::now() + t);
         loop {
             match self.status(id) {
-                Some(JobState::Queued) | Some(JobState::Running) => {
+                st @ Some(JobState::Queued | JobState::Running) => {
+                    if let Some(d) = deadline {
+                        if std::time::Instant::now() >= d {
+                            return st;
+                        }
+                    }
                     std::thread::sleep(std::time::Duration::from_millis(5));
                 }
                 other => return other,
@@ -461,6 +609,133 @@ mod tests {
             Some(JobState::Failed(msg)) => assert!(msg.contains("unknown dataset")),
             other => panic!("unexpected {other:?}"),
         }
+        c.shutdown();
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_fields_by_name() {
+        // regression: `scale_dib` (typo) used to be silently dropped,
+        // searching the full-length series instead of the scaled one
+        let j = Json::parse(
+            r#"{"cmd":"submit","dataset":"ECG 15","scale_dib":8,
+                "params":{"s":64}}"#,
+        )
+        .unwrap();
+        let err = JobSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("`scale_dib`"), "{err}");
+        // nested params typos are caught too
+        let j = Json::parse(
+            r#"{"cmd":"submit","dataset":"ECG 15","params":{"s":64,"kk":2}}"#,
+        )
+        .unwrap();
+        assert!(JobSpec::from_json(&j).unwrap_err().contains("`kk`"));
+    }
+
+    #[test]
+    fn job_level_threads_flows_into_params() {
+        let j = Json::parse(
+            r#"{"cmd":"submit","dataset":"ECG 15","threads":3,
+                "params":{"s":64}}"#,
+        )
+        .unwrap();
+        assert_eq!(JobSpec::from_json(&j).unwrap().params.threads, 3);
+        // an explicit params.threads wins over the job-level field
+        let j = Json::parse(
+            r#"{"cmd":"submit","dataset":"ECG 15","threads":3,
+                "params":{"s":64,"threads":2}}"#,
+        )
+        .unwrap();
+        assert_eq!(JobSpec::from_json(&j).unwrap().params.threads, 2);
+    }
+
+    #[test]
+    fn synthetic_spec_errors_name_the_field() {
+        let mut s = quick_spec("hst");
+        s.dataset = "synthetic:noize=0.1".into();
+        let err = format!("{:#}", s.series().unwrap_err());
+        assert!(err.contains("`noize`"), "{err}");
+
+        s.dataset = "synthetic:noise=abc".into();
+        let err = format!("{:#}", s.series().unwrap_err());
+        assert!(err.contains("`noise`"), "{err}");
+
+        s.dataset = "synthetic:n".into();
+        let err = format!("{:#}", s.series().unwrap_err());
+        assert!(err.contains("key=value"), "{err}");
+    }
+
+    #[test]
+    fn batch_is_atomic_and_shares_the_context_cache() {
+        let c = Coordinator::start(2, 16);
+        let ids = c
+            .submit_batch(vec![quick_spec("hst"), quick_spec("hotsax")])
+            .unwrap();
+        assert_eq!(ids.len(), 2);
+        assert!(ids[1] > ids[0]);
+        for id in &ids {
+            match c.wait(*id) {
+                Some(JobState::Done(_)) => {}
+                other => panic!("job {id}: {other:?}"),
+            }
+        }
+        // an oversize batch is rejected whole: no partial enqueue
+        let big: Vec<JobSpec> =
+            (0..20).map(|_| quick_spec("hst")).collect();
+        assert!(c.submit_batch(big).is_err());
+        assert!(c.submit_batch(Vec::new()).is_err(), "empty batch");
+        let before = c.stats().jobs_total;
+        assert_eq!(before, 2, "rejected batches must not register jobs");
+        c.shutdown();
+    }
+
+    #[test]
+    fn wait_timeout_returns_the_live_state() {
+        let c = Coordinator::start(1, 8);
+        // a slow job plus a queued one behind it
+        let mut slow = quick_spec("brute");
+        slow.dataset = "synthetic:noise=0.5,n=2500,seed=7".into();
+        slow.params = SearchParams::new(32, 4, 4);
+        let a = c.submit(slow.clone()).unwrap();
+        let b = c.submit(slow).unwrap();
+        let st = c
+            .wait_timeout(b, Some(std::time::Duration::from_millis(10)))
+            .unwrap();
+        assert!(
+            matches!(st, JobState::Queued | JobState::Running),
+            "timeout must surface a non-terminal state, got {st:?}"
+        );
+        for id in [a, b] {
+            match c.wait(id) {
+                Some(JobState::Done(_)) => {}
+                other => panic!("job {id}: {other:?}"),
+            }
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn stats_reflect_pool_shape() {
+        let c = Coordinator::start(3, 9);
+        let st = c.stats();
+        assert_eq!(st.workers, 3);
+        assert_eq!(st.queue_capacity, 9);
+        assert_eq!(st.jobs_total, 0);
+        assert_eq!(st.ctx_cache_entries, 0);
+        let id = c.submit(quick_spec("hst")).unwrap();
+        let _ = c.wait(id);
+        let st = c.stats();
+        assert_eq!(st.jobs_total, 1);
+        assert_eq!(st.ctx_cache_entries, 1, "job context stays cached");
+        assert_eq!(st.queued, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn zero_workers_resolves_through_exec_policy() {
+        let c = Coordinator::start(0, 4);
+        assert!(c.stats().workers >= 1);
+        let id = c.submit(quick_spec("hst")).unwrap();
+        assert!(matches!(c.wait(id), Some(JobState::Done(_))));
         c.shutdown();
     }
 

@@ -10,10 +10,22 @@
 //! ```text
 //! → {"cmd":"submit","dataset":"ECG 300","scale_div":8,"algo":"hst","params":{"s":300,"p":4,"alphabet":4,"k":3}}
 //! ← {"ok":true,"job":1}
+//! → {"cmd":"batch","jobs":[{"dataset":"ECG 300","algo":"hst-par","threads":4,"params":{"s":300}}, …]}
+//! ← {"ok":true,"jobs":[2,3]}
 //! → {"cmd":"status","job":1}
 //! ← {"ok":true,"job":1,"state":"done","report":{...}}
+//! → {"cmd":"wait","job":1,"timeout_ms":250}
+//! ← {"ok":true,"job":1,"state":"running","timed_out":true}   (on expiry)
+//! → {"cmd":"stats"}
+//! ← {"ok":true,"queued":0,"running":1,"workers":4,"jobs_total":3,"queue_capacity":64,"ctx_cache_entries":1}
 //! → {"cmd":"list"} | {"cmd":"shutdown"}
 //! ```
+//!
+//! Unknown request fields (job-level or inside `params`) are rejected by
+//! name, and a per-job `threads` field (or `params.threads`) selects the
+//! worker count of the parallel engines (`hst-par`, `scamp-par`) through
+//! the shared [`ExecPolicy`](crate::exec::ExecPolicy). A `batch` is
+//! atomic: either the queue admits every job of the array or none.
 //!
 //! Workers run jobs through a shared LRU of prepared
 //! [`SearchContext`](crate::context::SearchContext)s keyed by
@@ -26,5 +38,5 @@ pub mod coordinator;
 pub mod online;
 pub mod server;
 
-pub use coordinator::{Coordinator, JobSpec, JobState};
+pub use coordinator::{Coordinator, CoordinatorStats, JobSpec, JobState};
 pub use server::{serve, Client};

@@ -111,11 +111,41 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
                 }
             }
         }
+        Some("batch") => {
+            let Some(jobs) = req.get("jobs").and_then(|j| j.as_arr()) else {
+                return err_reply("field `jobs` (array) required");
+            };
+            let mut specs = Vec::with_capacity(jobs.len());
+            for (i, job) in jobs.iter().enumerate() {
+                match JobSpec::from_json(job) {
+                    Ok(spec) => specs.push(spec),
+                    Err(e) => return err_reply(&format!("jobs[{i}]: {e}")),
+                }
+            }
+            match coord.submit_batch(specs) {
+                Ok(ids) => Json::obj().set("ok", true).set(
+                    "jobs",
+                    ids.into_iter().map(Json::from).collect::<Vec<_>>(),
+                ),
+                Err(e) => err_reply(&format!("{e:#}")),
+            }
+        }
         Some("wait") => {
             let Some(id) = req.get("job").and_then(|j| j.as_u64()) else {
                 return err_reply("field `job` required");
             };
-            match coord.wait(id) {
+            let timeout = match req.get("timeout_ms") {
+                None => None,
+                Some(t) => match t.as_u64() {
+                    Some(ms) => Some(std::time::Duration::from_millis(ms)),
+                    None => {
+                        return err_reply(
+                            "field `timeout_ms` must be an integer",
+                        )
+                    }
+                },
+            };
+            match coord.wait_timeout(id, timeout) {
                 None => err_reply("no such job"),
                 Some(JobState::Done(report)) => Json::obj()
                     .set("ok", true)
@@ -127,8 +157,25 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
                     .set("job", id)
                     .set("state", "failed")
                     .set("error", msg),
-                _ => unreachable!("wait returns terminal states"),
+                // the timeout expired: report the live state instead of
+                // pinning this handler thread until the job finishes
+                Some(st) => Json::obj()
+                    .set("ok", true)
+                    .set("job", id)
+                    .set("state", st.label())
+                    .set("timed_out", true),
             }
+        }
+        Some("stats") => {
+            let st = coord.stats();
+            Json::obj()
+                .set("ok", true)
+                .set("queued", st.queued)
+                .set("running", st.running)
+                .set("workers", st.workers)
+                .set("jobs_total", st.jobs_total)
+                .set("queue_capacity", st.queue_capacity)
+                .set("ctx_cache_entries", st.ctx_cache_entries)
         }
         Some("list") => {
             let jobs: Vec<Json> = coord
@@ -142,7 +189,9 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
             stop.store(true, Ordering::SeqCst);
             Json::obj().set("ok", true).set("bye", true)
         }
-        _ => err_reply("unknown cmd (submit|status|wait|list|shutdown)"),
+        _ => err_reply(
+            "unknown cmd (submit|batch|status|wait|stats|list|shutdown)",
+        ),
     }
 }
 
@@ -189,6 +238,39 @@ impl Client {
     /// Block until `job` reaches a terminal state; returns the reply.
     pub fn wait(&mut self, job: u64) -> Result<Json> {
         self.call(&Json::obj().set("cmd", "wait").set("job", job))
+    }
+
+    /// Wait at most `timeout_ms` for `job`; on expiry the reply carries
+    /// the job's live state (`"queued"`/`"running"`) and
+    /// `timed_out: true`.
+    pub fn wait_timeout(&mut self, job: u64, timeout_ms: u64) -> Result<Json> {
+        self.call(
+            &Json::obj()
+                .set("cmd", "wait")
+                .set("job", job)
+                .set("timeout_ms", timeout_ms),
+        )
+    }
+
+    /// Submit a job array in one atomic request; returns the job ids.
+    pub fn submit_batch(&mut self, jobs: Vec<Json>) -> Result<Vec<u64>> {
+        let reply = self.call(&Json::obj().set("cmd", "batch").set("jobs", jobs))?;
+        if reply.get("ok").and_then(|b| b.as_bool()) != Some(true) {
+            anyhow::bail!(
+                "batch rejected: {}",
+                reply.get("error").and_then(|e| e.as_str()).unwrap_or("?")
+            );
+        }
+        reply
+            .get("jobs")
+            .and_then(|j| j.as_arr())
+            .map(|ids| ids.iter().filter_map(|j| j.as_u64()).collect())
+            .context("reply missing job ids")
+    }
+
+    /// Fetch the service's observability snapshot (`cmd: "stats"`).
+    pub fn stats(&mut self) -> Result<Json> {
+        self.call(&Json::obj().set("cmd", "stats"))
     }
 
     /// Ask the service to stop accepting connections and drain.

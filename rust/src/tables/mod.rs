@@ -95,6 +95,10 @@ pub struct BenchConfig {
     pub runs: usize,
     /// Base seed.
     pub seed: u64,
+    /// Worker threads for the [`parallel`] scaling table: `0` (default)
+    /// sweeps {2, 4}; a positive value measures that single count
+    /// (CLI/bench `--threads`).
+    pub threads: usize,
 }
 
 impl Default for BenchConfig {
@@ -104,6 +108,7 @@ impl Default for BenchConfig {
             runs: 2, // paper averages 10; 2 keeps the single-core default
                      // suite tractable (pass --runs 10 to match the paper)
             seed: 7,
+            threads: 0,
         }
     }
 }
@@ -115,6 +120,7 @@ impl BenchConfig {
             scale_div: 1,
             runs: 3,
             seed: 7,
+            threads: 0,
         }
     }
 
@@ -124,6 +130,7 @@ impl BenchConfig {
             scale_div: 64,
             runs: 1,
             seed: 7,
+            threads: 0,
         }
     }
 }
@@ -387,6 +394,13 @@ pub fn ablation(cfg: &BenchConfig) -> Table {
     runners::ablation_impl(cfg)
 }
 
+/// Parallel scaling (Sec. 5 follow-up, ours): serial vs sharded engines
+/// (`hst` vs `hst-par`, `scamp` vs `scamp-par`) wall-clock at 2 and 4
+/// workers, with identical discords asserted per cell.
+pub fn parallel(cfg: &BenchConfig) -> Table {
+    runners::parallel_impl(cfg)
+}
+
 /// Look up a table generator by id.
 pub fn by_id(id: &str) -> Option<fn(&BenchConfig) -> Table> {
     match id {
@@ -400,14 +414,15 @@ pub fn by_id(id: &str) -> Option<fn(&BenchConfig) -> Table> {
         "fig6" => Some(fig6),
         "fig7" => Some(fig7),
         "ablation" => Some(ablation),
+        "par" | "parallel" => Some(parallel),
         _ => None,
     }
 }
 
 /// All ids in paper order.
-pub const ALL_IDS: [&str; 10] = [
+pub const ALL_IDS: [&str; 11] = [
     "table1", "table2", "table3", "table4_fig5", "table5", "table6", "table7",
-    "fig6", "fig7", "ablation",
+    "fig6", "fig7", "ablation", "parallel",
 ];
 
 #[cfg(test)]
@@ -449,6 +464,7 @@ mod tests {
             scale_div: 64,
             runs: 1,
             seed: 1,
+            threads: 0,
         };
         let t = table4_fig5(&cfg);
         assert_eq!(t.rows.len(), NOISE_LEVELS.len());

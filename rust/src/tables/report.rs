@@ -37,6 +37,11 @@ pub fn paper_expectation(id: &str) -> &'static str {
         "ablation" => "(ours, not in the paper) each HST device should \
                      reduce distance calls; warm-up + reordering carry the \
                      most weight.",
+        "parallel" => "(ours; Sec. 5 names the follow-up) hst-par and \
+                     scamp-par return the serial engines' discords while \
+                     the wall clock drops with the worker count: T-speedup \
+                     > 1 at 2 threads, approaching the thread count on the \
+                     high-noise case where the outer loop dominates.",
         _ => "",
     }
 }

@@ -22,17 +22,20 @@ pub struct AvgResult {
 
 /// Run `algo_name` `cfg.runs` times with distinct seeds; average calls and
 /// runtime (the paper averages 10 runs because the shuffles make counts
-/// fluctuate).
-pub fn avg_runs(
+/// fluctuate). Also returns the last run's full report, so callers that
+/// need the discords (the [`parallel_impl`] agreement check) do not pay
+/// for an extra search.
+pub fn avg_runs_with_report(
     algo_name: &str,
     ts: &TimeSeries,
     params: &SearchParams,
     cfg: &BenchConfig,
-) -> AvgResult {
+) -> (AvgResult, crate::algo::SearchReport) {
     let engine = algo::by_name(algo_name)
         .unwrap_or_else(|| panic!("unknown algorithm {algo_name}"));
     let mut calls = 0u128;
     let mut secs = 0.0f64;
+    let mut last = None;
     for r in 0..cfg.runs.max(1) {
         let p = params.clone().with_seed(cfg.seed + r as u64 * 1_000_003);
         let rep = engine
@@ -40,12 +43,26 @@ pub fn avg_runs(
             .unwrap_or_else(|e| panic!("{algo_name} failed on {}: {e:#}", ts.name));
         calls += rep.distance_calls as u128;
         secs += rep.elapsed.as_secs_f64();
+        last = Some(rep);
     }
     let n = cfg.runs.max(1) as f64;
-    AvgResult {
-        calls: (calls as f64 / n).round() as u64,
-        secs: secs / n,
-    }
+    (
+        AvgResult {
+            calls: (calls as f64 / n).round() as u64,
+            secs: secs / n,
+        },
+        last.expect("cfg.runs >= 1"),
+    )
+}
+
+/// [`avg_runs_with_report`] without the report (the common table case).
+pub fn avg_runs(
+    algo_name: &str,
+    ts: &TimeSeries,
+    params: &SearchParams,
+    cfg: &BenchConfig,
+) -> AvgResult {
+    avg_runs_with_report(algo_name, ts, params, cfg).0
 }
 
 /// Table 7 implementation: DADD vs HST under the DADD protocol.
@@ -254,6 +271,83 @@ pub fn fig7_impl(cfg: &BenchConfig) -> Table {
     }
 }
 
+/// Parallel scaling (ours; Sec. 5 names the follow-up): serial vs
+/// sharded engines, wall-clock per thread count, discord agreement
+/// asserted per cell. The synthetic case uses the high-noise regime
+/// (many surviving candidates ⇒ plenty of outer-loop work to shard).
+pub fn parallel_impl(cfg: &BenchConfig) -> Table {
+    let thread_set: Vec<usize> = if cfg.threads > 0 {
+        vec![cfg.threads]
+    } else {
+        vec![2, 4]
+    };
+    let n = (160_000 / cfg.scale_div.max(1)).max(4_000);
+    let hard = TimeSeries::new(
+        format!("sine E=5 n={n}"),
+        crate::ts::generators::sine_with_noise(n, 5.0, 424_243),
+    );
+    // the matrix-profile engines are quadratic: cap their input so the
+    // --full configuration stays tractable
+    let scamp_ts = hard.slice_prefix(hard.n_total().min(24_000));
+    let ecg = crate::ts::datasets::by_name("ECG 108").unwrap();
+    let ecg_ts = ecg.generate_scaled(cfg.scale_div);
+    let ecg_params = SearchParams::new(ecg.s, ecg.p, ecg.alphabet).with_discords(3);
+    let cases: [(&TimeSeries, SearchParams, &str, &str); 3] = [
+        (
+            &hard,
+            SearchParams::new(120, 4, 4).with_discords(3),
+            "hst",
+            "hst-par",
+        ),
+        (&ecg_ts, ecg_params, "hst", "hst-par"),
+        (&scamp_ts, SearchParams::new(120, 4, 4), "scamp", "scamp-par"),
+    ];
+
+    let mut rows = Vec::new();
+    for (ts, params, serial_name, par_name) in cases {
+        // skip series too short for the case's protocol (heavy scale-down)
+        if ts.num_sequences(params.sax.s) < (params.k + 1) * params.sax.s {
+            continue;
+        }
+        let (serial, serial_top) =
+            avg_runs_with_report(serial_name, ts, &params, cfg);
+        let mut row = vec![
+            ts.name.clone(),
+            format!("{serial_name} vs {par_name}"),
+            format!("{:.3}", serial.secs),
+        ];
+        for &t in &thread_set {
+            let tp = params.clone().with_threads(t);
+            // the timed runs double as the agreement check: the parallel
+            // engine's last (same-seed) run must return the serial discord
+            let (par, par_top) = avg_runs_with_report(par_name, ts, &tp, cfg);
+            assert_eq!(
+                par_top.discords[0].position, serial_top.discords[0].position,
+                "{par_name}@{t} disagrees with {serial_name}"
+            );
+            row.push(format!("{:.3}", par.secs));
+            row.push(format!("{:.2}", t_speedup(serial.secs, par.secs)));
+        }
+        rows.push(row);
+    }
+
+    let mut header: Vec<String> =
+        ["dataset", "engines", "serial [s]"].map(String::from).to_vec();
+    for &t in &thread_set {
+        header.push(format!("par t={t} [s]"));
+        header.push(format!("T-speedup t={t}"));
+    }
+    Table {
+        id: "parallel",
+        title: format!(
+            "serial vs sharded engines, wall clock (scale 1/{}, {} runs)",
+            cfg.scale_div, cfg.runs
+        ),
+        header,
+        rows,
+    }
+}
+
 /// Ablation: disable each HST device in turn and report the call blow-up.
 pub fn ablation_impl(cfg: &BenchConfig) -> Table {
     let variants: [(&str, HstSearch); 6] = [
@@ -317,6 +411,7 @@ mod tests {
             scale_div: 1,
             runs: 2,
             seed: 5,
+            threads: 0,
         };
         let a = avg_runs("hst", &ts, &SearchParams::new(64, 4, 4), &cfg);
         assert!(a.calls > 0);

@@ -70,7 +70,9 @@ fn parallel_scamp_agrees_with_serial_and_counts_match() {
     let ts = generators::ecg_like(2_000, 120, 1, 902).into_series("e");
     let params = SearchParams::new(96, 4, 4).with_discords(3);
     let serial = algo::scamp::Scamp.run(&ts, &params).unwrap();
-    let par = ParallelScamp { threads: 4 }.run(&ts, &params).unwrap();
+    let par = ParallelScamp
+        .run(&ts, &params.clone().with_threads(4))
+        .unwrap();
     assert_eq!(serial.distance_calls, par.distance_calls);
     for (a, b) in par.discords.iter().zip(&serial.discords) {
         assert!((a.nnd - b.nnd).abs() < 5e-8);

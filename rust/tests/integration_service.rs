@@ -170,3 +170,137 @@ fn concurrent_clients_share_the_pool() {
     assert!(jobs.len() >= 4);
     stop_server(addr, handle);
 }
+
+#[test]
+fn batch_submits_share_the_context_cache() {
+    let (addr, handle) = start_server(2, 16);
+    let mut client = Client::connect(addr).unwrap();
+    // three jobs over the same dataset, mixing serial and parallel HST
+    let item = |algo: &str, threads: u64| {
+        Json::obj()
+            .set("dataset", "synthetic:noise=0.4,n=1800,seed=5")
+            .set("algo", algo)
+            .set("threads", threads)
+            .set("params", Json::obj().set("s", 64u64).set("k", 1u64))
+    };
+    let ids = client
+        .submit_batch(vec![item("hst", 0), item("hst-par", 2), item("hst-par", 4)])
+        .unwrap();
+    assert_eq!(ids.len(), 3);
+    let mut positions = Vec::new();
+    let mut cache_hits = 0;
+    for id in ids {
+        let reply = client.wait(id).unwrap();
+        assert_eq!(reply.get("state").unwrap().as_str(), Some("done"));
+        let report = reply.get("report").unwrap();
+        let top = &report.get("discords").unwrap().as_arr().unwrap()[0];
+        positions.push(top.get("position").unwrap().as_u64().unwrap());
+        if report.get("ctx_cache").unwrap().as_str() == Some("hit") {
+            cache_hits += 1;
+        }
+    }
+    assert!(
+        positions.iter().all(|&p| p == positions[0]),
+        "serial and parallel jobs must agree: {positions:?}"
+    );
+    assert!(
+        cache_hits >= 2,
+        "batch over one dataset must share its context ({cache_hits} hits)"
+    );
+    stop_server(addr, handle);
+}
+
+#[test]
+fn batch_rejects_malformed_items_by_index() {
+    let (addr, handle) = start_server(1, 8);
+    let mut client = Client::connect(addr).unwrap();
+    let good = Json::obj()
+        .set("dataset", "ECG 15")
+        .set("params", Json::obj().set("s", 64u64));
+    let bad = Json::obj().set("params", Json::obj().set("s", 64u64)); // no dataset
+    let reply = client
+        .call(
+            &Json::obj()
+                .set("cmd", "batch")
+                .set("jobs", vec![good, bad]),
+        )
+        .unwrap();
+    assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false));
+    let err = reply.get("error").unwrap().as_str().unwrap();
+    assert!(err.contains("jobs[1]"), "{err}");
+    // nothing was enqueued: the batch is atomic
+    let listed = client.call(&Json::obj().set("cmd", "list")).unwrap();
+    assert!(listed.get("jobs").unwrap().as_arr().unwrap().is_empty());
+    stop_server(addr, handle);
+}
+
+#[test]
+fn wait_timeout_reports_running_instead_of_blocking() {
+    let (addr, handle) = start_server(1, 8);
+    let mut client = Client::connect(addr).unwrap();
+    // brute force on a few thousand points keeps the single worker busy
+    let slow = Json::obj()
+        .set("cmd", "submit")
+        .set("dataset", "synthetic:noise=0.5,n=2500,seed=2")
+        .set("algo", "brute")
+        .set("params", Json::obj().set("s", 32u64));
+    let a = client.submit(slow.clone()).unwrap();
+    let b = client.submit(slow).unwrap();
+    let reply = client.wait_timeout(b, 10).unwrap();
+    assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true));
+    let state = reply.get("state").unwrap().as_str().unwrap();
+    assert!(
+        state == "queued" || state == "running",
+        "expiry must surface the live state, got {state}"
+    );
+    assert_eq!(reply.get("timed_out").unwrap().as_bool(), Some(true));
+    // the full wait still reaches the terminal state afterwards
+    for id in [a, b] {
+        let done = client.wait(id).unwrap();
+        assert_eq!(done.get("state").unwrap().as_str(), Some("done"));
+    }
+    stop_server(addr, handle);
+}
+
+#[test]
+fn stats_expose_the_pool_shape_over_tcp() {
+    let (addr, handle) = start_server(3, 17);
+    let mut client = Client::connect(addr).unwrap();
+    let st = client.stats().unwrap();
+    assert_eq!(st.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(st.get("workers").unwrap().as_u64(), Some(3));
+    assert_eq!(st.get("queue_capacity").unwrap().as_u64(), Some(17));
+    assert_eq!(st.get("jobs_total").unwrap().as_u64(), Some(0));
+    let job = client
+        .submit(submit_req("synthetic:noise=0.4,n=1500,seed=4", "hst", 64, 1))
+        .unwrap();
+    let _ = client.wait(job).unwrap();
+    let st = client.stats().unwrap();
+    assert_eq!(st.get("jobs_total").unwrap().as_u64(), Some(1));
+    assert_eq!(st.get("ctx_cache_entries").unwrap().as_u64(), Some(1));
+    assert_eq!(st.get("queued").unwrap().as_u64(), Some(0));
+    stop_server(addr, handle);
+}
+
+#[test]
+fn unknown_and_misspelled_fields_fail_loudly() {
+    let (addr, handle) = start_server(1, 8);
+    let mut client = Client::connect(addr).unwrap();
+    // job-level typo: scale_dib instead of scale_div
+    let req = Json::obj()
+        .set("cmd", "submit")
+        .set("dataset", "ECG 15")
+        .set("scale_dib", 8u64)
+        .set("params", Json::obj().set("s", 64u64));
+    let reply = client.call(&req).unwrap();
+    assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false));
+    assert!(reply.get("error").unwrap().as_str().unwrap().contains("scale_dib"));
+    // malformed synthetic spec fails the job with the field named
+    let job = client
+        .submit(submit_req("synthetic:noize=0.1", "hst", 64, 1))
+        .unwrap();
+    let reply = client.wait(job).unwrap();
+    assert_eq!(reply.get("state").unwrap().as_str(), Some("failed"));
+    assert!(reply.get("error").unwrap().as_str().unwrap().contains("noize"));
+    stop_server(addr, handle);
+}

@@ -47,6 +47,7 @@ fn prop_hst_exactness_vs_brute() {
             seed: g.rng.next_u64(),
             znormalize: true,
             allow_self_match: false,
+            threads: 0,
         };
         let hst = algo::hst::HstSearch::default().run(&ts, &params).unwrap();
         let bf = algo::brute::BruteForce.run(&ts, &params).unwrap();
@@ -94,6 +95,7 @@ fn prop_warmup_profile_upper_bounds_exact() {
             seed: 0,
             znormalize: true,
             allow_self_match: false,
+            threads: 0,
         };
         let ctx = SearchContext::builder(&ts).build();
         let exact = algo::brute::BruteForce::exact_profile(&ctx, &params, &dist)
@@ -210,6 +212,7 @@ fn prop_cps_bounds() {
             seed: g.rng.next_u64(),
             znormalize: true,
             allow_self_match: false,
+            threads: 0,
         };
         let rep = algo::hst::HstSearch::default().run(&ts, &params).unwrap();
         let c = rep.cps();
@@ -262,6 +265,82 @@ fn prop_json_roundtrip_reports() {
                 == Some(rep.distance_calls),
             "calls lost in roundtrip"
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_engines_agree_bitwise_with_serial() {
+    // hst-par / scamp-par must return their serial counterparts' discords
+    // (positions and bit-identical distances) at every thread count; the
+    // matrix-profile engines must also agree on the summed pair count,
+    // and hst-par at one worker must be the serial algorithm verbatim
+    // (identical summed distance calls included).
+    check("parallel==serial", 41, 6, |g| {
+        let sax = random_params(g);
+        let n = sax.s * g.size(6, 10);
+        let ts = random_series(g, n);
+        let k = g.size(1, 3);
+        let params = SearchParams {
+            sax,
+            k,
+            seed: g.rng.next_u64(),
+            znormalize: true,
+            allow_self_match: false,
+            threads: 0,
+        };
+        let hst = algo::hst::HstSearch::default().run(&ts, &params).unwrap();
+        let scamp = algo::scamp::Scamp.run(&ts, &params).unwrap();
+        for threads in [1usize, 2, 4] {
+            let tp = params.clone().with_threads(threads);
+            let hp = algo::hst::par::HstPar::default().run(&ts, &tp).unwrap();
+            prop_assert!(
+                hp.discords.len() == hst.discords.len(),
+                "t={threads}: {} vs {} discords",
+                hp.discords.len(),
+                hst.discords.len()
+            );
+            for (a, b) in hp.discords.iter().zip(&hst.discords) {
+                prop_assert!(
+                    a.position == b.position,
+                    "t={threads}: position {} vs {}",
+                    a.position,
+                    b.position
+                );
+                prop_assert!(
+                    a.nnd.to_bits() == b.nnd.to_bits(),
+                    "t={threads}: nnd {} vs {} not bit-identical",
+                    a.nnd,
+                    b.nnd
+                );
+            }
+            prop_assert!(hp.distance_calls > 0, "no calls at t={threads}");
+            if threads == 1 {
+                prop_assert!(
+                    hp.distance_calls == hst.distance_calls,
+                    "t=1 must be serial verbatim: {} vs {} calls",
+                    hp.distance_calls,
+                    hst.distance_calls
+                );
+            }
+            let sp = algo::parallel::ParallelScamp.run(&ts, &tp).unwrap();
+            prop_assert!(
+                sp.distance_calls == scamp.distance_calls,
+                "t={threads}: scamp pair count {} vs {}",
+                sp.distance_calls,
+                scamp.distance_calls
+            );
+            for (a, b) in sp.discords.iter().zip(&scamp.discords) {
+                prop_assert!(
+                    a.position == b.position && a.nnd.to_bits() == b.nnd.to_bits(),
+                    "t={threads}: scamp-par ({}, {}) vs ({}, {})",
+                    a.position,
+                    a.nnd,
+                    b.position,
+                    b.nnd
+                );
+            }
+        }
         Ok(())
     });
 }
