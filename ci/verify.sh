@@ -34,8 +34,11 @@ cargo clippy --all-targets -- -D warnings
 step "clippy with --features pjrt (covers the gated runtime/xla code)"
 cargo clippy --all-targets --features pjrt -- -D warnings
 
-step "docs must build warning-free"
+step "docs must build warning-free (broken intra-doc links are errors)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+step "docs with --features pjrt (covers the gated runtime/xla modules)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --features pjrt
 
 step "bench targets compile"
 cargo build --release --benches

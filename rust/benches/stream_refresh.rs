@@ -1,0 +1,120 @@
+//! `cargo bench --bench stream_refresh` — warm streaming refreshes
+//! (`hst-stream` through the `StreamingMonitor`) vs cold re-search per
+//! window, the streaming counterpart of the paper's cps indicator.
+//!
+//! A drifting synthetic series slides through the monitor's window in
+//! batches; every refresh is measured twice: the monitor's warm
+//! incremental search, and a cold serial `hst` over the same window (the
+//! rerun-from-scratch baseline `service::online` embodies). Discord
+//! agreement is asserted bit-exactly per refresh — the speedup must never
+//! come at the price of the exactness guarantee.
+//!
+//! Flags (after `--`): --s N (default 100), --window N (default 4000),
+//! --batch N (points per refresh, default 500), --refreshes N (default
+//! 12), --k N, --seed N, --json.
+
+use hstime::algo::{hst::HstSearch, Algorithm as _};
+use hstime::config::SearchParams;
+use hstime::stream::StreamingMonitor;
+use hstime::ts::generators;
+use hstime::util::cli::Args;
+use hstime::util::json::Json;
+use hstime::util::rng::Rng64;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let s = args.get_usize("s", 100);
+    let window = args.get_usize("window", 4_000);
+    let batch = args.get_usize("batch", 500);
+    let refreshes = args.get_usize("refreshes", 12);
+    let k = args.get_usize("k", 1);
+    let seed = args.get_u64("seed", 7);
+    let json = args.has("json");
+
+    // a drifting series: periodic background plus an anomaly roughly
+    // every other window, so the discord landscape keeps changing
+    let total = window + batch * refreshes;
+    let mut pts = generators::sine_with_noise(total, 0.05, seed);
+    let mut rng = Rng64::new(seed ^ 0x5354);
+    let mut pos = window / 2;
+    while pos + s < total {
+        generators::inject(&mut pts, pos, s, generators::Anomaly::Bump, &mut rng);
+        pos += 2 * window;
+    }
+
+    let params = SearchParams::new(s, 4, 4).with_discords(k).with_seed(seed);
+    let mut mon = StreamingMonitor::new(params.clone(), window)?;
+    mon.extend(&pts[..window])?;
+    let _ = mon.refresh()?; // cold fill; measured refreshes start warm
+
+    let t0 = std::time::Instant::now();
+    let mut rows: Vec<Json> = Vec::new();
+    if !json {
+        println!(
+            "{:>8}  {:>8}  {:>12}  {:>12}  {:>9}  {:>8}  {:>8}  {:>9}  {:>9}",
+            "refresh", "N", "warm calls", "cold calls", "D-speedup",
+            "warm cps", "cold cps", "warm ms", "cold ms"
+        );
+    }
+    for r in 0..refreshes {
+        let lo = window + r * batch;
+        mon.extend(&pts[lo..lo + batch])?;
+
+        let wt = std::time::Instant::now();
+        let warm = mon.refresh()?;
+        let warm_ms = wt.elapsed().as_secs_f64() * 1e3;
+
+        let ts = mon.window_series();
+        let ct = std::time::Instant::now();
+        let cold = HstSearch::default().run(&ts, &params)?;
+        let cold_ms = ct.elapsed().as_secs_f64() * 1e3;
+
+        // exactness gate: warm streaming must match the cold window search
+        assert_eq!(warm.discords.len(), cold.discords.len());
+        for (a, b) in warm.discords.iter().zip(&cold.discords) {
+            assert_eq!(
+                a.position,
+                warm.window_start + b.position as u64,
+                "refresh {}: position drift",
+                warm.refresh
+            );
+            assert_eq!(a.nnd.to_bits(), b.nnd.to_bits());
+        }
+
+        let d_speedup =
+            cold.distance_calls as f64 / warm.distance_calls.max(1) as f64;
+        let cold_cps = cold.cps();
+        if json {
+            rows.push(
+                Json::obj()
+                    .set("refresh", warm.refresh)
+                    .set("n_sequences", warm.n_sequences)
+                    .set("warm_calls", warm.distance_calls)
+                    .set("cold_calls", cold.distance_calls)
+                    .set("d_speedup", d_speedup)
+                    .set("warm_cps", warm.cps())
+                    .set("cold_cps", cold_cps)
+                    .set("warm_ms", warm_ms)
+                    .set("cold_ms", cold_ms),
+            );
+        } else {
+            println!(
+                "{:>8}  {:>8}  {:>12}  {:>12}  {:>9.1}  {:>8.2}  {:>8.2}  {:>9.2}  {:>9.2}",
+                warm.refresh,
+                warm.n_sequences,
+                warm.distance_calls,
+                cold.distance_calls,
+                d_speedup,
+                warm.cps(),
+                cold_cps,
+                warm_ms,
+                cold_ms
+            );
+        }
+    }
+    if json {
+        println!("{}", Json::Arr(rows));
+    }
+    eprintln!("[stream_refresh] total {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -6,6 +6,10 @@
 //! * [`hst::par`] — `hst-par`, HST with the outer candidate loop sharded
 //!   over the [`exec`](crate::exec) worker pool (the paper's Sec. 5
 //!   follow-up); results identical to serial `hst`.
+//! * [`stream::HstStream`](crate::stream::HstStream) — `hst-stream`,
+//!   serial HST pinned to the exact scalar backend; the engine the
+//!   sliding-window [`stream`](crate::stream) monitor drives on every
+//!   refresh.
 //! * [`dadd`] — Disk-Aware Discord Discovery / DRAG (Yankov et al. 2008).
 //! * [`rra`] — Rare Rule Anomaly via Sequitur (Senin et al. 2015).
 //! * [`scamp`] — exact matrix profile (SCAMP/STOMP-style; serial + XLA-tiled);
@@ -110,6 +114,24 @@ pub trait Algorithm {
     }
 }
 
+/// Canonical id of every registered engine — [`by_name`] resolves each,
+/// and the id equals the engine's [`Algorithm::name`]. One entry per row
+/// of the README "Engines" table; `tests/docs_consistency.rs` keeps the
+/// two in sync so the table can never go stale again.
+pub const ALL_ENGINES: [&str; 11] = [
+    "brute",
+    "hotsax",
+    "hst",
+    "hst-par",
+    "hst-stream",
+    "dadd",
+    "rra",
+    "scamp",
+    "scamp-par",
+    "prescrimp",
+    "merlin",
+];
+
 /// Look up an algorithm by name (CLI / service entry point).
 pub fn by_name(name: &str) -> Option<Box<dyn Algorithm + Send + Sync>> {
     match name.to_ascii_lowercase().as_str() {
@@ -117,6 +139,9 @@ pub fn by_name(name: &str) -> Option<Box<dyn Algorithm + Send + Sync>> {
         "hotsax" | "hot-sax" | "hot_sax" => Some(Box::new(hotsax::HotSax)),
         "hst" | "hotsaxtime" => Some(Box::new(hst::HstSearch::default())),
         "hst-par" | "hstpar" | "hst_par" => Some(Box::new(hst::par::HstPar::default())),
+        "hst-stream" | "hststream" | "hst_stream" => {
+            Some(Box::new(crate::stream::HstStream))
+        }
         "dadd" | "drag" => Some(Box::new(dadd::Dadd::default())),
         "rra" => Some(Box::new(rra::Rra::default())),
         "scamp" | "stomp" => Some(Box::new(scamp::Scamp::default())),
@@ -159,19 +184,9 @@ mod tests {
 
     #[test]
     fn registry_resolves_all_engines() {
-        for n in [
-            "brute",
-            "hotsax",
-            "hst",
-            "hst-par",
-            "dadd",
-            "rra",
-            "scamp",
-            "scamp-par",
-            "prescrimp",
-            "merlin",
-        ] {
-            assert!(by_name(n).is_some(), "{n}");
+        for id in ALL_ENGINES {
+            let engine = by_name(id).unwrap_or_else(|| panic!("{id} missing"));
+            assert_eq!(engine.name(), id, "canonical id must round-trip");
         }
         assert!(by_name("nope").is_none());
     }

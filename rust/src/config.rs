@@ -27,6 +27,15 @@ impl SaxParams {
         sp
     }
 
+    /// The default PAA segment count for sequence length `s`: the
+    /// largest value ≤ 4 that divides `s`, so the default always passes
+    /// [`validate`](Self::validate). One rule shared by every defaulting
+    /// path (service JSON, CLI `stream`) so the same `s` never gets two
+    /// different default discretizations.
+    pub fn default_p(s: usize) -> usize {
+        (1..=4.min(s)).rev().find(|d| s % d == 0).unwrap_or(1)
+    }
+
     /// Check the paper's constraints: s > 0, P divides s, alphabet 2..=20.
     pub fn validate(&self) -> Result<(), String> {
         if self.s == 0 {
@@ -167,11 +176,9 @@ impl SearchParams {
         if s == 0 {
             return Err("field `s` is required".into());
         }
-        // Default P: the largest value <= 4 that divides s, so the default
-        // always passes SaxParams::validate (a plain `4.min(s)` fails for
-        // valid lengths like s = 10).
-        let default_p = (1..=4.min(s)).rev().find(|d| s % d == 0).unwrap_or(1);
-        let p = u("p", default_p)?;
+        // Default P: the shared rule (a plain `4.min(s)` fails for valid
+        // lengths like s = 10).
+        let p = u("p", SaxParams::default_p(s))?;
         let alphabet = u("alphabet", 4)?;
         let sax = SaxParams { s, p, alphabet };
         sax.validate()?;
@@ -242,6 +249,13 @@ mod tests {
         assert_eq!(p.sax.alphabet, 4);
         assert_eq!(p.k, 1);
         assert!(p.znormalize);
+    }
+
+    #[test]
+    fn default_p_is_the_largest_divisor_up_to_four() {
+        for (s, want) in [(128usize, 4usize), (10, 2), (9, 3), (7, 1), (90, 3)] {
+            assert_eq!(SaxParams::default_p(s), want, "s={s}");
+        }
     }
 
     #[test]

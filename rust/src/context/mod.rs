@@ -264,6 +264,34 @@ impl SearchContext {
         (self.stats(sax.s), self.index(sax))
     }
 
+    /// Seed the stats cache with externally maintained rolling stats.
+    ///
+    /// Contract: `stats` must equal what [`SeqStats::compute`] over this
+    /// context's series would produce for `stats.s`. The
+    /// [`stream`](crate::stream) monitor satisfies it by construction —
+    /// per-window stats are a pure function of the window
+    /// ([`ts::window_stats`](crate::ts::window_stats)), so incrementally
+    /// extended entries are bit-identical to a cold recompute. An existing
+    /// cached entry for the same `s` is kept (it is the same data).
+    pub fn seed_stats(&self, stats: Arc<SeqStats>) {
+        self.stats_cache
+            .lock()
+            .unwrap()
+            .entry(stats.s)
+            .or_insert(stats);
+    }
+
+    /// Seed the index cache with an externally assembled SAX index.
+    ///
+    /// Contract: `index` must equal what [`SaxIndex::build`] over this
+    /// context's series would produce for `sax` — guaranteed when it is
+    /// materialized via [`SaxIndex::from_words`] from words produced by
+    /// the shared [`WordBuilder`](crate::sax::WordBuilder) kernel. An
+    /// existing cached entry for the same `sax` is kept.
+    pub fn seed_index(&self, sax: SaxParams, index: Arc<SaxIndex>) {
+        self.index_cache.lock().unwrap().entry(sax).or_insert(index);
+    }
+
     /// Is the SAX index for `sax` already cached? (Diagnostics / tests.)
     pub fn is_prepared(&self, sax: &SaxParams) -> bool {
         self.index_cache.lock().unwrap().contains_key(sax)
@@ -402,6 +430,25 @@ mod tests {
         let long = SaxParams::new(4_000, 4, 4);
         let ctx = SearchContext::builder(&ts).prepare(long).build();
         assert!(!ctx.is_prepared(&long));
+    }
+
+    #[test]
+    fn seeding_populates_the_caches_without_recompute() {
+        let ts = series();
+        let ctx = SearchContext::builder(&ts).build();
+        let sax = SaxParams::new(64, 4, 4);
+        let stats = Arc::new(SeqStats::compute(&ts, 64));
+        let idx = Arc::new(SaxIndex::build(&ts, &stats, &sax));
+        ctx.seed_stats(Arc::clone(&stats));
+        ctx.seed_index(sax, Arc::clone(&idx));
+        assert!(ctx.is_prepared(&sax));
+        let (s2, i2) = ctx.prepared(&sax);
+        assert!(Arc::ptr_eq(&stats, &s2), "seeded stats must be served");
+        assert!(Arc::ptr_eq(&idx, &i2), "seeded index must be served");
+        // seeding on top of an existing entry keeps the first one
+        let other = Arc::new(SeqStats::compute(&ts, 64));
+        ctx.seed_stats(Arc::clone(&other));
+        assert!(Arc::ptr_eq(&ctx.stats(64), &stats));
     }
 
     #[test]

@@ -34,6 +34,19 @@
 //! counts are summed after the join — so `distance_calls` and cps stay
 //! exact, never sampled or approximated.
 //!
+//! ```
+//! use hstime::exec::{scope_workers, ExecPolicy};
+//!
+//! // an explicit request always wins the resolution order
+//! assert_eq!(ExecPolicy::new(3).resolve(), 3);
+//! // with no request, HST_THREADS / available parallelism decide (≥ 1)
+//! assert!(ExecPolicy::auto().resolve() >= 1);
+//!
+//! // results come back in worker order, so reductions are deterministic
+//! let squares = scope_workers(4, |w| w * w);
+//! assert_eq!(squares, vec![0, 1, 4, 9]);
+//! ```
+//!
 //! [`SearchParams::threads`]: crate::config::SearchParams::threads
 
 mod bound;

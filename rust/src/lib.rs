@@ -6,12 +6,14 @@
 //! The crate is the **Layer-3 Rust coordinator** of a three-layer stack:
 //!
 //! * **L3 (this crate)** — the discord-search engines (HST and its
-//!   sharded-parallel `hst-par`, HOT SAX, brute force, DADD/DRAG, RRA,
-//!   SCAMP/STOMP serial and parallel), the [`exec`] worker-pool
-//!   subsystem, the SAX substrate, dataset generators, the batch-search
+//!   sharded-parallel `hst-par`, the incremental `hst-stream`, HOT SAX,
+//!   brute force, DADD/DRAG, RRA, SCAMP/STOMP serial and parallel), the
+//!   [`exec`] worker-pool subsystem, the [`stream`] sliding-window
+//!   monitor, the SAX substrate, dataset generators, the batch-search
 //!   service coordinator, metrics (cost per sequence, D-/T-speedups), and
 //!   the benchmark harness that regenerates every table and figure of the
-//!   paper.
+//!   paper. The layer map and warm-profile dataflow are described in
+//!   `docs/ARCHITECTURE.md` at the repository root.
 //! * **L2 (python/compile/model.py, build-time only)** — JAX compute graphs
 //!   (batched z-normalized distance, matrix-profile tiles) AOT-lowered to
 //!   HLO text artifacts.
@@ -64,6 +66,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod sax;
 pub mod service;
+pub mod stream;
 pub mod tables;
 pub mod ts;
 pub mod util;
@@ -82,6 +85,7 @@ pub mod prelude {
     pub use crate::exec::ExecPolicy;
     pub use crate::metrics::{cps, d_speedup, t_speedup};
     pub use crate::sax::{SaxIndex, SaxWord};
+    pub use crate::stream::{HstStream, StreamDiscord, StreamUpdate, StreamingMonitor};
     pub use crate::ts::series::IntoSeries;
     pub use crate::ts::{generators, TimeSeries};
     pub use crate::util::rng::Rng64;

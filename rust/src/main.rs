@@ -42,6 +42,7 @@ fn run(args: &Args) -> Result<()> {
         Some("plot") => plot(args),
         Some("merlin") => merlin(args),
         Some("monitor") => monitor(args),
+        Some("stream") => stream(args),
         Some("generate") => generate(args),
         Some("serve") => serve(args),
         Some("submit") => submit(args),
@@ -54,7 +55,7 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: hst <discover|table|report|plot|merlin|monitor|generate|serve|submit|info> [flags]
+const USAGE: &str = "usage: hst <discover|table|report|plot|merlin|monitor|stream|generate|serve|submit|info> [flags]
   hst discover 'ECG 108' --algo hst --k 3 --scale-div 8
   hst discover 'ECG 108' --algo hst-par --threads 4
   hst discover synthetic --noise 0.001 --n 20000 --s 120
@@ -65,6 +66,8 @@ const USAGE: &str = "usage: hst <discover|table|report|plot|merlin|monitor|gener
   hst plot 'Shuttle TEK 14' --k 2
   hst merlin 'ECG 108' --min-len 80 --max-len 120 --step 8
   hst monitor 'ECG 15' --window 4000 --batch 1000
+  hst stream 'ECG 15' --window 4000 --refresh-every 500   (incremental hst-stream)
+  hst stream --file points.txt --s 64    (or pipe points, one per line, on stdin)
   hst generate 'Shuttle TEK 14' --out tek14.txt
   hst serve --addr 127.0.0.1:7878 --workers 4   (0 = HST_THREADS/all cores)
   hst submit --addr 127.0.0.1:7878 --dataset 'ECG 15' --algo hst-par --threads 2
@@ -271,6 +274,108 @@ fn monitor(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn print_stream_update(u: &hstime::stream::StreamUpdate, json: bool) {
+    if json {
+        println!("{}", u.to_json());
+        return;
+    }
+    println!(
+        "refresh #{:<4} window [{}, {})  calls {:<8} cps {:<7.2} {}",
+        u.refresh,
+        u.window_start,
+        u.window_start + u.window_len as u64,
+        u.distance_calls,
+        u.cps(),
+        if u.warm { "warm" } else { "cold" },
+    );
+    for (rank, d) in u.discords.iter().enumerate() {
+        println!(
+            "    #{:<2} discord @ {:<10} nnd {:<10.4} neighbor @ {}",
+            rank + 1,
+            d.position,
+            d.nnd,
+            d.neighbor
+        );
+    }
+}
+
+fn stream(args: &Args) -> Result<()> {
+    use std::io::BufRead as _;
+
+    // point source: a registry dataset, --file, or stdin (one f64/line)
+    let (points, default_s, default_p): (Vec<f64>, usize, usize) =
+        if let Some(name) = args.positionals.first() {
+            let d = datasets::by_name(name)
+                .with_context(|| format!("unknown dataset {name:?}"))?;
+            let ts = d.generate_scaled(args.get_usize("scale-div", 8));
+            (ts.points, d.s, d.p)
+        } else if let Some(path) = args.get("file") {
+            let ts = ts_io::load_text(std::path::Path::new(path), 0)?;
+            (ts.points, 128, 4)
+        } else {
+            let mut pts = Vec::new();
+            for line in std::io::stdin().lock().lines() {
+                let line = line?;
+                let t = line.trim();
+                if t.is_empty() || t.starts_with('#') {
+                    continue;
+                }
+                pts.push(t.parse::<f64>().with_context(|| {
+                    format!("stdin: bad number {t:?}")
+                })?);
+            }
+            (pts, 128, 4)
+        };
+
+    let s = args.get_usize("s", default_s);
+    // prefer the dataset's registry P; otherwise the shared default rule
+    let p = args.get_usize(
+        "p",
+        if s % default_p == 0 {
+            default_p
+        } else {
+            hstime::config::SaxParams::default_p(s)
+        },
+    );
+    let alpha = args.get_usize("alphabet", 4);
+    let params = SearchParams::new(s, p, alpha)
+        .with_discords(args.get_usize("k", 1))
+        .with_seed(args.get_u64("seed", 0));
+    let window = args.get_usize("window", (8 * s).max(2_000));
+    let refresh_every = args.get_usize("refresh-every", window / 4);
+    let json = args.has("json");
+
+    let mut mon = hstime::stream::StreamingMonitor::new(params, window)?
+        .with_name("cli-stream")
+        .with_refresh_every(refresh_every);
+    if !json {
+        println!(
+            "streaming {} points through a {window}-pt window \
+             (s={s}, refresh every {refresh_every})",
+            points.len()
+        );
+    }
+    for &x in &points {
+        if let Some(u) = mon.append(x)? {
+            print_stream_update(&u, json);
+        }
+    }
+    // flush a final refresh so trailing points are searched too — but
+    // only if any arrived since the last auto-refresh (a duplicate
+    // search over an unchanged window would just repeat the last update)
+    if mon.pending_points() > 0 && mon.num_sequences() >= 2 {
+        print_stream_update(&mon.refresh()?, json);
+    }
+    if !json {
+        println!(
+            "{} refreshes, {} distance calls total",
+            mon.refreshes(),
+            mon.distance_calls()
+        );
+    }
+    Ok(())
+}
+
 fn generate(args: &Args) -> Result<()> {
     let name = args
         .positionals
@@ -333,10 +438,7 @@ fn info(args: &Args) -> Result<()> {
             d.name, d.paper_len, d.s, d.p, d.alphabet, d.family
         );
     }
-    println!(
-        "\nalgorithms: brute, hotsax, hst, hst-par, dadd, rra, scamp, \
-         scamp-par, prescrimp, merlin"
-    );
+    println!("\nalgorithms: {}", algo::ALL_ENGINES.join(", "));
     println!(
         "threads: --threads N on discover/submit/table, HST_THREADS env, \
          default all cores (currently resolves to {})",

@@ -14,6 +14,50 @@ use super::breakpoints::{breakpoints, symbolize};
 use super::paa::paa_into;
 use super::word::SaxWord;
 
+/// Computes SAX words one sequence at a time (z-norm → PAA → symbols),
+/// reusing its scratch buffers across calls.
+///
+/// The shared word kernel of the batch [`SaxIndex::build`] and the
+/// [`stream`](crate::stream) monitor's incremental per-point updates: a
+/// word depends only on the sequence's points and its rolling (μ, σ)
+/// (themselves pure per-window — see
+/// [`ts::window_stats`](crate::ts::window_stats)), so both paths produce
+/// bit-identical words for the same window.
+#[derive(Debug, Clone)]
+pub struct WordBuilder {
+    beta: Vec<f64>,
+    znorm_buf: Vec<f64>,
+    paa_buf: Vec<f64>,
+    sym_buf: Vec<u8>,
+}
+
+impl WordBuilder {
+    /// Scratch state for words under `params`.
+    pub fn new(params: &SaxParams) -> WordBuilder {
+        WordBuilder {
+            beta: breakpoints(params.alphabet),
+            znorm_buf: vec![0.0; params.s],
+            paa_buf: vec![0.0; params.p],
+            sym_buf: vec![0u8; params.p],
+        }
+    }
+
+    /// The SAX word of one sequence, given its points (length `s`) and its
+    /// rolling mean/std.
+    pub fn word(&mut self, window: &[f64], mean: f64, std: f64) -> SaxWord {
+        debug_assert_eq!(window.len(), self.znorm_buf.len());
+        let inv_sd = 1.0 / std;
+        for (o, &p) in self.znorm_buf.iter_mut().zip(window) {
+            *o = (p - mean) * inv_sd;
+        }
+        paa_into(&self.znorm_buf, &mut self.paa_buf);
+        for (sy, &v) in self.sym_buf.iter_mut().zip(&self.paa_buf) {
+            *sy = symbolize(v, &self.beta);
+        }
+        SaxWord::new(&self.sym_buf)
+    }
+}
+
 /// SAX index over all sequences of one series for fixed (s, P, alphabet).
 #[derive(Debug, Clone)]
 pub struct SaxIndex {
@@ -32,30 +76,32 @@ impl SaxIndex {
     pub fn build(ts: &TimeSeries, stats: &SeqStats, params: &SaxParams) -> SaxIndex {
         assert_eq!(stats.s, params.s, "stats were computed for a different s");
         let n = stats.len();
-        let beta = breakpoints(params.alphabet);
-        let mut znorm_buf = vec![0.0; params.s];
-        let mut paa_buf = vec![0.0; params.p];
-        let mut sym_buf = vec![0u8; params.p];
+        let mut wb = WordBuilder::new(params);
+        let words: Vec<SaxWord> = (0..n)
+            .map(|k| wb.word(ts.seq(k, params.s), stats.mean[k], stats.std[k]))
+            .collect();
+        SaxIndex::from_words(words)
+    }
 
-        let mut words = Vec::with_capacity(n);
+    /// Assemble the index from already-computed words (one per sequence
+    /// start, in time order). Cluster ids are assigned in order of first
+    /// appearance — exactly as [`build`](Self::build) assigns them — so an
+    /// index materialized from a streaming monitor's incrementally
+    /// maintained word deque is identical to a cold `build` over the same
+    /// window.
+    pub fn from_words(words: Vec<SaxWord>) -> SaxIndex {
+        let n = words.len();
         let mut map: HashMap<SaxWord, usize> = HashMap::new();
         let mut clusters: Vec<Vec<usize>> = Vec::new();
         let mut cluster_of = Vec::with_capacity(n);
 
-        for k in 0..n {
-            stats.znorm_into(ts, k, &mut znorm_buf);
-            paa_into(&znorm_buf, &mut paa_buf);
-            for (sy, &v) in sym_buf.iter_mut().zip(&paa_buf) {
-                *sy = symbolize(v, &beta);
-            }
-            let w = SaxWord::new(&sym_buf);
+        for (k, w) in words.iter().enumerate() {
             let id = *map.entry(w.clone()).or_insert_with(|| {
                 clusters.push(Vec::new());
                 clusters.len() - 1
             });
             clusters[id].push(k);
             cluster_of.push(id);
-            words.push(w);
         }
 
         let mut by_size: Vec<usize> = (0..clusters.len()).collect();
@@ -154,6 +200,23 @@ mod tests {
             "expected few clusters, got {}",
             idx.clusters.len()
         );
+    }
+
+    #[test]
+    fn from_words_matches_build_exactly() {
+        // the streaming monitor materializes its index through from_words;
+        // cluster ids, members, and by_size order must match build()
+        let (ts, stats, idx) = small_index();
+        let params = SaxParams { s: 120, p: 4, alphabet: 4 };
+        let mut wb = WordBuilder::new(&params);
+        let words: Vec<SaxWord> = (0..stats.len())
+            .map(|k| wb.word(ts.seq(k, 120), stats.mean[k], stats.std[k]))
+            .collect();
+        let rebuilt = SaxIndex::from_words(words);
+        assert_eq!(rebuilt.words, idx.words);
+        assert_eq!(rebuilt.cluster_of, idx.cluster_of);
+        assert_eq!(rebuilt.clusters, idx.clusters);
+        assert_eq!(rebuilt.by_size, idx.by_size);
     }
 
     #[test]

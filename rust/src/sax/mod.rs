@@ -13,5 +13,5 @@ pub mod mindist;
 pub mod paa;
 pub mod word;
 
-pub use index::SaxIndex;
+pub use index::{SaxIndex, WordBuilder};
 pub use word::SaxWord;

@@ -21,6 +21,8 @@ use crate::context::SearchContext;
 use crate::ts::{datasets, TimeSeries};
 use crate::util::json::Json;
 
+use super::streams::{StreamRegistry, STREAM_REGISTRY_CAPACITY};
+
 /// Contexts kept warm by the coordinator (per-process; each context holds
 /// its series plus prepared state, so the cap bounds memory).
 const CONTEXT_CACHE_CAPACITY: usize = 8;
@@ -284,6 +286,8 @@ pub struct CoordinatorStats {
     pub queue_capacity: usize,
     /// Prepared contexts currently held by the LRU.
     pub ctx_cache_entries: usize,
+    /// Streaming monitors currently open (the `stream_open` command).
+    pub streams: usize,
 }
 
 /// Thread-pool coordinator with a bounded queue (backpressure: `submit`
@@ -295,6 +299,7 @@ pub struct Coordinator {
     workers: Vec<JoinHandle<()>>,
     cache: Arc<ContextCache>,
     capacity: usize,
+    streams: StreamRegistry,
 }
 
 impl Coordinator {
@@ -331,7 +336,16 @@ impl Coordinator {
             workers,
             cache,
             capacity,
+            streams: StreamRegistry::new(STREAM_REGISTRY_CAPACITY),
         }
+    }
+
+    /// The per-stream monitor registry (the `stream_open` / `append` /
+    /// `subscribe` / `stream_close` protocol commands; see
+    /// `docs/PROTOCOL.md`). Lives alongside the context LRU so streaming
+    /// state shares the coordinator's lifetime and observability.
+    pub fn streams(&self) -> &StreamRegistry {
+        &self.streams
     }
 
     /// Submit a job; returns its id, or an error when the queue is full
@@ -385,6 +399,7 @@ impl Coordinator {
             jobs_total: g.jobs.len(),
             queue_capacity: self.capacity,
             ctx_cache_entries: self.cache.len(),
+            streams: self.streams.len(),
         }
     }
 
@@ -721,6 +736,7 @@ mod tests {
         assert_eq!(st.queue_capacity, 9);
         assert_eq!(st.jobs_total, 0);
         assert_eq!(st.ctx_cache_entries, 0);
+        assert_eq!(st.streams, 0);
         let id = c.submit(quick_spec("hst")).unwrap();
         let _ = c.wait(id);
         let st = c.stats();
@@ -736,6 +752,24 @@ mod tests {
         assert!(c.stats().workers >= 1);
         let id = c.submit(quick_spec("hst")).unwrap();
         assert!(matches!(c.wait(id), Some(JobState::Done(_))));
+        c.shutdown();
+    }
+
+    #[test]
+    fn stream_registry_lives_alongside_the_context_cache() {
+        let c = Coordinator::start(1, 4);
+        c.streams()
+            .open("s1", SearchParams::new(32, 4, 4), 300, 0)
+            .unwrap();
+        assert_eq!(c.stats().streams, 1);
+        let pts = crate::ts::generators::sine_with_noise(400, 0.3, 31);
+        let updates = c.streams().append("s1", &pts).unwrap();
+        assert_eq!(updates.len(), 1);
+        // batch jobs and streams coexist on one coordinator
+        let id = c.submit(quick_spec("hst")).unwrap();
+        assert!(matches!(c.wait(id), Some(JobState::Done(_))));
+        c.streams().close("s1").unwrap();
+        assert_eq!(c.stats().streams, 0);
         c.shutdown();
     }
 

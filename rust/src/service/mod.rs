@@ -5,7 +5,10 @@
 //! coordinator uses std threads + condvar — the concurrency pattern, not
 //! the framework, is what matters at this scale.)
 //!
-//! Protocol (one JSON object per line):
+//! Protocol sketch (one JSON object per line; the **complete reference**
+//! — every command, field, error shape, and a worked TCP transcript — is
+//! `docs/PROTOCOL.md` at the repository root, kept in sync with
+//! [`server::COMMANDS`] by `tests/docs_consistency.rs`):
 //!
 //! ```text
 //! → {"cmd":"submit","dataset":"ECG 300","scale_div":8,"algo":"hst","params":{"s":300,"p":4,"alphabet":4,"k":3}}
@@ -17,15 +20,22 @@
 //! → {"cmd":"wait","job":1,"timeout_ms":250}
 //! ← {"ok":true,"job":1,"state":"running","timed_out":true}   (on expiry)
 //! → {"cmd":"stats"}
-//! ← {"ok":true,"queued":0,"running":1,"workers":4,"jobs_total":3,"queue_capacity":64,"ctx_cache_entries":1}
-//! → {"cmd":"list"} | {"cmd":"shutdown"}
+//! ← {"ok":true,"queued":0,"running":1,"workers":4,"jobs_total":3,"queue_capacity":64,"ctx_cache_entries":1,"streams":1}
+//! → {"cmd":"stream_open","stream":"sensor-7","window":4000,"refresh_every":500,"params":{"s":64}}
+//! ← {"ok":true,"stream":"sensor-7"}
+//! → {"cmd":"append","stream":"sensor-7","points":[0.93,1.02, …]}
+//! ← {"ok":true,"stream":"sensor-7","appended":500,"updates":[{"refresh":1,"discords":[…], …}]}
+//! → {"cmd":"subscribe","stream":"sensor-7","after":1,"timeout_ms":250}
+//! ← {"ok":true,"stream":"sensor-7","seq":2,"update":{…}}      (or timed_out)
+//! → {"cmd":"stream_close","stream":"sensor-7"} | {"cmd":"list"} | {"cmd":"shutdown"}
 //! ```
 //!
-//! Unknown request fields (job-level or inside `params`) are rejected by
-//! name, and a per-job `threads` field (or `params.threads`) selects the
-//! worker count of the parallel engines (`hst-par`, `scamp-par`) through
-//! the shared [`ExecPolicy`](crate::exec::ExecPolicy). A `batch` is
-//! atomic: either the queue admits every job of the array or none.
+//! Unknown request fields (job-level, stream-level, or inside `params`)
+//! are rejected by name, and a per-job `threads` field (or
+//! `params.threads`) selects the worker count of the parallel engines
+//! (`hst-par`, `scamp-par`) through the shared
+//! [`ExecPolicy`](crate::exec::ExecPolicy). A `batch` is atomic: either
+//! the queue admits every job of the array or none.
 //!
 //! Workers run jobs through a shared LRU of prepared
 //! [`SearchContext`](crate::context::SearchContext)s keyed by
@@ -33,10 +43,18 @@
 //! skip series generation and preparation. Reports carry
 //! `ctx_cache: "hit" | "miss"` and the engine's `prep_calls` so callers
 //! can observe the reuse.
+//!
+//! Streaming state lives in the coordinator's bounded [`StreamRegistry`]
+//! alongside that LRU: each open stream is one incremental
+//! [`StreamingMonitor`](crate::stream::StreamingMonitor), so every
+//! `append` pays only the window delta and each refresh is a warm search
+//! (see the [`stream`](crate::stream) module for the exactness argument).
 
 pub mod coordinator;
 pub mod online;
 pub mod server;
+pub mod streams;
 
 pub use coordinator::{Coordinator, CoordinatorStats, JobSpec, JobState};
 pub use server::{serve, Client};
+pub use streams::StreamRegistry;

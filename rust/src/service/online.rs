@@ -3,12 +3,17 @@
 //! motivates and the paper's Sec. 4.5 alludes to.
 //!
 //! [`OnlineMonitor`] holds a sliding window of the most recent `window`
-//! points; every `batch` arrivals it re-runs HST over the window, fits the
-//! significance test on the evolving profile (via the SCAMP profile of the
-//! window when small, or HST's approximate profile), and reports
-//! significant discords with *global* positions. Rerunning-from-scratch is
-//! the honest baseline for streaming HST; a fully incremental variant is
-//! future work (as it is for the paper).
+//! points; every `batch` arrivals it re-runs HST over the window **from
+//! scratch**, fits the significance test on the window's exact profile,
+//! and reports significant discords with *global* positions.
+//!
+//! Rerunning-from-scratch is the honest *baseline* for streaming HST —
+//! the fully incremental variant is
+//! [`StreamingMonitor`](crate::stream::StreamingMonitor), which shifts
+//! the warm nnd profile across window advances so each refresh is a warm
+//! search with bit-identical results (`benches/stream_refresh.rs`
+//! measures the two against each other). This monitor stays as the
+//! significance-testing front end and the cold-cost reference.
 
 use anyhow::Result;
 

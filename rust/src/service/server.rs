@@ -8,6 +8,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::config::SearchParams;
 use crate::util::json::Json;
 
 use super::coordinator::{Coordinator, JobSpec, JobState};
@@ -74,8 +75,48 @@ fn handle_conn(
     Ok(())
 }
 
+/// Every `cmd` the dispatcher accepts, in `docs/PROTOCOL.md` order.
+/// `tests/docs_consistency.rs` asserts the protocol document covers each
+/// of these, so the list and the doc cannot drift apart.
+pub const COMMANDS: [&str; 11] = [
+    "submit",
+    "batch",
+    "status",
+    "wait",
+    "stats",
+    "list",
+    "stream_open",
+    "append",
+    "subscribe",
+    "stream_close",
+    "shutdown",
+];
+
 fn err_reply(msg: &str) -> Json {
     Json::obj().set("ok", false).set("error", msg)
+}
+
+/// Reject requests carrying fields outside `known` — applied to every
+/// command (same strictness as the job parser: a typo must fail loudly,
+/// not silently change the request; `{"cmd":"wait","timout_ms":250}`
+/// must not block forever).
+fn check_fields(req: &Json, known: &[&str]) -> Result<(), Json> {
+    if let Json::Obj(map) = req {
+        if let Some(bad) = map.keys().find(|k| !known.contains(&k.as_str())) {
+            return Err(err_reply(&format!(
+                "unknown field `{bad}` (known: {})",
+                known.join(", ")
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// The `stream` field every streaming command addresses a monitor by.
+fn stream_name(req: &Json) -> Result<&str, Json> {
+    req.get("stream")
+        .and_then(|s| s.as_str())
+        .ok_or_else(|| err_reply("field `stream` (string) required"))
 }
 
 fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
@@ -92,6 +133,9 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
             Err(e) => err_reply(&e),
         },
         Some("status") => {
+            if let Err(e) = check_fields(&req, &["cmd", "job"]) {
+                return e;
+            }
             let Some(id) = req.get("job").and_then(|j| j.as_u64()) else {
                 return err_reply("field `job` required");
             };
@@ -112,6 +156,9 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
             }
         }
         Some("batch") => {
+            if let Err(e) = check_fields(&req, &["cmd", "jobs"]) {
+                return e;
+            }
             let Some(jobs) = req.get("jobs").and_then(|j| j.as_arr()) else {
                 return err_reply("field `jobs` (array) required");
             };
@@ -131,6 +178,9 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
             }
         }
         Some("wait") => {
+            if let Err(e) = check_fields(&req, &["cmd", "job", "timeout_ms"]) {
+                return e;
+            }
             let Some(id) = req.get("job").and_then(|j| j.as_u64()) else {
                 return err_reply("field `job` required");
             };
@@ -167,6 +217,9 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
             }
         }
         Some("stats") => {
+            if let Err(e) = check_fields(&req, &["cmd"]) {
+                return e;
+            }
             let st = coord.stats();
             Json::obj()
                 .set("ok", true)
@@ -176,8 +229,12 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
                 .set("jobs_total", st.jobs_total)
                 .set("queue_capacity", st.queue_capacity)
                 .set("ctx_cache_entries", st.ctx_cache_entries)
+                .set("streams", st.streams)
         }
         Some("list") => {
+            if let Err(e) = check_fields(&req, &["cmd"]) {
+                return e;
+            }
             let jobs: Vec<Json> = coord
                 .list()
                 .into_iter()
@@ -185,13 +242,146 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
                 .collect();
             Json::obj().set("ok", true).set("jobs", jobs)
         }
+        Some("stream_open") => {
+            if let Err(e) = check_fields(
+                &req,
+                &["cmd", "stream", "params", "window", "refresh_every"],
+            ) {
+                return e;
+            }
+            let name = match stream_name(&req) {
+                Ok(n) => n,
+                Err(e) => return e,
+            };
+            let params = match req.get("params") {
+                Some(p) => match SearchParams::from_json(p) {
+                    Ok(p) => p,
+                    Err(e) => return err_reply(&e),
+                },
+                None => return err_reply("field `params` required"),
+            };
+            let Some(window) = req.get("window").and_then(|w| w.as_u64()) else {
+                return err_reply("field `window` (points, integer) required");
+            };
+            let refresh_every = match req.get("refresh_every") {
+                None => 0,
+                Some(r) => match r.as_u64() {
+                    Some(r) => r as usize,
+                    None => {
+                        return err_reply(
+                            "field `refresh_every` must be an integer",
+                        )
+                    }
+                },
+            };
+            match coord.streams().open(name, params, window as usize, refresh_every)
+            {
+                Ok(()) => Json::obj().set("ok", true).set("stream", name),
+                Err(e) => err_reply(&format!("{e:#}")),
+            }
+        }
+        Some("append") => {
+            if let Err(e) = check_fields(&req, &["cmd", "stream", "points"]) {
+                return e;
+            }
+            let name = match stream_name(&req) {
+                Ok(n) => n,
+                Err(e) => return e,
+            };
+            let Some(raw) = req.get("points").and_then(|p| p.as_arr()) else {
+                return err_reply("field `points` (array of numbers) required");
+            };
+            let mut points = Vec::with_capacity(raw.len());
+            for (i, v) in raw.iter().enumerate() {
+                match v.as_f64() {
+                    Some(x) => points.push(x),
+                    None => {
+                        return err_reply(&format!(
+                            "points[{i}] is not a number"
+                        ))
+                    }
+                }
+            }
+            match coord.streams().append(name, &points) {
+                Ok(updates) => Json::obj()
+                    .set("ok", true)
+                    .set("stream", name)
+                    .set("appended", points.len())
+                    .set("updates", updates),
+                Err(e) => err_reply(&format!("{e:#}")),
+            }
+        }
+        Some("subscribe") => {
+            if let Err(e) =
+                check_fields(&req, &["cmd", "stream", "after", "timeout_ms"])
+            {
+                return e;
+            }
+            let name = match stream_name(&req) {
+                Ok(n) => n,
+                Err(e) => return e,
+            };
+            let after = match req.get("after") {
+                None => 0,
+                Some(a) => match a.as_u64() {
+                    Some(a) => a,
+                    None => {
+                        return err_reply("field `after` must be an integer")
+                    }
+                },
+            };
+            let timeout = match req.get("timeout_ms") {
+                None => None,
+                Some(t) => match t.as_u64() {
+                    Some(ms) => Some(std::time::Duration::from_millis(ms)),
+                    None => {
+                        return err_reply(
+                            "field `timeout_ms` must be an integer",
+                        )
+                    }
+                },
+            };
+            match coord.streams().subscribe(name, after, timeout) {
+                Ok(Some((seq, update))) => Json::obj()
+                    .set("ok", true)
+                    .set("stream", name)
+                    .set("seq", seq)
+                    .set("update", update),
+                // the timeout expired before the next refresh
+                Ok(None) => Json::obj()
+                    .set("ok", true)
+                    .set("stream", name)
+                    .set("timed_out", true),
+                Err(e) => err_reply(&format!("{e:#}")),
+            }
+        }
+        Some("stream_close") => {
+            if let Err(e) = check_fields(&req, &["cmd", "stream"]) {
+                return e;
+            }
+            let name = match stream_name(&req) {
+                Ok(n) => n,
+                Err(e) => return e,
+            };
+            match coord.streams().close(name) {
+                Ok(()) => Json::obj()
+                    .set("ok", true)
+                    .set("stream", name)
+                    .set("closed", true),
+                Err(e) => err_reply(&format!("{e:#}")),
+            }
+        }
         Some("shutdown") => {
+            if let Err(e) = check_fields(&req, &["cmd"]) {
+                return e;
+            }
             stop.store(true, Ordering::SeqCst);
             Json::obj().set("ok", true).set("bye", true)
         }
-        _ => err_reply(
-            "unknown cmd (submit|batch|status|wait|stats|list|shutdown)",
-        ),
+        _ => err_reply(&format!(
+            "unknown cmd (expected one of: {})",
+            COMMANDS.join("|")
+        )),
     }
 }
 

@@ -1,0 +1,300 @@
+//! Named streaming monitors served over the JSON-lines protocol.
+//!
+//! The [`Coordinator`](super::Coordinator) keeps a [`StreamRegistry`]
+//! alongside its prepared-context LRU: each open stream is one
+//! [`StreamingMonitor`] behind a mutex, with a condvar so `subscribe`
+//! requests can block until the next refresh publishes an update. The
+//! registry is bounded (like the job queue and the context LRU) so a
+//! client cannot grow server memory without bound; `stream_open` rejects
+//! with a backpressure error when it is full.
+//!
+//! Protocol commands (`stream_open` / `append` / `subscribe` /
+//! `stream_close`) are documented with worked examples in
+//! `docs/PROTOCOL.md` at the repository root.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::config::SearchParams;
+use crate::stream::StreamingMonitor;
+use crate::util::json::Json;
+
+/// Streams one coordinator will hold open at once (each holds a window of
+/// points plus per-sequence state, so the cap bounds memory).
+pub const STREAM_REGISTRY_CAPACITY: usize = 8;
+
+/// Largest window (in points) a single stream may request. Per-point
+/// state is ~100 bytes (window point + rolling stats + SAX word + profile
+/// entry), so this caps one stream at roughly 100 MB — and, with
+/// [`STREAM_REGISTRY_CAPACITY`], total streaming memory per process. A
+/// network-supplied `window` must never size an allocation unbounded.
+pub const MAX_STREAM_WINDOW: usize = 1_000_000;
+
+struct StreamState {
+    monitor: StreamingMonitor,
+    /// Last published update (protocol JSON), if any refresh ran yet.
+    last: Option<Json>,
+    /// Refresh counter mirror — `subscribe` waits for `seq > after`.
+    seq: u64,
+    closed: bool,
+}
+
+struct StreamEntry {
+    state: Mutex<StreamState>,
+    cv: Condvar,
+}
+
+/// Bounded registry of named streaming monitors (see the [module
+/// docs](self)).
+pub struct StreamRegistry {
+    capacity: usize,
+    inner: Mutex<HashMap<String, Arc<StreamEntry>>>,
+}
+
+impl StreamRegistry {
+    /// An empty registry holding at most `capacity` streams.
+    pub fn new(capacity: usize) -> StreamRegistry {
+        StreamRegistry {
+            capacity: capacity.max(1),
+            inner: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Streams currently open (observability; the `stats` command).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// Whether no stream is open.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn entry(&self, name: &str) -> Result<Arc<StreamEntry>> {
+        match self.inner.lock().unwrap().get(name) {
+            Some(e) => Ok(Arc::clone(e)),
+            None => bail!("no such stream {name:?}"),
+        }
+    }
+
+    /// Open a stream. `refresh_every == 0` means every `append` request
+    /// triggers one refresh at its end (request-driven cadence); a
+    /// positive value refreshes each time that many points arrive.
+    /// `window` is capped at [`MAX_STREAM_WINDOW`].
+    pub fn open(
+        &self,
+        name: &str,
+        params: SearchParams,
+        window: usize,
+        refresh_every: usize,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            window <= MAX_STREAM_WINDOW,
+            "window {window} exceeds the per-stream cap of \
+             {MAX_STREAM_WINDOW} points"
+        );
+        let monitor = StreamingMonitor::new(params, window)?
+            .with_name(name)
+            .with_refresh_every(refresh_every);
+        let mut g = self.inner.lock().unwrap();
+        if g.contains_key(name) {
+            bail!("stream {name:?} is already open");
+        }
+        if g.len() >= self.capacity {
+            bail!(
+                "stream registry full ({}/{}): close a stream first",
+                g.len(),
+                self.capacity
+            );
+        }
+        g.insert(
+            name.to_string(),
+            Arc::new(StreamEntry {
+                state: Mutex::new(StreamState {
+                    monitor,
+                    last: None,
+                    seq: 0,
+                    closed: false,
+                }),
+                cv: Condvar::new(),
+            }),
+        );
+        Ok(())
+    }
+
+    /// Append points to a stream; returns the protocol JSON of every
+    /// update the appends produced (auto-refreshes at the stream's
+    /// cadence, plus one request-end refresh when the cadence is 0).
+    /// Subscribers are woken when at least one update was produced.
+    pub fn append(&self, name: &str, points: &[f64]) -> Result<Vec<Json>> {
+        let e = self.entry(name)?;
+        let mut st = e.state.lock().unwrap();
+        if st.closed {
+            bail!("stream {name:?} is closed");
+        }
+        let mut updates = st.monitor.extend(points)?;
+        if st.monitor.refresh_cadence() == 0
+            && !points.is_empty()
+            && st.monitor.num_sequences() >= 2
+        {
+            updates.push(st.monitor.refresh()?);
+        }
+        let out: Vec<Json> = updates.iter().map(|u| u.to_json()).collect();
+        if let Some(last) = out.last() {
+            st.last = Some(last.clone());
+            st.seq = st.monitor.refreshes();
+            e.cv.notify_all();
+        }
+        Ok(out)
+    }
+
+    /// Block until the stream's refresh counter exceeds `after` (or the
+    /// timeout expires → `Ok(None)`). Returns the latest update with its
+    /// refresh counter. Errors when the stream does not exist or is
+    /// closed while waiting.
+    pub fn subscribe(
+        &self,
+        name: &str,
+        after: u64,
+        timeout: Option<Duration>,
+    ) -> Result<Option<(u64, Json)>> {
+        let e = self.entry(name)?;
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut st = e.state.lock().unwrap();
+        loop {
+            if st.closed {
+                bail!("stream {name:?} is closed");
+            }
+            if st.seq > after {
+                let last = st.last.clone().expect("seq > 0 implies an update");
+                return Ok(Some((st.seq, last)));
+            }
+            match deadline {
+                None => st = e.cv.wait(st).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Ok(None);
+                    }
+                    st = e.cv.wait_timeout(st, d - now).unwrap().0;
+                }
+            }
+        }
+    }
+
+    /// Close and drop a stream, waking any blocked subscribers (they
+    /// receive a "stream closed" error).
+    pub fn close(&self, name: &str) -> Result<()> {
+        let e = match self.inner.lock().unwrap().remove(name) {
+            Some(e) => e,
+            None => bail!("no such stream {name:?}"),
+        };
+        let mut st = e.state.lock().unwrap();
+        st.closed = true;
+        e.cv.notify_all();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ts::generators;
+
+    fn registry() -> StreamRegistry {
+        StreamRegistry::new(2)
+    }
+
+    fn open(r: &StreamRegistry, name: &str) {
+        r.open(name, SearchParams::new(32, 4, 4), 300, 0).unwrap();
+    }
+
+    #[test]
+    fn open_append_subscribe_close_lifecycle() {
+        let r = registry();
+        open(&r, "a");
+        assert_eq!(r.len(), 1);
+        assert!(r.open("a", SearchParams::new(32, 4, 4), 300, 0).is_err());
+
+        let pts = generators::sine_with_noise(400, 0.3, 21);
+        let updates = r.append("a", &pts).unwrap();
+        assert_eq!(updates.len(), 1, "cadence 0 = one refresh per request");
+        let u = &updates[0];
+        assert_eq!(u.get("refresh").unwrap().as_u64(), Some(1));
+
+        // an already-published update returns immediately
+        let (seq, last) = r.subscribe("a", 0, None).unwrap().unwrap();
+        assert_eq!(seq, 1);
+        assert_eq!(last, *u);
+        // waiting past the head times out
+        let got = r
+            .subscribe("a", seq, Some(Duration::from_millis(20)))
+            .unwrap();
+        assert!(got.is_none());
+
+        r.close("a").unwrap();
+        assert!(r.append("a", &pts).is_err());
+        assert!(r.close("a").is_err());
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn registry_is_bounded() {
+        let r = registry();
+        open(&r, "a");
+        open(&r, "b");
+        let err = r
+            .open("c", SearchParams::new(32, 4, 4), 300, 0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("full"), "{err}");
+        r.close("a").unwrap();
+        open(&r, "c");
+    }
+
+    #[test]
+    fn subscriber_is_woken_by_append() {
+        let r = Arc::new(registry());
+        open(&r, "a");
+        let r2 = Arc::clone(&r);
+        let waiter = std::thread::spawn(move || {
+            r2.subscribe("a", 0, Some(Duration::from_secs(10))).unwrap()
+        });
+        // give the waiter a moment to block, then publish
+        std::thread::sleep(Duration::from_millis(30));
+        let pts = generators::sine_with_noise(400, 0.3, 22);
+        r.append("a", &pts).unwrap();
+        let got = waiter.join().unwrap();
+        assert!(got.is_some(), "append must wake the subscriber");
+    }
+
+    #[test]
+    fn close_wakes_blocked_subscribers_with_an_error() {
+        let r = Arc::new(registry());
+        open(&r, "a");
+        let r2 = Arc::clone(&r);
+        let waiter = std::thread::spawn(move || {
+            r2.subscribe("a", 0, Some(Duration::from_secs(10)))
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        r.close("a").unwrap();
+        let got = waiter.join().unwrap();
+        assert!(got.is_err(), "close must fail blocked subscribers fast");
+    }
+
+    #[test]
+    fn invalid_window_is_rejected_at_open() {
+        let r = registry();
+        assert!(r.open("a", SearchParams::new(64, 4, 4), 100, 0).is_err());
+        // a network-supplied window must never size an unbounded allocation
+        let err = r
+            .open("a", SearchParams::new(64, 4, 4), MAX_STREAM_WINDOW + 1, 0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cap"), "{err}");
+        assert_eq!(r.len(), 0);
+    }
+}

@@ -1,0 +1,75 @@
+//! `hst-stream` — the registered engine face of the streaming search.
+
+use anyhow::Result;
+
+use crate::algo::hst::HstSearch;
+use crate::algo::{Algorithm, SearchReport};
+use crate::config::SearchParams;
+use crate::context::SearchContext;
+
+/// The engine id `hst-stream` reports under (shared with the monitor's
+/// internal refresh searches).
+pub(crate) const ENGINE_ID: &str = "hst-stream";
+
+/// Serial HST pinned to the exact scalar backend, reporting as
+/// `hst-stream` — the engine the [`StreamingMonitor`] drives on every
+/// refresh, registered in [`algo::by_name`](crate::algo::by_name) so the
+/// service and CLI can address it directly.
+///
+/// On a one-shot run it behaves exactly like `hst` (a static series is a
+/// stream with no appends). Its value shows on a *warm*
+/// [`SearchContext`]: it always reads and feeds the context's
+/// warm-profile cache, so repeated `hst-stream` jobs through the service
+/// coordinator's context LRU get the same carry-over the monitor applies
+/// across window shifts.
+///
+/// [`StreamingMonitor`]: super::StreamingMonitor
+#[derive(Debug, Default, Clone, Copy)]
+pub struct HstStream;
+
+impl Algorithm for HstStream {
+    fn name(&self) -> &'static str {
+        ENGINE_ID
+    }
+
+    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
+        // scalar_only: streaming exactness (bit-identity with cold serial
+        // runs) requires the exact backend regardless of the context's
+        // configured one.
+        HstSearch::default().run_serial(ctx, params, self.name(), true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ts::generators;
+    use crate::ts::series::IntoSeries;
+
+    #[test]
+    fn one_shot_matches_serial_hst_bitwise() {
+        let ts = generators::ecg_like(1_400, 100, 1, 71).into_series("e");
+        let params = SearchParams::new(80, 4, 4).with_discords(2);
+        let hst = HstSearch::default().run(&ts, &params).unwrap();
+        let hs = HstStream.run(&ts, &params).unwrap();
+        assert_eq!(hs.algo, "hst-stream");
+        assert_eq!(hs.discords.len(), hst.discords.len());
+        for (a, b) in hs.discords.iter().zip(&hst.discords) {
+            assert_eq!(a.position, b.position);
+            assert_eq!(a.nnd.to_bits(), b.nnd.to_bits());
+        }
+        assert_eq!(hs.distance_calls, hst.distance_calls);
+    }
+
+    #[test]
+    fn warm_context_carries_across_runs() {
+        let ts = generators::sine_with_noise(1_500, 0.2, 72).into_series("s");
+        let params = SearchParams::new(64, 4, 4);
+        let ctx = SearchContext::builder(&ts).build();
+        let cold = HstStream.run_ctx(&ctx, &params).unwrap();
+        let warm = HstStream.run_ctx(&ctx, &params).unwrap();
+        assert!(cold.prep_calls > 0);
+        assert_eq!(warm.prep_calls, 0);
+        assert_eq!(cold.discords[0].position, warm.discords[0].position);
+    }
+}

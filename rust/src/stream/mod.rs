@@ -1,0 +1,83 @@
+//! Streaming discord monitoring: incremental sliding-window search.
+//!
+//! HST's core insight — sequences close in time have similar
+//! nearest-neighbor distances, so warm profiles transfer between
+//! overlapping searches (paper Sec. 3.2) — is exactly the structure of a
+//! sliding-window monitor: consecutive windows overlap almost entirely,
+//! so almost all of the previous refresh's exact nnd knowledge is still
+//! valid after the window advances. This module turns that observation
+//! into an incremental engine:
+//!
+//! * [`StreamingMonitor`] ingests appended points and maintains, per
+//!   point, the state a search needs — rolling z-norm stats (one new
+//!   `(μ, σ)` per point via the pure per-window kernel
+//!   [`ts::window_stats`](crate::ts::window_stats)), the SAX word of the
+//!   one new sequence (inserted at the leading edge, evicted at the
+//!   trailing edge), and the nnd profile, which is **shifted** across
+//!   window advances: entries whose neighbor is still inside the window
+//!   keep their exact pair distance as a valid upper bound, entries whose
+//!   neighbor was evicted reset to the ∞ sentinel.
+//! * Each [`refresh`](StreamingMonitor::refresh) is then a *warm*
+//!   [`SearchContext`](crate::context::SearchContext) search: the monitor
+//!   seeds the context's stats/index caches from its deques and hands the
+//!   shifted profile to the warm-profile cache, so only the few new
+//!   sequences pay real work instead of the cold ~2N-call warm-up.
+//! * [`HstStream`] (engine id `hst-stream`) is the registered
+//!   [`Algorithm`](crate::algo::Algorithm) face of the same search: serial
+//!   HST on the scalar backend, reporting as `hst-stream`. Through the
+//!   service coordinator's context LRU, repeated `hst-stream` jobs get the
+//!   same warm-profile carry-over the monitor applies across window
+//!   shifts.
+//!
+//! **Exactness survives streaming.** After any sequence of appends, a
+//! refresh's discord set over the current window is bit-identical
+//! (positions and distances) to a cold serial `hst` run on that window.
+//! The proof obligations are discharged by construction: per-window stats
+//! and SAX words are pure functions of the window (so incremental entries
+//! equal a cold recompute bit for bit), and every shifted profile entry is
+//! an exactly-evaluated pair distance whose pair is still admissible —
+//! hence a valid upper bound, which is all HST's pruning needs. The
+//! property test `prop_stream_refresh_matches_cold_hst_bitwise`
+//! (`tests/integration_stream.rs`) checks this over random series and
+//! random append schedules, along with the strict distance-call reduction
+//! of warm refreshes.
+//!
+//! ```
+//! use hstime::prelude::*;
+//!
+//! let pts = generators::sine_with_noise(3_000, 0.1, 7);
+//! let params = SearchParams::new(64, 4, 4);
+//! let mut mon = StreamingMonitor::new(params.clone(), 1_500).unwrap();
+//!
+//! // fill the window, then refresh: the first refresh is a cold search
+//! for &x in &pts[..1_500] {
+//!     mon.append(x).unwrap();
+//! }
+//! let cold = mon.refresh().unwrap();
+//! assert!(!cold.warm);
+//!
+//! // slide the window and refresh again: warm, and strictly cheaper
+//! for &x in &pts[1_500..1_700] {
+//!     mon.append(x).unwrap();
+//! }
+//! let warm = mon.refresh().unwrap();
+//! assert!(warm.warm && warm.prep_calls == 0);
+//! assert!(warm.distance_calls < cold.distance_calls);
+//!
+//! // discords are reported in global stream coordinates, and match a
+//! // cold batch search over the same window exactly
+//! let batch = algo::hst::HstSearch::default()
+//!     .run(&mon.window_series(), &params)
+//!     .unwrap();
+//! assert_eq!(
+//!     warm.discords[0].position,
+//!     mon.window_start() + batch.discords[0].position as u64
+//! );
+//! assert_eq!(warm.discords[0].nnd.to_bits(), batch.discords[0].nnd.to_bits());
+//! ```
+
+mod engine;
+mod monitor;
+
+pub use engine::HstStream;
+pub use monitor::{StreamDiscord, StreamUpdate, StreamingMonitor};

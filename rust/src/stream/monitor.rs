@@ -1,0 +1,490 @@
+//! The sliding-window streaming monitor (see the [module docs](super)).
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::config::SearchParams;
+use crate::context::SearchContext;
+use crate::discord::{NndProfile, NND_INIT, NO_NEIGHBOR};
+use crate::sax::{SaxIndex, SaxWord, WordBuilder};
+use crate::ts::{window_stats, SeqStats, TimeSeries};
+use crate::util::json::Json;
+
+use super::engine::ENGINE_ID;
+
+/// "no neighbor yet" marker in global stream coordinates.
+const NO_STREAM_NEIGHBOR: u64 = u64::MAX;
+
+/// One discord reported by a refresh, in **global stream coordinates**
+/// (position 0 = the first point ever appended).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamDiscord {
+    /// Global position of the discord sequence's first point.
+    pub position: u64,
+    /// Its exact nearest-neighbor distance within the current window.
+    pub nnd: f64,
+    /// Global position of the nearest neighbor.
+    pub neighbor: u64,
+}
+
+impl StreamDiscord {
+    /// Serialize for the service protocol (`docs/PROTOCOL.md`).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("position", self.position)
+            .set("nnd", self.nnd)
+            .set("neighbor", self.neighbor)
+    }
+}
+
+/// Outcome of one [`StreamingMonitor::refresh`].
+#[derive(Debug, Clone)]
+pub struct StreamUpdate {
+    /// 1-based refresh sequence number.
+    pub refresh: u64,
+    /// Global position of the window's first point.
+    pub window_start: u64,
+    /// Points in the window at refresh time.
+    pub window_len: usize,
+    /// Sequences N in the refreshed search space.
+    pub n_sequences: usize,
+    /// Whether a previous refresh's shifted profile warmed this search.
+    pub warm: bool,
+    /// Distance calls this refresh spent (exact accounting).
+    pub distance_calls: u64,
+    /// Distance calls spent on preparation (0 on warm refreshes).
+    pub prep_calls: u64,
+    /// The window's discords, best first, in global coordinates.
+    pub discords: Vec<StreamDiscord>,
+}
+
+impl StreamUpdate {
+    /// Cost per sequence of this refresh (the paper's cps, per refresh).
+    pub fn cps(&self) -> f64 {
+        crate::metrics::cps(
+            self.distance_calls,
+            self.n_sequences,
+            self.discords.len().max(1),
+        )
+    }
+
+    /// Serialize for the service protocol (`docs/PROTOCOL.md`).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("refresh", self.refresh)
+            .set("window_start", self.window_start)
+            .set("window_len", self.window_len)
+            .set("n_sequences", self.n_sequences)
+            .set("warm", self.warm)
+            .set("distance_calls", self.distance_calls)
+            .set("prep_calls", self.prep_calls)
+            .set("cps", self.cps())
+            .set(
+                "discords",
+                self.discords.iter().map(|d| d.to_json()).collect::<Vec<_>>(),
+            )
+    }
+}
+
+/// Incremental sliding-window discord monitor (see the
+/// [module docs](super) for the design and the exactness argument).
+///
+/// Per appended point the monitor does O(s) work: the one new complete
+/// sequence's rolling stats ([`window_stats`]) and SAX word
+/// ([`WordBuilder`]), plus O(1) deque bookkeeping — never a full-window
+/// recompute. A [`refresh`](Self::refresh) materializes the prepared
+/// state into a [`SearchContext`] (stats, index, and the shifted warm
+/// profile) and runs a warm serial HST search reporting as `hst-stream`.
+pub struct StreamingMonitor {
+    name: String,
+    params: SearchParams,
+    capacity: usize,
+    refresh_every: usize,
+    wb: WordBuilder,
+    /// Window points; front = oldest.
+    buf: VecDeque<f64>,
+    /// Global position of `buf[0]`.
+    start: u64,
+    /// Per-sequence rolling stats, aligned with sequence starts.
+    stats_mean: VecDeque<f64>,
+    stats_std: VecDeque<f64>,
+    /// Per-sequence SAX words, same alignment.
+    words: VecDeque<SaxWord>,
+    /// Carried nnd profile; `ngh` holds **global** neighbor positions so
+    /// window shifts need no renumbering until refresh time.
+    nnd: VecDeque<f64>,
+    ngh: VecDeque<u64>,
+    /// Scratch for the newest sequence's points.
+    scratch: Vec<f64>,
+    warm: bool,
+    pending: usize,
+    refreshes: u64,
+    total_calls: u64,
+}
+
+impl StreamingMonitor {
+    /// A monitor holding at most `capacity` points. `capacity` must be at
+    /// least `2·s` so the window always admits non-self-match pairs
+    /// (4·s or more is a sensible floor in practice).
+    pub fn new(params: SearchParams, capacity: usize) -> Result<StreamingMonitor> {
+        let s = params.sax.s;
+        ensure!(
+            capacity >= 2 * s,
+            "window capacity {capacity} too small for s={s} (need >= 2·s)"
+        );
+        let wb = WordBuilder::new(&params.sax);
+        Ok(StreamingMonitor {
+            name: "stream".to_string(),
+            params,
+            capacity,
+            refresh_every: 0,
+            wb,
+            buf: VecDeque::with_capacity(capacity + 1),
+            start: 0,
+            stats_mean: VecDeque::new(),
+            stats_std: VecDeque::new(),
+            words: VecDeque::new(),
+            nnd: VecDeque::new(),
+            ngh: VecDeque::new(),
+            scratch: Vec::with_capacity(s),
+            warm: false,
+            pending: 0,
+            refreshes: 0,
+            total_calls: 0,
+        })
+    }
+
+    /// Name used for the window series (shows up in reports).
+    pub fn with_name(mut self, name: impl Into<String>) -> StreamingMonitor {
+        self.name = name.into();
+        self
+    }
+
+    /// Auto-refresh every `points` appended points (`0`, the default,
+    /// means refreshes are explicit via [`refresh`](Self::refresh)).
+    pub fn with_refresh_every(mut self, points: usize) -> StreamingMonitor {
+        self.refresh_every = points;
+        self
+    }
+
+    /// The auto-refresh cadence in points (`0` = manual).
+    pub fn refresh_cadence(&self) -> usize {
+        self.refresh_every
+    }
+
+    /// Points currently in the window.
+    pub fn window_len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Global position of the window's first point.
+    pub fn window_start(&self) -> u64 {
+        self.start
+    }
+
+    /// Total points appended so far (the global clock).
+    pub fn consumed(&self) -> u64 {
+        self.start + self.buf.len() as u64
+    }
+
+    /// Complete sequences in the current window.
+    pub fn num_sequences(&self) -> usize {
+        let s = self.params.sax.s;
+        if self.buf.len() >= s {
+            self.buf.len() - s + 1
+        } else {
+            0
+        }
+    }
+
+    /// Points appended since the last refresh (0 right after a refresh —
+    /// callers flushing a final refresh should skip it when nothing new
+    /// arrived, or they re-search an unchanged window).
+    pub fn pending_points(&self) -> usize {
+        self.pending
+    }
+
+    /// Refreshes performed so far.
+    pub fn refreshes(&self) -> u64 {
+        self.refreshes
+    }
+
+    /// Cumulative distance calls across all refreshes (exact accounting).
+    pub fn distance_calls(&self) -> u64 {
+        self.total_calls
+    }
+
+    /// Whether the next refresh starts from a carried (shifted) profile.
+    pub fn is_warm(&self) -> bool {
+        self.warm
+    }
+
+    /// A copy of the current window as a [`TimeSeries`] (what a cold
+    /// batch search over this window would run on).
+    pub fn window_series(&self) -> TimeSeries {
+        TimeSeries::new(
+            format!(
+                "{}[{}..{})",
+                self.name,
+                self.start,
+                self.start + self.buf.len() as u64
+            ),
+            self.buf.iter().copied().collect(),
+        )
+    }
+
+    /// Append one point. Returns the update when this point completed an
+    /// auto-refresh batch (see [`with_refresh_every`](Self::with_refresh_every)).
+    pub fn append(&mut self, x: f64) -> Result<Option<StreamUpdate>> {
+        self.ingest(x);
+        self.pending += 1;
+        if self.refresh_every > 0
+            && self.pending >= self.refresh_every
+            && self.num_sequences() >= 2
+        {
+            return Ok(Some(self.refresh()?));
+        }
+        Ok(None)
+    }
+
+    /// Append a batch of points; returns the updates of any auto-refreshes
+    /// they triggered, in order.
+    pub fn extend(&mut self, points: &[f64]) -> Result<Vec<StreamUpdate>> {
+        let mut out = Vec::new();
+        for &x in points {
+            if let Some(u) = self.append(x)? {
+                out.push(u);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Per-point maintenance: O(s) for the one new sequence's stats and
+    /// word, O(1) eviction at the trailing edge.
+    fn ingest(&mut self, x: f64) {
+        let s = self.params.sax.s;
+        self.buf.push_back(x);
+        if self.buf.len() >= s {
+            // exactly one new complete sequence ends at the new point
+            self.scratch.clear();
+            self.scratch.extend(self.buf.range(self.buf.len() - s..));
+            let (m, sd) = window_stats(&self.scratch);
+            let w = self.wb.word(&self.scratch, m, sd);
+            self.stats_mean.push_back(m);
+            self.stats_std.push_back(sd);
+            self.words.push_back(w);
+            self.nnd.push_back(NND_INIT);
+            self.ngh.push_back(NO_STREAM_NEIGHBOR);
+        }
+        if self.buf.len() > self.capacity {
+            self.buf.pop_front();
+            self.start += 1;
+            self.stats_mean.pop_front();
+            self.stats_std.pop_front();
+            self.words.pop_front();
+            self.nnd.pop_front();
+            self.ngh.pop_front();
+        }
+        debug_assert_eq!(self.stats_mean.len(), self.num_sequences());
+    }
+
+    /// Search the current window, reusing everything the stream has
+    /// already paid for: seeded stats/index and the shifted warm profile.
+    /// The discord set is bit-identical to a cold serial `hst` run over
+    /// [`window_series`](Self::window_series) (see the module docs).
+    pub fn refresh(&mut self) -> Result<StreamUpdate> {
+        let s = self.params.sax.s;
+        let n = self.num_sequences();
+        ensure!(
+            n >= 2,
+            "window holds {n} complete sequences; need >= 2 (s = {s}, \
+             window_len = {})",
+            self.buf.len()
+        );
+        let kind = self.params.distance_kind();
+        let allow = self.params.allow_self_match;
+
+        let ctx = SearchContext::builder_owned(self.window_series()).build();
+        ctx.seed_stats(Arc::new(SeqStats {
+            s,
+            mean: self.stats_mean.iter().copied().collect(),
+            std: self.stats_std.iter().copied().collect(),
+        }));
+        ctx.seed_index(
+            self.params.sax,
+            Arc::new(SaxIndex::from_words(self.words.iter().cloned().collect())),
+        );
+        let was_warm = self.warm;
+        if was_warm {
+            // Shift the carried profile into window coordinates. Entries
+            // whose neighbor was evicted are reset to the ∞ sentinel: the
+            // recorded distance no longer bounds the nnd over the smaller
+            // neighbor set. Every surviving entry is an exactly-evaluated
+            // pair distance between two still-admissible sequences, so it
+            // remains a valid upper bound.
+            let mut p = NndProfile::new(n);
+            for i in 0..n {
+                let g = self.ngh[i];
+                if g != NO_STREAM_NEIGHBOR && g >= self.start {
+                    p.nnd[i] = self.nnd[i];
+                    p.ngh[i] = (g - self.start) as usize;
+                }
+            }
+            ctx.store_warm_profile(s, kind, allow, p);
+        }
+
+        let report = crate::algo::hst::HstSearch::default()
+            .run_serial(&ctx, &self.params, ENGINE_ID, true)?;
+
+        // Carry the refined profile forward in global coordinates.
+        let refined = ctx
+            .warm_profile(s, kind, allow)
+            .expect("the search always stores its profile");
+        for i in 0..n {
+            self.nnd[i] = refined.nnd[i];
+            self.ngh[i] = match refined.ngh[i] {
+                NO_NEIGHBOR => NO_STREAM_NEIGHBOR,
+                g => self.start + g as u64,
+            };
+        }
+        self.warm = true;
+        self.pending = 0;
+        self.refreshes += 1;
+        self.total_calls += report.distance_calls;
+
+        Ok(StreamUpdate {
+            refresh: self.refreshes,
+            window_start: self.start,
+            window_len: self.buf.len(),
+            n_sequences: n,
+            warm: was_warm,
+            distance_calls: report.distance_calls,
+            prep_calls: report.prep_calls,
+            discords: report
+                .discords
+                .iter()
+                .map(|d| StreamDiscord {
+                    position: self.start + d.position as u64,
+                    nnd: d.nnd,
+                    neighbor: self.start + d.neighbor as u64,
+                })
+                .collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ts::generators;
+
+    fn monitor(s: usize, capacity: usize) -> StreamingMonitor {
+        StreamingMonitor::new(SearchParams::new(s, 4, 4).with_seed(3), capacity)
+            .unwrap()
+    }
+
+    #[test]
+    fn capacity_is_respected_and_clock_advances() {
+        let mut m = monitor(32, 200);
+        m.extend(&generators::sine_with_noise(550, 0.3, 11)).unwrap();
+        assert_eq!(m.window_len(), 200);
+        assert_eq!(m.window_start(), 350);
+        assert_eq!(m.consumed(), 550);
+        assert_eq!(m.num_sequences(), 200 - 32 + 1);
+        assert_eq!(m.window_series().n_total(), 200);
+    }
+
+    #[test]
+    fn incremental_state_matches_cold_preparation() {
+        // stats and words maintained point-by-point must equal a cold
+        // compute over the window, bit for bit
+        let mut m = monitor(32, 300);
+        m.extend(&generators::ecg_like(700, 60, 1, 12)).unwrap();
+        let ts = m.window_series();
+        let cold = SeqStats::compute(&ts, 32);
+        assert_eq!(m.stats_mean.len(), cold.len());
+        for k in 0..cold.len() {
+            assert_eq!(m.stats_mean[k].to_bits(), cold.mean[k].to_bits(), "k={k}");
+            assert_eq!(m.stats_std[k].to_bits(), cold.std[k].to_bits(), "k={k}");
+        }
+        let idx = SaxIndex::build(&ts, &cold, &m.params.sax);
+        let inc: Vec<SaxWord> = m.words.iter().cloned().collect();
+        assert_eq!(inc, idx.words);
+    }
+
+    #[test]
+    fn refresh_requires_two_sequences() {
+        let mut m = monitor(64, 200);
+        m.extend(&generators::sine_with_noise(64, 0.1, 13)).unwrap();
+        assert_eq!(m.num_sequences(), 1);
+        assert!(m.refresh().is_err());
+        m.extend(&generators::sine_with_noise(100, 0.1, 14)).unwrap();
+        assert!(m.refresh().is_ok());
+    }
+
+    #[test]
+    fn auto_refresh_cadence_fires() {
+        let mut m = monitor(32, 400).with_refresh_every(150);
+        let updates = m
+            .extend(&generators::sine_with_noise(460, 0.3, 15))
+            .unwrap();
+        // 150-point batches: the first fires at 150 points (n >= 2 holds
+        // from 33 points on), then 300, then 450
+        assert_eq!(updates.len(), 3);
+        assert_eq!(updates[0].refresh, 1);
+        assert!(!updates[0].warm);
+        assert!(updates[1].warm && updates[2].warm);
+        assert_eq!(m.refreshes(), 3);
+        assert!(m.distance_calls() > 0);
+    }
+
+    #[test]
+    fn warm_refresh_is_cheaper_and_prep_free() {
+        let mut m = monitor(64, 1_200);
+        m.extend(&generators::ecg_like(1_200, 90, 1, 16)).unwrap();
+        let cold = m.refresh().unwrap();
+        assert!(!cold.warm);
+        assert!(cold.prep_calls > 0);
+        m.extend(&generators::ecg_like(120, 90, 0, 17)).unwrap();
+        let warm = m.refresh().unwrap();
+        assert!(warm.warm);
+        assert_eq!(warm.prep_calls, 0, "shifted profile must serve prep");
+        assert!(
+            warm.distance_calls < cold.distance_calls,
+            "warm {} !< cold {}",
+            warm.distance_calls,
+            cold.distance_calls
+        );
+    }
+
+    #[test]
+    fn discords_are_reported_in_global_coordinates() {
+        let s = 48;
+        let mut m = monitor(s, 800);
+        let mut pts = generators::sine_with_noise(2_000, 0.05, 18);
+        let mut rng = crate::util::rng::Rng64::new(5);
+        generators::inject(&mut pts, 1_600, s, generators::Anomaly::Bump, &mut rng);
+        m.extend(&pts).unwrap();
+        let u = m.refresh().unwrap();
+        assert_eq!(u.window_start, 1_200);
+        let top = &u.discords[0];
+        assert!(top.position >= u.window_start);
+        assert!(top.position < u.window_start + u.window_len as u64);
+        assert!(
+            top.position.abs_diff(1_600) <= 2 * s as u64,
+            "discord at {} should sit near the injected bump at 1600",
+            top.position
+        );
+        assert!(top.position.abs_diff(top.neighbor) >= s as u64);
+        let j = u.to_json().to_string();
+        assert!(j.contains("window_start"), "{j}");
+    }
+
+    #[test]
+    fn rejects_window_smaller_than_two_sequences() {
+        assert!(StreamingMonitor::new(SearchParams::new(64, 4, 4), 100).is_err());
+        assert!(StreamingMonitor::new(SearchParams::new(64, 4, 4), 128).is_ok());
+    }
+}

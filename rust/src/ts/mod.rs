@@ -9,4 +9,4 @@ pub mod series;
 pub mod stats;
 
 pub use series::TimeSeries;
-pub use stats::SeqStats;
+pub use stats::{window_stats, SeqStats};

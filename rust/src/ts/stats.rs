@@ -3,15 +3,34 @@
 //! The paper's memory-saving trick (Sec. 2.1, Eq. 2/3): instead of storing
 //! z-normalized copies of every sequence, store each sequence's mean μ_k and
 //! standard deviation σ_k and fold the normalization into the distance
-//! function. Both are computed for all N sequence starts in O(N) from
-//! prefix sums of p and p².
+//! function.
 //!
-//! Numerical note: naive prefix-sum variance cancels catastrophically for
-//! long series with large offsets, so sums are accumulated over points
-//! re-centered by the global mean first (a standard stabilization that keeps
-//! the O(N) cost).
+//! Each (μ_k, σ_k) pair is computed by [`window_stats`], a **pure function
+//! of that sequence's points alone** (direct two-pass summation — sum, then
+//! squared residuals about the mean). Purity is a load-bearing invariant,
+//! not a style choice: the [`stream`](crate::stream) monitor extends its
+//! stats incrementally (one new sequence per appended point) and relies on
+//! those entries being bit-identical to what a cold [`SeqStats::compute`]
+//! over the current window would produce — which in turn is what makes a
+//! warm streaming search bit-identical to a cold batch search. A prefix-sum
+//! formulation would be O(N) instead of O(N·s), but its per-window values
+//! depend on the accumulation history of the whole series, breaking that
+//! bit-equality (and it cancels catastrophically for large offsets anyway;
+//! the two-pass form is the numerically stable one).
 
 use super::series::TimeSeries;
+
+/// Mean and standard deviation of one window, as a pure function of the
+/// window's points: `m = Σp/s` then `σ = sqrt(Σ(p−m)²/s)`, floored at
+/// [`SIGMA_FLOOR`]. The shared kernel of the batch [`SeqStats::compute`]
+/// and the streaming monitor's incremental per-point updates — both paths
+/// produce bit-identical values for the same window by construction.
+pub fn window_stats(w: &[f64]) -> (f64, f64) {
+    debug_assert!(!w.is_empty());
+    let m = w.iter().sum::<f64>() / w.len() as f64;
+    let var = w.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / w.len() as f64;
+    (m, var.sqrt().max(SIGMA_FLOOR))
+}
 
 /// Per-sequence-start rolling mean and standard deviation for a fixed
 /// sequence length `s`.
@@ -32,39 +51,20 @@ pub const SIGMA_FLOOR: f64 = 1e-12;
 
 impl SeqStats {
     /// Compute rolling stats for every complete window of length `s`.
+    ///
+    /// Each entry is [`window_stats`] of its window, so any sub-slice of
+    /// the series yields bit-identical entries for the windows it covers —
+    /// the invariant the streaming monitor's incremental updates rest on.
     pub fn compute(ts: &TimeSeries, s: usize) -> SeqStats {
         let n = ts.num_sequences(s);
         assert!(s >= 1, "sequence length must be >= 1");
         assert!(n > 0, "series shorter than sequence length");
-        let pts = &ts.points;
-
-        // Re-center by the global mean for numerical stability.
-        let g_mean = pts.iter().sum::<f64>() / pts.len() as f64;
-
-        let mut prefix = Vec::with_capacity(pts.len() + 1);
-        let mut prefix_sq = Vec::with_capacity(pts.len() + 1);
-        prefix.push(0.0);
-        prefix_sq.push(0.0);
-        let mut acc = 0.0;
-        let mut acc_sq = 0.0;
-        for &p in pts {
-            let c = p - g_mean;
-            acc += c;
-            acc_sq += c * c;
-            prefix.push(acc);
-            prefix_sq.push(acc_sq);
-        }
-
-        let inv_s = 1.0 / s as f64;
         let mut mean = Vec::with_capacity(n);
         let mut std = Vec::with_capacity(n);
         for k in 0..n {
-            let sum = prefix[k + s] - prefix[k];
-            let sum_sq = prefix_sq[k + s] - prefix_sq[k];
-            let m_c = sum * inv_s; // mean of re-centered window
-            let var = (sum_sq * inv_s - m_c * m_c).max(0.0);
-            mean.push(m_c + g_mean);
-            std.push(var.sqrt().max(SIGMA_FLOOR));
+            let (m, sd) = window_stats(ts.seq(k, s));
+            mean.push(m);
+            std.push(sd);
         }
         SeqStats { s, mean, std }
     }
@@ -150,6 +150,28 @@ mod tests {
         assert!(st.std.iter().all(|&sd| sd == SIGMA_FLOOR));
         let z = st.znorm(&ts, 0);
         assert!(z.iter().all(|&v| v == 0.0), "constant -> zero vector");
+    }
+
+    #[test]
+    fn per_window_stats_are_pure_functions_of_the_window() {
+        // the streaming invariant: a window's (μ, σ) must not depend on
+        // the series around it, so a sliding-window monitor can extend its
+        // stats incrementally and still match a cold recompute bit for bit
+        let mut rng = crate::util::rng::Rng64::new(9);
+        let pts: Vec<f64> = (0..400).map(|_| rng.normal() * 2.0 + 1.0e6).collect();
+        let full = SeqStats::compute(&TimeSeries::new("f", pts.clone()), 32);
+        for off in [0usize, 7, 123] {
+            let slice = TimeSeries::new("w", pts[off..off + 200].to_vec());
+            let sub = SeqStats::compute(&slice, 32);
+            for k in 0..sub.len() {
+                assert_eq!(full.mean[off + k].to_bits(), sub.mean[k].to_bits());
+                assert_eq!(full.std[off + k].to_bits(), sub.std[k].to_bits());
+            }
+        }
+        // window_stats is the shared kernel
+        let (m, sd) = window_stats(&pts[5..37]);
+        assert_eq!(m.to_bits(), full.mean[5].to_bits());
+        assert_eq!(sd.to_bits(), full.std[5].to_bits());
     }
 
     #[test]

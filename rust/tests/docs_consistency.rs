@@ -1,0 +1,119 @@
+//! Documentation-consistency gates: the README engines table and the
+//! service protocol reference are asserted against the code's own
+//! registries, so neither can silently go stale (the README previously
+//! drifted to a wrong engine count).
+
+use std::path::Path;
+
+use hstime::algo::{self, ALL_ENGINES};
+use hstime::service::server::COMMANDS;
+
+fn repo_file(rel: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(rel);
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// The backticked first cell of each row in the README "## Engines" table.
+fn readme_engine_rows() -> Vec<String> {
+    let readme = repo_file("README.md");
+    let section = readme
+        .split("## Engines")
+        .nth(1)
+        .expect("README must keep its `## Engines` section");
+    let section = section.split("\n## ").next().unwrap();
+    section
+        .lines()
+        .filter(|l| l.starts_with("| `"))
+        .map(|l| {
+            l.trim_start_matches("| `")
+                .split('`')
+                .next()
+                .unwrap()
+                .to_string()
+        })
+        .collect()
+}
+
+#[test]
+fn readme_engines_table_matches_the_registry() {
+    let rows = readme_engine_rows();
+    assert_eq!(
+        rows.len(),
+        ALL_ENGINES.len(),
+        "README engines table has {} rows but the registry has {} engines \
+         ({rows:?} vs {ALL_ENGINES:?})",
+        rows.len(),
+        ALL_ENGINES.len()
+    );
+    for id in ALL_ENGINES {
+        assert!(
+            rows.iter().any(|r| r == id),
+            "engine `{id}` is registered but missing from the README table"
+        );
+        let engine = algo::by_name(id).expect("ALL_ENGINES entries resolve");
+        assert_eq!(engine.name(), id, "canonical id must round-trip");
+    }
+    for row in &rows {
+        assert!(
+            algo::by_name(row).is_some(),
+            "README table row `{row}` does not resolve via algo::by_name"
+        );
+    }
+}
+
+#[test]
+fn readme_has_no_hardcoded_engine_count() {
+    // the stale-count bug class: prose like "ten engines" rots the moment
+    // an engine lands; the table + this test are the single source now
+    let readme = repo_file("README.md").to_lowercase();
+    for word in [
+        "eight engines",
+        "nine engines",
+        "ten engines",
+        "eleven engines",
+        "twelve engines",
+    ] {
+        assert!(
+            !readme.contains(word),
+            "README hardcodes an engine count ({word:?}); keep counts \
+             derived from the table"
+        );
+    }
+}
+
+#[test]
+fn protocol_doc_covers_every_server_command() {
+    let doc = repo_file("docs/PROTOCOL.md");
+    for cmd in COMMANDS {
+        assert!(
+            doc.contains(&format!("### `{cmd}`")),
+            "docs/PROTOCOL.md is missing a `### \\`{cmd}\\`` section for a \
+             command the server dispatches"
+        );
+    }
+    // and the doc lists no command the server does not dispatch
+    for line in doc.lines().filter(|l| l.starts_with("### `")) {
+        let cmd = line.trim_start_matches("### `").split('`').next().unwrap();
+        assert!(
+            COMMANDS.contains(&cmd),
+            "docs/PROTOCOL.md documents `{cmd}`, which the server does not \
+             dispatch"
+        );
+    }
+}
+
+#[test]
+fn architecture_doc_exists_and_is_linked() {
+    let arch = repo_file("docs/ARCHITECTURE.md");
+    assert!(arch.contains("stream"), "layer map must include the stream layer");
+    let readme = repo_file("README.md");
+    assert!(
+        readme.contains("docs/ARCHITECTURE.md"),
+        "README must link docs/ARCHITECTURE.md"
+    );
+    assert!(
+        readme.contains("docs/PROTOCOL.md"),
+        "README must link docs/PROTOCOL.md"
+    );
+}

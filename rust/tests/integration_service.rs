@@ -282,6 +282,127 @@ fn stats_expose_the_pool_shape_over_tcp() {
     stop_server(addr, handle);
 }
 
+fn stream_open_req(name: &str, s: u64, window: u64, refresh_every: u64) -> Json {
+    Json::obj()
+        .set("cmd", "stream_open")
+        .set("stream", name)
+        .set("window", window)
+        .set("refresh_every", refresh_every)
+        .set("params", Json::obj().set("s", s))
+}
+
+fn append_req(name: &str, points: &[f64]) -> Json {
+    Json::obj()
+        .set("cmd", "append")
+        .set("stream", name)
+        .set(
+            "points",
+            points.iter().map(|&p| Json::Num(p)).collect::<Vec<_>>(),
+        )
+}
+
+#[test]
+fn stream_lifecycle_over_tcp() {
+    let (addr, handle) = start_server(1, 8);
+    let mut client = Client::connect(addr).unwrap();
+
+    let r = client.call(&stream_open_req("sensor", 32, 300, 0)).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    // double-open is rejected
+    let r = client.call(&stream_open_req("sensor", 32, 300, 0)).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+
+    // stats expose the open stream
+    let st = client.stats().unwrap();
+    assert_eq!(st.get("streams").unwrap().as_u64(), Some(1));
+
+    // cadence 0: each append request refreshes once at its end
+    let pts = hstime::ts::generators::sine_with_noise(400, 0.3, 51);
+    let r = client.call(&append_req("sensor", &pts)).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    assert_eq!(r.get("appended").unwrap().as_u64(), Some(400));
+    let updates = r.get("updates").unwrap().as_arr().unwrap();
+    assert_eq!(updates.len(), 1);
+    let u = &updates[0];
+    assert_eq!(u.get("refresh").unwrap().as_u64(), Some(1));
+    assert_eq!(u.get("warm").unwrap().as_bool(), Some(false));
+    assert!(!u.get("discords").unwrap().as_arr().unwrap().is_empty());
+
+    // the second append slides the window: warm refresh, global positions
+    let more = hstime::ts::generators::sine_with_noise(100, 0.3, 52);
+    let r = client.call(&append_req("sensor", &more)).unwrap();
+    let u = &r.get("updates").unwrap().as_arr().unwrap()[0];
+    assert_eq!(u.get("warm").unwrap().as_bool(), Some(true));
+    assert_eq!(u.get("prep_calls").unwrap().as_u64(), Some(0));
+    assert_eq!(u.get("window_start").unwrap().as_u64(), Some(200));
+    let top = &u.get("discords").unwrap().as_arr().unwrap()[0];
+    assert!(top.get("position").unwrap().as_u64().unwrap() >= 200);
+
+    // subscribe: an already-published update returns immediately …
+    let r = client
+        .call(
+            &Json::obj()
+                .set("cmd", "subscribe")
+                .set("stream", "sensor")
+                .set("after", 0u64),
+        )
+        .unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(r.get("seq").unwrap().as_u64(), Some(2));
+    assert!(r.get("update").unwrap().get("refresh").is_some());
+    // … and waiting past the head times out with the live flag
+    let r = client
+        .call(
+            &Json::obj()
+                .set("cmd", "subscribe")
+                .set("stream", "sensor")
+                .set("after", 2u64)
+                .set("timeout_ms", 30u64),
+        )
+        .unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(r.get("timed_out").unwrap().as_bool(), Some(true));
+
+    // close, then the stream is gone
+    let r = client
+        .call(&Json::obj().set("cmd", "stream_close").set("stream", "sensor"))
+        .unwrap();
+    assert_eq!(r.get("closed").unwrap().as_bool(), Some(true));
+    let r = client.call(&append_req("sensor", &more)).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    assert_eq!(client.stats().unwrap().get("streams").unwrap().as_u64(), Some(0));
+
+    stop_server(addr, handle);
+}
+
+#[test]
+fn stream_requests_validate_their_fields() {
+    let (addr, handle) = start_server(1, 8);
+    let mut client = Client::connect(addr).unwrap();
+    // unknown field is rejected by name (`windw` typo for `window`)
+    let r = client
+        .call(&stream_open_req("x", 32, 300, 0).set("windw", 5u64))
+        .unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("`windw`"));
+    // a window too small for s fails at open, naming the constraint
+    let r = client.call(&stream_open_req("x", 64, 100, 0)).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("window"));
+    // append to a stream that was never opened
+    let r = client.call(&append_req("ghost", &[1.0, 2.0])).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    // non-numeric points are rejected with the index named
+    let bad = Json::obj()
+        .set("cmd", "append")
+        .set("stream", "x")
+        .set("points", vec![Json::Num(1.0), Json::Str("nope".into())]);
+    let r = client.call(&bad).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("points[1]"));
+    stop_server(addr, handle);
+}
+
 #[test]
 fn unknown_and_misspelled_fields_fail_loudly() {
     let (addr, handle) = start_server(1, 8);
@@ -302,5 +423,16 @@ fn unknown_and_misspelled_fields_fail_loudly() {
     let reply = client.wait(job).unwrap();
     assert_eq!(reply.get("state").unwrap().as_str(), Some("failed"));
     assert!(reply.get("error").unwrap().as_str().unwrap().contains("noize"));
+    // every command is strict: a typo'd wait flag must error, not block
+    let reply = client
+        .call(
+            &Json::obj()
+                .set("cmd", "wait")
+                .set("job", job)
+                .set("timout_ms", 250u64),
+        )
+        .unwrap();
+    assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false));
+    assert!(reply.get("error").unwrap().as_str().unwrap().contains("`timout_ms`"));
     stop_server(addr, handle);
 }

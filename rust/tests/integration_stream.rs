@@ -1,0 +1,183 @@
+//! Streaming subsystem integration: the exactness property (warm
+//! incremental refreshes are bit-identical to cold batch searches over
+//! the same window), the strict warm-refresh call reduction, and the
+//! `hst-stream` engine registration.
+
+use hstime::algo::{self, Algorithm};
+use hstime::config::SearchParams;
+use hstime::prelude::*;
+use hstime::prop_assert;
+use hstime::util::proptest::{check, Gen};
+
+/// Random series from a random generator family (mirrors
+/// `property_tests.rs`).
+fn random_series(g: &mut Gen, n: usize) -> Vec<f64> {
+    let fam = g.rng.below(5);
+    let seed = g.rng.next_u64();
+    let period = g.size(40, 120);
+    match fam {
+        0 => generators::ecg_like(n, period, 1, seed),
+        1 => generators::respiration_like(n, period, 1, seed),
+        2 => generators::valve_like(n, period, 1, seed),
+        3 => generators::sine_with_noise(n, g.f64_in(0.001, 1.0), seed),
+        _ => generators::random_walk(n, 0.5, seed),
+    }
+}
+
+/// The PR's acceptance property: for random series and random append
+/// schedules, every `hst-stream` refresh returns discords bit-identical
+/// (positions and distances) to a cold serial `hst` run over the same
+/// window — and warm refreshes spend strictly fewer distance calls than
+/// the cold run they replace.
+#[test]
+fn prop_stream_refresh_matches_cold_hst_bitwise() {
+    check("stream==cold-hst", 53, 8, |g| {
+        let p = *g.choose(&[2usize, 4, 8]);
+        let s = p * g.size(8, 16);
+        let window = s * g.size(4, 7);
+        let batches = g.size(2, 4);
+        let params = SearchParams {
+            sax: hstime::config::SaxParams { s, p, alphabet: g.size(3, 5) },
+            k: g.size(1, 2),
+            seed: g.rng.next_u64(),
+            znormalize: true,
+            allow_self_match: false,
+            threads: 0,
+        };
+        // enough points to fill the window plus every batch
+        let deltas: Vec<usize> = (0..batches).map(|_| g.size(1, s)).collect();
+        let total = window + deltas.iter().sum::<usize>();
+        let pts = random_series(g, total);
+
+        let mut mon = StreamingMonitor::new(params.clone(), window)
+            .map_err(|e| format!("monitor: {e:#}"))?;
+        mon.extend(&pts[..window]).map_err(|e| format!("{e:#}"))?;
+
+        let mut fed = window;
+        for (b, &delta) in deltas.iter().enumerate() {
+            // first iteration refreshes the freshly filled window (cold
+            // monitor); later ones slide first, then refresh warm
+            if b > 0 || delta == 0 {
+                mon.extend(&pts[fed..fed + delta])
+                    .map_err(|e| format!("{e:#}"))?;
+                fed += delta;
+            }
+            let update = mon.refresh().map_err(|e| format!("{e:#}"))?;
+            let cold = algo::hst::HstSearch::default()
+                .run(&mon.window_series(), &params)
+                .map_err(|e| format!("{e:#}"))?;
+
+            prop_assert!(
+                update.discords.len() == cold.discords.len(),
+                "batch {b}: {} vs {} discords (s={s}, window={window})",
+                update.discords.len(),
+                cold.discords.len()
+            );
+            for (a, c) in update.discords.iter().zip(&cold.discords) {
+                prop_assert!(
+                    a.position == update.window_start + c.position as u64,
+                    "batch {b}: position {} vs global {} (s={s})",
+                    a.position,
+                    update.window_start + c.position as u64
+                );
+                prop_assert!(
+                    a.nnd.to_bits() == c.nnd.to_bits(),
+                    "batch {b}: nnd {} vs {} not bit-identical (s={s})",
+                    a.nnd,
+                    c.nnd
+                );
+            }
+            if update.warm {
+                prop_assert!(
+                    update.prep_calls == 0,
+                    "warm refresh paid {} prep calls",
+                    update.prep_calls
+                );
+                prop_assert!(
+                    update.distance_calls < cold.distance_calls,
+                    "batch {b}: warm refresh cost {} >= cold {} \
+                     (s={s}, window={window}, delta={delta})",
+                    update.distance_calls,
+                    cold.distance_calls
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hst_stream_is_registered_and_exact() {
+    let engine = algo::by_name("hst-stream").expect("hst-stream registered");
+    assert_eq!(engine.name(), "hst-stream");
+    let ts = generators::ecg_like(1_200, 80, 1, 41).into_series("e");
+    let params = SearchParams::new(64, 4, 4).with_discords(2);
+    let stream = engine.run(&ts, &params).unwrap();
+    let brute = algo::brute::BruteForce.run(&ts, &params).unwrap();
+    assert_eq!(stream.discords.len(), brute.discords.len());
+    for (a, b) in stream.discords.iter().zip(&brute.discords) {
+        assert!(
+            (a.nnd - b.nnd).abs() < 5e-8,
+            "{} vs {} (pos {} vs {})",
+            a.nnd,
+            b.nnd,
+            a.position,
+            b.position
+        );
+    }
+}
+
+#[test]
+fn long_run_keeps_tracking_injected_anomalies() {
+    // a moving anomaly landscape: each injected bump should surface as
+    // the top discord once its window arrives, with global positions
+    let s = 48;
+    let window = 900;
+    let mut pts = generators::sine_with_noise(3_600, 0.05, 42);
+    let mut rng = Rng64::new(9);
+    let bumps = [1_200usize, 2_400, 3_300];
+    for &b in &bumps {
+        generators::inject(&mut pts, b, s, generators::Anomaly::Bump, &mut rng);
+    }
+    let mut mon = StreamingMonitor::new(SearchParams::new(s, 4, 4), window)
+        .unwrap()
+        .with_refresh_every(300);
+    let updates = mon.extend(&pts).unwrap();
+    assert!(updates.len() >= 10, "{} updates", updates.len());
+    for &b in &bumps {
+        let hit = updates.iter().any(|u| {
+            u.discords
+                .first()
+                .is_some_and(|d| d.position.abs_diff(b as u64) <= 2 * s as u64)
+        });
+        assert!(hit, "no refresh surfaced the bump at {b}");
+    }
+    // cumulative accounting matches the per-update reports
+    let sum: u64 = updates.iter().map(|u| u.distance_calls).sum();
+    assert_eq!(sum, mon.distance_calls());
+}
+
+#[test]
+fn stream_update_json_roundtrips() {
+    let mut mon =
+        StreamingMonitor::new(SearchParams::new(32, 4, 4), 300).unwrap();
+    mon.extend(&generators::sine_with_noise(400, 0.3, 43)).unwrap();
+    let u = mon.refresh().unwrap();
+    let parsed =
+        hstime::util::json::Json::parse(&u.to_json().to_string()).unwrap();
+    assert_eq!(
+        parsed.get("refresh").and_then(|v| v.as_u64()),
+        Some(u.refresh)
+    );
+    assert_eq!(
+        parsed.get("window_start").and_then(|v| v.as_u64()),
+        Some(u.window_start)
+    );
+    assert_eq!(
+        parsed
+            .get("discords")
+            .and_then(|d| d.as_arr())
+            .map(|d| d.len()),
+        Some(u.discords.len())
+    );
+}
