@@ -40,8 +40,8 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 step "docs with --features pjrt (covers the gated runtime/xla modules)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --features pjrt
 
-step "bench targets compile"
-cargo build --release --benches
+step "all bench targets compile (cargo bench --no-run gates every [[bench]])"
+cargo bench --no-run
 
 echo
 echo "verify: all gates passed"

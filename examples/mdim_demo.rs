@@ -1,0 +1,102 @@
+//! Multivariate discord search walkthrough: a correlated-channel anomaly
+//! that **no single channel finds alone**.
+//!
+//! ```bash
+//! cargo run --release --example mdim_demo
+//! ```
+//!
+//! The synthetic scene (`generators::correlated_channels`): three
+//! channels share a slow random walk and a quasi-periodic carrier; each
+//! channel carries its own *decoy* anomaly (a strong phase wobble at a
+//! channel-specific position), and all three share one *joint* anomaly —
+//! a moderate wobble, weaker than any decoy, at the same time span in
+//! every channel. Searched channel by channel, the decoys win: the joint
+//! anomaly is sub-threshold univariately. Searched with the k-of-d
+//! aggregate (sum of per-channel z-normalized distances), the joint
+//! anomaly wins: its three moderate deviations add, while each decoy
+//! only ever contributes in one channel.
+
+use hstime::algo::Algorithm as _;
+use hstime::mdim::{self, MdimAlgorithm as _, MdimParams};
+use hstime::prelude::*;
+use hstime::ts::generators;
+
+fn main() -> anyhow::Result<()> {
+    let s = 96;
+    let n = 4_200;
+    let ms = generators::correlated_channels(n, 3, s, 19);
+    let (q, alen) = generators::correlated_anomaly_span(n, s);
+    println!(
+        "series {}: {} channels x {} points; joint anomaly injected at \
+         [{q}, {})",
+        ms.name,
+        ms.dims(),
+        ms.n_total(),
+        q + alen
+    );
+
+    // 1. channel-by-channel univariate search: every channel reports its
+    //    own decoy, not the joint anomaly
+    println!("\nunivariate hst per channel (top discord each):");
+    for c in 0..ms.dims() {
+        let rep = hstime::algo::hst::HstSearch::default()
+            .run(ms.channel(c), &SearchParams::new(s, 4, 4))?;
+        let d = &rep.discords[0];
+        let hides = d.position + s <= q || d.position >= q + alen;
+        println!(
+            "  channel {:<4} discord @ {:<7} nnd {:<8.3} ({} calls) {}",
+            ms.channel(c).name,
+            d.position,
+            d.nnd,
+            rep.distance_calls,
+            if hides { "— decoy, joint anomaly invisible" } else { "" }
+        );
+        assert!(
+            hides,
+            "channel {c}: the joint anomaly must stay sub-threshold \
+             univariately"
+        );
+    }
+
+    // 2. the aggregate search finds the joint anomaly — exactly
+    //    (bit-identical to brute-md) and much cheaper
+    let ctx = mdim::MdimContext::builder(&ms).build();
+    let params = MdimParams::new(SearchParams::new(s, 4, 4));
+    let fast = mdim::hst::HstMd::default().run_md(&ctx, &params)?;
+    let exact = mdim::brute::BruteMd.run_md(&ctx, &params)?;
+    let d = &fast.discords[0];
+    println!(
+        "\nhst-md over [{}]: discord @ {} aggregate nnd {:.3}",
+        fast.channels.join(", "),
+        d.position,
+        d.nnd
+    );
+    assert!(
+        d.position + s > q && d.position < q + alen + s,
+        "the aggregate discord must overlap the joint anomaly"
+    );
+    assert_eq!(d.position, exact.discords[0].position);
+    assert_eq!(d.nnd.to_bits(), exact.discords[0].nnd.to_bits());
+    println!(
+        "agrees with brute-md bit for bit; calls {} vs {} \
+         (D-speedup {:.1}, cps/channel {:.2} vs {:.2})",
+        fast.distance_calls,
+        exact.distance_calls,
+        exact.distance_calls as f64 / fast.distance_calls as f64,
+        fast.cps_per_channel(),
+        exact.cps_per_channel()
+    );
+
+    // 3. a channel subset: the anomaly is still joint across any two of
+    //    the three channels
+    let sub = MdimParams::new(SearchParams::new(s, 4, 4))
+        .with_channels(["c0", "c2"]);
+    let two = mdim::hst::HstMd::default().run_md(&ctx, &sub)?;
+    println!(
+        "hst-md over [{}]: discord @ {} aggregate nnd {:.3}",
+        two.channels.join(", "),
+        two.discords[0].position,
+        two.discords[0].nnd
+    );
+    Ok(())
+}

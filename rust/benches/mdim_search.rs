@@ -1,0 +1,107 @@
+//! `cargo bench --bench mdim_search` — multivariate (k-of-d) discord
+//! search: `hst-md` vs the `brute-md` reference across channel counts,
+//! reporting the cps indicator extended to channels
+//! (`calls / (N · k · channels)`).
+//!
+//! Each row runs both engines over the same correlated synthetic series
+//! ([`generators::correlated_channels`]: shared walk, per-channel noise,
+//! per-channel decoys, one joint anomaly) and asserts the discord
+//! positions and aggregate distances agree **bit for bit** — the speedup
+//! must never come at the price of the exactness contract.
+//!
+//! Flags (after `--`): --s N (default 96), --n N (points, default 6000),
+//! --max-d N (channel counts 1..=max-d, default 4), --k N, --threads N
+//! (hst-md worker count, default 1 = serial), --seed N, --json.
+
+use hstime::mdim::{self, MdimAlgorithm as _, MdimParams};
+use hstime::prelude::*;
+use hstime::ts::generators;
+use hstime::util::cli::Args;
+use hstime::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let s = args.get_usize("s", 96);
+    let n = args.get_usize("n", 6_000);
+    let max_d = args.get_usize("max-d", 4);
+    let k = args.get_usize("k", 1);
+    let threads = args.get_usize("threads", 1);
+    let seed = args.get_u64("seed", 7);
+    let json = args.has("json");
+
+    let t0 = std::time::Instant::now();
+    let mut rows: Vec<Json> = Vec::new();
+    if !json {
+        println!(
+            "{:>3}  {:>8}  {:>12}  {:>12}  {:>9}  {:>12}  {:>12}  {:>9}  {:>9}",
+            "d", "N", "hst calls", "brute calls", "D-speedup",
+            "hst cps/ch", "brute cps/ch", "hst ms", "brute ms"
+        );
+    }
+    for d in 1..=max_d {
+        let ms = generators::correlated_channels(n, d, s, seed);
+        let params = MdimParams::new(
+            SearchParams::new(s, 4, 4)
+                .with_discords(k)
+                .with_seed(seed)
+                .with_threads(threads),
+        );
+
+        let ft = std::time::Instant::now();
+        let fast = mdim::hst::HstMd::default().run_multi(&ms, &params)?;
+        let fast_ms = ft.elapsed().as_secs_f64() * 1e3;
+        let bt = std::time::Instant::now();
+        let exact = mdim::brute::BruteMd.run_multi(&ms, &params)?;
+        let exact_ms = bt.elapsed().as_secs_f64() * 1e3;
+
+        // exactness gate, bit for bit
+        assert_eq!(fast.discords.len(), exact.discords.len());
+        for (a, b) in fast.discords.iter().zip(&exact.discords) {
+            assert_eq!(a.position, b.position, "d={d}: position drift");
+            assert_eq!(
+                a.nnd.to_bits(),
+                b.nnd.to_bits(),
+                "d={d}: aggregate nnd drift"
+            );
+        }
+        assert!(
+            fast.distance_calls < exact.distance_calls,
+            "d={d}: hst-md must spend strictly fewer calls"
+        );
+
+        let d_speedup =
+            exact.distance_calls as f64 / fast.distance_calls.max(1) as f64;
+        if json {
+            rows.push(
+                Json::obj()
+                    .set("channels", d)
+                    .set("n_sequences", fast.n_sequences)
+                    .set("hst_calls", fast.distance_calls)
+                    .set("brute_calls", exact.distance_calls)
+                    .set("d_speedup", d_speedup)
+                    .set("hst_cps_per_channel", fast.cps_per_channel())
+                    .set("brute_cps_per_channel", exact.cps_per_channel())
+                    .set("hst_ms", fast_ms)
+                    .set("brute_ms", exact_ms),
+            );
+        } else {
+            println!(
+                "{:>3}  {:>8}  {:>12}  {:>12}  {:>9.1}  {:>12.2}  {:>12.2}  {:>9.2}  {:>9.2}",
+                d,
+                fast.n_sequences,
+                fast.distance_calls,
+                exact.distance_calls,
+                d_speedup,
+                fast.cps_per_channel(),
+                exact.cps_per_channel(),
+                fast_ms,
+                exact_ms
+            );
+        }
+    }
+    if json {
+        println!("{}", Json::Arr(rows));
+    }
+    eprintln!("[mdim_search] total {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -82,7 +82,7 @@ pub(crate) struct ScanOrder {
 }
 
 impl ScanOrder {
-    fn build(idx: &SaxIndex, rng: &mut Rng64) -> ScanOrder {
+    pub(crate) fn build(idx: &SaxIndex, rng: &mut Rng64) -> ScanOrder {
         let mut clusters = idx.clusters.clone();
         for c in &mut clusters {
             rng.shuffle(c);
@@ -176,8 +176,10 @@ pub(crate) fn minimize<B: BoundSrc>(
     true
 }
 
-/// Sort `slice` by descending profile nnd (ties by index for determinism).
-fn sort_by_nnd_desc(slice: &mut [usize], key: &[f64]) {
+/// Sort `slice` by descending profile nnd (ties by index for
+/// determinism). Shared with [`par::HstPar`] and the multivariate
+/// [`mdim`](crate::mdim) engines.
+pub(crate) fn sort_by_nnd_desc(slice: &mut [usize], key: &[f64]) {
     slice.sort_unstable_by(|&a, &b| {
         key[b]
             .partial_cmp(&key[a])

@@ -14,6 +14,11 @@
 //! * [`rra`] — Rare Rule Anomaly via Sequitur (Senin et al. 2015).
 //! * [`scamp`] — exact matrix profile (SCAMP/STOMP-style; serial + XLA-tiled);
 //!   `scamp-par` splits diagonals across the same worker pool.
+//! * [`mdim`](crate::mdim) — the multivariate engines `brute-md` /
+//!   `hst-md` (k-of-d aggregate distance). Registered here through their
+//!   univariate faces, which treat a plain series as one channel; the
+//!   multivariate entry point is
+//!   [`MdimAlgorithm`](crate::mdim::MdimAlgorithm).
 //!
 //! Every engine implements [`Algorithm`] and returns a [`SearchReport`]
 //! carrying the discord set, the distance-call count (the paper's primary
@@ -118,11 +123,13 @@ pub trait Algorithm {
 /// and the id equals the engine's [`Algorithm::name`]. One entry per row
 /// of the README "Engines" table; `tests/docs_consistency.rs` keeps the
 /// two in sync so the table can never go stale again.
-pub const ALL_ENGINES: [&str; 11] = [
+pub const ALL_ENGINES: [&str; 13] = [
     "brute",
+    "brute-md",
     "hotsax",
     "hst",
     "hst-par",
+    "hst-md",
     "hst-stream",
     "dadd",
     "rra",
@@ -141,6 +148,12 @@ pub fn by_name(name: &str) -> Option<Box<dyn Algorithm + Send + Sync>> {
         "hst-par" | "hstpar" | "hst_par" => Some(Box::new(hst::par::HstPar::default())),
         "hst-stream" | "hststream" | "hst_stream" => {
             Some(Box::new(crate::stream::HstStream))
+        }
+        "brute-md" | "brutemd" | "brute_md" => {
+            Some(Box::new(crate::mdim::brute::BruteMd))
+        }
+        "hst-md" | "hstmd" | "hst_md" => {
+            Some(Box::new(crate::mdim::hst::HstMd::default()))
         }
         "dadd" | "drag" => Some(Box::new(dadd::Dadd::default())),
         "rra" => Some(Box::new(rra::Rra::default())),

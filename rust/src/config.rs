@@ -242,6 +242,28 @@ mod tests {
     }
 
     #[test]
+    fn explicit_zero_threads_resolves_to_auto() {
+        // regression: an explicit `"threads": 0` over JSON (or
+        // `--threads 0` on the CLI, which lands in the same field) used
+        // to rely on every consumer special-casing zero; the sentinel now
+        // normalizes through ExecPolicy alone, so it must resolve to the
+        // auto worker count, never to a zero-worker pool
+        use crate::exec::ExecPolicy;
+        let j = Json::parse(r#"{"s": 64, "threads": 0}"#).unwrap();
+        let p = SearchParams::from_json(&j).unwrap();
+        assert_eq!(p.threads, 0, "the sentinel is preserved");
+        assert_eq!(
+            ExecPolicy::new(p.threads).resolve(),
+            ExecPolicy::auto().resolve(),
+            "and resolves exactly like the auto policy"
+        );
+        assert!(ExecPolicy::new(p.threads).resolve() >= 1);
+        // builder path carries the same sentinel
+        let p = SearchParams::new(64, 4, 4).with_threads(0);
+        assert_eq!(ExecPolicy::new(p.threads), ExecPolicy::auto());
+    }
+
+    #[test]
     fn from_json_defaults() {
         let j = Json::parse(r#"{"s": 128}"#).unwrap();
         let p = SearchParams::from_json(&j).unwrap();

@@ -92,6 +92,25 @@ pub trait SearchObserver: Send + Sync {
     fn on_discord(&self, _rank: usize, _discord: &Discord) {}
 }
 
+/// The run-control checkpoint rule, shared by [`SearchContext::check`]
+/// and the multivariate [`MdimContext`](crate::mdim::MdimContext)'s
+/// checkpoints — one definition of "cancelled or over budget" so the two
+/// session layers can never drift apart.
+pub(crate) fn check_run_controls(
+    cancel: &CancellationToken,
+    budget: Option<u64>,
+    distance_calls: u64,
+) -> Result<()> {
+    ensure!(!cancel.is_cancelled(), "search cancelled");
+    if let Some(budget) = budget {
+        ensure!(
+            distance_calls <= budget,
+            "distance-call budget exceeded: {distance_calls} calls > budget {budget}"
+        );
+    }
+    Ok(())
+}
+
 /// Key of the warm-profile cache: profiles depend on the sequence length
 /// and the distance protocol, not on the SAX discretization.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -327,14 +346,7 @@ impl SearchContext {
     /// candidate with their session's current call count. Errors when the
     /// context was cancelled or the distance-call budget is exhausted.
     pub fn check(&self, distance_calls: u64) -> Result<()> {
-        ensure!(!self.cancel.is_cancelled(), "search cancelled");
-        if let Some(budget) = self.budget {
-            ensure!(
-                distance_calls <= budget,
-                "distance-call budget exceeded: {distance_calls} calls > budget {budget}"
-            );
-        }
-        Ok(())
+        check_run_controls(&self.cancel, self.budget, distance_calls)
     }
 
     /// A warm nnd profile for `(s, kind, allow_self_match)`, if an earlier
@@ -366,12 +378,7 @@ impl SearchContext {
         let mut cache = self.profile_cache.lock().unwrap();
         match cache.entry(key) {
             std::collections::hash_map::Entry::Occupied(mut entry) => {
-                let existing = entry.get_mut();
-                if existing.len() == profile.len() {
-                    existing.merge_min(&profile);
-                } else {
-                    *existing = profile;
-                }
+                entry.get_mut().absorb(profile);
             }
             std::collections::hash_map::Entry::Vacant(slot) => {
                 slot.insert(profile);

@@ -149,6 +149,21 @@ impl NndProfile {
         }
     }
 
+    /// Cache-merge rule shared by the warm-profile stores (the
+    /// univariate [`SearchContext`] and the multivariate `MdimContext`):
+    /// pointwise-min merge when the lengths match (a looser profile can
+    /// never displace a tighter one), replacement otherwise. One
+    /// definition so the two caches can never drift apart.
+    ///
+    /// [`SearchContext`]: crate::context::SearchContext
+    pub fn absorb(&mut self, incoming: NndProfile) {
+        if self.len() == incoming.len() {
+            self.merge_min(&incoming);
+        } else {
+            *self = incoming;
+        }
+    }
+
     /// Moving average over a centered window of s+1 entries (paper Eq. 6);
     /// borders keep the raw values. Entries still at the init sentinel are
     /// treated as missing and skipped (a raw +inf would poison the window).

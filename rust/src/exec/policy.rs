@@ -21,6 +21,14 @@ pub const THREADS_ENV: &str = "HST_THREADS";
 ///    platform cannot report it).
 ///
 /// The resolved count is always ≥ 1.
+///
+/// **Zero is normalized here, and only here**: `ExecPolicy::new(0)` *is*
+/// [`auto`](Self::auto) — a `threads: 0` arriving through the service
+/// JSON, the CLI `--threads 0` / `serve --workers 0`, or an engine field
+/// falls through to the environment/hardware defaults instead of being
+/// treated as a literal worker count. Callers must never special-case
+/// zero themselves (the coordinator once did, duplicating this rule);
+/// regression tests pin the JSON and CLI paths.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ExecPolicy {
     requested: usize,
@@ -79,5 +87,18 @@ mod tests {
         assert!(ExecPolicy::auto().resolve() >= 1);
         assert_eq!(ExecPolicy::auto().request(), 0);
         assert_eq!(ExecPolicy::default(), ExecPolicy::auto());
+    }
+
+    #[test]
+    fn zero_is_auto_not_an_explicit_request() {
+        // regression: a requested 0 must be the auto policy, never a
+        // literal zero-worker pool — this is the single place the
+        // normalization lives
+        assert_eq!(ExecPolicy::new(0), ExecPolicy::auto());
+        assert!(ExecPolicy::new(0).resolve() >= 1);
+        assert_eq!(
+            ExecPolicy::new(0).resolve(),
+            ExecPolicy::auto().resolve()
+        );
     }
 }

@@ -6,9 +6,10 @@
 //! The crate is the **Layer-3 Rust coordinator** of a three-layer stack:
 //!
 //! * **L3 (this crate)** — the discord-search engines (HST and its
-//!   sharded-parallel `hst-par`, the incremental `hst-stream`, HOT SAX,
-//!   brute force, DADD/DRAG, RRA, SCAMP/STOMP serial and parallel), the
-//!   [`exec`] worker-pool subsystem, the [`stream`] sliding-window
+//!   sharded-parallel `hst-par`, the incremental `hst-stream`, the
+//!   multivariate `brute-md`/`hst-md` of the [`mdim`] subsystem, HOT
+//!   SAX, brute force, DADD/DRAG, RRA, SCAMP/STOMP serial and parallel),
+//!   the [`exec`] worker-pool subsystem, the [`stream`] sliding-window
 //!   monitor, the SAX substrate, dataset generators, the batch-search
 //!   service coordinator, metrics (cost per sequence, D-/T-speedups), and
 //!   the benchmark harness that regenerates every table and figure of the
@@ -62,6 +63,7 @@ pub mod context;
 pub mod discord;
 pub mod dist;
 pub mod exec;
+pub mod mdim;
 pub mod metrics;
 pub mod runtime;
 pub mod sax;
@@ -83,10 +85,11 @@ pub mod prelude {
         Backend, CountingDistance, Distance, DistanceKind, ZnormStats,
     };
     pub use crate::exec::ExecPolicy;
-    pub use crate::metrics::{cps, d_speedup, t_speedup};
+    pub use crate::mdim::{MdimAlgorithm, MdimContext, MdimParams, MdimReport};
+    pub use crate::metrics::{cps, cps_per_channel, d_speedup, t_speedup};
     pub use crate::sax::{SaxIndex, SaxWord};
     pub use crate::stream::{HstStream, StreamDiscord, StreamUpdate, StreamingMonitor};
     pub use crate::ts::series::IntoSeries;
-    pub use crate::ts::{generators, TimeSeries};
+    pub use crate::ts::{generators, MultiSeries, TimeSeries};
     pub use crate::util::rng::Rng64;
 }

@@ -43,6 +43,7 @@ fn run(args: &Args) -> Result<()> {
         Some("merlin") => merlin(args),
         Some("monitor") => monitor(args),
         Some("stream") => stream(args),
+        Some("mdim") => mdim(args),
         Some("generate") => generate(args),
         Some("serve") => serve(args),
         Some("submit") => submit(args),
@@ -55,7 +56,7 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: hst <discover|table|report|plot|merlin|monitor|stream|generate|serve|submit|info> [flags]
+const USAGE: &str = "usage: hst <discover|table|report|plot|merlin|monitor|stream|mdim|generate|serve|submit|info> [flags]
   hst discover 'ECG 108' --algo hst --k 3 --scale-div 8
   hst discover 'ECG 108' --algo hst-par --threads 4
   hst discover synthetic --noise 0.001 --n 20000 --s 120
@@ -68,6 +69,9 @@ const USAGE: &str = "usage: hst <discover|table|report|plot|merlin|monitor|strea
   hst monitor 'ECG 15' --window 4000 --batch 1000
   hst stream 'ECG 15' --window 4000 --refresh-every 500   (incremental hst-stream)
   hst stream --file points.txt --s 64    (or pipe points, one per line, on stdin)
+  hst mdim --channels c0,c2 --s 96 --algo hst-md          (multivariate k-of-d search)
+  hst mdim --file multi.csv --channels temp,flow --s 128  (columns = channels)
+  hst mdim --d 4 --n 12000 --gen-seed 7 --algo brute-md   (synthetic correlated channels)
   hst generate 'Shuttle TEK 14' --out tek14.txt
   hst serve --addr 127.0.0.1:7878 --workers 4   (0 = HST_THREADS/all cores)
   hst submit --addr 127.0.0.1:7878 --dataset 'ECG 15' --algo hst-par --threads 2
@@ -372,6 +376,78 @@ fn stream(args: &Args) -> Result<()> {
             mon.refreshes(),
             mon.distance_calls()
         );
+    }
+    Ok(())
+}
+
+fn mdim(args: &Args) -> Result<()> {
+    use hstime::mdim::{self, MdimAlgorithm as _, MdimParams};
+
+    // channel source: a multi-column file, or the correlated synthetic
+    // generator (shared walk + per-channel noise + a joint anomaly)
+    let (ms, default_s) = if let Some(path) = args.get("file") {
+        (ts_io::load_multi_csv(std::path::Path::new(path))?, 128)
+    } else {
+        let s_hint = args.get_usize("s", 96);
+        let ms = hstime::ts::generators::correlated_channels(
+            args.get_usize("n", 8_000),
+            args.get_usize("d", 3),
+            args.get_usize("anomaly-len", s_hint),
+            args.get_u64("gen-seed", 0),
+        );
+        (ms, 96)
+    };
+
+    let s = args.get_usize("s", default_s);
+    let p = args.get_usize("p", hstime::config::SaxParams::default_p(s));
+    let alpha = args.get_usize("alphabet", 4);
+    let base = SearchParams::new(s, p, alpha)
+        .with_discords(args.get_usize("k", 1))
+        .with_seed(args.get_u64("seed", 0))
+        .with_threads(args.get_usize("threads", 0));
+    let channels: Vec<String> = args
+        .get("channels")
+        .map(|list| {
+            list.split(',')
+                .map(|c| c.trim().to_string())
+                .filter(|c| !c.is_empty())
+                .collect()
+        })
+        .unwrap_or_default();
+    let params = MdimParams { base, channels };
+
+    let algo_name = args.get_or("algo", "hst-md");
+    let engine = mdim::by_name(algo_name)
+        .with_context(|| format!("unknown multivariate algorithm {algo_name:?}"))?;
+    let report = engine.run_multi(&ms, &params)?;
+    if args.has("json") {
+        println!("{}", report.to_json().set("dataset", ms.name.as_str()));
+    } else {
+        println!(
+            "dataset {} ({} channels x {} points, N={} sequences, s={})",
+            ms.name,
+            ms.dims(),
+            ms.n_total(),
+            report.n_sequences,
+            s
+        );
+        println!(
+            "algo {}  channels [{}]  distance calls {}  cps/channel {:.2}  elapsed {:.3}s",
+            report.algo,
+            report.channels.join(", "),
+            report.distance_calls,
+            report.cps_per_channel(),
+            report.elapsed.as_secs_f64()
+        );
+        for (rank, d) in report.discords.iter().enumerate() {
+            println!(
+                "  #{:<2} discord @ {:<8} aggregate nnd {:<10.4} neighbor @ {}",
+                rank + 1,
+                d.position,
+                d.nnd,
+                d.neighbor
+            );
+        }
     }
     Ok(())
 }

@@ -1,0 +1,193 @@
+//! `brute-md` — the exact multivariate reference.
+//!
+//! Every admissible pair is evaluated **in full** — all selected
+//! channels, no early abandoning of any kind — so its call count is the
+//! closed form `admissible_pairs × channels`: the denominator every
+//! `hst-md` speedup is measured against, exactly as univariate `brute`
+//! anchors the paper's cps tables. The aggregate profile it produces is
+//! exact, which also makes it the best possible warm start for later
+//! searches through the [`MdimContext`] cache.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::algo::brute::BruteForce;
+use crate::algo::{non_self_match, Algorithm, SearchReport};
+use crate::config::SearchParams;
+use crate::context::SearchContext;
+use crate::discord::NndProfile;
+use crate::dist::Distance as _;
+
+use super::dist::MdimDistance;
+use super::{MdimAlgorithm, MdimContext, MdimParams, MdimReport};
+
+/// The brute-force multivariate engine.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct BruteMd;
+
+impl BruteMd {
+    /// Exact aggregate nnd profile: every admissible pair evaluated once
+    /// (symmetric update), in full across every selected channel. Checks
+    /// the context's run controls once per outer row.
+    pub fn exact_profile(
+        ctx: &MdimContext,
+        agg: &MdimDistance,
+        s: usize,
+        allow_self_match: bool,
+    ) -> Result<NndProfile> {
+        let n = ctx.series().num_sequences(s);
+        let mut profile = NndProfile::new(n);
+        for i in 0..n {
+            ctx.check(agg.calls())?;
+            for j in (i + 1)..n {
+                if non_self_match(i, j, s, allow_self_match) {
+                    let d = agg.dist(i, j);
+                    profile.observe(i, j, d);
+                }
+            }
+        }
+        Ok(profile)
+    }
+}
+
+impl MdimAlgorithm for BruteMd {
+    fn name(&self) -> &'static str {
+        "brute-md"
+    }
+
+    /// Brute force never reads a SAX index, so its univariate face skips
+    /// the discretization entirely.
+    fn uses_sax_index(&self) -> bool {
+        false
+    }
+
+    fn run_md(&self, ctx: &MdimContext, params: &MdimParams) -> Result<MdimReport> {
+        let s = params.base.sax.s;
+        let ms = ctx.series();
+        let n = ms.num_sequences(s);
+        ensure!(n >= 2, "series too short for s={s}");
+        ctx.check(0)?;
+        let start = Instant::now();
+        let channels = ms.select(&params.channels)?;
+        let kind = params.base.distance_kind();
+        let stats: Vec<_> = channels
+            .iter()
+            .map(|&c| ctx.channel_ctx(c).stats(s))
+            .collect();
+        let agg = MdimDistance::new(ms, &stats, &channels, kind);
+        let profile =
+            Self::exact_profile(ctx, &agg, s, params.base.allow_self_match)?;
+        // same extraction (and lowest-index tie-break) as univariate brute
+        let discords =
+            BruteForce::discords_from_profile(&profile, s, params.base.k);
+        let calls = agg.calls();
+        ctx.store_warm_profile(
+            s,
+            kind,
+            params.base.allow_self_match,
+            &channels,
+            profile,
+        );
+        Ok(MdimReport {
+            // qualified: the type also has a univariate Algorithm face
+            algo: MdimAlgorithm::name(self).to_string(),
+            discords,
+            distance_calls: calls,
+            prep_calls: 0,
+            elapsed: start.elapsed(),
+            n_sequences: n,
+            channels: channels
+                .iter()
+                .map(|&c| ms.channel(c).name.clone())
+                .collect(),
+        })
+    }
+}
+
+impl Algorithm for BruteMd {
+    fn name(&self) -> &'static str {
+        "brute-md"
+    }
+
+    /// Univariate face: the context's series is treated as a
+    /// single-channel series (the one-channel aggregate is the Eq. 2
+    /// distance bit for bit). Run controls, cached preparation, and warm
+    /// profiles flow both ways (the shared `mdim::run_univariate` face).
+    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
+        super::run_univariate(self, ctx, params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ts::generators;
+
+    #[test]
+    fn call_count_is_pairs_times_channels() {
+        let ms = generators::correlated_channels(500, 3, 50, 2);
+        let params = MdimParams::new(SearchParams::new(50, 5, 4));
+        let rep = BruteMd.run_multi(&ms, &params).unwrap();
+        let n = ms.num_sequences(50);
+        let mut pairs = 0u64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if j - i >= 50 {
+                    pairs += 1;
+                }
+            }
+        }
+        assert_eq!(rep.distance_calls, pairs * 3);
+        assert_eq!(rep.channels, vec!["c0", "c1", "c2"]);
+        assert_eq!(rep.n_sequences, n);
+    }
+
+    #[test]
+    fn single_channel_matches_univariate_brute_bitwise() {
+        let ms = generators::correlated_channels(900, 2, 64, 5);
+        let uni_params = SearchParams::new(64, 4, 4).with_discords(2);
+        let uni = crate::algo::brute::BruteForce
+            .run(ms.channel(1), &uni_params)
+            .unwrap();
+        let md = BruteMd
+            .run_multi(
+                &ms,
+                &MdimParams::new(uni_params).with_channels(["c1"]),
+            )
+            .unwrap();
+        assert_eq!(md.discords.len(), uni.discords.len());
+        for (a, b) in md.discords.iter().zip(&uni.discords) {
+            assert_eq!(a.position, b.position);
+            assert_eq!(a.nnd.to_bits(), b.nnd.to_bits());
+        }
+        assert_eq!(md.distance_calls, uni.distance_calls);
+    }
+
+    #[test]
+    fn unknown_channel_is_a_named_error() {
+        let ms = generators::correlated_channels(600, 2, 50, 1);
+        let params =
+            MdimParams::new(SearchParams::new(50, 5, 4)).with_channels(["nope"]);
+        let err = BruteMd.run_multi(&ms, &params).unwrap_err().to_string();
+        assert!(err.contains("unknown channel `nope`"), "{err}");
+    }
+
+    #[test]
+    fn univariate_face_matches_plain_brute() {
+        let ts = crate::ts::series::IntoSeries::into_series(
+            generators::ecg_like(900, 80, 1, 12),
+            "e",
+        );
+        let params = SearchParams::new(64, 4, 4);
+        let uni = crate::algo::brute::BruteForce.run(&ts, &params).unwrap();
+        let md = Algorithm::run(&BruteMd, &ts, &params).unwrap();
+        assert_eq!(md.algo, "brute-md");
+        assert_eq!(md.discords[0].position, uni.discords[0].position);
+        assert_eq!(
+            md.discords[0].nnd.to_bits(),
+            uni.discords[0].nnd.to_bits()
+        );
+        assert_eq!(md.distance_calls, uni.distance_calls);
+    }
+}

@@ -1,0 +1,374 @@
+//! The multivariate search session: per-channel prepared state plus the
+//! aggregate warm-profile cache.
+//!
+//! An [`MdimContext`] owns one univariate
+//! [`SearchContext`](crate::context::SearchContext) per channel, so every
+//! per-channel artifact — rolling [`SeqStats`], per-channel
+//! [`SaxIndex`] — is cached exactly the way univariate sessions cache it
+//! (same keys, same or-insert semantics). On top it adds what only exists
+//! multivariately:
+//!
+//! * the **joint SAX index** (sequences clustered by the concatenation of
+//!   their per-channel words), cached per `(SaxParams, channel subset)`;
+//! * warm **aggregate** [`NndProfile`]s keyed by
+//!   `(s, DistanceKind, allow_self_match, channel subset)`. Aggregate
+//!   profiles live in their own cache because an aggregate distance sums
+//!   per-channel distances — its entries upper-bound *aggregate* nnds,
+//!   which is a different invariant from the univariate caches. The one
+//!   exception: a **single-channel** subset's aggregate distance *is* the
+//!   univariate Eq. 2 distance bit for bit, so that case reads and feeds
+//!   the channel's own `SearchContext` warm-profile cache — a univariate
+//!   `hst` run warms a single-channel `hst-md` search and vice versa;
+//! * run controls (cancellation + distance-call budget) with the same
+//!   checkpoint contract as the univariate context.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::Result;
+
+use crate::config::SaxParams;
+use crate::context::{CancellationToken, SearchContext};
+use crate::discord::NndProfile;
+use crate::dist::DistanceKind;
+use crate::sax::{SaxIndex, SaxWord};
+use crate::ts::{MultiSeries, SeqStats};
+
+/// Key of the aggregate warm-profile cache: the distance protocol plus
+/// the resolved (ascending) channel subset the aggregate sums over.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct MdimProfileKey {
+    s: usize,
+    kind: DistanceKind,
+    allow_self_match: bool,
+    channels: Vec<usize>,
+}
+
+/// Builder for [`MdimContext`] (see [`MdimContext::builder`]).
+pub struct MdimContextBuilder {
+    ms: MultiSeries,
+    cancel: CancellationToken,
+    budget: Option<u64>,
+}
+
+impl MdimContextBuilder {
+    /// Attach a cancellation token (clone it to keep a cancelling handle).
+    pub fn cancel_token(mut self, token: CancellationToken) -> MdimContextBuilder {
+        self.cancel = token;
+        self
+    }
+
+    /// Cap the distance calls any single search through this context may
+    /// spend (checkpoint semantics as in the univariate
+    /// [`SearchContext`]: enforced once per outer-loop candidate).
+    pub fn distance_budget(mut self, max_calls: u64) -> MdimContextBuilder {
+        self.budget = Some(max_calls);
+        self
+    }
+
+    /// Finish the builder.
+    pub fn build(self) -> MdimContext {
+        // channel contexts are built lazily (each one owns a copy of its
+        // channel's points — see `channel_ctx` — so unselected channels
+        // must never pay that copy)
+        let channels =
+            (0..self.ms.dims()).map(|_| OnceLock::new()).collect();
+        MdimContext {
+            ms: self.ms,
+            channels,
+            cancel: self.cancel,
+            budget: self.budget,
+            joint_index_cache: Mutex::new(HashMap::new()),
+            profile_cache: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
+/// Prepared multivariate search state (see the [module docs](self)).
+///
+/// `Send + Sync`; all caches use interior mutability, so `&MdimContext`
+/// is all an engine needs.
+pub struct MdimContext {
+    ms: MultiSeries,
+    channels: Vec<OnceLock<SearchContext>>,
+    cancel: CancellationToken,
+    budget: Option<u64>,
+    #[allow(clippy::type_complexity)]
+    joint_index_cache: Mutex<HashMap<(SaxParams, Vec<usize>), Arc<SaxIndex>>>,
+    profile_cache: Mutex<HashMap<MdimProfileKey, NndProfile>>,
+}
+
+impl MdimContext {
+    /// Start building a context over a copy of `ms`.
+    pub fn builder(ms: &MultiSeries) -> MdimContextBuilder {
+        MdimContext::builder_owned(ms.clone())
+    }
+
+    /// Start building a context that takes ownership of `ms`.
+    pub fn builder_owned(ms: MultiSeries) -> MdimContextBuilder {
+        MdimContextBuilder {
+            ms,
+            cancel: CancellationToken::new(),
+            budget: None,
+        }
+    }
+
+    /// The multivariate series this context prepares.
+    pub fn series(&self) -> &MultiSeries {
+        &self.ms
+    }
+
+    /// The per-search distance-call budget, if any.
+    pub fn budget(&self) -> Option<u64> {
+        self.budget
+    }
+
+    /// A handle on the context's cancellation token.
+    pub fn cancel_token(&self) -> CancellationToken {
+        self.cancel.clone()
+    }
+
+    /// The univariate session of channel `c` — per-channel stats and SAX
+    /// indexes are cached there, exactly as a univariate search would
+    /// cache them (and for single-channel subsets, warm profiles too).
+    /// Built on first use: a `SearchContext` owns a copy of its channel's
+    /// points, so only channels a search actually touches pay that copy.
+    pub fn channel_ctx(&self, c: usize) -> &SearchContext {
+        self.channels[c]
+            .get_or_init(|| SearchContext::builder(self.ms.channel(c)).build())
+    }
+
+    /// Has channel `c`'s univariate session been built yet?
+    /// (Diagnostics / tests: unselected channels must stay lazy.)
+    pub fn channel_is_built(&self, c: usize) -> bool {
+        self.channels[c].get().is_some()
+    }
+
+    /// Per-channel `(stats, index)` for `sax` over the selected channels,
+    /// in selection order (each served from the channel's own
+    /// [`SearchContext`] cache).
+    pub fn prepared(
+        &self,
+        sax: &SaxParams,
+        channels: &[usize],
+    ) -> (Vec<Arc<SeqStats>>, Vec<Arc<SaxIndex>>) {
+        let mut stats = Vec::with_capacity(channels.len());
+        let mut idxs = Vec::with_capacity(channels.len());
+        for &c in channels {
+            let (st, ix) = self.channel_ctx(c).prepared(sax);
+            stats.push(st);
+            idxs.push(ix);
+        }
+        (stats, idxs)
+    }
+
+    /// The joint SAX index over the selected channels: sequence `k`'s
+    /// joint word is the concatenation of its per-channel words (built by
+    /// the shared [`WordBuilder`](crate::sax::WordBuilder) kernel inside
+    /// each channel's index), so two sequences share a joint cluster iff
+    /// they share a cluster in *every* selected channel. Computed once
+    /// per `(sax, channel subset)` and cached.
+    pub fn joint_index(
+        &self,
+        sax: &SaxParams,
+        channels: &[usize],
+        per_channel: &[Arc<SaxIndex>],
+    ) -> Arc<SaxIndex> {
+        let key = (*sax, channels.to_vec());
+        let mut cache = self.joint_index_cache.lock().unwrap();
+        Arc::clone(cache.entry(key).or_insert_with(|| {
+            let n = per_channel.first().map_or(0, |ix| ix.len());
+            let mut buf = Vec::with_capacity(sax.p * per_channel.len());
+            let words: Vec<SaxWord> = (0..n)
+                .map(|k| {
+                    buf.clear();
+                    for ix in per_channel {
+                        buf.extend_from_slice(ix.words[k].symbols());
+                    }
+                    SaxWord::new(&buf)
+                })
+                .collect();
+            Arc::new(SaxIndex::from_words(words))
+        }))
+    }
+
+    /// Run-control checkpoint — the same rule (and wording) as
+    /// [`SearchContext::check`](crate::context::SearchContext::check),
+    /// through the one shared implementation.
+    pub fn check(&self, distance_calls: u64) -> Result<()> {
+        crate::context::check_run_controls(
+            &self.cancel,
+            self.budget,
+            distance_calls,
+        )
+    }
+
+    /// A warm aggregate profile for the protocol and channel subset, if an
+    /// earlier search left one behind. Single-channel subsets are served
+    /// from the channel's own [`SearchContext`] cache (the aggregate over
+    /// one channel is the univariate distance bit for bit).
+    pub fn warm_profile(
+        &self,
+        s: usize,
+        kind: DistanceKind,
+        allow_self_match: bool,
+        channels: &[usize],
+    ) -> Option<NndProfile> {
+        if let [c] = channels {
+            return self.channel_ctx(*c).warm_profile(s, kind, allow_self_match);
+        }
+        let key = MdimProfileKey {
+            s,
+            kind,
+            allow_self_match,
+            channels: channels.to_vec(),
+        };
+        self.profile_cache.lock().unwrap().get(&key).cloned()
+    }
+
+    /// Store an aggregate profile for later searches (pointwise-min merge
+    /// on collision, as in the univariate cache — a looser profile never
+    /// displaces a tighter one). Single-channel subsets feed the
+    /// channel's own [`SearchContext`] cache, so a later univariate `hst`
+    /// run starts warm too.
+    pub fn store_warm_profile(
+        &self,
+        s: usize,
+        kind: DistanceKind,
+        allow_self_match: bool,
+        channels: &[usize],
+        profile: NndProfile,
+    ) {
+        if let [c] = channels {
+            self.channel_ctx(*c)
+                .store_warm_profile(s, kind, allow_self_match, profile);
+            return;
+        }
+        let key = MdimProfileKey {
+            s,
+            kind,
+            allow_self_match,
+            channels: channels.to_vec(),
+        };
+        let mut cache = self.profile_cache.lock().unwrap();
+        match cache.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut entry) => {
+                entry.get_mut().absorb(profile);
+            }
+            std::collections::hash_map::Entry::Vacant(slot) => {
+                slot.insert(profile);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ts::generators;
+
+    fn ms() -> MultiSeries {
+        generators::correlated_channels(1_200, 3, 64, 17)
+    }
+
+    #[test]
+    fn per_channel_state_is_cached_in_channel_contexts() {
+        let ctx = MdimContext::builder(&ms()).build();
+        let sax = SaxParams::new(64, 4, 4);
+        let (s1, i1) = ctx.prepared(&sax, &[0, 2]);
+        let (s2, i2) = ctx.prepared(&sax, &[0, 2]);
+        assert_eq!(s1.len(), 2);
+        assert!(Arc::ptr_eq(&s1[0], &s2[0]), "stats computed once");
+        assert!(Arc::ptr_eq(&i1[1], &i2[1]), "index computed once");
+        assert!(ctx.channel_ctx(0).is_prepared(&sax));
+        // the unselected channel never even built its session (no copy
+        // of its points was made)
+        assert!(!ctx.channel_is_built(1), "unselected channel stays lazy");
+        assert!(!ctx.channel_ctx(1).is_prepared(&sax), "…and unprepared");
+    }
+
+    #[test]
+    fn joint_index_is_cached_and_conjunctive() {
+        let ctx = MdimContext::builder(&ms()).build();
+        let sax = SaxParams::new(64, 4, 4);
+        let chans = vec![0usize, 1];
+        let (_, idxs) = ctx.prepared(&sax, &chans);
+        let j1 = ctx.joint_index(&sax, &chans, &idxs);
+        let j2 = ctx.joint_index(&sax, &chans, &idxs);
+        assert!(Arc::ptr_eq(&j1, &j2), "joint index computed once per key");
+        assert_eq!(j1.len(), idxs[0].len());
+        // sharing a joint cluster requires sharing both per-channel words
+        for members in &j1.clusters {
+            let m0 = members[0];
+            for &m in members {
+                assert_eq!(idxs[0].words[m], idxs[0].words[m0]);
+                assert_eq!(idxs[1].words[m], idxs[1].words[m0]);
+            }
+        }
+        // a different subset gets its own joint index
+        let chans2 = vec![0usize];
+        let (_, idxs2) = ctx.prepared(&sax, &chans2);
+        let j3 = ctx.joint_index(&sax, &chans2, &idxs2);
+        assert!(!Arc::ptr_eq(&j1, &j3));
+        // single-channel joint clusters coincide with the channel's own
+        assert_eq!(j3.cluster_of, idxs2[0].cluster_of);
+    }
+
+    #[test]
+    fn aggregate_profiles_are_keyed_by_channel_subset() {
+        let ctx = MdimContext::builder(&ms()).build();
+        let n = ctx.series().num_sequences(64);
+        let mut p = NndProfile::new(n);
+        p.observe(0, 500, 2.5);
+        ctx.store_warm_profile(64, DistanceKind::Znorm, false, &[0, 1], p);
+        assert!(ctx
+            .warm_profile(64, DistanceKind::Znorm, false, &[0, 1])
+            .is_some());
+        assert!(
+            ctx.warm_profile(64, DistanceKind::Znorm, false, &[0, 2])
+                .is_none(),
+            "different subset, different profile"
+        );
+        assert!(ctx
+            .warm_profile(64, DistanceKind::Raw, false, &[0, 1])
+            .is_none());
+    }
+
+    #[test]
+    fn single_channel_subset_shares_the_univariate_cache() {
+        let ctx = MdimContext::builder(&ms()).build();
+        let n = ctx.series().num_sequences(64);
+        let mut p = NndProfile::new(n);
+        p.observe(3, 400, 1.25);
+        // stored through the mdim face, visible in the channel context …
+        ctx.store_warm_profile(64, DistanceKind::Znorm, false, &[1], p);
+        let got = ctx
+            .channel_ctx(1)
+            .warm_profile(64, DistanceKind::Znorm, false)
+            .expect("single-channel store must feed the channel cache");
+        assert_eq!(got.nnd[3], 1.25);
+        // … and the other direction
+        let mut q = NndProfile::new(n);
+        q.observe(7, 600, 0.5);
+        ctx.channel_ctx(0)
+            .store_warm_profile(64, DistanceKind::Znorm, false, q);
+        let got = ctx
+            .warm_profile(64, DistanceKind::Znorm, false, &[0])
+            .expect("univariate store must serve the mdim face");
+        assert_eq!(got.nnd[7], 0.5);
+    }
+
+    #[test]
+    fn check_enforces_cancellation_and_budget() {
+        let token = CancellationToken::new();
+        let ctx = MdimContext::builder(&ms())
+            .cancel_token(token.clone())
+            .distance_budget(10)
+            .build();
+        assert!(ctx.check(10).is_ok(), "budget is inclusive");
+        assert!(ctx.check(11).is_err());
+        token.cancel();
+        let err = ctx.check(0).unwrap_err().to_string();
+        assert!(err.contains("cancelled"), "{err}");
+    }
+}

@@ -1,0 +1,185 @@
+//! The aggregate (k-of-d) distance session with cross-channel early
+//! abandoning.
+//!
+//! The multivariate distance between the sequences starting at `i` and
+//! `j` over a channel subset is the **sum of the per-channel Eq. 2
+//! distances**, accumulated in ascending channel-index order:
+//! `D(i, j) = d_0(i, j) + d_1(i, j) + …`. Each term is evaluated by the
+//! channel's own [`CountingDistance`] session, so one aggregate
+//! evaluation costs up to `channels` distance calls — and the paper's
+//! call-count metric extends naturally
+//! ([`cps_per_channel`](crate::metrics::cps_per_channel)).
+//!
+//! **Cross-channel early abandoning**: under a cutoff, channel `c` is
+//! given only the *remaining* budget `cutoff − (d_0 + … + d_{c−1})`, so
+//! each channel's early-abandoning cutoff tightens as earlier channels
+//! accumulate, and the pair is abandoned — later channels never
+//! evaluated, never counted — the moment the partial sum proves
+//! `D ≥ cutoff`.
+//!
+//! [`MdimDistance`] implements the univariate [`Distance`] trait, and
+//! honors its exactness contract: whenever the true aggregate is below
+//! the cutoff, every per-channel term ran under a budget it finished
+//! below (each exact by [`CountingDistance`]'s own contract), so the
+//! returned sum is bit-identical to a full no-cutoff evaluation — which
+//! is what lets `hst-md` reuse the serial HST inner loop unchanged and
+//! still match `brute-md` bit for bit.
+
+use crate::dist::{CountingDistance, Distance, DistanceKind};
+use crate::ts::{MultiSeries, SeqStats};
+
+/// One aggregate-distance session over a resolved channel subset.
+///
+/// Like the scalar backend it wraps, a session is deliberately not
+/// `Clone` and counts calls per instance: parallel workers construct
+/// their own and the per-worker counts are summed after the join.
+pub struct MdimDistance<'a> {
+    per: Vec<CountingDistance<'a>>,
+    kind: DistanceKind,
+}
+
+impl<'a> MdimDistance<'a> {
+    /// A session over `ms`, summing the selected `channels` (resolved
+    /// ascending storage indexes) with per-channel stats in selection
+    /// order (`stats[c]` belongs to `channels[c]`).
+    pub fn new(
+        ms: &'a MultiSeries,
+        stats: &'a [std::sync::Arc<SeqStats>],
+        channels: &[usize],
+        kind: DistanceKind,
+    ) -> MdimDistance<'a> {
+        debug_assert_eq!(stats.len(), channels.len());
+        let per = channels
+            .iter()
+            .zip(stats)
+            .map(|(&c, st)| CountingDistance::new(ms.channel(c), st, kind))
+            .collect();
+        MdimDistance { per, kind }
+    }
+
+    /// Number of channels the aggregate sums over.
+    pub fn dims(&self) -> usize {
+        self.per.len()
+    }
+}
+
+impl Distance for MdimDistance<'_> {
+    fn kind(&self) -> DistanceKind {
+        self.kind
+    }
+
+    /// Total per-channel distance calls so far (each per-channel
+    /// evaluation counts once, abandoned or not).
+    fn calls(&self) -> u64 {
+        self.per.iter().map(|d| d.calls()).sum()
+    }
+
+    fn dist_early(&self, i: usize, j: usize, cutoff: f64) -> f64 {
+        let mut acc = 0.0f64;
+        for d in &self.per {
+            // the channel's budget is whatever the earlier channels left
+            let remaining = cutoff - acc;
+            if remaining <= 0.0 {
+                // already provably >= cutoff: a valid aggregate lower
+                // bound, later channels never evaluated (nor counted)
+                return acc;
+            }
+            acc += d.dist_early(i, j, remaining);
+            if acc >= cutoff {
+                return acc; // abandoned: lower bound >= cutoff
+            }
+        }
+        acc // every term ran below its budget: exact
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ts::generators;
+
+    fn setup() -> (MultiSeries, Vec<std::sync::Arc<SeqStats>>) {
+        let ms = generators::correlated_channels(1_500, 3, 80, 9);
+        let stats = (0..3)
+            .map(|c| std::sync::Arc::new(SeqStats::compute(ms.channel(c), 80)))
+            .collect();
+        (ms, stats)
+    }
+
+    #[test]
+    fn aggregate_is_the_sum_of_per_channel_distances() {
+        let (ms, stats) = setup();
+        let agg = MdimDistance::new(&ms, &stats, &[0, 1, 2], DistanceKind::Znorm);
+        for (i, j) in [(0usize, 500usize), (100, 1200), (777, 93)] {
+            let mut want = 0.0;
+            for c in 0..3 {
+                let d = CountingDistance::new(
+                    ms.channel(c),
+                    &stats[c],
+                    DistanceKind::Znorm,
+                );
+                want += d.dist(i, j);
+            }
+            let got = agg.dist(i, j);
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "({i},{j}): same order, same sum"
+            );
+        }
+        assert_eq!(agg.calls(), 9, "3 pairs x 3 channels, no cutoff");
+        assert_eq!(agg.dims(), 3);
+    }
+
+    #[test]
+    fn below_cutoff_is_bit_identical_to_full_evaluation() {
+        let (ms, stats) = setup();
+        let agg = MdimDistance::new(&ms, &stats, &[0, 1, 2], DistanceKind::Znorm);
+        for (i, j) in [(0usize, 400usize), (50, 900), (321, 1111)] {
+            let exact = agg.dist(i, j);
+            let with_cutoff = agg.dist_early(i, j, exact + 1.0);
+            assert_eq!(exact.to_bits(), with_cutoff.to_bits());
+        }
+    }
+
+    #[test]
+    fn abandoned_pairs_return_a_bound_at_least_cutoff_with_fewer_calls() {
+        let (ms, stats) = setup();
+        let agg = MdimDistance::new(&ms, &stats, &[0, 1, 2], DistanceKind::Znorm);
+        let exact = agg.dist(10, 700);
+        let before = agg.calls();
+        // a cutoff below the first channel's distance: later channels
+        // must never be evaluated
+        let d = agg.dist_early(10, 700, exact * 0.1);
+        let spent = agg.calls() - before;
+        assert!(d >= exact * 0.1, "bound {d} below cutoff");
+        assert!(d <= exact + 1e-9, "bound cannot exceed the true aggregate");
+        assert!(
+            spent < 3,
+            "cross-channel abandoning must skip later channels ({spent} calls)"
+        );
+    }
+
+    #[test]
+    fn channel_subsets_sum_only_their_channels() {
+        let (ms, stats) = setup();
+        let sub: Vec<std::sync::Arc<SeqStats>> =
+            vec![stats[0].clone(), stats[2].clone()];
+        let agg = MdimDistance::new(&ms, &sub, &[0, 2], DistanceKind::Znorm);
+        let d0 = CountingDistance::new(ms.channel(0), &stats[0], DistanceKind::Znorm);
+        let d2 = CountingDistance::new(ms.channel(2), &stats[2], DistanceKind::Znorm);
+        let want = d0.dist(5, 600) + d2.dist(5, 600);
+        assert_eq!(agg.dist(5, 600).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn single_channel_aggregate_is_the_univariate_distance() {
+        let (ms, stats) = setup();
+        let sub = vec![stats[1].clone()];
+        let agg = MdimDistance::new(&ms, &sub, &[1], DistanceKind::Znorm);
+        let uni = CountingDistance::new(ms.channel(1), &stats[1], DistanceKind::Znorm);
+        for (i, j) in [(0usize, 300usize), (42, 1000)] {
+            assert_eq!(agg.dist(i, j).to_bits(), uni.dist(i, j).to_bits());
+        }
+    }
+}

@@ -1,0 +1,529 @@
+//! `hst-md` — SAX-guided exact multivariate discord search, serial and
+//! sharded-parallel.
+//!
+//! The engine lifts the HOT SAX Time machinery to the k-of-d aggregate:
+//!
+//! * **Per-channel SAX words** (each channel's cached
+//!   [`SaxIndex`](crate::sax::SaxIndex), built with the shared
+//!   [`WordBuilder`](crate::sax::WordBuilder) kernel) combine into a
+//!   *joint* index: two sequences share a joint cluster iff they share a
+//!   word in every selected channel.
+//! * **Outer loop** — candidates ordered by *summed per-channel bucket
+//!   rarity* (ascending Σ_c |cluster_c(i)|): a sequence rare in several
+//!   channels at once is the most promising aggregate discord, the
+//!   multivariate reading of HOT SAX's smallest-bucket-first heuristic.
+//!   On a warm profile the order switches to descending approximate nnd,
+//!   as in HST's later passes.
+//! * **Inner loop** — literally the serial HST minimization
+//!   ([`algo::hst::minimize`](crate::algo::hst)) running over the
+//!   aggregate [`MdimDistance`](super::MdimDistance): same-joint-cluster
+//!   first, then remaining joint clusters smallest-first, pruning the
+//!   candidate as soon as its aggregate nnd upper bound drops strictly
+//!   below the best-so-far. The aggregate's *cross-channel early
+//!   abandoning* means each pair evaluation stops — mid-channel or
+//!   between channels — the moment its partial sum proves it useless.
+//! * **Warm profiles** — the evolving aggregate profile persists across
+//!   searches through the [`MdimContext`] cache (single-channel subsets
+//!   interoperate with the univariate `SearchContext` cache directly).
+//! * **Sharding** — at ≥ 2 resolved workers each pass seeds the
+//!   best-so-far bound with the top candidate serially, then shards the
+//!   remaining candidates over the [`exec`](crate::exec) pool exactly
+//!   like `hst-par`: per-worker profile clones and private distance
+//!   sessions, a shared [`AtomicF64`] CAS-max bound re-read inside the
+//!   inner loop, pointwise-min merge in worker order, lowest-index
+//!   tie-break.
+//!
+//! **Result determinism** follows the `hst-par` argument verbatim: a
+//! candidate is only ever discarded when its aggregate upper bound drops
+//! *strictly* below an exact aggregate nnd of the same pass, so the
+//! global maximum always survives with its exact (bit-identical to
+//! serial, hence to `brute-md`) aggregate distance at any thread count.
+//! Distance-call *counts* at ≥ 2 workers depend on bound propagation
+//! (each is still the exact sum of per-worker counters), and a tied
+//! `neighbor` may be any of the bit-equal witnesses.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::algo::hst::{minimize, sort_by_nnd_desc, ScanOrder};
+use crate::algo::{Algorithm, SearchReport};
+use crate::config::SearchParams;
+use crate::context::SearchContext;
+use crate::discord::{Discord, ExclusionZones, NndProfile};
+use crate::dist::Distance as _;
+use crate::exec::{AtomicF64, ChunkQueue, ExecPolicy};
+use crate::sax::SaxIndex;
+use crate::ts::{MultiSeries, SeqStats};
+use crate::util::rng::Rng64;
+
+use super::dist::MdimDistance;
+use super::{MdimAlgorithm, MdimContext, MdimParams, MdimReport};
+
+/// The SAX-guided multivariate engine.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct HstMd {
+    /// Worker threads. `0` (the default) falls through to
+    /// [`SearchParams::threads`], then the shared [`ExecPolicy`]
+    /// resolution (`HST_THREADS`, then available parallelism).
+    ///
+    /// [`SearchParams::threads`]: crate::config::SearchParams::threads
+    pub threads: usize,
+}
+
+/// One worker's pass contribution: refined profile clone, confirmed
+/// candidates (position, exact aggregate nnd), distance calls.
+type WorkerOutcome = Result<(NndProfile, Vec<(usize, f64)>, u64)>;
+
+/// Everything a pass needs that is fixed per search (bundled to keep the
+/// serial/parallel pass signatures readable).
+struct PassState<'a> {
+    ms: &'a MultiSeries,
+    stats: &'a [Arc<SeqStats>],
+    channels: &'a [usize],
+    joint: &'a SaxIndex,
+    /// Σ_c |cluster_c(i)| per sequence — the outer-loop rarity key.
+    rarity: &'a [f64],
+    params: &'a SearchParams,
+}
+
+impl HstMd {
+    fn resolve_threads(&self, params: &SearchParams) -> usize {
+        let requested = if self.threads > 0 {
+            self.threads
+        } else {
+            params.threads
+        };
+        ExecPolicy::new(requested).resolve()
+    }
+
+    /// The outer candidate order for one pass: summed-bucket-rarity
+    /// ascending while the profile is cold, descending approximate nnd
+    /// once it carries information (ties by index either way).
+    fn pass_order(
+        st: &PassState,
+        profile: &NndProfile,
+        zones: &ExclusionZones,
+        warm: bool,
+    ) -> Vec<usize> {
+        let s = st.params.sax.s;
+        let mut order: Vec<usize> = (0..st.joint.len())
+            .filter(|&i| zones.allowed(i, s))
+            .collect();
+        if warm {
+            sort_by_nnd_desc(&mut order, &profile.nnd);
+        } else {
+            order.sort_unstable_by(|&a, &b| {
+                st.rarity[a]
+                    .partial_cmp(&st.rarity[b])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+        }
+        order
+    }
+
+    /// One serial pass: find the best aggregate discord not excluded by
+    /// `zones`, refining the shared profile. Returns the discord (if
+    /// any) and the pass's distance-call total.
+    #[allow(clippy::too_many_arguments)] // mirrors the univariate pass
+    fn pass_serial(
+        &self,
+        ctx: &MdimContext,
+        st: &PassState,
+        profile: &mut NndProfile,
+        zones: &ExclusionZones,
+        rng: &mut Rng64,
+        warm: bool,
+        base_calls: u64,
+    ) -> Result<(Option<Discord>, u64)> {
+        let s = st.params.sax.s;
+        let allow = st.params.allow_self_match;
+        let kind = st.params.distance_kind();
+        let scan = ScanOrder::build(st.joint, rng);
+        let order = Self::pass_order(st, profile, zones, warm);
+        let agg = MdimDistance::new(st.ms, st.stats, st.channels, kind);
+
+        let mut best_dist = 0.0f64;
+        let mut best: Option<Discord> = None;
+        for &i in &order {
+            ctx.check(base_calls + agg.calls())?;
+            // Avoid_low_nnds(): the carried aggregate upper bound prunes
+            // for free; only a strict drop below an exact nnd discards.
+            let mut can = profile.nnd[i] >= best_dist;
+            if can {
+                can = minimize(
+                    i, &agg, st.joint, &scan, profile, &best_dist, s, allow,
+                );
+            }
+            if can && profile.nnd[i].is_finite() {
+                let nnd_i = profile.nnd[i];
+                let better = match &best {
+                    None => true,
+                    Some(b) => {
+                        nnd_i > b.nnd || (nnd_i == b.nnd && i < b.position)
+                    }
+                };
+                if better {
+                    best_dist = nnd_i;
+                    best = Some(Discord {
+                        position: i,
+                        nnd: nnd_i,
+                        neighbor: profile.ngh[i],
+                    });
+                }
+            }
+        }
+        Ok((best, agg.calls()))
+    }
+
+    /// One sharded pass (≥ 2 workers), mirroring `hst-par`: serial seed,
+    /// chunked candidate claims against a shared CAS-max bound, ordered
+    /// pointwise-min merge, lowest-index tie-break.
+    #[allow(clippy::too_many_arguments)]
+    fn pass_par(
+        &self,
+        ctx: &MdimContext,
+        st: &PassState,
+        profile: &mut NndProfile,
+        zones: &ExclusionZones,
+        rng: &mut Rng64,
+        warm: bool,
+        threads: usize,
+        published: &AtomicU64,
+    ) -> Result<(Option<Discord>, u64)> {
+        let s = st.params.sax.s;
+        let allow = st.params.allow_self_match;
+        let kind = st.params.distance_kind();
+        let scan = ScanOrder::build(st.joint, rng);
+        let order = Self::pass_order(st, profile, zones, warm);
+        let Some(&lead) = order.first() else {
+            return Ok((None, 0));
+        };
+
+        // Phase 1 — seed: the top candidate minimized serially on the
+        // master profile, so no worker prunes against an empty bound.
+        let seed = MdimDistance::new(st.ms, st.stats, st.channels, kind);
+        let lead_ok =
+            minimize(lead, &seed, st.joint, &scan, profile, &0.0f64, s, allow);
+        let mut best: Option<(usize, f64)> = (lead_ok
+            && profile.nnd[lead].is_finite())
+        .then_some((lead, profile.nnd[lead]));
+        let mut pass_calls = seed.calls();
+        published.fetch_add(pass_calls, Ordering::Relaxed);
+        ctx.check(published.load(Ordering::Relaxed))?;
+
+        // Phase 2 — shard the remaining candidates.
+        let rest = &order[1..];
+        if !rest.is_empty() {
+            let bound = AtomicF64::new(best.map_or(0.0, |(_, nnd)| nnd));
+            let chunk = (rest.len() / (threads * 8)).clamp(16, 1024);
+            let queue = ChunkQueue::new(rest, chunk);
+            let master: &NndProfile = profile;
+
+            let outcomes: Vec<WorkerOutcome> =
+                crate::exec::scope_workers(threads, |_w| {
+                    let agg =
+                        MdimDistance::new(st.ms, st.stats, st.channels, kind);
+                    let mut local = master.clone();
+                    let mut winners: Vec<(usize, f64)> = Vec::new();
+                    let mut reported = 0u64;
+                    while let Some((_ci, slice)) = queue.take() {
+                        for &i in slice {
+                            // publish this session's delta, enforce
+                            // budget/cancellation on the global sum
+                            let delta = agg.calls() - reported;
+                            reported = agg.calls();
+                            let total = published
+                                .fetch_add(delta, Ordering::Relaxed)
+                                + delta;
+                            ctx.check(total)?;
+
+                            let mut can = local.nnd[i] >= bound.load();
+                            if can {
+                                can = minimize(
+                                    i, &agg, st.joint, &scan, &mut local,
+                                    &bound, s, allow,
+                                );
+                            }
+                            if can && local.nnd[i].is_finite() {
+                                // exact aggregate nnd: publish so every
+                                // worker prunes against it immediately
+                                bound.fetch_max(local.nnd[i]);
+                                winners.push((i, local.nnd[i]));
+                            }
+                        }
+                    }
+                    published.fetch_add(
+                        agg.calls() - reported,
+                        Ordering::Relaxed,
+                    );
+                    Ok((local, winners, agg.calls()))
+                });
+
+            // Phase 3 — ordered merge (worker 0 first).
+            for outcome in outcomes {
+                let (local, winners, calls) = outcome?;
+                profile.merge_min(&local);
+                pass_calls += calls;
+                for (i, nnd) in winners {
+                    best = match best {
+                        None => Some((i, nnd)),
+                        Some((bi, bn)) if nnd > bn || (nnd == bn && i < bi) => {
+                            Some((i, nnd))
+                        }
+                        keep => keep,
+                    };
+                }
+            }
+        }
+
+        let found = best.map(|(i, nnd)| Discord {
+            position: i,
+            nnd,
+            neighbor: profile.ngh[i],
+        });
+        Ok((found, pass_calls))
+    }
+}
+
+impl MdimAlgorithm for HstMd {
+    fn name(&self) -> &'static str {
+        "hst-md"
+    }
+
+    fn run_md(&self, ctx: &MdimContext, params: &MdimParams) -> Result<MdimReport> {
+        let base = &params.base;
+        let s = base.sax.s;
+        let ms = ctx.series();
+        let n = ms.num_sequences(s);
+        ensure!(n >= 2, "series too short for s={s}");
+        ctx.check(0)?;
+        let start = Instant::now();
+        let threads = self.resolve_threads(base);
+        let channels = ms.select(&params.channels)?;
+        let kind = base.distance_kind();
+
+        // Preparation is pure discretization — per-channel stats/indexes
+        // from each channel's SearchContext cache, the joint index from
+        // the mdim cache — and costs no distance calls (prep_calls = 0).
+        let (stats, idxs) = ctx.prepared(&base.sax, &channels);
+        let joint = ctx.joint_index(&base.sax, &channels, &idxs);
+        let rarity: Vec<f64> = (0..n)
+            .map(|i| {
+                idxs.iter().map(|ix| ix.cluster_size(i) as f64).sum::<f64>()
+            })
+            .collect();
+        let mut rng = Rng64::new(base.seed ^ 0x4D44_5354); // "MDST"
+
+        // Warm start: any aggregate profile an earlier search on this
+        // context left behind upper-bounds every exact aggregate nnd.
+        let cached =
+            ctx.warm_profile(s, kind, base.allow_self_match, &channels);
+        let warm = matches!(&cached, Some(p) if p.len() == n);
+        let mut profile = match cached {
+            Some(p) if p.len() == n => p,
+            _ => NndProfile::new(n),
+        };
+
+        let st = PassState {
+            ms,
+            stats: &stats,
+            channels: &channels,
+            joint: &joint,
+            rarity: &rarity,
+            params: base,
+        };
+        let published = AtomicU64::new(0);
+        let mut zones = ExclusionZones::new();
+        let mut discords = Vec::new();
+        let mut total_calls = 0u64;
+        for ki in 0..base.k {
+            // later passes always run on a warmed profile
+            let pass_warm = warm || ki > 0;
+            let (found, calls) = if threads <= 1 {
+                self.pass_serial(
+                    ctx,
+                    &st,
+                    &mut profile,
+                    &zones,
+                    &mut rng,
+                    pass_warm,
+                    total_calls,
+                )?
+            } else {
+                self.pass_par(
+                    ctx,
+                    &st,
+                    &mut profile,
+                    &zones,
+                    &mut rng,
+                    pass_warm,
+                    threads,
+                    &published,
+                )?
+            };
+            total_calls += calls;
+            match found {
+                Some(d) => {
+                    zones.add(d.position, s);
+                    discords.push(d);
+                }
+                None => break,
+            }
+        }
+
+        // Leave the refined aggregate profile for the next search on
+        // this context (and, single-channel, for univariate engines).
+        ctx.store_warm_profile(
+            s,
+            kind,
+            base.allow_self_match,
+            &channels,
+            profile,
+        );
+
+        Ok(MdimReport {
+            // qualified: the type also has a univariate Algorithm face
+            algo: MdimAlgorithm::name(self).to_string(),
+            discords,
+            distance_calls: total_calls,
+            prep_calls: 0,
+            elapsed: start.elapsed(),
+            n_sequences: n,
+            channels: channels
+                .iter()
+                .map(|&c| ms.channel(c).name.clone())
+                .collect(),
+        })
+    }
+}
+
+impl Algorithm for HstMd {
+    fn name(&self) -> &'static str {
+        "hst-md"
+    }
+
+    /// Univariate face: one-channel aggregate search (bit-compatible
+    /// with the Eq. 2 distance). Run controls, cached preparation, and
+    /// warm profiles flow both ways (the shared `mdim::run_univariate`
+    /// face).
+    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
+        super::run_univariate(self, ctx, params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::brute::BruteMd;
+    use super::*;
+    use crate::ts::generators;
+
+    fn params(s: usize, k: usize) -> MdimParams {
+        MdimParams::new(SearchParams::new(s, 4, 4).with_discords(k))
+    }
+
+    #[test]
+    fn matches_brute_md_bitwise_across_thread_counts() {
+        let ms = generators::correlated_channels(1_000, 3, 64, 21);
+        let p = params(64, 2);
+        let exact = BruteMd.run_multi(&ms, &p).unwrap();
+        for threads in [1usize, 2, 4] {
+            let fast = HstMd { threads }.run_multi(&ms, &p).unwrap();
+            assert_eq!(fast.algo, "hst-md");
+            assert_eq!(
+                fast.discords.len(),
+                exact.discords.len(),
+                "threads={threads}"
+            );
+            for (a, b) in fast.discords.iter().zip(&exact.discords) {
+                assert_eq!(a.position, b.position, "threads={threads}");
+                assert_eq!(
+                    a.nnd.to_bits(),
+                    b.nnd.to_bits(),
+                    "threads={threads}: {} vs {}",
+                    a.nnd,
+                    b.nnd
+                );
+            }
+            assert!(
+                fast.distance_calls < exact.distance_calls,
+                "threads={threads}: {} !< {}",
+                fast.distance_calls,
+                exact.distance_calls
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        // serial engine: call counts are deterministic too (at >= 2
+        // workers only the results are, as with hst-par)
+        let ms = generators::correlated_channels(1_200, 2, 64, 33);
+        let p = params(64, 2);
+        let a = HstMd { threads: 1 }.run_multi(&ms, &p).unwrap();
+        let b = HstMd { threads: 1 }.run_multi(&ms, &p).unwrap();
+        assert_eq!(a.distance_calls, b.distance_calls);
+        assert_eq!(
+            a.discords.iter().map(|d| d.position).collect::<Vec<_>>(),
+            b.discords.iter().map(|d| d.position).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn warm_context_reuses_the_aggregate_profile() {
+        let ms = generators::correlated_channels(1_300, 3, 64, 8);
+        let p = params(64, 1);
+        let ctx = MdimContext::builder(&ms).build();
+        let cold = HstMd { threads: 1 }.run_md(&ctx, &p).unwrap();
+        let hot = HstMd { threads: 1 }.run_md(&ctx, &p).unwrap();
+        assert_eq!(cold.discords[0].position, hot.discords[0].position);
+        assert_eq!(
+            cold.discords[0].nnd.to_bits(),
+            hot.discords[0].nnd.to_bits()
+        );
+        assert!(
+            hot.distance_calls <= cold.distance_calls,
+            "warm run must not cost more: {} vs {}",
+            hot.distance_calls,
+            cold.distance_calls
+        );
+    }
+
+    #[test]
+    fn cancellation_and_budget_propagate() {
+        use crate::context::CancellationToken;
+        let ms = generators::correlated_channels(1_000, 2, 64, 6);
+        let token = CancellationToken::new();
+        token.cancel();
+        let ctx = MdimContext::builder(&ms).cancel_token(token).build();
+        let err = HstMd::default()
+            .run_md(&ctx, &params(64, 1))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cancelled"), "{err}");
+
+        let ctx = MdimContext::builder(&ms).distance_budget(5).build();
+        let err = HstMd { threads: 2 }
+            .run_md(&ctx, &params(64, 1))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("budget"), "{err}");
+    }
+
+    #[test]
+    fn univariate_face_matches_serial_hst_results() {
+        let ts = crate::ts::series::IntoSeries::into_series(
+            generators::ecg_like(1_200, 90, 1, 44),
+            "e",
+        );
+        let sp = SearchParams::new(72, 4, 4);
+        let uni = crate::algo::brute::BruteForce.run(&ts, &sp).unwrap();
+        let md = Algorithm::run(&HstMd::default(), &ts, &sp).unwrap();
+        assert_eq!(md.algo, "hst-md");
+        assert_eq!(md.discords[0].position, uni.discords[0].position);
+        assert_eq!(md.discords[0].nnd.to_bits(), uni.discords[0].nnd.to_bits());
+    }
+}

@@ -1,0 +1,349 @@
+//! Multivariate (k-of-d) discord search — the `mdim` subsystem.
+//!
+//! A multivariate discord is the sequence position whose **aggregate**
+//! nearest-neighbor distance — the sum of per-channel z-normalized Eq. 2
+//! distances over a selected channel subset, see
+//! [`dist::MdimDistance`] — is largest under the usual non-self-match
+//! condition. Summing per-channel distances is the k-of-d aggregate the
+//! multidimensional discord literature builds on (Yeh et al. 2023,
+//! *Sketching Multidimensional Time Series*; Linardi et al. 2020,
+//! *Matrix Profile Goes MAD*): an anomaly too subtle for any single
+//! channel still surfaces when every channel deviates *at the same
+//! time*, because the per-channel contributions add while at any other
+//! position at most one channel is far from its neighbor.
+//!
+//! Two engines implement [`MdimAlgorithm`], both registered in
+//! [`algo::ALL_ENGINES`](crate::algo::ALL_ENGINES) (their univariate
+//! [`Algorithm`](crate::algo::Algorithm) faces treat a plain series as
+//! one channel):
+//!
+//! * [`brute::BruteMd`] (`brute-md`) — the exact reference: every
+//!   admissible pair evaluated in full across every selected channel,
+//!   with call counting. The correctness oracle.
+//! * [`hst::HstMd`] (`hst-md`) — the headline: per-channel SAX words
+//!   (shared [`WordBuilder`](crate::sax::WordBuilder) kernel) feed a
+//!   *joint* cluster index; the outer candidate loop is ordered by
+//!   summed per-channel bucket rarity; the inner loop is the serial HST
+//!   minimization running over the aggregate distance, whose
+//!   cross-channel early abandoning tightens each channel's cutoff as
+//!   earlier channels accumulate; warm aggregate profiles persist across
+//!   searches through the [`MdimContext`]; and the candidate loop shards
+//!   across the [`exec`](crate::exec) worker pool exactly like
+//!   `hst-par` (shared CAS-max bound, ordered bit-identical merge).
+//!
+//! Exactness is the contract: `hst-md` discord positions and aggregate
+//! distances are **bit-identical** to `brute-md` at every thread count,
+//! with strictly fewer distance calls (property-tested in
+//! `tests/integration_mdim.rs`).
+//!
+//! ```
+//! use hstime::mdim::{self, MdimAlgorithm as _, MdimParams};
+//! use hstime::prelude::*;
+//!
+//! let ms = generators::correlated_channels(1_000, 3, 64, 42);
+//! let params = MdimParams::new(SearchParams::new(64, 4, 4));
+//! let ctx = mdim::MdimContext::builder(&ms).build();
+//! let fast = mdim::hst::HstMd::default().run_md(&ctx, &params).unwrap();
+//! let exact = mdim::brute::BruteMd.run_md(&ctx, &params).unwrap();
+//! assert_eq!(fast.discords[0].position, exact.discords[0].position);
+//! assert_eq!(fast.discords[0].nnd.to_bits(), exact.discords[0].nnd.to_bits());
+//! assert!(fast.distance_calls < exact.distance_calls);
+//! ```
+
+pub mod brute;
+mod context;
+pub mod dist;
+pub mod hst;
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::config::SearchParams;
+use crate::discord::DiscordSet;
+use crate::ts::MultiSeries;
+use crate::util::json::Json;
+
+pub use context::{MdimContext, MdimContextBuilder};
+pub use dist::MdimDistance;
+
+/// A multivariate search request: the shared univariate parameters plus
+/// the channel selection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MdimParams {
+    /// The univariate search parameters (s, P, alphabet, k, seed,
+    /// distance protocol, threads) the aggregate search shares.
+    pub base: SearchParams,
+    /// Channel names to aggregate over; empty = all channels. Resolved
+    /// to ascending storage indexes by
+    /// [`MultiSeries::select`](crate::ts::MultiSeries::select), so the
+    /// aggregate sum's accumulation order never depends on how this list
+    /// was ordered.
+    pub channels: Vec<String>,
+}
+
+impl MdimParams {
+    /// A request over all channels.
+    pub fn new(base: SearchParams) -> MdimParams {
+        MdimParams {
+            base,
+            channels: Vec::new(),
+        }
+    }
+
+    /// Restrict the aggregate to the named channels.
+    pub fn with_channels<S: Into<String>>(
+        mut self,
+        channels: impl IntoIterator<Item = S>,
+    ) -> MdimParams {
+        self.channels = channels.into_iter().map(Into::into).collect();
+        self
+    }
+
+    /// Serialize for the service protocol / reports: the base params
+    /// object plus a `channels` array (omitted when empty).
+    pub fn to_json(&self) -> Json {
+        let mut j = self.base.to_json();
+        if !self.channels.is_empty() {
+            j = j.set(
+                "channels",
+                self.channels
+                    .iter()
+                    .map(|c| Json::from(c.as_str()))
+                    .collect::<Vec<_>>(),
+            );
+        }
+        j
+    }
+
+    /// Parse from the service protocol: the shared params object with an
+    /// optional `channels` array of names. Unknown fields are rejected
+    /// by name, as everywhere in the protocol.
+    pub fn from_json(v: &Json) -> Result<MdimParams, String> {
+        let mut channels = Vec::new();
+        let mut base_fields = v.clone();
+        if let Json::Obj(map) = &mut base_fields {
+            if let Some(raw) = map.remove("channels") {
+                let Some(arr) = raw.as_arr() else {
+                    return Err(
+                        "field `channels` must be an array of strings".into()
+                    );
+                };
+                for (i, c) in arr.iter().enumerate() {
+                    match c.as_str() {
+                        Some(s) => channels.push(s.to_string()),
+                        None => {
+                            return Err(format!(
+                                "channels[{i}] is not a string"
+                            ))
+                        }
+                    }
+                }
+            }
+        }
+        let base = SearchParams::from_json(&base_fields)?;
+        Ok(MdimParams { base, channels })
+    }
+}
+
+/// Outcome of one multivariate discord search.
+#[derive(Debug, Clone)]
+pub struct MdimReport {
+    /// Engine identifier (`brute-md` / `hst-md`).
+    pub algo: String,
+    /// Discords in rank order; `nnd` is the **aggregate** distance.
+    pub discords: DiscordSet,
+    /// Total per-channel distance calls (cross-channel abandoning means
+    /// an aggregate evaluation may cost fewer calls than channels).
+    pub distance_calls: u64,
+    /// Distance calls spent on preparation (0 for both current engines:
+    /// their preparation is SAX discretization, which costs none).
+    pub prep_calls: u64,
+    /// Wall-clock time of the search proper.
+    pub elapsed: Duration,
+    /// Number of sequence positions N in the search space.
+    pub n_sequences: usize,
+    /// Resolved channel names the aggregate summed over, in ascending
+    /// storage order.
+    pub channels: Vec<String>,
+}
+
+impl MdimReport {
+    /// Cost per sequence *per channel*:
+    /// `distance_calls / (N · k · channels)` — the paper's cps indicator
+    /// extended to the multivariate workload (see
+    /// [`metrics::cps_per_channel`](crate::metrics::cps_per_channel)).
+    pub fn cps_per_channel(&self) -> f64 {
+        crate::metrics::cps_per_channel(
+            self.distance_calls,
+            self.n_sequences,
+            self.discords.len().max(1),
+            self.channels.len().max(1),
+        )
+    }
+
+    /// Serialize for reports and the service protocol.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("algo", self.algo.as_str())
+            .set(
+                "discords",
+                self.discords.iter().map(|d| d.to_json()).collect::<Vec<_>>(),
+            )
+            .set("distance_calls", self.distance_calls)
+            .set("prep_calls", self.prep_calls)
+            .set("elapsed_secs", self.elapsed.as_secs_f64())
+            .set("n_sequences", self.n_sequences)
+            .set(
+                "channels",
+                self.channels
+                    .iter()
+                    .map(|c| Json::from(c.as_str()))
+                    .collect::<Vec<_>>(),
+            )
+            .set("cps_per_channel", self.cps_per_channel())
+    }
+
+    /// Repackage as a univariate [`SearchReport`] (the `Algorithm` faces
+    /// of the mdim engines report through this).
+    ///
+    /// [`SearchReport`]: crate::algo::SearchReport
+    pub fn into_search_report(self) -> crate::algo::SearchReport {
+        crate::algo::SearchReport {
+            algo: self.algo,
+            discords: self.discords,
+            distance_calls: self.distance_calls,
+            prep_calls: self.prep_calls,
+            elapsed: self.elapsed,
+            n_sequences: self.n_sequences,
+        }
+    }
+}
+
+/// A multivariate discord-search engine.
+pub trait MdimAlgorithm {
+    /// Short identifier (`"brute-md"`, `"hst-md"`).
+    fn name(&self) -> &'static str;
+
+    /// Find the first `params.base.k` aggregate discords of the
+    /// context's series over the selected channels, reusing (and
+    /// extending) the context's prepared state.
+    fn run_md(&self, ctx: &MdimContext, params: &MdimParams)
+        -> Result<MdimReport>;
+
+    /// One-shot convenience over a throwaway context.
+    fn run_multi(&self, ms: &MultiSeries, params: &MdimParams) -> Result<MdimReport> {
+        let ctx = MdimContext::builder(ms).build();
+        self.run_md(&ctx, params)
+    }
+
+    /// Does this engine consult SAX indexes? The shared univariate
+    /// `Algorithm` face (`run_univariate`) only prepares and carries an
+    /// index across the boundary for engines that do (`brute-md` never
+    /// reads one, so its face must not pay the discretization).
+    fn uses_sax_index(&self) -> bool {
+        true
+    }
+}
+
+/// Shared implementation of the engines' univariate
+/// [`Algorithm`](crate::algo::Algorithm) faces: treat the context's
+/// series as one channel, **carry the caller's prepared state across**
+/// (cached stats and SAX index seed the channel context; a warm profile
+/// seeds the aggregate cache — a one-channel aggregate is the univariate
+/// Eq. 2 distance bit for bit), run, and flow the refined profile back
+/// so the caller's [`SearchContext`](crate::context::SearchContext) —
+/// e.g. an entry of the service coordinator's LRU — keeps warming across
+/// repeated `*-md` jobs instead of silently rebuilding everything.
+pub(crate) fn run_univariate(
+    engine: &dyn MdimAlgorithm,
+    ctx: &crate::context::SearchContext,
+    params: &SearchParams,
+) -> Result<crate::algo::SearchReport> {
+    let s = params.sax.s;
+    let kind = params.distance_kind();
+    let ms = MultiSeries::from_univariate(ctx.series().clone());
+    let mut builder =
+        MdimContext::builder_owned(ms).cancel_token(ctx.cancel_token());
+    if let Some(b) = ctx.budget() {
+        builder = builder.distance_budget(b);
+    }
+    let mctx = builder.build();
+    // The channel is a clone of the caller's series, so the seed
+    // contracts hold verbatim; compute-on-miss goes through the caller's
+    // caches, so preparation is paid at most once per context, not per
+    // run.
+    if ctx.series().num_sequences(s) > 0 && params.sax.validate().is_ok() {
+        mctx.channel_ctx(0).seed_stats(ctx.stats(s));
+        if engine.uses_sax_index() {
+            mctx.channel_ctx(0)
+                .seed_index(params.sax, ctx.index(&params.sax));
+        }
+    }
+    if let Some(p) = ctx.warm_profile(s, kind, params.allow_self_match) {
+        mctx.store_warm_profile(s, kind, params.allow_self_match, &[0], p);
+    }
+    let report = engine.run_md(&mctx, &MdimParams::new(params.clone()))?;
+    // Flow the refinement back (store merges by pointwise min, so the
+    // caller's profile only ever tightens).
+    if let Some(p) = mctx.warm_profile(s, kind, params.allow_self_match, &[0]) {
+        ctx.store_warm_profile(s, kind, params.allow_self_match, p);
+    }
+    Ok(report.into_search_report())
+}
+
+/// Canonical id of every multivariate engine. Each id also resolves
+/// through [`algo::by_name`](crate::algo::by_name) (the univariate face)
+/// and therefore appears in [`algo::ALL_ENGINES`](crate::algo::ALL_ENGINES)
+/// and the README Engines table — `tests/docs_consistency.rs` holds the
+/// registries in lockstep in both directions.
+pub const MDIM_ENGINES: [&str; 2] = ["brute-md", "hst-md"];
+
+/// Look up a multivariate engine by name (CLI / service entry point).
+pub fn by_name(name: &str) -> Option<Box<dyn MdimAlgorithm + Send + Sync>> {
+    match name.to_ascii_lowercase().as_str() {
+        "brute-md" | "brutemd" | "brute_md" => Some(Box::new(brute::BruteMd)),
+        "hst-md" | "hstmd" | "hst_md" => Some(Box::new(hst::HstMd::default())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_mdim_engines() {
+        for id in MDIM_ENGINES {
+            let engine = by_name(id).unwrap_or_else(|| panic!("{id} missing"));
+            assert_eq!(engine.name(), id, "canonical id must round-trip");
+        }
+        assert!(by_name("hst").is_none(), "univariate ids stay out");
+    }
+
+    #[test]
+    fn params_json_roundtrip_with_channels() {
+        let p = MdimParams::new(SearchParams::new(96, 4, 4).with_discords(2))
+            .with_channels(["c0", "c2"]);
+        let back = MdimParams::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+        // empty channel list is omitted and parses back as empty
+        let p = MdimParams::new(SearchParams::new(96, 4, 4));
+        assert!(p.to_json().get("channels").is_none());
+        assert_eq!(MdimParams::from_json(&p.to_json()).unwrap(), p);
+    }
+
+    #[test]
+    fn params_json_rejects_malformed_channels_and_unknown_fields() {
+        let j = Json::parse(r#"{"s": 64, "channels": "c0"}"#).unwrap();
+        let err = MdimParams::from_json(&j).unwrap_err();
+        assert!(err.contains("`channels`"), "{err}");
+        let j = Json::parse(r#"{"s": 64, "channels": [1]}"#).unwrap();
+        let err = MdimParams::from_json(&j).unwrap_err();
+        assert!(err.contains("channels[0]"), "{err}");
+        // unknown base fields still rejected by the shared parser
+        let j = Json::parse(r#"{"s": 64, "chanels": ["c0"]}"#).unwrap();
+        let err = MdimParams::from_json(&j).unwrap_err();
+        assert!(err.contains("`chanels`"), "{err}");
+    }
+}

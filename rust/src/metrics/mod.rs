@@ -9,6 +9,22 @@ pub fn cps(distance_calls: u64, n_sequences: usize, k_discords: usize) -> f64 {
     distance_calls as f64 / (n_sequences as f64 * k_discords as f64)
 }
 
+/// Cost per sequence **per channel**: distance calls / (N · k · d) — the
+/// cps indicator extended to the multivariate (mdim) workload, where one
+/// aggregate evaluation costs up to `d` per-channel distance calls.
+/// Under perfect cross-channel early abandoning the per-channel cps of a
+/// SAX-guided search approaches the univariate value; a full-evaluation
+/// brute force sits at exactly the univariate brute-force cps.
+pub fn cps_per_channel(
+    distance_calls: u64,
+    n_sequences: usize,
+    k_discords: usize,
+    channels: usize,
+) -> f64 {
+    assert!(channels > 0);
+    cps(distance_calls, n_sequences, k_discords) / channels as f64
+}
+
 /// D-speedup: ratio of distance calls (baseline / candidate). > 1 means
 /// the candidate is faster.
 pub fn d_speedup(baseline_calls: u64, candidate_calls: u64) -> f64 {
@@ -45,6 +61,21 @@ mod tests {
         let n = 10_000;
         let v = cps(2 * (n as u64 - 1), n, 1);
         assert!((v - 2.0).abs() < 0.001);
+    }
+
+    #[test]
+    fn cps_per_channel_normalizes_by_channel_count() {
+        // 3 channels fully evaluated: per-channel cps equals the
+        // univariate cps of the same pair count
+        let uni = cps(9_000, 1_000, 1);
+        assert_eq!(cps_per_channel(27_000, 1_000, 1, 3), uni);
+        assert_eq!(cps_per_channel(9_000, 1_000, 1, 1), uni);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_channels_panics() {
+        cps_per_channel(10, 10, 1, 0);
     }
 
     #[test]

@@ -18,7 +18,8 @@ use anyhow::{bail, Result};
 use crate::algo;
 use crate::config::{SaxParams, SearchParams};
 use crate::context::SearchContext;
-use crate::ts::{datasets, TimeSeries};
+use crate::mdim::{self, MdimAlgorithm as _, MdimContext, MdimParams};
+use crate::ts::{datasets, MultiSeries, TimeSeries};
 use crate::util::json::Json;
 
 use super::streams::{StreamRegistry, STREAM_REGISTRY_CAPACITY};
@@ -26,6 +27,12 @@ use super::streams::{StreamRegistry, STREAM_REGISTRY_CAPACITY};
 /// Contexts kept warm by the coordinator (per-process; each context holds
 /// its series plus prepared state, so the cap bounds memory).
 const CONTEXT_CACHE_CAPACITY: usize = 8;
+
+/// Upper bound on the total points (`n × channels`) a network-supplied
+/// `synthetic-md:` spec may ask the service to materialize (~80 MB of
+/// f64s before prepared state) — the same one-request-can't-abort-the-
+/// server invariant `MAX_STREAM_WINDOW` enforces for `stream_open`.
+pub const MAX_MDIM_SYNTHETIC_POINTS: usize = 10_000_000;
 
 /// A search job.
 #[derive(Debug, Clone)]
@@ -157,6 +164,161 @@ impl JobSpec {
     }
 }
 
+/// A multivariate search job (the `mdim` protocol command).
+#[derive(Debug, Clone)]
+pub struct MdimJobSpec {
+    /// Multivariate dataset spec: `synthetic-md:…` or `file:<path>`
+    /// (see [`series`](Self::series)).
+    pub dataset: String,
+    /// Multivariate algorithm name (see [`crate::mdim::by_name`]).
+    pub algo: String,
+    /// Search parameters (channel selection included) forwarded to the
+    /// engine.
+    pub params: MdimParams,
+}
+
+impl MdimJobSpec {
+    /// Top-level request fields [`from_json`](Self::from_json) accepts.
+    pub const JSON_FIELDS: [&'static str; 5] =
+        ["cmd", "dataset", "algo", "params", "threads"];
+
+    /// Parse an `mdim` request. The `params` object is the shared one
+    /// plus an optional `channels` array of names; unknown fields — top
+    /// level or inside `params` — are rejected by name, as everywhere.
+    pub fn from_json(v: &Json) -> Result<MdimJobSpec, String> {
+        if let Json::Obj(map) = v {
+            if let Some(bad) =
+                map.keys().find(|k| !Self::JSON_FIELDS.contains(&k.as_str()))
+            {
+                return Err(format!(
+                    "unknown field `{bad}` in mdim job (known: {})",
+                    Self::JSON_FIELDS.join(", ")
+                ));
+            }
+        } else {
+            return Err("mdim job must be a JSON object".into());
+        }
+        let dataset = v
+            .get("dataset")
+            .and_then(|d| d.as_str())
+            .ok_or("field `dataset` required")?
+            .to_string();
+        let algo = v
+            .get("algo")
+            .and_then(|d| d.as_str())
+            .unwrap_or("hst-md")
+            .to_string();
+        let mut params = match v.get("params") {
+            Some(p) => MdimParams::from_json(p)?,
+            None => return Err("field `params` required".into()),
+        };
+        // same job-level `threads` shorthand as univariate submits
+        if let Some(t) = v.get("threads") {
+            let t = t.as_u64().ok_or("field `threads` must be an integer")?;
+            if params.base.threads == 0 {
+                params.base.threads = t as usize;
+            }
+        }
+        Ok(MdimJobSpec {
+            dataset,
+            algo,
+            params,
+        })
+    }
+
+    /// Materialize the requested multivariate series. Two dataset forms,
+    /// both parsed strictly (named-field errors, like
+    /// [`JobSpec::series`]):
+    ///
+    /// * `synthetic-md:channels=3,n=8000,len=128,seed=4` — the
+    ///   [`correlated_channels`](crate::ts::generators::correlated_channels)
+    ///   generator (`len` is the anomaly length; every key optional);
+    /// * `file:<path>` — a delimited multi-column file via
+    ///   [`ts::io::load_multi_csv`](crate::ts::io::load_multi_csv). The
+    ///   path is read server-side and **must resolve inside the service
+    ///   process's working directory**: even behind a trusted ingestion
+    ///   tier, a network-supplied path must not be able to read (and,
+    ///   through loader error messages, echo) arbitrary server files.
+    pub fn series(&self) -> Result<MultiSeries> {
+        if let Some(rest) = self.dataset.strip_prefix("synthetic-md:") {
+            let mut channels = 3usize;
+            let mut n = 8_000usize;
+            let mut len = 128usize;
+            let mut seed = 0u64;
+            for kv in rest.split(',').filter(|kv| !kv.is_empty()) {
+                let Some((key, val)) = kv.split_once('=') else {
+                    bail!(
+                        "malformed `key=value` pair {kv:?} in synthetic-md \
+                         spec {:?}",
+                        self.dataset
+                    );
+                };
+                let parse_usize = |field: &str, val: &str| -> Result<usize> {
+                    val.parse().map_err(|e| {
+                        anyhow::anyhow!(
+                            "synthetic-md field `{field}`={val:?}: {e}"
+                        )
+                    })
+                };
+                match key {
+                    "channels" => channels = parse_usize("channels", val)?,
+                    "n" => n = parse_usize("n", val)?,
+                    "len" => len = parse_usize("len", val)?,
+                    "seed" => {
+                        seed = val.parse().map_err(|e| {
+                            anyhow::anyhow!(
+                                "synthetic-md field `seed`={val:?}: {e}"
+                            )
+                        })?
+                    }
+                    other => bail!(
+                        "unknown synthetic-md field `{other}` (known: \
+                         channels, n, len, seed)"
+                    ),
+                }
+            }
+            let total = n.checked_mul(channels.max(1));
+            match total {
+                Some(t) if t <= MAX_MDIM_SYNTHETIC_POINTS => {}
+                _ => bail!(
+                    "synthetic-md spec asks for n={n} × channels={channels} \
+                     points, above the per-request cap of \
+                     {MAX_MDIM_SYNTHETIC_POINTS} — a network request must \
+                     not drive an unbounded allocation"
+                ),
+            }
+            return Ok(crate::ts::generators::correlated_channels(
+                n, channels, len, seed,
+            ));
+        }
+        if let Some(path) = self.dataset.strip_prefix("file:") {
+            let resolved = std::path::Path::new(path)
+                .canonicalize()
+                .map_err(|e| anyhow::anyhow!("file dataset {path:?}: {e}"))?;
+            let root = std::env::current_dir()?.canonicalize()?;
+            anyhow::ensure!(
+                resolved.starts_with(&root),
+                "file dataset {path:?} resolves outside the service \
+                 working directory {}",
+                root.display()
+            );
+            return crate::ts::io::load_multi_csv(&resolved);
+        }
+        bail!(
+            "unknown multivariate dataset {:?} (expected `synthetic-md:…` \
+             or `file:<path>`)",
+            self.dataset
+        )
+    }
+}
+
+/// A queued unit of work: a univariate search or a multivariate one.
+#[derive(Debug, Clone)]
+enum Job {
+    Search(JobSpec),
+    Mdim(MdimJobSpec),
+}
+
 /// Lifecycle of a job.
 #[derive(Debug, Clone)]
 pub enum JobState {
@@ -263,7 +425,7 @@ impl ContextCache {
 }
 
 struct Inner {
-    queue: VecDeque<(u64, JobSpec)>,
+    queue: VecDeque<(u64, Job)>,
     jobs: HashMap<u64, JobState>,
     next_id: u64,
     shutdown: bool,
@@ -304,15 +466,12 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Start `n_workers` workers with a queue bound of `capacity`.
-    /// `n_workers == 0` sizes the pool through
-    /// [`ExecPolicy::auto`](crate::exec::ExecPolicy::auto)
-    /// (`HST_THREADS`, then available parallelism).
+    /// `n_workers == 0` sizes the pool through the shared
+    /// [`ExecPolicy`](crate::exec::ExecPolicy) resolution (`HST_THREADS`,
+    /// then available parallelism) — zero-means-auto is normalized in
+    /// `ExecPolicy` itself, not re-implemented here.
     pub fn start(n_workers: usize, capacity: usize) -> Coordinator {
-        let n_workers = if n_workers == 0 {
-            crate::exec::ExecPolicy::auto().resolve()
-        } else {
-            n_workers
-        };
+        let n_workers = crate::exec::ExecPolicy::new(n_workers).resolve();
         let inner = Arc::new((
             Mutex::new(Inner {
                 queue: VecDeque::new(),
@@ -354,11 +513,24 @@ impl Coordinator {
         Ok(self.submit_batch(vec![spec])?[0])
     }
 
+    /// Submit a multivariate search job (the `mdim` protocol command).
+    /// Shares the queue, worker pool, backpressure bound, and job
+    /// registry with univariate jobs — `status`/`wait`/`list` work
+    /// unchanged on the returned id.
+    pub fn submit_mdim(&self, spec: MdimJobSpec) -> Result<u64> {
+        Ok(self.enqueue(vec![Job::Mdim(spec)])?[0])
+    }
+
     /// Submit a batch atomically: either the queue has room for *all*
     /// jobs (ids returned, in order) or none are enqueued. Batched jobs
     /// share the prepared-context LRU with everything else, so a batch
     /// over one dataset pays its preparation once.
     pub fn submit_batch(&self, specs: Vec<JobSpec>) -> Result<Vec<u64>> {
+        self.enqueue(specs.into_iter().map(Job::Search).collect())
+    }
+
+    /// The one enqueue path every submit flavor funnels through.
+    fn enqueue(&self, specs: Vec<Job>) -> Result<Vec<u64>> {
         if specs.is_empty() {
             bail!("empty batch");
         }
@@ -484,7 +656,10 @@ fn worker_loop(inner: Arc<(Mutex<Inner>, Condvar)>, cache: Arc<ContextCache>) {
                 g = cvar.wait(g).unwrap();
             }
         };
-        let outcome = run_job(&spec, &cache);
+        let outcome = match &spec {
+            Job::Search(spec) => run_job(spec, &cache),
+            Job::Mdim(spec) => run_mdim_job(spec),
+        };
         let (lock, _) = &*inner;
         let mut g = lock.lock().unwrap();
         g.running -= 1;
@@ -506,6 +681,23 @@ fn run_job(spec: &JobSpec, cache: &ContextCache) -> Result<Json> {
         .set("dataset", spec.dataset.as_str())
         .set("n_points", ctx.series().n_total())
         .set("ctx_cache", if cache_hit { "hit" } else { "miss" }))
+}
+
+fn run_mdim_job(spec: &MdimJobSpec) -> Result<Json> {
+    let Some(engine) = mdim::by_name(&spec.algo) else {
+        bail!("unknown multivariate algorithm {:?}", spec.algo);
+    };
+    // mdim jobs build their context per job (no LRU yet: multivariate
+    // preparation costs no distance calls, so only series generation is
+    // repeated across jobs on the same dataset)
+    let ms = spec.series()?;
+    let ctx = MdimContext::builder_owned(ms).build();
+    let report = engine.run_md(&ctx, &spec.params)?;
+    Ok(report
+        .to_json()
+        .set("dataset", spec.dataset.as_str())
+        .set("n_points", ctx.series().n_total())
+        .set("dims", ctx.series().dims()))
 }
 
 #[cfg(test)]
@@ -771,6 +963,162 @@ mod tests {
         c.streams().close("s1").unwrap();
         assert_eq!(c.stats().streams, 0);
         c.shutdown();
+    }
+
+    fn quick_mdim_spec(algo: &str) -> MdimJobSpec {
+        MdimJobSpec {
+            dataset: "synthetic-md:channels=2,n=900,len=64,seed=3".into(),
+            algo: algo.into(),
+            params: MdimParams::new(SearchParams::new(64, 4, 4)),
+        }
+    }
+
+    #[test]
+    fn mdim_jobs_run_through_the_shared_pool() {
+        let c = Coordinator::start(2, 16);
+        let id = c.submit_mdim(quick_mdim_spec("hst-md")).unwrap();
+        // univariate and multivariate jobs interleave on one queue
+        let other = c.submit(quick_spec("hst")).unwrap();
+        match c.wait(id) {
+            Some(JobState::Done(j)) => {
+                assert_eq!(j.get("algo").unwrap().as_str(), Some("hst-md"));
+                assert_eq!(j.get("dims").unwrap().as_u64(), Some(2));
+                assert!(j.get("distance_calls").unwrap().as_u64().unwrap() > 0);
+                assert!(j.get("cps_per_channel").unwrap().as_f64().unwrap() > 0.0);
+                let chans = j.get("channels").unwrap().as_arr().unwrap();
+                assert_eq!(chans.len(), 2);
+            }
+            other => panic!("unexpected state {other:?}"),
+        }
+        assert!(matches!(c.wait(other), Some(JobState::Done(_))));
+        c.shutdown();
+    }
+
+    #[test]
+    fn mdim_channel_selection_flows_through() {
+        let c = Coordinator::start(1, 4);
+        let mut spec = quick_mdim_spec("brute-md");
+        spec.params = spec.params.with_channels(["c1"]);
+        let id = c.submit_mdim(spec).unwrap();
+        match c.wait(id) {
+            Some(JobState::Done(j)) => {
+                let chans = j.get("channels").unwrap().as_arr().unwrap();
+                assert_eq!(chans.len(), 1);
+                assert_eq!(chans[0].as_str(), Some("c1"));
+            }
+            other => panic!("unexpected state {other:?}"),
+        }
+        // a bad channel fails the job with the name in the error
+        let mut spec = quick_mdim_spec("hst-md");
+        spec.params = spec.params.with_channels(["nope"]);
+        let id = c.submit_mdim(spec).unwrap();
+        match c.wait(id) {
+            Some(JobState::Failed(msg)) => {
+                assert!(msg.contains("unknown channel `nope`"), "{msg}")
+            }
+            other => panic!("unexpected state {other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn mdim_from_json_rejects_unknown_fields_by_name() {
+        let j = Json::parse(
+            r#"{"cmd":"mdim","dataset":"synthetic-md:","chanels":["a"],
+                "params":{"s":64}}"#,
+        )
+        .unwrap();
+        let err = MdimJobSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("`chanels`"), "{err}");
+        // nested params typos are caught too
+        let j = Json::parse(
+            r#"{"cmd":"mdim","dataset":"synthetic-md:","params":{"s":64,"kk":1}}"#,
+        )
+        .unwrap();
+        assert!(MdimJobSpec::from_json(&j).unwrap_err().contains("`kk`"));
+        // channels ride inside params and must be strings
+        let j = Json::parse(
+            r#"{"cmd":"mdim","dataset":"synthetic-md:","params":{"s":64,"channels":[0]}}"#,
+        )
+        .unwrap();
+        let err = MdimJobSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("channels[0]"), "{err}");
+        // job-level threads shorthand
+        let j = Json::parse(
+            r#"{"cmd":"mdim","dataset":"synthetic-md:","threads":2,
+                "params":{"s":64}}"#,
+        )
+        .unwrap();
+        assert_eq!(MdimJobSpec::from_json(&j).unwrap().params.base.threads, 2);
+    }
+
+    #[test]
+    fn synthetic_md_spec_errors_name_the_field() {
+        let mut s = quick_mdim_spec("hst-md");
+        s.dataset = "synthetic-md:chanels=2".into();
+        let err = format!("{:#}", s.series().unwrap_err());
+        assert!(err.contains("`chanels`"), "{err}");
+
+        s.dataset = "synthetic-md:n=abc".into();
+        let err = format!("{:#}", s.series().unwrap_err());
+        assert!(err.contains("`n`"), "{err}");
+
+        s.dataset = "synthetic-md:n".into();
+        let err = format!("{:#}", s.series().unwrap_err());
+        assert!(err.contains("key=value"), "{err}");
+
+        s.dataset = "not-a-multi-dataset".into();
+        let err = format!("{:#}", s.series().unwrap_err());
+        assert!(err.contains("synthetic-md"), "{err}");
+
+        // defaults apply when the spec names no field
+        s.dataset = "synthetic-md:".into();
+        let ms = s.series().unwrap();
+        assert_eq!(ms.dims(), 3);
+        assert_eq!(ms.n_total(), 8_000);
+
+        // a network request must not drive an unbounded allocation
+        // (the stream_open MAX_STREAM_WINDOW invariant, applied here)
+        s.dataset = "synthetic-md:channels=100000000,n=100000000".into();
+        let err = format!("{:#}", s.series().unwrap_err());
+        assert!(err.contains("cap"), "{err}");
+        // the overflow-safe path: n × channels wraps usize
+        s.dataset = format!("synthetic-md:channels=8,n={}", usize::MAX / 4);
+        assert!(s.series().is_err());
+    }
+
+    #[test]
+    fn mdim_file_dataset_loads_multi_csv_inside_the_working_dir_only() {
+        // in-tree file (cargo test runs from the package root): loads
+        let dir = std::env::current_dir().unwrap().join("target");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path =
+            dir.join(format!("hstime_mdim_job_{}.csv", std::process::id()));
+        std::fs::write(&path, "a,b\n1,2\n3,4\n5,6\n").unwrap();
+        let mut s = quick_mdim_spec("hst-md");
+        s.dataset = format!("file:{}", path.display());
+        let ms = s.series().unwrap();
+        assert_eq!(ms.dims(), 2);
+        assert_eq!(ms.channel_names(), vec!["a", "b"]);
+        std::fs::remove_file(&path).ok();
+
+        // a path resolving outside the working directory is refused
+        // before any read — a network-supplied path must not be able to
+        // read (or echo) arbitrary server files
+        let mut outside = std::env::temp_dir();
+        outside.push(format!("hstime_mdim_out_{}.csv", std::process::id()));
+        std::fs::write(&outside, "a,b\n1,2\n").unwrap();
+        s.dataset = format!("file:{}", outside.display());
+        let err = format!("{:#}", s.series().unwrap_err());
+        assert!(
+            err.contains("outside the service working directory"),
+            "{err}"
+        );
+        std::fs::remove_file(&outside).ok();
+
+        // a missing file errors cleanly too
+        s.dataset = "file:does/not/exist.csv".into();
+        assert!(s.series().is_err());
     }
 
     #[test]

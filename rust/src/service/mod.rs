@@ -15,6 +15,8 @@
 //! ← {"ok":true,"job":1}
 //! → {"cmd":"batch","jobs":[{"dataset":"ECG 300","algo":"hst-par","threads":4,"params":{"s":300}}, …]}
 //! ← {"ok":true,"jobs":[2,3]}
+//! → {"cmd":"mdim","dataset":"synthetic-md:channels=3,n=8000,len=128","algo":"hst-md","params":{"s":128,"channels":["c0","c2"]}}
+//! ← {"ok":true,"job":4}
 //! → {"cmd":"status","job":1}
 //! ← {"ok":true,"job":1,"state":"done","report":{...}}
 //! → {"cmd":"wait","job":1,"timeout_ms":250}
@@ -55,6 +57,6 @@ pub mod online;
 pub mod server;
 pub mod streams;
 
-pub use coordinator::{Coordinator, CoordinatorStats, JobSpec, JobState};
+pub use coordinator::{Coordinator, CoordinatorStats, JobSpec, JobState, MdimJobSpec};
 pub use server::{serve, Client};
 pub use streams::StreamRegistry;

@@ -78,9 +78,10 @@ fn handle_conn(
 /// Every `cmd` the dispatcher accepts, in `docs/PROTOCOL.md` order.
 /// `tests/docs_consistency.rs` asserts the protocol document covers each
 /// of these, so the list and the doc cannot drift apart.
-pub const COMMANDS: [&str; 11] = [
+pub const COMMANDS: [&str; 12] = [
     "submit",
     "batch",
+    "mdim",
     "status",
     "wait",
     "stats",
@@ -127,6 +128,13 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
     match req.get("cmd").and_then(|c| c.as_str()) {
         Some("submit") => match JobSpec::from_json(&req) {
             Ok(spec) => match coord.submit(spec) {
+                Ok(id) => Json::obj().set("ok", true).set("job", id),
+                Err(e) => err_reply(&format!("{e:#}")),
+            },
+            Err(e) => err_reply(&e),
+        },
+        Some("mdim") => match super::coordinator::MdimJobSpec::from_json(&req) {
+            Ok(spec) => match coord.submit_mdim(spec) {
                 Ok(id) => Json::obj().set("ok", true).set("job", id),
                 Err(e) => err_reply(&format!("{e:#}")),
             },

@@ -264,6 +264,92 @@ pub fn insect_feeding_like(n: usize, n_anomalies: usize, seed: u64) -> Vec<f64> 
     pts
 }
 
+/// Ground truth for [`correlated_channels`]: the `(start, len)` span of
+/// the injected *joint* anomaly, a deterministic function of the series
+/// length and the anomaly length (so tests, benches, and the demo need no
+/// side channel to know where it is).
+pub fn correlated_anomaly_span(n: usize, len: usize) -> (usize, usize) {
+    let start = (5 * n / 8).min(n.saturating_sub(2 * len));
+    (start, len)
+}
+
+/// A smooth Gaussian bump in [0, 1] supported on `[start, start + len)`;
+/// zero outside. The modulation window both anomaly kinds of
+/// [`correlated_channels`] use — smooth, so the anomaly has no
+/// edge discontinuity a univariate search would trivially flag.
+fn phase_bump(i: usize, start: usize, len: usize) -> f64 {
+    if i < start || i >= start + len || len == 0 {
+        return 0.0;
+    }
+    let u = (i - start) as f64 / len as f64;
+    let x = (u - 0.5) * 6.0;
+    (-x * x).exp()
+}
+
+/// Synthetic multivariate series for the mdim workload: a **shared**
+/// slow random walk plus a common quasi-periodic carrier, per-channel
+/// amplitude and per-channel noise, and two kinds of injected anomaly:
+///
+/// * one **joint** anomaly at [`correlated_anomaly_span`]`(n, len)` — a
+///   *moderate* smooth phase wobble (+0.7 rad peak) applied to **every**
+///   channel at the same time span;
+/// * one **decoy** per channel — a *stronger* wobble (−1.4 rad peak,
+///   opposite direction so decoy and joint windows cannot match each
+///   other) at a channel-specific position in the first half.
+///
+/// Per channel, the decoy is the clear top univariate discord (its
+/// deviation is twice the joint one's, and phase-wobble distance grows
+/// sublinearly, so the decoy strictly dominates), which is exactly what
+/// makes the joint anomaly invisible to any single-channel search. The
+/// k-of-d aggregate (sum of per-channel distances) sees it immediately:
+/// at the joint span all `d` channels deviate *simultaneously*
+/// (aggregate ≈ d · moderate), while at any decoy only one channel does
+/// (aggregate ≈ strong ≤ 2 · moderate). With d ≥ 3 the joint anomaly is
+/// the aggregate's top discord by construction.
+///
+/// `len` is the anomaly length (use the search's sequence length `s`).
+/// Deterministic per seed; channels are named `c0`, `c1`, ….
+pub fn correlated_channels(
+    n: usize,
+    channels: usize,
+    len: usize,
+    seed: u64,
+) -> super::multi::MultiSeries {
+    use super::multi::MultiSeries;
+    use super::series::TimeSeries;
+
+    let channels = channels.max(1);
+    let mut rng = Rng64::new(seed);
+    // shared background: a slow random walk every channel carries
+    let mut walk = Vec::with_capacity(n);
+    let mut v = 0.0f64;
+    for _ in 0..n {
+        v += 0.01 * rng.normal();
+        walk.push(v);
+    }
+    let (q, alen) = correlated_anomaly_span(n, len);
+    let period = len.max(8) as f64;
+    let mut chans = Vec::with_capacity(channels);
+    for c in 0..channels {
+        let mut crng = rng.split(); // per-channel noise stream
+        // channel-specific decoy position, spread over the first half
+        let p_c = (n / 8 + c * n / (4 * channels)).min(n.saturating_sub(2 * alen));
+        let amp = 0.9 + 0.2 * c as f64 / channels as f64;
+        let pts: Vec<f64> = (0..n)
+            .map(|i| {
+                let mut phase =
+                    2.0 * std::f64::consts::PI * i as f64 / period;
+                phase += 0.7 * phase_bump(i, q, alen); // joint, every channel
+                phase -= 1.4 * phase_bump(i, p_c, alen); // decoy, this channel
+                walk[i] + amp * phase.sin() + 0.03 * crng.normal()
+            })
+            .collect();
+        chans.push(TimeSeries::new(format!("c{c}"), pts));
+    }
+    MultiSeries::new(format!("correlated({channels}x{n})"), chans)
+        .expect("generator emits equal-length, uniquely named channels")
+}
+
 /// Pure random walk (high-noise control).
 pub fn random_walk(n: usize, step: f64, seed: u64) -> Vec<f64> {
     let mut rng = Rng64::new(seed);
@@ -365,6 +451,70 @@ mod tests {
         let b = &pts[750..1000];
         let d: f64 = a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f64>().sqrt();
         assert!(d < 0.5, "cycle distance {d}");
+    }
+
+    #[test]
+    fn correlated_channels_is_deterministic_and_shaped() {
+        let a = correlated_channels(2_000, 3, 100, 7);
+        let b = correlated_channels(2_000, 3, 100, 7);
+        assert_eq!(a, b, "deterministic per seed");
+        let c = correlated_channels(2_000, 3, 100, 8);
+        assert_ne!(a, c, "seed changes the data");
+        assert_eq!(a.dims(), 3);
+        assert_eq!(a.n_total(), 2_000);
+        assert_eq!(a.channel_names(), vec!["c0", "c1", "c2"]);
+        // zero channels clamps to one; tiny n stays in bounds
+        assert_eq!(correlated_channels(400, 0, 50, 1).dims(), 1);
+    }
+
+    #[test]
+    fn correlated_channels_share_background_but_differ_in_noise() {
+        let ms = correlated_channels(3_000, 2, 100, 3);
+        let x = &ms.channel(0).points;
+        let y = &ms.channel(1).points;
+        // channels correlate strongly (shared walk + carrier) …
+        let mx = x.iter().sum::<f64>() / x.len() as f64;
+        let my = y.iter().sum::<f64>() / y.len() as f64;
+        let mut cov = 0.0;
+        let mut vx = 0.0;
+        let mut vy = 0.0;
+        for (a, b) in x.iter().zip(y) {
+            cov += (a - mx) * (b - my);
+            vx += (a - mx) * (a - mx);
+            vy += (b - my) * (b - my);
+        }
+        let corr = cov / (vx.sqrt() * vy.sqrt());
+        assert!(corr > 0.8, "channels should be correlated, corr={corr}");
+        // … but are not identical (per-channel noise stream)
+        assert!(x.iter().zip(y).any(|(a, b)| (a - b).abs() > 0.01));
+    }
+
+    #[test]
+    fn correlated_anomaly_span_is_deterministic_and_in_bounds() {
+        let (q, l) = correlated_anomaly_span(4_000, 120);
+        assert_eq!((q, l), (2_500, 120));
+        assert!(q + 2 * l <= 4_000);
+        // the joint wobble actually lands there: after removing the
+        // window means (the shared walk's offset), the anomaly window
+        // differs from the same-phase window one period earlier by far
+        // more than noise alone explains
+        let ms = correlated_channels(4_000, 2, 120, 5);
+        let ch = &ms.channel(0).points;
+        let period = 120;
+        let centered_diff = |a: usize, b: usize| -> f64 {
+            let ma = ch[a..a + 120].iter().sum::<f64>() / 120.0;
+            let mb = ch[b..b + 120].iter().sum::<f64>() / 120.0;
+            (0..120)
+                .map(|t| ((ch[a + t] - ma) - (ch[b + t] - mb)).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let dev = centered_diff(q, q - period);
+        let base = centered_diff(1_000, 1_000 - period);
+        assert!(
+            dev > 2.0 * base,
+            "wobble must deform the carrier: {dev} vs {base}"
+        );
     }
 
     #[test]

@@ -1,11 +1,14 @@
 //! Loading and saving time series as plain text (one value per line, the
-//! format used by the paper's dataset suite / Grammarviz) or CSV columns.
+//! format used by the paper's dataset suite / Grammarviz) or CSV columns,
+//! plus the delimited multi-column loader behind the multivariate
+//! ([`MultiSeries`]) workload.
 
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use super::multi::MultiSeries;
 use super::series::TimeSeries;
 
 /// Load a series from a text file: one f64 per line; blank lines and lines
@@ -25,10 +28,7 @@ pub fn load_text(path: &Path, column: usize) -> Result<TimeSeries> {
         if trimmed.is_empty() || trimmed.starts_with('#') {
             continue;
         }
-        let fields: Vec<&str> = trimmed
-            .split(|c: char| c == ',' || c == ';' || c.is_whitespace())
-            .filter(|t| !t.is_empty())
-            .collect();
+        let fields = split_row(trimmed);
         let Some(field) = fields.get(column) else {
             bail!(
                 "{}:{}: no column {} in {:?}",
@@ -47,6 +47,89 @@ pub fn load_text(path: &Path, column: usize) -> Result<TimeSeries> {
         bail!("{}: no data points", path.display());
     }
     Ok(TimeSeries::new(name, points))
+}
+
+/// Split one delimited row into fields (`,`, `;`, tab, or whitespace —
+/// the same delimiters [`load_text`] accepts).
+fn split_row(line: &str) -> Vec<&str> {
+    line.split(|c: char| c == ',' || c == ';' || c.is_whitespace())
+        .filter(|t| !t.is_empty())
+        .collect()
+}
+
+/// Load every column of a delimited file as one [`MultiSeries`] channel.
+///
+/// Format: one row per time step; fields split on `,`, `;`, tab, or
+/// whitespace; blank lines and `#` comments skipped. When the first
+/// non-comment row has any non-numeric field it is taken as the header
+/// naming the channels; otherwise channels are named `c0`, `c1`, ….
+///
+/// Errors follow the strict named-field conventions of
+/// [`JobSpec::series`](crate::service::JobSpec::series): a ragged row is
+/// rejected with its line number and both column counts, a non-numeric
+/// cell with its line number and the *channel name* of its column — a
+/// malformed file must fail the load, never silently shift columns.
+pub fn load_multi_csv(path: &Path) -> Result<MultiSeries> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "multi".to_string());
+    let mut names: Option<Vec<String>> = None;
+    let mut columns: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let fields = split_row(trimmed);
+        if names.is_none() {
+            // first data row: a header if any cell is non-numeric
+            if fields.iter().any(|f| f.parse::<f64>().is_err()) {
+                names = Some(fields.iter().map(|f| f.to_string()).collect());
+                continue;
+            }
+            names = Some((0..fields.len()).map(|i| format!("c{i}")).collect());
+        }
+        let header = names.as_ref().unwrap();
+        if fields.len() != header.len() {
+            bail!(
+                "{}:{}: ragged row: {} columns, expected {} ({})",
+                path.display(),
+                lineno + 1,
+                fields.len(),
+                header.len(),
+                header.join(", ")
+            );
+        }
+        if columns.is_empty() {
+            columns = vec![Vec::new(); header.len()];
+        }
+        for (c, field) in fields.iter().enumerate() {
+            let v: f64 = field.parse().with_context(|| {
+                format!(
+                    "{}:{}: column `{}`: bad number {:?}",
+                    path.display(),
+                    lineno + 1,
+                    header[c],
+                    field
+                )
+            })?;
+            columns[c].push(v);
+        }
+    }
+    if columns.is_empty() || columns[0].is_empty() {
+        bail!("{}: no data rows", path.display());
+    }
+    let header = names.unwrap();
+    let channels = header
+        .into_iter()
+        .zip(columns)
+        .map(|(n, pts)| TimeSeries::new(n, pts))
+        .collect();
+    MultiSeries::new(name, channels)
 }
 
 /// Save a series as one value per line (round-trips with [`load_text`]).
@@ -106,6 +189,65 @@ mod tests {
         let path = tmp("empty.txt");
         std::fs::write(&path, "# only comments\n\n").unwrap();
         assert!(load_text(&path, 0).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn multi_csv_with_header_names_the_channels() {
+        let path = tmp("multi_header.csv");
+        std::fs::write(
+            &path,
+            "# a comment\ntemp,pressure,flow\n1,10,100\n2,20,200\n3,30,300\n",
+        )
+        .unwrap();
+        let ms = load_multi_csv(&path).unwrap();
+        assert_eq!(ms.dims(), 3);
+        assert_eq!(ms.n_total(), 3);
+        assert_eq!(ms.channel_names(), vec!["temp", "pressure", "flow"]);
+        assert_eq!(ms.channel(1).points, vec![10.0, 20.0, 30.0]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn multi_csv_without_header_autonames_columns() {
+        let path = tmp("multi_noheader.tsv");
+        std::fs::write(&path, "1\t10\n2\t20\n").unwrap();
+        let ms = load_multi_csv(&path).unwrap();
+        assert_eq!(ms.channel_names(), vec!["c0", "c1"]);
+        assert_eq!(ms.channel(0).points, vec![1.0, 2.0]);
+        assert_eq!(ms.channel(1).points, vec![10.0, 20.0]);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn multi_csv_ragged_row_is_a_named_error() {
+        let path = tmp("multi_ragged.csv");
+        std::fs::write(&path, "a,b\n1,2\n3\n").unwrap();
+        let err = format!("{:#}", load_multi_csv(&path).unwrap_err());
+        assert!(err.contains("ragged row"), "{err}");
+        assert!(err.contains(":3:"), "line number named: {err}");
+        assert!(err.contains("1 columns, expected 2"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn multi_csv_non_numeric_cell_names_the_channel() {
+        let path = tmp("multi_badcell.csv");
+        std::fs::write(&path, "a,b\n1,2\n3,oops\n").unwrap();
+        let err = format!("{:#}", load_multi_csv(&path).unwrap_err());
+        assert!(err.contains("column `b`"), "{err}");
+        assert!(err.contains("\"oops\""), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn multi_csv_header_only_or_empty_is_error() {
+        let path = tmp("multi_empty.csv");
+        std::fs::write(&path, "a,b\n# nothing\n").unwrap();
+        let err = format!("{:#}", load_multi_csv(&path).unwrap_err());
+        assert!(err.contains("no data rows"), "{err}");
+        std::fs::write(&path, "").unwrap();
+        assert!(load_multi_csv(&path).is_err());
         std::fs::remove_file(path).ok();
     }
 }

@@ -1,12 +1,15 @@
-//! Time-series substrate: containers, rolling statistics, I/O, synthetic
-//! generators, and the paper-dataset registry.
+//! Time-series substrate: containers (univariate and multivariate),
+//! rolling statistics, I/O, synthetic generators, and the paper-dataset
+//! registry.
 
 pub mod datasets;
 pub mod generators;
 pub mod io;
+pub mod multi;
 pub mod plot;
 pub mod series;
 pub mod stats;
 
+pub use multi::MultiSeries;
 pub use series::TimeSeries;
 pub use stats::{window_stats, SeqStats};

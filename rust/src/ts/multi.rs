@@ -1,0 +1,221 @@
+//! The multivariate time-series container.
+//!
+//! A [`MultiSeries`] is a set of *channels* — named, equally long
+//! univariate [`TimeSeries`] recorded over the same clock (column
+//! storage: each channel owns its contiguous `Vec<f64>`, so per-channel
+//! engines and distance sessions borrow plain slices with no striding).
+//! Sequence terminology carries over unchanged from the univariate case:
+//! a multivariate sequence of length `s` starting at `k` is the tuple of
+//! per-channel windows `channel_c[k..k + s]`, and there are
+//! `num_sequences(s) = n_total − s + 1` of them.
+//!
+//! Construction paths: [`MultiSeries::new`] from channels assembled in
+//! code, [`crate::ts::io::load_multi_csv`] for delimited files, and
+//! [`crate::ts::generators::correlated_channels`] for synthetic data.
+
+use anyhow::{bail, ensure, Result};
+
+use super::series::TimeSeries;
+
+/// An in-memory multivariate time series: named channels in column
+/// storage, all of equal length.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MultiSeries {
+    /// Human-readable identifier (dataset name).
+    pub name: String,
+    channels: Vec<TimeSeries>,
+}
+
+impl MultiSeries {
+    /// Build from channels. Errors when no channel is given, channel
+    /// lengths differ, or two channels share a name (channel names are
+    /// the selection keys of [`select`](Self::select)).
+    pub fn new(
+        name: impl Into<String>,
+        channels: Vec<TimeSeries>,
+    ) -> Result<MultiSeries> {
+        ensure!(!channels.is_empty(), "a MultiSeries needs >= 1 channel");
+        let len = channels[0].n_total();
+        for c in &channels {
+            ensure!(
+                c.n_total() == len,
+                "channel `{}` has {} points but `{}` has {}: channels must \
+                 share one clock",
+                c.name,
+                c.n_total(),
+                channels[0].name,
+                len
+            );
+        }
+        for (i, c) in channels.iter().enumerate() {
+            if let Some(dup) = channels[..i].iter().find(|o| o.name == c.name) {
+                bail!("duplicate channel name `{}`", dup.name);
+            }
+        }
+        Ok(MultiSeries {
+            name: name.into(),
+            channels,
+        })
+    }
+
+    /// Wrap one univariate series as a single-channel multivariate one
+    /// (the adapter the univariate [`Algorithm`] faces of the mdim
+    /// engines use).
+    ///
+    /// [`Algorithm`]: crate::algo::Algorithm
+    pub fn from_univariate(ts: TimeSeries) -> MultiSeries {
+        let name = ts.name.clone();
+        MultiSeries {
+            name,
+            channels: vec![ts],
+        }
+    }
+
+    /// Number of channels d.
+    #[inline]
+    pub fn dims(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Total points per channel N_tot.
+    #[inline]
+    pub fn n_total(&self) -> usize {
+        self.channels[0].n_total()
+    }
+
+    /// Number of complete sequences of length `s` (same count in every
+    /// channel): N = N_tot − s + 1, or 0 when the series is shorter.
+    #[inline]
+    pub fn num_sequences(&self, s: usize) -> usize {
+        self.channels[0].num_sequences(s)
+    }
+
+    /// Borrow channel `c`.
+    #[inline]
+    pub fn channel(&self, c: usize) -> &TimeSeries {
+        &self.channels[c]
+    }
+
+    /// All channels, in storage order.
+    pub fn channels(&self) -> &[TimeSeries] {
+        &self.channels
+    }
+
+    /// Channel names, in storage order.
+    pub fn channel_names(&self) -> Vec<&str> {
+        self.channels.iter().map(|c| c.name.as_str()).collect()
+    }
+
+    /// Index of the channel named `name`, if any.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.channels.iter().position(|c| c.name == name)
+    }
+
+    /// Resolve a channel selection to ascending storage indexes.
+    ///
+    /// An empty selection means *all channels*. Unknown and duplicate
+    /// names are rejected by name (a typo'd channel must fail the
+    /// search, not silently search a different subset). The result is
+    /// sorted ascending, so the aggregate distance — accumulated in
+    /// resolved order — is independent of how the caller ordered the
+    /// selection list.
+    pub fn select(&self, names: &[String]) -> Result<Vec<usize>> {
+        if names.is_empty() {
+            return Ok((0..self.dims()).collect());
+        }
+        let mut idxs = Vec::with_capacity(names.len());
+        for n in names {
+            let Some(i) = self.index_of(n) else {
+                bail!(
+                    "unknown channel `{n}` (known: {})",
+                    self.channel_names().join(", ")
+                );
+            };
+            if idxs.contains(&i) {
+                bail!("duplicate channel `{n}` in selection");
+            }
+            idxs.push(i);
+        }
+        idxs.sort_unstable();
+        Ok(idxs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_channel() -> MultiSeries {
+        MultiSeries::new(
+            "m",
+            vec![
+                TimeSeries::new("a", vec![1.0, 2.0, 3.0, 4.0]),
+                TimeSeries::new("b", vec![4.0, 3.0, 2.0, 1.0]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn counting_mirrors_the_univariate_rules() {
+        let ms = two_channel();
+        assert_eq!(ms.dims(), 2);
+        assert_eq!(ms.n_total(), 4);
+        assert_eq!(ms.num_sequences(2), 3);
+        assert_eq!(ms.num_sequences(5), 0);
+        assert_eq!(ms.channel(1).points, vec![4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(ms.channel_names(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn construction_rejects_bad_shapes() {
+        assert!(MultiSeries::new("m", vec![]).is_err(), "no channels");
+        let err = MultiSeries::new(
+            "m",
+            vec![
+                TimeSeries::new("a", vec![1.0, 2.0]),
+                TimeSeries::new("b", vec![1.0]),
+            ],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("`b`"), "{err}");
+        let err = MultiSeries::new(
+            "m",
+            vec![
+                TimeSeries::new("a", vec![1.0]),
+                TimeSeries::new("a", vec![2.0]),
+            ],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("duplicate channel name `a`"), "{err}");
+    }
+
+    #[test]
+    fn selection_resolves_sorted_and_strict() {
+        let ms = two_channel();
+        assert_eq!(ms.select(&[]).unwrap(), vec![0, 1], "empty = all");
+        // order-independent: the resolved indexes come back ascending
+        let sel = ms.select(&["b".into(), "a".into()]).unwrap();
+        assert_eq!(sel, vec![0, 1]);
+        assert_eq!(ms.select(&["b".into()]).unwrap(), vec![1]);
+        let err = ms.select(&["c".into()]).unwrap_err().to_string();
+        assert!(err.contains("unknown channel `c`"), "{err}");
+        assert!(err.contains("a, b"), "{err}");
+        let err = ms
+            .select(&["a".into(), "a".into()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate channel `a`"), "{err}");
+    }
+
+    #[test]
+    fn univariate_wrapper_is_one_channel() {
+        let ms = MultiSeries::from_univariate(TimeSeries::new("u", vec![1.0, 2.0]));
+        assert_eq!(ms.dims(), 1);
+        assert_eq!(ms.name, "u");
+        assert_eq!(ms.index_of("u"), Some(0));
+        assert_eq!(ms.index_of("x"), None);
+    }
+}

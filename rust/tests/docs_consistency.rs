@@ -6,6 +6,7 @@
 use std::path::Path;
 
 use hstime::algo::{self, ALL_ENGINES};
+use hstime::mdim::{self, MdimAlgorithm as _, MDIM_ENGINES};
 use hstime::service::server::COMMANDS;
 
 fn repo_file(rel: &str) -> String {
@@ -78,6 +79,51 @@ fn readme_has_no_hardcoded_engine_count() {
             !readme.contains(word),
             "README hardcodes an engine count ({word:?}); keep counts \
              derived from the table"
+        );
+    }
+}
+
+#[test]
+fn mdim_engines_flow_into_every_registry_and_doc() {
+    // Both directions between the two registries: every mdim engine has a
+    // univariate face in ALL_ENGINES (so the README Engines table check
+    // above picks it up automatically), and every `*-md` id in
+    // ALL_ENGINES resolves through mdim::by_name — an engine added to one
+    // registry but not the other fails here, not in production.
+    for id in MDIM_ENGINES {
+        assert!(
+            ALL_ENGINES.contains(&id),
+            "mdim engine `{id}` is missing from algo::ALL_ENGINES"
+        );
+        assert!(
+            algo::by_name(id).is_some(),
+            "mdim engine `{id}` lacks a univariate algo::by_name face"
+        );
+        assert_eq!(mdim::by_name(id).unwrap().name(), id);
+    }
+    for id in ALL_ENGINES {
+        if id.ends_with("-md") {
+            assert!(
+                MDIM_ENGINES.contains(&id),
+                "`{id}` is named like an mdim engine but is not in \
+                 MDIM_ENGINES"
+            );
+        }
+    }
+    // The README documents the workload (its Engines table rows are
+    // asserted by readme_engines_table_matches_the_registry above).
+    let readme = repo_file("README.md");
+    assert!(
+        readme.contains("## Multivariate search"),
+        "README must keep its `## Multivariate search` section"
+    );
+    // The protocol doc's `### mdim` section is asserted via COMMANDS;
+    // the job-kind must also name both engines so a reader can run them.
+    let proto = repo_file("docs/PROTOCOL.md");
+    for id in MDIM_ENGINES {
+        assert!(
+            proto.contains(id),
+            "docs/PROTOCOL.md must mention the `{id}` engine"
         );
     }
 }

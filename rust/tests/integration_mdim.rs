@@ -1,0 +1,250 @@
+//! Integration tests for the multivariate (mdim) subsystem: the
+//! acceptance property (`hst-md` ≡ `brute-md` bitwise at every thread
+//! count, with strictly fewer calls), warm-context reuse across the
+//! univariate/multivariate boundary, run controls, and the univariate
+//! engine faces.
+
+use hstime::algo::{self, Algorithm};
+use hstime::config::SearchParams;
+use hstime::context::{CancellationToken, SearchContext};
+use hstime::mdim::{self, MdimAlgorithm, MdimContext, MdimParams};
+use hstime::prop_assert;
+use hstime::ts::generators;
+use hstime::ts::MultiSeries;
+use hstime::util::proptest::{check, Gen};
+
+/// A random correlated multivariate series with 2–4 channels.
+fn random_multi(g: &mut Gen, s: usize) -> MultiSeries {
+    let d = g.size(2, 4);
+    let n = s * g.size(6, 10);
+    generators::correlated_channels(n, d, s, g.rng.next_u64())
+}
+
+/// A random non-empty channel subset, by name.
+fn random_subset(g: &mut Gen, ms: &MultiSeries) -> Vec<String> {
+    let d = ms.dims();
+    let mut subset: Vec<String> = (0..d)
+        .filter(|_| g.rng.below(2) == 0)
+        .map(|c| ms.channel(c).name.clone())
+        .collect();
+    if subset.is_empty() {
+        subset.push(ms.channel(g.rng.below(d)).name.clone());
+    }
+    subset
+}
+
+/// Acceptance property: on random `MultiSeries` (2–4 channels) and
+/// random channel subsets, `hst-md` discord positions and aggregate
+/// distances are bit-identical to `brute-md` at t ∈ {1, 2, 4}, with
+/// strictly fewer distance calls than `brute-md` on every case.
+#[test]
+fn prop_mdim_hst_matches_brute_bitwise() {
+    check("hst-md==brute-md", 29, 6, |g| {
+        let s = *g.choose(&[32usize, 48, 64]);
+        let ms = random_multi(g, s);
+        let subset = random_subset(g, &ms);
+        let k = g.size(1, 2);
+        let params = MdimParams::new(
+            SearchParams::new(s, 4, 4)
+                .with_discords(k)
+                .with_seed(g.rng.next_u64()),
+        )
+        .with_channels(subset.clone());
+
+        let exact = mdim::brute::BruteMd.run_multi(&ms, &params).unwrap();
+        for threads in [1usize, 2, 4] {
+            let fast = mdim::hst::HstMd { threads }
+                .run_multi(&ms, &params)
+                .unwrap();
+            prop_assert!(
+                fast.discords.len() == exact.discords.len(),
+                "count {} vs {} (t={threads}, subset {subset:?}, {})",
+                fast.discords.len(),
+                exact.discords.len(),
+                ms.name
+            );
+            for (a, b) in fast.discords.iter().zip(&exact.discords) {
+                prop_assert!(
+                    a.position == b.position,
+                    "position {} vs {} (t={threads}, subset {subset:?}, \
+                     s={s}, k={k}, {})",
+                    a.position,
+                    b.position,
+                    ms.name
+                );
+                prop_assert!(
+                    a.nnd.to_bits() == b.nnd.to_bits(),
+                    "aggregate nnd {} vs {} not bit-identical (t={threads}, \
+                     subset {subset:?}, {})",
+                    a.nnd,
+                    b.nnd,
+                    ms.name
+                );
+            }
+            prop_assert!(
+                fast.distance_calls < exact.distance_calls,
+                "calls {} !< brute {} (t={threads}, subset {subset:?}, {})",
+                fast.distance_calls,
+                exact.distance_calls,
+                ms.name
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn warm_profiles_cross_the_univariate_boundary_single_channel() {
+    // univariate hst warms the channel context; a single-channel hst-md
+    // search on the same MdimContext starts from that profile — and the
+    // other direction too (the aggregate over one channel is the Eq. 2
+    // distance bit for bit)
+    let ms = generators::correlated_channels(1_200, 2, 64, 11);
+    let base = SearchParams::new(64, 4, 4);
+    let ctx = MdimContext::builder(&ms).build();
+
+    let uni_cold = algo::hst::HstSearch::default()
+        .run_ctx(ctx.channel_ctx(0), &base)
+        .unwrap();
+    assert!(uni_cold.prep_calls > 0, "cold univariate run pays warm-up");
+    let md_params =
+        MdimParams::new(base.clone()).with_channels(["c0"]);
+    let md_warm = mdim::hst::HstMd::default().run_md(&ctx, &md_params).unwrap();
+    assert_eq!(md_warm.discords[0].position, uni_cold.discords[0].position);
+    assert_eq!(
+        md_warm.discords[0].nnd.to_bits(),
+        uni_cold.discords[0].nnd.to_bits(),
+        "one-channel aggregate must equal the univariate nnd bitwise"
+    );
+
+    // and back: the mdim run refined the shared profile, so a second
+    // univariate run is still served warm (no preparation calls)
+    let uni_warm = algo::hst::HstSearch::default()
+        .run_ctx(ctx.channel_ctx(0), &base)
+        .unwrap();
+    assert_eq!(uni_warm.prep_calls, 0, "profile survived the mdim run");
+    assert_eq!(uni_warm.discords[0].position, uni_cold.discords[0].position);
+}
+
+#[test]
+fn univariate_faces_warm_and_are_warmed_by_the_callers_context() {
+    // the univariate Algorithm faces must not discard the caller's
+    // SearchContext: prepared state flows in, the refined profile flows
+    // back out — so e.g. the service context LRU keeps helping *-md jobs
+    let ts = hstime::ts::TimeSeries::new(
+        "u",
+        generators::sine_with_noise(1_500, 0.3, 9),
+    );
+    let base = SearchParams::new(64, 4, 4).with_threads(1);
+    let ctx = SearchContext::builder(&ts).build();
+
+    // cold hst-md through the context leaves a warm profile behind …
+    let first = algo::by_name("hst-md")
+        .unwrap()
+        .run_ctx(&ctx, &base)
+        .unwrap();
+    assert!(
+        ctx.warm_profile(
+            64,
+            base.distance_kind(),
+            base.allow_self_match
+        )
+        .is_some(),
+        "the refined profile must flow back into the caller's context"
+    );
+    // … which serves a following univariate hst run with zero
+    // preparation calls, and serves a repeated hst-md run no worse
+    let uni = algo::hst::HstSearch::default().run_ctx(&ctx, &base).unwrap();
+    assert_eq!(uni.prep_calls, 0, "hst must start from hst-md's profile");
+    assert_eq!(uni.discords[0].position, first.discords[0].position);
+    let second = algo::by_name("hst-md")
+        .unwrap()
+        .run_ctx(&ctx, &base)
+        .unwrap();
+    assert!(second.distance_calls <= first.distance_calls);
+    assert_eq!(second.discords[0].position, first.discords[0].position);
+    assert_eq!(
+        second.discords[0].nnd.to_bits(),
+        first.discords[0].nnd.to_bits()
+    );
+}
+
+#[test]
+fn mdim_engines_resolve_through_both_registries() {
+    for id in mdim::MDIM_ENGINES {
+        let m = mdim::by_name(id).unwrap();
+        assert_eq!(m.name(), id);
+        let a = algo::by_name(id).expect("univariate face registered");
+        assert_eq!(a.name(), id);
+        assert!(
+            algo::ALL_ENGINES.contains(&id),
+            "{id} must be in ALL_ENGINES"
+        );
+    }
+    // and the reverse direction: every *-md engine in the univariate
+    // registry is a registered mdim engine
+    for id in algo::ALL_ENGINES {
+        if id.ends_with("-md") {
+            assert!(
+                mdim::by_name(id).is_some(),
+                "{id} looks multivariate but lacks an mdim registration"
+            );
+        }
+    }
+}
+
+#[test]
+fn univariate_faces_honor_context_run_controls() {
+    let ts = hstime::ts::TimeSeries::new(
+        "u",
+        generators::sine_with_noise(1_000, 0.3, 5),
+    );
+    let token = CancellationToken::new();
+    token.cancel();
+    let ctx = SearchContext::builder(&ts).cancel_token(token).build();
+    for id in mdim::MDIM_ENGINES {
+        let engine = algo::by_name(id).unwrap();
+        let err = engine
+            .run_ctx(&ctx, &SearchParams::new(64, 4, 4))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cancelled"), "{id}: {err}");
+    }
+    let ctx = SearchContext::builder(&ts).distance_budget(3).build();
+    let err = algo::by_name("brute-md")
+        .unwrap()
+        .run_ctx(&ctx, &SearchParams::new(64, 4, 4))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("budget"), "{err}");
+}
+
+#[test]
+fn aggregate_beats_every_single_channel_on_the_joint_anomaly() {
+    // the scenario the subsystem exists for: each channel's decoy hides
+    // the joint anomaly univariately; the 3-channel aggregate surfaces it
+    let s = 96;
+    let n = 4_200;
+    let ms = generators::correlated_channels(n, 3, s, 19);
+    let (q, alen) = generators::correlated_anomaly_span(n, s);
+    let params = MdimParams::new(SearchParams::new(s, 4, 4));
+    let joint = mdim::hst::HstMd::default().run_multi(&ms, &params).unwrap();
+    let pos = joint.discords[0].position;
+    assert!(
+        pos + s > q && pos < q + alen + s,
+        "aggregate discord at {pos} must overlap the joint anomaly [{q}, {})",
+        q + alen
+    );
+    for c in 0..3 {
+        let uni = algo::hst::HstSearch::default()
+            .run(ms.channel(c), &SearchParams::new(s, 4, 4))
+            .unwrap();
+        let upos = uni.discords[0].position;
+        assert!(
+            upos + s <= q || upos >= q + alen,
+            "channel {c}: univariate discord at {upos} should be the decoy, \
+             not the joint anomaly at [{q}, {})",
+            q + alen
+        );
+    }
+}

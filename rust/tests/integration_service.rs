@@ -404,6 +404,84 @@ fn stream_requests_validate_their_fields() {
 }
 
 #[test]
+fn mdim_job_kind_over_tcp() {
+    let (addr, handle) = start_server(2, 8);
+    let mut client = Client::connect(addr).unwrap();
+    // submit a multivariate job; status/wait work on its id unchanged
+    let req = Json::obj()
+        .set("cmd", "mdim")
+        .set("dataset", "synthetic-md:channels=3,n=1200,len=64,seed=2")
+        .set("algo", "hst-md")
+        .set(
+            "params",
+            Json::obj().set("s", 64u64).set("k", 1u64).set(
+                "channels",
+                vec![Json::from("c0"), Json::from("c2")],
+            ),
+        );
+    let job = client.submit(req).unwrap();
+    let reply = client.wait(job).unwrap();
+    assert_eq!(reply.get("state").unwrap().as_str(), Some("done"));
+    let report = reply.get("report").unwrap();
+    assert_eq!(report.get("algo").unwrap().as_str(), Some("hst-md"));
+    assert_eq!(report.get("dims").unwrap().as_u64(), Some(3));
+    let chans = report.get("channels").unwrap().as_arr().unwrap();
+    assert_eq!(chans.len(), 2, "aggregate restricted to the selection");
+    assert_eq!(chans[0].as_str(), Some("c0"));
+    assert_eq!(chans[1].as_str(), Some("c2"));
+    assert!(report.get("cps_per_channel").unwrap().as_f64().unwrap() > 0.0);
+    assert!(!report
+        .get("discords")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .is_empty());
+
+    // strict unknown-field rejection, top level and inside params
+    let bad = Json::obj()
+        .set("cmd", "mdim")
+        .set("dataset", "synthetic-md:")
+        .set("chanels", vec![Json::from("c0")])
+        .set("params", Json::obj().set("s", 64u64));
+    let reply = client.call(&bad).unwrap();
+    assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false));
+    assert!(reply
+        .get("error")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("`chanels`"));
+    let bad = Json::obj()
+        .set("cmd", "mdim")
+        .set("dataset", "synthetic-md:")
+        .set("params", Json::obj().set("s", 64u64).set("chnnels", 3u64));
+    let reply = client.call(&bad).unwrap();
+    assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false));
+    assert!(reply
+        .get("error")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("`chnnels`"));
+
+    // a bad dataset spec fails the job (submit-time accept, run-time fail)
+    let req = Json::obj()
+        .set("cmd", "mdim")
+        .set("dataset", "synthetic-md:chanels=2")
+        .set("params", Json::obj().set("s", 64u64));
+    let job = client.submit(req).unwrap();
+    let reply = client.wait(job).unwrap();
+    assert_eq!(reply.get("state").unwrap().as_str(), Some("failed"));
+    assert!(reply
+        .get("error")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .contains("`chanels`"));
+    stop_server(addr, handle);
+}
+
+#[test]
 fn unknown_and_misspelled_fields_fail_loudly() {
     let (addr, handle) = start_server(1, 8);
     let mut client = Client::connect(addr).unwrap();
