@@ -43,5 +43,16 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --features pjrt
 step "all bench targets compile (cargo bench --no-run gates every [[bench]])"
 cargo bench --no-run
 
+step "bench trajectory: quick sweep emits schema-valid JSON"
+BENCH_SMOKE="$(mktemp /tmp/hst_bench_smoke.XXXXXX.json)"
+trap 'rm -f "$BENCH_SMOKE"' EXIT
+cargo run -q --release --bin hst -- bench --quick --json "$BENCH_SMOKE"
+cargo run -q --release --bin hst -- bench --check "$BENCH_SMOKE"
+
+step "bench trajectory: committed BENCH_*.json files stay schema-valid"
+for f in BENCH_*.json; do
+    cargo run -q --release --bin hst -- bench --check "$f"
+done
+
 echo
 echo "verify: all gates passed"

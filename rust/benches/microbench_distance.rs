@@ -4,7 +4,7 @@
 //! the §Perf log in EXPERIMENTS.md tracks.
 
 use hstime::bench::harness::{bench_fn, black_box, fmt_secs};
-use hstime::dist::{CountingDistance, DistanceKind};
+use hstime::dist::{CountingDistance, DistanceKind, Kernel};
 use hstime::prelude::*;
 use hstime::sax::SaxIndex;
 use hstime::ts::SeqStats;
@@ -13,37 +13,57 @@ fn main() {
     let n = 60_000;
     let ts = generators::ecg_like(n, 260, 3, 1).into_series("bench-ecg");
 
-    println!("== scalar distance (per call, s sweep) ==");
+    println!("== distance kernels (per call, s sweep, scalar vs simd) ==");
     for s in [128usize, 300, 512, 1024] {
         let stats = SeqStats::compute(&ts, s);
-        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
         let pairs: Vec<(usize, usize)> = (0..512)
             .map(|t| (t * 97 % (n - s - 1), (t * 131 + 7 * s) % (n - s - 1)))
             .filter(|(a, b)| a.abs_diff(*b) >= s)
             .collect();
-        let r = bench_fn(&format!("znorm_dist s={s} x{}", pairs.len()), 3, 20, || {
-            let mut acc = 0.0;
-            for &(i, j) in &pairs {
-                acc += dist.dist(i, j);
+        let mut checksum = None;
+        for kernel in [Kernel::Scalar, Kernel::Simd] {
+            let dist =
+                CountingDistance::with_kernel(&ts, &stats, DistanceKind::Znorm, kernel);
+            let name = kernel.name();
+            let r = bench_fn(
+                &format!("znorm_dist[{name}] s={s} x{}", pairs.len()),
+                3,
+                20,
+                || {
+                    let mut acc = 0.0;
+                    for &(i, j) in &pairs {
+                        acc += dist.dist(i, j);
+                    }
+                    black_box(acc)
+                },
+            );
+            let per_call = r.mean_secs() / pairs.len() as f64;
+            println!("{}   -> {} per call", r.report_line(), fmt_secs(per_call));
+            // the bit-identity contract, re-asserted on bench inputs
+            let sum: f64 = pairs.iter().map(|&(i, j)| dist.dist(i, j)).sum();
+            match checksum {
+                None => checksum = Some(sum.to_bits()),
+                Some(bits) => assert_eq!(
+                    bits,
+                    sum.to_bits(),
+                    "kernels diverged on the bench pair set (s={s})"
+                ),
             }
-            black_box(acc)
-        });
-        let per_call = r.mean_secs() / pairs.len() as f64;
-        println!("{}   -> {} per call", r.report_line(), fmt_secs(per_call));
 
-        let r = bench_fn(
-            &format!("znorm_dist_early s={s} cutoff=1.0"),
-            3,
-            20,
-            || {
-                let mut acc = 0.0;
-                for &(i, j) in &pairs {
-                    acc += dist.dist_early(i, j, 1.0);
-                }
-                black_box(acc)
-            },
-        );
-        println!("{}", r.report_line());
+            let r = bench_fn(
+                &format!("znorm_dist_early[{name}] s={s} cutoff=1.0"),
+                3,
+                20,
+                || {
+                    let mut acc = 0.0;
+                    for &(i, j) in &pairs {
+                        acc += dist.dist_early(i, j, 1.0);
+                    }
+                    black_box(acc)
+                },
+            );
+            println!("{}", r.report_line());
+        }
     }
 
     println!("\n== substrate phases (N = {n}, s = 300) ==");

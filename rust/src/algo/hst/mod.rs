@@ -304,7 +304,12 @@ impl HstSearch {
         let kind = params.distance_kind();
         let (stats, idx) = ctx.prepared(&params.sax);
         let dist: Box<dyn Distance + '_> = if scalar_only {
-            Box::new(CountingDistance::new(ctx.series(), &stats, kind))
+            Box::new(CountingDistance::with_kernel(
+                ctx.series(),
+                &stats,
+                kind,
+                ctx.kernel(),
+            ))
         } else {
             ctx.distance(&stats, kind)
         };

@@ -129,7 +129,8 @@ impl HstPar {
 
         // Phase 1 — seed: minimize the top candidate serially on the
         // master profile (serial HST's first outer step verbatim).
-        let seed_dist = CountingDistance::new(ts, stats, kind);
+        let kernel = ctx.kernel();
+        let seed_dist = CountingDistance::with_kernel(ts, stats, kind, kernel);
         let lead_ok =
             minimize(lead, &seed_dist, idx, &scan, profile, &0.0f64, s, allow);
         topology::long_range_forw(lead, &seed_dist, profile, 0.0, n, s, allow);
@@ -151,7 +152,8 @@ impl HstPar {
 
             let outcomes: Vec<WorkerOutcome> =
                 crate::exec::scope_workers(threads, |_w| {
-                    let dist = CountingDistance::new(ts, stats, kind);
+                    let dist =
+                        CountingDistance::with_kernel(ts, stats, kind, kernel);
                     let mut local = master.clone();
                     let mut winners: Vec<(usize, f64)> = Vec::new();
                     let mut reported = 0u64;
@@ -271,8 +273,14 @@ impl Algorithm for HstPar {
         {
             Some(p) if p.len() == n => p,
             _ => {
-                let (p, calls) =
-                    par_warmup_profile(ts, stats, &idx, params, threads);
+                let (p, calls) = par_warmup_profile(
+                    ts,
+                    stats,
+                    &idx,
+                    params,
+                    threads,
+                    ctx.kernel(),
+                );
                 prep_calls = calls;
                 p
             }

@@ -26,7 +26,7 @@ use anyhow::{ensure, Result};
 use crate::config::SearchParams;
 use crate::context::SearchContext;
 use crate::discord::NndProfile;
-use crate::dist::{CountingDistance, DistanceKind};
+use crate::dist::{CountingDistance, DistanceKind, Kernel};
 use crate::exec::{scope_workers, ExecPolicy};
 use crate::sax::SaxIndex;
 use crate::ts::{SeqStats, TimeSeries};
@@ -140,12 +140,15 @@ impl Algorithm for ParallelScamp {
 /// Parallel HST initialization: split the shuffled cluster chain into
 /// `threads` contiguous segments, run the warm-up links and the
 /// short-range sweeps per segment, and merge. Returns (profile, calls).
+/// Every worker session runs on `kernel` (callers pass their context's
+/// choice through so the whole search uses one inner loop).
 pub fn par_warmup_profile(
     ts: &TimeSeries,
     stats: &SeqStats,
     idx: &SaxIndex,
     params: &SearchParams,
     threads: usize,
+    kernel: Kernel,
 ) -> (NndProfile, u64) {
     let s = params.sax.s;
     let n = idx.len();
@@ -173,7 +176,7 @@ pub fn par_warmup_profile(
         let lo = (w * seg).min(n);
         // overlap by one so the link crossing the boundary is computed
         let hi = ((w + 1) * seg + 1).min(n);
-        let dist = CountingDistance::new(ts, stats, kind);
+        let dist = CountingDistance::with_kernel(ts, stats, kind, kernel);
         let mut profile = NndProfile::new(n);
         for t in lo..hi.saturating_sub(1) {
             let (a, b) = (chain[t], chain[t + 1]);
@@ -193,7 +196,7 @@ pub fn par_warmup_profile(
     }
 
     // short-range topology stays serial (it chains through the profile)
-    let dist = CountingDistance::new(ts, stats, kind);
+    let dist = CountingDistance::with_kernel(ts, stats, kind, kernel);
     crate::algo::hst::topology::short_range(&dist, &mut merged, n, s, allow);
     (merged, calls + dist.calls())
 }
@@ -244,7 +247,8 @@ mod tests {
         let stats = SeqStats::compute(&ts, s);
         let params = SearchParams::new(s, 4, 4);
         let idx = SaxIndex::build(&ts, &stats, &params.sax);
-        let (profile, calls) = par_warmup_profile(&ts, &stats, &idx, &params, 4);
+        let (profile, calls) =
+            par_warmup_profile(&ts, &stats, &idx, &params, 4, Kernel::active());
         // cost stays ~2 calls/sequence (+ thread-boundary overlaps)
         assert!(calls <= 3 * idx.len() as u64 + 8);
         let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);

@@ -1,6 +1,12 @@
 //! Micro-benchmark harness (the offline registry has no criterion, so the
-//! crate ships its own: warmup, timed iterations, summary statistics).
+//! crate ships its own: warmup, timed iterations, summary statistics) and
+//! the machine-readable performance trajectory behind `hst bench`.
 
 pub mod harness;
+pub mod trajectory;
 
 pub use harness::{bench_fn, BenchResult};
+pub use trajectory::{
+    diff, run_trajectory, run_trajectory_filtered, trajectory_json, validate,
+    BenchRecord, TrajectoryMeta, TRAJECTORY_SCHEMA,
+};

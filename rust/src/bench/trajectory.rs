@@ -1,0 +1,492 @@
+//! Machine-readable performance trajectory (`hst bench`).
+//!
+//! The paper's evaluation is a set of one-off tables; this module makes
+//! performance a *tracked artifact* instead: one `BENCH_<pr>.json` per
+//! PR, with one record per (engine, fixture) pair, so any two points of
+//! the repo's history can be diffed mechanically
+//! (`hst bench --diff OLD.json NEW.json`).
+//!
+//! Schema (`hst-bench-trajectory/1`):
+//!
+//! ```json
+//! {
+//!   "schema": "hst-bench-trajectory/1",
+//!   "meta": { "tier": "quick", "scale_div": 8, "runs": 2, "seed": 7,
+//!             "threads": 0, "kernel": "simd", "provenance": "measured" },
+//!   "records": [
+//!     { "engine": "hst", "table": "ECG 0606", "n": 480, "s": 120,
+//!       "calls": 1234, "cps": 3.4, "prep_calls": 720, "wall_ms": 1.9 }
+//!   ]
+//! }
+//! ```
+//!
+//! Per record: `engine` ∈ [`ALL_ENGINES`], `table` names the registry
+//! fixture, `n` is the materialized series length in points, `s` the
+//! sequence length, `calls`/`prep_calls` the seed-averaged distance-call
+//! accounting, `cps` the paper's cost per sequence, `wall_ms` the
+//! seed-averaged wall clock. Fixtures are the Tables 1/3/6 registry
+//! datasets materialized at a **bounded** length (the quadratic baselines
+//! `brute`/`brute-md`/`scamp` must stay tractable in one sweep) — the
+//! paper-scale runs stay the job of `hst table`. Fixture sizes are pinned
+//! by (tier, `scale_div`), so records from two PRs at the same
+//! configuration compare like with like; [`diff`] refuses mismatched `n`.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::algo::{self, Algorithm, SearchReport, ALL_ENGINES};
+use crate::config::SearchParams;
+use crate::context::SearchContext;
+use crate::dist::Kernel;
+use crate::metrics::cps;
+use crate::tables::BenchConfig;
+use crate::ts::datasets::registry;
+use crate::ts::TimeSeries;
+use crate::util::json::Json;
+
+/// Schema id stamped into (and required of) every trajectory file.
+pub const TRAJECTORY_SCHEMA: &str = "hst-bench-trajectory/1";
+
+/// Fixture subset + length cap of the `--quick` CI tier: the three
+/// small-`s` registry datasets, a few hundred points each — the full
+/// 13-engine sweep finishes in CI-smoke time.
+const QUICK_FIXTURES: [&str; 3] = ["ECG 0606", "NPRS 43", "Shuttle TEK 14"];
+const QUICK_CAP: usize = 600;
+/// Length cap of the standard tier (all registry fixtures).
+const STANDARD_CAP: usize = 6_000;
+
+/// One measured (engine, fixture) cell of the trajectory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    /// Engine id (∈ [`ALL_ENGINES`]).
+    pub engine: String,
+    /// Fixture id (the registry dataset name).
+    pub table: String,
+    /// Materialized series length in points.
+    pub n: usize,
+    /// Sequence (discord) length.
+    pub s: usize,
+    /// Seed-averaged distance calls (the paper's cost metric).
+    pub calls: u64,
+    /// Cost per sequence: `calls / (num_sequences · k)`.
+    pub cps: f64,
+    /// Seed-averaged distance calls spent on preparation.
+    pub prep_calls: u64,
+    /// Seed-averaged wall clock in milliseconds.
+    pub wall_ms: f64,
+}
+
+impl BenchRecord {
+    /// Serialize one record (all eight schema keys).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("engine", self.engine.as_str())
+            .set("table", self.table.as_str())
+            .set("n", self.n)
+            .set("s", self.s)
+            .set("calls", self.calls)
+            .set("cps", self.cps)
+            .set("prep_calls", self.prep_calls)
+            .set("wall_ms", self.wall_ms)
+    }
+
+    /// Parse and validate one record (see [`validate`] for the rules).
+    pub fn from_json(j: &Json) -> Result<BenchRecord> {
+        let field = |k: &str| j.get(k).ok_or_else(|| anyhow!("record missing key {k:?}"));
+        let engine = field("engine")?
+            .as_str()
+            .ok_or_else(|| anyhow!("engine must be a string"))?
+            .to_string();
+        ensure!(
+            ALL_ENGINES.contains(&engine.as_str()),
+            "unknown engine id {engine:?} (not in ALL_ENGINES)"
+        );
+        let table = field("table")?
+            .as_str()
+            .ok_or_else(|| anyhow!("table must be a string"))?
+            .to_string();
+        let u = |k: &str| -> Result<u64> {
+            field(k)?
+                .as_u64()
+                .ok_or_else(|| anyhow!("{k} must be a non-negative integer"))
+        };
+        let f = |k: &str| -> Result<f64> {
+            field(k)?
+                .as_f64()
+                .ok_or_else(|| anyhow!("{k} must be a number"))
+        };
+        let rec = BenchRecord {
+            engine,
+            table,
+            n: u("n")? as usize,
+            s: u("s")? as usize,
+            calls: u("calls")?,
+            cps: f("cps")?,
+            prep_calls: u("prep_calls")?,
+            wall_ms: f("wall_ms")?,
+        };
+        ensure!(rec.n > 0 && rec.s > 0, "n and s must be positive");
+        ensure!(rec.cps > 0.0, "cps must be > 0 (got {})", rec.cps);
+        ensure!(rec.calls > 0, "calls must be > 0");
+        ensure!(rec.wall_ms >= 0.0, "wall_ms must be >= 0");
+        Ok(rec)
+    }
+}
+
+/// Run metadata stamped into the file so two trajectories are only
+/// compared when they measured the same thing.
+#[derive(Debug, Clone)]
+pub struct TrajectoryMeta {
+    /// `"quick"` / `"standard"` / `"full"`.
+    pub tier: String,
+    /// The [`BenchConfig`] the sweep ran with.
+    pub scale_div: usize,
+    /// Seeds averaged per cell.
+    pub runs: usize,
+    /// Base seed.
+    pub seed: u64,
+    /// Worker-thread setting (0 = auto).
+    pub threads: usize,
+    /// Inner-loop kernel name ([`Kernel::name`]).
+    pub kernel: String,
+    /// `"measured"` when emitted by `hst bench`; anything else marks a
+    /// hand-authored file (e.g. an offline estimate awaiting rerun).
+    pub provenance: String,
+}
+
+impl TrajectoryMeta {
+    /// Meta for a sweep about to run.
+    pub fn measured(cfg: &BenchConfig, tier: &str, kernel: Kernel) -> TrajectoryMeta {
+        TrajectoryMeta {
+            tier: tier.to_string(),
+            scale_div: cfg.scale_div,
+            runs: cfg.runs,
+            seed: cfg.seed,
+            threads: cfg.threads,
+            kernel: kernel.name().to_string(),
+            provenance: "measured".to_string(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("tier", self.tier.as_str())
+            .set("scale_div", self.scale_div)
+            .set("runs", self.runs)
+            .set("seed", self.seed)
+            .set("threads", self.threads)
+            .set("kernel", self.kernel.as_str())
+            .set("provenance", self.provenance.as_str())
+    }
+}
+
+/// Assemble the full trajectory document.
+pub fn trajectory_json(meta: &TrajectoryMeta, records: &[BenchRecord]) -> Json {
+    Json::obj()
+        .set("schema", TRAJECTORY_SCHEMA)
+        .set("meta", meta.to_json())
+        .set(
+            "records",
+            records.iter().map(|r| r.to_json()).collect::<Vec<_>>(),
+        )
+}
+
+/// Validate a trajectory document against the schema: the schema id, a
+/// `records` array, and per record all eight keys present, the engine id
+/// in [`ALL_ENGINES`], `cps > 0`, `calls > 0`. Returns the parsed records.
+pub fn validate(doc: &Json) -> Result<Vec<BenchRecord>> {
+    let schema = doc
+        .get("schema")
+        .and_then(|s| s.as_str())
+        .ok_or_else(|| anyhow!("missing schema key"))?;
+    ensure!(
+        schema == TRAJECTORY_SCHEMA,
+        "schema {schema:?}, expected {TRAJECTORY_SCHEMA:?}"
+    );
+    ensure!(doc.get("meta").is_some(), "missing meta object");
+    let records = doc
+        .get("records")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| anyhow!("missing records array"))?;
+    ensure!(!records.is_empty(), "records array is empty");
+    records
+        .iter()
+        .enumerate()
+        .map(|(i, r)| BenchRecord::from_json(r).with_context(|| format!("record {i}")))
+        .collect()
+}
+
+/// One fixture of the sweep.
+struct Fixture {
+    name: String,
+    ts: TimeSeries,
+    params: SearchParams,
+}
+
+/// Materialize the tier's fixtures: registry datasets at
+/// `paper_len / scale_div`, clamped to `[4·s, cap]` (the floor keeps
+/// every engine's `n >= 2` precondition; the cap keeps the quadratic
+/// baselines tractable — `hst table --full` remains the paper-scale path).
+fn fixtures(cfg: &BenchConfig, quick: bool) -> Vec<Fixture> {
+    let cap = if quick { QUICK_CAP } else { STANDARD_CAP };
+    registry()
+        .into_iter()
+        .filter(|d| !quick || QUICK_FIXTURES.contains(&d.name))
+        .map(|d| {
+            let floor = 4 * d.s;
+            let n = (d.paper_len / cfg.scale_div.max(1)).clamp(floor, cap.max(floor));
+            Fixture {
+                name: d.name.to_string(),
+                ts: d.generate_len(n),
+                params: SearchParams::new(d.s, d.p, d.alphabet)
+                    .with_discords(1)
+                    .with_threads(cfg.threads),
+            }
+        })
+        .collect()
+}
+
+/// One engine run on a cold, kernel-pinned context. `dadd` needs its
+/// defining range `r` up front, so it is calibrated from an HST run on a
+/// *separate* context (its calls are excluded from the record, exactly as
+/// the paper excludes the exact-nnd precomputation from the Table 7
+/// timings).
+fn run_engine(
+    engine: &str,
+    ts: &TimeSeries,
+    params: &SearchParams,
+    kernel: Kernel,
+) -> Result<SearchReport> {
+    let ctx = SearchContext::builder(ts).kernel(kernel).build();
+    if engine == "dadd" {
+        let cal_ctx = SearchContext::builder(ts).kernel(kernel).build();
+        let hst = algo::hst::HstSearch::default().run_ctx(&cal_ctx, params)?;
+        let top = hst
+            .discords
+            .last()
+            .ok_or_else(|| anyhow!("no discord to calibrate dadd's r from"))?;
+        let dadd = algo::dadd::Dadd {
+            // strict: keep the k-th discord >= r (Table 7's 0.99·exact arm)
+            r: top.nnd * 0.99 * 0.999_999,
+            page_size: 10_000,
+        };
+        return dadd.run_ctx(&ctx, params);
+    }
+    let eng = algo::by_name(engine).ok_or_else(|| anyhow!("unknown engine {engine:?}"))?;
+    eng.run_ctx(&ctx, params)
+}
+
+/// Sweep `engines` over the tier's fixtures: every cell is `cfg.runs`
+/// cold runs (fresh context each — no warm-profile carry-over between
+/// engines) with distinct seeds, averaged. Pass [`ALL_ENGINES`] for the
+/// full trajectory.
+pub fn run_trajectory_filtered(
+    cfg: &BenchConfig,
+    quick: bool,
+    kernel: Kernel,
+    engines: &[&str],
+) -> Result<Vec<BenchRecord>> {
+    let mut records = Vec::new();
+    for fx in fixtures(cfg, quick) {
+        let n_seq = fx.ts.num_sequences(fx.params.sax.s);
+        ensure!(
+            n_seq >= 2,
+            "fixture {} too short for s={}",
+            fx.name,
+            fx.params.sax.s
+        );
+        for &engine in engines {
+            let runs = cfg.runs.max(1);
+            let (mut calls, mut prep, mut ms) = (0u128, 0u128, 0.0f64);
+            let mut k = 1usize;
+            for r in 0..runs {
+                let p = fx
+                    .params
+                    .clone()
+                    .with_seed(cfg.seed + r as u64 * 1_000_003);
+                let t0 = Instant::now();
+                let rep = run_engine(engine, &fx.ts, &p, kernel)
+                    .with_context(|| format!("{engine} on {}", fx.name))?;
+                ms += t0.elapsed().as_secs_f64() * 1e3;
+                calls += rep.distance_calls as u128;
+                prep += rep.prep_calls as u128;
+                k = rep.discords.len().max(1);
+            }
+            let mean_calls = (calls as f64 / runs as f64).round() as u64;
+            records.push(BenchRecord {
+                engine: engine.to_string(),
+                table: fx.name.clone(),
+                n: fx.ts.n_total(),
+                s: fx.params.sax.s,
+                calls: mean_calls,
+                cps: cps(mean_calls, n_seq, k),
+                prep_calls: (prep as f64 / runs as f64).round() as u64,
+                wall_ms: ms / runs as f64,
+            });
+        }
+    }
+    Ok(records)
+}
+
+/// The full trajectory: all of [`ALL_ENGINES`] over the tier's fixtures.
+pub fn run_trajectory(cfg: &BenchConfig, quick: bool, kernel: Kernel) -> Result<Vec<BenchRecord>> {
+    run_trajectory_filtered(cfg, quick, kernel, &ALL_ENGINES)
+}
+
+/// Compare two trajectories cell by cell (keyed by `(engine, table)`).
+/// Returns human-readable lines: per shared cell the calls and wall-clock
+/// ratios (new / old), plus a line for every cell present on one side
+/// only. Errors when a shared cell measured different fixture sizes —
+/// ratios across different `n` are meaningless.
+pub fn diff(old: &[BenchRecord], new: &[BenchRecord]) -> Result<Vec<String>> {
+    let key = |r: &BenchRecord| (r.engine.clone(), r.table.clone());
+    let old_map: std::collections::BTreeMap<_, _> =
+        old.iter().map(|r| (key(r), r)).collect();
+    let new_map: std::collections::BTreeMap<_, _> =
+        new.iter().map(|r| (key(r), r)).collect();
+    let mut out = Vec::new();
+    for ((engine, table), o) in &old_map {
+        match new_map.get(&(engine.clone(), table.clone())) {
+            Some(n) => {
+                if o.n != n.n || o.s != n.s {
+                    bail!(
+                        "{engine} @ {table}: fixture mismatch \
+                         (n {} vs {}, s {} vs {}) — rerun both sides at one \
+                         configuration",
+                        o.n,
+                        n.n,
+                        o.s,
+                        n.s
+                    );
+                }
+                out.push(format!(
+                    "{engine} @ {table}: calls {} -> {} (x{:.3}), \
+                     wall_ms {:.2} -> {:.2} (x{:.3})",
+                    o.calls,
+                    n.calls,
+                    n.calls as f64 / o.calls.max(1) as f64,
+                    o.wall_ms,
+                    n.wall_ms,
+                    if o.wall_ms > 0.0 { n.wall_ms / o.wall_ms } else { f64::NAN },
+                ));
+            }
+            None => out.push(format!("{engine} @ {table}: removed (old only)")),
+        }
+    }
+    for (engine, table) in new_map.keys() {
+        if !old_map.contains_key(&(engine.clone(), table.clone())) {
+            out.push(format!("{engine} @ {table}: added (new only)"));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record() -> BenchRecord {
+        BenchRecord {
+            engine: "hst".into(),
+            table: "ECG 0606".into(),
+            n: 480,
+            s: 120,
+            calls: 1_234,
+            cps: 3.4,
+            prep_calls: 720,
+            wall_ms: 1.9,
+        }
+    }
+
+    #[test]
+    fn record_roundtrips_through_json() {
+        let r = record();
+        let back = BenchRecord::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn validate_accepts_a_well_formed_document() {
+        let meta = TrajectoryMeta::measured(
+            &BenchConfig::smoke(),
+            "quick",
+            Kernel::Scalar,
+        );
+        let doc = trajectory_json(&meta, &[record()]);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let records = validate(&parsed).unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].engine, "hst");
+    }
+
+    #[test]
+    fn validate_rejects_schema_violations() {
+        let meta =
+            TrajectoryMeta::measured(&BenchConfig::smoke(), "quick", Kernel::Simd);
+        // wrong schema id
+        let doc = trajectory_json(&meta, &[record()]).set("schema", "nope/9");
+        assert!(validate(&doc).is_err());
+        // unknown engine id
+        let mut bad = record();
+        bad.engine = "warp-drive".into();
+        assert!(validate(&trajectory_json(&meta, &[bad])).is_err());
+        // cps must be positive
+        let mut bad = record();
+        bad.cps = 0.0;
+        assert!(validate(&trajectory_json(&meta, &[bad])).is_err());
+        // every schema key must be present
+        let stripped = match record().to_json() {
+            Json::Obj(mut m) => {
+                m.remove("wall_ms");
+                Json::Obj(m)
+            }
+            _ => unreachable!(),
+        };
+        let doc = Json::obj()
+            .set("schema", TRAJECTORY_SCHEMA)
+            .set("meta", meta.to_json())
+            .set("records", vec![stripped]);
+        let err = validate(&doc).unwrap_err().to_string();
+        assert!(err.contains("record 0"), "{err}");
+        // empty records
+        assert!(validate(&trajectory_json(&meta, &[])).is_err());
+    }
+
+    #[test]
+    fn diff_reports_ratios_and_refuses_mismatched_fixtures() {
+        let a = record();
+        let mut b = record();
+        b.calls = 2_468;
+        let lines = diff(&[a.clone()], &[b.clone()]).unwrap();
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].contains("x2.000"), "{}", lines[0]);
+        // one-sided cells are reported, not dropped
+        let mut c = record();
+        c.engine = "brute".into();
+        let lines = diff(&[a.clone()], &[b.clone(), c]).unwrap();
+        assert!(lines.iter().any(|l| l.contains("added")));
+        // different n must refuse
+        b.n = 960;
+        assert!(diff(&[a], &[b]).is_err());
+    }
+
+    #[test]
+    fn smoke_sweep_emits_valid_records() {
+        // a two-engine micro sweep through the real machinery; the full
+        // 13-engine sweep is the ci/verify.sh `bench --quick` smoke step
+        let cfg = BenchConfig::smoke();
+        let records =
+            run_trajectory_filtered(&cfg, true, Kernel::active(), &["hst", "hotsax"])
+                .unwrap();
+        assert_eq!(records.len(), 2 * QUICK_FIXTURES.len());
+        let meta = TrajectoryMeta::measured(&cfg, "quick", Kernel::active());
+        let doc = trajectory_json(&meta, &records);
+        let back = validate(&doc).unwrap();
+        assert_eq!(back.len(), records.len());
+        for r in &back {
+            assert!(r.cps > 0.0 && r.calls > 0, "{r:?}");
+            assert!(r.n <= QUICK_CAP);
+        }
+    }
+}

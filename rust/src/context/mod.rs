@@ -49,7 +49,7 @@ use anyhow::{ensure, Result};
 
 use crate::config::SaxParams;
 use crate::discord::{Discord, NndProfile};
-use crate::dist::{Backend, CountingDistance, Distance, DistanceKind};
+use crate::dist::{Backend, CountingDistance, Distance, DistanceKind, Kernel};
 use crate::sax::SaxIndex;
 use crate::ts::{SeqStats, TimeSeries};
 
@@ -124,6 +124,7 @@ struct ProfileKey {
 pub struct ContextBuilder {
     ts: TimeSeries,
     backend: Backend,
+    kernel: Kernel,
     cancel: CancellationToken,
     budget: Option<u64>,
     observer: Option<Arc<dyn SearchObserver>>,
@@ -137,6 +138,16 @@ impl ContextBuilder {
     /// `pjrt` feature is off or no artifacts are available.
     pub fn backend(mut self, backend: Backend) -> ContextBuilder {
         self.backend = backend;
+        self
+    }
+
+    /// Pin the scalar-backend inner-loop [`Kernel`] (default:
+    /// [`Kernel::active`], i.e. SIMD unless `HST_KERNEL=scalar`). The
+    /// kernels are bit-identical, so this is a throughput knob only; the
+    /// choice propagates to every session the context hands out —
+    /// including parallel workers and multivariate channels.
+    pub fn kernel(mut self, kernel: Kernel) -> ContextBuilder {
+        self.kernel = kernel;
         self
     }
 
@@ -176,6 +187,7 @@ impl ContextBuilder {
         let ctx = SearchContext {
             ts: self.ts,
             backend: self.backend,
+            kernel: self.kernel,
             cancel: self.cancel,
             budget: self.budget,
             observer: self.observer,
@@ -203,6 +215,7 @@ impl ContextBuilder {
 pub struct SearchContext {
     ts: TimeSeries,
     backend: Backend,
+    kernel: Kernel,
     cancel: CancellationToken,
     budget: Option<u64>,
     observer: Option<Arc<dyn SearchObserver>>,
@@ -227,6 +240,7 @@ impl SearchContext {
         ContextBuilder {
             ts,
             backend: Backend::Scalar,
+            kernel: Kernel::active(),
             cancel: CancellationToken::new(),
             budget: None,
             observer: None,
@@ -242,6 +256,11 @@ impl SearchContext {
     /// The distance backend this context selects.
     pub fn backend(&self) -> Backend {
         self.backend
+    }
+
+    /// The inner-loop [`Kernel`] sessions from this context run on.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 
     /// The per-search distance-call budget, if any.
@@ -339,7 +358,12 @@ impl SearchContext {
                 Err(_) => self.xla_unavailable.store(true, Ordering::Relaxed),
             }
         }
-        Box::new(CountingDistance::new(&self.ts, stats, kind))
+        Box::new(CountingDistance::with_kernel(
+            &self.ts,
+            stats,
+            kind,
+            self.kernel,
+        ))
     }
 
     /// Run-control checkpoint: engines call this once per outer-loop
@@ -469,6 +493,26 @@ mod tests {
         let _ = a.dist(1, 501);
         assert_eq!(a.calls(), 2);
         assert_eq!(b.calls(), 0, "sessions must not share counters");
+    }
+
+    #[test]
+    fn kernel_choice_is_carried_and_bit_neutral() {
+        let ts = series();
+        let sc = SearchContext::builder(&ts).kernel(Kernel::Scalar).build();
+        let si = SearchContext::builder(&ts).kernel(Kernel::Simd).build();
+        assert_eq!(sc.kernel(), Kernel::Scalar);
+        assert_eq!(si.kernel(), Kernel::Simd);
+        let stats_sc = sc.stats(64);
+        let stats_si = si.stats(64);
+        let a = sc.distance(&stats_sc, DistanceKind::Znorm);
+        let b = si.distance(&stats_si, DistanceKind::Znorm);
+        for (i, j) in [(0usize, 500), (7, 321), (100, 800)] {
+            assert_eq!(
+                a.dist(i, j).to_bits(),
+                b.dist(i, j).to_bits(),
+                "kernels must be bit-identical through the context seam"
+            );
+        }
     }
 
     #[test]

@@ -4,12 +4,15 @@
 //! how many times it was called, and every comparison (Tables 1–7) is a
 //! comparison of call counts. This module supplies:
 //!
-//! * [`CountingDistance`] — the scalar fallback backend, always compiled.
+//! * [`CountingDistance`] — the exact in-process backend, always compiled.
 //!   It folds z-normalization into the distance loop using the rolling
 //!   (μ, σ) of [`SeqStats`](crate::ts::SeqStats) (paper Sec. 2.1, Eq. 2),
 //!   supports early abandoning at a cutoff, and counts calls through a
 //!   `Cell` (deliberately `!Sync`: parallel engines give each worker its
 //!   own counter and sum afterwards, keeping the accounting exact).
+//! * [`Kernel`] — the inner-loop variant [`CountingDistance`] evaluates
+//!   with: the portable scalar reference loop, or the chunked 8-lane SIMD
+//!   loop (the default). See "Kernel bit-identity" below.
 //! * `xla_engine` *(requires the `pjrt` cargo feature)* — the batched
 //!   backend that evaluates distance chunks through the AOT-compiled XLA
 //!   artifacts of [`crate::runtime`].
@@ -24,11 +27,30 @@
 //! returns the exact value, bit-identical to [`CountingDistance::dist`] —
 //! the accumulation order never changes, abandoning only skips work once
 //! the partial sum already proves `d >= cutoff`.
+//!
+//! # Kernel bit-identity
+//!
+//! Both kernels use one **fixed summation order**: squared deviations are
+//! added into a single `f64` accumulator in ascending point order, and the
+//! running sum is compared against the cutoff once per
+//! [`ABANDON_CHECK_EVERY`]-point chunk. The SIMD kernel differs only in
+//! *how each chunk's squared deviations are produced*: it computes
+//! [`LANES`] deviations at a time into a stack array of lanes — a
+//! data-parallel step with no loop-carried dependency, which the
+//! autovectorizer lowers to packed `f64` arithmetic — and then drains the
+//! lane array into the accumulator in ascending lane order. That drain is
+//! the **same addition sequence** the scalar kernel performs, so completed
+//! evaluations are bit-identical; and because abandon checks happen at the
+//! same chunk boundaries over the same partial sums, abandon *decisions*,
+//! abandoned partial bounds, and call counts are identical too. No
+//! verify-on-abandon fallback is needed: there is no lane-order
+//! reassociation anywhere in the sum, by construction.
 
 #[cfg(feature = "pjrt")]
 pub mod xla_engine;
 
 use std::cell::Cell;
+use std::sync::OnceLock;
 
 use crate::ts::{SeqStats, TimeSeries};
 
@@ -64,6 +86,53 @@ pub fn active_backend() -> Backend {
         Backend::XlaPjrt
     } else {
         Backend::Scalar
+    }
+}
+
+/// Inner-loop variant of [`CountingDistance`]. The two kernels are
+/// bit-identical on every input (completed *and* abandoned evaluations —
+/// see the [module docs](self) for the fixed-summation-order argument),
+/// so the choice is purely a throughput knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kernel {
+    /// The portable scalar reference loop (the pre-SIMD kernel, kept
+    /// verbatim as the conformance baseline).
+    Scalar,
+    /// The chunked 8-lane loop: per-chunk squared deviations are computed
+    /// into a lane array the autovectorizer lowers to packed `f64` math,
+    /// then reduced in the scalar kernel's exact addition order.
+    Simd,
+}
+
+impl Kernel {
+    /// The process-wide default kernel: [`Kernel::Simd`] unless the
+    /// `HST_KERNEL` environment variable says `scalar`. Read once and
+    /// latched, so every un-pinned [`CountingDistance::new`] session in
+    /// the process agrees.
+    pub fn active() -> Kernel {
+        static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+        *ACTIVE.get_or_init(|| match std::env::var("HST_KERNEL") {
+            Ok(v) if v.eq_ignore_ascii_case("scalar") => Kernel::Scalar,
+            _ => Kernel::Simd,
+        })
+    }
+
+    /// Parse a kernel name (`scalar` / `simd`), as accepted by the CLI
+    /// `--kernel` flag and the `HST_KERNEL` environment variable.
+    pub fn from_name(name: &str) -> Option<Kernel> {
+        match name {
+            "scalar" => Some(Kernel::Scalar),
+            "simd" => Some(Kernel::Simd),
+            _ => None,
+        }
+    }
+
+    /// The canonical name ([`from_name`](Self::from_name) inverse).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Simd => "simd",
+        }
     }
 }
 
@@ -121,30 +190,118 @@ impl Distance for CountingDistance<'_> {
 
 /// Partial sums are checked against the cutoff once per this many points:
 /// often enough to abandon early, rarely enough to stay out of the way of
-/// the accumulation loop.
+/// the accumulation loop. Both kernels check at exactly these boundaries,
+/// which is what keeps their abandon decisions identical.
 const ABANDON_CHECK_EVERY: usize = 16;
 
-/// The scalar distance backend with exact call accounting.
+/// SIMD lane width of the chunked kernel (a full AVX-512 register of
+/// `f64`, two AVX2 registers — the autovectorizer splits as needed).
+const LANES: usize = 8;
+
+// The SIMD kernel assumes every abandon chunk splits into whole lane
+// groups; a remainder inside a chunk would change where the (scalar) tail
+// runs relative to the abandon check.
+const _: () = assert!(ABANDON_CHECK_EVERY % LANES == 0);
+
+/// Scalar accumulation of `Σ dev(a[t], b[t])²` with an abandon check every
+/// [`ABANDON_CHECK_EVERY`] points. This is the pre-SIMD kernel verbatim —
+/// the conformance baseline the chunked kernel is tested against.
+#[inline(always)]
+fn sum_scalar(a: &[f64], b: &[f64], limit: f64, dev: impl Fn(f64, f64) -> f64 + Copy) -> f64 {
+    let mut acc = 0.0f64;
+    for (ca, cb) in a
+        .chunks(ABANDON_CHECK_EVERY)
+        .zip(b.chunks(ABANDON_CHECK_EVERY))
+    {
+        for (&x, &y) in ca.iter().zip(cb) {
+            let d = dev(x, y);
+            acc += d * d;
+        }
+        if acc > limit {
+            return acc;
+        }
+    }
+    acc
+}
+
+/// Chunked 8-lane accumulation: per abandon chunk, squared deviations are
+/// computed [`LANES`] at a time into a stack array (no loop-carried
+/// dependency — the autovectorizer lowers this to packed `f64` multiplies)
+/// and then drained into `acc` in ascending lane order, which is exactly
+/// the scalar kernel's addition sequence. Same sums, same abandon
+/// boundaries ⇒ bit-identical results on every path.
+#[inline(always)]
+fn sum_simd(a: &[f64], b: &[f64], limit: f64, dev: impl Fn(f64, f64) -> f64 + Copy) -> f64 {
+    let mut acc = 0.0f64;
+    for (ca, cb) in a
+        .chunks(ABANDON_CHECK_EVERY)
+        .zip(b.chunks(ABANDON_CHECK_EVERY))
+    {
+        let mut la = ca.chunks_exact(LANES);
+        let mut lb = cb.chunks_exact(LANES);
+        for (ga, gb) in la.by_ref().zip(lb.by_ref()) {
+            let mut sq = [0.0f64; LANES];
+            for l in 0..LANES {
+                let d = dev(ga[l], gb[l]);
+                sq[l] = d * d;
+            }
+            // Fixed summation order: ascending lanes, one accumulator —
+            // never a pairwise/tree reduction, so bits match the scalar
+            // chain.
+            for &q in &sq {
+                acc += q;
+            }
+        }
+        // Tail of a short final chunk (< LANES points): scalar-identical.
+        for (&x, &y) in la.remainder().iter().zip(lb.remainder()) {
+            let d = dev(x, y);
+            acc += d * d;
+        }
+        if acc > limit {
+            return acc;
+        }
+    }
+    acc
+}
+
+/// The exact distance backend with per-session call accounting.
 ///
 /// Holds borrows of the series and its rolling stats; normalization is
 /// folded into the loop (`(p − μ)/σ` per point), so no normalized copies
 /// of the sequences are ever materialized — the paper's memory trick.
 /// Deliberately not `Clone`: a copied live counter would double-count
 /// calls — workers construct their own instance and sum `calls()` after.
+///
+/// The inner loop runs on a [`Kernel`]; [`new`](Self::new) picks the
+/// process default ([`Kernel::active`]), [`with_kernel`](Self::with_kernel)
+/// pins one explicitly. The kernels are bit-identical (module docs), so
+/// mixing sessions with different kernels never perturbs results.
 #[derive(Debug)]
 pub struct CountingDistance<'a> {
     ts: &'a TimeSeries,
     stats: &'a SeqStats,
     kind: DistanceKind,
+    kernel: Kernel,
     calls: Cell<u64>,
 }
 
 impl<'a> CountingDistance<'a> {
-    /// New backend over `ts` with the stats computed for the search's `s`.
+    /// New backend over `ts` with the stats computed for the search's `s`,
+    /// on the process-default [`Kernel`].
     pub fn new(
         ts: &'a TimeSeries,
         stats: &'a SeqStats,
         kind: DistanceKind,
+    ) -> CountingDistance<'a> {
+        Self::with_kernel(ts, stats, kind, Kernel::active())
+    }
+
+    /// New backend pinned to an explicit inner-loop [`Kernel`].
+    pub fn with_kernel(
+        ts: &'a TimeSeries,
+        stats: &'a SeqStats,
+        kind: DistanceKind,
+        kernel: Kernel,
     ) -> CountingDistance<'a> {
         debug_assert!(
             stats.len() <= ts.num_sequences(stats.s),
@@ -154,6 +311,7 @@ impl<'a> CountingDistance<'a> {
             ts,
             stats,
             kind,
+            kernel,
             calls: Cell::new(0),
         }
     }
@@ -161,6 +319,11 @@ impl<'a> CountingDistance<'a> {
     /// The distance variant this backend computes.
     pub fn kind(&self) -> DistanceKind {
         self.kind
+    }
+
+    /// The inner-loop kernel this session evaluates with.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 
     /// Number of distance calls so far (each [`dist`](Self::dist) or
@@ -191,41 +354,26 @@ impl<'a> CountingDistance<'a> {
         } else {
             f64::INFINITY
         };
-        let mut acc = 0.0f64;
-        match self.kind {
+        let acc = match self.kind {
             DistanceKind::Znorm => {
                 let mu_a = self.stats.mean[i];
                 let mu_b = self.stats.mean[j];
                 let inv_sa = 1.0 / self.stats.std[i];
                 let inv_sb = 1.0 / self.stats.std[j];
-                for (ca, cb) in a
-                    .chunks(ABANDON_CHECK_EVERY)
-                    .zip(b.chunks(ABANDON_CHECK_EVERY))
-                {
-                    for (&x, &y) in ca.iter().zip(cb) {
-                        let d = (x - mu_a) * inv_sa - (y - mu_b) * inv_sb;
-                        acc += d * d;
-                    }
-                    if acc > limit {
-                        return acc.sqrt();
-                    }
+                let dev = move |x: f64, y: f64| (x - mu_a) * inv_sa - (y - mu_b) * inv_sb;
+                match self.kernel {
+                    Kernel::Scalar => sum_scalar(a, b, limit, dev),
+                    Kernel::Simd => sum_simd(a, b, limit, dev),
                 }
             }
             DistanceKind::Raw => {
-                for (ca, cb) in a
-                    .chunks(ABANDON_CHECK_EVERY)
-                    .zip(b.chunks(ABANDON_CHECK_EVERY))
-                {
-                    for (&x, &y) in ca.iter().zip(cb) {
-                        let d = x - y;
-                        acc += d * d;
-                    }
-                    if acc > limit {
-                        return acc.sqrt();
-                    }
+                let dev = |x: f64, y: f64| x - y;
+                match self.kernel {
+                    Kernel::Scalar => sum_scalar(a, b, limit, dev),
+                    Kernel::Simd => sum_simd(a, b, limit, dev),
                 }
             }
-        }
+        };
         acc.sqrt()
     }
 }
@@ -255,18 +403,23 @@ mod tests {
     #[test]
     fn znorm_matches_naive_normalize_then_subtract() {
         let (ts, stats) = setup(800, 64);
-        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
-        for (i, j) in [(0, 100), (3, 700), (250, 330), (0, 736)] {
-            let got = dist.dist(i, j);
-            let want = naive_znorm_dist(&ts, &stats, i, j);
-            assert!((got - want).abs() < 1e-9, "({i},{j}): {got} vs {want}");
+        for kernel in [Kernel::Scalar, Kernel::Simd] {
+            let dist = CountingDistance::with_kernel(&ts, &stats, DistanceKind::Znorm, kernel);
+            for (i, j) in [(0, 100), (3, 700), (250, 330), (0, 736)] {
+                let got = dist.dist(i, j);
+                let want = naive_znorm_dist(&ts, &stats, i, j);
+                assert!(
+                    (got - want).abs() < 1e-9,
+                    "{}: ({i},{j}): {got} vs {want}",
+                    kernel.name()
+                );
+            }
         }
     }
 
     #[test]
     fn raw_is_plain_euclidean() {
         let (ts, stats) = setup(500, 50);
-        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Raw);
         let want = ts
             .seq(10, 50)
             .iter()
@@ -274,30 +427,37 @@ mod tests {
             .map(|(a, b)| (a - b) * (a - b))
             .sum::<f64>()
             .sqrt();
-        assert!((dist.dist(10, 200) - want).abs() < 1e-12);
+        for kernel in [Kernel::Scalar, Kernel::Simd] {
+            let dist = CountingDistance::with_kernel(&ts, &stats, DistanceKind::Raw, kernel);
+            assert!((dist.dist(10, 200) - want).abs() < 1e-12);
+        }
     }
 
     #[test]
     fn early_abandon_returns_exact_below_cutoff() {
         let (ts, stats) = setup(1_000, 80);
-        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
-        for (i, j) in [(0, 100), (50, 400), (111, 911)] {
-            let exact = dist.dist(i, j);
-            let with_cutoff = dist.dist_early(i, j, exact + 1.0);
-            assert_eq!(exact, with_cutoff, "must be bit-identical below cutoff");
+        for kernel in [Kernel::Scalar, Kernel::Simd] {
+            let dist = CountingDistance::with_kernel(&ts, &stats, DistanceKind::Znorm, kernel);
+            for (i, j) in [(0, 100), (50, 400), (111, 911)] {
+                let exact = dist.dist(i, j);
+                let with_cutoff = dist.dist_early(i, j, exact + 1.0);
+                assert_eq!(exact, with_cutoff, "must be bit-identical below cutoff");
+            }
         }
     }
 
     #[test]
     fn early_abandon_bound_is_at_least_cutoff() {
         let (ts, stats) = setup(1_000, 80);
-        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
-        for (i, j) in [(0, 100), (50, 400), (111, 911)] {
-            let exact = dist.dist(i, j);
-            let cutoff = exact * 0.5;
-            let d = dist.dist_early(i, j, cutoff);
-            assert!(d >= cutoff, "abandoned value {d} below cutoff {cutoff}");
-            assert!(d <= exact + 1e-12, "partial sum cannot exceed the exact distance");
+        for kernel in [Kernel::Scalar, Kernel::Simd] {
+            let dist = CountingDistance::with_kernel(&ts, &stats, DistanceKind::Znorm, kernel);
+            for (i, j) in [(0, 100), (50, 400), (111, 911)] {
+                let exact = dist.dist(i, j);
+                let cutoff = exact * 0.5;
+                let d = dist.dist_early(i, j, cutoff);
+                assert!(d >= cutoff, "abandoned value {d} below cutoff {cutoff}");
+                assert!(d <= exact + 1e-12, "partial sum cannot exceed the exact distance");
+            }
         }
     }
 
@@ -316,9 +476,11 @@ mod tests {
     fn symmetric_and_zero_on_self() {
         let (ts, stats) = setup(700, 64);
         for kind in [DistanceKind::Znorm, DistanceKind::Raw] {
-            let dist = CountingDistance::new(&ts, &stats, kind);
-            assert!((dist.dist(20, 500) - dist.dist(500, 20)).abs() < 5e-8);
-            assert!(dist.dist(123, 123) < 1e-12);
+            for kernel in [Kernel::Scalar, Kernel::Simd] {
+                let dist = CountingDistance::with_kernel(&ts, &stats, kind, kernel);
+                assert!((dist.dist(20, 500) - dist.dist(500, 20)).abs() < 5e-8);
+                assert!(dist.dist(123, 123) < 1e-12);
+            }
         }
     }
 
@@ -338,6 +500,90 @@ mod tests {
         match active_backend() {
             Backend::Scalar => assert!(!cfg!(feature = "pjrt")),
             Backend::XlaPjrt => assert!(cfg!(feature = "pjrt")),
+        }
+    }
+
+    #[test]
+    fn kernel_names_roundtrip() {
+        for k in [Kernel::Scalar, Kernel::Simd] {
+            assert_eq!(Kernel::from_name(k.name()), Some(k));
+        }
+        assert_eq!(Kernel::from_name("avx"), None);
+        // active() latches to one of the two valid kernels
+        let a = Kernel::active();
+        assert!(a == Kernel::Scalar || a == Kernel::Simd);
+        assert_eq!(Kernel::active(), a, "active kernel must be stable");
+    }
+
+    /// Satellite: the lane-remainder paths the SIMD rewrite is most likely
+    /// to get wrong. s not a multiple of `ABANDON_CHECK_EVERY`, s not a
+    /// multiple of `LANES`, and s smaller than one lane group — all must
+    /// stay bit-identical to the scalar kernel and match the naive sum.
+    #[test]
+    fn kernels_bit_identical_at_awkward_lengths() {
+        let ts = generators::ecg_like(1_200, 90, 1, 11).into_series("d");
+        for s in [3usize, 5, 7, 8, 9, 15, 16, 17, 23, 25, 31, 47, 90, 113] {
+            let stats = SeqStats::compute(&ts, s);
+            for kind in [DistanceKind::Znorm, DistanceKind::Raw] {
+                let sc = CountingDistance::with_kernel(&ts, &stats, kind, Kernel::Scalar);
+                let si = CountingDistance::with_kernel(&ts, &stats, kind, Kernel::Simd);
+                for (i, j) in [(0usize, 200), (17, 801), (333, 950)] {
+                    let a = sc.dist(i, j);
+                    let b = si.dist(i, j);
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "s={s} {kind:?} ({i},{j}): scalar {a} vs simd {b}"
+                    );
+                    // abandoned path: same partial bound, bit for bit
+                    let cut = a * 0.6;
+                    assert_eq!(
+                        sc.dist_early(i, j, cut).to_bits(),
+                        si.dist_early(i, j, cut).to_bits(),
+                        "s={s} {kind:?} ({i},{j}): abandoned bounds differ"
+                    );
+                }
+                assert_eq!(sc.calls(), si.calls(), "s={s} {kind:?}: call counts differ");
+            }
+        }
+    }
+
+    /// Satellite: true distance landing exactly on the cutoff. The abandon
+    /// predicate is strict (`acc > limit`), and partial sums only grow, so
+    /// a final sum equal to the squared cutoff is never abandoned — both
+    /// kernels must return the exact value, bit-identical to `dist`.
+    #[test]
+    fn cutoff_exactly_on_distance_is_not_abandoned() {
+        let (ts, stats) = setup(900, 72);
+        for kind in [DistanceKind::Znorm, DistanceKind::Raw] {
+            for kernel in [Kernel::Scalar, Kernel::Simd] {
+                let dist = CountingDistance::with_kernel(&ts, &stats, kind, kernel);
+                for (i, j) in [(0usize, 150), (40, 600), (211, 777)] {
+                    let exact = dist.dist(i, j);
+                    let at_cutoff = dist.dist_early(i, j, exact);
+                    assert_eq!(
+                        exact.to_bits(),
+                        at_cutoff.to_bits(),
+                        "{} {kind:?} ({i},{j}): d==cutoff must return the exact value",
+                        kernel.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// Satellite: sequences shorter than one lane group (s < LANES) run
+    /// entirely on the tail path, which must equal the scalar loop.
+    #[test]
+    fn shorter_than_one_lane_group() {
+        let ts = generators::sine_with_noise(400, 0.3, 5).into_series("tiny");
+        for s in 2..LANES {
+            let stats = SeqStats::compute(&ts, s);
+            let sc = CountingDistance::with_kernel(&ts, &stats, DistanceKind::Znorm, Kernel::Scalar);
+            let si = CountingDistance::with_kernel(&ts, &stats, DistanceKind::Znorm, Kernel::Simd);
+            for (i, j) in [(0usize, 50), (9, 311)] {
+                assert_eq!(sc.dist(i, j).to_bits(), si.dist(i, j).to_bits(), "s={s}");
+            }
         }
     }
 }

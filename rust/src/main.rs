@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   discover <dataset>   run a discord search and print the result
 //!   table <id|all>       regenerate a paper table/figure (see DESIGN.md)
+//!   bench                sweep all engines, emit a BENCH_*.json trajectory
 //!   generate <dataset>   write a synthetic dataset to a text file
 //!   serve                start the batch-search TCP service
 //!   submit               submit a job to a running service and wait
@@ -38,6 +39,7 @@ fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("discover") => discover(args),
         Some("table") => table(args),
+        Some("bench") => bench(args),
         Some("report") => report(args),
         Some("plot") => plot(args),
         Some("merlin") => merlin(args),
@@ -56,13 +58,18 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: hst <discover|table|report|plot|merlin|monitor|stream|mdim|generate|serve|submit|info> [flags]
+const USAGE: &str = "usage: hst <discover|table|bench|report|plot|merlin|monitor|stream|mdim|generate|serve|submit|info> [flags]
   hst discover 'ECG 108' --algo hst --k 3 --scale-div 8
   hst discover 'ECG 108' --algo hst-par --threads 4
   hst discover synthetic --noise 0.001 --n 20000 --s 120
   hst table all --scale-div 8 --runs 3
   hst table 4 --full
   hst table parallel --threads 4
+  hst bench --json BENCH_6.json            (all engines x registry fixtures)
+  hst bench --quick --json smoke.json      (CI tier: 3 small fixtures, 1 run)
+  hst bench --check BENCH_6.json           (schema-validate a trajectory file)
+  hst bench --diff OLD.json NEW.json       (per-cell calls/wall-clock ratios)
+  hst bench --kernel scalar                (pin the distance kernel; default HST_KERNEL/simd)
   hst report --out report.md --scale-div 8
   hst plot 'Shuttle TEK 14' --k 2
   hst merlin 'ECG 108' --min-len 80 --max-len 120 --step 8
@@ -174,6 +181,77 @@ fn table(args: &Args) -> Result<()> {
             println!("{}", t.to_json());
         } else {
             println!("{}", t.render());
+        }
+    }
+    Ok(())
+}
+
+fn bench(args: &Args) -> Result<()> {
+    use hstime::bench::trajectory as traj;
+
+    let load = |path: &str| -> Result<Vec<traj::BenchRecord>> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        let doc = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        traj::validate(&doc).with_context(|| format!("{path} failed schema validation"))
+    };
+
+    // hst bench --check FILE — schema-validate an existing trajectory
+    if let Some(path) = args.get("check") {
+        let records = load(path)?;
+        println!("{path}: ok ({} records, schema {})", records.len(), traj::TRAJECTORY_SCHEMA);
+        return Ok(());
+    }
+    // hst bench --diff OLD NEW — per-cell ratios between two trajectories
+    if let Some(old_path) = args.get("diff") {
+        let new_path = args
+            .positionals
+            .first()
+            .context("--diff needs two files: hst bench --diff OLD.json NEW.json")?;
+        for line in traj::diff(&load(old_path)?, &load(new_path)?)? {
+            println!("{line}");
+        }
+        return Ok(());
+    }
+
+    // run a sweep: tier picks fixtures + BenchConfig defaults, flags override
+    let quick = args.has("quick");
+    let (tier, mut cfg) = if args.has("full") {
+        ("full", BenchConfig::full())
+    } else if quick {
+        ("quick", BenchConfig::smoke())
+    } else {
+        ("standard", BenchConfig::default())
+    };
+    cfg.scale_div = args.get_usize("scale-div", cfg.scale_div);
+    cfg.runs = args.get_usize("runs", cfg.runs);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.threads = args.get_usize("threads", cfg.threads);
+    let kernel = match args.get("kernel") {
+        Some(name) => hstime::dist::Kernel::from_name(name)
+            .with_context(|| format!("unknown kernel {name:?} (scalar|simd)"))?,
+        None => hstime::dist::Kernel::active(),
+    };
+
+    let records = traj::run_trajectory(&cfg, quick, kernel)?;
+    let meta = traj::TrajectoryMeta::measured(&cfg, tier, kernel);
+    let doc = traj::trajectory_json(&meta, &records);
+    match args.get("json") {
+        // bare --json (no path) prints the document instead
+        Some(path) if path != hstime::util::cli::FLAG_SET => {
+            std::fs::write(path, format!("{doc}\n"))
+                .with_context(|| format!("writing {path}"))?;
+            println!("wrote {} records ({tier} tier) to {path}", records.len());
+        }
+        Some(_) => println!("{doc}"),
+        None => {
+            for r in &records {
+                println!(
+                    "{:<12} {:<16} n={:<6} s={:<4} calls={:<10} cps={:<10.2} \
+                     prep={:<8} wall={:.2}ms",
+                    r.engine, r.table, r.n, r.s, r.calls, r.cps, r.prep_calls, r.wall_ms
+                );
+            }
         }
     }
     Ok(())

@@ -75,7 +75,8 @@ impl MdimAlgorithm for BruteMd {
             .iter()
             .map(|&c| ctx.channel_ctx(c).stats(s))
             .collect();
-        let agg = MdimDistance::new(ms, &stats, &channels, kind);
+        let agg =
+            MdimDistance::with_kernel(ms, &stats, &channels, kind, ctx.kernel());
         let profile =
             Self::exact_profile(ctx, &agg, s, params.base.allow_self_match)?;
         // same extraction (and lowest-index tie-break) as univariate brute

@@ -30,7 +30,7 @@ use anyhow::Result;
 use crate::config::SaxParams;
 use crate::context::{CancellationToken, SearchContext};
 use crate::discord::NndProfile;
-use crate::dist::DistanceKind;
+use crate::dist::{DistanceKind, Kernel};
 use crate::sax::{SaxIndex, SaxWord};
 use crate::ts::{MultiSeries, SeqStats};
 
@@ -47,6 +47,7 @@ struct MdimProfileKey {
 /// Builder for [`MdimContext`] (see [`MdimContext::builder`]).
 pub struct MdimContextBuilder {
     ms: MultiSeries,
+    kernel: Kernel,
     cancel: CancellationToken,
     budget: Option<u64>,
 }
@@ -55,6 +56,14 @@ impl MdimContextBuilder {
     /// Attach a cancellation token (clone it to keep a cancelling handle).
     pub fn cancel_token(mut self, token: CancellationToken) -> MdimContextBuilder {
         self.cancel = token;
+        self
+    }
+
+    /// Pin the inner-loop [`Kernel`] every per-channel distance session
+    /// (and lazily built channel context) runs on. Default:
+    /// [`Kernel::active`]. Bit-neutral — the kernels are bit-identical.
+    pub fn kernel(mut self, kernel: Kernel) -> MdimContextBuilder {
+        self.kernel = kernel;
         self
     }
 
@@ -75,6 +84,7 @@ impl MdimContextBuilder {
             (0..self.ms.dims()).map(|_| OnceLock::new()).collect();
         MdimContext {
             ms: self.ms,
+            kernel: self.kernel,
             channels,
             cancel: self.cancel,
             budget: self.budget,
@@ -90,6 +100,7 @@ impl MdimContextBuilder {
 /// is all an engine needs.
 pub struct MdimContext {
     ms: MultiSeries,
+    kernel: Kernel,
     channels: Vec<OnceLock<SearchContext>>,
     cancel: CancellationToken,
     budget: Option<u64>,
@@ -108,9 +119,15 @@ impl MdimContext {
     pub fn builder_owned(ms: MultiSeries) -> MdimContextBuilder {
         MdimContextBuilder {
             ms,
+            kernel: Kernel::active(),
             cancel: CancellationToken::new(),
             budget: None,
         }
+    }
+
+    /// The inner-loop [`Kernel`] sessions from this context run on.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 
     /// The multivariate series this context prepares.
@@ -134,8 +151,11 @@ impl MdimContext {
     /// Built on first use: a `SearchContext` owns a copy of its channel's
     /// points, so only channels a search actually touches pay that copy.
     pub fn channel_ctx(&self, c: usize) -> &SearchContext {
-        self.channels[c]
-            .get_or_init(|| SearchContext::builder(self.ms.channel(c)).build())
+        self.channels[c].get_or_init(|| {
+            SearchContext::builder(self.ms.channel(c))
+                .kernel(self.kernel)
+                .build()
+        })
     }
 
     /// Has channel `c`'s univariate session been built yet?

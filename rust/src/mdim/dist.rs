@@ -25,7 +25,7 @@
 //! is what lets `hst-md` reuse the serial HST inner loop unchanged and
 //! still match `brute-md` bit for bit.
 
-use crate::dist::{CountingDistance, Distance, DistanceKind};
+use crate::dist::{CountingDistance, Distance, DistanceKind, Kernel};
 use crate::ts::{MultiSeries, SeqStats};
 
 /// One aggregate-distance session over a resolved channel subset.
@@ -48,11 +48,25 @@ impl<'a> MdimDistance<'a> {
         channels: &[usize],
         kind: DistanceKind,
     ) -> MdimDistance<'a> {
+        Self::with_kernel(ms, stats, channels, kind, Kernel::active())
+    }
+
+    /// A session whose per-channel loops run on an explicit [`Kernel`]
+    /// (the multivariate engines pass their context's choice through).
+    pub fn with_kernel(
+        ms: &'a MultiSeries,
+        stats: &'a [std::sync::Arc<SeqStats>],
+        channels: &[usize],
+        kind: DistanceKind,
+        kernel: Kernel,
+    ) -> MdimDistance<'a> {
         debug_assert_eq!(stats.len(), channels.len());
         let per = channels
             .iter()
             .zip(stats)
-            .map(|(&c, st)| CountingDistance::new(ms.channel(c), st, kind))
+            .map(|(&c, st)| {
+                CountingDistance::with_kernel(ms.channel(c), st, kind, kernel)
+            })
             .collect();
         MdimDistance { per, kind }
     }

@@ -87,6 +87,9 @@ struct PassState<'a> {
     /// Σ_c |cluster_c(i)| per sequence — the outer-loop rarity key.
     rarity: &'a [f64],
     params: &'a SearchParams,
+    /// Inner-loop kernel every aggregate session of this search runs on
+    /// (the context's choice, fixed per search).
+    kernel: crate::dist::Kernel,
 }
 
 impl HstMd {
@@ -144,7 +147,8 @@ impl HstMd {
         let kind = st.params.distance_kind();
         let scan = ScanOrder::build(st.joint, rng);
         let order = Self::pass_order(st, profile, zones, warm);
-        let agg = MdimDistance::new(st.ms, st.stats, st.channels, kind);
+        let agg =
+            MdimDistance::with_kernel(st.ms, st.stats, st.channels, kind, st.kernel);
 
         let mut best_dist = 0.0f64;
         let mut best: Option<Discord> = None;
@@ -205,7 +209,8 @@ impl HstMd {
 
         // Phase 1 — seed: the top candidate minimized serially on the
         // master profile, so no worker prunes against an empty bound.
-        let seed = MdimDistance::new(st.ms, st.stats, st.channels, kind);
+        let seed =
+            MdimDistance::with_kernel(st.ms, st.stats, st.channels, kind, st.kernel);
         let lead_ok =
             minimize(lead, &seed, st.joint, &scan, profile, &0.0f64, s, allow);
         let mut best: Option<(usize, f64)> = (lead_ok
@@ -225,8 +230,13 @@ impl HstMd {
 
             let outcomes: Vec<WorkerOutcome> =
                 crate::exec::scope_workers(threads, |_w| {
-                    let agg =
-                        MdimDistance::new(st.ms, st.stats, st.channels, kind);
+                    let agg = MdimDistance::with_kernel(
+                        st.ms,
+                        st.stats,
+                        st.channels,
+                        kind,
+                        st.kernel,
+                    );
                     let mut local = master.clone();
                     let mut winners: Vec<(usize, f64)> = Vec::new();
                     let mut reported = 0u64;
@@ -335,6 +345,7 @@ impl MdimAlgorithm for HstMd {
             joint: &joint,
             rarity: &rarity,
             params: base,
+            kernel: ctx.kernel(),
         };
         let published = AtomicU64::new(0);
         let mut zones = ExclusionZones::new();

@@ -263,8 +263,9 @@ pub(crate) fn run_univariate(
     let s = params.sax.s;
     let kind = params.distance_kind();
     let ms = MultiSeries::from_univariate(ctx.series().clone());
-    let mut builder =
-        MdimContext::builder_owned(ms).cancel_token(ctx.cancel_token());
+    let mut builder = MdimContext::builder_owned(ms)
+        .kernel(ctx.kernel())
+        .cancel_token(ctx.cancel_token());
     if let Some(b) = ctx.budget() {
         builder = builder.distance_budget(b);
     }

@@ -8,6 +8,7 @@ use anyhow::{ensure, Result};
 use crate::config::SearchParams;
 use crate::context::SearchContext;
 use crate::discord::{NndProfile, NND_INIT, NO_NEIGHBOR};
+use crate::dist::Kernel;
 use crate::sax::{SaxIndex, SaxWord, WordBuilder};
 use crate::ts::{window_stats, SeqStats, TimeSeries};
 use crate::util::json::Json;
@@ -102,6 +103,7 @@ pub struct StreamingMonitor {
     params: SearchParams,
     capacity: usize,
     refresh_every: usize,
+    kernel: Kernel,
     wb: WordBuilder,
     /// Window points; front = oldest.
     buf: VecDeque<f64>,
@@ -140,6 +142,7 @@ impl StreamingMonitor {
             params,
             capacity,
             refresh_every: 0,
+            kernel: Kernel::active(),
             wb,
             buf: VecDeque::with_capacity(capacity + 1),
             start: 0,
@@ -167,6 +170,19 @@ impl StreamingMonitor {
     pub fn with_refresh_every(mut self, points: usize) -> StreamingMonitor {
         self.refresh_every = points;
         self
+    }
+
+    /// Pin the inner-loop [`Kernel`] refresh searches run on (default:
+    /// [`Kernel::active`]). Bit-neutral: the kernels are bit-identical,
+    /// so the streaming exactness story is unaffected either way.
+    pub fn with_kernel(mut self, kernel: Kernel) -> StreamingMonitor {
+        self.kernel = kernel;
+        self
+    }
+
+    /// The inner-loop kernel refresh searches run on.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 
     /// The auto-refresh cadence in points (`0` = manual).
@@ -306,7 +322,9 @@ impl StreamingMonitor {
         let kind = self.params.distance_kind();
         let allow = self.params.allow_self_match;
 
-        let ctx = SearchContext::builder_owned(self.window_series()).build();
+        let ctx = SearchContext::builder_owned(self.window_series())
+            .kernel(self.kernel)
+            .build();
         ctx.seed_stats(Arc::new(SeqStats {
             s,
             mean: self.stats_mean.iter().copied().collect(),

@@ -1,0 +1,184 @@
+//! Golden conformance: every engine's discord positions and exact nnd
+//! *bit patterns* are pinned on three fixed-seed fixtures, in committed
+//! snapshot files under `tests/golden/`.
+//!
+//! Purpose: the distance kernel is the hot path future PRs will keep
+//! rewriting (this PR adds the chunked SIMD path; more are planned). A
+//! refactor that perturbs even the last ulp of one nnd — or reorders a
+//! tie-break — shows up here as a one-line diff instead of a silent drift.
+//!
+//! Workflow:
+//! - Missing snapshot → the suite writes it (auto-bless) and passes; the
+//!   generated file must be committed.
+//! - `GOLDEN_BLESS=1 cargo test --test golden_conformance` regenerates
+//!   all snapshots after an *intentional* behavior change.
+//! - Only positions, neighbors, and nnd bits are pinned. Call counts are
+//!   deliberately left out: the sharded engines' counts vary with worker
+//!   interleaving, and the trajectory file (`BENCH_6.json`) tracks costs.
+//!
+//! Every fixture is additionally swept under both distance kernels and
+//! the reports compared bit for bit — the engine-level face of the
+//! kernel-equivalence property test.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use hstime::algo::{self, Algorithm as _, SearchReport};
+use hstime::config::SearchParams;
+use hstime::context::SearchContext;
+use hstime::dist::Kernel;
+use hstime::ts::{generators, TimeSeries};
+
+/// A fixed-seed fixture: (snapshot id, series, params). Everything here
+/// is frozen — changing any value invalidates the committed snapshots.
+fn fixtures() -> Vec<(&'static str, TimeSeries, SearchParams)> {
+    vec![
+        (
+            "ecg_1500",
+            TimeSeries::new("golden-ecg", generators::ecg_like(1_500, 110, 1, 42)),
+            SearchParams::new(96, 4, 4).with_discords(2).with_seed(7),
+        ),
+        (
+            "resp_1280",
+            TimeSeries::new(
+                "golden-resp",
+                generators::respiration_like(1_280, 130, 1, 43),
+            ),
+            SearchParams::new(64, 4, 4).with_discords(2).with_seed(7),
+        ),
+        (
+            "valve_1600",
+            TimeSeries::new("golden-valve", generators::valve_like(1_600, 250, 1, 44)),
+            SearchParams::new(128, 4, 4).with_discords(2).with_seed(7),
+        ),
+    ]
+}
+
+/// Run one engine on a cold, kernel-pinned context. `dadd` has no
+/// default range, so it is calibrated from an HST run exactly as the
+/// Table 7 protocol (and the bench trajectory) do.
+fn run_engine(
+    engine: &str,
+    ts: &TimeSeries,
+    params: &SearchParams,
+    kernel: Kernel,
+) -> SearchReport {
+    let ctx = SearchContext::builder(ts).kernel(kernel).build();
+    if engine == "dadd" {
+        let cal_ctx = SearchContext::builder(ts).kernel(kernel).build();
+        let hst = algo::hst::HstSearch::default()
+            .run_ctx(&cal_ctx, params)
+            .expect("hst calibration run");
+        let top = hst.discords.last().expect("calibration discord");
+        let dadd = algo::dadd::Dadd {
+            r: top.nnd * 0.99 * 0.999_999,
+            page_size: 10_000,
+        };
+        return dadd.run_ctx(&ctx, params).expect("dadd run");
+    }
+    algo::by_name(engine)
+        .unwrap_or_else(|| panic!("unknown engine {engine}"))
+        .run_ctx(&ctx, params)
+        .unwrap_or_else(|e| panic!("{engine} failed: {e:#}"))
+}
+
+/// One snapshot line: engine id, then one `pos:neighbor:nnd_bits_hex`
+/// token per discord. Hex bit patterns (not decimal floats) so the file
+/// survives formatting round-trips losslessly.
+fn snapshot_line(engine: &str, rep: &SearchReport) -> String {
+    let mut line = engine.to_string();
+    for d in &rep.discords {
+        write!(
+            line,
+            " {}:{}:{:016x}",
+            d.position,
+            d.neighbor,
+            d.nnd.to_bits()
+        )
+        .unwrap();
+    }
+    line
+}
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+}
+
+#[test]
+fn all_engines_match_committed_goldens() {
+    let bless = std::env::var("GOLDEN_BLESS").is_ok();
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).expect("create tests/golden");
+    let mut failures = Vec::new();
+
+    for (id, ts, params) in fixtures() {
+        let mut lines = Vec::new();
+        for engine in algo::ALL_ENGINES {
+            let scalar = run_engine(engine, &ts, &params, Kernel::Scalar);
+            let simd = run_engine(engine, &ts, &params, Kernel::Simd);
+            // engine-level kernel equivalence: the SIMD sweep must
+            // reproduce the scalar sweep bit for bit before either is
+            // compared against the committed snapshot
+            assert_eq!(
+                snapshot_line(engine, &scalar),
+                snapshot_line(engine, &simd),
+                "{id}/{engine}: SIMD kernel diverged from scalar"
+            );
+            lines.push(snapshot_line(engine, &scalar));
+        }
+        let got = format!("{}\n", lines.join("\n"));
+        let path = dir.join(format!("{id}.txt"));
+        match std::fs::read_to_string(&path) {
+            Ok(want) if !bless => {
+                if got != want {
+                    failures.push(format!(
+                        "{id}: snapshot mismatch\n--- committed\n{want}\
+                         --- current\n{got}\
+                         (intentional change? GOLDEN_BLESS=1 to regenerate)"
+                    ));
+                }
+            }
+            _ => {
+                // missing snapshot or explicit bless: write and report
+                std::fs::write(&path, &got).expect("write golden snapshot");
+                eprintln!("blessed {} — commit it", path.display());
+            }
+        }
+    }
+    assert!(failures.is_empty(), "{}", failures.join("\n\n"));
+}
+
+#[test]
+fn goldens_cover_every_engine() {
+    // the snapshot files themselves are data; this guards their shape so
+    // a partial bless (or a hand edit) cannot silently drop an engine
+    for (id, _, _) in fixtures() {
+        let path = golden_dir().join(format!("{id}.txt"));
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            // first run on a fresh checkout: the bless test writes it
+            continue;
+        };
+        let engines: Vec<&str> = text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| l.split_whitespace().next().unwrap_or(""))
+            .collect();
+        assert_eq!(
+            engines,
+            algo::ALL_ENGINES.to_vec(),
+            "{id}: snapshot engine set drifted from ALL_ENGINES"
+        );
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            for token in line.split_whitespace().skip(1) {
+                let parts: Vec<&str> = token.split(':').collect();
+                assert_eq!(parts.len(), 3, "{id}: malformed token {token:?}");
+                parts[0].parse::<usize>().expect("position");
+                parts[1].parse::<usize>().expect("neighbor");
+                assert_eq!(parts[2].len(), 16, "{id}: nnd bits must be 16 hex digits");
+                u64::from_str_radix(parts[2], 16).expect("nnd bit pattern");
+            }
+        }
+    }
+}

@@ -1,158 +1,234 @@
-//! Runtime integration: AOT artifacts → PJRT compile → execute, checked
-//! against the Rust scalar engine (the cross-layer correctness contract).
+//! Runtime integration, in two halves:
 //!
-//! Compiled only with `--features pjrt` (the whole file is feature-gated);
-//! requires `make artifacts` at run time. Tests are skipped (with a loud
-//! message) when the artifacts are missing or the `xla` dependency is the
-//! in-repo stub, so `cargo test --features pjrt` works on a fresh checkout.
-#![cfg(feature = "pjrt")]
+//! - `fallback` runs in the **default** test matrix (no features): the
+//!   context's distance-session factory must degrade gracefully to the
+//!   scalar kernel — bit-identical to an explicitly scalar session — when
+//!   no XLA/PJRT runtime is available. Before this suite, nothing in the
+//!   default matrix compiled this file at all, so a broken fallback path
+//!   could only be caught by a `--features pjrt` build.
+//! - `with_artifacts` needs `--features pjrt` *and* `make artifacts`:
+//!   AOT artifacts → PJRT compile → execute, checked against the Rust
+//!   scalar engine. Tests skip (with a loud message) when artifacts are
+//!   missing or the `xla` dependency is the in-repo stub, so
+//!   `cargo test --features pjrt` works on a fresh checkout.
 
-use hstime::algo::scamp::Scamp;
-use hstime::config::SearchParams;
-use hstime::dist::xla_engine::XlaBatchEngine;
-use hstime::dist::{CountingDistance, DistanceKind};
-use hstime::runtime::{ArtifactSet, PreparedSeqs};
-use hstime::ts::series::IntoSeries;
-use hstime::ts::{generators, SeqStats};
+/// Default-matrix smoke: the scalar fallback behind `SearchContext::distance`.
+mod fallback {
+    use hstime::algo::{self, Algorithm as _};
+    use hstime::config::SearchParams;
+    use hstime::context::SearchContext;
+    use hstime::dist::{CountingDistance, Distance as _, DistanceKind, Kernel};
+    use hstime::ts::series::IntoSeries;
+    use hstime::ts::{generators, SeqStats};
 
-fn artifacts() -> Option<ArtifactSet> {
-    match ArtifactSet::load_default() {
-        Ok(a) => Some(a),
-        Err(e) => {
-            eprintln!("SKIP runtime tests: {e:#} (run `make artifacts`)");
-            None
+    #[test]
+    fn context_distance_session_degrades_to_exact_scalar() {
+        let ts = generators::ecg_like(1_200, 100, 1, 7).into_series("e");
+        let s = 100;
+        let stats = SeqStats::compute(&ts, s);
+        let ctx = SearchContext::builder(&ts).build();
+        let session = ctx.distance(&stats, DistanceKind::Znorm);
+        if session.is_exact() {
+            // no usable XLA runtime (the default build always lands here,
+            // and a pjrt build without artifacts must too): the session
+            // must be the exact kernel, bit for bit
+            let scalar =
+                CountingDistance::with_kernel(&ts, &stats, DistanceKind::Znorm, Kernel::Scalar);
+            for (i, j) in [(0usize, 500usize), (17, 803), (250, 901), (3, 1050)] {
+                assert_eq!(
+                    session.dist(i, j).to_bits(),
+                    scalar.dist(i, j).to_bits(),
+                    "fallback session diverged from scalar at ({i},{j})"
+                );
+            }
+            assert_eq!(session.calls(), 4);
+        } else {
+            // a real (inexact, f32) XLA session: just prove it answers
+            for (i, j) in [(0usize, 500usize), (17, 803)] {
+                assert!(session.dist(i, j).is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn search_through_default_context_matches_pinned_scalar() {
+        // end-to-end: an un-pinned context (whatever backend/kernel the
+        // environment selects) must agree with an explicitly scalar one on
+        // discord positions — and bit-exactly on nnds when exact
+        let ts = generators::valve_like(1_400, 150, 1, 11).into_series("v");
+        let params = SearchParams::new(128, 4, 4).with_discords(2).with_seed(3);
+        let default_ctx = SearchContext::builder(&ts).build();
+        let scalar_ctx = SearchContext::builder(&ts).kernel(Kernel::Scalar).build();
+        let engine = algo::hst::HstSearch::default();
+        let got = engine.run_ctx(&default_ctx, &params).unwrap();
+        let want = engine.run_ctx(&scalar_ctx, &params).unwrap();
+        assert_eq!(got.discords.len(), want.discords.len());
+        let stats = SeqStats::compute(&ts, 128);
+        let exact_session = default_ctx.distance(&stats, DistanceKind::Znorm).is_exact();
+        for (a, b) in got.discords.iter().zip(&want.discords) {
+            assert_eq!(a.position, b.position);
+            if exact_session {
+                assert_eq!(
+                    a.nnd.to_bits(),
+                    b.nnd.to_bits(),
+                    "exact session must reproduce the scalar search bit for bit"
+                );
+            } else {
+                assert!((a.nnd - b.nnd).abs() < 1e-2);
+            }
         }
     }
 }
 
-#[test]
-fn pair_chain_matches_scalar_engine() {
-    let Some(arts) = artifacts() else { return };
-    let ts = generators::ecg_like(3_000, 100, 1, 7).into_series("e");
-    let s = 100;
-    let stats = SeqStats::compute(&ts, s);
-    let prep = PreparedSeqs::build(&arts, &ts, &stats, true).unwrap();
-    let scalar = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+#[cfg(feature = "pjrt")]
+mod with_artifacts {
+    use hstime::algo::scamp::Scamp;
+    use hstime::config::SearchParams;
+    use hstime::dist::xla_engine::XlaBatchEngine;
+    use hstime::dist::{CountingDistance, DistanceKind};
+    use hstime::runtime::{ArtifactSet, PreparedSeqs};
+    use hstime::ts::series::IntoSeries;
+    use hstime::ts::{generators, SeqStats};
 
-    let ia: Vec<usize> = (0..1500).step_by(7).collect();
-    let ib: Vec<usize> = ia.iter().map(|&i| i + 600).collect();
-    let got = arts.pair_dist_chain(&prep, &ia, &ib).unwrap();
-    assert_eq!(got.len(), ia.len());
-    for (t, (&i, &j)) in ia.iter().zip(&ib).enumerate() {
-        let want = scalar.dist(i, j);
-        assert!(
-            (got[t] - want).abs() < 1e-3,
-            "pair {t} ({i},{j}): xla {} vs scalar {}",
-            got[t],
-            want
-        );
+    fn artifacts() -> Option<ArtifactSet> {
+        match ArtifactSet::load_default() {
+            Ok(a) => Some(a),
+            Err(e) => {
+                eprintln!("SKIP runtime tests: {e:#} (run `make artifacts`)");
+                None
+            }
+        }
     }
-}
 
-#[test]
-fn query_row_matches_scalar_engine() {
-    let Some(arts) = artifacts() else { return };
-    let ts = generators::sine_with_noise(2_000, 0.2, 9).into_series("s");
-    let s = 120;
-    let stats = SeqStats::compute(&ts, s);
-    let prep = PreparedSeqs::build(&arts, &ts, &stats, true).unwrap();
-    let scalar = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+    #[test]
+    fn pair_chain_matches_scalar_engine() {
+        let Some(arts) = artifacts() else { return };
+        let ts = generators::ecg_like(3_000, 100, 1, 7).into_series("e");
+        let s = 100;
+        let stats = SeqStats::compute(&ts, s);
+        let prep = PreparedSeqs::build(&arts, &ts, &stats, true).unwrap();
+        let scalar = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
 
-    let query = 400;
-    let cands: Vec<usize> = (0..prep.n)
-        .step_by(3)
-        .filter(|&j| j.abs_diff(query) >= s)
-        .collect();
-    let chunk = cands.len().min(arts.query_b());
-    let (dists, dmin) = arts
-        .query_row_chunk(&prep, query, &cands[..chunk])
-        .unwrap();
-    let mut want_min = f64::INFINITY;
-    for (t, &j) in cands[..chunk].iter().enumerate() {
-        let want = scalar.dist(query, j);
-        assert!(
-            (dists[t] - want).abs() < 1e-3,
-            "cand {j}: xla {} vs scalar {}",
-            dists[t],
-            want
-        );
-        want_min = want_min.min(want);
+        let ia: Vec<usize> = (0..1500).step_by(7).collect();
+        let ib: Vec<usize> = ia.iter().map(|&i| i + 600).collect();
+        let got = arts.pair_dist_chain(&prep, &ia, &ib).unwrap();
+        assert_eq!(got.len(), ia.len());
+        for (t, (&i, &j)) in ia.iter().zip(&ib).enumerate() {
+            let want = scalar.dist(i, j);
+            assert!(
+                (got[t] - want).abs() < 1e-3,
+                "pair {t} ({i},{j}): xla {} vs scalar {}",
+                got[t],
+                want
+            );
+        }
     }
-    assert!((dmin - want_min).abs() < 1e-3);
-}
 
-#[test]
-fn xla_matrix_profile_matches_serial_scamp() {
-    let Some(arts) = artifacts() else { return };
-    let ts = generators::valve_like(1_200, 150, 1, 11).into_series("v");
-    let s = 128;
-    let stats = SeqStats::compute(&ts, s);
-    let prep = PreparedSeqs::build(&arts, &ts, &stats, true).unwrap();
+    #[test]
+    fn query_row_matches_scalar_engine() {
+        let Some(arts) = artifacts() else { return };
+        let ts = generators::sine_with_noise(2_000, 0.2, 9).into_series("s");
+        let s = 120;
+        let stats = SeqStats::compute(&ts, s);
+        let prep = PreparedSeqs::build(&arts, &ts, &stats, true).unwrap();
+        let scalar = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
 
-    let xla_profile = arts.matrix_profile(&prep, s).unwrap();
-    let (serial, _) = Scamp::matrix_profile(&ts, &stats);
-    assert_eq!(xla_profile.len(), serial.len());
-    for i in 0..serial.len() {
-        assert!(
-            (xla_profile.nnd[i] - serial.nnd[i]).abs() < 5e-3,
-            "i={i}: xla {} vs serial {}",
-            xla_profile.nnd[i],
-            serial.nnd[i]
-        );
+        let query = 400;
+        let cands: Vec<usize> = (0..prep.n)
+            .step_by(3)
+            .filter(|&j| j.abs_diff(query) >= s)
+            .collect();
+        let chunk = cands.len().min(arts.query_b());
+        let (dists, dmin) = arts
+            .query_row_chunk(&prep, query, &cands[..chunk])
+            .unwrap();
+        let mut want_min = f64::INFINITY;
+        for (t, &j) in cands[..chunk].iter().enumerate() {
+            let want = scalar.dist(query, j);
+            assert!(
+                (dists[t] - want).abs() < 1e-3,
+                "cand {j}: xla {} vs scalar {}",
+                dists[t],
+                want
+            );
+            want_min = want_min.min(want);
+        }
+        assert!((dmin - want_min).abs() < 1e-3);
     }
-}
 
-#[test]
-fn batch_engine_early_exit_and_accounting() {
-    let Some(arts) = artifacts() else { return };
-    let ts = generators::ecg_like(2_500, 90, 1, 13).into_series("e");
-    let s = 90;
-    let stats = SeqStats::compute(&ts, s);
-    let mut eng = XlaBatchEngine::new(&arts, &ts, &stats, true).unwrap();
-    assert_eq!(eng.len(), ts.num_sequences(s));
+    #[test]
+    fn xla_matrix_profile_matches_serial_scamp() {
+        let Some(arts) = artifacts() else { return };
+        let ts = generators::valve_like(1_200, 150, 1, 11).into_series("v");
+        let s = 128;
+        let stats = SeqStats::compute(&ts, s);
+        let prep = PreparedSeqs::build(&arts, &ts, &stats, true).unwrap();
 
-    let cands: Vec<usize> = (600..eng.len()).collect();
-    // a huge stop threshold: the very first chunk will contain a distance
-    // below it, so evaluation must stop after one chunk
-    let (done, dists) = eng.query_row(0, &cands, f64::INFINITY).unwrap();
-    assert_eq!(done, arts.query_b().min(cands.len()));
-    assert_eq!(dists.len(), done);
-    assert_eq!(eng.pair_evals, done as u64);
-
-    // stop_below = 0: never stops early, evaluates everything
-    let evals_before = eng.pair_evals;
-    let (done_all, _) = eng.query_row(0, &cands, 0.0).unwrap();
-    assert_eq!(done_all, cands.len());
-    assert_eq!(eng.pair_evals - evals_before, cands.len() as u64);
-}
-
-#[test]
-fn rejects_sequences_longer_than_s_pad() {
-    let Some(arts) = artifacts() else { return };
-    let ts = generators::sine_with_noise(4_000, 0.1, 5).into_series("s");
-    let s = arts.s_pad() + 8;
-    let stats = SeqStats::compute(&ts, s);
-    assert!(PreparedSeqs::build(&arts, &ts, &stats, true).is_err());
-}
-
-#[test]
-fn dadd_protocol_raw_rows_supported() {
-    let Some(arts) = artifacts() else { return };
-    let ts = generators::power_like(1_500, 96, 1, 6).into_series("p");
-    let s = 96;
-    let stats = SeqStats::compute(&ts, s);
-    let prep = PreparedSeqs::build(&arts, &ts, &stats, false).unwrap();
-    let scalar = CountingDistance::new(&ts, &stats, DistanceKind::Raw);
-    let (dists, _) = arts.query_row_chunk(&prep, 10, &[500, 700, 900]).unwrap();
-    for (t, &j) in [500usize, 700, 900].iter().enumerate() {
-        let want = scalar.dist(10, j);
-        assert!(
-            (dists[t] - want).abs() < 1e-3,
-            "raw cand {j}: {} vs {}",
-            dists[t],
-            want
-        );
+        let xla_profile = arts.matrix_profile(&prep, s).unwrap();
+        let (serial, _) = Scamp::matrix_profile(&ts, &stats);
+        assert_eq!(xla_profile.len(), serial.len());
+        for i in 0..serial.len() {
+            assert!(
+                (xla_profile.nnd[i] - serial.nnd[i]).abs() < 5e-3,
+                "i={i}: xla {} vs serial {}",
+                xla_profile.nnd[i],
+                serial.nnd[i]
+            );
+        }
     }
-    // params type-checks for the protocol
-    let _ = SearchParams::new(s, 4, 4).dadd_protocol();
+
+    #[test]
+    fn batch_engine_early_exit_and_accounting() {
+        let Some(arts) = artifacts() else { return };
+        let ts = generators::ecg_like(2_500, 90, 1, 13).into_series("e");
+        let s = 90;
+        let stats = SeqStats::compute(&ts, s);
+        let mut eng = XlaBatchEngine::new(&arts, &ts, &stats, true).unwrap();
+        assert_eq!(eng.len(), ts.num_sequences(s));
+
+        let cands: Vec<usize> = (600..eng.len()).collect();
+        // a huge stop threshold: the very first chunk will contain a distance
+        // below it, so evaluation must stop after one chunk
+        let (done, dists) = eng.query_row(0, &cands, f64::INFINITY).unwrap();
+        assert_eq!(done, arts.query_b().min(cands.len()));
+        assert_eq!(dists.len(), done);
+        assert_eq!(eng.pair_evals, done as u64);
+
+        // stop_below = 0: never stops early, evaluates everything
+        let evals_before = eng.pair_evals;
+        let (done_all, _) = eng.query_row(0, &cands, 0.0).unwrap();
+        assert_eq!(done_all, cands.len());
+        assert_eq!(eng.pair_evals - evals_before, cands.len() as u64);
+    }
+
+    #[test]
+    fn rejects_sequences_longer_than_s_pad() {
+        let Some(arts) = artifacts() else { return };
+        let ts = generators::sine_with_noise(4_000, 0.1, 5).into_series("s");
+        let s = arts.s_pad() + 8;
+        let stats = SeqStats::compute(&ts, s);
+        assert!(PreparedSeqs::build(&arts, &ts, &stats, true).is_err());
+    }
+
+    #[test]
+    fn dadd_protocol_raw_rows_supported() {
+        let Some(arts) = artifacts() else { return };
+        let ts = generators::power_like(1_500, 96, 1, 6).into_series("p");
+        let s = 96;
+        let stats = SeqStats::compute(&ts, s);
+        let prep = PreparedSeqs::build(&arts, &ts, &stats, false).unwrap();
+        let scalar = CountingDistance::new(&ts, &stats, DistanceKind::Raw);
+        let (dists, _) = arts.query_row_chunk(&prep, 10, &[500, 700, 900]).unwrap();
+        for (t, &j) in [500usize, 700, 900].iter().enumerate() {
+            let want = scalar.dist(10, j);
+            assert!(
+                (dists[t] - want).abs() < 1e-3,
+                "raw cand {j}: {} vs {}",
+                dists[t],
+                want
+            );
+        }
+        // params type-checks for the protocol
+        let _ = SearchParams::new(s, 4, 4).dadd_protocol();
+    }
 }

@@ -4,7 +4,7 @@
 
 use hstime::algo::{self, Algorithm};
 use hstime::config::{SaxParams, SearchParams};
-use hstime::dist::{CountingDistance, DistanceKind};
+use hstime::dist::{CountingDistance, DistanceKind, Kernel};
 use hstime::prelude::*;
 use hstime::prop_assert;
 use hstime::sax::{breakpoints, mindist, SaxIndex};
@@ -265,6 +265,55 @@ fn prop_json_roundtrip_reports() {
                 == Some(rep.distance_calls),
             "calls lost in roundtrip"
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simd_kernel_bit_identical_to_scalar() {
+    // The chunked 8-lane kernel drains its lane array in ascending index
+    // order — the exact addition sequence of the scalar chain — so every
+    // evaluation must match the scalar kernel bit for bit: completed
+    // distances, early-abandoned partials (same cutoff, same 16-point
+    // check boundaries), and the call counters.
+    check("simd==scalar-kernel", 43, 10, |g| {
+        let s = g.size(3, 260); // both sub-lane and multi-chunk lengths
+        let n = (s * g.size(5, 9)).max(2 * s + 8);
+        let ts = random_series(g, n);
+        let stats = SeqStats::compute(&ts, s);
+        for kind in [DistanceKind::Znorm, DistanceKind::Raw] {
+            let sc = CountingDistance::with_kernel(&ts, &stats, kind, Kernel::Scalar);
+            let si = CountingDistance::with_kernel(&ts, &stats, kind, Kernel::Simd);
+            let nseq = stats.len();
+            for _ in 0..25 {
+                let i = g.rng.below(nseq);
+                let j = g.rng.below(nseq);
+                // completed evaluation
+                let full_sc = sc.dist(i, j);
+                let full_si = si.dist(i, j);
+                prop_assert!(
+                    full_sc.to_bits() == full_si.to_bits(),
+                    "completed d({i},{j}) {full_sc} vs {full_si} (kind {kind:?}, s={s})"
+                );
+                // abandoned evaluation: a random cutoff, frequently below
+                // the true distance so the early exit actually triggers —
+                // the returned partial bound must also be bit-identical
+                let cutoff = full_sc * g.f64_in(0.0, 1.5);
+                let ab_sc = sc.dist_early(i, j, cutoff);
+                let ab_si = si.dist_early(i, j, cutoff);
+                prop_assert!(
+                    ab_sc.to_bits() == ab_si.to_bits(),
+                    "abandoned d({i},{j}) cutoff {cutoff}: {ab_sc} vs {ab_si} \
+                     (kind {kind:?}, s={s})"
+                );
+            }
+            prop_assert!(
+                sc.calls() == si.calls(),
+                "call counters diverged: {} vs {} (kind {kind:?})",
+                sc.calls(),
+                si.calls()
+            );
+        }
         Ok(())
     });
 }
