@@ -54,5 +54,8 @@ for f in BENCH_*.json; do
     cargo run -q --release --bin hst -- bench --check "$f"
 done
 
+step "bench trajectory: BENCH_6 -> BENCH_7 per-cell diff (informational, non-fatal)"
+cargo run -q --release --bin hst -- bench --diff BENCH_6.json BENCH_7.json || true
+
 echo
 echo "verify: all gates passed"

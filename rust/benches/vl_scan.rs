@@ -1,0 +1,154 @@
+//! `cargo bench --bench vl_scan` — variable-length discord search:
+//! the work-sharing `hst-vl` engine vs `merlin` vs independently re-run
+//! per-length serial `hst`, over one shared [`LengthRange`].
+//!
+//! Each length row asserts `hst-vl`'s discord position and nnd **bit
+//! pattern** equal the per-length cold serial `hst` run — the warm
+//! transfers must never change a result, only the call counts. The
+//! summary row asserts `hst-vl`'s total calls are strictly below both
+//! `merlin`'s and the per-length re-runs' totals on the same range.
+//!
+//! Flags (after `--`): --min-len N / --max-len N / --step N (default
+//! 64..128 step 16), --n N (points, default 6000), --k N, --seed N,
+//! --json.
+
+use hstime::algo::merlin::Merlin;
+use hstime::algo::Algorithm as _;
+use hstime::prelude::*;
+use hstime::ts::generators;
+use hstime::util::cli::Args;
+use hstime::util::json::Json;
+use hstime::vl::HstVl;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let n = args.get_usize("n", 6_000);
+    let k = args.get_usize("k", 1);
+    let seed = args.get_u64("seed", 7);
+    let json = args.has("json");
+    let range = LengthRange::new(
+        args.get_usize("min-len", 64),
+        args.get_usize("max-len", 128),
+        args.get_usize("step", 16),
+    );
+
+    let t0 = std::time::Instant::now();
+    let ts = generators::ecg_like(n, 100, 2, seed).into_series("vl-bench");
+    let base = SearchParams::new(range.max, 4, 4)
+        .with_discords(k)
+        .with_seed(seed);
+
+    let vt = std::time::Instant::now();
+    let ctx = SearchContext::builder(&ts).build();
+    let vl = HstVl::from_range(range).scan(&ctx, &base)?;
+    let vl_ms = vt.elapsed().as_secs_f64() * 1e3;
+
+    if !json {
+        println!(
+            "{:>5}  {:>8}  {:>12}  {:>12}  {:>10}  {:>10}  {:>6}",
+            "s", "N", "vl calls", "hst calls", "transfer", "nnd/\u{221a}s", "state"
+        );
+    }
+    let mut rows: Vec<Json> = Vec::new();
+    let mut rerun_total = 0u64;
+    for vl_len in &vl.lengths {
+        // the independent baseline: cold serial hst on a fresh context,
+        // with the exact per-length params the scan used
+        let pl = HstVl::params_for_length(&base, vl_len.s);
+        let cold_ctx = SearchContext::builder(&ts).build();
+        let cold = algo::hst::HstSearch::default().run_ctx(&cold_ctx, &pl)?;
+        rerun_total += cold.distance_calls;
+
+        // exactness gate, bit for bit, every row
+        assert_eq!(
+            vl_len.report.discords.len(),
+            cold.discords.len(),
+            "s={}: discord count drift",
+            vl_len.s
+        );
+        for (a, b) in vl_len.report.discords.iter().zip(&cold.discords) {
+            assert_eq!(a.position, b.position, "s={}: position drift", vl_len.s);
+            assert_eq!(
+                a.nnd.to_bits(),
+                b.nnd.to_bits(),
+                "s={}: nnd drift {:016x} vs {:016x}",
+                vl_len.s,
+                a.nnd.to_bits(),
+                b.nnd.to_bits()
+            );
+        }
+
+        let top = &vl_len.report.discords[0];
+        let score = metrics::length_normalized_nnd(top.nnd, vl_len.s);
+        if json {
+            rows.push(
+                Json::obj()
+                    .set("s", vl_len.s)
+                    .set("n_sequences", vl_len.report.n_sequences)
+                    .set("vl_calls", vl_len.report.distance_calls)
+                    .set("hst_calls", cold.distance_calls)
+                    .set("transfer_calls", vl_len.transfer_calls)
+                    .set("position", top.position)
+                    .set("nnd", top.nnd)
+                    .set("score", score)
+                    .set("warm", vl_len.warm),
+            );
+        } else {
+            println!(
+                "{:>5}  {:>8}  {:>12}  {:>12}  {:>10}  {:>10.4}  {:>6}",
+                vl_len.s,
+                vl_len.report.n_sequences,
+                vl_len.report.distance_calls,
+                cold.distance_calls,
+                vl_len.transfer_calls,
+                score,
+                if vl_len.warm { "warm" } else { "cold" }
+            );
+        }
+    }
+
+    // merlin over the same range, same guard, fresh context
+    let mt = std::time::Instant::now();
+    let merlin_ctx = SearchContext::builder(&ts).build();
+    let (_, merlin_calls) = Merlin::from_range(range).scan(&merlin_ctx)?;
+    let merlin_ms = mt.elapsed().as_secs_f64() * 1e3;
+
+    // the work-sharing contract: strictly below merlin AND the re-runs
+    assert!(
+        vl.total_calls < merlin_calls,
+        "hst-vl {} must be strictly below merlin {}",
+        vl.total_calls,
+        merlin_calls
+    );
+    assert!(
+        vl.total_calls < rerun_total,
+        "hst-vl {} must be strictly below per-length re-runs {}",
+        vl.total_calls,
+        rerun_total
+    );
+
+    if json {
+        println!(
+            "{}",
+            Json::obj()
+                .set("rows", rows)
+                .set("vl_total_calls", vl.total_calls)
+                .set("rerun_total_calls", rerun_total)
+                .set("merlin_total_calls", merlin_calls)
+                .set("vl_ms", vl_ms)
+                .set("merlin_ms", merlin_ms)
+        );
+    } else {
+        println!(
+            "totals: hst-vl {} calls ({vl_ms:.2}ms)  per-length hst {} \
+             calls  merlin {} calls ({merlin_ms:.2}ms)  D-speedup vs merlin \
+             {:.1}",
+            vl.total_calls,
+            rerun_total,
+            merlin_calls,
+            merlin_calls as f64 / vl.total_calls.max(1) as f64
+        );
+    }
+    eprintln!("[vl_scan] total {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -17,10 +17,11 @@ use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
-use crate::config::SearchParams;
+use crate::config::{LengthRange, SearchParams};
 use crate::context::SearchContext;
 use crate::discord::Discord;
 use crate::dist::DistanceKind;
+use crate::metrics::length_normalized_nnd;
 use crate::ts::TimeSeries;
 
 use super::dadd::Dadd;
@@ -72,6 +73,27 @@ impl Merlin {
         self
     }
 
+    /// Scan a shared [`LengthRange`] (the form `hst-vl` comparisons use);
+    /// panics on an invalid range — [`scan`](Self::scan) re-validates
+    /// fallibly for ranges built from the raw public fields.
+    pub fn from_range(range: LengthRange) -> Merlin {
+        range.validate().expect("invalid length range");
+        Merlin {
+            min_len: range.min,
+            max_len: range.max,
+            step: range.step,
+        }
+    }
+
+    /// The configured fields as the shared [`LengthRange`] type.
+    pub fn range(&self) -> LengthRange {
+        LengthRange {
+            min: self.min_len,
+            max: self.max_len,
+            step: self.step,
+        }
+    }
+
     /// One-shot scan of `ts` through a throwaway context (see
     /// [`scan`](Self::scan) for the session form).
     pub fn scan_series(&self, ts: &TimeSeries) -> Result<(Vec<LengthDiscord>, u64)> {
@@ -85,20 +107,19 @@ impl Merlin {
     /// the same context).
     pub fn scan(&self, ctx: &SearchContext) -> Result<(Vec<LengthDiscord>, u64)> {
         let ts = ctx.series();
-        ensure!(self.min_len >= 4, "min_len too small");
-        ensure!(self.min_len <= self.max_len, "empty length range");
+        let range = self.range();
+        range.validate().map_err(|e| anyhow::anyhow!(e))?;
         ensure!(
-            ts.n_total() >= 2 * self.max_len,
+            ts.n_total() >= 2 * range.max,
             "series too short for max_len {}",
-            self.max_len
+            range.max
         );
 
         let mut out: Vec<LengthDiscord> = Vec::new();
         let mut total_calls = 0u64;
         let mut recent: Vec<f64> = Vec::new(); // last discord nnds
 
-        let mut s = self.min_len;
-        while s <= self.max_len {
+        for s in range.lengths() {
             // Budget is enforced cumulatively across lengths here; within
             // one length, DADD checks against the per-length session, so
             // the overshoot is bounded by one length's cost.
@@ -143,7 +164,6 @@ impl Merlin {
                 r_used: r,
                 attempts,
             });
-            s += self.step;
         }
         Ok((out, total_calls))
     }
@@ -155,32 +175,37 @@ impl Algorithm for Merlin {
     }
 
     /// Multi-length scan as a registry engine: lengths come from the
-    /// configured range, or — for the all-zero [`Default`] registry form —
-    /// from `params.sax.s` (lengths `[s/2, s]`, step `max(1, s/8)`).
-    /// The report carries the top `params.k` discords across all lengths,
-    /// ranked by raw nnd (longer sequences naturally score higher —
-    /// callers comparing across lengths should inspect the per-length
-    /// results via [`scan`](Self::scan)).
+    /// configured range, from `params.s_range`, or — for the all-zero
+    /// [`Default`] registry form with no range in the params — from
+    /// [`LengthRange::around`]`(params.sax.s)`. The report carries the
+    /// top `params.k` discords across all lengths, ranked by the
+    /// length-normalized score
+    /// [`length_normalized_nnd`](crate::metrics::length_normalized_nnd)
+    /// (`nnd/√s` — the same scale `hst-vl` ranks on; raw nnd grows with
+    /// √s, which made raw ranking favor longer lengths). Per-length raw
+    /// results remain available via [`scan`](Self::scan).
     fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         let s = params.sax.s;
         ctx.check(0)?;
         let start = Instant::now();
-        let scan_cfg = if self.max_len == 0 {
-            Merlin {
-                min_len: (s / 2).max(4),
-                max_len: s,
-                step: (s / 8).max(1),
-            }
+        let range = if self.max_len == 0 {
+            params.s_range.unwrap_or_else(|| LengthRange::around(s))
         } else {
-            self.clone()
+            self.range()
+        };
+        let scan_cfg = Merlin {
+            min_len: range.min,
+            max_len: range.max,
+            step: range.step,
         };
         let (found, calls) = scan_cfg.scan(ctx)?;
         let mut ranked: Vec<&LengthDiscord> = found.iter().collect();
         ranked.sort_by(|a, b| {
-            b.discord
-                .nnd
-                .partial_cmp(&a.discord.nnd)
+            let sa = length_normalized_nnd(a.discord.nnd, a.s);
+            let sb = length_normalized_nnd(b.discord.nnd, b.s);
+            sb.partial_cmp(&sa)
                 .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.s.cmp(&b.s))
         });
         let discords: Vec<Discord> = ranked
             .iter()
@@ -263,7 +288,7 @@ mod tests {
     #[test]
     fn registry_form_scans_around_params_s() {
         // by_name("merlin") returns the all-zero Default: the scan range
-        // derives from params.sax.s
+        // derives from params.sax.s via the shared LengthRange::around
         let ts = generators::ecg_like(900, 80, 1, 403).into_series("e");
         let engine = crate::algo::by_name("merlin").unwrap();
         let params = SearchParams::new(48, 4, 4);
@@ -271,9 +296,52 @@ mod tests {
         assert_eq!(rep.algo, "merlin");
         assert_eq!(rep.discords.len(), 1);
         assert!(rep.distance_calls > 0);
-        // the reported discord is the best across the scanned lengths, so
-        // it must score at least the exact s-length discord
-        let truth = BruteForce.run(&ts, &params).unwrap();
-        assert!(rep.discords[0].nnd >= truth.discords[0].nnd - 5e-8);
+        // the reported discord is the per-length scan's best under the
+        // length-normalized (nnd/√s) ranking
+        let (found, _) = Merlin::from_range(LengthRange::around(48))
+            .scan_series(&ts)
+            .unwrap();
+        let best = found
+            .iter()
+            .max_by(|a, b| {
+                length_normalized_nnd(a.discord.nnd, a.s)
+                    .partial_cmp(&length_normalized_nnd(b.discord.nnd, b.s))
+                    .unwrap()
+            })
+            .unwrap();
+        assert_eq!(rep.discords[0].position, best.discord.position);
+        assert_eq!(
+            rep.discords[0].nnd.to_bits(),
+            best.discord.nnd.to_bits()
+        );
+    }
+
+    #[test]
+    fn params_s_range_overrides_the_derivation() {
+        let ts = generators::ecg_like(900, 80, 1, 404).into_series("e");
+        let range = LengthRange::new(40, 48, 4);
+        let params = SearchParams::new(48, 4, 4).with_length_range(range);
+        let rep = Merlin::default()
+            .run_ctx(&SearchContext::builder(&ts).build(), &params)
+            .unwrap();
+        // the explicit range scans 3 lengths; its best matches a direct scan
+        let (found, _) = Merlin::from_range(range).scan_series(&ts).unwrap();
+        assert_eq!(found.len(), 3);
+        let best = found
+            .iter()
+            .max_by(|a, b| {
+                length_normalized_nnd(a.discord.nnd, a.s)
+                    .partial_cmp(&length_normalized_nnd(b.discord.nnd, b.s))
+                    .unwrap()
+            })
+            .unwrap();
+        assert_eq!(rep.discords[0].position, best.discord.position);
+        // an explicitly configured engine wins over both
+        let rep2 = Merlin::new(44, 48)
+            .with_step(4)
+            .run_ctx(&SearchContext::builder(&ts).build(), &params)
+            .unwrap();
+        assert!(rep2.distance_calls > 0);
+        assert_eq!(Merlin::new(44, 48).with_step(4).range().count(), 2);
     }
 }

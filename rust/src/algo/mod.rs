@@ -19,6 +19,11 @@
 //!   univariate faces, which treat a plain series as one channel; the
 //!   multivariate entry point is
 //!   [`MdimAlgorithm`](crate::mdim::MdimAlgorithm).
+//! * [`vl::HstVl`](crate::vl::HstVl) — `hst-vl`, the variable-length
+//!   work-sharing engine: one ascending pass over a
+//!   [`LengthRange`](crate::config::LengthRange), bit-identical to serial
+//!   `hst` at every length, warm-carrying stats and nnd profiles across
+//!   lengths instead of re-running cold like [`merlin`].
 //!
 //! Every engine implements [`Algorithm`] and returns a [`SearchReport`]
 //! carrying the discord set, the distance-call count (the paper's primary
@@ -123,7 +128,7 @@ pub trait Algorithm {
 /// and the id equals the engine's [`Algorithm::name`]. One entry per row
 /// of the README "Engines" table; `tests/docs_consistency.rs` keeps the
 /// two in sync so the table can never go stale again.
-pub const ALL_ENGINES: [&str; 13] = [
+pub const ALL_ENGINES: [&str; 14] = [
     "brute",
     "brute-md",
     "hotsax",
@@ -131,6 +136,7 @@ pub const ALL_ENGINES: [&str; 13] = [
     "hst-par",
     "hst-md",
     "hst-stream",
+    "hst-vl",
     "dadd",
     "rra",
     "scamp",
@@ -154,6 +160,9 @@ pub fn by_name(name: &str) -> Option<Box<dyn Algorithm + Send + Sync>> {
         }
         "hst-md" | "hstmd" | "hst_md" => {
             Some(Box::new(crate::mdim::hst::HstMd::default()))
+        }
+        "hst-vl" | "hstvl" | "hst_vl" => {
+            Some(Box::new(crate::vl::HstVl::default()))
         }
         "dadd" | "drag" => Some(Box::new(dadd::Dadd::default())),
         "rra" => Some(Box::new(rra::Rra::default())),

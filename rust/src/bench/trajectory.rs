@@ -50,7 +50,7 @@ pub const TRAJECTORY_SCHEMA: &str = "hst-bench-trajectory/1";
 
 /// Fixture subset + length cap of the `--quick` CI tier: the three
 /// small-`s` registry datasets, a few hundred points each — the full
-/// 13-engine sweep finishes in CI-smoke time.
+/// all-engine sweep finishes in CI-smoke time.
 const QUICK_FIXTURES: [&str; 3] = ["ECG 0606", "NPRS 43", "Shuttle TEK 14"];
 const QUICK_CAP: usize = 600;
 /// Length cap of the standard tier (all registry fixtures).
@@ -474,7 +474,7 @@ mod tests {
     #[test]
     fn smoke_sweep_emits_valid_records() {
         // a two-engine micro sweep through the real machinery; the full
-        // 13-engine sweep is the ci/verify.sh `bench --quick` smoke step
+        // all-engine sweep is the ci/verify.sh `bench --quick` smoke step
         let cfg = BenchConfig::smoke();
         let records =
             run_trajectory_filtered(&cfg, true, Kernel::active(), &["hst", "hotsax"])

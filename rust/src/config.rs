@@ -51,6 +51,81 @@ impl SaxParams {
     }
 }
 
+/// An inclusive range of sequence lengths `{min, max, step}` scanned by
+/// the variable-length engines ([`hst-vl`](crate::vl::HstVl) and
+/// [`merlin`](crate::algo::merlin::Merlin)).
+///
+/// The all-zero [`Default`] is the registry sentinel ("derive the range
+/// from `SearchParams.sax.s` at run time"); a populated range must pass
+/// [`validate`](Self::validate) before use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct LengthRange {
+    /// Smallest scanned length (inclusive).
+    pub min: usize,
+    /// Largest scanned length (inclusive).
+    pub max: usize,
+    /// Stride between scanned lengths.
+    pub step: usize,
+}
+
+impl LengthRange {
+    /// Build a range; panics on invalid combinations (use
+    /// [`validate`](Self::validate) for fallible construction).
+    pub fn new(min: usize, max: usize, step: usize) -> LengthRange {
+        let r = LengthRange { min, max, step };
+        r.validate().expect("invalid length range");
+        r
+    }
+
+    /// The run-time derivation both variable-length engines share when a
+    /// request names only a single length `s`: scan `[s/2, s]` (min
+    /// clamped to 4) in steps of `s/8` (at least 1).
+    pub fn around(s: usize) -> LengthRange {
+        LengthRange {
+            min: (s / 2).max(4),
+            max: s,
+            step: (s / 8).max(1),
+        }
+    }
+
+    /// Check the constraints every consumer relies on, naming the field
+    /// that fails: `min` ≥ 4 (shorter windows degenerate under SAX),
+    /// `max` ≥ `min`, `step` ≥ 1.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.min < 4 {
+            return Err(format!("length range min={} must be >= 4", self.min));
+        }
+        if self.max < self.min {
+            return Err(format!(
+                "length range max={} must be >= min={}",
+                self.max, self.min
+            ));
+        }
+        if self.step == 0 {
+            return Err("length range step must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// The lengths this range scans, ascending: `min, min+step, …, ≤ max`.
+    pub fn lengths(&self) -> impl Iterator<Item = usize> {
+        (self.min..=self.max).step_by(self.step.max(1))
+    }
+
+    /// Number of lengths [`lengths`](Self::lengths) yields.
+    pub fn count(&self) -> usize {
+        if self.max < self.min || self.step == 0 {
+            return 0;
+        }
+        (self.max - self.min) / self.step + 1
+    }
+
+    /// Whether this is the all-zero registry sentinel (no explicit range).
+    pub fn is_unset(&self) -> bool {
+        *self == LengthRange::default()
+    }
+}
+
 /// Full search request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SearchParams {
@@ -71,6 +146,11 @@ pub struct SearchParams {
     /// environment variable, then the machine's available parallelism.
     /// Serial engines ignore it.
     pub threads: usize,
+    /// Optional length range for the variable-length engines (`hst-vl`,
+    /// `merlin`). `None` (the default) lets those engines derive
+    /// [`LengthRange::around`]`(sax.s)` at run time; single-length
+    /// engines ignore it. Serialized as `s_min`/`s_max`/`s_step`.
+    pub s_range: Option<LengthRange>,
 }
 
 impl SearchParams {
@@ -83,6 +163,7 @@ impl SearchParams {
             znormalize: true,
             allow_self_match: false,
             threads: 0,
+            s_range: None,
         }
     }
 
@@ -105,6 +186,15 @@ impl SearchParams {
         self
     }
 
+    /// Set the length range the variable-length engines scan (validated
+    /// here, so an inverted or zero-step range fails at construction, not
+    /// mid-search).
+    pub fn with_length_range(mut self, range: LengthRange) -> SearchParams {
+        range.validate().expect("invalid length range");
+        self.s_range = Some(range);
+        self
+    }
+
     /// Table 7 (DADD) protocol: raw Euclidean distance, overlaps allowed.
     pub fn dadd_protocol(mut self) -> SearchParams {
         self.znormalize = false;
@@ -122,9 +212,11 @@ impl SearchParams {
         }
     }
 
-    /// Serialize for the service protocol / reports.
+    /// Serialize for the service protocol / reports. The length range is
+    /// emitted (as `s_min`/`s_max`/`s_step`) only when set, so
+    /// single-length requests roundtrip unchanged.
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let j = Json::obj()
             .set("s", self.sax.s)
             .set("p", self.sax.p)
             .set("alphabet", self.sax.alphabet)
@@ -132,11 +224,18 @@ impl SearchParams {
             .set("seed", self.seed)
             .set("znormalize", self.znormalize)
             .set("allow_self_match", self.allow_self_match)
-            .set("threads", self.threads)
+            .set("threads", self.threads);
+        match self.s_range {
+            None => j,
+            Some(r) => j
+                .set("s_min", r.min)
+                .set("s_max", r.max)
+                .set("s_step", r.step),
+        }
     }
 
     /// Field names [`from_json`](Self::from_json) accepts.
-    pub const JSON_FIELDS: [&'static str; 8] = [
+    pub const JSON_FIELDS: [&'static str; 11] = [
         "s",
         "p",
         "alphabet",
@@ -145,6 +244,9 @@ impl SearchParams {
         "znormalize",
         "allow_self_match",
         "threads",
+        "s_min",
+        "s_max",
+        "s_step",
     ];
 
     /// Parse from the service protocol. Missing fields get defaults;
@@ -182,8 +284,39 @@ impl SearchParams {
         let alphabet = u("alphabet", 4)?;
         let sax = SaxParams { s, p, alphabet };
         sax.validate()?;
+        // `s_min`/`s_max` travel together; `s_step` defaults to 1. The
+        // parsed range must validate here, not at first use inside an
+        // engine.
+        let has_min = v.get("s_min").is_some();
+        let has_max = v.get("s_max").is_some();
+        let s_range = match (has_min, has_max) {
+            (false, false) => {
+                if v.get("s_step").is_some() {
+                    return Err(
+                        "field `s_step` requires `s_min` and `s_max`".into()
+                    );
+                }
+                None
+            }
+            (true, true) => {
+                let range = LengthRange {
+                    min: u("s_min", 0)?,
+                    max: u("s_max", 0)?,
+                    step: u("s_step", 1)?,
+                };
+                range.validate()?;
+                Some(range)
+            }
+            (true, false) => {
+                return Err("field `s_min` requires `s_max`".into())
+            }
+            (false, true) => {
+                return Err("field `s_max` requires `s_min`".into())
+            }
+        };
         Ok(SearchParams {
             sax,
+            s_range,
             k: u("k", 1)?,
             seed: v.get("seed").and_then(|j| j.as_u64()).unwrap_or(0),
             znormalize: v
@@ -314,5 +447,87 @@ mod tests {
         let p = SearchParams::new(512, 4, 4).dadd_protocol();
         assert!(!p.znormalize);
         assert!(p.allow_self_match);
+    }
+
+    #[test]
+    fn length_range_validation_names_the_field() {
+        let err = LengthRange { min: 2, max: 8, step: 1 }.validate().unwrap_err();
+        assert!(err.contains("min=2"), "{err}");
+        let err = LengthRange { min: 8, max: 4, step: 1 }.validate().unwrap_err();
+        assert!(err.contains("max=4"), "{err}");
+        let err = LengthRange { min: 4, max: 8, step: 0 }.validate().unwrap_err();
+        assert!(err.contains("step"), "{err}");
+        assert!(LengthRange { min: 4, max: 4, step: 1 }.validate().is_ok());
+    }
+
+    #[test]
+    fn length_range_lengths_and_count_agree() {
+        for r in [
+            LengthRange::new(4, 4, 1),
+            LengthRange::new(8, 32, 8),
+            LengthRange::new(8, 30, 8), // max not on the grid
+            LengthRange::new(5, 9, 2),
+        ] {
+            let lens: Vec<usize> = r.lengths().collect();
+            assert_eq!(lens.len(), r.count(), "{r:?}");
+            assert_eq!(lens.first(), Some(&r.min), "{r:?}");
+            assert!(lens.iter().all(|&s| s <= r.max), "{r:?}");
+            assert!(
+                lens.windows(2).all(|w| w[1] - w[0] == r.step),
+                "{r:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn length_range_around_matches_the_merlin_derivation() {
+        let r = LengthRange::around(64);
+        assert_eq!(r, LengthRange { min: 32, max: 64, step: 8 });
+        // small s clamps: min >= 4, step >= 1
+        let r = LengthRange::around(6);
+        assert_eq!(r, LengthRange { min: 4, max: 6, step: 1 });
+        assert!(r.validate().is_ok());
+        assert!(!r.is_unset());
+        assert!(LengthRange::default().is_unset());
+    }
+
+    #[test]
+    fn length_range_json_roundtrip_on_search_params() {
+        let p = SearchParams::new(64, 4, 4)
+            .with_length_range(LengthRange::new(32, 64, 8));
+        let j = p.to_json();
+        assert_eq!(j.get("s_min").and_then(|v| v.as_u64()), Some(32));
+        assert_eq!(j.get("s_max").and_then(|v| v.as_u64()), Some(64));
+        assert_eq!(j.get("s_step").and_then(|v| v.as_u64()), Some(8));
+        let back = SearchParams::from_json(&j).unwrap();
+        assert_eq!(p, back);
+        // no range → the keys stay absent and roundtrip to None
+        let p = SearchParams::new(64, 4, 4);
+        let j = p.to_json();
+        assert!(j.get("s_min").is_none());
+        assert_eq!(SearchParams::from_json(&j).unwrap().s_range, None);
+    }
+
+    #[test]
+    fn length_range_json_rejects_partial_or_invalid_ranges() {
+        let j = Json::parse(r#"{"s": 64, "s_min": 32}"#).unwrap();
+        let err = SearchParams::from_json(&j).unwrap_err();
+        assert!(err.contains("`s_min` requires `s_max`"), "{err}");
+        let j = Json::parse(r#"{"s": 64, "s_max": 64}"#).unwrap();
+        let err = SearchParams::from_json(&j).unwrap_err();
+        assert!(err.contains("`s_max` requires `s_min`"), "{err}");
+        let j = Json::parse(r#"{"s": 64, "s_step": 4}"#).unwrap();
+        let err = SearchParams::from_json(&j).unwrap_err();
+        assert!(err.contains("`s_step` requires"), "{err}");
+        // an inverted range fails LengthRange::validate at parse time
+        let j =
+            Json::parse(r#"{"s": 64, "s_min": 64, "s_max": 32}"#).unwrap();
+        let err = SearchParams::from_json(&j).unwrap_err();
+        assert!(err.contains("max=32"), "{err}");
+        // s_step defaults to 1 when the pair is present
+        let j =
+            Json::parse(r#"{"s": 64, "s_min": 32, "s_max": 40}"#).unwrap();
+        let p = SearchParams::from_json(&j).unwrap();
+        assert_eq!(p.s_range, Some(LengthRange { min: 32, max: 40, step: 1 }));
     }
 }

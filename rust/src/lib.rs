@@ -7,7 +7,8 @@
 //!
 //! * **L3 (this crate)** — the discord-search engines (HST and its
 //!   sharded-parallel `hst-par`, the incremental `hst-stream`, the
-//!   multivariate `brute-md`/`hst-md` of the [`mdim`] subsystem, HOT
+//!   multivariate `brute-md`/`hst-md` of the [`mdim`] subsystem, the
+//!   variable-length work-sharing `hst-vl` of the [`vl`] subsystem, HOT
 //!   SAX, brute force, DADD/DRAG, RRA, SCAMP/STOMP serial and parallel),
 //!   the [`exec`] worker-pool subsystem, the [`stream`] sliding-window
 //!   monitor, the SAX substrate, dataset generators, the batch-search
@@ -72,11 +73,12 @@ pub mod stream;
 pub mod tables;
 pub mod ts;
 pub mod util;
+pub mod vl;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::algo::{self, Algorithm, SearchReport};
-    pub use crate::config::{SaxParams, SearchParams};
+    pub use crate::config::{LengthRange, SaxParams, SearchParams};
     pub use crate::context::{
         CancellationToken, ContextBuilder, SearchContext, SearchObserver,
     };
@@ -86,10 +88,14 @@ pub mod prelude {
     };
     pub use crate::exec::ExecPolicy;
     pub use crate::mdim::{MdimAlgorithm, MdimContext, MdimParams, MdimReport};
-    pub use crate::metrics::{cps, cps_per_channel, d_speedup, t_speedup};
+    pub use crate::metrics::{
+        self, cps, cps_per_channel, d_speedup, length_normalized_nnd,
+        t_speedup,
+    };
     pub use crate::sax::{SaxIndex, SaxWord};
     pub use crate::stream::{HstStream, StreamDiscord, StreamUpdate, StreamingMonitor};
     pub use crate::ts::series::IntoSeries;
     pub use crate::ts::{generators, MultiSeries, TimeSeries};
     pub use crate::util::rng::Rng64;
+    pub use crate::vl::{HstVl, VlContext, VlReport};
 }

@@ -43,6 +43,7 @@ fn run(args: &Args) -> Result<()> {
         Some("report") => report(args),
         Some("plot") => plot(args),
         Some("merlin") => merlin(args),
+        Some("vl") => vl(args),
         Some("monitor") => monitor(args),
         Some("stream") => stream(args),
         Some("mdim") => mdim(args),
@@ -58,7 +59,7 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: hst <discover|table|bench|report|plot|merlin|monitor|stream|mdim|generate|serve|submit|info> [flags]
+const USAGE: &str = "usage: hst <discover|table|bench|report|plot|merlin|vl|monitor|stream|mdim|generate|serve|submit|info> [flags]
   hst discover 'ECG 108' --algo hst --k 3 --scale-div 8
   hst discover 'ECG 108' --algo hst-par --threads 4
   hst discover synthetic --noise 0.001 --n 20000 --s 120
@@ -73,6 +74,7 @@ const USAGE: &str = "usage: hst <discover|table|bench|report|plot|merlin|monitor
   hst report --out report.md --scale-div 8
   hst plot 'Shuttle TEK 14' --k 2
   hst merlin 'ECG 108' --min-len 80 --max-len 120 --step 8
+  hst vl 'ECG 108' --min-len 80 --max-len 120 --step 8    (work-sharing hst-vl scan)
   hst monitor 'ECG 15' --window 4000 --batch 1000
   hst stream 'ECG 15' --window 4000 --refresh-every 500   (incremental hst-stream)
   hst stream --file points.txt --s 64    (or pipe points, one per line, on stdin)
@@ -320,6 +322,62 @@ fn merlin(args: &Args) -> Result<()> {
         println!(
             "  L={:<5} discord @ {:<8} nnd {:<10.4} (r={:.4}, {} attempts)",
             ld.s, ld.discord.position, ld.discord.nnd, ld.r_used, ld.attempts
+        );
+    }
+    Ok(())
+}
+
+fn vl(args: &Args) -> Result<()> {
+    let name = args.positionals.first().context("vl needs a dataset")?;
+    let d = datasets::by_name(name)
+        .with_context(|| format!("unknown dataset {name:?}"))?;
+    let ts = d.generate_scaled(args.get_usize("scale-div", 8));
+    // same defaults as `hst merlin`, so the two scans cover one range
+    let range = hstime::config::LengthRange {
+        min: args.get_usize("min-len", (d.s / 2).max(4)),
+        max: args.get_usize("max-len", d.s),
+        step: args.get_usize("step", (d.s / 8).max(1)),
+    };
+    let base = SearchParams::new(d.s, d.p, d.alphabet)
+        .with_discords(args.get_usize("k", 1))
+        .with_seed(args.get_u64("seed", 0));
+    let ctx = hstime::context::SearchContext::builder(&ts).build();
+    // scan() validates the range with named errors (no panicking ctor)
+    let report = hstime::vl::HstVl { range }.scan(&ctx, &base)?;
+    if args.has("json") {
+        println!("{}", report.to_json().set("dataset", ts.name.as_str()));
+        return Ok(());
+    }
+    println!(
+        "hst-vl over s in [{}, {}] step {} — {} lengths, {} distance calls, {:.3}s",
+        range.min,
+        range.max,
+        range.step,
+        report.lengths.len(),
+        report.total_calls,
+        report.elapsed.as_secs_f64()
+    );
+    for vl in &report.lengths {
+        let top = &vl.report.discords[0];
+        println!(
+            "  s={:<5} discord @ {:<8} nnd {:<10.4} ({} calls, transfer {}, {})",
+            vl.s,
+            top.position,
+            top.nnd,
+            vl.report.distance_calls,
+            vl.transfer_calls,
+            if vl.warm { "warm" } else { "cold" }
+        );
+    }
+    println!("ranked by nnd/\u{221a}s:");
+    for (rank, r) in report.ranked.iter().take(base.k.max(3)).enumerate() {
+        println!(
+            "  #{:<2} s={:<5} discord @ {:<8} score {:<10.4} (raw nnd {:.4})",
+            rank + 1,
+            r.s,
+            r.discord.position,
+            r.score,
+            r.discord.nnd
         );
     }
     Ok(())

@@ -38,6 +38,16 @@ pub fn t_speedup(baseline_secs: f64, candidate_secs: f64) -> f64 {
     baseline_secs / candidate_secs
 }
 
+/// Length-normalized discord score: `nnd / √s` (the "Matrix Profile Goes
+/// MAD" normalization). Euclidean distance between z-normalized windows
+/// grows like √s, so dividing by √s puts discords found at different
+/// lengths on one comparable scale; both variable-length engines
+/// (`hst-vl`, `merlin`) rank their cross-length reports with it.
+pub fn length_normalized_nnd(nnd: f64, s: usize) -> f64 {
+    assert!(s > 0);
+    nnd / (s as f64).sqrt()
+}
+
 /// The paper's rule of thumb (Sec. 4.7): extrapolate total distance calls
 /// for a long series from a short-extract cps measurement.
 /// calls ≈ cps · N · k.
@@ -96,5 +106,30 @@ mod tests {
     #[should_panic]
     fn zero_candidate_calls_panics() {
         d_speedup(10, 0);
+    }
+
+    #[test]
+    fn length_normalized_nnd_divides_by_sqrt_s() {
+        assert_eq!(length_normalized_nnd(6.0, 4), 3.0);
+        assert_eq!(length_normalized_nnd(0.0, 128), 0.0);
+        // monotone in nnd at fixed s
+        assert!(
+            length_normalized_nnd(2.0, 64) > length_normalized_nnd(1.0, 64)
+        );
+        // a distance growing exactly like √s normalizes to a constant
+        for s in [16usize, 64, 256] {
+            let nnd = 1.5 * (s as f64).sqrt();
+            assert!((length_normalized_nnd(nnd, s) - 1.5).abs() < 1e-12);
+        }
+        // longer windows normalize smaller at equal raw nnd
+        assert!(
+            length_normalized_nnd(3.0, 256) < length_normalized_nnd(3.0, 64)
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_normalized_nnd_rejects_zero_length() {
+        length_normalized_nnd(1.0, 0);
     }
 }

@@ -164,6 +164,73 @@ impl JobSpec {
     }
 }
 
+/// A variable-length scan job (the `vl` protocol command): the `hst-vl`
+/// engine over a dataset, reporting per-length rows plus the
+/// length-normalized cross-length ranking instead of a flat report.
+#[derive(Debug, Clone)]
+pub struct VlJobSpec {
+    /// Registry dataset name (or `synthetic:` forms — same grammar as
+    /// [`JobSpec`]).
+    pub dataset: String,
+    /// Length divisor applied to the registry's paper length.
+    pub scale_div: usize,
+    /// Search parameters; the scanned range rides in as
+    /// `s_min`/`s_max`/`s_step` (absent → derived around `s`).
+    pub params: SearchParams,
+}
+
+impl VlJobSpec {
+    /// Top-level request fields [`from_json`](Self::from_json) accepts.
+    /// No `algo`: the `vl` command *is* the `hst-vl` engine (merlin's
+    /// registry face stays reachable through plain `submit`).
+    pub const JSON_FIELDS: [&'static str; 5] =
+        ["cmd", "dataset", "scale_div", "params", "threads"];
+
+    /// Parse a `vl` request; unknown fields — top level or inside
+    /// `params` — are rejected by name, as everywhere.
+    pub fn from_json(v: &Json) -> Result<VlJobSpec, String> {
+        if let Json::Obj(map) = v {
+            if let Some(bad) =
+                map.keys().find(|k| !Self::JSON_FIELDS.contains(&k.as_str()))
+            {
+                return Err(format!(
+                    "unknown field `{bad}` in vl job (known: {})",
+                    Self::JSON_FIELDS.join(", ")
+                ));
+            }
+        } else {
+            return Err("vl job must be a JSON object".into());
+        }
+        let dataset = v
+            .get("dataset")
+            .and_then(|d| d.as_str())
+            .ok_or("field `dataset` required")?
+            .to_string();
+        let scale_div = match v.get("scale_div") {
+            None => 1,
+            Some(d) => d
+                .as_u64()
+                .ok_or("field `scale_div` must be an integer")?
+                as usize,
+        };
+        let mut params = match v.get("params") {
+            Some(p) => SearchParams::from_json(p)?,
+            None => return Err("field `params` required".into()),
+        };
+        if let Some(t) = v.get("threads") {
+            let t = t.as_u64().ok_or("field `threads` must be an integer")?;
+            if params.threads == 0 {
+                params.threads = t as usize;
+            }
+        }
+        Ok(VlJobSpec {
+            dataset,
+            scale_div,
+            params,
+        })
+    }
+}
+
 /// A multivariate search job (the `mdim` protocol command).
 #[derive(Debug, Clone)]
 pub struct MdimJobSpec {
@@ -312,11 +379,13 @@ impl MdimJobSpec {
     }
 }
 
-/// A queued unit of work: a univariate search or a multivariate one.
+/// A queued unit of work: a univariate search, a multivariate one, or a
+/// variable-length scan.
 #[derive(Debug, Clone)]
 enum Job {
     Search(JobSpec),
     Mdim(MdimJobSpec),
+    Vl(VlJobSpec),
 }
 
 /// Lifecycle of a job.
@@ -521,6 +590,14 @@ impl Coordinator {
         Ok(self.enqueue(vec![Job::Mdim(spec)])?[0])
     }
 
+    /// Submit a variable-length scan job (the `vl` protocol command).
+    /// Same shared queue/pool/registry; the context LRU is keyed on
+    /// `(dataset, scale_div, sax)` exactly like `submit`, so a `vl` scan
+    /// warms the cache for later single-length jobs and vice versa.
+    pub fn submit_vl(&self, spec: VlJobSpec) -> Result<u64> {
+        Ok(self.enqueue(vec![Job::Vl(spec)])?[0])
+    }
+
     /// Submit a batch atomically: either the queue has room for *all*
     /// jobs (ids returned, in order) or none are enqueued. Batched jobs
     /// share the prepared-context LRU with everything else, so a batch
@@ -659,6 +736,7 @@ fn worker_loop(inner: Arc<(Mutex<Inner>, Condvar)>, cache: Arc<ContextCache>) {
         let outcome = match &spec {
             Job::Search(spec) => run_job(spec, &cache),
             Job::Mdim(spec) => run_mdim_job(spec),
+            Job::Vl(spec) => run_vl_job(spec, &cache),
         };
         let (lock, _) = &*inner;
         let mut g = lock.lock().unwrap();
@@ -676,6 +754,24 @@ fn run_job(spec: &JobSpec, cache: &ContextCache) -> Result<Json> {
     };
     let (ctx, cache_hit) = cache.get_or_build(spec)?;
     let report = engine.run_ctx(&ctx, &spec.params)?;
+    Ok(report
+        .to_json()
+        .set("dataset", spec.dataset.as_str())
+        .set("n_points", ctx.series().n_total())
+        .set("ctx_cache", if cache_hit { "hit" } else { "miss" }))
+}
+
+fn run_vl_job(spec: &VlJobSpec, cache: &ContextCache) -> Result<Json> {
+    // vl jobs share the context LRU through the same key a plain submit
+    // would use, so the series + stats at the anchor length are reused
+    let search_spec = JobSpec {
+        dataset: spec.dataset.clone(),
+        scale_div: spec.scale_div,
+        algo: crate::vl::ENGINE_ID.to_string(),
+        params: spec.params.clone(),
+    };
+    let (ctx, cache_hit) = cache.get_or_build(&search_spec)?;
+    let report = crate::vl::HstVl::default().scan(&ctx, &spec.params)?;
     Ok(report
         .to_json()
         .set("dataset", spec.dataset.as_str())
@@ -1119,6 +1215,78 @@ mod tests {
         // a missing file errors cleanly too
         s.dataset = "file:does/not/exist.csv".into();
         assert!(s.series().is_err());
+    }
+
+    #[test]
+    fn vl_jobs_run_through_the_shared_pool() {
+        let c = Coordinator::start(2, 16);
+        let spec = VlJobSpec {
+            dataset: "synthetic:noise=0.5,n=1500,seed=5".into(),
+            scale_div: 1,
+            params: SearchParams::new(64, 4, 4).with_length_range(
+                crate::config::LengthRange::new(48, 64, 8),
+            ),
+        };
+        let id = c.submit_vl(spec.clone()).unwrap();
+        // univariate and vl jobs interleave on one queue
+        let other = c.submit(quick_spec("hst")).unwrap();
+        match c.wait(id) {
+            Some(JobState::Done(j)) => {
+                assert_eq!(j.get("algo").unwrap().as_str(), Some("hst-vl"));
+                let lengths = j.get("lengths").unwrap().as_arr().unwrap();
+                assert_eq!(lengths.len(), 3); // 48, 56, 64
+                assert!(!j.get("ranked").unwrap().as_arr().unwrap().is_empty());
+                assert!(j.get("total_calls").unwrap().as_u64().unwrap() > 0);
+            }
+            other => panic!("unexpected state {other:?}"),
+        }
+        assert!(matches!(c.wait(other), Some(JobState::Done(_))));
+        // a second identical scan reuses the prepared context
+        let id = c.submit_vl(spec).unwrap();
+        match c.wait(id) {
+            Some(JobState::Done(j)) => {
+                assert_eq!(j.get("ctx_cache").unwrap().as_str(), Some("hit"))
+            }
+            other => panic!("unexpected state {other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn vl_from_json_rejects_unknown_fields_by_name() {
+        // no `algo` field on the vl command: the job kind *is* the engine
+        let j = Json::parse(
+            r#"{"cmd":"vl","dataset":"ECG 15","algo":"hst-vl",
+                "params":{"s":64}}"#,
+        )
+        .unwrap();
+        let err = VlJobSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("`algo`"), "{err}");
+        // nested params typos are caught too
+        let j = Json::parse(
+            r#"{"cmd":"vl","dataset":"ECG 15",
+                "params":{"s":64,"s_mim":32}}"#,
+        )
+        .unwrap();
+        assert!(VlJobSpec::from_json(&j).unwrap_err().contains("`s_mim`"));
+        // the range rides in as s_min/s_max/s_step and is validated
+        let j = Json::parse(
+            r#"{"cmd":"vl","dataset":"ECG 15","scale_div":8,"threads":2,
+                "params":{"s":64,"s_min":32,"s_max":64,"s_step":8}}"#,
+        )
+        .unwrap();
+        let spec = VlJobSpec::from_json(&j).unwrap();
+        assert_eq!(spec.scale_div, 8);
+        assert_eq!(spec.params.threads, 2);
+        let r = spec.params.s_range.unwrap();
+        assert_eq!((r.min, r.max, r.step), (32, 64, 8));
+        let j = Json::parse(
+            r#"{"cmd":"vl","dataset":"ECG 15",
+                "params":{"s":64,"s_min":2,"s_max":64}}"#,
+        )
+        .unwrap();
+        let err = VlJobSpec::from_json(&j).unwrap_err();
+        assert!(err.contains("min=2"), "{err}");
     }
 
     #[test]

@@ -17,6 +17,8 @@
 //! ← {"ok":true,"jobs":[2,3]}
 //! → {"cmd":"mdim","dataset":"synthetic-md:channels=3,n=8000,len=128","algo":"hst-md","params":{"s":128,"channels":["c0","c2"]}}
 //! ← {"ok":true,"job":4}
+//! → {"cmd":"vl","dataset":"ECG 300","scale_div":8,"params":{"s":300,"s_min":150,"s_max":300,"s_step":25}}
+//! ← {"ok":true,"job":5}
 //! → {"cmd":"status","job":1}
 //! ← {"ok":true,"job":1,"state":"done","report":{...}}
 //! → {"cmd":"wait","job":1,"timeout_ms":250}
@@ -57,6 +59,8 @@ pub mod online;
 pub mod server;
 pub mod streams;
 
-pub use coordinator::{Coordinator, CoordinatorStats, JobSpec, JobState, MdimJobSpec};
+pub use coordinator::{
+    Coordinator, CoordinatorStats, JobSpec, JobState, MdimJobSpec, VlJobSpec,
+};
 pub use server::{serve, Client};
 pub use streams::StreamRegistry;

@@ -78,10 +78,11 @@ fn handle_conn(
 /// Every `cmd` the dispatcher accepts, in `docs/PROTOCOL.md` order.
 /// `tests/docs_consistency.rs` asserts the protocol document covers each
 /// of these, so the list and the doc cannot drift apart.
-pub const COMMANDS: [&str; 12] = [
+pub const COMMANDS: [&str; 13] = [
     "submit",
     "batch",
     "mdim",
+    "vl",
     "status",
     "wait",
     "stats",
@@ -135,6 +136,13 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
         },
         Some("mdim") => match super::coordinator::MdimJobSpec::from_json(&req) {
             Ok(spec) => match coord.submit_mdim(spec) {
+                Ok(id) => Json::obj().set("ok", true).set("job", id),
+                Err(e) => err_reply(&format!("{e:#}")),
+            },
+            Err(e) => err_reply(&e),
+        },
+        Some("vl") => match super::coordinator::VlJobSpec::from_json(&req) {
+            Ok(spec) => match coord.submit_vl(spec) {
                 Ok(id) => Json::obj().set("ok", true).set("job", id),
                 Err(e) => err_reply(&format!("{e:#}")),
             },

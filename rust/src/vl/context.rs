@@ -1,0 +1,378 @@
+//! The cross-length session state of the variable-length scan: rolling
+//! window sums extended from one length to the next, and the warm-profile
+//! transfer that carries nearest-neighbor knowledge between adjacent
+//! lengths.
+//!
+//! Both pieces preserve the bit-identity discipline the rest of the
+//! workspace holds itself to:
+//!
+//! * **Stats extension.** `f64` addition is IEEE-deterministic and
+//!   [`window_stats`](crate::ts::window_stats) folds its first pass
+//!   left-to-right, so extending a cached window sum by appending the new
+//!   points *in order* produces the same bits as a fresh full-window sum.
+//!   [`VlContext::advance`] still validates a sample of windows against
+//!   the recompute and falls back wholesale on any mismatch, so a seeded
+//!   [`SeqStats`] can never violate the
+//!   [`seed_stats`](crate::context::SearchContext::seed_stats) contract.
+//! * **Profile transfer.** An [`NndProfile`] entry is only ever an
+//!   *exactly evaluated* distance to an admissible partner — a true upper
+//!   bound of the exact nnd. There is no cheap algebraic bound relating
+//!   z-normalized distances at length `s` to length `s + step`, so the
+//!   transfer re-evaluates each carried neighbor pair exactly at the new
+//!   length; entries whose partner is no longer admissible reset to the ∞
+//!   sentinel — the same shift discipline
+//!   [`StreamingMonitor`](crate::stream::StreamingMonitor) applies when
+//!   its window slides.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::algo::non_self_match;
+use crate::config::SaxParams;
+use crate::context::SearchContext;
+use crate::discord::{NndProfile, NO_NEIGHBOR};
+use crate::dist::{CountingDistance, DistanceKind};
+use crate::ts::stats::SIGMA_FLOOR;
+use crate::ts::{window_stats, SeqStats, TimeSeries};
+
+/// Every this many windows, [`VlContext::advance`] cross-checks its
+/// incrementally extended (μ, σ) against a cold [`window_stats`]
+/// recompute (the first and last windows are always checked).
+const VALIDATE_EVERY: usize = 256;
+
+/// Run-control checkpoint cadence of the transfer loop.
+const CHECK_EVERY: usize = 1024;
+
+/// Cross-length session state for one [`HstVl`](super::HstVl) scan.
+///
+/// Owns the rolling first-pass window sums at the most recently scanned
+/// length, so moving to the next length only pays the *new* points of
+/// each window instead of a full recompute, plus the fallback counter
+/// that makes the validation observable.
+#[derive(Debug)]
+pub struct VlContext {
+    kind: DistanceKind,
+    allow_self_match: bool,
+    /// `sums[k]` = left-to-right fold of `points[k..k + cur_s]`.
+    sums: Vec<f64>,
+    cur_s: usize,
+    stat_fallbacks: usize,
+}
+
+impl VlContext {
+    /// Session state anchored at the first scanned length `s`: one pass
+    /// over the series fills the window sums the later
+    /// [`advance`](Self::advance) calls extend.
+    pub fn new(
+        ts: &TimeSeries,
+        s: usize,
+        kind: DistanceKind,
+        allow_self_match: bool,
+    ) -> VlContext {
+        let n = ts.num_sequences(s);
+        let sums = (0..n)
+            .map(|k| ts.seq(k, s).iter().sum::<f64>())
+            .collect();
+        VlContext {
+            kind,
+            allow_self_match,
+            sums,
+            cur_s: s,
+            stat_fallbacks: 0,
+        }
+    }
+
+    /// The length the cached sums currently cover.
+    pub fn current_len(&self) -> usize {
+        self.cur_s
+    }
+
+    /// How many [`advance`](Self::advance) calls abandoned the
+    /// incremental fast path because a sampled window failed the bit
+    /// cross-check (expected to stay 0; observable so tests can pin it).
+    pub fn stat_fallbacks(&self) -> usize {
+        self.stat_fallbacks
+    }
+
+    /// Rolling stats for `s_next > current_len()`, produced by extending
+    /// the cached window sums with each window's new points in order.
+    ///
+    /// The result is bit-equal to [`SeqStats::compute`] — the means share
+    /// the recompute's exact addition sequence (module docs), and the σ
+    /// pass below *is* [`window_stats`]' second pass verbatim. A sampled
+    /// cross-check enforces this; one mismatch discards the whole fast
+    /// path for this call in favor of the recompute. Either way the
+    /// returned stats satisfy the
+    /// [`seed_stats`](SearchContext::seed_stats) contract.
+    pub fn advance(&mut self, ts: &TimeSeries, s_next: usize) -> SeqStats {
+        assert!(
+            s_next > self.cur_s,
+            "advance must move to a longer length ({} -> {s_next})",
+            self.cur_s
+        );
+        let n_next = ts.num_sequences(s_next);
+        let mut mean = Vec::with_capacity(n_next);
+        let mut std = Vec::with_capacity(n_next);
+        let mut valid = true;
+        for k in 0..n_next {
+            let w = ts.seq(k, s_next);
+            // First pass: extend the cached sum with the window's new
+            // points, left to right — the recompute's addition sequence.
+            for &x in &w[self.cur_s..] {
+                self.sums[k] += x;
+            }
+            let m = self.sums[k] / w.len() as f64;
+            // Second pass: window_stats' σ computation verbatim.
+            let var = w.iter().map(|&x| (x - m) * (x - m)).sum::<f64>()
+                / w.len() as f64;
+            let sd = var.sqrt().max(SIGMA_FLOOR);
+            if k == 0 || k + 1 == n_next || k % VALIDATE_EVERY == 0 {
+                let (rm, rsd) = window_stats(w);
+                if m.to_bits() != rm.to_bits() || sd.to_bits() != rsd.to_bits()
+                {
+                    valid = false;
+                    break;
+                }
+            }
+            mean.push(m);
+            std.push(sd);
+        }
+        if !valid {
+            // Fallback: cold recompute, and resync the sums from the
+            // windows so later advances start from reference values.
+            self.stat_fallbacks += 1;
+            mean.clear();
+            std.clear();
+            for k in 0..n_next {
+                let w = ts.seq(k, s_next);
+                let (m, sd) = window_stats(w);
+                self.sums[k] = w.iter().sum::<f64>();
+                mean.push(m);
+                std.push(sd);
+            }
+        }
+        self.sums.truncate(n_next);
+        self.cur_s = s_next;
+        SeqStats { s: s_next, mean, std }
+    }
+
+    /// Carry the refined profile at `prev_s` forward to `s_next` as a
+    /// warm [`NndProfile`], and store it in `ctx`'s warm-profile cache
+    /// for the next per-length search to start from. Returns the exact
+    /// distance calls the transfer spent.
+    ///
+    /// The transfer rule, per window `i` of the new length:
+    ///
+    /// 1. if `i`'s previous nearest neighbor `j` still exists at `s_next`
+    ///    and the pair is still admissible (`allow_self_match` or
+    ///    `|i − j| ≥ s_next`), evaluate `d_next(i, j)` exactly and record
+    ///    it — an exact distance to an admissible partner is a valid
+    ///    upper bound of the new nnd by definition;
+    /// 2. otherwise fall back to `i`'s previous-length SAX cluster (the
+    ///    joint-word neighbors, via `prev_sax`'s cached index): the
+    ///    nearest-in-time admissible member stands in for the lost
+    ///    neighbor;
+    /// 3. if neither yields an admissible partner, the entry *resets to
+    ///    the ∞ sentinel* (`NO_NEIGHBOR`) — never a guessed bound.
+    ///
+    /// Every recorded value is an exactly evaluated pair distance, so the
+    /// produced profile is valid for
+    /// [`store_warm_profile`](SearchContext::store_warm_profile) and
+    /// preserves the downstream search's bit-identity; only call counts
+    /// change.
+    pub fn transfer_profile(
+        &self,
+        ctx: &SearchContext,
+        prev_s: usize,
+        prev_sax: &SaxParams,
+        s_next: usize,
+        base_calls: u64,
+    ) -> Result<u64> {
+        debug_assert_eq!(prev_sax.s, prev_s);
+        let Some(prev) =
+            ctx.warm_profile(prev_s, self.kind, self.allow_self_match)
+        else {
+            return Ok(0);
+        };
+        let stats = ctx.stats(s_next);
+        let n_next = stats.len();
+        let prev_idx = ctx.index(prev_sax);
+        let dist = CountingDistance::with_kernel(
+            ctx.series(),
+            &stats,
+            self.kind,
+            ctx.kernel(),
+        );
+        let allow = self.allow_self_match;
+        let mut p = NndProfile::new(n_next);
+        for i in 0..n_next {
+            if i % CHECK_EVERY == 0 {
+                ctx.check(base_calls + dist.calls())?;
+            }
+            let j = prev.ngh.get(i).copied().unwrap_or(NO_NEIGHBOR);
+            if j != NO_NEIGHBOR
+                && j < n_next
+                && i != j
+                && non_self_match(i, j, s_next, allow)
+            {
+                p.observe(i, j, dist.dist(i, j));
+                continue;
+            }
+            // Cluster-buddy rescue: the previous length's joint SAX word
+            // names likely near neighbors; take the closest-in-time
+            // admissible one.
+            let buddy = prev_idx
+                .cluster_members(i)
+                .iter()
+                .copied()
+                .filter(|&m| {
+                    m < n_next
+                        && m != i
+                        && non_self_match(i, m, s_next, allow)
+                })
+                .min_by_key(|&m| m.abs_diff(i));
+            if let Some(m) = buddy {
+                p.observe(i, m, dist.dist(i, m));
+            }
+            // No admissible partner: stays at the ∞ sentinel.
+        }
+        let calls = dist.calls();
+        ctx.store_warm_profile(s_next, self.kind, allow, p);
+        Ok(calls)
+    }
+
+    /// Convenience used by the engine: advance the stats and seed them
+    /// into `ctx` in one step (the `Arc` is returned for callers that
+    /// want to inspect them).
+    pub fn advance_into(
+        &mut self,
+        ctx: &SearchContext,
+        s_next: usize,
+    ) -> Arc<SeqStats> {
+        let stats = Arc::new(self.advance(ctx.series(), s_next));
+        ctx.seed_stats(Arc::clone(&stats));
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ts::generators;
+    use crate::ts::series::IntoSeries;
+
+    #[test]
+    fn advance_matches_cold_recompute_bit_for_bit() {
+        let ts =
+            generators::ecg_like(1_200, 90, 1, 900).into_series("vlctx");
+        let mut vlc =
+            VlContext::new(&ts, 32, DistanceKind::Znorm, false);
+        for s_next in [36usize, 40, 48, 61, 64] {
+            let fast = vlc.advance(&ts, s_next);
+            let cold = SeqStats::compute(&ts, s_next);
+            assert_eq!(fast.len(), cold.len(), "s={s_next}");
+            for k in 0..cold.len() {
+                assert_eq!(
+                    fast.mean[k].to_bits(),
+                    cold.mean[k].to_bits(),
+                    "mean s={s_next} k={k}"
+                );
+                assert_eq!(
+                    fast.std[k].to_bits(),
+                    cold.std[k].to_bits(),
+                    "std s={s_next} k={k}"
+                );
+            }
+        }
+        assert_eq!(
+            vlc.stat_fallbacks(),
+            0,
+            "the incremental fast path must validate"
+        );
+    }
+
+    #[test]
+    fn advance_handles_large_offsets() {
+        // the regime where naive prefix-sum formulations lose digits;
+        // the per-window fold stays bit-equal to the recompute
+        let mut rng = crate::util::rng::Rng64::new(901);
+        let pts: Vec<f64> =
+            (0..800).map(|_| 1.0e8 + rng.normal()).collect();
+        let ts = TimeSeries::new("off", pts);
+        let mut vlc = VlContext::new(&ts, 40, DistanceKind::Znorm, false);
+        let fast = vlc.advance(&ts, 56);
+        let cold = SeqStats::compute(&ts, 56);
+        for k in 0..cold.len() {
+            assert_eq!(fast.mean[k].to_bits(), cold.mean[k].to_bits());
+            assert_eq!(fast.std[k].to_bits(), cold.std[k].to_bits());
+        }
+        assert_eq!(vlc.stat_fallbacks(), 0);
+    }
+
+    #[test]
+    fn transfer_produces_a_valid_upper_bound_profile() {
+        use crate::algo::{hst::HstSearch, Algorithm};
+        use crate::config::SearchParams;
+
+        let ts =
+            generators::valve_like(1_500, 110, 1, 902).into_series("vt");
+        let ctx = SearchContext::builder(&ts).build();
+        let prev = SearchParams::new(64, 4, 4);
+        // a real search leaves the refined profile behind
+        HstSearch::default().run_ctx(&ctx, &prev).unwrap();
+
+        let mut vlc = VlContext::new(&ts, 64, DistanceKind::Znorm, false);
+        vlc.advance_into(&ctx, 72);
+        let calls = vlc
+            .transfer_profile(&ctx, 64, &prev.sax, 72, 0)
+            .unwrap();
+        let n72 = ts.num_sequences(72);
+        assert!(calls > 0, "the transfer must evaluate pairs");
+        assert!(calls <= n72 as u64, "at most one call per window");
+
+        let warm =
+            ctx.warm_profile(72, DistanceKind::Znorm, false).unwrap();
+        assert_eq!(warm.len(), n72);
+        // every finite entry is an exactly evaluated admissible pair
+        let stats = ctx.stats(72);
+        let dist = CountingDistance::new(&ts, &stats, DistanceKind::Znorm);
+        let mut bounded = 0usize;
+        for i in 0..n72 {
+            if warm.nnd[i].is_finite() {
+                let j = warm.ngh[i];
+                assert!(j < n72, "i={i}");
+                assert!(i.abs_diff(j) >= 72, "i={i} j={j} overlaps");
+                assert_eq!(
+                    warm.nnd[i].to_bits(),
+                    dist.dist(i, j).to_bits(),
+                    "entry must be the exact pair distance (i={i})"
+                );
+                bounded += 1;
+            } else {
+                assert_eq!(warm.ngh[i], NO_NEIGHBOR, "i={i}");
+            }
+        }
+        assert!(
+            bounded * 10 >= n72 * 9,
+            "the transfer should bound nearly every window ({bounded}/{n72})"
+        );
+    }
+
+    #[test]
+    fn transfer_without_a_previous_profile_is_free() {
+        let ts =
+            generators::sine_with_noise(900, 0.2, 903).into_series("cold");
+        let ctx = SearchContext::builder(&ts).build();
+        let mut vlc = VlContext::new(&ts, 48, DistanceKind::Znorm, false);
+        vlc.advance_into(&ctx, 56);
+        let sax = SaxParams::new(48, 4, 4);
+        // the index for the rescue path must exist; build it like a
+        // previous search would have
+        let _ = ctx.index(&sax);
+        let calls =
+            vlc.transfer_profile(&ctx, 48, &sax, 56, 0).unwrap();
+        assert_eq!(calls, 0, "no profile to carry, no calls spent");
+        assert!(ctx.warm_profile(56, DistanceKind::Znorm, false).is_none());
+    }
+}

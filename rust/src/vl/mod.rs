@@ -1,0 +1,503 @@
+//! Variable-length discord search: the `hst-vl` engine.
+//!
+//! MERLIN answers "find the discord at *every* length" by re-running a
+//! near-cold DADD per length — each length pays its own r-schedule
+//! retries and a fresh candidate scan. This subsystem keeps the question
+//! but retires the cold restarts: one [`HstVl`] scan walks a
+//! [`LengthRange`] ascending and makes the per-length
+//! [`SearchContext`](crate::context::SearchContext) caches talk to each
+//! other through a [`VlContext`]:
+//!
+//! * rolling window sums extend from `s` to `s + step` instead of being
+//!   recomputed (bit-equal to the cold recompute — see
+//!   [`context`](self::context));
+//! * the refined [`NndProfile`](crate::discord::NndProfile) each length
+//!   leaves behind is carried to the next length as a warm upper-bound
+//!   profile (exact re-evaluation of the carried neighbor pairs; the
+//!   previous length's joint SAX clusters stand in when a neighbor is
+//!   lost), so every length after the first skips HST's warm-up chain
+//!   and starts from a profile that is already nearly tight.
+//!
+//! Exactness is non-negotiable: each per-length search *is*
+//! [`HstSearch`](crate::algo::hst::HstSearch)'s serial engine, handed a
+//! valid warm profile — positions and nnd bit patterns are identical to
+//! running serial `hst` independently at every length; only the call
+//! counts drop. Cross-length results are ranked on the length-normalized
+//! score [`metrics::length_normalized_nnd`] (`nnd/√s`), the same scale
+//! [`merlin`](crate::algo::merlin) reports on.
+//!
+//! ```
+//! use hstime::prelude::*;
+//!
+//! let ts = generators::ecg_like(1_000, 80, 1, 7).into_series("demo");
+//! let ctx = SearchContext::builder(&ts).build();
+//! let params = SearchParams::new(64, 4, 4)
+//!     .with_length_range(LengthRange::new(48, 64, 8));
+//! let report = HstVl::default().scan(&ctx, &params).unwrap();
+//! assert_eq!(report.lengths.len(), 3); // s = 48, 56, 64
+//! assert!(report.lengths[1].warm, "later lengths start warm");
+//! assert_eq!(report.ranked[0].score,
+//!     metrics::length_normalized_nnd(
+//!         report.ranked[0].discord.nnd, report.ranked[0].s));
+//! ```
+//!
+//! [`metrics::length_normalized_nnd`]: crate::metrics::length_normalized_nnd
+
+pub mod context;
+
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::algo::hst::HstSearch;
+use crate::algo::{Algorithm, SearchReport};
+use crate::config::{LengthRange, SaxParams, SearchParams};
+use crate::context::SearchContext;
+use crate::discord::Discord;
+use crate::metrics::length_normalized_nnd;
+use crate::util::json::Json;
+
+pub use context::VlContext;
+
+/// Canonical registry id of the variable-length engine.
+pub const ENGINE_ID: &str = "hst-vl";
+
+/// The variable-length work-sharing engine.
+///
+/// The all-zero [`Default`] is the registry form
+/// (`algo::by_name("hst-vl")`): the scanned range comes from
+/// `SearchParams.s_range` when set, else
+/// [`LengthRange::around`]`(params.sax.s)` — the same derivation
+/// `merlin` uses, so the two engines cover identical ranges for
+/// identical requests.
+#[derive(Debug, Clone, Default)]
+pub struct HstVl {
+    /// Explicit scan range; the all-zero sentinel defers to the params.
+    pub range: LengthRange,
+}
+
+/// One scanned length: the serial-HST report plus the cross-length
+/// bookkeeping.
+#[derive(Debug, Clone)]
+pub struct VlLength {
+    /// Sequence length s.
+    pub s: usize,
+    /// The per-length search report (bit-identical to serial `hst`).
+    pub report: SearchReport,
+    /// Exact distance calls the warm-profile transfer into this length
+    /// spent (0 for the cold first length).
+    pub transfer_calls: u64,
+    /// Whether this length started from a transferred warm profile.
+    pub warm: bool,
+}
+
+/// One cross-length ranked discord.
+#[derive(Debug, Clone)]
+pub struct VlDiscord {
+    /// The length the discord was found at.
+    pub s: usize,
+    /// The discord (raw nnd, as serial `hst` reports it).
+    pub discord: Discord,
+    /// Its length-normalized score `nnd/√s`
+    /// ([`length_normalized_nnd`]).
+    pub score: f64,
+}
+
+/// Outcome of one [`HstVl::scan`].
+#[derive(Debug, Clone)]
+pub struct VlReport {
+    /// Per-length results, ascending in s.
+    pub lengths: Vec<VlLength>,
+    /// All discords across all lengths, ranked by descending
+    /// [`VlDiscord::score`] (ties: shorter s, then lower position).
+    pub ranked: Vec<VlDiscord>,
+    /// Total distance calls across the whole scan (per-length searches
+    /// plus the warm-profile transfers).
+    pub total_calls: u64,
+    /// Wall-clock time of the whole scan.
+    pub elapsed: Duration,
+}
+
+impl VlReport {
+    /// Serialize for reports and the service protocol.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("algo", ENGINE_ID)
+            .set("total_calls", self.total_calls)
+            .set("elapsed_secs", self.elapsed.as_secs_f64())
+            .set(
+                "lengths",
+                self.lengths
+                    .iter()
+                    .map(|l| {
+                        Json::obj()
+                            .set("s", l.s)
+                            .set("warm", l.warm)
+                            .set("transfer_calls", l.transfer_calls)
+                            .set("report", l.report.to_json())
+                    })
+                    .collect::<Vec<_>>(),
+            )
+            .set(
+                "ranked",
+                self.ranked
+                    .iter()
+                    .map(|r| {
+                        r.discord
+                            .to_json()
+                            .set("s", r.s)
+                            .set("score", r.score)
+                    })
+                    .collect::<Vec<_>>(),
+            )
+    }
+}
+
+impl HstVl {
+    /// Scan an explicit, validated range (panics on an invalid one; the
+    /// JSON path validates at parse time instead).
+    pub fn from_range(range: LengthRange) -> HstVl {
+        range.validate().expect("invalid length range");
+        HstVl { range }
+    }
+
+    /// The range a scan under `params` covers: the engine's own range
+    /// when configured, else `params.s_range`, else
+    /// [`LengthRange::around`]`(params.sax.s)`.
+    pub fn resolved_range(&self, params: &SearchParams) -> LengthRange {
+        if !self.range.is_unset() {
+            self.range
+        } else if let Some(r) = params.s_range {
+            r
+        } else {
+            LengthRange::around(params.sax.s)
+        }
+    }
+
+    /// The per-length search parameters of the scan: `base` with its
+    /// length replaced by `s` (the base P is kept when it divides `s`,
+    /// else the shared [`SaxParams::default_p`] rule applies). Public so
+    /// tests and benches can construct the *identical* per-length serial
+    /// `hst` baseline the bit-identity guarantee is stated against.
+    pub fn params_for_length(base: &SearchParams, s: usize) -> SearchParams {
+        let p = if base.sax.p != 0 && s % base.sax.p == 0 {
+            base.sax.p
+        } else {
+            SaxParams::default_p(s)
+        };
+        SearchParams {
+            sax: SaxParams { s, p, alphabet: base.sax.alphabet },
+            k: base.k,
+            seed: base.seed,
+            znormalize: base.znormalize,
+            allow_self_match: base.allow_self_match,
+            threads: base.threads,
+            s_range: None,
+        }
+    }
+
+    /// Scan every length of the resolved range in one ascending pass.
+    ///
+    /// The first length runs serial HST cold; every later length first
+    /// advances the rolling stats ([`VlContext::advance`]), carries the
+    /// previous length's refined profile forward
+    /// ([`VlContext::transfer_profile`]), and then runs serial HST warm.
+    /// The context's distance-call budget is enforced cumulatively
+    /// across lengths, like `merlin`'s scan.
+    pub fn scan(
+        &self,
+        ctx: &SearchContext,
+        base: &SearchParams,
+    ) -> Result<VlReport> {
+        let range = self.resolved_range(base);
+        range.validate().map_err(|e| anyhow::anyhow!(e))?;
+        let ts = ctx.series();
+        ensure!(
+            ts.n_total() >= 2 * range.max,
+            "series too short for max length {}",
+            range.max
+        );
+        ctx.check(0)?;
+        let start = Instant::now();
+        let kind = base.distance_kind();
+        let allow = base.allow_self_match;
+
+        let mut total_calls = 0u64;
+        let mut lengths: Vec<VlLength> = Vec::with_capacity(range.count());
+        let mut vlc: Option<VlContext> = None;
+        let mut prev_sax: Option<SaxParams> = None;
+        for s in range.lengths() {
+            ctx.check(total_calls)?;
+            let pl = Self::params_for_length(base, s);
+            let mut transfer_calls = 0u64;
+            let warm = match (&mut vlc, &prev_sax) {
+                (Some(v), Some(psax)) => {
+                    v.advance_into(ctx, s);
+                    transfer_calls = v
+                        .transfer_profile(ctx, psax.s, psax, s, total_calls)?;
+                    total_calls += transfer_calls;
+                    true
+                }
+                _ => {
+                    vlc = Some(VlContext::new(ts, s, kind, allow));
+                    false
+                }
+            };
+            let report =
+                HstSearch::default().run_serial(ctx, &pl, ENGINE_ID, true)?;
+            total_calls += report.distance_calls;
+            prev_sax = Some(pl.sax);
+            lengths.push(VlLength { s, report, transfer_calls, warm });
+        }
+
+        let mut ranked: Vec<VlDiscord> = lengths
+            .iter()
+            .flat_map(|l| {
+                l.report.discords.iter().map(move |d| VlDiscord {
+                    s: l.s,
+                    discord: d.clone(),
+                    score: length_normalized_nnd(d.nnd, l.s),
+                })
+            })
+            .collect();
+        ranked.sort_by(|a, b| {
+            b.score
+                .partial_cmp(&a.score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.s.cmp(&b.s))
+                .then(a.discord.position.cmp(&b.discord.position))
+        });
+
+        Ok(VlReport {
+            lengths,
+            ranked,
+            total_calls,
+            elapsed: start.elapsed(),
+        })
+    }
+}
+
+impl Algorithm for HstVl {
+    fn name(&self) -> &'static str {
+        ENGINE_ID
+    }
+
+    /// The registry face of the scan: the report carries the top
+    /// `params.k` discords across all lengths under the
+    /// length-normalized ranking, total calls across the scan, and —
+    /// as `prep_calls` — the warm-profile transfer cost plus whatever
+    /// per-length preparation was paid (the cold first length).
+    /// `n_sequences` counts windows at the longest scanned length, the
+    /// one every scanned length's window count is bounded below by.
+    fn run_ctx(
+        &self,
+        ctx: &SearchContext,
+        params: &SearchParams,
+    ) -> Result<SearchReport> {
+        let range = self.resolved_range(params);
+        let vr = self.scan(ctx, params)?;
+        let discords: Vec<Discord> = vr
+            .ranked
+            .iter()
+            .take(params.k)
+            .map(|vd| vd.discord.clone())
+            .collect();
+        for (rank, d) in discords.iter().enumerate() {
+            ctx.notify_discord(rank, d);
+        }
+        let prep_calls: u64 = vr
+            .lengths
+            .iter()
+            .map(|l| l.transfer_calls + l.report.prep_calls)
+            .sum();
+        Ok(SearchReport {
+            algo: ENGINE_ID.to_string(),
+            discords,
+            distance_calls: vr.total_calls,
+            prep_calls,
+            elapsed: vr.elapsed,
+            n_sequences: ctx.series().num_sequences(range.max),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::merlin::Merlin;
+    use crate::ts::generators;
+    use crate::ts::series::IntoSeries;
+
+    #[test]
+    fn bit_identical_to_per_length_serial_hst() {
+        let ts =
+            generators::ecg_like(1_400, 100, 1, 800).into_series("vl-e");
+        let base = SearchParams::new(72, 4, 4).with_seed(3).with_discords(2);
+        let range = LengthRange::new(56, 72, 8);
+        let ctx = SearchContext::builder(&ts).build();
+        let vr = HstVl::from_range(range).scan(&ctx, &base).unwrap();
+        assert_eq!(vr.lengths.len(), 3);
+        for vl in &vr.lengths {
+            // a fresh context per length: the independent serial baseline
+            let pl = HstVl::params_for_length(&base, vl.s);
+            let cold_ctx = SearchContext::builder(&ts).build();
+            let cold = HstSearch::default()
+                .run_ctx(&cold_ctx, &pl)
+                .unwrap();
+            assert_eq!(
+                vl.report.discords.len(),
+                cold.discords.len(),
+                "s={}",
+                vl.s
+            );
+            for (a, b) in vl.report.discords.iter().zip(&cold.discords) {
+                assert_eq!(a.position, b.position, "s={}", vl.s);
+                assert_eq!(
+                    a.nnd.to_bits(),
+                    b.nnd.to_bits(),
+                    "s={}: {:016x} vs {:016x}",
+                    vl.s,
+                    a.nnd.to_bits(),
+                    b.nnd.to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn warm_lengths_skip_the_warmup_and_save_calls() {
+        let ts =
+            generators::valve_like(1_800, 130, 1, 801).into_series("vl-v");
+        let base = SearchParams::new(96, 4, 4);
+        let range = LengthRange::new(72, 96, 8);
+        let ctx = SearchContext::builder(&ts).build();
+        let vr = HstVl::from_range(range).scan(&ctx, &base).unwrap();
+        assert!(!vr.lengths[0].warm);
+        assert!(vr.lengths[0].report.prep_calls > 0, "cold start pays prep");
+        let mut serial_total = 0u64;
+        for vl in &vr.lengths[1..] {
+            assert!(vl.warm);
+            assert_eq!(
+                vl.report.prep_calls, 0,
+                "warm length s={} must skip the warm-up",
+                vl.s
+            );
+            assert!(vl.transfer_calls > 0);
+        }
+        for vl in &vr.lengths {
+            let pl = HstVl::params_for_length(&base, vl.s);
+            let cold_ctx = SearchContext::builder(&ts).build();
+            serial_total += HstSearch::default()
+                .run_ctx(&cold_ctx, &pl)
+                .unwrap()
+                .distance_calls;
+        }
+        assert!(
+            vr.total_calls < serial_total,
+            "work sharing must beat independent runs: {} vs {}",
+            vr.total_calls,
+            serial_total
+        );
+    }
+
+    #[test]
+    fn strictly_fewer_calls_than_merlin_on_the_same_range() {
+        let ts =
+            generators::ecg_like(1_200, 90, 1, 802).into_series("vl-m");
+        let range = LengthRange::new(48, 64, 8);
+        let base = SearchParams::new(64, 4, 4);
+        let ctx = SearchContext::builder(&ts).build();
+        let vl = HstVl::from_range(range).scan(&ctx, &base).unwrap();
+        let merlin_ctx = SearchContext::builder(&ts).build();
+        let (_, merlin_calls) = Merlin::from_range(range)
+            .scan(&merlin_ctx)
+            .unwrap();
+        assert!(
+            vl.total_calls < merlin_calls,
+            "hst-vl {} must be strictly below merlin {}",
+            vl.total_calls,
+            merlin_calls
+        );
+    }
+
+    #[test]
+    fn ranked_output_uses_the_normalized_score() {
+        let ts =
+            generators::respiration_like(1_500, 120, 1, 803).into_series("r");
+        let base = SearchParams::new(80, 4, 4).with_discords(2);
+        let ctx = SearchContext::builder(&ts).build();
+        let vr = HstVl::from_range(LengthRange::new(64, 80, 8))
+            .scan(&ctx, &base)
+            .unwrap();
+        assert!(!vr.ranked.is_empty());
+        for r in &vr.ranked {
+            assert_eq!(r.score, length_normalized_nnd(r.discord.nnd, r.s));
+        }
+        for w in vr.ranked.windows(2) {
+            assert!(w[0].score >= w[1].score, "ranking must be descending");
+        }
+        // the JSON face carries the same ranking
+        let j = vr.to_json();
+        assert_eq!(j.get("algo").unwrap().as_str(), Some(ENGINE_ID));
+        let ranked = j.get("ranked").unwrap().as_arr().unwrap();
+        assert_eq!(ranked.len(), vr.ranked.len());
+        assert_eq!(
+            ranked[0].get("score").unwrap().as_f64(),
+            Some(vr.ranked[0].score)
+        );
+    }
+
+    #[test]
+    fn registry_form_derives_the_range_like_merlin() {
+        let ts =
+            generators::ecg_like(1_000, 80, 1, 804).into_series("reg");
+        let engine = crate::algo::by_name("hst-vl").unwrap();
+        assert_eq!(engine.name(), ENGINE_ID);
+        let params = SearchParams::new(48, 4, 4);
+        let rep = engine.run(&ts, &params).unwrap();
+        assert_eq!(rep.algo, ENGINE_ID);
+        assert_eq!(rep.discords.len(), 1);
+        assert!(rep.distance_calls > 0);
+        // an explicit s_range overrides the derivation
+        let params = SearchParams::new(48, 4, 4)
+            .with_length_range(LengthRange::new(40, 48, 8));
+        let vr = HstVl::default().scan(
+            &SearchContext::builder(&ts).build(),
+            &params,
+        );
+        assert_eq!(vr.unwrap().lengths.len(), 2);
+    }
+
+    #[test]
+    fn params_for_length_keeps_a_dividing_p() {
+        let base = SearchParams::new(64, 4, 4).with_seed(9).with_discords(3);
+        let p64 = HstVl::params_for_length(&base, 64);
+        assert_eq!(p64.sax, base.sax);
+        assert_eq!(p64.seed, 9);
+        assert_eq!(p64.k, 3);
+        assert_eq!(p64.s_range, None);
+        // 4 does not divide 42: the shared default rule takes over
+        let p42 = HstVl::params_for_length(&base, 42);
+        assert_eq!(p42.sax.s, 42);
+        assert_eq!(p42.sax.p, SaxParams::default_p(42));
+        assert_eq!(p42.sax.s % p42.sax.p, 0);
+    }
+
+    #[test]
+    fn rejects_invalid_ranges_and_short_series() {
+        let ts =
+            generators::sine_with_noise(300, 0.1, 805).into_series("s");
+        let ctx = SearchContext::builder(&ts).build();
+        let base = SearchParams::new(64, 4, 4);
+        let err = HstVl { range: LengthRange { min: 64, max: 32, step: 8 } }
+            .scan(&ctx, &base)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("max=32"), "{err}");
+        let err = HstVl::from_range(LengthRange::new(128, 200, 8))
+            .scan(&ctx, &base)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("too short"), "{err}");
+    }
+}

@@ -74,6 +74,7 @@ fn readme_has_no_hardcoded_engine_count() {
         "ten engines",
         "eleven engines",
         "twelve engines",
+        "thirteen engines",
     ] {
         assert!(
             !readme.contains(word),
@@ -126,6 +127,45 @@ fn mdim_engines_flow_into_every_registry_and_doc() {
             "docs/PROTOCOL.md must mention the `{id}` engine"
         );
     }
+}
+
+#[test]
+fn vl_engine_flows_into_every_registry_and_doc() {
+    // The variable-length engine must be wired through the same layers as
+    // the mdim/stream ones: registry, README section, protocol doc, and
+    // the reproduction guide's bench map.
+    assert!(
+        ALL_ENGINES.contains(&hstime::vl::ENGINE_ID),
+        "`{}` is missing from algo::ALL_ENGINES",
+        hstime::vl::ENGINE_ID
+    );
+    assert_eq!(
+        algo::by_name(hstime::vl::ENGINE_ID)
+            .expect("hst-vl resolves via by_name")
+            .name(),
+        hstime::vl::ENGINE_ID,
+        "canonical vl id must round-trip through the registry"
+    );
+    let readme = repo_file("README.md");
+    assert!(
+        readme.contains("## Variable-length search"),
+        "README must keep its `## Variable-length search` section"
+    );
+    let proto = repo_file("docs/PROTOCOL.md");
+    assert!(
+        proto.contains(hstime::vl::ENGINE_ID),
+        "docs/PROTOCOL.md must mention the `{}` engine",
+        hstime::vl::ENGINE_ID
+    );
+    let repro = repo_file("docs/REPRODUCING.md");
+    assert!(
+        repro.contains("vl_scan"),
+        "docs/REPRODUCING.md bench map must keep its `vl_scan` row"
+    );
+    assert!(
+        repro.contains("nnd/\u{221a}s") || repro.contains("nnd / sqrt(s)"),
+        "docs/REPRODUCING.md must define the length-normalized nnd score"
+    );
 }
 
 #[test]

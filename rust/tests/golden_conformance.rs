@@ -14,7 +14,12 @@
 //!   all snapshots after an *intentional* behavior change.
 //! - Only positions, neighbors, and nnd bits are pinned. Call counts are
 //!   deliberately left out: the sharded engines' counts vary with worker
-//!   interleaving, and the trajectory file (`BENCH_6.json`) tracks costs.
+//!   interleaving, and the trajectory files (`BENCH_*.json`) track costs.
+//!
+//! The sweep iterates `algo::ALL_ENGINES`, so registry additions (most
+//! recently the variable-length `hst-vl`) are covered automatically —
+//! for `hst-vl` each fixture pins the whole derived `around(s)` range's
+//! ranked output through its registry face.
 //!
 //! Every fixture is additionally swept under both distance kernels and
 //! the reports compared bit for bit — the engine-level face of the

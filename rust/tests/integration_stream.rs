@@ -43,6 +43,7 @@ fn prop_stream_refresh_matches_cold_hst_bitwise() {
             znormalize: true,
             allow_self_match: false,
             threads: 0,
+            s_range: None,
         };
         // enough points to fill the window plus every batch
         let deltas: Vec<usize> = (0..batches).map(|_| g.size(1, s)).collect();

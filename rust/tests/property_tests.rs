@@ -48,6 +48,7 @@ fn prop_hst_exactness_vs_brute() {
             znormalize: true,
             allow_self_match: false,
             threads: 0,
+            s_range: None,
         };
         let hst = algo::hst::HstSearch::default().run(&ts, &params).unwrap();
         let bf = algo::brute::BruteForce.run(&ts, &params).unwrap();
@@ -96,6 +97,7 @@ fn prop_warmup_profile_upper_bounds_exact() {
             znormalize: true,
             allow_self_match: false,
             threads: 0,
+            s_range: None,
         };
         let ctx = SearchContext::builder(&ts).build();
         let exact = algo::brute::BruteForce::exact_profile(&ctx, &params, &dist)
@@ -213,6 +215,7 @@ fn prop_cps_bounds() {
             znormalize: true,
             allow_self_match: false,
             threads: 0,
+            s_range: None,
         };
         let rep = algo::hst::HstSearch::default().run(&ts, &params).unwrap();
         let c = rep.cps();
@@ -319,6 +322,98 @@ fn prop_simd_kernel_bit_identical_to_scalar() {
 }
 
 #[test]
+fn prop_vl_matches_per_length_hst_bitwise() {
+    // The variable-length work-sharing engine is a reorganisation of the
+    // search, never a relaxation: at every length in the range its
+    // discords must equal a cold serial hst run at that exact length —
+    // positions and nnd bit patterns — while the shared SeqStats /
+    // warm-profile transfers keep the total call count strictly below
+    // merlin's cold restarts over the same range.
+    check("hst-vl==per-length-hst", 47, 6, |g| {
+        let min = g.size(8, 24);
+        let step = g.size(1, 8);
+        let count = g.size(2, 4);
+        let range = LengthRange {
+            min,
+            max: min + step * (count - 1),
+            step,
+        };
+        let n = 4 * range.max + g.size(1, 64);
+        let ts = random_series(g, n);
+        let k = g.size(1, 2);
+        // p must divide the base length, but may or may not divide the
+        // intermediate lengths; the scan falls back to
+        // `SaxParams::default_p(s)` per length exactly as the cold baseline
+        // below does via the same `params_for_length` derivation.
+        let cand = *g.choose(&[1usize, 2, 4]);
+        let p = if range.max % cand == 0 {
+            cand
+        } else {
+            SaxParams::default_p(range.max)
+        };
+        let base = SearchParams::new(range.max, p, 4)
+            .with_discords(k)
+            .with_seed(g.rng.next_u64());
+
+        let ctx = SearchContext::builder(&ts).build();
+        let vl = hstime::vl::HstVl::from_range(range)
+            .scan(&ctx, &base)
+            .map_err(|e| format!("vl scan failed: {e}"))?;
+        prop_assert!(
+            vl.lengths.len() == range.count(),
+            "{} lengths scanned, range holds {}",
+            vl.lengths.len(),
+            range.count()
+        );
+        for vl_len in &vl.lengths {
+            let pl = hstime::vl::HstVl::params_for_length(&base, vl_len.s);
+            let cold_ctx = SearchContext::builder(&ts).build();
+            let cold = algo::hst::HstSearch::default()
+                .run_ctx(&cold_ctx, &pl)
+                .map_err(|e| format!("cold hst failed at s={}: {e}", vl_len.s))?;
+            prop_assert!(
+                vl_len.report.discords.len() == cold.discords.len(),
+                "s={}: {} vs {} discords",
+                vl_len.s,
+                vl_len.report.discords.len(),
+                cold.discords.len()
+            );
+            for (a, b) in vl_len.report.discords.iter().zip(&cold.discords) {
+                prop_assert!(
+                    a.position == b.position,
+                    "s={}: position {} vs {}",
+                    vl_len.s,
+                    a.position,
+                    b.position
+                );
+                prop_assert!(
+                    a.nnd.to_bits() == b.nnd.to_bits(),
+                    "s={}: nnd {:016x} vs {:016x} not bit-identical",
+                    vl_len.s,
+                    a.nnd.to_bits(),
+                    b.nnd.to_bits()
+                );
+            }
+        }
+        // the work-sharing contract vs merlin's cold restarts
+        let merlin_ctx = SearchContext::builder(&ts).build();
+        let (_, merlin_calls) = hstime::algo::merlin::Merlin::from_range(range)
+            .scan(&merlin_ctx)
+            .map_err(|e| format!("merlin scan failed: {e}"))?;
+        prop_assert!(
+            vl.total_calls < merlin_calls,
+            "hst-vl {} calls not strictly below merlin {} (range {}..={} step {})",
+            vl.total_calls,
+            merlin_calls,
+            range.min,
+            range.max,
+            range.step
+        );
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_parallel_engines_agree_bitwise_with_serial() {
     // hst-par / scamp-par must return their serial counterparts' discords
     // (positions and bit-identical distances) at every thread count; the
@@ -337,6 +432,7 @@ fn prop_parallel_engines_agree_bitwise_with_serial() {
             znormalize: true,
             allow_self_match: false,
             threads: 0,
+            s_range: None,
         };
         let hst = algo::hst::HstSearch::default().run(&ts, &params).unwrap();
         let scamp = algo::scamp::Scamp.run(&ts, &params).unwrap();
