@@ -54,8 +54,11 @@ for f in BENCH_*.json; do
     cargo run -q --release --bin hst -- bench --check "$f"
 done
 
-step "bench trajectory: BENCH_6 -> BENCH_7 per-cell diff (informational, non-fatal)"
-cargo run -q --release --bin hst -- bench --diff BENCH_6.json BENCH_7.json || true
+step "bench trajectory: BENCH_7 -> BENCH_8 per-cell diff (informational, non-fatal)"
+cargo run -q --release --bin hst -- bench --diff BENCH_7.json BENCH_8.json || true
+
+step "service scale: quick binary-frame smoke (64 streams, zero shed, bit-identical twins)"
+cargo bench --bench service_scale -- --quick
 
 echo
 echo "verify: all gates passed"

@@ -1,0 +1,236 @@
+//! `cargo bench --bench service_scale` — the binary-frame service path
+//! at scale: one readiness-driven reactor thread multiplexing ≥ 1000
+//! concurrent streams of `data` frames, with bounded queues and drain
+//! workers doing the refreshes.
+//!
+//! The bench starts an in-process `serve_config` server, opens N streams
+//! over a handful of client connections (hello → stream_open), pumps
+//! every stream's points as length-prefixed binary frames round-robin,
+//! then subscribes per stream until the last expected cadence refresh
+//! lands. It records frames/sec and the p50/p99 refresh latency (last
+//! frame sent → final update observed per stream) and asserts:
+//!
+//! * **zero shed** — the chosen window bounds each queue at exactly the
+//!   stream's point budget, so memory stays bounded *and* nothing drops;
+//! * **bit-identical refreshes** — sample streams get a JSON-`append`
+//!   twin fed the same points; the final updates must serialize
+//!   identically (the tentpole's exactness requirement).
+//!
+//! Flags (after `--`): --streams N (default 1000), --points N (per
+//! stream, default 600), --s N (default 64), --frame-points N (default
+//! 200), --refresh-every N (default points/2), --conns N (default 8),
+//! --stream-workers N (default 2), --samples N (default 4), --seed N,
+//! --quick (64 streams x 400 points), --json.
+
+use std::time::Instant;
+
+use hstime::service::{self, Client, ServeConfig};
+use hstime::ts::generators;
+use hstime::util::cli::Args;
+use hstime::util::json::Json;
+
+/// Mirror of the monitor's cadence rule (`pending >= cadence` and at
+/// least two complete sequences), so the bench knows exactly how many
+/// refreshes each stream must publish. Window = points here, so no
+/// eviction happens and `num_sequences` is simply `j - s + 1`.
+fn expected_refreshes(points: usize, s: usize, cadence: usize) -> u64 {
+    let mut pending = 0usize;
+    let mut refreshes = 0u64;
+    for j in 1..=points {
+        pending += 1;
+        let num_seq = j.saturating_sub(s - 1);
+        if cadence > 0 && pending >= cadence && num_seq >= 2 {
+            refreshes += 1;
+            pending = 0;
+        }
+    }
+    refreshes
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let quick = args.has("quick");
+    let streams = args.get_usize("streams", if quick { 64 } else { 1_000 });
+    let points = args.get_usize("points", if quick { 400 } else { 600 });
+    let s = args.get_usize("s", 64);
+    let frame_points = args.get_usize("frame-points", 200).max(1);
+    let cadence = args.get_usize("refresh-every", points / 2);
+    let n_conns = args.get_usize("conns", 8).max(1);
+    let stream_workers = args.get_usize("stream-workers", 2).max(1);
+    let samples = args.get_usize("samples", 4).min(streams);
+    let seed = args.get_u64("seed", 8);
+    let json = args.has("json");
+
+    let expected = expected_refreshes(points, s, cadence);
+    anyhow::ensure!(
+        expected >= 1,
+        "no refresh would fire: raise --points or lower --refresh-every"
+    );
+
+    // in-process server: one reactor thread; drain workers do refreshes
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let cfg = ServeConfig {
+        workers: 1,
+        capacity: 64,
+        // binary streams + their JSON twins + slack
+        max_streams: streams + samples + 8,
+        ctx_cache: 8,
+        stream_workers,
+    };
+    let server = std::thread::spawn(move || {
+        service::serve_config("127.0.0.1:0", cfg, |bound| {
+            let _ = addr_tx.send(bound);
+        })
+    });
+    let addr = addr_rx.recv()?;
+
+    let mut conns: Vec<Client> = Vec::with_capacity(n_conns);
+    for _ in 0..n_conns {
+        let mut c = Client::connect(addr)?;
+        c.hello()?;
+        conns.push(c);
+    }
+
+    // one distinct series per stream; window = points, so the stream's
+    // bounded ingest queue can absorb the whole budget even if every
+    // drain lags — bounded memory with zero shed by construction
+    let params = Json::obj().set("s", s).set("p", 4).set("alphabet", 4);
+    let series: Vec<Vec<f64>> = (0..streams)
+        .map(|i| generators::sine_with_noise(points, 0.1, seed + i as u64))
+        .collect();
+    let mut ids = Vec::with_capacity(streams);
+    for i in 0..streams {
+        let id = conns[i % n_conns].open_stream(
+            &format!("s{i}"),
+            params.clone(),
+            points,
+            cadence,
+        )?;
+        ids.push(id);
+    }
+
+    let t0 = Instant::now();
+    let rounds = points.div_ceil(frame_points);
+    let mut total_frames = 0u64;
+    let mut last_sent = vec![t0; streams];
+    for r in 0..rounds {
+        let lo = r * frame_points;
+        let hi = (lo + frame_points).min(points);
+        for i in 0..streams {
+            conns[i % n_conns].send_points(ids[i], &series[i][lo..hi])?;
+            total_frames += 1;
+            if hi == points {
+                last_sent[i] = Instant::now();
+            }
+        }
+    }
+
+    // subscribe round-robin until every stream published its final
+    // cadence refresh; latency = last frame sent → update observed
+    let mut latency_ms = vec![f64::NAN; streams];
+    let mut done = vec![false; streams];
+    let mut remaining = streams;
+    while remaining > 0 {
+        for i in 0..streams {
+            if done[i] {
+                continue;
+            }
+            let reply = conns[i % n_conns].subscribe(
+                &format!("s{i}"),
+                expected - 1,
+                100,
+            )?;
+            if reply.get("ok").and_then(|b| b.as_bool()) != Some(true) {
+                anyhow::bail!(
+                    "subscribe s{i} failed: {}",
+                    reply.get("error").and_then(|e| e.as_str()).unwrap_or("?")
+                );
+            }
+            if let Some(got) = reply.get("seq").and_then(|q| q.as_u64()) {
+                assert!(got >= expected, "s{i}: seq {got} < {expected}");
+                latency_ms[i] =
+                    last_sent[i].elapsed().as_secs_f64() * 1e3;
+                done[i] = true;
+                remaining -= 1;
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // exactness gate: JSON-append twins of the first `samples` streams
+    // must publish bit-identical final updates
+    for i in 0..samples {
+        let twin = format!("j{i}");
+        let c = &mut conns[i % n_conns];
+        c.open_stream(&twin, params.clone(), points, cadence)?;
+        let reply = c.append(&twin, &series[i])?;
+        let twin_last = reply
+            .get("updates")
+            .and_then(|u| u.as_arr())
+            .and_then(|u| u.last())
+            .expect("twin append must refresh")
+            .clone();
+        let bin_reply = c.subscribe(&format!("s{i}"), expected - 1, 5_000)?;
+        let bin_last = bin_reply.get("update").expect("binary update missing");
+        assert_eq!(
+            format!("{twin_last}"),
+            format!("{bin_last}"),
+            "s{i}: binary-frame refresh differs from the JSON append path"
+        );
+    }
+
+    // nothing may have shed, and every queue must be fully drained
+    let stats = conns[0].stats()?;
+    let shed = stats.get("frames_shed").and_then(|v| v.as_u64()).unwrap_or(0);
+    let queued = stats
+        .get("stream_queue_points")
+        .and_then(|v| v.as_u64())
+        .unwrap_or(0);
+    assert_eq!(shed, 0, "bench sized queues for zero shed");
+    assert_eq!(queued, 0, "all queues must drain");
+    for c in conns.iter_mut() {
+        assert!(c.take_sheds().is_empty());
+    }
+
+    let mut sorted: Vec<f64> = latency_ms.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| sorted[((sorted.len() - 1) as f64 * p) as usize];
+    let frames_per_sec = total_frames as f64 / wall_s;
+
+    conns[0].shutdown()?;
+    drop(conns);
+    server.join().expect("server thread")?;
+
+    let out = Json::obj()
+        .set("schema", "hst-service-scale/1")
+        .set("streams", streams)
+        .set("points_per_stream", points)
+        .set("refreshes_per_stream", expected)
+        .set("frames", total_frames)
+        .set("frames_per_sec", frames_per_sec)
+        .set("p50_refresh_ms", pct(0.50))
+        .set("p99_refresh_ms", pct(0.99))
+        .set("wall_s", wall_s)
+        .set("frames_shed", 0u64)
+        .set("bit_identical_samples", samples)
+        .set("reactor_threads", 1u64)
+        .set("stream_workers", stream_workers)
+        .set("conns", n_conns);
+    if json {
+        println!("{out}");
+    } else {
+        println!(
+            "{streams} streams x {points} pts ({expected} refreshes each) \
+             over {n_conns} conns: {total_frames} frames in {wall_s:.2}s \
+             ({frames_per_sec:.0} frames/s)"
+        );
+        println!(
+            "refresh latency p50 {:.2} ms  p99 {:.2} ms  shed 0  \
+             bit-identical twins {samples}/{samples}",
+            pct(0.50),
+            pct(0.99)
+        );
+    }
+    eprintln!("[service_scale] total {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

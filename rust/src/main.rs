@@ -78,11 +78,13 @@ const USAGE: &str = "usage: hst <discover|table|bench|report|plot|merlin|vl|moni
   hst monitor 'ECG 15' --window 4000 --batch 1000
   hst stream 'ECG 15' --window 4000 --refresh-every 500   (incremental hst-stream)
   hst stream --file points.txt --s 64    (or pipe points, one per line, on stdin)
+  hst stream 'ECG 15' --addr 127.0.0.1:7878 --frame-points 512  (binary frames to a server)
   hst mdim --channels c0,c2 --s 96 --algo hst-md          (multivariate k-of-d search)
   hst mdim --file multi.csv --channels temp,flow --s 128  (columns = channels)
   hst mdim --d 4 --n 12000 --gen-seed 7 --algo brute-md   (synthetic correlated channels)
   hst generate 'Shuttle TEK 14' --out tek14.txt
   hst serve --addr 127.0.0.1:7878 --workers 4   (0 = HST_THREADS/all cores)
+  hst serve --max-streams 1024 --ctx-cache 16 --stream-workers 2
   hst submit --addr 127.0.0.1:7878 --dataset 'ECG 15' --algo hst-par --threads 2
   hst info
 thread control: --threads N on discover/submit/table, or HST_THREADS env";
@@ -485,6 +487,13 @@ fn stream(args: &Args) -> Result<()> {
     let refresh_every = args.get_usize("refresh-every", window / 4);
     let json = args.has("json");
 
+    // --addr switches to remote mode: ship the points to a running
+    // `hst serve` as binary data frames instead of monitoring locally
+    if let Some(addr) = args.get("addr") {
+        let addr = addr.to_string();
+        return stream_remote(args, &addr, &points, &params, window, refresh_every, json);
+    }
+
     let mut mon = hstime::stream::StreamingMonitor::new(params, window)?
         .with_name("cli-stream")
         .with_refresh_every(refresh_every);
@@ -512,6 +521,92 @@ fn stream(args: &Args) -> Result<()> {
             mon.refreshes(),
             mon.distance_calls()
         );
+    }
+    Ok(())
+}
+
+/// `hst stream --addr`: feed the points to a remote service over the
+/// binary frame protocol (hello → stream_open → data frames → subscribe
+/// for updates → stream_close). Refreshes printed here are bit-identical
+/// to what the local monitor path would print for the same points.
+fn stream_remote(
+    args: &Args,
+    addr: &str,
+    points: &[f64],
+    params: &SearchParams,
+    window: usize,
+    refresh_every: usize,
+    json: bool,
+) -> Result<()> {
+    let mut client = service::Client::connect(addr)?;
+    client.hello()?;
+    let name = args.get_or("stream", "cli-stream").to_string();
+    let params_json = Json::obj()
+        .set("s", params.sax.s)
+        .set("p", params.sax.p)
+        .set("alphabet", params.sax.alphabet)
+        .set("k", params.k)
+        .set("seed", params.seed);
+    let sid = client.open_stream(&name, params_json, window, refresh_every)?;
+    if !json {
+        println!(
+            "streaming {} points to {addr} as binary frames \
+             (stream {name:?} id {sid}, window {window}, refresh every \
+             {refresh_every})",
+            points.len()
+        );
+    }
+    let frame_points = args.get_usize("frame-points", 512).max(1);
+    for chunk in points.chunks(frame_points) {
+        client.send_points(sid, chunk)?;
+    }
+    // drain updates until the server has nothing new for two seconds
+    let mut seq = 0u64;
+    loop {
+        let reply = client.subscribe(&name, seq, 2_000)?;
+        if reply.get("timed_out").is_some()
+            || reply.get("ok").and_then(|b| b.as_bool()) != Some(true)
+        {
+            break;
+        }
+        let Some(next) = reply.get("seq").and_then(|s| s.as_u64()) else {
+            break;
+        };
+        seq = next;
+        if let Some(update) = reply.get("update") {
+            if json {
+                println!("{update}");
+            } else {
+                let calls = update
+                    .get("distance_calls")
+                    .and_then(|c| c.as_u64())
+                    .unwrap_or(0);
+                let n_disc = update
+                    .get("discords")
+                    .and_then(|d| d.as_arr())
+                    .map(|d| d.len())
+                    .unwrap_or(0);
+                println!(
+                    "refresh {seq}: {n_disc} discords, {calls} distance calls"
+                );
+            }
+        }
+    }
+    let sheds = client.take_sheds();
+    if !sheds.is_empty() {
+        let dropped: u64 = sheds.iter().map(|s| s.dropped as u64).sum();
+        eprintln!(
+            "warning: {} frames ({dropped} points) shed by the server \
+             (first reason: {})",
+            sheds.len(),
+            sheds[0].reason.name()
+        );
+    }
+    client.call(
+        &Json::obj().set("cmd", "stream_close").set("stream", name.as_str()),
+    )?;
+    if !json {
+        println!("{seq} refreshes observed");
     }
     Ok(())
 }
@@ -604,12 +699,35 @@ fn generate(args: &Args) -> Result<()> {
 
 fn serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
+    let defaults = service::ServeConfig::default();
     // 0 = size the pool via ExecPolicy (HST_THREADS, then all cores)
     let workers = hstime::exec::ExecPolicy::new(args.get_usize("workers", 0))
         .resolve();
-    let capacity = args.get_usize("capacity", 64);
-    println!("hstime service: workers={workers} capacity={capacity}");
-    service::serve(addr.as_str(), workers, capacity, |bound| {
+    let cfg = service::ServeConfig {
+        workers,
+        capacity: args.get_usize("capacity", defaults.capacity),
+        max_streams: args.get_usize("max-streams", defaults.max_streams),
+        ctx_cache: args.get_usize("ctx-cache", defaults.ctx_cache),
+        stream_workers: args
+            .get_usize("stream-workers", defaults.stream_workers),
+    };
+    anyhow::ensure!(
+        cfg.max_streams > 0,
+        "flag `--max-streams` must be >= 1 (0 would reject every \
+         stream_open)"
+    );
+    anyhow::ensure!(
+        cfg.ctx_cache > 0,
+        "flag `--ctx-cache` must be >= 1 (0 would disable context reuse \
+         entirely)"
+    );
+    println!(
+        "hstime service: workers={} capacity={} max_streams={} ctx_cache={} \
+         stream_workers={}",
+        cfg.workers, cfg.capacity, cfg.max_streams, cfg.ctx_cache,
+        cfg.stream_workers
+    );
+    service::serve_config(addr.as_str(), cfg, |bound| {
         println!("listening on {bound}");
     })
 }

@@ -24,9 +24,10 @@ use crate::util::json::Json;
 
 use super::streams::{StreamRegistry, STREAM_REGISTRY_CAPACITY};
 
-/// Contexts kept warm by the coordinator (per-process; each context holds
-/// its series plus prepared state, so the cap bounds memory).
-const CONTEXT_CACHE_CAPACITY: usize = 8;
+/// Default contexts kept warm by the coordinator (per-process; each
+/// context holds its series plus prepared state, so the cap bounds
+/// memory). `hst serve --ctx-cache` raises it per process.
+pub const CONTEXT_CACHE_CAPACITY: usize = 8;
 
 /// Upper bound on the total points (`n × channels`) a network-supplied
 /// `synthetic-md:` spec may ask the service to materialize (~80 MB of
@@ -521,6 +522,39 @@ pub struct CoordinatorStats {
     pub streams: usize,
 }
 
+/// Sizing knobs for [`Coordinator::start_config`]. Defaults reproduce
+/// the historical `start(n_workers, capacity)` shape; `hst serve` maps
+/// its `--max-streams` / `--ctx-cache` / `--stream-workers` flags here.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Search worker threads (0 = auto via
+    /// [`ExecPolicy`](crate::exec::ExecPolicy)).
+    pub workers: usize,
+    /// Job queue bound (backpressure threshold).
+    pub capacity: usize,
+    /// Stream registry cap (must be ≥ 1; see
+    /// [`STREAM_REGISTRY_CAPACITY`]).
+    pub max_streams: usize,
+    /// Prepared-context LRU size (must be ≥ 1; see
+    /// [`CONTEXT_CACHE_CAPACITY`]).
+    pub ctx_cache: usize,
+    /// Stream drain workers servicing binary-frame queues and offloaded
+    /// JSON appends (0 = inline mode, no binary draining).
+    pub stream_workers: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> CoordinatorConfig {
+        CoordinatorConfig {
+            workers: 0,
+            capacity: 64,
+            max_streams: STREAM_REGISTRY_CAPACITY,
+            ctx_cache: CONTEXT_CACHE_CAPACITY,
+            stream_workers: super::streams::DEFAULT_STREAM_WORKERS,
+        }
+    }
+}
+
 /// Thread-pool coordinator with a bounded queue (backpressure: `submit`
 /// rejects when full, so upstream callers must retry/slow down — the same
 /// contract a production ingestion tier would expose) and a shared
@@ -534,13 +568,26 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start `n_workers` workers with a queue bound of `capacity`.
-    /// `n_workers == 0` sizes the pool through the shared
-    /// [`ExecPolicy`](crate::exec::ExecPolicy) resolution (`HST_THREADS`,
-    /// then available parallelism) — zero-means-auto is normalized in
-    /// `ExecPolicy` itself, not re-implemented here.
+    /// Start `n_workers` workers with a queue bound of `capacity` and
+    /// every other knob at its default. `n_workers == 0` sizes the pool
+    /// through the shared [`ExecPolicy`](crate::exec::ExecPolicy)
+    /// resolution (`HST_THREADS`, then available parallelism) —
+    /// zero-means-auto is normalized in `ExecPolicy` itself, not
+    /// re-implemented here.
     pub fn start(n_workers: usize, capacity: usize) -> Coordinator {
-        let n_workers = crate::exec::ExecPolicy::new(n_workers).resolve();
+        Coordinator::start_config(CoordinatorConfig {
+            workers: n_workers,
+            capacity,
+            stream_workers: 0,
+            ..CoordinatorConfig::default()
+        })
+    }
+
+    /// Start with explicit sizing (see [`CoordinatorConfig`]).
+    /// `max_streams` / `ctx_cache` of 0 are clamped to 1 here; the CLI
+    /// rejects 0 with a named error before this runs.
+    pub fn start_config(cfg: CoordinatorConfig) -> Coordinator {
+        let n_workers = crate::exec::ExecPolicy::new(cfg.workers).resolve();
         let inner = Arc::new((
             Mutex::new(Inner {
                 queue: VecDeque::new(),
@@ -551,7 +598,7 @@ impl Coordinator {
             }),
             Condvar::new(),
         ));
-        let cache = Arc::new(ContextCache::new(CONTEXT_CACHE_CAPACITY));
+        let cache = Arc::new(ContextCache::new(cfg.ctx_cache.max(1)));
         let workers = (0..n_workers)
             .map(|_| {
                 let inner = Arc::clone(&inner);
@@ -559,12 +606,16 @@ impl Coordinator {
                 std::thread::spawn(move || worker_loop(inner, cache))
             })
             .collect();
+        let streams = StreamRegistry::new(cfg.max_streams);
+        if cfg.stream_workers > 0 {
+            streams.start_workers(cfg.stream_workers);
+        }
         Coordinator {
             inner,
             workers,
             cache,
-            capacity,
-            streams: StreamRegistry::new(STREAM_REGISTRY_CAPACITY),
+            capacity: cfg.capacity,
+            streams,
         }
     }
 
@@ -702,8 +753,10 @@ impl Coordinator {
         }
     }
 
-    /// Drain the queue and stop the workers.
+    /// Drain the queue and stop the workers (stream drain workers
+    /// first, so no refresh runs against a coordinator mid-teardown).
     pub fn shutdown(mut self) {
+        self.streams.stop_workers();
         let (lock, cvar) = &*self.inner;
         {
             let mut g = lock.lock().unwrap();
@@ -1046,9 +1099,11 @@ mod tests {
     #[test]
     fn stream_registry_lives_alongside_the_context_cache() {
         let c = Coordinator::start(1, 4);
-        c.streams()
+        let id = c
+            .streams()
             .open("s1", SearchParams::new(32, 4, 4), 300, 0)
             .unwrap();
+        assert_eq!(c.streams().stream_id("s1"), Some(id));
         assert_eq!(c.stats().streams, 1);
         let pts = crate::ts::generators::sine_with_noise(400, 0.3, 31);
         let updates = c.streams().append("s1", &pts).unwrap();
@@ -1058,6 +1113,29 @@ mod tests {
         assert!(matches!(c.wait(id), Some(JobState::Done(_))));
         c.streams().close("s1").unwrap();
         assert_eq!(c.stats().streams, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn config_sizes_the_registry_and_stream_workers() {
+        let c = Coordinator::start_config(CoordinatorConfig {
+            workers: 1,
+            capacity: 4,
+            max_streams: 3,
+            ctx_cache: 2,
+            stream_workers: 1,
+        });
+        assert_eq!(c.streams().capacity(), 3);
+        assert!(c.streams().has_workers());
+        for i in 0..3 {
+            c.streams()
+                .open(&format!("s{i}"), SearchParams::new(32, 4, 4), 300, 0)
+                .unwrap();
+        }
+        assert!(c
+            .streams()
+            .open("s3", SearchParams::new(32, 4, 4), 300, 0)
+            .is_err());
         c.shutdown();
     }
 

@@ -1,0 +1,483 @@
+//! Length-prefixed binary frames for stream ingest.
+//!
+//! SNIPPETS.md's feagi serialization docs put it bluntly: JSON parsing
+//! overhead makes a line protocol unfit "for any sort of real time data
+//! streaming". This module is the repo's answer — a fixed 12-byte header
+//! (magic + version + frame kind + stream id + payload length) followed
+//! by raw little-endian `f64` points, decoded straight into the monitor
+//! deques with no per-point text parsing.
+//!
+//! Framing is negotiated per connection via a tiss-style versioned JSON
+//! `hello` (see `docs/PROTOCOL.md` § Binary framing); JSON lines and
+//! binary frames then share the socket. The two are distinguished by the
+//! first byte: [`MAGIC`]'s leading byte is `0xB5`, outside ASCII, so it
+//! can never open a JSON line (`{`), and the reactor routes on it.
+//!
+//! Wire layout (all multi-byte integers little-endian):
+//!
+//! ```text
+//! offset  size  field        value
+//! ------  ----  -----------  ------------------------------------------
+//!      0     2  magic        0xB5 0x48
+//!      2     1  version      1 (FRAME_VERSION)
+//!      3     1  kind         FrameKind code (1 = data, 2 = shed)
+//!      4     4  stream_id    u32, assigned by `stream_open`
+//!      8     4  payload_len  u32, payload bytes that follow (bounded)
+//!     12     …  payload      kind-specific (data: packed LE f64 points)
+//! ```
+//!
+//! Every decode error names the offending field and its value
+//! ([`FrameError`]); a hostile `payload_len` is rejected *before* any
+//! allocation (`MAX_FRAME_POINTS` caps it), upholding the repo-wide rule
+//! that a network-supplied size must never drive an unbounded
+//! allocation.
+
+use std::fmt;
+
+/// Leading two bytes of every frame. The first byte is deliberately
+/// non-ASCII so a frame can never be confused with a JSON line on the
+/// shared socket.
+pub const MAGIC: [u8; 2] = [0xB5, 0x48];
+
+/// The one frame-layout version this build speaks; negotiated by the
+/// JSON `hello` command.
+pub const FRAME_VERSION: u8 = 1;
+
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 12;
+
+/// Most points one `data` frame may carry (bounds `payload_len` at
+/// 512 KiB, so a hostile header cannot size an allocation unbounded).
+pub const MAX_FRAME_POINTS: usize = 65_536;
+
+/// Largest admissible `payload_len` ([`MAX_FRAME_POINTS`] × 8 bytes).
+pub const MAX_PAYLOAD_LEN: usize = MAX_FRAME_POINTS * 8;
+
+/// What a frame carries. `docs/PROTOCOL.md`'s Binary framing table is
+/// pinned to this enum by `tests/docs_consistency.rs`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Client → server: packed little-endian `f64` points to append to
+    /// the stream named by `stream_id`.
+    Data,
+    /// Server → client: a shed-load notice — the points of one `data`
+    /// frame were dropped (payload: dropped count + reason code).
+    Shed,
+}
+
+impl FrameKind {
+    /// Every kind, in wire-code order.
+    pub const ALL: [FrameKind; 2] = [FrameKind::Data, FrameKind::Shed];
+
+    /// Wire code of this kind (the header's `kind` byte).
+    pub fn code(self) -> u8 {
+        match self {
+            FrameKind::Data => 1,
+            FrameKind::Shed => 2,
+        }
+    }
+
+    /// Protocol-facing name (what the docs table and errors print).
+    pub fn name(self) -> &'static str {
+        match self {
+            FrameKind::Data => "data",
+            FrameKind::Shed => "shed",
+        }
+    }
+
+    /// Inverse of [`code`](Self::code).
+    pub fn from_code(code: u8) -> Option<FrameKind> {
+        FrameKind::ALL.into_iter().find(|k| k.code() == code)
+    }
+}
+
+/// Why a `shed` frame dropped a `data` frame's points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The stream's bounded append queue was full.
+    QueueFull,
+    /// The sending connection exceeded its in-flight point quota.
+    ClientQuota,
+    /// The `stream_id` names no open stream.
+    NoSuchStream,
+}
+
+impl ShedReason {
+    /// Every reason, in wire-code order.
+    pub const ALL: [ShedReason; 3] = [
+        ShedReason::QueueFull,
+        ShedReason::ClientQuota,
+        ShedReason::NoSuchStream,
+    ];
+
+    /// Wire code (first payload byte after the dropped count).
+    pub fn code(self) -> u8 {
+        match self {
+            ShedReason::QueueFull => 1,
+            ShedReason::ClientQuota => 2,
+            ShedReason::NoSuchStream => 3,
+        }
+    }
+
+    /// Protocol-facing name (mirrored into `stats` counters and docs).
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::ClientQuota => "client_quota",
+            ShedReason::NoSuchStream => "no_such_stream",
+        }
+    }
+
+    /// Inverse of [`code`](Self::code).
+    pub fn from_code(code: u8) -> Option<ShedReason> {
+        ShedReason::ALL.into_iter().find(|r| r.code() == code)
+    }
+}
+
+/// A decoded fixed header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// Layout version (must equal [`FRAME_VERSION`] to decode).
+    pub version: u8,
+    /// What the payload carries.
+    pub kind: FrameKind,
+    /// Stream the frame addresses (from `stream_open`'s reply).
+    pub stream_id: u32,
+    /// Payload bytes following the header (≤ [`MAX_PAYLOAD_LEN`]).
+    pub payload_len: usize,
+}
+
+/// A complete frame borrowed out of a receive buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Frame<'a> {
+    /// The decoded header.
+    pub header: FrameHeader,
+    /// The raw payload bytes (exactly `header.payload_len` of them).
+    pub payload: &'a [u8],
+}
+
+/// Decode failures, each naming the offending field and value — a
+/// malformed frame is rejected loudly, never panicked on, and never
+/// drives an allocation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// The first two bytes are not [`MAGIC`].
+    BadMagic {
+        /// The bytes actually found.
+        found: [u8; 2],
+    },
+    /// The `version` byte is not [`FRAME_VERSION`].
+    BadVersion {
+        /// The version actually found.
+        found: u8,
+    },
+    /// The `kind` byte maps to no [`FrameKind`].
+    BadKind {
+        /// The code actually found.
+        found: u8,
+    },
+    /// The `payload_len` field exceeds [`MAX_PAYLOAD_LEN`].
+    Oversized {
+        /// The length actually requested.
+        payload_len: usize,
+    },
+    /// The buffer ends before the frame does (header or payload).
+    Truncated {
+        /// Bytes the complete frame needs.
+        needed: usize,
+        /// Bytes actually available.
+        have: usize,
+    },
+    /// A `data` payload whose byte length is not a multiple of 8.
+    PayloadAlign {
+        /// The misaligned payload length.
+        payload_len: usize,
+    },
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::BadMagic { found } => write!(
+                f,
+                "frame field `magic` is [{:#04x}, {:#04x}], expected \
+                 [{:#04x}, {:#04x}]",
+                found[0], found[1], MAGIC[0], MAGIC[1]
+            ),
+            FrameError::BadVersion { found } => write!(
+                f,
+                "frame field `version` is {found}, this server speaks \
+                 {FRAME_VERSION}"
+            ),
+            FrameError::BadKind { found } => write!(
+                f,
+                "frame field `kind` is {found}, known kinds: {}",
+                FrameKind::ALL
+                    .map(|k| format!("{} = {}", k.name(), k.code()))
+                    .join(", ")
+            ),
+            FrameError::Oversized { payload_len } => write!(
+                f,
+                "frame field `payload_len` is {payload_len}, cap is \
+                 {MAX_PAYLOAD_LEN} bytes ({MAX_FRAME_POINTS} points)"
+            ),
+            FrameError::Truncated { needed, have } => write!(
+                f,
+                "frame truncated: field `payload_len` promises {needed} \
+                 bytes total, only {have} arrived"
+            ),
+            FrameError::PayloadAlign { payload_len } => write!(
+                f,
+                "frame field `payload_len` is {payload_len}, which is not \
+                 a multiple of 8 (packed f64 points)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Encode a header. `payload_len` is the caller's responsibility to
+/// keep within [`MAX_PAYLOAD_LEN`] (encoders below do).
+pub fn encode_header(
+    kind: FrameKind,
+    stream_id: u32,
+    payload_len: usize,
+) -> [u8; HEADER_LEN] {
+    debug_assert!(payload_len <= MAX_PAYLOAD_LEN);
+    let mut h = [0u8; HEADER_LEN];
+    h[..2].copy_from_slice(&MAGIC);
+    h[2] = FRAME_VERSION;
+    h[3] = kind.code();
+    h[4..8].copy_from_slice(&stream_id.to_le_bytes());
+    h[8..12].copy_from_slice(&(payload_len as u32).to_le_bytes());
+    h
+}
+
+/// Encode one `data` frame: header plus the points packed as
+/// little-endian `f64`. Panics (debug) if `points` exceeds
+/// [`MAX_FRAME_POINTS`]; callers chunk first.
+pub fn encode_data(stream_id: u32, points: &[f64]) -> Vec<u8> {
+    debug_assert!(points.len() <= MAX_FRAME_POINTS);
+    let mut out = Vec::with_capacity(HEADER_LEN + points.len() * 8);
+    out.extend_from_slice(&encode_header(
+        FrameKind::Data,
+        stream_id,
+        points.len() * 8,
+    ));
+    for &x in points {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Encode one `shed` frame: 8-byte payload = dropped point count (u32
+/// LE) + reason code (u8) + three reserved zero bytes.
+pub fn encode_shed(stream_id: u32, dropped: u32, reason: ShedReason) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + 8);
+    out.extend_from_slice(&encode_header(FrameKind::Shed, stream_id, 8));
+    out.extend_from_slice(&dropped.to_le_bytes());
+    out.push(reason.code());
+    out.extend_from_slice(&[0u8; 3]);
+    out
+}
+
+/// Decode the fixed header from the front of `buf`. Validates magic,
+/// version, kind, and the payload-length cap — everything that can be
+/// checked *before* waiting for (or allocating) the payload.
+pub fn decode_header(buf: &[u8]) -> Result<FrameHeader, FrameError> {
+    if buf.len() < HEADER_LEN {
+        return Err(FrameError::Truncated {
+            needed: HEADER_LEN,
+            have: buf.len(),
+        });
+    }
+    if buf[..2] != MAGIC {
+        return Err(FrameError::BadMagic {
+            found: [buf[0], buf[1]],
+        });
+    }
+    if buf[2] != FRAME_VERSION {
+        return Err(FrameError::BadVersion { found: buf[2] });
+    }
+    let kind =
+        FrameKind::from_code(buf[3]).ok_or(FrameError::BadKind { found: buf[3] })?;
+    let stream_id = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    let payload_len =
+        u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+    if payload_len > MAX_PAYLOAD_LEN {
+        return Err(FrameError::Oversized { payload_len });
+    }
+    if kind == FrameKind::Data && payload_len % 8 != 0 {
+        return Err(FrameError::PayloadAlign { payload_len });
+    }
+    Ok(FrameHeader {
+        version: buf[2],
+        kind,
+        stream_id,
+        payload_len,
+    })
+}
+
+/// Decode one complete frame from the front of `buf`, borrowing the
+/// payload. Errors `Truncated` when `buf` holds less than the header
+/// promises — a streaming reader treats that as "wait for more bytes"
+/// while it can still read, and as a hard error at EOF.
+pub fn decode(buf: &[u8]) -> Result<Frame<'_>, FrameError> {
+    let header = decode_header(buf)?;
+    let total = HEADER_LEN + header.payload_len;
+    if buf.len() < total {
+        return Err(FrameError::Truncated {
+            needed: total,
+            have: buf.len(),
+        });
+    }
+    Ok(Frame {
+        header,
+        payload: &buf[HEADER_LEN..total],
+    })
+}
+
+/// Iterate a `data` payload's points without materializing a `Vec`
+/// (the zero-copy half of the ingest path — bytes go socket buffer →
+/// monitor deques with exactly one decode).
+pub fn payload_points(payload: &[u8]) -> impl Iterator<Item = f64> + '_ {
+    payload
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+}
+
+/// Decode a `shed` frame's payload: `(dropped points, reason)`. `None`
+/// for a malformed payload (wrong length or unknown reason code).
+pub fn decode_shed_payload(payload: &[u8]) -> Option<(u32, ShedReason)> {
+    if payload.len() != 8 {
+        return None;
+    }
+    let dropped = u32::from_le_bytes(payload[..4].try_into().unwrap());
+    let reason = ShedReason::from_code(payload[4])?;
+    Some((dropped, reason))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_frame_roundtrips_bit_identically() {
+        let points = [0.0, -1.5, f64::MIN_POSITIVE, 1.0e300, -0.0, 42.125];
+        let wire = encode_data(7, &points);
+        assert_eq!(wire.len(), HEADER_LEN + points.len() * 8);
+        let frame = decode(&wire).unwrap();
+        assert_eq!(frame.header.kind, FrameKind::Data);
+        assert_eq!(frame.header.version, FRAME_VERSION);
+        assert_eq!(frame.header.stream_id, 7);
+        assert_eq!(frame.header.payload_len, points.len() * 8);
+        let back: Vec<f64> = payload_points(frame.payload).collect();
+        assert_eq!(back.len(), points.len());
+        for (a, b) in points.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f64 bits must survive");
+        }
+    }
+
+    #[test]
+    fn shed_frame_roundtrips() {
+        let wire = encode_shed(9, 512, ShedReason::ClientQuota);
+        let frame = decode(&wire).unwrap();
+        assert_eq!(frame.header.kind, FrameKind::Shed);
+        assert_eq!(frame.header.stream_id, 9);
+        let dropped =
+            u32::from_le_bytes(frame.payload[..4].try_into().unwrap());
+        assert_eq!(dropped, 512);
+        assert_eq!(
+            ShedReason::from_code(frame.payload[4]),
+            Some(ShedReason::ClientQuota)
+        );
+        assert_eq!(
+            decode_shed_payload(frame.payload),
+            Some((512, ShedReason::ClientQuota))
+        );
+        assert_eq!(decode_shed_payload(&frame.payload[..7]), None);
+    }
+
+    #[test]
+    fn bad_magic_is_rejected_by_name() {
+        let mut wire = encode_data(1, &[1.0]);
+        wire[0] = b'{'; // a JSON line can never be a frame, and vice versa
+        let err = decode(&wire).unwrap_err();
+        assert_eq!(err, FrameError::BadMagic { found: [b'{', 0x48] });
+        assert!(err.to_string().contains("`magic`"), "{err}");
+    }
+
+    #[test]
+    fn wrong_version_is_rejected_by_name() {
+        let mut wire = encode_data(1, &[1.0]);
+        wire[2] = 9;
+        let err = decode(&wire).unwrap_err();
+        assert_eq!(err, FrameError::BadVersion { found: 9 });
+        assert!(err.to_string().contains("`version`"), "{err}");
+    }
+
+    #[test]
+    fn unknown_kind_is_rejected_by_name() {
+        let mut wire = encode_data(1, &[1.0]);
+        wire[3] = 0xEE;
+        let err = decode(&wire).unwrap_err();
+        assert_eq!(err, FrameError::BadKind { found: 0xEE });
+        assert!(err.to_string().contains("`kind`"), "{err}");
+    }
+
+    #[test]
+    fn truncated_payload_is_rejected_with_counts() {
+        let wire = encode_data(1, &[1.0, 2.0, 3.0]);
+        let err = decode(&wire[..wire.len() - 5]).unwrap_err();
+        assert_eq!(
+            err,
+            FrameError::Truncated {
+                needed: HEADER_LEN + 24,
+                have: HEADER_LEN + 19,
+            }
+        );
+        // a cut inside the header is truncation too, not garbage
+        assert!(matches!(
+            decode(&wire[..HEADER_LEN - 1]),
+            Err(FrameError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn oversized_length_field_is_rejected_before_any_allocation() {
+        // hand-craft a header whose payload_len is hostile: the decoder
+        // must reject from the 12 header bytes alone — it never waits
+        // for, or allocates, 4 GiB
+        let mut h = encode_header(FrameKind::Data, 1, 8).to_vec();
+        h[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_header(&h).unwrap_err();
+        assert_eq!(
+            err,
+            FrameError::Oversized {
+                payload_len: u32::MAX as usize
+            }
+        );
+        assert!(err.to_string().contains("`payload_len`"), "{err}");
+    }
+
+    #[test]
+    fn misaligned_data_payload_is_rejected() {
+        let mut h = encode_header(FrameKind::Data, 1, 8).to_vec();
+        h[8..12].copy_from_slice(&12u32.to_le_bytes());
+        let err = decode_header(&h).unwrap_err();
+        assert_eq!(err, FrameError::PayloadAlign { payload_len: 12 });
+        assert!(err.to_string().contains("multiple of 8"), "{err}");
+    }
+
+    #[test]
+    fn kind_codes_roundtrip_and_magic_is_not_ascii() {
+        for k in FrameKind::ALL {
+            assert_eq!(FrameKind::from_code(k.code()), Some(k));
+        }
+        assert_eq!(FrameKind::from_code(0), None);
+        // the JSON/frame demultiplexer depends on this byte never
+        // starting a JSON line
+        assert!(MAGIC[0] >= 0x80);
+    }
+}

@@ -1,16 +1,25 @@
 //! Batch discord-search service: the deployment-facing coordinator.
 //!
-//! A thread-pool job runner with bounded-queue backpressure plus a TCP
-//! JSON-lines front end. (The offline registry has no tokio; the
-//! coordinator uses std threads + condvar — the concurrency pattern, not
-//! the framework, is what matters at this scale.)
+//! A thread-pool job runner with bounded-queue backpressure behind a TCP
+//! front end that speaks two encodings over one port: JSON lines for
+//! commands, and length-prefixed binary [`frame`]s for high-rate stream
+//! ingest (negotiated with a versioned `hello`). The server is a
+//! readiness-driven reactor — one thread multiplexes every connection,
+//! parking blocked `wait`/`subscribe` replies as polled slots instead of
+//! pinning a thread each. (The offline registry has no tokio; reactor,
+//! coordinator, and stream drain workers are std threads + condvars —
+//! the concurrency pattern, not the framework, is what matters at this
+//! scale.)
 //!
 //! Protocol sketch (one JSON object per line; the **complete reference**
-//! — every command, field, error shape, and a worked TCP transcript — is
-//! `docs/PROTOCOL.md` at the repository root, kept in sync with
-//! [`server::COMMANDS`] by `tests/docs_consistency.rs`):
+//! — every command, field, error shape, the binary frame layout, and a
+//! worked TCP transcript — is `docs/PROTOCOL.md` at the repository root,
+//! kept in sync with [`server::COMMANDS`] and the frame codec by
+//! `tests/docs_consistency.rs`):
 //!
 //! ```text
+//! → {"cmd":"hello","version":1}
+//! ← {"ok":true,"frames":{"version":1,"magic":[181,72],"header_len":12,"max_points":65536}}
 //! → {"cmd":"submit","dataset":"ECG 300","scale_div":8,"algo":"hst","params":{"s":300,"p":4,"alphabet":4,"k":3}}
 //! ← {"ok":true,"job":1}
 //! → {"cmd":"batch","jobs":[{"dataset":"ECG 300","algo":"hst-par","threads":4,"params":{"s":300}}, …]}
@@ -24,9 +33,11 @@
 //! → {"cmd":"wait","job":1,"timeout_ms":250}
 //! ← {"ok":true,"job":1,"state":"running","timed_out":true}   (on expiry)
 //! → {"cmd":"stats"}
-//! ← {"ok":true,"queued":0,"running":1,"workers":4,"jobs_total":3,"queue_capacity":64,"ctx_cache_entries":1,"streams":1}
+//! ← {"ok":true,"queued":0,"running":1,"workers":4,…,"conns":3,"pending":1,"frames_rx":128,"frames_shed":0,…}
 //! → {"cmd":"stream_open","stream":"sensor-7","window":4000,"refresh_every":500,"params":{"s":64}}
-//! ← {"ok":true,"stream":"sensor-7"}
+//! ← {"ok":true,"stream":"sensor-7","stream_id":1}
+//! → [0xB5 0x48 v=1 kind=data stream_id=1 payload_len=4000] + 500 × f64 LE   (binary, no reply)
+//! ← [0xB5 0x48 v=1 kind=shed stream_id=1] + dropped/reason               (only on overload)
 //! → {"cmd":"append","stream":"sensor-7","points":[0.93,1.02, …]}
 //! ← {"ok":true,"stream":"sensor-7","appended":500,"updates":[{"refresh":1,"discords":[…], …}]}
 //! → {"cmd":"subscribe","stream":"sensor-7","after":1,"timeout_ms":250}
@@ -50,17 +61,24 @@
 //!
 //! Streaming state lives in the coordinator's bounded [`StreamRegistry`]
 //! alongside that LRU: each open stream is one incremental
-//! [`StreamingMonitor`](crate::stream::StreamingMonitor), so every
-//! `append` pays only the window delta and each refresh is a warm search
-//! (see the [`stream`](crate::stream) module for the exactness argument).
+//! [`StreamingMonitor`](crate::stream::StreamingMonitor) plus a bounded
+//! ingest queue of raw binary batches serviced by drain workers, so
+//! every append pays only the window delta and each refresh is a warm
+//! search — bit-identical whichever encoding delivered the points (see
+//! the [`stream`](crate::stream) module for the exactness argument, and
+//! [`streams`] for the backpressure bounds).
 
 pub mod coordinator;
+pub mod frame;
 pub mod online;
 pub mod server;
 pub mod streams;
 
 pub use coordinator::{
-    Coordinator, CoordinatorStats, JobSpec, JobState, MdimJobSpec, VlJobSpec,
+    Coordinator, CoordinatorConfig, CoordinatorStats, JobSpec, JobState,
+    MdimJobSpec, VlJobSpec,
 };
-pub use server::{serve, Client};
-pub use streams::StreamRegistry;
+pub use server::{
+    serve, serve_config, Client, ServeConfig, ShedNotice, CLIENT_INFLIGHT_QUOTA,
+};
+pub use streams::{Enqueue, IngestStats, StreamRegistry};

@@ -1,84 +1,582 @@
-//! TCP JSON-lines front end over the [`Coordinator`] plus a blocking
-//! [`Client`] for the CLI, examples, and integration tests.
+//! TCP front end over the [`Coordinator`]: a readiness-driven reactor
+//! multiplexing every connection on one thread, speaking JSON lines and
+//! binary frames over the same port, plus a blocking [`Client`] for the
+//! CLI, examples, benches, and integration tests.
+//!
+//! ## Reactor, not thread-per-connection
+//!
+//! Earlier versions parked one handler thread per connection, which
+//! meant one OS thread pinned per blocked `subscribe` — a dead end at
+//! 1k+ streams. The reactor keeps every socket nonblocking and loops:
+//! accept whatever is pending, read whatever is readable, parse, answer
+//! what can be answered now, and park what cannot (`wait`, `subscribe`,
+//! offloaded `append`) as a *pending reply slot* polled on later ticks.
+//! Replies flush strictly in request order per connection, so pipelined
+//! clients see exactly the ordering a blocking server gave them. A
+//! client that disconnects mid-`subscribe` is dropped — with its pending
+//! slots — on the very next tick instead of leaking a parked thread
+//! until some timeout.
+//!
+//! ## One port, two encodings
+//!
+//! The first byte of [`frame::MAGIC`] is `0xB5` (≥ 0x80), which can
+//! never start a JSON line, so the reactor demultiplexes per message:
+//! magic byte → length-prefixed binary frame, anything else → JSON line.
+//! Binary `data` frames are ingest-only and fire-and-forget: accepted
+//! payloads go to the stream's bounded queue for the drain workers and
+//! get no reply; dropped ones come back as a binary `shed` frame naming
+//! the reason. Frames must be negotiated first with the versioned
+//! `hello` command — a frame on a connection that never said hello is a
+//! protocol error.
+//!
+//! ## Backpressure
+//!
+//! Three bounds keep a flood from growing server memory: the per-stream
+//! ingest queue (capacity = the stream's window), the per-connection
+//! in-flight point quota ([`CLIENT_INFLIGHT_QUOTA`]), and the
+//! per-connection outbound buffer (a consumer too slow to read its own
+//! replies is disconnected). The first two shed frames with a named
+//! reason; all of it is observable through `stats`.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::config::SearchParams;
 use crate::util::json::Json;
 
-use super::coordinator::{Coordinator, JobSpec, JobState};
+use super::coordinator::{Coordinator, CoordinatorConfig, JobSpec, JobState};
+use super::frame::{self, FrameHeader, FrameKind, ShedReason};
+use super::streams::Enqueue;
 
-/// Serve until a `shutdown` command arrives. Returns the bound local
-/// address through `on_bound` (use port 0 to pick a free port).
+/// Points one connection may have in flight (accepted into stream
+/// queues, not yet drained) before its further `data` frames shed with
+/// reason `client_quota`. 256k points ≈ 2 MB of payload per client.
+pub const CLIENT_INFLIGHT_QUOTA: u64 = 262_144;
+
+/// Longest JSON line a client may send (a `batch` of jobs fits in far
+/// less; past this is a protocol error, not an allocation).
+const MAX_LINE_LEN: usize = 16 << 20;
+
+/// Outbound bytes buffered per connection before the reactor drops it
+/// as a slow consumer (its memory, not ours, is the resource at risk).
+const MAX_OUT_BUF: usize = 8 << 20;
+
+/// Reactor sleep when a tick made no progress (no readable socket, no
+/// resolvable pending, nothing to flush).
+const IDLE_SLEEP: Duration = Duration::from_millis(1);
+
+/// Sizing for [`serve_config`]. Defaults match the historical server:
+/// auto workers, queue of 64, 8 streams, 8 cached contexts, 2 stream
+/// drain workers.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Search worker threads (0 = auto via `ExecPolicy`).
+    pub workers: usize,
+    /// Job queue bound.
+    pub capacity: usize,
+    /// Stream registry cap (`--max-streams`).
+    pub max_streams: usize,
+    /// Prepared-context LRU size (`--ctx-cache`).
+    pub ctx_cache: usize,
+    /// Stream drain workers (`--stream-workers`; 0 = inline JSON
+    /// appends and no binary-frame draining).
+    pub stream_workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        let c = CoordinatorConfig::default();
+        ServeConfig {
+            workers: 0,
+            capacity: 64,
+            max_streams: c.max_streams,
+            ctx_cache: c.ctx_cache,
+            stream_workers: c.stream_workers,
+        }
+    }
+}
+
+/// Serve until a `shutdown` command arrives, with default sizing.
+/// Returns the bound local address through `on_bound` (use port 0 to
+/// pick a free port).
 pub fn serve<A: ToSocketAddrs>(
     addr: A,
     n_workers: usize,
     capacity: usize,
-    on_bound: impl FnOnce(std::net::SocketAddr),
+    on_bound: impl FnOnce(SocketAddr),
+) -> Result<()> {
+    serve_config(
+        addr,
+        ServeConfig {
+            workers: n_workers,
+            capacity,
+            ..ServeConfig::default()
+        },
+        on_bound,
+    )
+}
+
+/// Serve with explicit sizing (see [`ServeConfig`]). The calling thread
+/// becomes the reactor; it returns after a `shutdown` command has been
+/// answered and flushed.
+pub fn serve_config<A: ToSocketAddrs>(
+    addr: A,
+    cfg: ServeConfig,
+    on_bound: impl FnOnce(SocketAddr),
 ) -> Result<()> {
     let listener = TcpListener::bind(addr).context("binding service socket")?;
+    listener
+        .set_nonblocking(true)
+        .context("making service socket nonblocking")?;
     on_bound(listener.local_addr()?);
-    let coord = Arc::new(Coordinator::start(n_workers, capacity));
-    let stop = Arc::new(AtomicBool::new(false));
-    // accept loop: one handler thread per connection (few clients, long
-    // jobs — thread-per-conn is the right tradeoff here). Handlers are
-    // detached: joining them would deadlock shutdown while another client
-    // keeps its connection open; they exit when their peer disconnects.
-    for stream in listener.incoming() {
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-        let stream = stream?;
-        let coord = Arc::clone(&coord);
-        let stop2 = Arc::clone(&stop);
-        std::thread::spawn(move || {
-            let _ = handle_conn(stream, &coord, &stop2);
-        });
-        if stop.load(Ordering::SeqCst) {
-            break;
+    let coord = Coordinator::start_config(CoordinatorConfig {
+        workers: cfg.workers,
+        capacity: cfg.capacity,
+        max_streams: cfg.max_streams,
+        ctx_cache: cfg.ctx_cache,
+        stream_workers: cfg.stream_workers,
+    });
+    reactor(listener, coord)
+}
+
+/// One reply owed to a connection, in request order.
+enum ReplySlot {
+    /// Computed; flushes as soon as every earlier slot has.
+    Ready(Json),
+    /// Parked; polled each tick until it resolves.
+    Pending(Pending),
+}
+
+/// The three commands the reactor parks instead of blocking on.
+enum Pending {
+    /// `wait`: resolves when the job reaches a terminal state (or the
+    /// deadline passes → live state + `timed_out`).
+    Wait {
+        job: u64,
+        deadline: Option<Instant>,
+    },
+    /// `subscribe`: resolves when the stream's refresh counter passes
+    /// `after` (or the deadline passes → `timed_out`).
+    Subscribe {
+        stream: String,
+        after: u64,
+        deadline: Option<Instant>,
+    },
+    /// `append` offloaded to a stream drain worker; the worker answers
+    /// on the channel.
+    Append {
+        stream: String,
+        appended: usize,
+        rx: mpsc::Receiver<Result<Vec<Json>, String>>,
+    },
+}
+
+/// Per-connection reactor state.
+struct Conn {
+    sock: TcpStream,
+    /// Unparsed inbound bytes (at most one incomplete message after a
+    /// parse pass — both message kinds are length-capped).
+    buf: Vec<u8>,
+    /// Outbound bytes not yet accepted by the socket.
+    out: Vec<u8>,
+    out_pos: usize,
+    replies: VecDeque<ReplySlot>,
+    /// `hello` negotiated — binary frames accepted.
+    frames_on: bool,
+    /// Points accepted into stream queues on behalf of this connection
+    /// and not yet drained (the `client_quota` bound).
+    in_flight: Arc<AtomicU64>,
+    /// No more reads; drop once every owed reply has flushed.
+    closing: bool,
+    /// Drop now (EOF, io error, slow consumer).
+    dead: bool,
+}
+
+impl Conn {
+    fn new(sock: TcpStream) -> Conn {
+        Conn {
+            sock,
+            buf: Vec::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            replies: VecDeque::new(),
+            frames_on: false,
+            in_flight: Arc::new(AtomicU64::new(0)),
+            closing: false,
+            dead: false,
         }
     }
-    match Arc::try_unwrap(coord) {
-        Ok(c) => c.shutdown(),
-        Err(_) => {} // a handler still holds it; workers die with process
+
+    fn push_ready(&mut self, reply: Json) {
+        self.replies.push_back(ReplySlot::Ready(reply));
     }
+
+    /// Queue an error reply and stop reading: protocol errors (bad
+    /// frame, oversized line, frame before hello) end the connection,
+    /// but only after the client has been told why.
+    fn protocol_error(&mut self, msg: &str) {
+        self.push_ready(err_reply(msg));
+        self.closing = true;
+    }
+
+    fn pending_count(&self) -> usize {
+        self.replies
+            .iter()
+            .filter(|s| matches!(s, ReplySlot::Pending(_)))
+            .count()
+    }
+}
+
+/// Reactor-level gauges the `stats` command reports (snapshotted at the
+/// top of the tick that dispatches it).
+#[derive(Clone, Copy)]
+struct ReactorSnapshot {
+    conns: usize,
+    pending: usize,
+}
+
+/// The reactor loop: accept, read/parse/dispatch, resolve pendings,
+/// flush, reap dead connections — then sleep only if nothing moved.
+fn reactor(listener: TcpListener, coord: Coordinator) -> Result<()> {
+    let stop = AtomicBool::new(false);
+    let mut conns: Vec<Conn> = Vec::new();
+    loop {
+        let mut progressed = false;
+        loop {
+            match listener.accept() {
+                Ok((sock, _peer)) => {
+                    if sock.set_nonblocking(true).is_ok() {
+                        conns.push(Conn::new(sock));
+                        progressed = true;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => break, // transient accept failure: retry next tick
+            }
+        }
+        let snap = ReactorSnapshot {
+            conns: conns.len(),
+            pending: conns.iter().map(Conn::pending_count).sum(),
+        };
+        for conn in conns.iter_mut() {
+            progressed |= service_reads(conn, &coord, &stop, snap);
+        }
+        for conn in conns.iter_mut() {
+            progressed |= resolve_pendings(conn, &coord);
+        }
+        for conn in conns.iter_mut() {
+            progressed |= flush(conn);
+        }
+        conns.retain(|c| !c.dead);
+        if stop.load(Ordering::SeqCst) {
+            // best-effort: give every connection a moment to take its
+            // final replies (the `bye`), then tear down
+            let deadline = Instant::now() + Duration::from_secs(2);
+            while Instant::now() < deadline {
+                for conn in conns.iter_mut() {
+                    resolve_pendings(conn, &coord);
+                    flush(conn);
+                }
+                conns.retain(|c| !c.dead);
+                if conns.iter().all(|c| c.out.is_empty()) {
+                    break;
+                }
+                std::thread::sleep(IDLE_SLEEP);
+            }
+            break;
+        }
+        if !progressed {
+            std::thread::sleep(IDLE_SLEEP);
+        }
+    }
+    drop(conns);
+    drop(listener);
+    coord.shutdown();
     Ok(())
 }
 
-fn handle_conn(
-    stream: TcpStream,
+/// Read everything the socket has, then parse message-by-message:
+/// magic byte → binary frame, otherwise → JSON line.
+fn service_reads(
+    conn: &mut Conn,
     coord: &Coordinator,
     stop: &AtomicBool,
-) -> Result<()> {
-    let peer = stream.peer_addr()?;
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = dispatch(&line, coord, stop);
-        writeln!(writer, "{reply}")?;
-        if stop.load(Ordering::SeqCst) {
-            // unblock the accept loop with a dummy connection
-            let _ = TcpStream::connect(writer.local_addr()?);
-            break;
+    snap: ReactorSnapshot,
+) -> bool {
+    if conn.dead || conn.closing {
+        return false;
+    }
+    let mut progressed = false;
+    let mut tmp = [0u8; 64 * 1024];
+    loop {
+        match conn.sock.read(&mut tmp) {
+            Ok(0) => {
+                // peer closed: drop the connection and, with it, every
+                // pending slot (a mid-`subscribe` disconnect frees its
+                // reply slot this tick, not at some timeout)
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => {
+                conn.buf.extend_from_slice(&tmp[..n]);
+                progressed = true;
+                if n < tmp.len() {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
         }
     }
-    let _ = peer;
-    Ok(())
+    while !conn.dead && !conn.closing && !conn.buf.is_empty() {
+        if conn.buf[0] == frame::MAGIC[0] {
+            match frame::decode(&conn.buf) {
+                Ok(f) => {
+                    let header = f.header;
+                    let payload = f.payload.to_vec();
+                    conn.buf.drain(..frame::HEADER_LEN + header.payload_len);
+                    handle_frame(conn, header, payload, coord);
+                    progressed = true;
+                }
+                // an incomplete frame is not an error yet — the header
+                // already validated the length cap, so waiting for the
+                // rest can never over-allocate
+                Err(frame::FrameError::Truncated { .. }) => break,
+                Err(e) => {
+                    conn.protocol_error(&format!("bad frame: {e}"));
+                    progressed = true;
+                }
+            }
+        } else {
+            let Some(nl) = conn.buf.iter().position(|&b| b == b'\n') else {
+                if conn.buf.len() > MAX_LINE_LEN {
+                    conn.protocol_error(&format!(
+                        "request line exceeds {MAX_LINE_LEN} bytes"
+                    ));
+                    progressed = true;
+                }
+                break;
+            };
+            let line: Vec<u8> = conn.buf.drain(..=nl).collect();
+            progressed = true;
+            match std::str::from_utf8(&line[..line.len() - 1]) {
+                Err(_) => conn.push_ready(err_reply(
+                    "request line is not valid UTF-8",
+                )),
+                Ok(s) if s.trim().is_empty() => {}
+                Ok(s) => match dispatch(s.trim(), coord, stop, snap) {
+                    Disposition::Reply(j) => conn.push_ready(j),
+                    Disposition::Hello(j) => {
+                        conn.frames_on = true;
+                        conn.push_ready(j);
+                    }
+                    Disposition::Pend(p) => {
+                        conn.replies.push_back(ReplySlot::Pending(p))
+                    }
+                },
+            }
+        }
+    }
+    progressed
+}
+
+/// One complete inbound binary frame. `data` is fire-and-forget ingest:
+/// accepted → silence, shed → a binary `shed` frame back out-of-band.
+fn handle_frame(
+    conn: &mut Conn,
+    header: FrameHeader,
+    payload: Vec<u8>,
+    coord: &Coordinator,
+) {
+    if !conn.frames_on {
+        conn.protocol_error(
+            "binary frame before `hello` — negotiate with \
+             {\"cmd\":\"hello\",\"version\":1} first",
+        );
+        return;
+    }
+    match header.kind {
+        FrameKind::Shed => {
+            conn.protocol_error("frame kind `shed` is server-to-client only")
+        }
+        FrameKind::Data => {
+            let outcome = coord.streams().enqueue_data(
+                header.stream_id,
+                payload,
+                Some((&conn.in_flight, CLIENT_INFLIGHT_QUOTA)),
+            );
+            if let Enqueue::Shed { reason, dropped } = outcome {
+                conn.out.extend_from_slice(&frame::encode_shed(
+                    header.stream_id,
+                    dropped.min(u32::MAX as usize) as u32,
+                    reason,
+                ));
+            }
+        }
+    }
+}
+
+/// Try to resolve every parked reply slot; each tick costs one cheap
+/// status/poll per pending, never a blocking wait.
+fn resolve_pendings(conn: &mut Conn, coord: &Coordinator) -> bool {
+    let mut progressed = false;
+    for slot in conn.replies.iter_mut() {
+        if let ReplySlot::Pending(p) = slot {
+            if let Some(reply) = poll_pending(p, coord) {
+                *slot = ReplySlot::Ready(reply);
+                progressed = true;
+            }
+        }
+    }
+    progressed
+}
+
+fn poll_pending(p: &mut Pending, coord: &Coordinator) -> Option<Json> {
+    match p {
+        Pending::Wait { job, deadline } => {
+            let id = *job;
+            match coord.status(id) {
+                None => Some(err_reply("no such job")),
+                Some(JobState::Done(report)) => Some(
+                    Json::obj()
+                        .set("ok", true)
+                        .set("job", id)
+                        .set("state", "done")
+                        .set("report", report),
+                ),
+                Some(JobState::Failed(msg)) => Some(
+                    Json::obj()
+                        .set("ok", false)
+                        .set("job", id)
+                        .set("state", "failed")
+                        .set("error", msg),
+                ),
+                // still queued/running: report the live state once the
+                // deadline passes instead of pinning the slot forever
+                Some(st) => {
+                    if deadline.is_some_and(|d| Instant::now() >= d) {
+                        Some(
+                            Json::obj()
+                                .set("ok", true)
+                                .set("job", id)
+                                .set("state", st.label())
+                                .set("timed_out", true),
+                        )
+                    } else {
+                        None
+                    }
+                }
+            }
+        }
+        Pending::Subscribe {
+            stream,
+            after,
+            deadline,
+        } => match coord.streams().poll(stream, *after) {
+            Err(e) => Some(err_reply(&format!("{e:#}"))),
+            Ok(Some((seq, update))) => Some(
+                Json::obj()
+                    .set("ok", true)
+                    .set("stream", stream.as_str())
+                    .set("seq", seq)
+                    .set("update", update),
+            ),
+            Ok(None) => {
+                if deadline.is_some_and(|d| Instant::now() >= d) {
+                    Some(
+                        Json::obj()
+                            .set("ok", true)
+                            .set("stream", stream.as_str())
+                            .set("timed_out", true),
+                    )
+                } else {
+                    None
+                }
+            }
+        },
+        Pending::Append {
+            stream,
+            appended,
+            rx,
+        } => match rx.try_recv() {
+            Ok(Ok(updates)) => Some(
+                Json::obj()
+                    .set("ok", true)
+                    .set("stream", stream.as_str())
+                    .set("appended", *appended)
+                    .set("updates", updates),
+            ),
+            Ok(Err(msg)) => Some(err_reply(&msg)),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(err_reply("stream worker dropped the append"))
+            }
+        },
+    }
+}
+
+/// Move ready replies (in order, stopping at the first still-pending
+/// slot) into the outbound buffer, then write what the socket takes.
+fn flush(conn: &mut Conn) -> bool {
+    if conn.dead {
+        return false;
+    }
+    while matches!(conn.replies.front(), Some(ReplySlot::Ready(_))) {
+        if let Some(ReplySlot::Ready(j)) = conn.replies.pop_front() {
+            conn.out.extend_from_slice(j.to_string().as_bytes());
+            conn.out.push(b'\n');
+        }
+    }
+    if conn.out.len() - conn.out_pos > MAX_OUT_BUF {
+        // slow consumer: shed the connection, not server memory
+        conn.dead = true;
+        return true;
+    }
+    let mut progressed = false;
+    while conn.out_pos < conn.out.len() {
+        match conn.sock.write(&conn.out[conn.out_pos..]) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => {
+                conn.out_pos += n;
+                progressed = true;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+    if conn.out_pos == conn.out.len() {
+        conn.out.clear();
+        conn.out_pos = 0;
+        if conn.closing && conn.replies.is_empty() {
+            conn.dead = true;
+        }
+    }
+    progressed
 }
 
 /// Every `cmd` the dispatcher accepts, in `docs/PROTOCOL.md` order.
 /// `tests/docs_consistency.rs` asserts the protocol document covers each
 /// of these, so the list and the doc cannot drift apart.
-pub const COMMANDS: [&str; 13] = [
+pub const COMMANDS: [&str; 14] = [
+    "hello",
     "submit",
     "batch",
     "mdim",
@@ -121,42 +619,100 @@ fn stream_name(req: &Json) -> Result<&str, Json> {
         .ok_or_else(|| err_reply("field `stream` (string) required"))
 }
 
-fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
+/// What one dispatched request does to its connection.
+enum Disposition {
+    /// Answer now.
+    Reply(Json),
+    /// Answer now *and* enable binary frames on this connection.
+    Hello(Json),
+    /// Park a pending reply slot; the reactor resolves it later.
+    Pend(Pending),
+}
+
+fn reply(j: Json) -> Disposition {
+    Disposition::Reply(j)
+}
+
+fn dispatch(
+    line: &str,
+    coord: &Coordinator,
+    stop: &AtomicBool,
+    snap: ReactorSnapshot,
+) -> Disposition {
     let req = match Json::parse(line) {
         Ok(v) => v,
-        Err(e) => return err_reply(&format!("bad json: {e}")),
+        Err(e) => return reply(err_reply(&format!("bad json: {e}"))),
     };
     match req.get("cmd").and_then(|c| c.as_str()) {
+        Some("hello") => {
+            if let Err(e) = check_fields(&req, &["cmd", "version"]) {
+                return reply(e);
+            }
+            let version = match req.get("version") {
+                None => frame::FRAME_VERSION as u64,
+                Some(v) => match v.as_u64() {
+                    Some(v) => v,
+                    None => {
+                        return reply(err_reply(
+                            "field `version` must be an integer",
+                        ))
+                    }
+                },
+            };
+            if version != frame::FRAME_VERSION as u64 {
+                return reply(err_reply(&format!(
+                    "unsupported frame `version` {version} (this server \
+                     speaks {})",
+                    frame::FRAME_VERSION
+                )));
+            }
+            Disposition::Hello(
+                Json::obj().set("ok", true).set(
+                    "frames",
+                    Json::obj()
+                        .set("version", frame::FRAME_VERSION as u64)
+                        .set(
+                            "magic",
+                            vec![
+                                Json::from(frame::MAGIC[0] as u64),
+                                Json::from(frame::MAGIC[1] as u64),
+                            ],
+                        )
+                        .set("header_len", frame::HEADER_LEN)
+                        .set("max_points", frame::MAX_FRAME_POINTS),
+                ),
+            )
+        }
         Some("submit") => match JobSpec::from_json(&req) {
             Ok(spec) => match coord.submit(spec) {
-                Ok(id) => Json::obj().set("ok", true).set("job", id),
-                Err(e) => err_reply(&format!("{e:#}")),
+                Ok(id) => reply(Json::obj().set("ok", true).set("job", id)),
+                Err(e) => reply(err_reply(&format!("{e:#}"))),
             },
-            Err(e) => err_reply(&e),
+            Err(e) => reply(err_reply(&e)),
         },
         Some("mdim") => match super::coordinator::MdimJobSpec::from_json(&req) {
             Ok(spec) => match coord.submit_mdim(spec) {
-                Ok(id) => Json::obj().set("ok", true).set("job", id),
-                Err(e) => err_reply(&format!("{e:#}")),
+                Ok(id) => reply(Json::obj().set("ok", true).set("job", id)),
+                Err(e) => reply(err_reply(&format!("{e:#}"))),
             },
-            Err(e) => err_reply(&e),
+            Err(e) => reply(err_reply(&e)),
         },
         Some("vl") => match super::coordinator::VlJobSpec::from_json(&req) {
             Ok(spec) => match coord.submit_vl(spec) {
-                Ok(id) => Json::obj().set("ok", true).set("job", id),
-                Err(e) => err_reply(&format!("{e:#}")),
+                Ok(id) => reply(Json::obj().set("ok", true).set("job", id)),
+                Err(e) => reply(err_reply(&format!("{e:#}"))),
             },
-            Err(e) => err_reply(&e),
+            Err(e) => reply(err_reply(&e)),
         },
         Some("status") => {
             if let Err(e) = check_fields(&req, &["cmd", "job"]) {
-                return e;
+                return reply(e);
             }
             let Some(id) = req.get("job").and_then(|j| j.as_u64()) else {
-                return err_reply("field `job` required");
+                return reply(err_reply("field `job` required"));
             };
             match coord.status(id) {
-                None => err_reply("no such job"),
+                None => reply(err_reply("no such job")),
                 Some(st) => {
                     let mut out = Json::obj()
                         .set("ok", true)
@@ -167,244 +723,281 @@ fn dispatch(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
                         JobState::Failed(msg) => out = out.set("error", msg),
                         _ => {}
                     }
-                    out
+                    reply(out)
                 }
             }
         }
         Some("batch") => {
             if let Err(e) = check_fields(&req, &["cmd", "jobs"]) {
-                return e;
+                return reply(e);
             }
             let Some(jobs) = req.get("jobs").and_then(|j| j.as_arr()) else {
-                return err_reply("field `jobs` (array) required");
+                return reply(err_reply("field `jobs` (array) required"));
             };
             let mut specs = Vec::with_capacity(jobs.len());
             for (i, job) in jobs.iter().enumerate() {
                 match JobSpec::from_json(job) {
                     Ok(spec) => specs.push(spec),
-                    Err(e) => return err_reply(&format!("jobs[{i}]: {e}")),
+                    Err(e) => return reply(err_reply(&format!("jobs[{i}]: {e}"))),
                 }
             }
             match coord.submit_batch(specs) {
-                Ok(ids) => Json::obj().set("ok", true).set(
+                Ok(ids) => reply(Json::obj().set("ok", true).set(
                     "jobs",
                     ids.into_iter().map(Json::from).collect::<Vec<_>>(),
-                ),
-                Err(e) => err_reply(&format!("{e:#}")),
+                )),
+                Err(e) => reply(err_reply(&format!("{e:#}"))),
             }
         }
         Some("wait") => {
             if let Err(e) = check_fields(&req, &["cmd", "job", "timeout_ms"]) {
-                return e;
+                return reply(e);
             }
             let Some(id) = req.get("job").and_then(|j| j.as_u64()) else {
-                return err_reply("field `job` required");
+                return reply(err_reply("field `job` required"));
             };
-            let timeout = match req.get("timeout_ms") {
+            let deadline = match req.get("timeout_ms") {
                 None => None,
                 Some(t) => match t.as_u64() {
-                    Some(ms) => Some(std::time::Duration::from_millis(ms)),
+                    Some(ms) => {
+                        Some(Instant::now() + Duration::from_millis(ms))
+                    }
                     None => {
-                        return err_reply(
+                        return reply(err_reply(
                             "field `timeout_ms` must be an integer",
-                        )
+                        ))
                     }
                 },
             };
-            match coord.wait_timeout(id, timeout) {
-                None => err_reply("no such job"),
-                Some(JobState::Done(report)) => Json::obj()
-                    .set("ok", true)
-                    .set("job", id)
-                    .set("state", "done")
-                    .set("report", report),
-                Some(JobState::Failed(msg)) => Json::obj()
-                    .set("ok", false)
-                    .set("job", id)
-                    .set("state", "failed")
-                    .set("error", msg),
-                // the timeout expired: report the live state instead of
-                // pinning this handler thread until the job finishes
-                Some(st) => Json::obj()
-                    .set("ok", true)
-                    .set("job", id)
-                    .set("state", st.label())
-                    .set("timed_out", true),
-            }
+            // parked, not blocked: the reactor polls the job each tick
+            Disposition::Pend(Pending::Wait { job: id, deadline })
         }
         Some("stats") => {
             if let Err(e) = check_fields(&req, &["cmd"]) {
-                return e;
+                return reply(e);
             }
             let st = coord.stats();
-            Json::obj()
-                .set("ok", true)
-                .set("queued", st.queued)
-                .set("running", st.running)
-                .set("workers", st.workers)
-                .set("jobs_total", st.jobs_total)
-                .set("queue_capacity", st.queue_capacity)
-                .set("ctx_cache_entries", st.ctx_cache_entries)
-                .set("streams", st.streams)
+            let ing = coord.streams().ingest_stats();
+            reply(
+                Json::obj()
+                    .set("ok", true)
+                    .set("queued", st.queued)
+                    .set("running", st.running)
+                    .set("workers", st.workers)
+                    .set("jobs_total", st.jobs_total)
+                    .set("queue_capacity", st.queue_capacity)
+                    .set("ctx_cache_entries", st.ctx_cache_entries)
+                    .set("streams", st.streams)
+                    .set("conns", snap.conns)
+                    .set("pending", snap.pending)
+                    .set("frames_rx", ing.frames_rx)
+                    .set("points_rx", ing.points_rx)
+                    .set("frames_shed", ing.frames_shed)
+                    .set("stream_queue_points", ing.queued_points),
+            )
         }
         Some("list") => {
             if let Err(e) = check_fields(&req, &["cmd"]) {
-                return e;
+                return reply(e);
             }
             let jobs: Vec<Json> = coord
                 .list()
                 .into_iter()
                 .map(|(id, st)| Json::obj().set("job", id).set("state", st))
                 .collect();
-            Json::obj().set("ok", true).set("jobs", jobs)
+            reply(Json::obj().set("ok", true).set("jobs", jobs))
         }
         Some("stream_open") => {
             if let Err(e) = check_fields(
                 &req,
                 &["cmd", "stream", "params", "window", "refresh_every"],
             ) {
-                return e;
+                return reply(e);
             }
             let name = match stream_name(&req) {
                 Ok(n) => n,
-                Err(e) => return e,
+                Err(e) => return reply(e),
             };
             let params = match req.get("params") {
                 Some(p) => match SearchParams::from_json(p) {
                     Ok(p) => p,
-                    Err(e) => return err_reply(&e),
+                    Err(e) => return reply(err_reply(&e)),
                 },
-                None => return err_reply("field `params` required"),
+                None => return reply(err_reply("field `params` required")),
             };
             let Some(window) = req.get("window").and_then(|w| w.as_u64()) else {
-                return err_reply("field `window` (points, integer) required");
+                return reply(err_reply(
+                    "field `window` (points, integer) required",
+                ));
             };
             let refresh_every = match req.get("refresh_every") {
                 None => 0,
                 Some(r) => match r.as_u64() {
                     Some(r) => r as usize,
                     None => {
-                        return err_reply(
+                        return reply(err_reply(
                             "field `refresh_every` must be an integer",
-                        )
+                        ))
                     }
                 },
             };
-            match coord.streams().open(name, params, window as usize, refresh_every)
+            match coord
+                .streams()
+                .open(name, params, window as usize, refresh_every)
             {
-                Ok(()) => Json::obj().set("ok", true).set("stream", name),
-                Err(e) => err_reply(&format!("{e:#}")),
+                Ok(id) => reply(
+                    Json::obj()
+                        .set("ok", true)
+                        .set("stream", name)
+                        .set("stream_id", id as u64),
+                ),
+                Err(e) => reply(err_reply(&format!("{e:#}"))),
             }
         }
         Some("append") => {
             if let Err(e) = check_fields(&req, &["cmd", "stream", "points"]) {
-                return e;
+                return reply(e);
             }
             let name = match stream_name(&req) {
                 Ok(n) => n,
-                Err(e) => return e,
+                Err(e) => return reply(e),
             };
             let Some(raw) = req.get("points").and_then(|p| p.as_arr()) else {
-                return err_reply("field `points` (array of numbers) required");
+                return reply(err_reply(
+                    "field `points` (array of numbers) required",
+                ));
             };
             let mut points = Vec::with_capacity(raw.len());
             for (i, v) in raw.iter().enumerate() {
                 match v.as_f64() {
                     Some(x) => points.push(x),
                     None => {
-                        return err_reply(&format!(
+                        return reply(err_reply(&format!(
                             "points[{i}] is not a number"
-                        ))
+                        )))
                     }
                 }
             }
-            match coord.streams().append(name, &points) {
-                Ok(updates) => Json::obj()
-                    .set("ok", true)
-                    .set("stream", name)
-                    .set("appended", points.len())
-                    .set("updates", updates),
-                Err(e) => err_reply(&format!("{e:#}")),
+            // offload to a drain worker when one exists so a long
+            // refresh never stalls the reactor; inline otherwise — both
+            // run the exact same monitor code, so replies are identical
+            if coord.streams().has_workers() {
+                let appended = points.len();
+                match coord.streams().submit_json_append(name, points) {
+                    Ok(rx) => Disposition::Pend(Pending::Append {
+                        stream: name.to_string(),
+                        appended,
+                        rx,
+                    }),
+                    Err(e) => reply(err_reply(&format!("{e:#}"))),
+                }
+            } else {
+                match coord.streams().append(name, &points) {
+                    Ok(updates) => reply(
+                        Json::obj()
+                            .set("ok", true)
+                            .set("stream", name)
+                            .set("appended", points.len())
+                            .set("updates", updates),
+                    ),
+                    Err(e) => reply(err_reply(&format!("{e:#}"))),
+                }
             }
         }
         Some("subscribe") => {
             if let Err(e) =
                 check_fields(&req, &["cmd", "stream", "after", "timeout_ms"])
             {
-                return e;
+                return reply(e);
             }
             let name = match stream_name(&req) {
                 Ok(n) => n,
-                Err(e) => return e,
+                Err(e) => return reply(e),
             };
             let after = match req.get("after") {
                 None => 0,
                 Some(a) => match a.as_u64() {
                     Some(a) => a,
                     None => {
-                        return err_reply("field `after` must be an integer")
+                        return reply(err_reply(
+                            "field `after` must be an integer",
+                        ))
                     }
                 },
             };
-            let timeout = match req.get("timeout_ms") {
+            let deadline = match req.get("timeout_ms") {
                 None => None,
                 Some(t) => match t.as_u64() {
-                    Some(ms) => Some(std::time::Duration::from_millis(ms)),
+                    Some(ms) => {
+                        Some(Instant::now() + Duration::from_millis(ms))
+                    }
                     None => {
-                        return err_reply(
+                        return reply(err_reply(
                             "field `timeout_ms` must be an integer",
-                        )
+                        ))
                     }
                 },
             };
-            match coord.streams().subscribe(name, after, timeout) {
-                Ok(Some((seq, update))) => Json::obj()
-                    .set("ok", true)
-                    .set("stream", name)
-                    .set("seq", seq)
-                    .set("update", update),
-                // the timeout expired before the next refresh
-                Ok(None) => Json::obj()
-                    .set("ok", true)
-                    .set("stream", name)
-                    .set("timed_out", true),
-                Err(e) => err_reply(&format!("{e:#}")),
-            }
+            // parked, not blocked: no thread pins per idle subscriber
+            Disposition::Pend(Pending::Subscribe {
+                stream: name.to_string(),
+                after,
+                deadline,
+            })
         }
         Some("stream_close") => {
             if let Err(e) = check_fields(&req, &["cmd", "stream"]) {
-                return e;
+                return reply(e);
             }
             let name = match stream_name(&req) {
                 Ok(n) => n,
-                Err(e) => return e,
+                Err(e) => return reply(e),
             };
             match coord.streams().close(name) {
-                Ok(()) => Json::obj()
-                    .set("ok", true)
-                    .set("stream", name)
-                    .set("closed", true),
-                Err(e) => err_reply(&format!("{e:#}")),
+                Ok(()) => reply(
+                    Json::obj()
+                        .set("ok", true)
+                        .set("stream", name)
+                        .set("closed", true),
+                ),
+                Err(e) => reply(err_reply(&format!("{e:#}"))),
             }
         }
         Some("shutdown") => {
             if let Err(e) = check_fields(&req, &["cmd"]) {
-                return e;
+                return reply(e);
             }
             stop.store(true, Ordering::SeqCst);
-            Json::obj().set("ok", true).set("bye", true)
+            reply(Json::obj().set("ok", true).set("bye", true))
         }
-        _ => err_reply(&format!(
+        _ => reply(err_reply(&format!(
             "unknown cmd (expected one of: {})",
             COMMANDS.join("|")
-        )),
+        ))),
     }
 }
 
-/// Blocking client for the JSON-lines protocol.
+/// A `shed` frame the server sent this client (one of its `data`
+/// frames was dropped).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShedNotice {
+    /// Stream the dropped frame addressed.
+    pub stream_id: u32,
+    /// Points it carried.
+    pub dropped: u32,
+    /// Why it was dropped.
+    pub reason: ShedReason,
+}
+
+/// Blocking client for the protocol: JSON lines for commands, binary
+/// frames for stream ingest after [`hello`](Self::hello). Inbound
+/// `shed` frames are collected into a side buffer
+/// ([`take_sheds`](Self::take_sheds)) so they never corrupt a
+/// command/reply exchange.
 pub struct Client {
     writer: TcpStream,
     reader: BufReader<TcpStream>,
+    sheds: Vec<ShedNotice>,
 }
 
 impl Client {
@@ -415,15 +1008,144 @@ impl Client {
         Ok(Client {
             writer,
             reader: BufReader::new(stream),
+            sheds: Vec::new(),
         })
+    }
+
+    /// Read the next JSON reply, absorbing any binary `shed` frames
+    /// that arrive in between.
+    fn read_reply(&mut self) -> Result<Json> {
+        loop {
+            let first = {
+                let buf = self.reader.fill_buf()?;
+                if buf.is_empty() {
+                    anyhow::bail!("server closed the connection");
+                }
+                buf[0]
+            };
+            if first == frame::MAGIC[0] {
+                let mut header = [0u8; frame::HEADER_LEN];
+                self.reader.read_exact(&mut header)?;
+                let h = frame::decode_header(&header)
+                    .map_err(|e| anyhow::anyhow!("bad frame from server: {e}"))?;
+                let mut payload = vec![0u8; h.payload_len];
+                self.reader.read_exact(&mut payload)?;
+                if h.kind == FrameKind::Shed {
+                    if let Some((dropped, reason)) =
+                        frame::decode_shed_payload(&payload)
+                    {
+                        self.sheds.push(ShedNotice {
+                            stream_id: h.stream_id,
+                            dropped,
+                            reason,
+                        });
+                    }
+                }
+                continue;
+            }
+            let mut line = String::new();
+            self.reader.read_line(&mut line)?;
+            return Json::parse(&line)
+                .map_err(|e| anyhow::anyhow!("bad reply: {e}"));
+        }
     }
 
     /// Send one request, read one reply.
     pub fn call(&mut self, req: &Json) -> Result<Json> {
         writeln!(self.writer, "{req}")?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        Json::parse(&line).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
+        self.read_reply()
+    }
+
+    /// Negotiate binary framing (the versioned `hello`); returns the
+    /// server's frame parameters. Must precede any
+    /// [`send_points`](Self::send_points).
+    pub fn hello(&mut self) -> Result<Json> {
+        let reply = self.call(
+            &Json::obj()
+                .set("cmd", "hello")
+                .set("version", frame::FRAME_VERSION as u64),
+        )?;
+        if reply.get("ok").and_then(|b| b.as_bool()) != Some(true) {
+            anyhow::bail!(
+                "hello rejected: {}",
+                reply.get("error").and_then(|e| e.as_str()).unwrap_or("?")
+            );
+        }
+        Ok(reply)
+    }
+
+    /// Open a stream; returns the numeric id `data` frames address it by.
+    pub fn open_stream(
+        &mut self,
+        name: &str,
+        params: Json,
+        window: usize,
+        refresh_every: usize,
+    ) -> Result<u32> {
+        let reply = self.call(
+            &Json::obj()
+                .set("cmd", "stream_open")
+                .set("stream", name)
+                .set("params", params)
+                .set("window", window)
+                .set("refresh_every", refresh_every),
+        )?;
+        if reply.get("ok").and_then(|b| b.as_bool()) != Some(true) {
+            anyhow::bail!(
+                "stream_open rejected: {}",
+                reply.get("error").and_then(|e| e.as_str()).unwrap_or("?")
+            );
+        }
+        reply
+            .get("stream_id")
+            .and_then(|i| i.as_u64())
+            .map(|i| i as u32)
+            .context("reply missing stream_id")
+    }
+
+    /// Send points as binary `data` frames (chunked to the frame cap),
+    /// fire-and-forget: accepted points produce no reply; drops arrive
+    /// later as `shed` notices (see [`take_sheds`](Self::take_sheds)).
+    pub fn send_points(&mut self, stream_id: u32, points: &[f64]) -> Result<()> {
+        for chunk in points.chunks(frame::MAX_FRAME_POINTS.max(1)) {
+            self.writer.write_all(&frame::encode_data(stream_id, chunk))?;
+        }
+        Ok(())
+    }
+
+    /// `shed` notices absorbed so far (cleared by this call).
+    pub fn take_sheds(&mut self) -> Vec<ShedNotice> {
+        std::mem::take(&mut self.sheds)
+    }
+
+    /// JSON-path append (the text twin of [`send_points`]).
+    pub fn append(&mut self, stream: &str, points: &[f64]) -> Result<Json> {
+        self.call(
+            &Json::obj()
+                .set("cmd", "append")
+                .set("stream", stream)
+                .set(
+                    "points",
+                    points.iter().copied().map(Json::from).collect::<Vec<_>>(),
+                ),
+        )
+    }
+
+    /// Wait (server-side) for the refresh after `after`; `timeout_ms`
+    /// bounds the wait.
+    pub fn subscribe(
+        &mut self,
+        stream: &str,
+        after: u64,
+        timeout_ms: u64,
+    ) -> Result<Json> {
+        self.call(
+            &Json::obj()
+                .set("cmd", "subscribe")
+                .set("stream", stream)
+                .set("after", after)
+                .set("timeout_ms", timeout_ms),
+        )
     }
 
     /// Submit a prepared request object; returns the job id.
@@ -460,7 +1182,8 @@ impl Client {
 
     /// Submit a job array in one atomic request; returns the job ids.
     pub fn submit_batch(&mut self, jobs: Vec<Json>) -> Result<Vec<u64>> {
-        let reply = self.call(&Json::obj().set("cmd", "batch").set("jobs", jobs))?;
+        let reply =
+            self.call(&Json::obj().set("cmd", "batch").set("jobs", jobs))?;
         if reply.get("ok").and_then(|b| b.as_bool()) != Some(true) {
             anyhow::bail!(
                 "batch rejected: {}",

@@ -1,19 +1,41 @@
-//! Named streaming monitors served over the JSON-lines protocol.
+//! Named streaming monitors served over the JSON-lines + binary-frame
+//! protocol.
 //!
 //! The [`Coordinator`](super::Coordinator) keeps a [`StreamRegistry`]
 //! alongside its prepared-context LRU: each open stream is one
-//! [`StreamingMonitor`] behind a mutex, with a condvar so `subscribe`
-//! requests can block until the next refresh publishes an update. The
-//! registry is bounded (like the job queue and the context LRU) so a
-//! client cannot grow server memory without bound; `stream_open` rejects
-//! with a backpressure error when it is full.
+//! [`StreamingMonitor`] plus a bounded ingest queue of raw binary
+//! batches. Two ingest paths feed the same monitor, so their refreshes
+//! are bit-identical by construction:
+//!
+//! * **JSON `append`** — synchronous: points in, updates in the reply
+//!   (or offloaded to a drain worker by the server's reactor, same
+//!   monitor code either way).
+//! * **Binary `data` frames** — [`StreamRegistry::enqueue_data`] parks
+//!   the frame's raw little-endian payload in the stream's bounded
+//!   queue; drain workers decode it straight into the monitor deques
+//!   via [`StreamingMonitor::extend_from_le_bytes`]. A full queue (or a
+//!   client over its in-flight quota) sheds the frame instead of
+//!   growing memory — the shed is reported, never silent.
+//!
+//! Locking is split three ways per stream so a long refresh can never
+//! stall the server's reactor thread: `queue` (short-held, the reactor's
+//! only lock), `mon` (held across extend/refresh by whoever ingests),
+//! and `publish` (the seq/last-update pair `subscribe`/`poll` read,
+//! with the condvar blocking library subscribers wait on).
+//!
+//! The registry is bounded (stream count by `capacity`, per-stream
+//! queue by the stream's own window, total via both) so no client can
+//! grow server memory without bound; `stream_open` rejects with a
+//! backpressure error when the registry is full.
 //!
 //! Protocol commands (`stream_open` / `append` / `subscribe` /
-//! `stream_close`) are documented with worked examples in
-//! `docs/PROTOCOL.md` at the repository root.
+//! `stream_close`) and the binary framing are documented with worked
+//! examples in `docs/PROTOCOL.md` at the repository root.
 
-use std::collections::HashMap;
-use std::sync::{Arc, Condvar, Mutex};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -22,19 +44,58 @@ use crate::config::SearchParams;
 use crate::stream::StreamingMonitor;
 use crate::util::json::Json;
 
-/// Streams one coordinator will hold open at once (each holds a window of
-/// points plus per-sequence state, so the cap bounds memory).
+use super::frame::ShedReason;
+
+/// Default cap on streams one coordinator holds open at once (each holds
+/// a window of points plus per-sequence state, so the cap bounds
+/// memory). `hst serve --max-streams` raises it per process.
 pub const STREAM_REGISTRY_CAPACITY: usize = 8;
 
 /// Largest window (in points) a single stream may request. Per-point
 /// state is ~100 bytes (window point + rolling stats + SAX word + profile
-/// entry), so this caps one stream at roughly 100 MB — and, with
-/// [`STREAM_REGISTRY_CAPACITY`], total streaming memory per process. A
-/// network-supplied `window` must never size an allocation unbounded.
+/// entry), so this caps one stream at roughly 100 MB — and, with the
+/// registry capacity, total streaming memory per process. A network-
+/// supplied `window` must never size an allocation unbounded.
 pub const MAX_STREAM_WINDOW: usize = 1_000_000;
 
-struct StreamState {
-    monitor: StreamingMonitor,
+/// Default drain-worker count for [`StreamRegistry::start_workers`]
+/// (`hst serve --stream-workers`). Zero workers = inline mode: JSON
+/// appends run on the caller, binary frames queue until shed.
+pub const DEFAULT_STREAM_WORKERS: usize = 2;
+
+/// Outcome of offering one binary `data` frame to the registry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Enqueue {
+    /// The frame's points were queued for a drain worker.
+    Accepted {
+        /// Points the frame carried.
+        points: usize,
+    },
+    /// The frame was dropped; the client owes itself a retry/slow-down.
+    Shed {
+        /// Why (queue full / client quota / unknown stream).
+        reason: ShedReason,
+        /// Points dropped with it.
+        dropped: usize,
+    },
+}
+
+/// Monotonic ingest counters for the `stats` command.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IngestStats {
+    /// Binary `data` frames accepted.
+    pub frames_rx: u64,
+    /// Points those frames carried.
+    pub points_rx: u64,
+    /// Frames shed (all reasons).
+    pub frames_shed: u64,
+    /// Points currently parked in stream queues (gauge, not counter).
+    pub queued_points: usize,
+}
+
+/// Published state `subscribe`/`poll` read; its mutex is never held
+/// across a refresh, so reads are always cheap.
+struct PubState {
     /// Last published update (protocol JSON), if any refresh ran yet.
     last: Option<Json>,
     /// Refresh counter mirror — `subscribe` waits for `seq > after`.
@@ -42,30 +103,108 @@ struct StreamState {
     closed: bool,
 }
 
+/// The bounded per-stream ingest queue of raw binary payloads. Its
+/// mutex is the only one the server's reactor thread ever takes, and it
+/// is held for pushes/swaps only — never across a refresh.
+struct IngestQueue {
+    /// Raw LE-f64 payloads, each with the quota counter of the client
+    /// connection that sent it (decremented after the drain).
+    batches: VecDeque<(Vec<u8>, Option<Arc<AtomicU64>>)>,
+    /// Points across `batches` (the queue bound checks this).
+    queued_points: usize,
+    /// Queue bound in points (= the stream's window: one window of
+    /// backlog is the most a drain can ever make useful).
+    capacity_points: usize,
+    /// A drain work item for this stream is already enqueued.
+    scheduled: bool,
+    /// A worker is currently draining this stream (keeps two workers
+    /// from reordering one stream's batches).
+    draining: bool,
+}
+
 struct StreamEntry {
-    state: Mutex<StreamState>,
+    id: u32,
+    name: String,
+    queue: Mutex<IngestQueue>,
+    mon: Mutex<StreamingMonitor>,
+    publish: Mutex<PubState>,
     cv: Condvar,
 }
 
-/// Bounded registry of named streaming monitors (see the [module
-/// docs](self)).
-pub struct StreamRegistry {
+/// What the drain workers pull off the shared work queue.
+enum Work {
+    /// Drain a stream's binary ingest queue.
+    Drain(Arc<StreamEntry>),
+    /// A JSON `append` offloaded by the reactor (reply via the channel
+    /// so the reactor thread never blocks on a refresh).
+    JsonAppend {
+        entry: Arc<StreamEntry>,
+        points: Vec<f64>,
+        tx: mpsc::Sender<Result<Vec<Json>, String>>,
+    },
+}
+
+struct WorkQueue {
+    ready: VecDeque<Work>,
+    shutdown: bool,
+}
+
+struct RegistryInner {
     capacity: usize,
-    inner: Mutex<HashMap<String, Arc<StreamEntry>>>,
+    streams: Mutex<Streams>,
+    work: Mutex<WorkQueue>,
+    work_cv: Condvar,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    worker_count: AtomicUsize,
+    queued_points: AtomicUsize,
+    frames_rx: AtomicU64,
+    points_rx: AtomicU64,
+    frames_shed: AtomicU64,
+}
+
+struct Streams {
+    by_name: HashMap<String, Arc<StreamEntry>>,
+    by_id: HashMap<u32, Arc<StreamEntry>>,
+    next_id: u32,
+}
+
+/// Bounded registry of named streaming monitors (see the [module
+/// docs](self)). Cheap to share: a handle over one `Arc`'d inner.
+pub struct StreamRegistry {
+    inner: Arc<RegistryInner>,
 }
 
 impl StreamRegistry {
-    /// An empty registry holding at most `capacity` streams.
+    /// An empty registry holding at most `capacity` streams, with no
+    /// drain workers yet (call [`start_workers`](Self::start_workers)
+    /// to enable asynchronous ingest).
     pub fn new(capacity: usize) -> StreamRegistry {
         StreamRegistry {
-            capacity: capacity.max(1),
-            inner: Mutex::new(HashMap::new()),
+            inner: Arc::new(RegistryInner {
+                capacity: capacity.max(1),
+                streams: Mutex::new(Streams {
+                    by_name: HashMap::new(),
+                    by_id: HashMap::new(),
+                    next_id: 1,
+                }),
+                work: Mutex::new(WorkQueue {
+                    ready: VecDeque::new(),
+                    shutdown: false,
+                }),
+                work_cv: Condvar::new(),
+                workers: Mutex::new(Vec::new()),
+                worker_count: AtomicUsize::new(0),
+                queued_points: AtomicUsize::new(0),
+                frames_rx: AtomicU64::new(0),
+                points_rx: AtomicU64::new(0),
+                frames_shed: AtomicU64::new(0),
+            }),
         }
     }
 
     /// Streams currently open (observability; the `stats` command).
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.inner.streams.lock().unwrap().by_name.len()
     }
 
     /// Whether no stream is open.
@@ -73,24 +212,42 @@ impl StreamRegistry {
         self.len() == 0
     }
 
+    /// Maximum streams this registry admits.
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+
+    /// Monotonic ingest counters plus the queued-points gauge.
+    pub fn ingest_stats(&self) -> IngestStats {
+        IngestStats {
+            frames_rx: self.inner.frames_rx.load(Ordering::Relaxed),
+            points_rx: self.inner.points_rx.load(Ordering::Relaxed),
+            frames_shed: self.inner.frames_shed.load(Ordering::Relaxed),
+            queued_points: self.inner.queued_points.load(Ordering::Relaxed),
+        }
+    }
+
     fn entry(&self, name: &str) -> Result<Arc<StreamEntry>> {
-        match self.inner.lock().unwrap().get(name) {
+        match self.inner.streams.lock().unwrap().by_name.get(name) {
             Some(e) => Ok(Arc::clone(e)),
             None => bail!("no such stream {name:?}"),
         }
     }
 
-    /// Open a stream. `refresh_every == 0` means every `append` request
-    /// triggers one refresh at its end (request-driven cadence); a
-    /// positive value refreshes each time that many points arrive.
-    /// `window` is capped at [`MAX_STREAM_WINDOW`].
+    /// Open a stream; returns the numeric id binary `data` frames
+    /// address it by. `refresh_every == 0` means every `append` request
+    /// (or binary frame) triggers one refresh at its end
+    /// (request-driven cadence); a positive value refreshes each time
+    /// that many points arrive. `window` is capped at
+    /// [`MAX_STREAM_WINDOW`] and also bounds the stream's binary ingest
+    /// queue.
     pub fn open(
         &self,
         name: &str,
         params: SearchParams,
         window: usize,
         refresh_every: usize,
-    ) -> Result<()> {
+    ) -> Result<u32> {
         anyhow::ensure!(
             window <= MAX_STREAM_WINDOW,
             "window {window} exceeds the per-stream cap of \
@@ -99,62 +256,169 @@ impl StreamRegistry {
         let monitor = StreamingMonitor::new(params, window)?
             .with_name(name)
             .with_refresh_every(refresh_every);
-        let mut g = self.inner.lock().unwrap();
-        if g.contains_key(name) {
+        let mut g = self.inner.streams.lock().unwrap();
+        if g.by_name.contains_key(name) {
             bail!("stream {name:?} is already open");
         }
-        if g.len() >= self.capacity {
+        if g.by_name.len() >= self.inner.capacity {
             bail!(
-                "stream registry full ({}/{}): close a stream first",
-                g.len(),
-                self.capacity
+                "stream registry full ({}/{}): close a stream first, or \
+                 raise `--max-streams`",
+                g.by_name.len(),
+                self.inner.capacity
             );
         }
-        g.insert(
-            name.to_string(),
-            Arc::new(StreamEntry {
-                state: Mutex::new(StreamState {
-                    monitor,
-                    last: None,
-                    seq: 0,
-                    closed: false,
-                }),
-                cv: Condvar::new(),
+        let id = g.next_id;
+        g.next_id = g.next_id.wrapping_add(1).max(1);
+        let entry = Arc::new(StreamEntry {
+            id,
+            name: name.to_string(),
+            queue: Mutex::new(IngestQueue {
+                batches: VecDeque::new(),
+                queued_points: 0,
+                capacity_points: window,
+                scheduled: false,
+                draining: false,
             }),
-        );
-        Ok(())
+            mon: Mutex::new(monitor),
+            publish: Mutex::new(PubState {
+                last: None,
+                seq: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        });
+        g.by_name.insert(name.to_string(), Arc::clone(&entry));
+        g.by_id.insert(id, entry);
+        Ok(id)
     }
 
-    /// Append points to a stream; returns the protocol JSON of every
-    /// update the appends produced (auto-refreshes at the stream's
-    /// cadence, plus one request-end refresh when the cadence is 0).
-    /// Subscribers are woken when at least one update was produced.
+    /// The numeric id of an open stream (what `stream_open` replied).
+    pub fn stream_id(&self, name: &str) -> Option<u32> {
+        self.inner
+            .streams
+            .lock()
+            .unwrap()
+            .by_name
+            .get(name)
+            .map(|e| e.id)
+    }
+
+    /// Append points to a stream synchronously; returns the protocol
+    /// JSON of every update the appends produced (auto-refreshes at the
+    /// stream's cadence, plus one request-end refresh when the cadence
+    /// is 0). Subscribers are woken when at least one update was
+    /// produced.
     pub fn append(&self, name: &str, points: &[f64]) -> Result<Vec<Json>> {
         let e = self.entry(name)?;
-        let mut st = e.state.lock().unwrap();
+        append_now(&e, points).map_err(|msg| anyhow::anyhow!(msg))
+    }
+
+    /// Offload a JSON `append` to the drain workers; the reply arrives
+    /// on the returned receiver. Callers must check
+    /// [`has_workers`](Self::has_workers) first — with no workers the
+    /// item would never run (use [`append`](Self::append) inline
+    /// instead).
+    pub fn submit_json_append(
+        &self,
+        name: &str,
+        points: Vec<f64>,
+    ) -> Result<mpsc::Receiver<Result<Vec<Json>, String>>> {
+        let entry = self.entry(name)?;
+        let (tx, rx) = mpsc::channel();
+        let mut w = self.inner.work.lock().unwrap();
+        if w.shutdown {
+            bail!("stream workers are shut down");
+        }
+        w.ready.push_back(Work::JsonAppend { entry, points, tx });
+        self.inner.work_cv.notify_one();
+        Ok(rx)
+    }
+
+    /// Offer one binary `data` frame's raw payload (packed LE f64).
+    /// Never blocks and never refreshes — the fast path the reactor
+    /// thread calls. `quota` is the sending connection's in-flight point
+    /// counter with its limit; a frame that would exceed either the
+    /// stream queue or the quota is shed, not queued.
+    pub fn enqueue_data(
+        &self,
+        id: u32,
+        payload: Vec<u8>,
+        quota: Option<(&Arc<AtomicU64>, u64)>,
+    ) -> Enqueue {
+        let points = payload.len() / 8;
+        let entry = match self.inner.streams.lock().unwrap().by_id.get(&id) {
+            Some(e) => Arc::clone(e),
+            None => {
+                self.inner.frames_shed.fetch_add(1, Ordering::Relaxed);
+                return Enqueue::Shed {
+                    reason: ShedReason::NoSuchStream,
+                    dropped: points,
+                };
+            }
+        };
+        if let Some((counter, limit)) = quota {
+            if counter.load(Ordering::Relaxed) + points as u64 > limit {
+                self.inner.frames_shed.fetch_add(1, Ordering::Relaxed);
+                return Enqueue::Shed {
+                    reason: ShedReason::ClientQuota,
+                    dropped: points,
+                };
+            }
+        }
+        let mut q = entry.queue.lock().unwrap();
+        if q.queued_points + points > q.capacity_points {
+            drop(q);
+            self.inner.frames_shed.fetch_add(1, Ordering::Relaxed);
+            return Enqueue::Shed {
+                reason: ShedReason::QueueFull,
+                dropped: points,
+            };
+        }
+        q.queued_points += points;
+        let counter = quota.map(|(c, _)| {
+            c.fetch_add(points as u64, Ordering::Relaxed);
+            Arc::clone(c)
+        });
+        q.batches.push_back((payload, counter));
+        let schedule = !q.scheduled && !q.draining;
+        if schedule {
+            q.scheduled = true;
+        }
+        drop(q);
+        self.inner.queued_points.fetch_add(points, Ordering::Relaxed);
+        self.inner.frames_rx.fetch_add(1, Ordering::Relaxed);
+        self.inner.points_rx.fetch_add(points as u64, Ordering::Relaxed);
+        if schedule {
+            let mut w = self.inner.work.lock().unwrap();
+            w.ready.push_back(Work::Drain(entry));
+            self.inner.work_cv.notify_one();
+        }
+        Enqueue::Accepted { points }
+    }
+
+    /// Non-blocking subscribe: the latest update if the stream's
+    /// refresh counter exceeds `after`, `None` otherwise. Errors when
+    /// the stream does not exist or is closed. This is what the
+    /// server's reactor polls so no thread ever parks per subscriber.
+    pub fn poll(&self, name: &str, after: u64) -> Result<Option<(u64, Json)>> {
+        let e = self.entry(name)?;
+        let st = e.publish.lock().unwrap();
         if st.closed {
             bail!("stream {name:?} is closed");
         }
-        let mut updates = st.monitor.extend(points)?;
-        if st.monitor.refresh_cadence() == 0
-            && !points.is_empty()
-            && st.monitor.num_sequences() >= 2
-        {
-            updates.push(st.monitor.refresh()?);
+        if st.seq > after {
+            let last = st.last.clone().expect("seq > 0 implies an update");
+            return Ok(Some((st.seq, last)));
         }
-        let out: Vec<Json> = updates.iter().map(|u| u.to_json()).collect();
-        if let Some(last) = out.last() {
-            st.last = Some(last.clone());
-            st.seq = st.monitor.refreshes();
-            e.cv.notify_all();
-        }
-        Ok(out)
+        Ok(None)
     }
 
     /// Block until the stream's refresh counter exceeds `after` (or the
     /// timeout expires → `Ok(None)`). Returns the latest update with its
     /// refresh counter. Errors when the stream does not exist or is
-    /// closed while waiting.
+    /// closed while waiting. (Library-embedding API; the TCP server
+    /// polls via [`poll`](Self::poll) instead of parking a thread.)
     pub fn subscribe(
         &self,
         name: &str,
@@ -163,7 +427,7 @@ impl StreamRegistry {
     ) -> Result<Option<(u64, Json)>> {
         let e = self.entry(name)?;
         let deadline = timeout.map(|t| Instant::now() + t);
-        let mut st = e.state.lock().unwrap();
+        let mut st = e.publish.lock().unwrap();
         loop {
             if st.closed {
                 bail!("stream {name:?} is closed");
@@ -186,30 +450,226 @@ impl StreamRegistry {
     }
 
     /// Close and drop a stream, waking any blocked subscribers (they
-    /// receive a "stream closed" error).
+    /// receive a "stream closed" error) and releasing its queued
+    /// batches (their senders' quota is returned).
     pub fn close(&self, name: &str) -> Result<()> {
-        let e = match self.inner.lock().unwrap().remove(name) {
-            Some(e) => e,
-            None => bail!("no such stream {name:?}"),
+        let e = {
+            let mut g = self.inner.streams.lock().unwrap();
+            match g.by_name.remove(name) {
+                Some(e) => {
+                    g.by_id.remove(&e.id);
+                    e
+                }
+                None => bail!("no such stream {name:?}"),
+            }
         };
-        let mut st = e.state.lock().unwrap();
-        st.closed = true;
-        e.cv.notify_all();
+        {
+            let mut st = e.publish.lock().unwrap();
+            st.closed = true;
+            e.cv.notify_all();
+        }
+        let mut q = e.queue.lock().unwrap();
+        let dropped = q.queued_points;
+        q.queued_points = 0;
+        for (payload, counter) in q.batches.drain(..) {
+            if let Some(c) = counter {
+                c.fetch_sub(payload.len() as u64 / 8, Ordering::Relaxed);
+            }
+        }
+        drop(q);
+        self.inner.queued_points.fetch_sub(dropped, Ordering::Relaxed);
         Ok(())
+    }
+
+    /// Spawn `n` drain workers (idempotent additions; each pulls from
+    /// the shared work queue). With zero workers the registry is in
+    /// inline mode: callers run [`append`](Self::append) themselves and
+    /// binary frames queue until shed.
+    pub fn start_workers(&self, n: usize) {
+        let mut handles = self.inner.workers.lock().unwrap();
+        for _ in 0..n {
+            let inner = Arc::clone(&self.inner);
+            handles.push(std::thread::spawn(move || drain_loop(inner)));
+        }
+        self.inner.worker_count.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// Whether any drain worker is running (decides inline vs offload).
+    pub fn has_workers(&self) -> bool {
+        self.inner.worker_count.load(Ordering::SeqCst) > 0
+    }
+
+    /// Stop and join the drain workers (queued work is abandoned; the
+    /// registry stays usable in inline mode).
+    pub fn stop_workers(&self) {
+        {
+            let mut w = self.inner.work.lock().unwrap();
+            w.shutdown = true;
+            self.inner.work_cv.notify_all();
+        }
+        let mut handles = self.inner.workers.lock().unwrap();
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+        self.inner.worker_count.store(0, Ordering::SeqCst);
+        self.inner.work.lock().unwrap().shutdown = false;
+    }
+}
+
+impl Drop for StreamRegistry {
+    fn drop(&mut self) {
+        // only the last handle (the Coordinator's) joins the workers
+        if Arc::strong_count(&self.inner)
+            == 1 + self.inner.worker_count.load(Ordering::SeqCst)
+        {
+            self.stop_workers();
+        }
+    }
+}
+
+/// Run one synchronous append against a stream entry: extend, apply
+/// the cadence-0 request-end refresh, publish. Both ingest paths (JSON
+/// and drained binary batches) funnel through the same
+/// [`StreamingMonitor`] calls, which is what makes their refreshes
+/// bit-identical for the same points in the same order.
+fn append_now(e: &StreamEntry, points: &[f64]) -> Result<Vec<Json>, String> {
+    if e.publish.lock().unwrap().closed {
+        return Err(format!("stream {:?} is closed", e.name));
+    }
+    let mut mon = e.mon.lock().unwrap();
+    let mut updates = mon.extend(points).map_err(|err| format!("{err:#}"))?;
+    if mon.refresh_cadence() == 0 && !points.is_empty() && mon.num_sequences() >= 2
+    {
+        updates.push(mon.refresh().map_err(|err| format!("{err:#}"))?);
+    }
+    let out: Vec<Json> = updates.iter().map(|u| u.to_json()).collect();
+    let seq = mon.refreshes();
+    drop(mon);
+    publish(e, &out, seq);
+    Ok(out)
+}
+
+/// Publish the last of a batch of updates (if any) and wake blocked
+/// subscribers.
+fn publish(e: &StreamEntry, updates: &[Json], seq: u64) {
+    if let Some(last) = updates.last() {
+        let mut st = e.publish.lock().unwrap();
+        if !st.closed {
+            st.last = Some(last.clone());
+            st.seq = seq;
+            e.cv.notify_all();
+        }
+    }
+}
+
+/// Drain-worker body: pull work items, run them, re-schedule streams
+/// that accumulated more batches while draining.
+fn drain_loop(inner: Arc<RegistryInner>) {
+    loop {
+        let item = {
+            let mut w = inner.work.lock().unwrap();
+            loop {
+                if let Some(item) = w.ready.pop_front() {
+                    break item;
+                }
+                if w.shutdown {
+                    return;
+                }
+                w = inner.work_cv.wait(w).unwrap();
+            }
+        };
+        match item {
+            Work::JsonAppend { entry, points, tx } => {
+                // receiver may have disconnected (client gone): fine
+                let _ = tx.send(append_now(&entry, &points));
+            }
+            Work::Drain(entry) => drain_stream(&inner, entry),
+        }
+    }
+}
+
+/// Drain everything currently queued on one stream: decode each raw
+/// payload zero-copy into the monitor (cadence refreshes happen inside
+/// `extend_from_le_bytes`, one request-end refresh per frame at cadence
+/// 0 — a frame is a request), publish, release quota.
+fn drain_stream(inner: &Arc<RegistryInner>, entry: Arc<StreamEntry>) {
+    let batches: Vec<(Vec<u8>, Option<Arc<AtomicU64>>)> = {
+        let mut q = entry.queue.lock().unwrap();
+        q.scheduled = false;
+        q.draining = true;
+        q.batches.drain(..).collect()
+    };
+    let mut failed: Option<String> = None;
+    let mut drained_points = 0usize;
+    {
+        let mut mon = entry.mon.lock().unwrap();
+        let mut updates: Vec<Json> = Vec::new();
+        for (payload, _) in &batches {
+            drained_points += payload.len() / 8;
+            if failed.is_some() {
+                continue; // still release quota below
+            }
+            let res = mon.extend_from_le_bytes(payload).and_then(|mut ups| {
+                if mon.refresh_cadence() == 0
+                    && !payload.is_empty()
+                    && mon.num_sequences() >= 2
+                {
+                    ups.push(mon.refresh()?);
+                }
+                Ok(ups)
+            });
+            match res {
+                Ok(ups) => updates.extend(ups.iter().map(|u| u.to_json())),
+                Err(e) => failed = Some(format!("{e:#}")),
+            }
+        }
+        let seq = mon.refreshes();
+        drop(mon);
+        publish(&entry, &updates, seq);
+    }
+    for (payload, counter) in &batches {
+        if let Some(c) = counter {
+            c.fetch_sub(payload.len() as u64 / 8, Ordering::Relaxed);
+        }
+    }
+    {
+        let mut q = entry.queue.lock().unwrap();
+        q.queued_points -= drained_points.min(q.queued_points);
+        q.draining = false;
+        if !q.batches.is_empty() && !q.scheduled {
+            q.scheduled = true;
+            let mut w = inner.work.lock().unwrap();
+            w.ready.push_back(Work::Drain(Arc::clone(&entry)));
+            inner.work_cv.notify_one();
+        }
+    }
+    inner.queued_points.fetch_sub(drained_points, Ordering::Relaxed);
+    if let Some(msg) = failed {
+        // a monitor that rejects its input cannot continue exactly;
+        // close the stream so subscribers see the error, not silence
+        let mut st = entry.publish.lock().unwrap();
+        st.closed = true;
+        st.last = Some(Json::obj().set("ok", false).set("error", msg));
+        entry.cv.notify_all();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::service::frame;
     use crate::ts::generators;
 
     fn registry() -> StreamRegistry {
         StreamRegistry::new(2)
     }
 
-    fn open(r: &StreamRegistry, name: &str) {
-        r.open(name, SearchParams::new(32, 4, 4), 300, 0).unwrap();
+    fn open(r: &StreamRegistry, name: &str) -> u32 {
+        r.open(name, SearchParams::new(32, 4, 4), 300, 0).unwrap()
+    }
+
+    fn le_bytes(points: &[f64]) -> Vec<u8> {
+        points.iter().flat_map(|x| x.to_le_bytes()).collect()
     }
 
     #[test]
@@ -229,6 +689,10 @@ mod tests {
         let (seq, last) = r.subscribe("a", 0, None).unwrap().unwrap();
         assert_eq!(seq, 1);
         assert_eq!(last, *u);
+        // poll agrees without blocking
+        let (pseq, plast) = r.poll("a", 0).unwrap().unwrap();
+        assert_eq!((pseq, &plast), (seq, &last));
+        assert!(r.poll("a", seq).unwrap().is_none());
         // waiting past the head times out
         let got = r
             .subscribe("a", seq, Some(Duration::from_millis(20)))
@@ -253,6 +717,27 @@ mod tests {
         assert!(err.contains("full"), "{err}");
         r.close("a").unwrap();
         open(&r, "c");
+    }
+
+    #[test]
+    fn stream_ids_are_unique_and_resolvable() {
+        let r = registry();
+        let a = open(&r, "a");
+        let b = open(&r, "b");
+        assert_ne!(a, b);
+        assert_eq!(r.stream_id("a"), Some(a));
+        assert_eq!(r.stream_id("b"), Some(b));
+        r.close("a").unwrap();
+        assert_eq!(r.stream_id("a"), None);
+        // the id is retired with the stream: frames to it shed by name
+        let out = r.enqueue_data(a, le_bytes(&[1.0]), None);
+        assert_eq!(
+            out,
+            Enqueue::Shed {
+                reason: ShedReason::NoSuchStream,
+                dropped: 1
+            }
+        );
     }
 
     #[test]
@@ -296,5 +781,145 @@ mod tests {
             .to_string();
         assert!(err.contains("cap"), "{err}");
         assert_eq!(r.len(), 0);
+    }
+
+    #[test]
+    fn full_queue_sheds_deterministically_without_workers() {
+        // no drain workers started: the queue only fills. Window = 300
+        // points bounds it; the frame that would cross the line sheds.
+        let r = registry();
+        let id = open(&r, "a");
+        let chunk = le_bytes(&vec![0.5; 100]);
+        for _ in 0..3 {
+            assert_eq!(
+                r.enqueue_data(id, chunk.clone(), None),
+                Enqueue::Accepted { points: 100 }
+            );
+        }
+        assert_eq!(
+            r.enqueue_data(id, chunk.clone(), None),
+            Enqueue::Shed {
+                reason: ShedReason::QueueFull,
+                dropped: 100
+            }
+        );
+        let st = r.ingest_stats();
+        assert_eq!(st.frames_rx, 3);
+        assert_eq!(st.points_rx, 300);
+        assert_eq!(st.frames_shed, 1);
+        assert_eq!(st.queued_points, 300);
+        // closing releases the backlog accounting
+        r.close("a").unwrap();
+        assert_eq!(r.ingest_stats().queued_points, 0);
+    }
+
+    #[test]
+    fn client_quota_sheds_and_releases_on_close() {
+        let r = registry();
+        let id = open(&r, "a");
+        let counter = Arc::new(AtomicU64::new(0));
+        let chunk = le_bytes(&vec![0.5; 100]);
+        assert_eq!(
+            r.enqueue_data(id, chunk.clone(), Some((&counter, 150))),
+            Enqueue::Accepted { points: 100 }
+        );
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+        assert_eq!(
+            r.enqueue_data(id, chunk.clone(), Some((&counter, 150))),
+            Enqueue::Shed {
+                reason: ShedReason::ClientQuota,
+                dropped: 100
+            }
+        );
+        r.close("a").unwrap();
+        assert_eq!(
+            counter.load(Ordering::Relaxed),
+            0,
+            "close must return the in-flight quota of queued batches"
+        );
+    }
+
+    #[test]
+    fn drained_binary_frames_match_direct_extend_bitwise() {
+        // one registry ingests via frames + drain worker, a bare
+        // monitor ingests the same points directly: refreshes must be
+        // bit-identical (the tentpole's exactness requirement)
+        let pts = generators::sine_with_noise(360, 0.3, 23);
+        let params = SearchParams::new(32, 4, 4);
+
+        let r = registry();
+        r.open("a", params.clone(), 300, 120).unwrap();
+        let id = r.stream_id("a").unwrap();
+        r.start_workers(1);
+        for chunk in pts.chunks(90) {
+            // frames of 90 points; cadence 120 fires inside extend
+            assert!(matches!(
+                r.enqueue_data(id, le_bytes(chunk), None),
+                Enqueue::Accepted { .. }
+            ));
+        }
+        let (seq, last) = r
+            .subscribe("a", 2, Some(Duration::from_secs(20)))
+            .unwrap()
+            .expect("drain workers must publish the third refresh");
+        assert_eq!(seq, 3, "360 points / cadence 120 = 3 refreshes");
+
+        let mut mon = StreamingMonitor::new(params, 300)
+            .unwrap()
+            .with_name("a")
+            .with_refresh_every(120);
+        let direct = mon.extend(&pts).unwrap();
+        assert_eq!(direct.len(), 3);
+        assert_eq!(
+            last,
+            direct.last().unwrap().to_json(),
+            "binary ingest must be bit-identical to direct extend"
+        );
+        // backlog fully drained and quota-free
+        assert_eq!(r.ingest_stats().queued_points, 0);
+        r.stop_workers();
+    }
+
+    #[test]
+    fn offloaded_json_append_matches_inline_append() {
+        let pts = generators::sine_with_noise(400, 0.3, 24);
+        let r = registry();
+        open(&r, "via-worker");
+        r.start_workers(1);
+        let rx = r
+            .submit_json_append("via-worker", pts.clone())
+            .unwrap();
+        let offloaded = rx
+            .recv_timeout(Duration::from_secs(20))
+            .expect("worker must answer")
+            .expect("append must succeed");
+        r.stop_workers();
+
+        let r2 = registry();
+        open(&r2, "inline");
+        let inline = r2.append("inline", &pts).unwrap();
+        // names differ; everything else (counts, discords, call
+        // accounting) must be bit-identical
+        assert_eq!(offloaded.len(), inline.len());
+        assert_eq!(offloaded, inline);
+    }
+
+    #[test]
+    fn registry_only_sees_codec_validated_payloads() {
+        // a misaligned length never reaches enqueue_data: the codec
+        // rejects it at the header, before any payload is read
+        let bad = frame::decode_header(&frame::encode_header(
+            frame::FrameKind::Data,
+            1,
+            12,
+        ));
+        assert!(bad.is_err(), "codec must reject misaligned payload_len");
+        // an aligned odd-count batch is a normal frame
+        let r = registry();
+        let id = open(&r, "a");
+        assert!(matches!(
+            r.enqueue_data(id, le_bytes(&[1.0, 2.0, 3.0]), None),
+            Enqueue::Accepted { points: 3 }
+        ));
     }
 }

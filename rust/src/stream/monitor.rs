@@ -277,6 +277,35 @@ impl StreamingMonitor {
         Ok(out)
     }
 
+    /// Append a batch of points packed as little-endian f64 bytes — the
+    /// payload of one binary `data` frame (see `service::frame`) —
+    /// decoding straight into the window with no intermediate `Vec<f64>`.
+    /// Byte-for-byte the same ingest as [`extend`](Self::extend): the
+    /// decoded bit patterns are the sender's exactly, so the refresh
+    /// schedule and every update are bit-identical to the JSON path fed
+    /// the same points. Rejects a length that is not a multiple of 8
+    /// (a truncated or corrupt payload must never silently drop a
+    /// partial point).
+    pub fn extend_from_le_bytes(
+        &mut self,
+        bytes: &[u8],
+    ) -> Result<Vec<StreamUpdate>> {
+        ensure!(
+            bytes.len() % 8 == 0,
+            "binary payload length {} is not a multiple of 8 \
+             (whole little-endian f64 points required)",
+            bytes.len()
+        );
+        let mut out = Vec::new();
+        for chunk in bytes.chunks_exact(8) {
+            let x = f64::from_le_bytes(chunk.try_into().unwrap());
+            if let Some(u) = self.append(x)? {
+                out.push(u);
+            }
+        }
+        Ok(out)
+    }
+
     /// Per-point maintenance: O(s) for the one new sequence's stats and
     /// word, O(1) eviction at the trailing edge.
     fn ingest(&mut self, x: f64) {
@@ -430,6 +459,36 @@ mod tests {
         let idx = SaxIndex::build(&ts, &cold, &m.params.sax);
         let inc: Vec<SaxWord> = m.words.iter().cloned().collect();
         assert_eq!(inc, idx.words);
+    }
+
+    #[test]
+    fn le_bytes_ingest_is_bit_identical_to_extend() {
+        // the binary-frame path decodes the sender's exact bit
+        // patterns, so updates must match extend() bitwise — including
+        // awkward values JSON text would round-trip through Display
+        let mut pts = generators::sine_with_noise(500, 0.3, 15);
+        pts[7] = -0.0;
+        pts[19] = f64::MIN_POSITIVE;
+        pts[23] = 1e300;
+        let bytes: Vec<u8> = pts.iter().flat_map(|x| x.to_le_bytes()).collect();
+
+        let mut via_text = monitor(32, 300).with_refresh_every(120);
+        let a = via_text.extend(&pts).unwrap();
+        let mut via_bytes = monitor(32, 300).with_refresh_every(120);
+        let b = via_bytes.extend_from_le_bytes(&bytes).unwrap();
+
+        assert!(!a.is_empty());
+        assert_eq!(a.len(), b.len());
+        for (ua, ub) in a.iter().zip(&b) {
+            assert_eq!(ua.to_json(), ub.to_json());
+        }
+        assert_eq!(
+            via_text.window_series().points,
+            via_bytes.window_series().points
+        );
+
+        // partial points are an error, never a silent truncation
+        assert!(via_bytes.extend_from_le_bytes(&bytes[..12]).is_err());
     }
 
     #[test]

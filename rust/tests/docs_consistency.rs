@@ -190,6 +190,54 @@ fn protocol_doc_covers_every_server_command() {
 }
 
 #[test]
+fn protocol_doc_pins_the_binary_frame_codec() {
+    use hstime::service::frame;
+
+    // The "Binary framing" section must exist and carry every wire
+    // constant and enum code verbatim — a codec change that skips the
+    // doc fails here, not in a confused client.
+    let doc = repo_file("docs/PROTOCOL.md");
+    let section = doc
+        .split("## Binary framing")
+        .nth(1)
+        .expect("docs/PROTOCOL.md must keep its `## Binary framing` section");
+    let section = section.split("\n## ").next().unwrap();
+    for (label, value) in [
+        ("magic byte 0", format!("{:#04x}", frame::MAGIC[0])),
+        ("magic byte 1", format!("{:#04x}", frame::MAGIC[1])),
+        ("version", frame::FRAME_VERSION.to_string()),
+        ("header length", frame::HEADER_LEN.to_string()),
+        ("max points per frame", frame::MAX_FRAME_POINTS.to_string()),
+    ] {
+        assert!(
+            section.contains(&value),
+            "Binary framing section is missing the {label} ({value})"
+        );
+    }
+    for kind in frame::FrameKind::ALL {
+        assert!(
+            section.contains(&format!("`{}` = {}", kind.name(), kind.code())),
+            "Binary framing section must list frame kind `{}` = {}",
+            kind.name(),
+            kind.code()
+        );
+    }
+    for reason in frame::ShedReason::ALL {
+        assert!(
+            section.contains(&format!("`{}` = {}", reason.name(), reason.code())),
+            "Binary framing section must list shed reason `{}` = {}",
+            reason.name(),
+            reason.code()
+        );
+    }
+    // the stream cap is a flag now; the doc must not re-hardcode it
+    assert!(
+        doc.contains("--max-streams"),
+        "docs/PROTOCOL.md must document the `--max-streams` flag"
+    );
+}
+
+#[test]
 fn architecture_doc_exists_and_is_linked() {
     let arch = repo_file("docs/ARCHITECTURE.md");
     assert!(arch.contains("stream"), "layer map must include the stream layer");

@@ -4,13 +4,29 @@
 
 use std::sync::mpsc;
 
-use hstime::service::{serve, Client};
+use hstime::service::frame::{self, ShedReason};
+use hstime::service::{
+    serve, serve_config, Client, ServeConfig, ShedNotice, CLIENT_INFLIGHT_QUOTA,
+};
 use hstime::util::json::Json;
 
 fn start_server(workers: usize, capacity: usize) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
     let (tx, rx) = mpsc::channel();
     let handle = std::thread::spawn(move || {
         serve("127.0.0.1:0", workers, capacity, move |addr| {
+            tx.send(addr).unwrap();
+        })
+        .expect("serve failed");
+    });
+    (rx.recv().unwrap(), handle)
+}
+
+fn start_server_cfg(
+    cfg: ServeConfig,
+) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        serve_config("127.0.0.1:0", cfg, move |addr| {
             tx.send(addr).unwrap();
         })
         .expect("serve failed");
@@ -512,5 +528,372 @@ fn unknown_and_misspelled_fields_fail_loudly() {
         .unwrap();
     assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false));
     assert!(reply.get("error").unwrap().as_str().unwrap().contains("`timout_ms`"));
+    stop_server(addr, handle);
+}
+
+// ---- binary framing: hello, frame ingest, backpressure, reactor ---------
+
+/// A bare TCP connection speaking the wire protocol directly, for the
+/// tests that must send bytes no [`Client`] would ever produce.
+struct RawConn {
+    sock: std::net::TcpStream,
+    reader: std::io::BufReader<std::net::TcpStream>,
+}
+
+impl RawConn {
+    fn connect(addr: std::net::SocketAddr) -> RawConn {
+        let sock = std::net::TcpStream::connect(addr).unwrap();
+        let reader = std::io::BufReader::new(sock.try_clone().unwrap());
+        RawConn { sock, reader }
+    }
+
+    fn send_line(&mut self, req: &Json) {
+        use std::io::Write;
+        writeln!(self.sock, "{req}").unwrap();
+    }
+
+    fn send_bytes(&mut self, bytes: &[u8]) {
+        use std::io::Write;
+        self.sock.write_all(bytes).unwrap();
+    }
+
+    fn read_reply(&mut self) -> Json {
+        use std::io::BufRead;
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        Json::parse(&line).unwrap()
+    }
+
+    /// True once the server has closed its end (read returns 0 bytes).
+    fn closed_by_server(&mut self) -> bool {
+        use std::io::BufRead;
+        let mut line = String::new();
+        matches!(self.reader.read_line(&mut line), Ok(0))
+    }
+}
+
+#[test]
+fn hello_negotiates_binary_framing() {
+    let (addr, handle) = start_server(1, 8);
+    let mut client = Client::connect(addr).unwrap();
+    let r = client.hello().unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    let frames = r.get("frames").expect("hello reply carries frame params");
+    assert_eq!(
+        frames.get("version").unwrap().as_u64(),
+        Some(frame::FRAME_VERSION as u64)
+    );
+    let magic = frames.get("magic").unwrap().as_arr().unwrap();
+    assert_eq!(magic[0].as_u64(), Some(frame::MAGIC[0] as u64));
+    assert_eq!(magic[1].as_u64(), Some(frame::MAGIC[1] as u64));
+    assert_eq!(
+        frames.get("header_len").unwrap().as_u64(),
+        Some(frame::HEADER_LEN as u64)
+    );
+    assert_eq!(
+        frames.get("max_points").unwrap().as_u64(),
+        Some(frame::MAX_FRAME_POINTS as u64)
+    );
+
+    // a version this server does not speak is refused by name …
+    let r = client
+        .call(&Json::obj().set("cmd", "hello").set("version", 9u64))
+        .unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("version"));
+    // … and hello is as strict about unknown fields as every command
+    let r = client
+        .call(&Json::obj().set("cmd", "hello").set("verison", 1u64))
+        .unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("`verison`"));
+    stop_server(addr, handle);
+}
+
+#[test]
+fn binary_frames_refresh_bit_identically_to_json_append() {
+    let (addr, handle) = start_server(1, 8);
+    let mut client = Client::connect(addr).unwrap();
+    client.hello().unwrap();
+
+    // same series down both encodings; cadence 120 over 360 points with
+    // s=64 fires refreshes at 120/240/360 regardless of framing
+    let pts = hstime::ts::generators::sine_with_noise(360, 0.2, 88);
+    let params = Json::obj().set("s", 64u64);
+    let id = client.open_stream("bin", params.clone(), 360, 120).unwrap();
+    assert!(id >= 1);
+    for chunk in pts.chunks(90) {
+        client.send_points(id, chunk).unwrap();
+    }
+    let bin = client.subscribe("bin", 2, 5_000).unwrap();
+    assert_eq!(bin.get("ok").unwrap().as_bool(), Some(true), "{bin}");
+    assert_eq!(bin.get("seq").unwrap().as_u64(), Some(3));
+    let bin_last = bin.get("update").expect("binary stream must refresh");
+
+    let twin_id = client.open_stream("twin", params, 360, 120).unwrap();
+    assert_ne!(id, twin_id, "stream ids must be distinct");
+    let r = client.append("twin", &pts).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    let updates = r.get("updates").unwrap().as_arr().unwrap();
+    assert_eq!(updates.len(), 3);
+    let twin_last = &updates[2];
+    assert_eq!(
+        format!("{twin_last}"),
+        format!("{bin_last}"),
+        "binary-frame refresh must be bit-identical to the JSON append path"
+    );
+
+    // the ingest counters saw the frames; nothing shed, queues drained
+    let st = client.stats().unwrap();
+    assert_eq!(st.get("frames_rx").unwrap().as_u64(), Some(4));
+    assert_eq!(st.get("points_rx").unwrap().as_u64(), Some(360));
+    assert_eq!(st.get("frames_shed").unwrap().as_u64(), Some(0));
+    assert_eq!(st.get("stream_queue_points").unwrap().as_u64(), Some(0));
+    assert!(client.take_sheds().is_empty());
+    stop_server(addr, handle);
+}
+
+#[test]
+fn frames_before_hello_are_rejected() {
+    let (addr, handle) = start_server(1, 8);
+    let mut raw = RawConn::connect(addr);
+    raw.send_bytes(&frame::encode_data(1, &[1.0, 2.0]));
+    let r = raw.read_reply();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    assert!(
+        r.get("error").unwrap().as_str().unwrap().contains("hello"),
+        "the error must say how to negotiate: {r}"
+    );
+    assert!(raw.closed_by_server());
+    // the server itself is unharmed
+    let mut client = Client::connect(addr).unwrap();
+    assert_eq!(
+        client.stats().unwrap().get("ok").unwrap().as_bool(),
+        Some(true)
+    );
+    stop_server(addr, handle);
+}
+
+#[test]
+fn malformed_frames_error_by_field_name_without_killing_the_server() {
+    let (addr, handle) = start_server(1, 8);
+
+    // each case: (bytes, substring the error must name)
+    let bad_magic = {
+        let mut h = frame::encode_header(frame::FrameKind::Data, 1, 8);
+        h[1] = 0x00;
+        h
+    };
+    let bad_version = {
+        let mut h = frame::encode_header(frame::FrameKind::Data, 1, 8);
+        h[2] = 9;
+        h
+    };
+    let bad_kind = {
+        let mut h = frame::encode_header(frame::FrameKind::Data, 1, 8);
+        h[3] = 7;
+        h
+    };
+    let oversized = {
+        // a length field promising ~4 GiB must be refused from the
+        // header alone, never buffered for
+        let mut h = frame::encode_header(frame::FrameKind::Data, 1, 8);
+        h[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        h
+    };
+    let misaligned = {
+        let mut h = frame::encode_header(frame::FrameKind::Data, 1, 8);
+        h[8..12].copy_from_slice(&12u32.to_le_bytes());
+        h
+    };
+    let cases: [(Vec<u8>, &str); 5] = [
+        (bad_magic.to_vec(), "magic"),
+        (bad_version.to_vec(), "version"),
+        (bad_kind.to_vec(), "kind"),
+        (oversized.to_vec(), "payload_len"),
+        (misaligned.to_vec(), "multiple of 8"),
+    ];
+    for (bytes, named) in cases {
+        let mut raw = RawConn::connect(addr);
+        raw.send_bytes(&bytes);
+        let r = raw.read_reply();
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+        let err = r.get("error").unwrap().as_str().unwrap().to_string();
+        assert!(err.contains("bad frame"), "{err}");
+        assert!(err.contains(named), "error {err:?} must name {named:?}");
+        assert!(raw.closed_by_server());
+    }
+
+    // a client-sent shed frame is a protocol violation too
+    let mut client = Client::connect(addr).unwrap();
+    client.hello().unwrap();
+    let mut raw = RawConn::connect(addr);
+    raw.send_line(&Json::obj().set("cmd", "hello").set("version", 1u64));
+    raw.read_reply();
+    raw.send_bytes(&frame::encode_shed(1, 4, ShedReason::QueueFull));
+    let r = raw.read_reply();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("shed"));
+
+    // after five poisoned connections the server still does real work
+    assert_eq!(
+        client.stats().unwrap().get("ok").unwrap().as_bool(),
+        Some(true)
+    );
+    stop_server(addr, handle);
+}
+
+#[test]
+fn full_ingest_queue_sheds_with_a_binary_notice() {
+    // stream_workers: 0 — nothing drains, so the shed is deterministic
+    let (addr, handle) = start_server_cfg(ServeConfig {
+        workers: 1,
+        capacity: 8,
+        max_streams: 8,
+        ctx_cache: 8,
+        stream_workers: 0,
+    });
+    let mut client = Client::connect(addr).unwrap();
+    client.hello().unwrap();
+    let id = client
+        .open_stream("q", Json::obj().set("s", 64u64), 150, 0)
+        .unwrap();
+
+    // the queue bound is the stream window: 150 points fill it exactly …
+    let fill: Vec<f64> = (0..150).map(|i| i as f64).collect();
+    client.send_points(id, &fill).unwrap();
+    // … so the next frame must shed, not grow memory
+    client.send_points(id, &[1.0; 10]).unwrap();
+    let st = client.stats().unwrap();
+    assert_eq!(st.get("frames_shed").unwrap().as_u64(), Some(1));
+    assert_eq!(st.get("stream_queue_points").unwrap().as_u64(), Some(150));
+    assert_eq!(
+        client.take_sheds(),
+        vec![ShedNotice { stream_id: id, dropped: 10, reason: ShedReason::QueueFull }]
+    );
+
+    // frames for a stream that never existed shed with their own reason
+    client.send_points(id + 1000, &[2.0; 4]).unwrap();
+    let _ = client.stats().unwrap();
+    assert_eq!(
+        client.take_sheds(),
+        vec![ShedNotice {
+            stream_id: id + 1000,
+            dropped: 4,
+            reason: ShedReason::NoSuchStream,
+        }]
+    );
+    stop_server(addr, handle);
+}
+
+#[test]
+fn per_client_quota_sheds_before_memory_grows_unbounded() {
+    let (addr, handle) = start_server_cfg(ServeConfig {
+        workers: 1,
+        capacity: 8,
+        max_streams: 8,
+        ctx_cache: 8,
+        stream_workers: 0,
+    });
+    let mut client = Client::connect(addr).unwrap();
+    client.hello().unwrap();
+    // window big enough that the per-stream bound never trips: the
+    // per-connection in-flight quota must be the limit that does
+    let window = CLIENT_INFLIGHT_QUOTA as usize + frame::MAX_FRAME_POINTS;
+    assert!(window <= hstime::service::streams::MAX_STREAM_WINDOW);
+    let id = client
+        .open_stream("big", Json::obj().set("s", 64u64), window, 0)
+        .unwrap();
+    let chunk = vec![0.5f64; frame::MAX_FRAME_POINTS];
+    let full_frames = CLIENT_INFLIGHT_QUOTA as usize / frame::MAX_FRAME_POINTS;
+    for _ in 0..full_frames {
+        client.send_points(id, &chunk).unwrap();
+    }
+    // quota is now exactly consumed; one more point must shed
+    client.send_points(id, &[9.0]).unwrap();
+    let st = client.stats().unwrap();
+    assert_eq!(st.get("frames_shed").unwrap().as_u64(), Some(1));
+    assert_eq!(
+        st.get("stream_queue_points").unwrap().as_u64(),
+        Some(CLIENT_INFLIGHT_QUOTA)
+    );
+    assert_eq!(
+        client.take_sheds(),
+        vec![ShedNotice { stream_id: id, dropped: 1, reason: ShedReason::ClientQuota }]
+    );
+    stop_server(addr, handle);
+}
+
+#[test]
+fn disconnect_mid_subscribe_releases_the_pending_slot() {
+    let (addr, handle) = start_server(1, 8);
+
+    let mut parked = RawConn::connect(addr);
+    parked.send_line(&stream_open_req("d", 64, 300, 0));
+    let r = parked.read_reply();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    // a subscribe that can never be satisfied, with a long timeout
+    parked.send_line(
+        &Json::obj()
+            .set("cmd", "subscribe")
+            .set("stream", "d")
+            .set("after", 99u64)
+            .set("timeout_ms", 60_000u64),
+    );
+
+    let mut watcher = Client::connect(addr).unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        let st = watcher.stats().unwrap();
+        if st.get("pending").unwrap().as_u64() == Some(1) {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "server never parked the subscribe: {st}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+
+    // client vanishes: the reactor must release the parked slot at once,
+    // not hold it for the remaining 60 s
+    drop(parked);
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        let st = watcher.stats().unwrap();
+        if st.get("pending").unwrap().as_u64() == Some(0) {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "disconnect did not release the pending subscribe: {st}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    stop_server(addr, handle);
+}
+
+#[test]
+fn serve_flags_size_the_stream_registry() {
+    // --max-streams/--ctx-cache land in ServeConfig; a 2-stream registry
+    // admits two opens and rejects the third with the raise hint
+    let (addr, handle) = start_server_cfg(ServeConfig {
+        workers: 1,
+        capacity: 8,
+        max_streams: 2,
+        ctx_cache: 1,
+        stream_workers: 1,
+    });
+    let mut client = Client::connect(addr).unwrap();
+    for name in ["a", "b"] {
+        let r = client.call(&stream_open_req(name, 32, 300, 0)).unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r}");
+    }
+    let r = client.call(&stream_open_req("c", 32, 300, 0)).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    assert!(
+        r.get("error").unwrap().as_str().unwrap().contains("max-streams"),
+        "the full-registry error must point at the flag: {r}"
+    );
     stop_server(addr, handle);
 }

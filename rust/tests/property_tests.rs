@@ -8,6 +8,7 @@ use hstime::dist::{CountingDistance, DistanceKind, Kernel};
 use hstime::prelude::*;
 use hstime::prop_assert;
 use hstime::sax::{breakpoints, mindist, SaxIndex};
+use hstime::service::frame;
 use hstime::ts::SeqStats;
 use hstime::util::proptest::{check, Gen};
 
@@ -408,6 +409,113 @@ fn prop_vl_matches_per_length_hst_bitwise() {
             range.min,
             range.max,
             range.step
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_frame_codec_roundtrips_and_rejects_corruption() {
+    // The wire codec must be lossless bit-for-bit (every f64 payload,
+    // including NaN/-0.0/subnormals, survives encode → decode), and a
+    // corrupted or truncated byte stream must come back as a named
+    // `FrameError` — never a panic, never a length-driven allocation.
+    check("frame-codec-roundtrip", 53, 40, |g| {
+        let stream_id = g.rng.next_u64() as u32;
+        let n_points = g.size(0, 300);
+        let points: Vec<f64> = (0..n_points)
+            .map(|_| match g.rng.below(8) {
+                0 => f64::NAN,
+                1 => -0.0,
+                2 => f64::INFINITY,
+                3 => f64::MIN_POSITIVE / 2.0, // subnormal
+                _ => g.f64_in(-1e12, 1e12),
+            })
+            .collect();
+        let wire = frame::encode_data(stream_id, &points);
+        prop_assert!(
+            wire.len() == frame::HEADER_LEN + 8 * n_points,
+            "wire length {} for {} points",
+            wire.len(),
+            n_points
+        );
+        let f = frame::decode(&wire).map_err(|e| format!("decode failed: {e}"))?;
+        prop_assert!(
+            f.header.kind == frame::FrameKind::Data
+                && f.header.stream_id == stream_id
+                && f.header.version == frame::FRAME_VERSION,
+            "header mangled: {:?}",
+            f.header
+        );
+        let back: Vec<f64> = frame::payload_points(f.payload).collect();
+        prop_assert!(back.len() == points.len(), "point count changed");
+        for (i, (a, b)) in points.iter().zip(&back).enumerate() {
+            prop_assert!(
+                a.to_bits() == b.to_bits(),
+                "point {i}: {:016x} vs {:016x} not bit-identical",
+                a.to_bits(),
+                b.to_bits()
+            );
+        }
+
+        // shed frames roundtrip through their typed payload too
+        let dropped = g.rng.next_u64() as u32;
+        let reason = *g.choose(&frame::ShedReason::ALL);
+        let shed = frame::encode_shed(stream_id, dropped, reason);
+        let f = frame::decode(&shed).map_err(|e| format!("shed decode: {e}"))?;
+        prop_assert!(
+            frame::decode_shed_payload(f.payload) == Some((dropped, reason)),
+            "shed payload mangled"
+        );
+
+        // truncate anywhere: always Truncated with a consistent need
+        if !wire.is_empty() {
+            let cut = g.rng.below(wire.len());
+            match frame::decode(&wire[..cut]) {
+                Err(frame::FrameError::Truncated { needed, have }) => {
+                    prop_assert!(
+                        have == cut && needed > cut,
+                        "truncation at {cut} reported needed={needed} have={have}"
+                    );
+                }
+                other => {
+                    return Err(format!(
+                        "truncation at {cut} gave {other:?}, not Truncated"
+                    ));
+                }
+            }
+        }
+
+        // corrupt one header identity byte: a named error, not a panic
+        let mut bad = wire.clone();
+        let (at, name) = *g.choose(&[
+            (0usize, "magic"),
+            (1usize, "magic"),
+            (2usize, "version"),
+            (3usize, "kind"),
+        ]);
+        bad[at] ^= 0xFF;
+        match frame::decode(&bad) {
+            Err(e) => {
+                let msg = e.to_string();
+                prop_assert!(
+                    msg.contains(name),
+                    "corrupt byte {at}: error {msg:?} does not name `{name}`"
+                );
+            }
+            Ok(_) => return Err(format!("corrupt byte {at} decoded fine")),
+        }
+
+        // a hostile length field is refused from the header alone
+        let mut huge = wire[..frame::HEADER_LEN].to_vec();
+        let over = (frame::MAX_PAYLOAD_LEN as u32) + 8 + g.rng.below(1 << 20) as u32;
+        huge[8..12].copy_from_slice(&over.to_le_bytes());
+        prop_assert!(
+            matches!(
+                frame::decode(&huge),
+                Err(frame::FrameError::Oversized { .. })
+            ),
+            "length {over} was not refused as Oversized"
         );
         Ok(())
     });
