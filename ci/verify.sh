@@ -60,5 +60,28 @@ cargo run -q --release --bin hst -- bench --diff BENCH_7.json BENCH_8.json || tr
 step "service scale: quick binary-frame smoke (64 streams, zero shed, bit-identical twins)"
 cargo bench --bench service_scale -- --quick
 
+step "snapshot smoke: save->corrupt->restore fails by name; save->restore->refresh is bit-identical"
+cargo test -q --test integration_snapshot --test snapshot_warm_restart
+
+step "snapshot goldens: committed .hsts fixtures stay readable (hst snapshot inspect)"
+for f in rust/tests/golden/*.hsts; do
+    [ -e "$f" ] || continue
+    cargo run -q --release --bin hst -- snapshot inspect "$f"
+done
+
+step "snapshot goldens: a truncated copy must be refused"
+for f in rust/tests/golden/*.hsts; do
+    [ -e "$f" ] || continue
+    CORRUPT="$(mktemp /tmp/hst_snap_corrupt.XXXXXX.hsts)"
+    head -c "$(( $(wc -c < "$f") - 1 ))" "$f" > "$CORRUPT"
+    if cargo run -q --release --bin hst -- snapshot inspect "$CORRUPT" >/dev/null 2>&1; then
+        echo "FAIL: truncated $f passed 'hst snapshot inspect'"
+        rm -f "$CORRUPT"
+        exit 1
+    fi
+    rm -f "$CORRUPT"
+    break   # one fixture is enough for the negative path
+done
+
 echo
 echo "verify: all gates passed"

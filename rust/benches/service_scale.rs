@@ -76,6 +76,7 @@ fn main() -> anyhow::Result<()> {
         max_streams: streams + samples + 8,
         ctx_cache: 8,
         stream_workers,
+        snapshot_dir: None,
     };
     let server = std::thread::spawn(move || {
         service::serve_config("127.0.0.1:0", cfg, |bound| {

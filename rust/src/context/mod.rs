@@ -410,6 +410,23 @@ impl SearchContext {
         }
     }
 
+    /// Enumerate the warm-profile cache: every
+    /// `(s, kind, allow_self_match)` entry with a clone of its profile,
+    /// sorted by key so the order is deterministic. This is the snapshot
+    /// layer's export seam — the cache key type stays private, the warm
+    /// state does not.
+    pub fn warm_profiles(&self) -> Vec<(usize, DistanceKind, bool, NndProfile)> {
+        let cache = self.profile_cache.lock().unwrap();
+        let mut out: Vec<(usize, DistanceKind, bool, NndProfile)> = cache
+            .iter()
+            .map(|(k, p)| (k.s, k.kind, k.allow_self_match, p.clone()))
+            .collect();
+        out.sort_by_key(|(s, kind, allow, _)| {
+            (*s, matches!(kind, DistanceKind::Raw), *allow)
+        });
+        out
+    }
+
     /// Notify the observer (if any) of a phase change.
     pub fn notify_phase(&self, engine: &str, phase: &str) {
         if let Some(obs) = &self.observer {
@@ -564,6 +581,31 @@ mod tests {
         assert_eq!(got.nnd[0], 1.0, "tighter bound survives");
         assert_eq!(got.nnd[1], 2.0);
         assert_eq!(got.nnd[2], 0.5, "new information is merged in");
+    }
+
+    #[test]
+    fn warm_profiles_enumerates_every_entry_in_key_order() {
+        let ts = series();
+        let ctx = SearchContext::builder(&ts).build();
+        assert!(ctx.warm_profiles().is_empty());
+        let n64 = ts.num_sequences(64);
+        let n32 = ts.num_sequences(32);
+        ctx.store_warm_profile(64, DistanceKind::Znorm, false, NndProfile::new(n64));
+        ctx.store_warm_profile(32, DistanceKind::Raw, true, NndProfile::new(n32));
+        ctx.store_warm_profile(32, DistanceKind::Znorm, false, NndProfile::new(n32));
+        let all = ctx.warm_profiles();
+        let keys: Vec<(usize, DistanceKind, bool)> =
+            all.iter().map(|(s, k, a, _)| (*s, *k, *a)).collect();
+        assert_eq!(
+            keys,
+            vec![
+                (32, DistanceKind::Znorm, false),
+                (32, DistanceKind::Raw, true),
+                (64, DistanceKind::Znorm, false),
+            ],
+            "enumeration must be deterministic and complete"
+        );
+        assert_eq!(all[2].3.len(), n64);
     }
 
     #[test]

@@ -69,6 +69,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod sax;
 pub mod service;
+pub mod snapshot;
 pub mod stream;
 pub mod tables;
 pub mod ts;
@@ -93,6 +94,7 @@ pub mod prelude {
         t_speedup,
     };
     pub use crate::sax::{SaxIndex, SaxWord};
+    pub use crate::snapshot::{ContextSnapshot, MonitorSnapshot, SnapshotError};
     pub use crate::stream::{HstStream, StreamDiscord, StreamUpdate, StreamingMonitor};
     pub use crate::ts::series::IntoSeries;
     pub use crate::ts::{generators, MultiSeries, TimeSeries};

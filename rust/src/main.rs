@@ -50,6 +50,7 @@ fn run(args: &Args) -> Result<()> {
         Some("generate") => generate(args),
         Some("serve") => serve(args),
         Some("submit") => submit(args),
+        Some("snapshot") => snapshot(args),
         Some("info") => info(args),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
         None => {
@@ -59,7 +60,7 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: hst <discover|table|bench|report|plot|merlin|vl|monitor|stream|mdim|generate|serve|submit|info> [flags]
+const USAGE: &str = "usage: hst <discover|table|bench|report|plot|merlin|vl|monitor|stream|mdim|generate|serve|submit|snapshot|info> [flags]
   hst discover 'ECG 108' --algo hst --k 3 --scale-div 8
   hst discover 'ECG 108' --algo hst-par --threads 4
   hst discover synthetic --noise 0.001 --n 20000 --s 120
@@ -85,7 +86,11 @@ const USAGE: &str = "usage: hst <discover|table|bench|report|plot|merlin|vl|moni
   hst generate 'Shuttle TEK 14' --out tek14.txt
   hst serve --addr 127.0.0.1:7878 --workers 4   (0 = HST_THREADS/all cores)
   hst serve --max-streams 1024 --ctx-cache 16 --stream-workers 2
+  hst serve --snapshot-dir snapshots   (restore warm state on boot, save on shutdown)
   hst submit --addr 127.0.0.1:7878 --dataset 'ECG 15' --algo hst-par --threads 2
+  hst snapshot save --addr 127.0.0.1:7878 --dir snapshots   (persist warm state now)
+  hst snapshot restore --addr 127.0.0.1:7878                (seed from --snapshot-dir)
+  hst snapshot inspect snapshots/ctx_ecg-15_0123456789abcdef.hsts
   hst info
 thread control: --threads N on discover/submit/table, or HST_THREADS env";
 
@@ -710,6 +715,9 @@ fn serve(args: &Args) -> Result<()> {
         ctx_cache: args.get_usize("ctx-cache", defaults.ctx_cache),
         stream_workers: args
             .get_usize("stream-workers", defaults.stream_workers),
+        snapshot_dir: args
+            .get("snapshot-dir")
+            .map(std::path::PathBuf::from),
     };
     anyhow::ensure!(
         cfg.max_streams > 0,
@@ -723,9 +731,16 @@ fn serve(args: &Args) -> Result<()> {
     );
     println!(
         "hstime service: workers={} capacity={} max_streams={} ctx_cache={} \
-         stream_workers={}",
-        cfg.workers, cfg.capacity, cfg.max_streams, cfg.ctx_cache,
-        cfg.stream_workers
+         stream_workers={} snapshot_dir={}",
+        cfg.workers,
+        cfg.capacity,
+        cfg.max_streams,
+        cfg.ctx_cache,
+        cfg.stream_workers,
+        cfg.snapshot_dir
+            .as_ref()
+            .map(|d| d.display().to_string())
+            .unwrap_or_else(|| "-".to_string())
     );
     service::serve_config(addr.as_str(), cfg, |bound| {
         println!("listening on {bound}");
@@ -757,6 +772,94 @@ fn submit(args: &Args) -> Result<()> {
     let reply = client.wait(job)?;
     println!("{reply}");
     Ok(())
+}
+
+fn snapshot(args: &Args) -> Result<()> {
+    let action = args
+        .positionals
+        .first()
+        .map(String::as_str)
+        .context("snapshot needs an action: save | restore | inspect")?;
+    match action {
+        "inspect" => {
+            let path = args
+                .positionals
+                .get(1)
+                .context("snapshot inspect needs a .hsts file path")?;
+            let bytes = std::fs::read(path)
+                .with_context(|| format!("reading {path}"))?;
+            let summary = hstime::snapshot::inspect(&bytes)
+                .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            if args.has("json") {
+                let sections: Vec<Json> = summary
+                    .sections
+                    .iter()
+                    .map(|s| {
+                        Json::obj()
+                            .set("tag", s.tag as u64)
+                            .set("name", s.name)
+                            .set("len", s.len)
+                            .set("offset", s.offset)
+                    })
+                    .collect();
+                println!(
+                    "{}",
+                    Json::obj()
+                        .set("ok", true)
+                        .set("kind", summary.kind.name())
+                        .set("bytes", summary.bytes)
+                        .set("sections", sections)
+                        .set(
+                            "detail",
+                            summary
+                                .detail
+                                .iter()
+                                .map(|d| Json::from(d.as_str()))
+                                .collect::<Vec<_>>(),
+                        )
+                );
+            } else {
+                println!(
+                    "{path}: {} snapshot, {} bytes, {} sections",
+                    summary.kind.name(),
+                    summary.bytes,
+                    summary.sections.len()
+                );
+                for s in &summary.sections {
+                    println!(
+                        "  section {:#06x} {:<14} {:>8} bytes @ {}",
+                        s.tag, s.name, s.len, s.offset
+                    );
+                }
+                for line in &summary.detail {
+                    println!("  {line}");
+                }
+            }
+            Ok(())
+        }
+        "save" | "restore" => {
+            let addr = args.get_or("addr", "127.0.0.1:7878").to_string();
+            let mut req = Json::obj().set(
+                "cmd",
+                if action == "save" { "snapshot_save" } else { "snapshot_restore" },
+            );
+            if let Some(dir) = args.get("dir") {
+                req = req.set("dir", dir);
+            }
+            let mut client = service::Client::connect(addr.as_str())?;
+            let reply = client.call(&req)?;
+            println!("{reply}");
+            anyhow::ensure!(
+                reply.get("ok").and_then(|b| b.as_bool()) == Some(true),
+                "snapshot {action} rejected by the server"
+            );
+            Ok(())
+        }
+        other => bail!(
+            "unknown snapshot action {other:?} (expected save, restore, \
+             or inspect)"
+        ),
+    }
 }
 
 fn info(args: &Args) -> Result<()> {

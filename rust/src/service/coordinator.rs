@@ -10,15 +10,19 @@
 //! `prep_calls` so the reuse is observable end to end.
 
 use std::collections::{HashMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context as _, Result};
 
 use crate::algo;
 use crate::config::{SaxParams, SearchParams};
 use crate::context::SearchContext;
 use crate::mdim::{self, MdimAlgorithm as _, MdimContext, MdimParams};
+use crate::snapshot::{self, store, ContextSnapshot, ProfileEntry};
+use crate::stream::StreamingMonitor;
 use crate::ts::{datasets, MultiSeries, TimeSeries};
 use crate::util::json::Json;
 
@@ -492,6 +496,53 @@ impl ContextCache {
         }
         Ok((ctx, false))
     }
+
+    /// Every cached context with its key, sorted by key so snapshot
+    /// save order (and the files it writes) is deterministic.
+    fn entries(&self) -> Vec<(ContextKey, Arc<SearchContext>)> {
+        let g = self.inner.lock().unwrap();
+        let mut v: Vec<(ContextKey, Arc<SearchContext>)> = g
+            .map
+            .iter()
+            .map(|(k, (ctx, _))| (k.clone(), Arc::clone(ctx)))
+            .collect();
+        v.sort_by(|(a, _), (b, _)| {
+            (a.dataset.as_str(), a.scale_div, a.sax.s, a.sax.p, a.sax.alphabet)
+                .cmp(&(
+                    b.dataset.as_str(),
+                    b.scale_div,
+                    b.sax.s,
+                    b.sax.p,
+                    b.sax.alphabet,
+                ))
+        });
+        v
+    }
+
+    /// Seed a restored context, under the same LRU discipline as a
+    /// miss in [`get_or_build`](Self::get_or_build). A context already
+    /// cached under this key is left in place — the live one may be
+    /// warmer than the snapshot.
+    fn seed(&self, key: ContextKey, ctx: Arc<SearchContext>) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if g.map.contains_key(&key) {
+            return false;
+        }
+        g.map.insert(key, (ctx, tick));
+        if g.map.len() > self.capacity {
+            if let Some(evict) = g
+                .map
+                .iter()
+                .min_by_key(|(_, (_, used))| *used)
+                .map(|(k, _)| k.clone())
+            {
+                g.map.remove(&evict);
+            }
+        }
+        true
+    }
 }
 
 struct Inner {
@@ -520,6 +571,98 @@ pub struct CoordinatorStats {
     pub ctx_cache_entries: usize,
     /// Streaming monitors currently open (the `stream_open` command).
     pub streams: usize,
+    /// Completed `snapshot_save` operations (boot-shutdown saves
+    /// included).
+    pub snapshot_saves: u64,
+    /// Completed `snapshot_restore` operations.
+    pub snapshot_restores: u64,
+    /// Contexts seeded into the LRU by restores.
+    pub snapshot_contexts_restored: u64,
+    /// Stream monitors re-installed by restores.
+    pub snapshot_streams_restored: u64,
+    /// Warm nnd profiles seeded into restored contexts.
+    pub snapshot_profiles_seeded: u64,
+}
+
+/// Monotonic counters behind the `stats` snapshot fields.
+#[derive(Default)]
+struct SnapshotCounters {
+    saves: AtomicU64,
+    restores: AtomicU64,
+    contexts_restored: AtomicU64,
+    streams_restored: AtomicU64,
+    profiles_seeded: AtomicU64,
+}
+
+/// What one [`Coordinator::snapshot_save`] wrote.
+#[derive(Debug, Clone)]
+pub struct SnapshotSaveReport {
+    /// The directory written into.
+    pub dir: PathBuf,
+    /// Context snapshots written.
+    pub contexts: usize,
+    /// Monitor snapshots written.
+    pub monitors: usize,
+    /// Cached contexts skipped because they held no warm profile yet
+    /// (nothing a restore could reuse).
+    pub skipped: usize,
+    /// File names written, in write order.
+    pub files: Vec<String>,
+}
+
+impl SnapshotSaveReport {
+    /// Serialize for the service protocol (`docs/PROTOCOL.md`).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("dir", self.dir.display().to_string())
+            .set("contexts", self.contexts as u64)
+            .set("monitors", self.monitors as u64)
+            .set("skipped", self.skipped as u64)
+            .set(
+                "files",
+                self.files
+                    .iter()
+                    .map(|f| Json::Str(f.clone()))
+                    .collect::<Vec<_>>(),
+            )
+    }
+}
+
+/// What one [`Coordinator::snapshot_restore`] brought back.
+#[derive(Debug, Clone)]
+pub struct SnapshotRestoreReport {
+    /// The directory read from.
+    pub dir: PathBuf,
+    /// Contexts seeded into the LRU.
+    pub contexts: usize,
+    /// Stream monitors re-installed.
+    pub monitors: usize,
+    /// Warm nnd profiles seeded across those contexts.
+    pub profiles: usize,
+    /// Snapshots skipped because live state already owned their key
+    /// (context cached / stream open) — the live state may be warmer.
+    pub skipped: usize,
+    /// File names restored, in read order.
+    pub files: Vec<String>,
+}
+
+impl SnapshotRestoreReport {
+    /// Serialize for the service protocol (`docs/PROTOCOL.md`).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("dir", self.dir.display().to_string())
+            .set("contexts", self.contexts as u64)
+            .set("monitors", self.monitors as u64)
+            .set("profiles", self.profiles as u64)
+            .set("skipped", self.skipped as u64)
+            .set(
+                "files",
+                self.files
+                    .iter()
+                    .map(|f| Json::Str(f.clone()))
+                    .collect::<Vec<_>>(),
+            )
+    }
 }
 
 /// Sizing knobs for [`Coordinator::start_config`]. Defaults reproduce
@@ -565,6 +708,7 @@ pub struct Coordinator {
     cache: Arc<ContextCache>,
     capacity: usize,
     streams: StreamRegistry,
+    snaps: SnapshotCounters,
 }
 
 impl Coordinator {
@@ -616,6 +760,7 @@ impl Coordinator {
             cache,
             capacity: cfg.capacity,
             streams,
+            snaps: SnapshotCounters::default(),
         }
     }
 
@@ -700,7 +845,193 @@ impl Coordinator {
             queue_capacity: self.capacity,
             ctx_cache_entries: self.cache.len(),
             streams: self.streams.len(),
+            snapshot_saves: self.snaps.saves.load(Ordering::Relaxed),
+            snapshot_restores: self.snaps.restores.load(Ordering::Relaxed),
+            snapshot_contexts_restored: self
+                .snaps
+                .contexts_restored
+                .load(Ordering::Relaxed),
+            snapshot_streams_restored: self
+                .snaps
+                .streams_restored
+                .load(Ordering::Relaxed),
+            snapshot_profiles_seeded: self
+                .snaps
+                .profiles_seeded
+                .load(Ordering::Relaxed),
         }
+    }
+
+    /// Persist every warm context profile and every open stream monitor
+    /// into `dir` (created if missing), one `.hsts` file each (see
+    /// [`crate::snapshot`]). Deterministic: keys are sorted, encodings
+    /// are canonical, so the same warm state writes the same bytes.
+    /// Contexts with no warm profile are skipped — a restore could reuse
+    /// nothing from them.
+    pub fn snapshot_save(&self, dir: &Path) -> Result<SnapshotSaveReport> {
+        std::fs::create_dir_all(dir).with_context(|| {
+            format!("creating snapshot directory {}", dir.display())
+        })?;
+        let mut report = SnapshotSaveReport {
+            dir: dir.to_path_buf(),
+            contexts: 0,
+            monitors: 0,
+            skipped: 0,
+            files: Vec::new(),
+        };
+        for (key, ctx) in self.cache.entries() {
+            let profiles: Vec<ProfileEntry> = ctx
+                .warm_profiles()
+                .into_iter()
+                .map(|(s, kind, allow_self_match, profile)| ProfileEntry {
+                    s,
+                    kind,
+                    allow_self_match,
+                    profile,
+                })
+                .collect();
+            if profiles.is_empty() {
+                report.skipped += 1;
+                continue;
+            }
+            let snap = ContextSnapshot {
+                dataset: key.dataset.clone(),
+                scale_div: key.scale_div as u64,
+                sax: key.sax,
+                fingerprint: snapshot::SeriesFingerprint::of(
+                    &ctx.series().points,
+                ),
+                profiles,
+            };
+            let name = store::context_file_name(
+                &key.dataset,
+                key.scale_div as u64,
+                key.sax.s,
+                key.sax.p,
+                key.sax.alphabet,
+            );
+            let path = dir.join(&name);
+            std::fs::write(&path, snapshot::encode_context(&snap))
+                .with_context(|| format!("writing {}", path.display()))?;
+            report.contexts += 1;
+            report.files.push(name);
+        }
+        for snap in self.streams.export_monitors() {
+            let name = store::monitor_file_name(&snap.name);
+            let path = dir.join(&name);
+            std::fs::write(&path, snapshot::encode_monitor(&snap))
+                .with_context(|| format!("writing {}", path.display()))?;
+            report.monitors += 1;
+            report.files.push(name);
+        }
+        self.snaps.saves.fetch_add(1, Ordering::Relaxed);
+        Ok(report)
+    }
+
+    /// Restore every `.hsts` file in `dir` — contexts into the LRU
+    /// (series regenerated from the key, fingerprint-checked, warm
+    /// profiles seeded via
+    /// [`store_warm_profile`](SearchContext::store_warm_profile)),
+    /// monitors into the stream registry under `stream_open`'s bounds.
+    /// Strict: a file that fails to decode, a fingerprint that does not
+    /// match the regenerated series, or a monitor the registry refuses
+    /// fails the whole restore with the file named — corruption must
+    /// never silently warm a context with wrong state. Snapshots whose
+    /// key is already live (context cached, stream open) are skipped and
+    /// counted: the live state may be warmer than the file.
+    pub fn snapshot_restore(&self, dir: &Path) -> Result<SnapshotRestoreReport> {
+        let mut report = SnapshotRestoreReport {
+            dir: dir.to_path_buf(),
+            contexts: 0,
+            monitors: 0,
+            profiles: 0,
+            skipped: 0,
+            files: Vec::new(),
+        };
+        for path in store::list_dir(dir).with_context(|| {
+            format!("listing snapshot directory {}", dir.display())
+        })? {
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let snap = store::decode(&bytes).map_err(|e| {
+                anyhow::anyhow!("snapshot {}: {e}", path.display())
+            })?;
+            let file = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .unwrap_or("?")
+                .to_string();
+            match snap {
+                store::Snapshot::Context(c) => {
+                    let spec = JobSpec {
+                        dataset: c.dataset.clone(),
+                        scale_div: c.scale_div as usize,
+                        algo: String::new(),
+                        params: SearchParams::new(
+                            c.sax.s,
+                            c.sax.p,
+                            c.sax.alphabet,
+                        ),
+                    };
+                    let ts = spec.series().with_context(|| {
+                        format!("snapshot {}: regenerating series", file)
+                    })?;
+                    c.check_series(&ts.points).map_err(|e| {
+                        anyhow::anyhow!("snapshot {file}: {e}")
+                    })?;
+                    let ctx = Arc::new(SearchContext::builder_owned(ts).build());
+                    for e in &c.profiles {
+                        ctx.store_warm_profile(
+                            e.s,
+                            e.kind,
+                            e.allow_self_match,
+                            e.profile.clone(),
+                        );
+                    }
+                    let seeded = self.cache.seed(
+                        ContextKey {
+                            dataset: c.dataset,
+                            scale_div: c.scale_div as usize,
+                            sax: c.sax,
+                        },
+                        ctx,
+                    );
+                    if seeded {
+                        report.contexts += 1;
+                        report.profiles += c.profiles.len();
+                        report.files.push(file);
+                        self.snaps
+                            .contexts_restored
+                            .fetch_add(1, Ordering::Relaxed);
+                        self.snaps
+                            .profiles_seeded
+                            .fetch_add(c.profiles.len() as u64, Ordering::Relaxed);
+                    } else {
+                        report.skipped += 1;
+                    }
+                }
+                store::Snapshot::Monitor(m) => {
+                    if self.streams.stream_id(&m.name).is_some() {
+                        report.skipped += 1;
+                        continue;
+                    }
+                    let mon =
+                        StreamingMonitor::from_snapshot(m).map_err(|e| {
+                            anyhow::anyhow!("snapshot {file}: {e}")
+                        })?;
+                    self.streams.install(mon).with_context(|| {
+                        format!("snapshot {file}: reopening stream")
+                    })?;
+                    report.monitors += 1;
+                    report.files.push(file);
+                    self.snaps
+                        .streams_restored
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        self.snaps.restores.fetch_add(1, Ordering::Relaxed);
+        Ok(report)
     }
 
     /// Current state of a job.
@@ -1365,6 +1696,80 @@ mod tests {
         .unwrap();
         let err = VlJobSpec::from_json(&j).unwrap_err();
         assert!(err.contains("min=2"), "{err}");
+    }
+
+    #[test]
+    fn snapshot_save_restore_round_trips_warm_state() {
+        let dir = std::env::temp_dir().join(format!(
+            "hstime_coord_snap_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+
+        // warm a context and a stream, then save
+        let c = Coordinator::start(1, 8);
+        let id = c.submit(quick_spec("hst")).unwrap();
+        assert!(matches!(c.wait(id), Some(JobState::Done(_))));
+        c.streams()
+            .open("snap-a", SearchParams::new(32, 4, 4), 300, 0)
+            .unwrap();
+        let pts = crate::ts::generators::sine_with_noise(400, 0.3, 41);
+        c.streams().append("snap-a", &pts).unwrap();
+        let saved = c.snapshot_save(&dir).unwrap();
+        assert_eq!(saved.contexts, 1);
+        assert_eq!(saved.monitors, 1);
+        assert_eq!(c.stats().snapshot_saves, 1);
+        c.shutdown();
+
+        // a fresh coordinator restores it all
+        let c2 = Coordinator::start(1, 8);
+        let restored = c2.snapshot_restore(&dir).unwrap();
+        assert_eq!(restored.contexts, 1);
+        assert_eq!(restored.monitors, 1);
+        assert!(restored.profiles >= 1);
+        let st = c2.stats();
+        assert_eq!(st.snapshot_restores, 1);
+        assert_eq!(st.snapshot_contexts_restored, 1);
+        assert_eq!(st.snapshot_streams_restored, 1);
+        assert!(st.snapshot_profiles_seeded >= 1);
+
+        // the restored context is a cache hit and needs no re-preparation
+        let id = c2.submit(quick_spec("hst")).unwrap();
+        match c2.wait(id) {
+            Some(JobState::Done(j)) => {
+                assert_eq!(j.get("ctx_cache").unwrap().as_str(), Some("hit"));
+                assert_eq!(j.get("prep_calls").unwrap().as_u64(), Some(0));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // the restored stream continues warm
+        let more = crate::ts::generators::sine_with_noise(50, 0.3, 42);
+        let ups = c2.streams().append("snap-a", &more).unwrap();
+        assert_eq!(ups[0].get("warm").unwrap().as_bool(), Some(true));
+        assert_eq!(ups[0].get("prep_calls").unwrap().as_u64(), Some(0));
+
+        // restoring again skips keys that are already live
+        let again = c2.snapshot_restore(&dir).unwrap();
+        assert_eq!(again.contexts + again.monitors, 0);
+        assert_eq!(again.skipped, 2);
+        c2.shutdown();
+
+        // a corrupted file fails the restore with the file named
+        let c3 = Coordinator::start(1, 4);
+        let victim = store::list_dir(&dir).unwrap().remove(0);
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&victim, &bytes).unwrap();
+        let err = format!("{:#}", c3.snapshot_restore(&dir).unwrap_err());
+        assert!(err.contains("snapshot"), "{err}");
+        assert!(
+            err.contains(victim.file_name().unwrap().to_str().unwrap())
+                || err.contains(&victim.display().to_string()),
+            "{err}"
+        );
+        c3.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -76,7 +76,7 @@ pub mod streams;
 
 pub use coordinator::{
     Coordinator, CoordinatorConfig, CoordinatorStats, JobSpec, JobState,
-    MdimJobSpec, VlJobSpec,
+    MdimJobSpec, SnapshotRestoreReport, SnapshotSaveReport, VlJobSpec,
 };
 pub use server::{
     serve, serve_config, Client, ServeConfig, ShedNotice, CLIENT_INFLIGHT_QUOTA,

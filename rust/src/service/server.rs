@@ -41,6 +41,7 @@
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::{Component, Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -87,6 +88,11 @@ pub struct ServeConfig {
     /// Stream drain workers (`--stream-workers`; 0 = inline JSON
     /// appends and no binary-frame draining).
     pub stream_workers: usize,
+    /// Warm-state directory (`--snapshot-dir`): restored on boot,
+    /// saved on shutdown, and the default `dir` of the
+    /// `snapshot_save`/`snapshot_restore` commands. `None` = no
+    /// durability (the historical behavior).
+    pub snapshot_dir: Option<PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -98,6 +104,7 @@ impl Default for ServeConfig {
             max_streams: c.max_streams,
             ctx_cache: c.ctx_cache,
             stream_workers: c.stream_workers,
+            snapshot_dir: None,
         }
     }
 }
@@ -142,7 +149,26 @@ pub fn serve_config<A: ToSocketAddrs>(
         ctx_cache: cfg.ctx_cache,
         stream_workers: cfg.stream_workers,
     });
-    reactor(listener, coord)
+    if let Some(dir) = &cfg.snapshot_dir {
+        // boot restore is best-effort: a missing directory is an empty
+        // restore, but a corrupt file must not block serving — report
+        // it and start cold (the file stays on disk for inspection)
+        match coord.snapshot_restore(dir) {
+            Ok(r) if r.contexts + r.monitors > 0 => eprintln!(
+                "restored {} context(s), {} stream(s) from {}",
+                r.contexts,
+                r.monitors,
+                dir.display()
+            ),
+            Ok(_) => {}
+            Err(e) => eprintln!(
+                "warning: snapshot restore from {} failed ({e:#}); \
+                 starting cold",
+                dir.display()
+            ),
+        }
+    }
+    reactor(listener, coord, cfg.snapshot_dir)
 }
 
 /// One reply owed to a connection, in request order.
@@ -243,7 +269,11 @@ struct ReactorSnapshot {
 
 /// The reactor loop: accept, read/parse/dispatch, resolve pendings,
 /// flush, reap dead connections — then sleep only if nothing moved.
-fn reactor(listener: TcpListener, coord: Coordinator) -> Result<()> {
+fn reactor(
+    listener: TcpListener,
+    coord: Coordinator,
+    snapshot_dir: Option<PathBuf>,
+) -> Result<()> {
     let stop = AtomicBool::new(false);
     let mut conns: Vec<Conn> = Vec::new();
     loop {
@@ -266,7 +296,8 @@ fn reactor(listener: TcpListener, coord: Coordinator) -> Result<()> {
             pending: conns.iter().map(Conn::pending_count).sum(),
         };
         for conn in conns.iter_mut() {
-            progressed |= service_reads(conn, &coord, &stop, snap);
+            progressed |=
+                service_reads(conn, &coord, &stop, snap, snapshot_dir.as_deref());
         }
         for conn in conns.iter_mut() {
             progressed |= resolve_pendings(conn, &coord);
@@ -298,6 +329,22 @@ fn reactor(listener: TcpListener, coord: Coordinator) -> Result<()> {
     }
     drop(conns);
     drop(listener);
+    if let Some(dir) = &snapshot_dir {
+        // save-on-shutdown: warm state survives the restart; a failed
+        // save loses warmth, never correctness, so report and proceed
+        match coord.snapshot_save(dir) {
+            Ok(r) => eprintln!(
+                "saved {} context(s), {} stream(s) to {}",
+                r.contexts,
+                r.monitors,
+                dir.display()
+            ),
+            Err(e) => eprintln!(
+                "warning: snapshot save to {} failed ({e:#})",
+                dir.display()
+            ),
+        }
+    }
     coord.shutdown();
     Ok(())
 }
@@ -309,6 +356,7 @@ fn service_reads(
     coord: &Coordinator,
     stop: &AtomicBool,
     snap: ReactorSnapshot,
+    snap_dir: Option<&Path>,
 ) -> bool {
     if conn.dead || conn.closing {
         return false;
@@ -375,7 +423,7 @@ fn service_reads(
                     "request line is not valid UTF-8",
                 )),
                 Ok(s) if s.trim().is_empty() => {}
-                Ok(s) => match dispatch(s.trim(), coord, stop, snap) {
+                Ok(s) => match dispatch(s.trim(), coord, stop, snap, snap_dir) {
                     Disposition::Reply(j) => conn.push_ready(j),
                     Disposition::Hello(j) => {
                         conn.frames_on = true;
@@ -575,7 +623,7 @@ fn flush(conn: &mut Conn) -> bool {
 /// Every `cmd` the dispatcher accepts, in `docs/PROTOCOL.md` order.
 /// `tests/docs_consistency.rs` asserts the protocol document covers each
 /// of these, so the list and the doc cannot drift apart.
-pub const COMMANDS: [&str; 14] = [
+pub const COMMANDS: [&str; 16] = [
     "hello",
     "submit",
     "batch",
@@ -589,6 +637,8 @@ pub const COMMANDS: [&str; 14] = [
     "append",
     "subscribe",
     "stream_close",
+    "snapshot_save",
+    "snapshot_restore",
     "shutdown",
 ];
 
@@ -610,6 +660,43 @@ fn check_fields(req: &Json, known: &[&str]) -> Result<(), Json> {
         }
     }
     Ok(())
+}
+
+/// Resolve the directory a `snapshot_save`/`snapshot_restore` request
+/// targets: an explicit `dir` field (which, being network-supplied,
+/// must stay **inside the service working directory** — relative, no
+/// `..` — the same containment `file:` datasets get), else the
+/// operator's `--snapshot-dir`.
+fn resolve_snapshot_dir(
+    req: &Json,
+    configured: Option<&Path>,
+) -> Result<PathBuf, Json> {
+    match req.get("dir") {
+        Some(d) => {
+            let Some(s) = d.as_str() else {
+                return Err(err_reply("field `dir` must be a string"));
+            };
+            let p = Path::new(s);
+            if p.as_os_str().is_empty()
+                || p.is_absolute()
+                || p.components()
+                    .any(|c| !matches!(c, Component::Normal(_) | Component::CurDir))
+            {
+                return Err(err_reply(
+                    "field `dir` must be a relative path inside the \
+                     service working directory (no absolute paths, no `..`)",
+                ));
+            }
+            Ok(p.to_path_buf())
+        }
+        None => match configured {
+            Some(d) => Ok(d.to_path_buf()),
+            None => Err(err_reply(
+                "no snapshot directory: pass `dir` or start the server \
+                 with `--snapshot-dir`",
+            )),
+        },
+    }
 }
 
 /// The `stream` field every streaming command addresses a monitor by.
@@ -638,6 +725,7 @@ fn dispatch(
     coord: &Coordinator,
     stop: &AtomicBool,
     snap: ReactorSnapshot,
+    snap_dir: Option<&Path>,
 ) -> Disposition {
     let req = match Json::parse(line) {
         Ok(v) => v,
@@ -793,7 +881,21 @@ fn dispatch(
                     .set("frames_rx", ing.frames_rx)
                     .set("points_rx", ing.points_rx)
                     .set("frames_shed", ing.frames_shed)
-                    .set("stream_queue_points", ing.queued_points),
+                    .set("stream_queue_points", ing.queued_points)
+                    .set("snapshot_saves", st.snapshot_saves)
+                    .set("snapshot_restores", st.snapshot_restores)
+                    .set(
+                        "snapshot_contexts_restored",
+                        st.snapshot_contexts_restored,
+                    )
+                    .set(
+                        "snapshot_streams_restored",
+                        st.snapshot_streams_restored,
+                    )
+                    .set(
+                        "snapshot_profiles_seeded",
+                        st.snapshot_profiles_seeded,
+                    ),
             )
         }
         Some("list") => {
@@ -960,6 +1062,32 @@ fn dispatch(
                         .set("stream", name)
                         .set("closed", true),
                 ),
+                Err(e) => reply(err_reply(&format!("{e:#}"))),
+            }
+        }
+        Some("snapshot_save") => {
+            if let Err(e) = check_fields(&req, &["cmd", "dir"]) {
+                return reply(e);
+            }
+            let dir = match resolve_snapshot_dir(&req, snap_dir) {
+                Ok(d) => d,
+                Err(e) => return reply(e),
+            };
+            match coord.snapshot_save(&dir) {
+                Ok(r) => reply(r.to_json().set("ok", true)),
+                Err(e) => reply(err_reply(&format!("{e:#}"))),
+            }
+        }
+        Some("snapshot_restore") => {
+            if let Err(e) = check_fields(&req, &["cmd", "dir"]) {
+                return reply(e);
+            }
+            let dir = match resolve_snapshot_dir(&req, snap_dir) {
+                Ok(d) => d,
+                Err(e) => return reply(e),
+            };
+            match coord.snapshot_restore(&dir) {
+                Ok(r) => reply(r.to_json().set("ok", true)),
                 Err(e) => reply(err_reply(&format!("{e:#}"))),
             }
         }

@@ -293,6 +293,75 @@ impl StreamRegistry {
         Ok(id)
     }
 
+    /// Snapshot every open stream's monitor, sorted by stream name so
+    /// save order (and thus snapshot-directory content) is
+    /// deterministic. Each monitor's lock is held only for the copy —
+    /// never across I/O — so a long refresh on one stream delays that
+    /// stream's snapshot, not the whole export.
+    pub fn export_monitors(&self) -> Vec<crate::snapshot::MonitorSnapshot> {
+        let entries: Vec<Arc<StreamEntry>> = {
+            let g = self.inner.streams.lock().unwrap();
+            let mut v: Vec<_> = g.by_name.values().map(Arc::clone).collect();
+            v.sort_by(|a, b| a.name.cmp(&b.name));
+            v
+        };
+        entries
+            .iter()
+            .map(|e| e.mon.lock().unwrap().snapshot())
+            .collect()
+    }
+
+    /// Install a restored monitor as an open stream, under exactly the
+    /// bounds [`open`](Self::open) enforces: the window cap (a snapshot
+    /// file must never size an allocation past what `stream_open`
+    /// admits), the duplicate-name check, and the registry capacity.
+    /// Returns the fresh numeric id (ids are not persisted — binary
+    /// senders re-learn them from `stream_open`-style replies).
+    pub fn install(&self, monitor: StreamingMonitor) -> Result<u32> {
+        let window = monitor.window_capacity();
+        anyhow::ensure!(
+            window <= MAX_STREAM_WINDOW,
+            "window {window} exceeds the per-stream cap of \
+             {MAX_STREAM_WINDOW} points"
+        );
+        let name = monitor.name().to_string();
+        let mut g = self.inner.streams.lock().unwrap();
+        if g.by_name.contains_key(&name) {
+            bail!("stream {name:?} is already open");
+        }
+        if g.by_name.len() >= self.inner.capacity {
+            bail!(
+                "stream registry full ({}/{}): close a stream first, or \
+                 raise `--max-streams`",
+                g.by_name.len(),
+                self.inner.capacity
+            );
+        }
+        let id = g.next_id;
+        g.next_id = g.next_id.wrapping_add(1).max(1);
+        let entry = Arc::new(StreamEntry {
+            id,
+            name: name.clone(),
+            queue: Mutex::new(IngestQueue {
+                batches: VecDeque::new(),
+                queued_points: 0,
+                capacity_points: window,
+                scheduled: false,
+                draining: false,
+            }),
+            mon: Mutex::new(monitor),
+            publish: Mutex::new(PubState {
+                last: None,
+                seq: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        });
+        g.by_name.insert(name, Arc::clone(&entry));
+        g.by_id.insert(id, entry);
+        Ok(id)
+    }
+
     /// The numeric id of an open stream (what `stream_open` replied).
     pub fn stream_id(&self, name: &str) -> Option<u32> {
         self.inner
@@ -902,6 +971,42 @@ mod tests {
         // accounting) must be bit-identical
         assert_eq!(offloaded.len(), inline.len());
         assert_eq!(offloaded, inline);
+    }
+
+    #[test]
+    fn export_install_roundtrip_preserves_warm_streams() {
+        let r = registry();
+        open(&r, "b");
+        open(&r, "a");
+        let pts = generators::sine_with_noise(400, 0.3, 25);
+        r.append("a", &pts).unwrap();
+        r.append("b", &pts).unwrap();
+
+        let snaps = r.export_monitors();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[0].name, "a", "export order is by name");
+        assert_eq!(snaps[1].name, "b");
+        assert!(snaps[0].warm);
+
+        let r2 = registry();
+        for snap in snaps {
+            let mon = StreamingMonitor::from_snapshot(snap).unwrap();
+            r2.install(mon).unwrap();
+        }
+        assert_eq!(r2.len(), 2);
+        // the restored stream continues warm: its next request-end
+        // refresh carries the snapshot's profile (prep_calls == 0)
+        let more = generators::sine_with_noise(50, 0.3, 26);
+        let ups = r2.append("a", &more).unwrap();
+        assert_eq!(ups.len(), 1);
+        assert_eq!(ups[0].get("warm").unwrap().as_bool(), Some(true));
+        assert_eq!(ups[0].get("prep_calls").unwrap().as_u64(), Some(0));
+        assert_eq!(ups[0].get("refresh").unwrap().as_u64(), Some(2));
+        // install re-checks open()'s bounds: duplicates are refused
+        let dup = StreamingMonitor::new(SearchParams::new(32, 4, 4), 300)
+            .unwrap()
+            .with_name("a");
+        assert!(r2.install(dup).is_err());
     }
 
     #[test]

@@ -1,0 +1,288 @@
+//! Context snapshots: the warm [`NndProfile`] cache of one
+//! [`SearchContext`](crate::context::SearchContext), bound to its series
+//! by a [`SeriesFingerprint`].
+//!
+//! Layout (after the file header): one `fingerprint` section carrying the
+//! context's cache key (dataset spec, scale divisor, SAX params) and the
+//! series identity, then one `profile` section per cached
+//! `(s, DistanceKind, allow_self_match)` entry. Profiles are written in
+//! sorted key order so encoding is deterministic — the same warm state
+//! always produces the same bytes, which is what lets a `.hsts` golden
+//! fixture pin the format.
+
+use crate::config::SaxParams;
+use crate::discord::{NndProfile, NO_NEIGHBOR};
+use crate::dist::DistanceKind;
+
+use super::{
+    assemble, decode_sections, distance_kind_code, distance_kind_from_code,
+    expect_section, push_section, push_string, push_u64, Reader, SeriesFingerprint,
+    SnapshotError, SnapshotKind, MAX_POINTS, TAG_FINGERPRINT, TAG_PROFILE,
+};
+
+/// One cached warm profile and the cache key it lives under.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileEntry {
+    /// Sequence length the profile covers.
+    pub s: usize,
+    /// Distance the bounds were evaluated under.
+    pub kind: DistanceKind,
+    /// Whether trivial self-matches were allowed.
+    pub allow_self_match: bool,
+    /// The exact-upper-bound profile itself.
+    pub profile: NndProfile,
+}
+
+/// A [`SearchContext`](crate::context::SearchContext)'s durable warm
+/// state, plus the coordinator cache key needed to rebuild the context it
+/// belongs to on restore.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ContextSnapshot {
+    /// Dataset spec (registry name or `synthetic:` spec) the service
+    /// rebuilds the series from.
+    pub dataset: String,
+    /// Length divisor the series was generated at.
+    pub scale_div: u64,
+    /// SAX params of the coordinator cache key.
+    pub sax: SaxParams,
+    /// Identity of the exact series the profiles were computed on.
+    pub fingerprint: SeriesFingerprint,
+    /// The cached profiles, one per `(s, kind, allow_self_match)` key.
+    pub profiles: Vec<ProfileEntry>,
+}
+
+impl ContextSnapshot {
+    /// Refuse to warm `points` unless they fingerprint identically to the
+    /// series this snapshot was computed on.
+    pub fn check_series(&self, points: &[f64]) -> Result<(), SnapshotError> {
+        let found = SeriesFingerprint::of(points);
+        if found != self.fingerprint {
+            return Err(SnapshotError::FingerprintMismatch {
+                expected: self.fingerprint,
+                found,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Encode a context snapshot. Profiles are sorted by key so the output
+/// is byte-deterministic regardless of cache iteration order.
+pub fn encode_context(snap: &ContextSnapshot) -> Vec<u8> {
+    let mut profiles: Vec<&ProfileEntry> = snap.profiles.iter().collect();
+    profiles.sort_by_key(|e| (e.s, distance_kind_code(e.kind), e.allow_self_match));
+
+    let mut body = Vec::new();
+    let mut fp = Vec::new();
+    push_string(&mut fp, &snap.dataset);
+    push_u64(&mut fp, snap.scale_div);
+    push_u64(&mut fp, snap.sax.s as u64);
+    push_u64(&mut fp, snap.sax.p as u64);
+    push_u64(&mut fp, snap.sax.alphabet as u64);
+    push_u64(&mut fp, snap.fingerprint.len);
+    push_u64(&mut fp, snap.fingerprint.hash);
+    push_section(&mut body, TAG_FINGERPRINT, &fp);
+
+    for entry in &profiles {
+        let mut p = Vec::new();
+        push_u64(&mut p, entry.s as u64);
+        p.push(distance_kind_code(entry.kind));
+        p.push(entry.allow_self_match as u8);
+        push_u64(&mut p, entry.profile.nnd.len() as u64);
+        for &v in &entry.profile.nnd {
+            push_u64(&mut p, v.to_bits());
+        }
+        for &g in &entry.profile.ngh {
+            push_u64(&mut p, g as u64);
+        }
+        push_section(&mut body, TAG_PROFILE, &p);
+    }
+
+    assemble(SnapshotKind::Context, 1 + profiles.len() as u32, body)
+}
+
+/// Decode a context snapshot, validating every field by name. Neighbor
+/// entries must be in-range or the `u64::MAX` no-neighbor sentinel, and
+/// the two profile vectors must agree in length — a file that decodes is
+/// structurally safe to install.
+pub fn decode_context(bytes: &[u8]) -> Result<ContextSnapshot, SnapshotError> {
+    let (kind, _) = super::decode_header(bytes)?;
+    if kind != SnapshotKind::Context {
+        return Err(SnapshotError::SectionOrder {
+            expected: "fingerprint",
+            found: "monitor_meta",
+        });
+    }
+    let sections = decode_sections(bytes)?;
+
+    let fp = expect_section(&sections, 0, TAG_FINGERPRINT)?;
+    let mut r = Reader::new(fp.payload);
+    let dataset = r.string("dataset")?;
+    let scale_div = r.u64()?;
+    let sax = read_sax(&mut r)?;
+    let fingerprint = SeriesFingerprint {
+        len: r.u64()?,
+        hash: r.u64()?,
+    };
+    r.finish("fingerprint")?;
+
+    let mut profiles = Vec::with_capacity(sections.len() - 1);
+    for i in 1..sections.len() {
+        let sec = expect_section(&sections, i, TAG_PROFILE)?;
+        let mut r = Reader::new(sec.payload);
+        let s = r.u64()?;
+        if s == 0 || s > MAX_POINTS {
+            return Err(SnapshotError::Inconsistent {
+                field: "profile s",
+                detail: format!("sequence length {s} is outside (0, {MAX_POINTS}]"),
+            });
+        }
+        let kind = distance_kind_from_code(r.u8()?)?;
+        let allow_self_match = match r.u8()? {
+            0 => false,
+            1 => true,
+            other => {
+                return Err(SnapshotError::Inconsistent {
+                    field: "allow_self_match",
+                    detail: format!("flag byte is {other}, must be 0 or 1"),
+                })
+            }
+        };
+        let n = r.count("profile nnd", 16)?;
+        let nnd = r.f64_bits(n)?;
+        let ngh_raw = r.u64_vec(n)?;
+        r.finish("profile")?;
+        let mut ngh = Vec::with_capacity(n);
+        for &g in &ngh_raw {
+            if g == u64::MAX {
+                ngh.push(NO_NEIGHBOR);
+            } else if (g as usize) < n {
+                ngh.push(g as usize);
+            } else {
+                return Err(SnapshotError::Inconsistent {
+                    field: "profile ngh",
+                    detail: format!("neighbor {g} is outside the {n}-sequence profile"),
+                });
+            }
+        }
+        profiles.push(ProfileEntry {
+            s: s as usize,
+            kind,
+            allow_self_match,
+            profile: NndProfile { nnd, ngh },
+        });
+    }
+
+    Ok(ContextSnapshot {
+        dataset,
+        scale_div,
+        sax,
+        fingerprint,
+        profiles,
+    })
+}
+
+fn read_sax(r: &mut Reader<'_>) -> Result<SaxParams, SnapshotError> {
+    let s = r.u64()?;
+    let p = r.u64()?;
+    let alphabet = r.u64()?;
+    if s == 0 || s > MAX_POINTS || p == 0 || p > s || alphabet == 0 || alphabet > 256 {
+        return Err(SnapshotError::Inconsistent {
+            field: "sax",
+            detail: format!("s={s} p={p} alphabet={alphabet} is not a valid SAX triple"),
+        });
+    }
+    let sax = SaxParams {
+        s: s as usize,
+        p: p as usize,
+        alphabet: alphabet as usize,
+    };
+    sax.validate().map_err(|detail| SnapshotError::Inconsistent {
+        field: "sax",
+        detail,
+    })?;
+    Ok(sax)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::discord::NND_INIT;
+
+    fn sample() -> ContextSnapshot {
+        let mut profile = NndProfile::new(6);
+        profile.observe(0, 3, 1.25);
+        profile.observe(1, 4, f64::MIN_POSITIVE);
+        profile.nnd[5] = -0.0; // awkward bit patterns must survive
+        profile.ngh[5] = 2;
+        ContextSnapshot {
+            dataset: "ECG 108".to_string(),
+            scale_div: 8,
+            sax: SaxParams { s: 96, p: 4, alphabet: 4 },
+            fingerprint: SeriesFingerprint { len: 1500, hash: 0xDEAD_BEEF_1234_5678 },
+            profiles: vec![ProfileEntry {
+                s: 96,
+                kind: DistanceKind::Znorm,
+                allow_self_match: false,
+                profile,
+            }],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise() {
+        let snap = sample();
+        let bytes = encode_context(&snap);
+        let back = decode_context(&bytes).expect("roundtrip");
+        assert_eq!(back.dataset, snap.dataset);
+        assert_eq!(back.scale_div, snap.scale_div);
+        assert_eq!(back.sax, snap.sax);
+        assert_eq!(back.fingerprint, snap.fingerprint);
+        assert_eq!(back.profiles.len(), 1);
+        let (a, b) = (&snap.profiles[0].profile, &back.profiles[0].profile);
+        for i in 0..a.nnd.len() {
+            assert_eq!(a.nnd[i].to_bits(), b.nnd[i].to_bits(), "nnd[{i}] bits");
+            assert_eq!(a.ngh[i], b.ngh[i]);
+        }
+        assert_eq!(b.nnd[2].to_bits(), NND_INIT.to_bits(), "inf sentinel survives");
+    }
+
+    #[test]
+    fn encoding_is_deterministic_under_profile_order() {
+        let mut snap = sample();
+        let mut second = snap.profiles[0].clone();
+        second.s = 48;
+        second.kind = DistanceKind::Raw;
+        snap.profiles.push(second);
+        let a = encode_context(&snap);
+        snap.profiles.reverse();
+        let b = encode_context(&snap);
+        assert_eq!(a, b, "profile iteration order must not leak into bytes");
+    }
+
+    #[test]
+    fn out_of_range_neighbor_is_named() {
+        let mut snap = sample();
+        snap.profiles[0].profile.ngh[0] = 1_000; // > n = 6
+        let bytes = encode_context(&snap);
+        let err = decode_context(&bytes).unwrap_err();
+        assert!(
+            matches!(err, SnapshotError::Inconsistent { field: "profile ngh", .. }),
+            "got {err:?}"
+        );
+        assert!(err.to_string().contains("`profile ngh`"));
+    }
+
+    #[test]
+    fn fingerprint_guard_refuses_other_series() {
+        let points: Vec<f64> = (0..1500).map(|i| i as f64).collect();
+        let mut snap = sample();
+        snap.fingerprint = SeriesFingerprint::of(&points);
+        assert!(snap.check_series(&points).is_ok());
+        let mut other = points.clone();
+        other[700] += 1.0e-9;
+        let err = snap.check_series(&other).unwrap_err();
+        assert!(matches!(err, SnapshotError::FingerprintMismatch { .. }));
+        assert!(err.to_string().contains("`fingerprint`"));
+    }
+}

@@ -1,0 +1,892 @@
+//! Durable warm state: the versioned `.hsts` snapshot codec.
+//!
+//! Everything the paper's warm-up machinery earns — the exactly-evaluated
+//! [`NndProfile`](crate::discord::NndProfile) upper bounds in a
+//! [`SearchContext`](crate::context::SearchContext) and the rolling window
+//! state of a [`StreamingMonitor`](crate::stream::StreamingMonitor) — dies
+//! with the process today. This module gives that state a durable binary
+//! form so a restarted service resumes *warm*: a restore-then-refresh is
+//! bit-identical to the run that never stopped, with `prep_calls == 0` and
+//! strictly fewer distance calls than a cold restart (ROADMAP item 3b).
+//!
+//! # Format
+//!
+//! A snapshot file follows the [`crate::service::frame`] conventions —
+//! little-endian, a fixed header validated before any payload allocation,
+//! every decode failure a **named** [`SnapshotError`], never a panic:
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic          0xB5 0x53
+//! 2       1     version        1
+//! 3       1     kind           context = 1 | monitor = 2
+//! 4       4     section_count  u32 LE
+//! 8       8     payload_len    u64 LE (bytes after this 16-byte header)
+//! ```
+//!
+//! The payload is `section_count` back-to-back sections, each:
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     tag            u16 LE (see the section tags below)
+//! 2       2     reserved       must be 0
+//! 4       4     payload_len    u32 LE
+//! 8       4     crc32          u32 LE (IEEE, over the section payload)
+//! 12      …     payload
+//! ```
+//!
+//! Floats travel as raw `u64` bit patterns, so NaN payloads, `-0.0`, and
+//! the `+inf` init sentinel survive a round trip bit for bit — the same
+//! property the golden conformance snapshots pin with `{:016x}` hex.
+//! Every section is CRC-protected; every length is checked against a hard
+//! cap *and* the remaining input before a vector is allocated, so a
+//! corrupted or hostile length can never drive an unbounded allocation.
+//!
+//! # Trust boundary
+//!
+//! The CRC + [`SeriesFingerprint`] catch corruption and
+//! wrong-series restores; they do not make a snapshot *author* trusted. A
+//! deliberately crafted profile with understated nnd entries would violate
+//! the exactness invariant, so snapshot directories deserve the same trust
+//! as the binary itself.
+
+pub mod context;
+pub mod monitor;
+pub mod store;
+
+pub use context::{decode_context, encode_context, ContextSnapshot, ProfileEntry};
+pub use monitor::{decode_monitor, encode_monitor, MonitorSnapshot};
+pub use store::{inspect, SectionInfo, Snapshot, SnapshotSummary};
+
+use crate::dist::{DistanceKind, Kernel};
+
+/// Snapshot file magic: `0xB5` (same first byte as the service frame
+/// codec, top bit set so a text line can never alias it) then `0x53`
+/// (ASCII `S` for snapshot; frames use `0x48`).
+pub const SNAPSHOT_MAGIC: [u8; 2] = [0xB5, 0x53];
+
+/// Snapshot format version. Any layout change bumps this; old readers
+/// reject newer files with [`SnapshotError::BadVersion`] instead of
+/// misreading them.
+pub const SNAPSHOT_VERSION: u8 = 1;
+
+/// File header length in bytes (validated before any payload read).
+pub const SNAPSHOT_HEADER_LEN: usize = 16;
+
+/// Per-section header length in bytes.
+pub const SECTION_HEADER_LEN: usize = 12;
+
+/// Canonical file extension for snapshot files.
+pub const SNAPSHOT_EXT: &str = "hsts";
+
+/// Hard cap on a whole snapshot payload (sections + bodies).
+pub const MAX_SNAPSHOT_LEN: u64 = 256 * 1024 * 1024;
+
+/// Hard cap on one section payload.
+pub const MAX_SECTION_LEN: u32 = 32 * 1024 * 1024;
+
+/// Hard cap on the number of sections in one file.
+pub const MAX_SECTIONS: u32 = 4096;
+
+/// Hard cap on one serialized vector's element count (matches the
+/// service-layer `MAX_STREAM_WINDOW` bound with headroom).
+pub const MAX_POINTS: u64 = 2 * 1024 * 1024;
+
+/// What a snapshot file carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SnapshotKind {
+    /// A [`SearchContext`](crate::context::SearchContext) warm-profile
+    /// cache, fingerprint-bound to its series.
+    Context,
+    /// A full [`StreamingMonitor`](crate::stream::StreamingMonitor)
+    /// state: window deques, offsets, rolling stats, warm profile.
+    Monitor,
+}
+
+impl SnapshotKind {
+    /// Every defined kind, for sweeping tests and docs.
+    pub const ALL: [SnapshotKind; 2] = [SnapshotKind::Context, SnapshotKind::Monitor];
+
+    /// Wire code of this kind.
+    pub fn code(self) -> u8 {
+        match self {
+            SnapshotKind::Context => 1,
+            SnapshotKind::Monitor => 2,
+        }
+    }
+
+    /// Human-readable name (stable; used by `hst snapshot inspect`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SnapshotKind::Context => "context",
+            SnapshotKind::Monitor => "monitor",
+        }
+    }
+
+    /// Decode a wire code.
+    pub fn from_code(code: u8) -> Option<SnapshotKind> {
+        match code {
+            1 => Some(SnapshotKind::Context),
+            2 => Some(SnapshotKind::Monitor),
+            _ => None,
+        }
+    }
+}
+
+// Section tags. Context sections first, monitor sections from 0x0010.
+pub(crate) const TAG_FINGERPRINT: u16 = 0x0001;
+pub(crate) const TAG_PROFILE: u16 = 0x0002;
+pub(crate) const TAG_MONITOR_META: u16 = 0x0010;
+pub(crate) const TAG_MONITOR_WINDOW: u16 = 0x0011;
+pub(crate) const TAG_MONITOR_STATS: u16 = 0x0012;
+pub(crate) const TAG_MONITOR_WORDS: u16 = 0x0013;
+pub(crate) const TAG_MONITOR_PROFILE: u16 = 0x0014;
+
+/// Stable name of a section tag, if the tag is defined.
+pub fn tag_name(tag: u16) -> Option<&'static str> {
+    match tag {
+        TAG_FINGERPRINT => Some("fingerprint"),
+        TAG_PROFILE => Some("profile"),
+        TAG_MONITOR_META => Some("monitor_meta"),
+        TAG_MONITOR_WINDOW => Some("monitor_window"),
+        TAG_MONITOR_STATS => Some("monitor_stats"),
+        TAG_MONITOR_WORDS => Some("monitor_words"),
+        TAG_MONITOR_PROFILE => Some("monitor_profile"),
+        _ => None,
+    }
+}
+
+/// Every way a snapshot decode or restore can fail. Each variant names
+/// the offending field — corruption must surface as one of these, never
+/// as a panic or a silently-warm state.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SnapshotError {
+    /// The first two bytes are not [`SNAPSHOT_MAGIC`].
+    BadMagic {
+        /// The bytes found instead.
+        found: [u8; 2],
+    },
+    /// The version byte is not [`SNAPSHOT_VERSION`].
+    BadVersion {
+        /// The version byte found.
+        found: u8,
+    },
+    /// The kind byte maps to no [`SnapshotKind`].
+    BadKind {
+        /// The kind byte found.
+        found: u8,
+    },
+    /// A declared length exceeds its hard cap (rejected before any
+    /// allocation).
+    Oversized {
+        /// Which length field overflowed.
+        field: &'static str,
+        /// The declared value.
+        len: u64,
+        /// The cap it violated.
+        max: u64,
+    },
+    /// The input ends before a declared structure.
+    Truncated {
+        /// Bytes the decoder needed.
+        needed: usize,
+        /// Bytes actually available.
+        have: usize,
+    },
+    /// Bytes remain after the declared payload.
+    TrailingBytes {
+        /// How many undeclared bytes follow.
+        extra: usize,
+    },
+    /// The header declares more sections than [`MAX_SECTIONS`].
+    SectionCount {
+        /// The declared section count.
+        declared: u32,
+    },
+    /// A section tag maps to no defined section.
+    BadSectionTag {
+        /// The tag found.
+        found: u16,
+    },
+    /// A known section appeared where the kind's layout expects another.
+    SectionOrder {
+        /// The section the layout expects here.
+        expected: &'static str,
+        /// The section actually found.
+        found: &'static str,
+    },
+    /// A section's reserved bytes are not zero.
+    BadReserved {
+        /// The reserved value found.
+        found: u16,
+    },
+    /// A section payload failed its CRC32 check.
+    BadChecksum {
+        /// Which section failed.
+        section: &'static str,
+        /// CRC stored in the section header.
+        stored: u32,
+        /// CRC computed over the payload.
+        computed: u32,
+    },
+    /// A distance-kind code maps to no [`DistanceKind`].
+    BadDistanceKind {
+        /// The code found.
+        found: u8,
+    },
+    /// A kernel code maps to no [`Kernel`].
+    BadKernel {
+        /// The code found.
+        found: u8,
+    },
+    /// The embedded search params failed strict JSON validation.
+    BadParams {
+        /// The validator's message.
+        detail: String,
+    },
+    /// A string field is not valid UTF-8.
+    BadUtf8 {
+        /// Which field failed.
+        field: &'static str,
+    },
+    /// Decoded fields violate a cross-field invariant (e.g. deque
+    /// lengths that cannot describe one window).
+    Inconsistent {
+        /// Which field is inconsistent.
+        field: &'static str,
+        /// What relationship it violates.
+        detail: String,
+    },
+    /// The snapshot's series fingerprint does not match the series it
+    /// was asked to warm — restoring would seed bounds for the wrong
+    /// data, so the restore is refused.
+    FingerprintMismatch {
+        /// Fingerprint stored in the snapshot.
+        expected: SeriesFingerprint,
+        /// Fingerprint of the series offered at restore.
+        found: SeriesFingerprint,
+    },
+}
+
+impl std::fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnapshotError::BadMagic { found } => write!(
+                f,
+                "snapshot field `magic` is {found:02x?}, expected {SNAPSHOT_MAGIC:02x?}"
+            ),
+            SnapshotError::BadVersion { found } => write!(
+                f,
+                "snapshot field `version` is {found}, this build reads version \
+                 {SNAPSHOT_VERSION}"
+            ),
+            SnapshotError::BadKind { found } => {
+                write!(f, "snapshot field `kind` is {found}, not a defined snapshot kind")
+            }
+            SnapshotError::Oversized { field, len, max } => write!(
+                f,
+                "snapshot field `{field}` declares {len}, above the cap of {max}"
+            ),
+            SnapshotError::Truncated { needed, have } => write!(
+                f,
+                "snapshot truncated: field `payload` needs {needed} bytes, only \
+                 {have} present"
+            ),
+            SnapshotError::TrailingBytes { extra } => write!(
+                f,
+                "snapshot field `payload_len` leaves {extra} undeclared trailing bytes"
+            ),
+            SnapshotError::SectionCount { declared } => write!(
+                f,
+                "snapshot field `section_count` is {declared}, above the cap of \
+                 {MAX_SECTIONS}"
+            ),
+            SnapshotError::BadSectionTag { found } => write!(
+                f,
+                "snapshot field `tag` is {found:#06x}, not a defined section tag"
+            ),
+            SnapshotError::SectionOrder { expected, found } => write!(
+                f,
+                "snapshot field `tag` holds section `{found}` where the layout \
+                 expects `{expected}`"
+            ),
+            SnapshotError::BadReserved { found } => write!(
+                f,
+                "snapshot field `reserved` is {found}, must be 0"
+            ),
+            SnapshotError::BadChecksum {
+                section,
+                stored,
+                computed,
+            } => write!(
+                f,
+                "snapshot field `crc32` of section `{section}` is {stored:#010x}, \
+                 payload hashes to {computed:#010x}"
+            ),
+            SnapshotError::BadDistanceKind { found } => write!(
+                f,
+                "snapshot field `distance_kind` is {found}, not a defined kind"
+            ),
+            SnapshotError::BadKernel { found } => {
+                write!(f, "snapshot field `kernel` is {found}, not a defined kernel")
+            }
+            SnapshotError::BadParams { detail } => {
+                write!(f, "snapshot field `params` failed validation: {detail}")
+            }
+            SnapshotError::BadUtf8 { field } => {
+                write!(f, "snapshot field `{field}` is not valid UTF-8")
+            }
+            SnapshotError::Inconsistent { field, detail } => {
+                write!(f, "snapshot field `{field}` is inconsistent: {detail}")
+            }
+            SnapshotError::FingerprintMismatch { expected, found } => write!(
+                f,
+                "snapshot field `fingerprint` is len={} hash={:016x}, the offered \
+                 series is len={} hash={:016x} — refusing to warm the wrong series",
+                expected.len, expected.hash, found.len, found.hash
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+/// Identity of the series a context snapshot may warm: point count plus
+/// an FNV-1a hash over the raw `f64` bit patterns. Two series that differ
+/// in any bit of any point fingerprint differently, so a snapshot can
+/// never silently seed bounds for data it was not computed on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeriesFingerprint {
+    /// Number of points.
+    pub len: u64,
+    /// FNV-1a 64-bit hash over each point's little-endian bit pattern.
+    pub hash: u64,
+}
+
+impl SeriesFingerprint {
+    /// Fingerprint a series.
+    pub fn of(points: &[f64]) -> SeriesFingerprint {
+        let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+        for &p in points {
+            for b in p.to_bits().to_le_bytes() {
+                hash ^= b as u64;
+                hash = hash.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        }
+        SeriesFingerprint {
+            len: points.len() as u64,
+            hash,
+        }
+    }
+}
+
+/// CRC32 (IEEE polynomial, reflected — the zlib/PNG variant), bitwise so
+/// the crate stays dependency-free.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Wire code of a [`DistanceKind`].
+pub fn distance_kind_code(kind: DistanceKind) -> u8 {
+    match kind {
+        DistanceKind::Znorm => 1,
+        DistanceKind::Raw => 2,
+    }
+}
+
+/// Decode a [`DistanceKind`] wire code.
+pub fn distance_kind_from_code(code: u8) -> Result<DistanceKind, SnapshotError> {
+    match code {
+        1 => Ok(DistanceKind::Znorm),
+        2 => Ok(DistanceKind::Raw),
+        other => Err(SnapshotError::BadDistanceKind { found: other }),
+    }
+}
+
+/// Wire code of a [`Kernel`].
+pub fn kernel_code(kernel: Kernel) -> u8 {
+    match kernel {
+        Kernel::Scalar => 1,
+        Kernel::Simd => 2,
+    }
+}
+
+/// Decode a [`Kernel`] wire code.
+pub fn kernel_from_code(code: u8) -> Result<Kernel, SnapshotError> {
+    match code {
+        1 => Ok(Kernel::Scalar),
+        2 => Ok(Kernel::Simd),
+        other => Err(SnapshotError::BadKernel { found: other }),
+    }
+}
+
+// ---------------------------------------------------------------------
+// wire primitives shared by the context and monitor codecs
+// ---------------------------------------------------------------------
+
+/// Bounds-checked little-endian reader over a byte slice. Every read
+/// fails with [`SnapshotError::Truncated`] instead of slicing past the
+/// end, and nothing here allocates.
+pub(crate) struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub(crate) fn need(&self, n: usize) -> Result<(), SnapshotError> {
+        match self.pos.checked_add(n) {
+            Some(end) if end <= self.buf.len() => Ok(()),
+            _ => Err(SnapshotError::Truncated {
+                needed: self.pos.saturating_add(n),
+                have: self.buf.len(),
+            }),
+        }
+    }
+
+    pub(crate) fn bytes(&mut self, n: usize) -> Result<&'a [u8], SnapshotError> {
+        self.need(n)?;
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8, SnapshotError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    pub(crate) fn u16(&mut self) -> Result<u16, SnapshotError> {
+        let b = self.bytes(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32, SnapshotError> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64, SnapshotError> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    /// Element count for a vector about to be read: capped, and the
+    /// bytes it implies must actually be present *before* allocating.
+    pub(crate) fn count(
+        &mut self,
+        field: &'static str,
+        elem_bytes: usize,
+    ) -> Result<usize, SnapshotError> {
+        let n = self.u64()?;
+        if n > MAX_POINTS {
+            return Err(SnapshotError::Oversized {
+                field,
+                len: n,
+                max: MAX_POINTS,
+            });
+        }
+        let n = n as usize;
+        self.need(n.saturating_mul(elem_bytes))?;
+        Ok(n)
+    }
+
+    /// `n` raw f64 bit patterns (no float math — bits survive verbatim).
+    pub(crate) fn f64_bits(&mut self, n: usize) -> Result<Vec<f64>, SnapshotError> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f64::from_bits(self.u64()?));
+        }
+        Ok(out)
+    }
+
+    pub(crate) fn u64_vec(&mut self, n: usize) -> Result<Vec<u64>, SnapshotError> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    /// A length-prefixed UTF-8 string (u16 length).
+    pub(crate) fn string(&mut self, field: &'static str) -> Result<String, SnapshotError> {
+        let n = self.u16()? as usize;
+        let raw = self.bytes(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| SnapshotError::BadUtf8 { field })
+    }
+
+    /// The section payload must be fully consumed — leftover bytes mean
+    /// the writer and reader disagree about the layout.
+    pub(crate) fn finish(&self, field: &'static str) -> Result<(), SnapshotError> {
+        if self.remaining() != 0 {
+            return Err(SnapshotError::Inconsistent {
+                field,
+                detail: format!("{} undeclared bytes at the section tail", self.remaining()),
+            });
+        }
+        Ok(())
+    }
+}
+
+pub(crate) fn push_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn push_string(out: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    debug_assert!(bytes.len() <= u16::MAX as usize);
+    push_u16(out, bytes.len().min(u16::MAX as usize) as u16);
+    out.extend_from_slice(&bytes[..bytes.len().min(u16::MAX as usize)]);
+}
+
+/// Append one CRC-protected section.
+pub(crate) fn push_section(out: &mut Vec<u8>, tag: u16, payload: &[u8]) {
+    debug_assert!(payload.len() <= MAX_SECTION_LEN as usize);
+    push_u16(out, tag);
+    push_u16(out, 0); // reserved
+    push_u32(out, payload.len() as u32);
+    push_u32(out, crc32(payload));
+    out.extend_from_slice(payload);
+}
+
+/// Assemble a complete snapshot file from its sections body.
+pub(crate) fn assemble(kind: SnapshotKind, section_count: u32, body: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(SNAPSHOT_HEADER_LEN + body.len());
+    out.extend_from_slice(&SNAPSHOT_MAGIC);
+    out.push(SNAPSHOT_VERSION);
+    out.push(kind.code());
+    push_u32(&mut out, section_count);
+    push_u64(&mut out, body.len() as u64);
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Decode and validate the 16-byte file header: magic, version, kind,
+/// section count and payload length (both capped, and the payload length
+/// must match the input exactly — short is [`SnapshotError::Truncated`],
+/// long is [`SnapshotError::TrailingBytes`]).
+pub fn decode_header(bytes: &[u8]) -> Result<(SnapshotKind, u32), SnapshotError> {
+    if bytes.len() < SNAPSHOT_HEADER_LEN {
+        return Err(SnapshotError::Truncated {
+            needed: SNAPSHOT_HEADER_LEN,
+            have: bytes.len(),
+        });
+    }
+    let magic = [bytes[0], bytes[1]];
+    if magic != SNAPSHOT_MAGIC {
+        return Err(SnapshotError::BadMagic { found: magic });
+    }
+    if bytes[2] != SNAPSHOT_VERSION {
+        return Err(SnapshotError::BadVersion { found: bytes[2] });
+    }
+    let kind = SnapshotKind::from_code(bytes[3])
+        .ok_or(SnapshotError::BadKind { found: bytes[3] })?;
+    let section_count = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+    if section_count > MAX_SECTIONS {
+        return Err(SnapshotError::SectionCount {
+            declared: section_count,
+        });
+    }
+    let payload_len = u64::from_le_bytes([
+        bytes[8], bytes[9], bytes[10], bytes[11], bytes[12], bytes[13], bytes[14],
+        bytes[15],
+    ]);
+    if payload_len > MAX_SNAPSHOT_LEN {
+        return Err(SnapshotError::Oversized {
+            field: "payload_len",
+            len: payload_len,
+            max: MAX_SNAPSHOT_LEN,
+        });
+    }
+    let have = (bytes.len() - SNAPSHOT_HEADER_LEN) as u64;
+    if have < payload_len {
+        return Err(SnapshotError::Truncated {
+            needed: SNAPSHOT_HEADER_LEN + payload_len as usize,
+            have: bytes.len(),
+        });
+    }
+    if have > payload_len {
+        return Err(SnapshotError::TrailingBytes {
+            extra: (have - payload_len) as usize,
+        });
+    }
+    Ok((kind, section_count))
+}
+
+/// The kind of a snapshot, from its header alone (used by restore-on-boot
+/// to dispatch files and by `hst snapshot inspect`).
+pub fn decode_kind(bytes: &[u8]) -> Result<SnapshotKind, SnapshotError> {
+    decode_header(bytes).map(|(kind, _)| kind)
+}
+
+/// One decoded section: its tag and CRC-verified payload.
+pub(crate) struct Section<'a> {
+    pub(crate) tag: u16,
+    pub(crate) payload: &'a [u8],
+    /// Byte offset of this section's header within the file.
+    pub(crate) offset: usize,
+}
+
+/// Walk the section table after [`decode_header`] accepted the file.
+/// Tags must be defined, reserved bytes zero, lengths capped and inside
+/// the input, and every payload must hash to its stored CRC.
+pub(crate) fn decode_sections(bytes: &[u8]) -> Result<Vec<Section<'_>>, SnapshotError> {
+    let (_, section_count) = decode_header(bytes)?;
+    let mut r = Reader::new(&bytes[SNAPSHOT_HEADER_LEN..]);
+    let mut out = Vec::with_capacity(section_count.min(64) as usize);
+    for _ in 0..section_count {
+        let offset = SNAPSHOT_HEADER_LEN + r.pos;
+        let tag = r.u16()?;
+        let name = tag_name(tag).ok_or(SnapshotError::BadSectionTag { found: tag })?;
+        let reserved = r.u16()?;
+        if reserved != 0 {
+            return Err(SnapshotError::BadReserved { found: reserved });
+        }
+        let len = r.u32()?;
+        if len > MAX_SECTION_LEN {
+            return Err(SnapshotError::Oversized {
+                field: "section payload_len",
+                len: len as u64,
+                max: MAX_SECTION_LEN as u64,
+            });
+        }
+        let stored = r.u32()?;
+        let payload = r.bytes(len as usize)?;
+        let computed = crc32(payload);
+        if stored != computed {
+            return Err(SnapshotError::BadChecksum {
+                section: name,
+                stored,
+                computed,
+            });
+        }
+        out.push(Section {
+            tag,
+            payload,
+            offset,
+        });
+    }
+    if r.remaining() != 0 {
+        return Err(SnapshotError::TrailingBytes {
+            extra: r.remaining(),
+        });
+    }
+    Ok(out)
+}
+
+/// Expect the next section to carry `tag`, by layout position.
+pub(crate) fn expect_section<'a, 'b>(
+    sections: &'b [Section<'a>],
+    index: usize,
+    tag: u16,
+) -> Result<&'b Section<'a>, SnapshotError> {
+    let expected = tag_name(tag).expect("expect_section called with a defined tag");
+    let Some(s) = sections.get(index) else {
+        return Err(SnapshotError::SectionOrder {
+            expected,
+            found: "end of file",
+        });
+    };
+    if s.tag != tag {
+        return Err(SnapshotError::SectionOrder {
+            expected,
+            found: tag_name(s.tag).unwrap_or("unknown"),
+        });
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // standard IEEE check value for "123456789"
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn fingerprint_separates_series_and_is_bit_sensitive() {
+        let a = SeriesFingerprint::of(&[1.0, 2.0, 3.0]);
+        let b = SeriesFingerprint::of(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, b);
+        let c = SeriesFingerprint::of(&[1.0, 2.0, 3.0000000000000004]);
+        assert_ne!(a.hash, c.hash, "one-ulp change must re-fingerprint");
+        // -0.0 and 0.0 are distinct bit patterns, so they must differ
+        assert_ne!(
+            SeriesFingerprint::of(&[0.0]).hash,
+            SeriesFingerprint::of(&[-0.0]).hash
+        );
+        assert_eq!(SeriesFingerprint::of(&[]).len, 0);
+    }
+
+    #[test]
+    fn header_rejects_each_field_by_name() {
+        let good = assemble(SnapshotKind::Context, 0, Vec::new());
+        assert_eq!(decode_header(&good), Ok((SnapshotKind::Context, 0)));
+
+        let mut bad = good.clone();
+        bad[0] = 0x00;
+        let err = decode_header(&bad).unwrap_err();
+        assert_eq!(err, SnapshotError::BadMagic { found: [0x00, 0x53] });
+        assert!(err.to_string().contains("`magic`"));
+
+        let mut bad = good.clone();
+        bad[2] = SNAPSHOT_VERSION + 1;
+        let err = decode_header(&bad).unwrap_err();
+        assert_eq!(
+            err,
+            SnapshotError::BadVersion {
+                found: SNAPSHOT_VERSION + 1
+            }
+        );
+        assert!(err.to_string().contains("`version`"));
+
+        let mut bad = good.clone();
+        bad[3] = 9;
+        assert_eq!(
+            decode_header(&bad).unwrap_err(),
+            SnapshotError::BadKind { found: 9 }
+        );
+
+        // short input: truncated by name, never a slice panic
+        assert_eq!(
+            decode_header(&good[..7]).unwrap_err(),
+            SnapshotError::Truncated {
+                needed: SNAPSHOT_HEADER_LEN,
+                have: 7
+            }
+        );
+
+        // an oversized payload_len is rejected from the header alone
+        let mut bad = good.clone();
+        bad[8..16].copy_from_slice(&(MAX_SNAPSHOT_LEN + 1).to_le_bytes());
+        assert!(matches!(
+            decode_header(&bad).unwrap_err(),
+            SnapshotError::Oversized {
+                field: "payload_len",
+                ..
+            }
+        ));
+
+        // undeclared trailing bytes are named, not ignored
+        let mut bad = good;
+        bad.push(0xAA);
+        assert_eq!(
+            decode_header(&bad).unwrap_err(),
+            SnapshotError::TrailingBytes { extra: 1 }
+        );
+    }
+
+    #[test]
+    fn sections_validate_reserved_len_and_crc() {
+        let mut body = Vec::new();
+        push_section(&mut body, TAG_FINGERPRINT, b"hello");
+        let n = body.len() as u64;
+        let mut file = assemble(SnapshotKind::Context, 1, body);
+        assert_eq!(file.len() as u64, SNAPSHOT_HEADER_LEN as u64 + n);
+        let sections = decode_sections(&file).expect("valid sections");
+        assert_eq!(sections.len(), 1);
+        assert_eq!(sections[0].payload, b"hello");
+        assert_eq!(sections[0].offset, SNAPSHOT_HEADER_LEN);
+
+        // flip one payload byte -> CRC failure names the section
+        let last = file.len() - 1;
+        file[last] ^= 0x01;
+        let err = decode_sections(&file).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                SnapshotError::BadChecksum {
+                    section: "fingerprint",
+                    ..
+                }
+            ),
+            "got {err:?}"
+        );
+        assert!(err.to_string().contains("`crc32`"));
+        file[last] ^= 0x01;
+
+        // corrupt the reserved bytes
+        file[SNAPSHOT_HEADER_LEN + 2] = 7;
+        assert_eq!(
+            decode_sections(&file).unwrap_err(),
+            SnapshotError::BadReserved { found: 7 }
+        );
+        file[SNAPSHOT_HEADER_LEN + 2] = 0;
+
+        // unknown tag
+        file[SNAPSHOT_HEADER_LEN] = 0xEE;
+        file[SNAPSHOT_HEADER_LEN + 1] = 0xEE;
+        assert_eq!(
+            decode_sections(&file).unwrap_err(),
+            SnapshotError::BadSectionTag { found: 0xEEEE }
+        );
+    }
+
+    #[test]
+    fn reader_never_reads_past_the_end() {
+        let mut r = Reader::new(&[1, 2, 3]);
+        assert_eq!(r.u16().unwrap(), 0x0201);
+        assert_eq!(
+            r.u64().unwrap_err(),
+            SnapshotError::Truncated { needed: 10, have: 3 }
+        );
+        // a huge declared count fails before allocating
+        let mut buf = Vec::new();
+        push_u64(&mut buf, u64::MAX);
+        let mut r = Reader::new(&buf);
+        assert!(matches!(
+            r.count("nnd", 8).unwrap_err(),
+            SnapshotError::Oversized { field: "nnd", .. }
+        ));
+    }
+
+    #[test]
+    fn codes_roundtrip() {
+        for kind in SnapshotKind::ALL {
+            assert_eq!(SnapshotKind::from_code(kind.code()), Some(kind));
+            assert!(!kind.name().is_empty());
+        }
+        for k in [DistanceKind::Znorm, DistanceKind::Raw] {
+            assert_eq!(distance_kind_from_code(distance_kind_code(k)).unwrap(), k);
+        }
+        for k in [Kernel::Scalar, Kernel::Simd] {
+            assert_eq!(kernel_from_code(kernel_code(k)).unwrap(), k);
+        }
+        assert_eq!(
+            distance_kind_from_code(0).unwrap_err(),
+            SnapshotError::BadDistanceKind { found: 0 }
+        );
+        assert_eq!(
+            kernel_from_code(9).unwrap_err(),
+            SnapshotError::BadKernel { found: 9 }
+        );
+    }
+}

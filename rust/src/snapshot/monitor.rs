@@ -1,0 +1,406 @@
+//! Monitor snapshots: the complete state of one
+//! [`StreamingMonitor`](crate::stream::StreamingMonitor) — window deque,
+//! global stream offset, rolling per-sequence stats, SAX words, and the
+//! shifted warm profile — so a restarted service resumes the stream
+//! mid-flight with zero re-preparation.
+//!
+//! Layout (after the file header): `monitor_meta`, `monitor_window`,
+//! `monitor_stats`, `monitor_words`, `monitor_profile`, in that order.
+//! Search params travel as their strict JSON form (the same
+//! [`SearchParams::from_json`] validator the service protocol uses), so a
+//! tampered params blob is rejected by name, not absorbed.
+
+use crate::config::SearchParams;
+use crate::dist::Kernel;
+use crate::sax::SaxWord;
+use crate::util::json::Json;
+
+use super::{
+    assemble, decode_sections, expect_section, kernel_code, kernel_from_code,
+    push_section, push_string, push_u64, Reader, SnapshotError, SnapshotKind,
+    TAG_MONITOR_META, TAG_MONITOR_PROFILE, TAG_MONITOR_STATS, TAG_MONITOR_WINDOW,
+    TAG_MONITOR_WORDS,
+};
+
+/// The full durable state of one streaming monitor. Field-for-field the
+/// monitor's own private state; [`validate`](Self::validate) checks the
+/// cross-field invariants that make the fields describe one coherent
+/// window, and `StreamingMonitor::from_snapshot` rebuilds a live monitor
+/// from a validated snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MonitorSnapshot {
+    /// Stream name (the service registry key).
+    pub name: String,
+    /// Search parameters the monitor refreshes with.
+    pub params: SearchParams,
+    /// Window capacity in points.
+    pub capacity: usize,
+    /// Auto-refresh cadence (0 = manual refresh only).
+    pub refresh_every: usize,
+    /// Distance kernel the monitor was running under. Restored verbatim
+    /// for field-bitwise roundtrips; the kernels are bit-identical by
+    /// construction, so this is a throughput knob, not a correctness one.
+    pub kernel: Kernel,
+    /// Window points, oldest first.
+    pub buf: Vec<f64>,
+    /// Global offset of `buf[0]` in the stream.
+    pub start: u64,
+    /// Rolling per-sequence means (one per in-window sequence).
+    pub stats_mean: Vec<f64>,
+    /// Rolling per-sequence standard deviations.
+    pub stats_std: Vec<f64>,
+    /// SAX word per in-window sequence.
+    pub words: Vec<SaxWord>,
+    /// Warm nnd bound per in-window sequence (window coordinates).
+    pub nnd: Vec<f64>,
+    /// Neighbor per bound, in *global* stream coordinates
+    /// (`u64::MAX` = none).
+    pub ngh: Vec<u64>,
+    /// Whether the profile has been refined by at least one refresh.
+    pub warm: bool,
+    /// Points ingested since the last refresh.
+    pub pending: usize,
+    /// Completed refreshes.
+    pub refreshes: u64,
+    /// Total distance calls across all refreshes.
+    pub total_calls: u64,
+}
+
+impl MonitorSnapshot {
+    /// Check the cross-field invariants: the capacity bound every live
+    /// monitor is constructed under, the window fitting its capacity, and
+    /// all five per-sequence vectors describing exactly the sequences the
+    /// window holds. A snapshot that fails here could never have come
+    /// from a live monitor, so restoring it is refused by name.
+    pub fn validate(&self) -> Result<(), SnapshotError> {
+        let s = self.params.sax.s;
+        if self.capacity < 2 * s {
+            return Err(SnapshotError::Inconsistent {
+                field: "capacity",
+                detail: format!(
+                    "window capacity {} cannot hold two length-{s} sequences",
+                    self.capacity
+                ),
+            });
+        }
+        if self.buf.len() > self.capacity {
+            return Err(SnapshotError::Inconsistent {
+                field: "window",
+                detail: format!(
+                    "window holds {} points, above its capacity {}",
+                    self.buf.len(),
+                    self.capacity
+                ),
+            });
+        }
+        let expected = if self.buf.len() >= s {
+            self.buf.len() - s + 1
+        } else {
+            0
+        };
+        for (field, len) in [
+            ("stats_mean", self.stats_mean.len()),
+            ("stats_std", self.stats_std.len()),
+            ("words", self.words.len()),
+            ("nnd", self.nnd.len()),
+            ("ngh", self.ngh.len()),
+        ] {
+            if len != expected {
+                return Err(SnapshotError::Inconsistent {
+                    field,
+                    detail: format!(
+                        "{len} entries for a {}-point window with {expected} sequences",
+                        self.buf.len()
+                    ),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Encode a monitor snapshot (deterministic: same state, same bytes).
+pub fn encode_monitor(snap: &MonitorSnapshot) -> Vec<u8> {
+    let mut body = Vec::new();
+
+    let mut meta = Vec::new();
+    push_string(&mut meta, &snap.name);
+    push_string(&mut meta, &snap.params.to_json().to_string());
+    push_u64(&mut meta, snap.capacity as u64);
+    push_u64(&mut meta, snap.refresh_every as u64);
+    meta.push(kernel_code(snap.kernel));
+    meta.push(snap.warm as u8);
+    push_u64(&mut meta, snap.start);
+    push_u64(&mut meta, snap.pending as u64);
+    push_u64(&mut meta, snap.refreshes);
+    push_u64(&mut meta, snap.total_calls);
+    push_section(&mut body, TAG_MONITOR_META, &meta);
+
+    let mut window = Vec::new();
+    push_u64(&mut window, snap.buf.len() as u64);
+    for &x in &snap.buf {
+        push_u64(&mut window, x.to_bits());
+    }
+    push_section(&mut body, TAG_MONITOR_WINDOW, &window);
+
+    let mut stats = Vec::new();
+    push_u64(&mut stats, snap.stats_mean.len() as u64);
+    for &m in &snap.stats_mean {
+        push_u64(&mut stats, m.to_bits());
+    }
+    push_u64(&mut stats, snap.stats_std.len() as u64);
+    for &sd in &snap.stats_std {
+        push_u64(&mut stats, sd.to_bits());
+    }
+    push_section(&mut body, TAG_MONITOR_STATS, &stats);
+
+    let mut words = Vec::new();
+    push_u64(&mut words, snap.words.len() as u64);
+    for w in &snap.words {
+        words.push(w.len() as u8);
+        words.extend_from_slice(w.symbols());
+    }
+    push_section(&mut body, TAG_MONITOR_WORDS, &words);
+
+    let mut profile = Vec::new();
+    push_u64(&mut profile, snap.nnd.len() as u64);
+    for &v in &snap.nnd {
+        push_u64(&mut profile, v.to_bits());
+    }
+    for &g in &snap.ngh {
+        push_u64(&mut profile, g);
+    }
+    push_section(&mut body, TAG_MONITOR_PROFILE, &profile);
+
+    assemble(SnapshotKind::Monitor, 5, body)
+}
+
+/// Decode and fully validate a monitor snapshot: sections in layout
+/// order, params through the strict JSON validator, and the cross-field
+/// invariants of [`MonitorSnapshot::validate`]. A decoded snapshot is
+/// safe to hand to `StreamingMonitor::from_snapshot`.
+pub fn decode_monitor(bytes: &[u8]) -> Result<MonitorSnapshot, SnapshotError> {
+    let sections = decode_sections(bytes)?;
+    let (kind, _) = super::decode_header(bytes)?;
+    if kind != SnapshotKind::Monitor {
+        return Err(SnapshotError::SectionOrder {
+            expected: "monitor_meta",
+            found: "fingerprint",
+        });
+    }
+
+    let meta = expect_section(&sections, 0, TAG_MONITOR_META)?;
+    let mut r = Reader::new(meta.payload);
+    let name = r.string("name")?;
+    let params_text = r.string("params")?;
+    let params_json = Json::parse(&params_text).map_err(|e| SnapshotError::BadParams {
+        detail: e.to_string(),
+    })?;
+    let params = SearchParams::from_json(&params_json)
+        .map_err(|detail| SnapshotError::BadParams { detail })?;
+    let capacity = r.u64()? as usize;
+    let refresh_every = r.u64()? as usize;
+    let kernel = kernel_from_code(r.u8()?)?;
+    let warm = match r.u8()? {
+        0 => false,
+        1 => true,
+        other => {
+            return Err(SnapshotError::Inconsistent {
+                field: "warm",
+                detail: format!("flag byte is {other}, must be 0 or 1"),
+            })
+        }
+    };
+    let start = r.u64()?;
+    let pending = r.u64()? as usize;
+    let refreshes = r.u64()?;
+    let total_calls = r.u64()?;
+    r.finish("monitor_meta")?;
+
+    let window = expect_section(&sections, 1, TAG_MONITOR_WINDOW)?;
+    let mut r = Reader::new(window.payload);
+    let n_buf = r.count("window", 8)?;
+    let buf = r.f64_bits(n_buf)?;
+    r.finish("monitor_window")?;
+
+    let stats = expect_section(&sections, 2, TAG_MONITOR_STATS)?;
+    let mut r = Reader::new(stats.payload);
+    let n_mean = r.count("stats_mean", 8)?;
+    let stats_mean = r.f64_bits(n_mean)?;
+    let n_std = r.count("stats_std", 8)?;
+    let stats_std = r.f64_bits(n_std)?;
+    r.finish("monitor_stats")?;
+
+    let words_sec = expect_section(&sections, 3, TAG_MONITOR_WORDS)?;
+    let mut r = Reader::new(words_sec.payload);
+    let n_words = r.count("words", 1)?;
+    let mut words = Vec::with_capacity(n_words);
+    for _ in 0..n_words {
+        let len = r.u8()? as usize;
+        if len > crate::sax::word::MAX_INLINE {
+            return Err(SnapshotError::Inconsistent {
+                field: "word",
+                detail: format!(
+                    "word length {len} exceeds the {}-symbol inline cap",
+                    crate::sax::word::MAX_INLINE
+                ),
+            });
+        }
+        words.push(SaxWord::new(r.bytes(len)?));
+    }
+    r.finish("monitor_words")?;
+
+    let profile = expect_section(&sections, 4, TAG_MONITOR_PROFILE)?;
+    let mut r = Reader::new(profile.payload);
+    let n_prof = r.count("nnd", 16)?;
+    let nnd = r.f64_bits(n_prof)?;
+    let ngh = r.u64_vec(n_prof)?;
+    r.finish("monitor_profile")?;
+
+    let snap = MonitorSnapshot {
+        name,
+        params,
+        capacity,
+        refresh_every,
+        kernel,
+        buf,
+        start,
+        stats_mean,
+        stats_std,
+        words,
+        nnd,
+        ngh,
+        warm,
+        pending,
+        refreshes,
+        total_calls,
+    };
+    snap.validate()?;
+    Ok(snap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MonitorSnapshot {
+        let s = 4;
+        let buf: Vec<f64> = (0..10).map(|i| (i as f64).sin()).collect();
+        let n = buf.len() - s + 1;
+        MonitorSnapshot {
+            name: "test-stream".to_string(),
+            params: SearchParams::new(s, 2, 4).with_discords(2).with_seed(7),
+            capacity: 16,
+            refresh_every: 5,
+            kernel: Kernel::Scalar,
+            buf,
+            start: 42,
+            stats_mean: (0..n).map(|i| i as f64 * 0.5).collect(),
+            stats_std: (0..n).map(|i| 1.0 + i as f64).collect(),
+            words: (0..n).map(|i| SaxWord::new(&[(i % 4) as u8, 1])).collect(),
+            nnd: (0..n)
+                .map(|i| if i == 0 { f64::INFINITY } else { i as f64 })
+                .collect(),
+            ngh: (0..n)
+                .map(|i| if i == 0 { u64::MAX } else { 42 + i as u64 })
+                .collect(),
+            warm: true,
+            pending: 3,
+            refreshes: 2,
+            total_calls: 99,
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_field_bitwise() {
+        let mut snap = sample();
+        snap.nnd[1] = f64::NAN;
+        snap.nnd[2] = -0.0;
+        let bytes = encode_monitor(&snap);
+        let back = decode_monitor(&bytes).expect("roundtrip");
+        assert_eq!(back.name, snap.name);
+        assert_eq!(back.params, snap.params);
+        assert_eq!(back.capacity, snap.capacity);
+        assert_eq!(back.refresh_every, snap.refresh_every);
+        assert_eq!(back.kernel, snap.kernel);
+        assert_eq!(back.start, snap.start);
+        assert_eq!(back.warm, snap.warm);
+        assert_eq!(back.pending, snap.pending);
+        assert_eq!(back.refreshes, snap.refreshes);
+        assert_eq!(back.total_calls, snap.total_calls);
+        assert_eq!(back.words, snap.words);
+        assert_eq!(back.ngh, snap.ngh);
+        for (field, a, b) in [
+            ("buf", &snap.buf, &back.buf),
+            ("stats_mean", &snap.stats_mean, &back.stats_mean),
+            ("stats_std", &snap.stats_std, &back.stats_std),
+            ("nnd", &snap.nnd, &back.nnd),
+        ] {
+            assert_eq!(a.len(), b.len(), "{field} length");
+            for i in 0..a.len() {
+                assert_eq!(a[i].to_bits(), b[i].to_bits(), "{field}[{i}] bits");
+            }
+        }
+        assert!(back.nnd[1].is_nan(), "NaN survives");
+        assert_eq!(back.nnd[2].to_bits(), (-0.0f64).to_bits(), "-0.0 survives");
+    }
+
+    #[test]
+    fn inconsistent_deque_lengths_are_named() {
+        let mut snap = sample();
+        snap.stats_std.pop();
+        let bytes = encode_monitor(&snap);
+        let err = decode_monitor(&bytes).unwrap_err();
+        assert!(
+            matches!(err, SnapshotError::Inconsistent { field: "stats_std", .. }),
+            "got {err:?}"
+        );
+    }
+
+    #[test]
+    fn undersized_capacity_is_named() {
+        let mut snap = sample();
+        snap.capacity = 2 * snap.params.sax.s - 1;
+        assert!(matches!(
+            snap.validate().unwrap_err(),
+            SnapshotError::Inconsistent { field: "capacity", .. }
+        ));
+    }
+
+    #[test]
+    fn tampered_params_fail_the_strict_validator() {
+        // Splice an invalid-but-parseable params blob into the encoded
+        // meta section, with a recomputed CRC so only the validator can
+        // catch it: the decode must fail with `BadParams`, never hand
+        // back a monitor built on params the service would reject.
+        let snap = sample();
+        let mut bytes = encode_monitor(&snap);
+        let needle = b"\"s\":4".as_slice();
+        let at = bytes
+            .windows(needle.len())
+            .position(|w| w == needle)
+            .expect("params JSON embedded in the meta section");
+        bytes[at + 4] = b'0'; // "s":4 -> "s":0 (same length, CRC re-done below)
+        // meta is the first section: header at 16, payload from 28
+        let len = u32::from_le_bytes([bytes[20], bytes[21], bytes[22], bytes[23]]) as usize;
+        let crc = super::super::crc32(&bytes[28..28 + len]);
+        bytes[24..28].copy_from_slice(&crc.to_le_bytes());
+        let err = decode_monitor(&bytes).unwrap_err();
+        assert!(matches!(err, SnapshotError::BadParams { .. }), "got {err:?}");
+        assert!(err.to_string().contains("`params`"));
+    }
+
+    #[test]
+    fn wrong_kind_byte_is_a_layout_error() {
+        let snap = sample();
+        let mut bytes = encode_monitor(&snap);
+        bytes[3] = SnapshotKind::Context.code();
+        let err = decode_monitor(&bytes).unwrap_err();
+        // the first section is monitor_meta where the context layout
+        // expects its fingerprint
+        assert!(
+            matches!(err, SnapshotError::SectionOrder { .. }),
+            "got {err:?}"
+        );
+    }
+}

@@ -1,0 +1,260 @@
+//! Snapshot files on disk: naming, directory layout, and inspection.
+//!
+//! A snapshot directory is flat: one `.hsts` file per saved context
+//! (`ctx_<slug>_<hash>.hsts`) and per saved stream monitor
+//! (`stream_<slug>_<hash>.hsts`). Slugs are sanitized for readability;
+//! the FNV hash of the raw key makes names collision-free even when two
+//! keys sanitize identically. [`inspect`] summarizes any snapshot from
+//! bytes alone — it is what `hst snapshot inspect` and the CI golden
+//! check run, so a file that inspects cleanly also decodes cleanly.
+
+use std::path::{Path, PathBuf};
+
+use super::context::{decode_context, ContextSnapshot};
+use super::monitor::{decode_monitor, MonitorSnapshot};
+use super::{
+    decode_header, decode_sections, tag_name, SnapshotError, SnapshotKind,
+    SNAPSHOT_EXT,
+};
+
+/// FNV-1a over a label, for collision-free file names.
+fn fnv64(text: &str) -> u64 {
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.as_bytes() {
+        hash ^= *b as u64;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    hash
+}
+
+/// Sanitize a free-form label into a filename slug: lowercase
+/// alphanumerics kept, everything else folded to `-`, capped at 48 bytes.
+fn slug(label: &str) -> String {
+    let mut out = String::with_capacity(label.len().min(48));
+    for c in label.chars() {
+        if out.len() >= 48 {
+            break;
+        }
+        if c.is_ascii_alphanumeric() {
+            out.push(c.to_ascii_lowercase());
+        } else {
+            out.push('-');
+        }
+    }
+    if out.is_empty() {
+        out.push('-');
+    }
+    out
+}
+
+/// File name for a context snapshot, from its cache-key fields.
+pub fn context_file_name(dataset: &str, scale_div: u64, s: usize, p: usize, alphabet: usize) -> String {
+    let key = format!("{dataset}\u{1f}{scale_div}\u{1f}{s}\u{1f}{p}\u{1f}{alphabet}");
+    format!(
+        "ctx_{}_{:016x}.{SNAPSHOT_EXT}",
+        slug(dataset),
+        fnv64(&key)
+    )
+}
+
+/// File name for a stream monitor snapshot, from its stream name.
+pub fn monitor_file_name(stream: &str) -> String {
+    format!("stream_{}_{:016x}.{SNAPSHOT_EXT}", slug(stream), fnv64(stream))
+}
+
+/// All `.hsts` files in a directory, sorted by name so restore order is
+/// deterministic. A missing directory is an empty restore, not an error.
+pub fn list_dir(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => return Err(e),
+    };
+    for entry in entries {
+        let path = entry?.path();
+        if path.extension().and_then(|e| e.to_str()) == Some(SNAPSHOT_EXT) {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// A decoded snapshot of either kind.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Snapshot {
+    /// A context warm-profile snapshot.
+    Context(ContextSnapshot),
+    /// A stream monitor snapshot.
+    Monitor(MonitorSnapshot),
+}
+
+/// Decode any snapshot, dispatching on the header's kind byte.
+pub fn decode(bytes: &[u8]) -> Result<Snapshot, SnapshotError> {
+    match super::decode_kind(bytes)? {
+        SnapshotKind::Context => decode_context(bytes).map(Snapshot::Context),
+        SnapshotKind::Monitor => decode_monitor(bytes).map(Snapshot::Monitor),
+    }
+}
+
+/// One section row of an [`SnapshotSummary`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SectionInfo {
+    /// Wire tag.
+    pub tag: u16,
+    /// Stable tag name.
+    pub name: &'static str,
+    /// Payload length in bytes.
+    pub len: usize,
+    /// Byte offset of the section header in the file.
+    pub offset: usize,
+}
+
+/// What `hst snapshot inspect` prints: the header fields, the section
+/// table, and a one-line summary of the decoded content.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotSummary {
+    /// Snapshot kind.
+    pub kind: SnapshotKind,
+    /// Total file size in bytes.
+    pub bytes: usize,
+    /// The CRC-verified section table.
+    pub sections: Vec<SectionInfo>,
+    /// Kind-specific description lines.
+    pub detail: Vec<String>,
+}
+
+/// Fully validate a snapshot (header, section CRCs, content decode) and
+/// summarize it. Any corruption surfaces as the same named
+/// [`SnapshotError`] a restore would hit.
+pub fn inspect(bytes: &[u8]) -> Result<SnapshotSummary, SnapshotError> {
+    let (kind, _) = decode_header(bytes)?;
+    let sections = decode_sections(bytes)?
+        .iter()
+        .map(|s| SectionInfo {
+            tag: s.tag,
+            name: tag_name(s.tag).unwrap_or("unknown"),
+            len: s.payload.len(),
+            offset: s.offset,
+        })
+        .collect::<Vec<_>>();
+    let detail = match decode(bytes)? {
+        Snapshot::Context(c) => {
+            let mut lines = vec![format!(
+                "dataset {:?} scale_div {} sax {}/{}/{} series len {} hash {:016x}",
+                c.dataset,
+                c.scale_div,
+                c.sax.s,
+                c.sax.p,
+                c.sax.alphabet,
+                c.fingerprint.len,
+                c.fingerprint.hash
+            )];
+            for e in &c.profiles {
+                let warm = e
+                    .profile
+                    .nnd
+                    .iter()
+                    .filter(|v| v.is_finite())
+                    .count();
+                lines.push(format!(
+                    "profile s={} kind={} allow_self_match={} sequences={} warm={}",
+                    e.s,
+                    match e.kind {
+                        crate::dist::DistanceKind::Znorm => "znorm",
+                        crate::dist::DistanceKind::Raw => "raw",
+                    },
+                    e.allow_self_match,
+                    e.profile.len(),
+                    warm
+                ));
+            }
+            lines
+        }
+        Snapshot::Monitor(m) => {
+            vec![format!(
+                "stream {:?} s={} window {}/{} start {} sequences {} warm={} \
+                 refreshes {} calls {}",
+                m.name,
+                m.params.sax.s,
+                m.buf.len(),
+                m.capacity,
+                m.start,
+                m.nnd.len(),
+                m.warm,
+                m.refreshes,
+                m.total_calls
+            )]
+        }
+    };
+    Ok(SnapshotSummary {
+        kind,
+        bytes: bytes.len(),
+        sections,
+        detail,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slugs_are_safe_and_names_collision_free() {
+        assert_eq!(slug("ECG 108"), "ecg-108");
+        assert_eq!(slug("../../etc/passwd"), "------etc-passwd");
+        assert_eq!(slug(""), "-");
+        // same slug, different raw names -> different files
+        let a = monitor_file_name("a b");
+        let b = monitor_file_name("a-b");
+        assert_ne!(a, b);
+        assert!(a.starts_with("stream_a-b_"));
+        assert!(a.ends_with(".hsts"));
+        let c = context_file_name("ECG 108", 8, 96, 4, 4);
+        let d = context_file_name("ECG 108", 4, 96, 4, 4);
+        assert_ne!(c, d, "scale_div is part of the key");
+    }
+
+    #[test]
+    fn missing_dir_lists_empty() {
+        let dir = Path::new("/nonexistent/hstime-snapshot-test");
+        assert!(list_dir(dir).unwrap().is_empty());
+    }
+
+    #[test]
+    fn inspect_summarizes_and_rejects_like_restore() {
+        use crate::config::SaxParams;
+        use crate::discord::NndProfile;
+        use crate::dist::DistanceKind;
+        use crate::snapshot::context::{encode_context, ProfileEntry};
+        use crate::snapshot::{SeriesFingerprint, SnapshotError};
+
+        let snap = super::super::ContextSnapshot {
+            dataset: "ECG 108".to_string(),
+            scale_div: 8,
+            sax: SaxParams { s: 96, p: 4, alphabet: 4 },
+            fingerprint: SeriesFingerprint { len: 10, hash: 1 },
+            profiles: vec![ProfileEntry {
+                s: 96,
+                kind: DistanceKind::Znorm,
+                allow_self_match: false,
+                profile: NndProfile::new(4),
+            }],
+        };
+        let mut bytes = encode_context(&snap);
+        let summary = inspect(&bytes).expect("inspect ok");
+        assert_eq!(summary.kind, SnapshotKind::Context);
+        assert_eq!(summary.sections.len(), 2);
+        assert_eq!(summary.sections[0].name, "fingerprint");
+        assert_eq!(summary.sections[1].name, "profile");
+        assert!(summary.detail[0].contains("ECG 108"));
+        // corrupt a payload byte: inspect fails with the restore's error
+        let off = summary.sections[1].offset + 12 + 3;
+        bytes[off] ^= 0xFF;
+        assert!(matches!(
+            inspect(&bytes).unwrap_err(),
+            SnapshotError::BadChecksum { section: "profile", .. }
+        ));
+    }
+}

@@ -10,6 +10,7 @@ use crate::context::SearchContext;
 use crate::discord::{NndProfile, NND_INIT, NO_NEIGHBOR};
 use crate::dist::Kernel;
 use crate::sax::{SaxIndex, SaxWord, WordBuilder};
+use crate::snapshot::{MonitorSnapshot, SnapshotError};
 use crate::ts::{window_stats, SeqStats, TimeSeries};
 use crate::util::json::Json;
 
@@ -185,6 +186,73 @@ impl StreamingMonitor {
         self.kernel
     }
 
+    /// The stream name (see [`with_name`](Self::with_name)).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Export the monitor's full state as a [`MonitorSnapshot`] — every
+    /// field a warm restart needs, bit for bit. [`from_snapshot`]
+    /// (Self::from_snapshot) on the result continues exactly where this
+    /// monitor stands: same window, same carried profile, same counters.
+    pub fn snapshot(&self) -> MonitorSnapshot {
+        MonitorSnapshot {
+            name: self.name.clone(),
+            params: self.params.clone(),
+            capacity: self.capacity,
+            refresh_every: self.refresh_every,
+            kernel: self.kernel,
+            buf: self.buf.iter().copied().collect(),
+            start: self.start,
+            stats_mean: self.stats_mean.iter().copied().collect(),
+            stats_std: self.stats_std.iter().copied().collect(),
+            words: self.words.iter().cloned().collect(),
+            nnd: self.nnd.iter().copied().collect(),
+            ngh: self.ngh.iter().copied().collect(),
+            warm: self.warm,
+            pending: self.pending,
+            refreshes: self.refreshes,
+            total_calls: self.total_calls,
+        }
+    }
+
+    /// Rebuild a monitor from a snapshot. Derived machinery (the SAX
+    /// word builder and the scratch buffer) is reconstructed from the
+    /// restored params; everything else is restored bit for bit, so the
+    /// first post-restore [`refresh`](Self::refresh) is indistinguishable
+    /// from one the original monitor would have run. The snapshot's
+    /// cross-field invariants are re-validated here — a decoded-but-
+    /// tampered snapshot never becomes a live monitor.
+    pub fn from_snapshot(
+        snap: MonitorSnapshot,
+    ) -> Result<StreamingMonitor, SnapshotError> {
+        snap.validate()?;
+        let s = snap.params.sax.s;
+        let wb = WordBuilder::new(&snap.params.sax);
+        let mut buf = VecDeque::with_capacity(snap.capacity + 1);
+        buf.extend(snap.buf);
+        Ok(StreamingMonitor {
+            name: snap.name,
+            params: snap.params,
+            capacity: snap.capacity,
+            refresh_every: snap.refresh_every,
+            kernel: snap.kernel,
+            wb,
+            buf,
+            start: snap.start,
+            stats_mean: snap.stats_mean.into(),
+            stats_std: snap.stats_std.into(),
+            words: snap.words.into(),
+            nnd: snap.nnd.into(),
+            ngh: snap.ngh.into(),
+            scratch: Vec::with_capacity(s),
+            warm: snap.warm,
+            pending: snap.pending,
+            refreshes: snap.refreshes,
+            total_calls: snap.total_calls,
+        })
+    }
+
     /// The auto-refresh cadence in points (`0` = manual).
     pub fn refresh_cadence(&self) -> usize {
         self.refresh_every
@@ -193,6 +261,12 @@ impl StreamingMonitor {
     /// Points currently in the window.
     pub fn window_len(&self) -> usize {
         self.buf.len()
+    }
+
+    /// Maximum points the window holds (the `capacity` passed to
+    /// [`new`](Self::new)).
+    pub fn window_capacity(&self) -> usize {
+        self.capacity
     }
 
     /// Global position of the window's first point.
@@ -563,5 +637,57 @@ mod tests {
     fn rejects_window_smaller_than_two_sequences() {
         assert!(StreamingMonitor::new(SearchParams::new(64, 4, 4), 100).is_err());
         assert!(StreamingMonitor::new(SearchParams::new(64, 4, 4), 128).is_ok());
+    }
+
+    #[test]
+    fn snapshot_restore_continues_bit_identically() {
+        // one monitor runs uninterrupted; a twin is snapshotted mid-stream,
+        // dropped, and rebuilt from the snapshot. Feeding both the same
+        // tail must produce bit-identical refreshes, with the restored
+        // monitor's warm profile sparing it all prep work.
+        let pts = generators::ecg_like(1_400, 80, 1, 21);
+        let (head, tail) = pts.split_at(900);
+
+        let mut straight = monitor(48, 600).with_name("wal");
+        straight.extend(head).unwrap();
+        straight.refresh().unwrap();
+
+        let mut doomed = monitor(48, 600).with_name("wal");
+        doomed.extend(head).unwrap();
+        doomed.refresh().unwrap();
+        let snap = doomed.snapshot();
+        drop(doomed);
+
+        let mut revived = StreamingMonitor::from_snapshot(snap).unwrap();
+        assert_eq!(revived.name(), "wal");
+        assert_eq!(revived.window_start(), straight.window_start());
+        assert_eq!(revived.consumed(), straight.consumed());
+        assert!(revived.is_warm());
+        assert_eq!(revived.refreshes(), straight.refreshes());
+
+        straight.extend(tail).unwrap();
+        revived.extend(tail).unwrap();
+        let a = straight.refresh().unwrap();
+        let b = revived.refresh().unwrap();
+        assert!(b.warm);
+        assert_eq!(b.prep_calls, 0, "restored warm state must serve prep");
+        assert_eq!(a.distance_calls, b.distance_calls);
+        assert_eq!(a.discords.len(), b.discords.len());
+        for (da, db) in a.discords.iter().zip(&b.discords) {
+            assert_eq!(da.position, db.position);
+            assert_eq!(da.neighbor, db.neighbor);
+            assert_eq!(da.nnd.to_bits(), db.nnd.to_bits());
+        }
+    }
+
+    #[test]
+    fn tampered_snapshot_is_refused() {
+        let mut m = monitor(32, 200);
+        m.extend(&generators::sine_with_noise(400, 0.3, 22)).unwrap();
+        m.refresh().unwrap();
+        let mut snap = m.snapshot();
+        snap.nnd.pop(); // desync the per-sequence vectors
+        let err = StreamingMonitor::from_snapshot(snap).unwrap_err();
+        assert!(err.to_string().contains("`nnd`"), "{err}");
     }
 }

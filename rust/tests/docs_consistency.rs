@@ -238,6 +238,63 @@ fn protocol_doc_pins_the_binary_frame_codec() {
 }
 
 #[test]
+fn protocol_doc_pins_the_snapshot_format() {
+    use hstime::snapshot;
+
+    // The "Warm-state snapshots" section must carry every `.hsts` wire
+    // constant verbatim — a codec change that skips the doc fails here,
+    // not in an operator staring at an unreadable archive.
+    let doc = repo_file("docs/PROTOCOL.md");
+    let section = doc
+        .split("## Warm-state snapshots")
+        .nth(1)
+        .expect("docs/PROTOCOL.md must keep its `## Warm-state snapshots` section");
+    let section = section.split("\n## ").next().unwrap();
+    for (label, value) in [
+        ("magic byte 0", format!("{:#04x}", snapshot::SNAPSHOT_MAGIC[0])),
+        ("magic byte 1", format!("{:#04x}", snapshot::SNAPSHOT_MAGIC[1])),
+        ("format version", snapshot::SNAPSHOT_VERSION.to_string()),
+        (
+            "file header length",
+            format!("{}-byte header", snapshot::SNAPSHOT_HEADER_LEN),
+        ),
+        (
+            "section header length",
+            format!("{}-byte section", snapshot::SECTION_HEADER_LEN),
+        ),
+        ("file extension", format!(".{}", snapshot::SNAPSHOT_EXT)),
+    ] {
+        assert!(
+            section.contains(&value),
+            "Warm-state snapshots section is missing the {label} ({value})"
+        );
+    }
+    for kind in snapshot::SnapshotKind::ALL {
+        assert!(
+            section.contains(&format!("`{}` = {}", kind.name(), kind.code())),
+            "Warm-state snapshots section must list kind `{}` = {}",
+            kind.name(),
+            kind.code()
+        );
+    }
+    // the operator flag and the CLI face must be documented alongside
+    assert!(
+        section.contains("--snapshot-dir"),
+        "docs/PROTOCOL.md must document the `--snapshot-dir` flag"
+    );
+    assert!(
+        section.contains("hst snapshot"),
+        "docs/PROTOCOL.md must point at the `hst snapshot` CLI"
+    );
+    // the containment rule is part of the contract, not an implementation
+    // detail — network-supplied paths must never escape the working dir
+    assert!(
+        section.contains("inside the service working directory"),
+        "docs/PROTOCOL.md must state the snapshot `dir` containment rule"
+    );
+}
+
+#[test]
 fn architecture_doc_exists_and_is_linked() {
     let arch = repo_file("docs/ARCHITECTURE.md");
     assert!(arch.contains("stream"), "layer map must include the stream layer");

@@ -1,0 +1,224 @@
+//! Golden snapshot fixtures: a fixed-seed context snapshot and a
+//! fixed-seed monitor snapshot are pinned as committed `.hsts` files plus
+//! a digest of the *restored* profile's nnd bit patterns. Any codec
+//! change — field order, a length prefix, an endianness slip — shows up
+//! as a byte diff here instead of a silently unreadable archive.
+//!
+//! Workflow mirrors `golden_conformance.rs`: a missing fixture is written
+//! (auto-bless) and must be committed; `GOLDEN_BLESS=1` regenerates after
+//! an intentional format change (which must also bump
+//! `SNAPSHOT_VERSION`).
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use hstime::algo::{self, Algorithm as _};
+use hstime::config::SearchParams;
+use hstime::context::SearchContext;
+use hstime::dist::{DistanceKind, Kernel};
+use hstime::snapshot::{
+    decode_context, decode_monitor, encode_context, encode_monitor, inspect,
+    ContextSnapshot, ProfileEntry, SeriesFingerprint, SnapshotKind,
+};
+use hstime::stream::StreamingMonitor;
+use hstime::ts::{generators, TimeSeries};
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+}
+
+/// FNV-1a over raw f64 bit patterns — the digest that pins every nnd bit
+/// without listing thousands of entries.
+fn fnv_bits(xs: &[f64]) -> u64 {
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for x in xs {
+        for b in x.to_bits().to_le_bytes() {
+            hash ^= b as u64;
+            hash = hash.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    hash
+}
+
+/// The frozen context fixture: a completed serial HST search over the
+/// golden ECG series, its warm profile exported. Everything here is
+/// fixed-seed; changing any value invalidates the committed fixtures.
+fn context_fixture() -> (ContextSnapshot, Vec<u8>) {
+    let ts = TimeSeries::new("golden-ecg", generators::ecg_like(1_500, 110, 1, 42));
+    let params = SearchParams::new(96, 4, 4).with_discords(2).with_seed(7);
+    let ctx = SearchContext::builder(&ts).kernel(Kernel::Scalar).build();
+    algo::hst::HstSearch::default()
+        .run_ctx(&ctx, &params)
+        .expect("hst fixture run");
+    let profiles: Vec<ProfileEntry> = ctx
+        .warm_profiles()
+        .into_iter()
+        .map(|(s, kind, allow_self_match, profile)| ProfileEntry {
+            s,
+            kind,
+            allow_self_match,
+            profile,
+        })
+        .collect();
+    assert!(!profiles.is_empty(), "the search must leave a warm profile");
+    let snap = ContextSnapshot {
+        dataset: "golden-ecg".to_string(),
+        scale_div: 1,
+        sax: params.sax,
+        fingerprint: SeriesFingerprint::of(&ts.points),
+        profiles,
+    };
+    let bytes = encode_context(&snap);
+    (snap, bytes)
+}
+
+/// The frozen monitor fixture: two refreshes over the golden stream with
+/// the kernel pinned to scalar so the bytes are machine-independent.
+fn monitor_fixture() -> Vec<u8> {
+    let pts = generators::ecg_like(1_400, 80, 1, 21);
+    let mut m = StreamingMonitor::new(
+        SearchParams::new(48, 4, 4).with_discords(2).with_seed(7),
+        600,
+    )
+    .expect("fixture monitor")
+    .with_name("golden-stream")
+    .with_kernel(Kernel::Scalar);
+    m.extend(&pts[..900]).expect("fixture head");
+    m.refresh().expect("fixture refresh 1");
+    m.extend(&pts[900..]).expect("fixture tail");
+    m.refresh().expect("fixture refresh 2");
+    encode_monitor(&m.snapshot())
+}
+
+/// Compare `got` against the committed fixture, blessing when missing or
+/// when `GOLDEN_BLESS` is set. Returns a failure description on mismatch.
+fn check_golden(name: &str, got: &[u8]) -> Option<String> {
+    let bless = std::env::var("GOLDEN_BLESS").is_ok();
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).expect("create tests/golden");
+    let path = dir.join(name);
+    match std::fs::read(&path) {
+        Ok(want) if !bless => {
+            if got != want.as_slice() {
+                Some(format!(
+                    "{name}: {} committed vs {} current bytes differ \
+                     (intentional format change? bump SNAPSHOT_VERSION and \
+                     GOLDEN_BLESS=1 to regenerate)",
+                    want.len(),
+                    got.len()
+                ))
+            } else {
+                None
+            }
+        }
+        _ => {
+            std::fs::write(&path, got).expect("write golden snapshot");
+            eprintln!("blessed {} — commit it", path.display());
+            None
+        }
+    }
+}
+
+#[test]
+fn snapshot_encoding_is_byte_deterministic() {
+    // same warm state -> same bytes, and decode -> re-encode is the
+    // identity on bytes; this is what makes a binary golden possible
+    let (snap, bytes) = context_fixture();
+    assert_eq!(bytes, encode_context(&snap), "context encode is not a function");
+    let re = encode_context(&decode_context(&bytes).expect("decode"));
+    assert_eq!(bytes, re, "context decode -> encode changed bytes");
+
+    let mbytes = monitor_fixture();
+    assert_eq!(mbytes, monitor_fixture(), "monitor fixture is not deterministic");
+    let re = encode_monitor(&decode_monitor(&mbytes).expect("decode"));
+    assert_eq!(mbytes, re, "monitor decode -> encode changed bytes");
+
+    // both files inspect cleanly with the expected section tables
+    let ctx_sum = inspect(&bytes).expect("context inspect");
+    assert_eq!(ctx_sum.kind, SnapshotKind::Context);
+    assert_eq!(ctx_sum.sections[0].name, "fingerprint");
+    assert!(ctx_sum.sections[1..].iter().all(|s| s.name == "profile"));
+    let mon_sum = inspect(&mbytes).expect("monitor inspect");
+    assert_eq!(mon_sum.kind, SnapshotKind::Monitor);
+    assert_eq!(
+        mon_sum.sections.iter().map(|s| s.name).collect::<Vec<_>>(),
+        vec![
+            "monitor_meta",
+            "monitor_window",
+            "monitor_stats",
+            "monitor_words",
+            "monitor_profile"
+        ]
+    );
+}
+
+#[test]
+fn golden_snapshot_files_match_committed_bytes() {
+    let mut failures = Vec::new();
+    let (_, ctx_bytes) = context_fixture();
+    let mon_bytes = monitor_fixture();
+    failures.extend(check_golden("snapshot_ctx.hsts", &ctx_bytes));
+    failures.extend(check_golden("snapshot_stream.hsts", &mon_bytes));
+
+    // the digest pins the *restored* profiles' nnd bit patterns — what a
+    // warm restart actually resumes from, not just the file bytes
+    let restored_ctx = decode_context(&ctx_bytes).expect("restore context");
+    let restored_mon = decode_monitor(&mon_bytes).expect("restore monitor");
+    let mut digest = String::new();
+    for e in &restored_ctx.profiles {
+        let (mut min_i, mut min_bits) = (0usize, f64::INFINITY.to_bits());
+        for (i, v) in e.profile.nnd.iter().enumerate() {
+            if *v < f64::from_bits(min_bits) {
+                min_i = i;
+                min_bits = v.to_bits();
+            }
+        }
+        writeln!(
+            digest,
+            "ctx s={} kind={} allow={} n={} nnd_fnv={:016x} min={}:{:016x}",
+            e.s,
+            match e.kind {
+                DistanceKind::Znorm => "znorm",
+                DistanceKind::Raw => "raw",
+            },
+            e.allow_self_match,
+            e.profile.len(),
+            fnv_bits(&e.profile.nnd),
+            min_i,
+            min_bits
+        )
+        .unwrap();
+    }
+    writeln!(
+        digest,
+        "mon stream={:?} start={} n={} refreshes={} calls={} nnd_fnv={:016x}",
+        restored_mon.name,
+        restored_mon.start,
+        restored_mon.nnd.len(),
+        restored_mon.refreshes,
+        restored_mon.total_calls,
+        fnv_bits(&restored_mon.nnd)
+    )
+    .unwrap();
+    failures.extend(check_golden("snapshot_digest.txt", digest.as_bytes()));
+
+    assert!(failures.is_empty(), "{}", failures.join("\n"));
+}
+
+#[test]
+fn committed_goldens_stay_readable() {
+    // a hand edit (or a partial bless) of a committed fixture must fail
+    // here with the named decode error, not at restore time in a server
+    for name in ["snapshot_ctx.hsts", "snapshot_stream.hsts"] {
+        let path = golden_dir().join(name);
+        let Ok(bytes) = std::fs::read(&path) else {
+            // fresh checkout: the bless test writes it
+            continue;
+        };
+        let summary = inspect(&bytes)
+            .unwrap_or_else(|e| panic!("{name} no longer decodes: {e}"));
+        assert!(!summary.sections.is_empty(), "{name}: empty section table");
+    }
+}

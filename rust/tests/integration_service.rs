@@ -752,6 +752,7 @@ fn full_ingest_queue_sheds_with_a_binary_notice() {
         max_streams: 8,
         ctx_cache: 8,
         stream_workers: 0,
+        snapshot_dir: None,
     });
     let mut client = Client::connect(addr).unwrap();
     client.hello().unwrap();
@@ -794,6 +795,7 @@ fn per_client_quota_sheds_before_memory_grows_unbounded() {
         max_streams: 8,
         ctx_cache: 8,
         stream_workers: 0,
+        snapshot_dir: None,
     });
     let mut client = Client::connect(addr).unwrap();
     client.hello().unwrap();
@@ -883,6 +885,7 @@ fn serve_flags_size_the_stream_registry() {
         max_streams: 2,
         ctx_cache: 1,
         stream_workers: 1,
+        snapshot_dir: None,
     });
     let mut client = Client::connect(addr).unwrap();
     for name in ["a", "b"] {

@@ -1,0 +1,240 @@
+//! Durable warm state over the full service path: a server with
+//! `--snapshot-dir` saves its warm contexts and open streams on
+//! shutdown, a second server over the same directory boots warm
+//! (`prep_calls == 0`, context-cache hit, streams re-open by name), and
+//! the explicit `snapshot_save`/`snapshot_restore` commands enforce the
+//! directory containment + corruption rules from `docs/PROTOCOL.md`.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+use hstime::service::{serve_config, Client, ServeConfig};
+use hstime::util::json::Json;
+
+fn start_server_cfg(
+    cfg: ServeConfig,
+) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        serve_config("127.0.0.1:0", cfg, move |addr| {
+            tx.send(addr).unwrap();
+        })
+        .expect("serve failed");
+    });
+    (rx.recv().unwrap(), handle)
+}
+
+fn stop_server(addr: std::net::SocketAddr, handle: std::thread::JoinHandle<()>) {
+    if let Ok(mut c) = Client::connect(addr) {
+        let _ = c.shutdown();
+    }
+    let _ = std::net::TcpStream::connect(addr);
+    let _ = handle.join();
+}
+
+fn cfg_with_dir(dir: Option<PathBuf>) -> ServeConfig {
+    ServeConfig {
+        workers: 1,
+        capacity: 8,
+        max_streams: 4,
+        ctx_cache: 8,
+        stream_workers: 0,
+        snapshot_dir: dir,
+    }
+}
+
+fn submit_req(dataset: &str, s: usize, k: usize) -> Json {
+    Json::obj()
+        .set("cmd", "submit")
+        .set("dataset", dataset)
+        .set("algo", "hst")
+        .set("scale_div", 8u64)
+        .set(
+            "params",
+            Json::obj().set("s", s).set("p", 4u64).set("alphabet", 4u64).set("k", k),
+        )
+}
+
+fn stream_params() -> Json {
+    Json::obj().set("s", 32u64).set("p", 4u64).set("alphabet", 4u64)
+}
+
+fn sine(n: usize, seed: u64) -> Vec<f64> {
+    hstime::ts::generators::sine_with_noise(n, 0.1, seed)
+}
+
+/// Unique scratch dir under the crate's `target/` (gitignored, inside
+/// the service working directory so the relative-`dir` command form can
+/// address it too).
+fn scratch(tag: &str) -> (String, PathBuf) {
+    let rel = format!("target/it_snap_{tag}_{}", std::process::id());
+    let abs = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(&rel);
+    let _ = std::fs::remove_dir_all(&abs);
+    (rel, abs)
+}
+
+#[test]
+fn save_on_shutdown_then_restore_on_boot_boots_warm() {
+    let (_, dir) = scratch("boot");
+
+    // ---- first life: warm a context, open a stream ----
+    let (addr, handle) = start_server_cfg(cfg_with_dir(Some(dir.clone())));
+    let mut c = Client::connect(addr).unwrap();
+    let req = submit_req("synthetic:noise=0.3,n=2000,seed=9", 64, 1);
+    let job = c.submit(req.clone()).unwrap();
+    let cold = c.wait(job).unwrap();
+    let cold_report = cold.get("report").unwrap().clone();
+    assert!(cold_report.get("prep_calls").unwrap().as_u64().unwrap() > 0);
+
+    c.open_stream("boot-wal", stream_params(), 400, 200).unwrap();
+    let pts = sine(400, 4);
+    let reply = c.append("boot-wal", &pts).unwrap();
+    let updates = reply.get("updates").unwrap().as_arr().unwrap().clone();
+    assert!(!updates.is_empty(), "append under cadence 200 must refresh");
+
+    // shutdown runs save-on-shutdown into --snapshot-dir
+    stop_server(addr, handle);
+    let files: Vec<_> = std::fs::read_dir(&dir)
+        .expect("snapshot dir must exist after shutdown")
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .collect();
+    assert!(
+        files.iter().any(|f| f.starts_with("ctx_") && f.ends_with(".hsts")),
+        "no context snapshot in {files:?}"
+    );
+    assert!(
+        files.iter().any(|f| f.starts_with("stream_") && f.ends_with(".hsts")),
+        "no stream snapshot in {files:?}"
+    );
+
+    // ---- second life: same directory, restore-on-boot ----
+    let (addr, handle) = start_server_cfg(cfg_with_dir(Some(dir.clone())));
+    let mut c = Client::connect(addr).unwrap();
+    let stats = c.stats().unwrap();
+    assert!(stats.get("snapshot_restores").unwrap().as_u64().unwrap() >= 1);
+    assert!(
+        stats
+            .get("snapshot_contexts_restored")
+            .unwrap()
+            .as_u64()
+            .unwrap()
+            >= 1
+    );
+    assert!(
+        stats
+            .get("snapshot_streams_restored")
+            .unwrap()
+            .as_u64()
+            .unwrap()
+            >= 1
+    );
+    assert!(
+        stats
+            .get("snapshot_profiles_seeded")
+            .unwrap()
+            .as_u64()
+            .unwrap()
+            >= 1
+    );
+
+    // the same job is warm on the restored context: cache hit, no prep,
+    // and the discord set is identical to the first life's cold run
+    let job = c.submit(req).unwrap();
+    let warm = c.wait(job).unwrap();
+    let warm_report = warm.get("report").unwrap();
+    assert_eq!(warm_report.get("ctx_cache").unwrap().as_str(), Some("hit"));
+    assert_eq!(warm_report.get("prep_calls").unwrap().as_u64(), Some(0));
+    assert!(
+        warm_report.get("distance_calls").unwrap().as_u64().unwrap()
+            < cold_report.get("distance_calls").unwrap().as_u64().unwrap(),
+        "restored warm run must beat the cold run"
+    );
+    let cold_d = cold_report.get("discords").unwrap().as_arr().unwrap();
+    let warm_d = warm_report.get("discords").unwrap().as_arr().unwrap();
+    assert_eq!(format!("{:?}", cold_d), format!("{:?}", warm_d));
+
+    // the stream came back under its name with its warm profile: the
+    // next cadence refresh is warm and prep-free
+    let reply = c.append("boot-wal", &sine(200, 5)).unwrap();
+    assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true));
+    let updates = reply.get("updates").unwrap().as_arr().unwrap();
+    let last = updates.last().expect("restored stream must refresh");
+    assert_eq!(last.get("warm").unwrap().as_bool(), Some(true));
+    assert_eq!(last.get("prep_calls").unwrap().as_u64(), Some(0));
+
+    stop_server(addr, handle);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn explicit_snapshot_commands_enforce_containment_and_corruption_rules() {
+    let (rel, abs) = scratch("cmd");
+    let (addr, handle) = start_server_cfg(cfg_with_dir(None));
+    let mut c = Client::connect(addr).unwrap();
+
+    // no `dir` and no --snapshot-dir: refused, pointing at the flag
+    let r = c.call(&Json::obj().set("cmd", "snapshot_save")).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+    assert!(
+        r.get("error").unwrap().as_str().unwrap().contains("--snapshot-dir"),
+        "{r}"
+    );
+
+    // absolute and escaping paths: refused by the containment rule
+    for bad in ["/etc/hst-snapshots", "../outside"] {
+        let r = c
+            .call(&Json::obj().set("cmd", "snapshot_save").set("dir", bad))
+            .unwrap();
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{bad}");
+        assert!(
+            r.get("error").unwrap().as_str().unwrap().contains("relative path"),
+            "{r}"
+        );
+    }
+
+    // nothing warm yet: a save succeeds but writes nothing
+    let save = |c: &mut Client| {
+        c.call(&Json::obj().set("cmd", "snapshot_save").set("dir", rel.as_str()))
+            .unwrap()
+    };
+    let r = save(&mut c);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(r.get("contexts").unwrap().as_u64(), Some(0));
+    assert_eq!(r.get("monitors").unwrap().as_u64(), Some(0));
+
+    // warm one context, save again: exactly one file
+    let job = c
+        .submit(submit_req("synthetic:noise=0.5,n=1200,seed=1", 64, 1))
+        .unwrap();
+    c.wait(job).unwrap();
+    let r = save(&mut c);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(r.get("contexts").unwrap().as_u64(), Some(1));
+    let files = r.get("files").unwrap().as_arr().unwrap().clone();
+    assert_eq!(files.len(), 1);
+    let file = files[0].as_str().unwrap().to_string();
+
+    // restoring over live state skips it (the live context may be warmer)
+    let restore = |c: &mut Client| {
+        c.call(&Json::obj().set("cmd", "snapshot_restore").set("dir", rel.as_str()))
+            .unwrap()
+    };
+    let r = restore(&mut c);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(r.get("contexts").unwrap().as_u64(), Some(0));
+    assert!(r.get("skipped").unwrap().as_u64().unwrap() >= 1);
+
+    // corrupt one byte of the saved file: the restore fails and names it
+    let path = abs.join(&file);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    let r = restore(&mut c);
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false), "{r}");
+    let err = r.get("error").unwrap().as_str().unwrap();
+    assert!(err.contains("snapshot") && err.contains(&file), "{err}");
+
+    stop_server(addr, handle);
+    let _ = std::fs::remove_dir_all(&abs);
+}

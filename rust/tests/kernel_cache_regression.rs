@@ -1,0 +1,135 @@
+//! Regression lock for the warm-cache key: the profile cache (and
+//! therefore the `.hsts` context snapshot) is keyed by
+//! `(s, distance kind, allow_self_match)` — **not** by kernel. A profile
+//! produced under `Kernel::Simd` must warm a `Kernel::Scalar` session
+//! bit-identically, both through the in-process cache seam
+//! (`warm_profiles` → `store_warm_profile`) and through the full
+//! encode → decode wire path. This only holds because the kernels are
+//! bit-identical by construction (`golden_conformance.rs` pins that); if
+//! either invariant breaks, this test names which seam leaked.
+
+use hstime::algo::{self, Algorithm as _, SearchReport};
+use hstime::config::SearchParams;
+use hstime::context::SearchContext;
+use hstime::dist::Kernel;
+use hstime::snapshot::{
+    decode_context, encode_context, ContextSnapshot, ProfileEntry,
+    SeriesFingerprint,
+};
+use hstime::ts::{generators, TimeSeries};
+
+fn fixture() -> (TimeSeries, SearchParams) {
+    let ts = TimeSeries::new("cache-ecg", generators::ecg_like(1_200, 100, 1, 33));
+    let params = SearchParams::new(64, 4, 4).with_discords(2).with_seed(5);
+    (ts, params)
+}
+
+fn run_cold(ts: &TimeSeries, params: &SearchParams, kernel: Kernel) -> (SearchContext, SearchReport) {
+    let ctx = SearchContext::builder(ts).kernel(kernel).build();
+    let rep = algo::hst::HstSearch::default()
+        .run_ctx(&ctx, params)
+        .expect("cold hst run");
+    (ctx, rep)
+}
+
+fn assert_same_discords(label: &str, a: &SearchReport, b: &SearchReport) {
+    assert_eq!(a.discords.len(), b.discords.len(), "{label}: discord count");
+    for (da, db) in a.discords.iter().zip(b.discords.iter()) {
+        assert!(
+            da.position == db.position
+                && da.neighbor == db.neighbor
+                && da.nnd.to_bits() == db.nnd.to_bits(),
+            "{label}: {}:{}:{:016x} vs {}:{}:{:016x}",
+            da.position,
+            da.neighbor,
+            da.nnd.to_bits(),
+            db.position,
+            db.neighbor,
+            db.nnd.to_bits()
+        );
+    }
+}
+
+#[test]
+fn simd_profile_warms_scalar_session_bit_identically() {
+    let (ts, params) = fixture();
+    let (ctx_simd, simd_cold) = run_cold(&ts, &params, Kernel::Simd);
+    let (_, scalar_cold) = run_cold(&ts, &params, Kernel::Scalar);
+    assert!(simd_cold.prep_calls > 0, "cold run paid no preparation");
+    assert_same_discords("simd cold vs scalar cold", &simd_cold, &scalar_cold);
+
+    // in-process seam: move the simd-built profiles into a scalar context
+    let exported = ctx_simd.warm_profiles();
+    assert!(!exported.is_empty(), "simd run left no warm profile");
+    let ctx_scalar = SearchContext::builder(&ts).kernel(Kernel::Scalar).build();
+    for (s, kind, allow, profile) in exported {
+        ctx_scalar.store_warm_profile(s, kind, allow, profile);
+    }
+    let warm = algo::hst::HstSearch::default()
+        .run_ctx(&ctx_scalar, &params)
+        .expect("warm scalar run");
+    assert_eq!(
+        warm.prep_calls, 0,
+        "scalar session re-prepared despite the simd-built profile — the \
+         cache key is discriminating on kernel"
+    );
+    assert!(
+        warm.distance_calls < scalar_cold.distance_calls,
+        "warm run cost {} >= cold {}",
+        warm.distance_calls,
+        scalar_cold.distance_calls
+    );
+    assert_same_discords("warm scalar vs cold scalar", &warm, &scalar_cold);
+}
+
+#[test]
+fn simd_snapshot_bytes_warm_scalar_session_through_the_wire() {
+    let (ts, params) = fixture();
+    let (ctx_simd, _) = run_cold(&ts, &params, Kernel::Simd);
+    let (_, scalar_cold) = run_cold(&ts, &params, Kernel::Scalar);
+
+    // the wire format carries no kernel field for context snapshots, so a
+    // simd-written file is indistinguishable from a scalar-written one
+    let snapshot_of = |ctx: &SearchContext| -> Vec<u8> {
+        let profiles = ctx
+            .warm_profiles()
+            .into_iter()
+            .map(|(s, kind, allow_self_match, profile)| ProfileEntry {
+                s,
+                kind,
+                allow_self_match,
+                profile,
+            })
+            .collect();
+        encode_context(&ContextSnapshot {
+            dataset: ts.name.clone(),
+            scale_div: 1,
+            sax: params.sax,
+            fingerprint: SeriesFingerprint::of(&ts.points),
+            profiles,
+        })
+    };
+    let bytes = snapshot_of(&ctx_simd);
+
+    // kernels are bit-identical by construction, so the *files* they
+    // write must be byte-identical too
+    let (ctx_scalar_cold, _) = run_cold(&ts, &params, Kernel::Scalar);
+    assert_eq!(
+        bytes,
+        snapshot_of(&ctx_scalar_cold),
+        "simd and scalar runs wrote different snapshot bytes"
+    );
+
+    // restore into a scalar session and search warm
+    let snap = decode_context(&bytes).expect("decode simd-written snapshot");
+    snap.check_series(&ts.points).expect("fingerprint must match");
+    let ctx = SearchContext::builder(&ts).kernel(Kernel::Scalar).build();
+    for e in snap.profiles {
+        ctx.store_warm_profile(e.s, e.kind, e.allow_self_match, e.profile);
+    }
+    let warm = algo::hst::HstSearch::default()
+        .run_ctx(&ctx, &params)
+        .expect("warm run from wire bytes");
+    assert_eq!(warm.prep_calls, 0, "restored profile did not warm the session");
+    assert_same_discords("wire-warmed scalar vs cold scalar", &warm, &scalar_cold);
+}

@@ -1,0 +1,290 @@
+//! Snapshot codec property tests: random contexts and monitors must
+//! round-trip field-bitwise through the `.hsts` codec (including NaN,
+//! `-0.0`, and the ∞ init sentinel), and every corruption — truncation
+//! at any section boundary, any single-byte flip, a bumped version
+//! byte — must surface as a *named* [`SnapshotError`], never a panic
+//! and never a silently-warm restore.
+
+use hstime::config::SearchParams;
+use hstime::discord::{NndProfile, NO_NEIGHBOR};
+use hstime::dist::Kernel;
+use hstime::prop_assert;
+use hstime::sax::SaxWord;
+use hstime::snapshot::store;
+use hstime::snapshot::{
+    decode_context, decode_monitor, distance_kind_code, distance_kind_from_code,
+    encode_context, encode_monitor, inspect, ContextSnapshot, MonitorSnapshot,
+    ProfileEntry, SeriesFingerprint, SnapshotError, SECTION_HEADER_LEN,
+    SNAPSHOT_HEADER_LEN, SNAPSHOT_VERSION,
+};
+use hstime::stream::StreamingMonitor;
+use hstime::util::proptest::{check, Gen};
+
+/// An f64 that is frequently one of the bit patterns a naive text
+/// round-trip would destroy.
+fn awkward_f64(g: &mut Gen) -> f64 {
+    match g.rng.below(8) {
+        0 => f64::NAN,
+        1 => -0.0,
+        2 => f64::INFINITY,
+        3 => f64::MIN_POSITIVE,
+        4 => 1e300,
+        _ => g.rng.normal(),
+    }
+}
+
+fn random_profile(g: &mut Gen, n: usize) -> NndProfile {
+    let mut p = NndProfile::new(n);
+    for i in 0..n {
+        if g.rng.below(4) == 0 {
+            continue; // keep the ∞ / no-neighbor init sentinel pair
+        }
+        p.nnd[i] = awkward_f64(g);
+        p.ngh[i] = if g.rng.below(5) == 0 {
+            NO_NEIGHBOR
+        } else {
+            g.rng.below(n)
+        };
+    }
+    p
+}
+
+fn random_context(g: &mut Gen) -> ContextSnapshot {
+    let dataset = g
+        .choose(&["ECG 108", "synthetic:noise=0.3,n=2000,seed=3", "Power demand"])
+        .to_string();
+    let p = *g.choose(&[2usize, 4]);
+    let s = p * g.size(2, 10);
+    let n_profiles = g.size(0, 3);
+    let profiles = (0..n_profiles)
+        .map(|_| {
+            let n = g.size(1, 40);
+            ProfileEntry {
+                s: *g.choose(&[2usize, 4]) * g.size(2, 10),
+                kind: distance_kind_from_code(1 + g.rng.below(2) as u8).unwrap(),
+                allow_self_match: g.rng.below(2) == 1,
+                profile: random_profile(g, n),
+            }
+        })
+        .collect();
+    ContextSnapshot {
+        dataset,
+        scale_div: 1 + g.rng.below(16) as u64,
+        sax: hstime::config::SaxParams { s, p, alphabet: g.size(3, 6) },
+        fingerprint: SeriesFingerprint {
+            len: g.rng.next_u64() % 1_000_000,
+            hash: g.rng.next_u64(),
+        },
+        profiles,
+    }
+}
+
+fn random_monitor(g: &mut Gen) -> MonitorSnapshot {
+    let p = *g.choose(&[2usize, 4]);
+    let s = p * g.size(2, 8);
+    let alphabet = g.size(3, 6);
+    let capacity = 2 * s + g.size(0, 3 * s);
+    let len = g.size(0, capacity);
+    let n = if len >= s { len - s + 1 } else { 0 };
+    let start = g.rng.next_u64() % 1_000_000;
+    MonitorSnapshot {
+        name: g.choose(&["sensor-7", "wal stream", "träce"]).to_string(),
+        params: SearchParams::new(s, p, alphabet)
+            .with_discords(g.size(1, 3))
+            .with_seed(g.rng.next_u64()),
+        capacity,
+        refresh_every: g.size(0, 500),
+        kernel: if g.rng.below(2) == 0 { Kernel::Scalar } else { Kernel::Simd },
+        buf: (0..len).map(|_| awkward_f64(g)).collect(),
+        start,
+        stats_mean: (0..n).map(|_| awkward_f64(g)).collect(),
+        stats_std: (0..n).map(|_| awkward_f64(g)).collect(),
+        words: (0..n)
+            .map(|_| {
+                let syms: Vec<u8> =
+                    (0..p).map(|_| g.rng.below(alphabet) as u8).collect();
+                SaxWord::new(&syms)
+            })
+            .collect(),
+        nnd: (0..n).map(|_| awkward_f64(g)).collect(),
+        ngh: (0..n)
+            .map(|_| {
+                if g.rng.below(5) == 0 {
+                    u64::MAX
+                } else {
+                    start + g.rng.below(n.max(1)) as u64
+                }
+            })
+            .collect(),
+        warm: g.rng.below(2) == 1,
+        pending: g.size(0, 300),
+        refreshes: g.rng.below(50) as u64,
+        total_calls: g.rng.next_u64() % 1_000_000,
+    }
+}
+
+fn bits_eq(field: &str, a: &[f64], b: &[f64]) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{field}: {} vs {} entries", a.len(), b.len()));
+    }
+    for i in 0..a.len() {
+        if a[i].to_bits() != b[i].to_bits() {
+            return Err(format!(
+                "{field}[{i}]: {:016x} vs {:016x}",
+                a[i].to_bits(),
+                b[i].to_bits()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Every mutation of a valid file must yield a named error from the
+/// full decode path (`store::decode` is what a restore runs first).
+fn corruption_is_rejected(g: &mut Gen, bytes: &[u8]) -> Result<(), String> {
+    // a bumped version byte is refused by name
+    let mut v = bytes.to_vec();
+    v[2] = SNAPSHOT_VERSION + 1;
+    match store::decode(&v) {
+        Err(SnapshotError::BadVersion { found }) if found == SNAPSHOT_VERSION + 1 => {}
+        other => return Err(format!("version bump decoded as {other:?}")),
+    }
+
+    // truncation at every structural boundary: file start, header edge,
+    // each section header, each payload start, mid-payload, last byte
+    let summary =
+        inspect(bytes).map_err(|e| format!("inspect of a valid file: {e}"))?;
+    let mut cuts = vec![0, 1, SNAPSHOT_HEADER_LEN - 1, SNAPSHOT_HEADER_LEN];
+    for sec in &summary.sections {
+        cuts.push(sec.offset);
+        cuts.push(sec.offset + SECTION_HEADER_LEN);
+        cuts.push(sec.offset + SECTION_HEADER_LEN + sec.len / 2);
+    }
+    cuts.push(bytes.len() - 1);
+    for cut in cuts {
+        if cut >= bytes.len() {
+            continue;
+        }
+        match store::decode(&bytes[..cut]) {
+            Err(SnapshotError::Truncated { .. }) => {}
+            other => return Err(format!("truncation at {cut} decoded as {other:?}")),
+        }
+    }
+
+    // any single corrupted byte anywhere in the file must be caught:
+    // header fields by their own checks, payloads by the section CRCs
+    for _ in 0..24 {
+        let pos = g.rng.below(bytes.len());
+        let mask = (1 + g.rng.below(255)) as u8;
+        let mut v = bytes.to_vec();
+        v[pos] ^= mask;
+        match store::decode(&v) {
+            Err(e) => {
+                let msg = e.to_string();
+                if !msg.contains("snapshot") {
+                    return Err(format!(
+                        "flip at {pos} (mask {mask:#04x}): error {msg:?} does \
+                         not name its field"
+                    ));
+                }
+            }
+            Ok(_) => {
+                return Err(format!(
+                    "flip at {pos} (mask {mask:#04x}) decoded cleanly"
+                ))
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_snapshot_roundtrips_and_rejects_corruption() {
+    check("snapshot-roundtrip+corruption", 61, 10, |g| {
+        // -- context: encode -> decode is field-bitwise --
+        let ctx = random_context(g);
+        let bytes = encode_context(&ctx);
+        let back =
+            decode_context(&bytes).map_err(|e| format!("context decode: {e}"))?;
+        prop_assert!(back.dataset == ctx.dataset, "dataset {:?}", back.dataset);
+        prop_assert!(back.scale_div == ctx.scale_div, "scale_div");
+        prop_assert!(back.sax == ctx.sax, "sax");
+        prop_assert!(back.fingerprint == ctx.fingerprint, "fingerprint");
+        // the encoder sorts profiles by key; compare against the same order
+        let mut want = ctx.profiles.clone();
+        want.sort_by_key(|e| (e.s, distance_kind_code(e.kind), e.allow_self_match));
+        prop_assert!(
+            back.profiles.len() == want.len(),
+            "{} vs {} profiles",
+            back.profiles.len(),
+            want.len()
+        );
+        for (a, b) in want.iter().zip(&back.profiles) {
+            prop_assert!(
+                a.s == b.s && a.kind == b.kind
+                    && a.allow_self_match == b.allow_self_match,
+                "profile key ({}, {:?}, {})",
+                a.s,
+                a.kind,
+                a.allow_self_match
+            );
+            bits_eq("profile nnd", &a.profile.nnd, &b.profile.nnd)?;
+            prop_assert!(a.profile.ngh == b.profile.ngh, "profile ngh");
+        }
+
+        // -- monitor: encode -> decode is field-bitwise --
+        let mon = random_monitor(g);
+        let mbytes = encode_monitor(&mon);
+        let mback =
+            decode_monitor(&mbytes).map_err(|e| format!("monitor decode: {e}"))?;
+        prop_assert!(mback.name == mon.name, "name {:?}", mback.name);
+        prop_assert!(mback.params == mon.params, "params");
+        prop_assert!(mback.capacity == mon.capacity, "capacity");
+        prop_assert!(mback.refresh_every == mon.refresh_every, "refresh_every");
+        prop_assert!(mback.kernel == mon.kernel, "kernel");
+        prop_assert!(mback.start == mon.start, "start");
+        prop_assert!(mback.words == mon.words, "words");
+        prop_assert!(mback.ngh == mon.ngh, "ngh");
+        prop_assert!(mback.warm == mon.warm, "warm");
+        prop_assert!(mback.pending == mon.pending, "pending");
+        prop_assert!(mback.refreshes == mon.refreshes, "refreshes");
+        prop_assert!(mback.total_calls == mon.total_calls, "total_calls");
+        bits_eq("buf", &mon.buf, &mback.buf)?;
+        bits_eq("stats_mean", &mon.stats_mean, &mback.stats_mean)?;
+        bits_eq("stats_std", &mon.stats_std, &mback.stats_std)?;
+        bits_eq("nnd", &mon.nnd, &mback.nnd)?;
+
+        // a decoded-then-desynced snapshot must never become a live
+        // monitor (the silently-warm failure mode)
+        let mut tampered = mback.clone();
+        tampered.ngh.push(0);
+        prop_assert!(
+            StreamingMonitor::from_snapshot(tampered).is_err(),
+            "desynced ngh vector restored into a live monitor"
+        );
+
+        // -- corruption sweeps over both encodings --
+        corruption_is_rejected(g, &bytes)?;
+        corruption_is_rejected(g, &mbytes)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn kind_dispatch_refuses_cross_kind_files() {
+    // a context file whose kind byte claims "monitor" (and vice versa)
+    // is a layout error, not a misread: the first section's tag gives
+    // the mismatch away before any content is trusted
+    let g = &mut Gen { rng: hstime::util::rng::Rng64::new(9), seed: 9, scale: 1.0 };
+    let ctx_bytes = encode_context(&random_context(g));
+    let mon_bytes = encode_monitor(&random_monitor(g));
+    for (bytes, wrong_kind) in [(ctx_bytes, 2u8), (mon_bytes, 1u8)] {
+        let mut v = bytes.clone();
+        v[3] = wrong_kind;
+        let err = store::decode(&v).unwrap_err();
+        assert!(
+            matches!(err, SnapshotError::SectionOrder { .. }),
+            "kind swap decoded as {err:?}"
+        );
+    }
+}

@@ -1,0 +1,180 @@
+//! The PR's acceptance property: kill a stream monitor at a random point
+//! mid-stream, round-trip its full state through the `.hsts` wire codec,
+//! and the restored monitor's refreshes must be **bit-identical**
+//! (positions, neighbors, and nnd bit patterns) to the run that never
+//! stopped — with `prep_calls == 0` on the restored warm refresh and
+//! strictly fewer distance calls than a cold restart over the same
+//! window.
+
+use hstime::config::{SaxParams, SearchParams};
+use hstime::prop_assert;
+use hstime::snapshot::{decode_monitor, encode_monitor};
+use hstime::stream::{StreamUpdate, StreamingMonitor};
+use hstime::ts::generators;
+use hstime::util::proptest::{check, Gen};
+
+/// Random series from a random generator family (mirrors
+/// `property_tests.rs`).
+fn random_series(g: &mut Gen, n: usize) -> Vec<f64> {
+    let fam = g.rng.below(5);
+    let seed = g.rng.next_u64();
+    let period = g.size(40, 120);
+    match fam {
+        0 => generators::ecg_like(n, period, 1, seed),
+        1 => generators::respiration_like(n, period, 1, seed),
+        2 => generators::valve_like(n, period, 1, seed),
+        3 => generators::sine_with_noise(n, g.f64_in(0.001, 1.0), seed),
+        _ => generators::random_walk(n, 0.5, seed),
+    }
+}
+
+fn updates_bitwise_equal(
+    label: &str,
+    a: &StreamUpdate,
+    b: &StreamUpdate,
+) -> Result<(), String> {
+    if a.window_start != b.window_start
+        || a.window_len != b.window_len
+        || a.refresh != b.refresh
+        || a.warm != b.warm
+        || a.distance_calls != b.distance_calls
+        || a.prep_calls != b.prep_calls
+    {
+        return Err(format!(
+            "{label}: update metadata diverged (start {}/{}, refresh {}/{}, \
+             calls {}/{})",
+            a.window_start, b.window_start, a.refresh, b.refresh,
+            a.distance_calls, b.distance_calls
+        ));
+    }
+    if a.discords.len() != b.discords.len() {
+        return Err(format!(
+            "{label}: {} vs {} discords",
+            a.discords.len(),
+            b.discords.len()
+        ));
+    }
+    for (da, db) in a.discords.iter().zip(&b.discords) {
+        if da.position != db.position
+            || da.neighbor != db.neighbor
+            || da.nnd.to_bits() != db.nnd.to_bits()
+        {
+            return Err(format!(
+                "{label}: discord {}:{}:{:016x} vs {}:{}:{:016x}",
+                da.position,
+                da.neighbor,
+                da.nnd.to_bits(),
+                db.position,
+                db.neighbor,
+                db.nnd.to_bits()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_warm_restart_refresh_matches_uninterrupted_bitwise() {
+    check("warm-restart==uninterrupted", 71, 8, |g| {
+        let p = *g.choose(&[2usize, 4]);
+        let s = p * g.size(8, 14);
+        let window = s * g.size(4, 6);
+        let params = SearchParams {
+            sax: SaxParams { s, p, alphabet: g.size(3, 5) },
+            k: g.size(1, 2),
+            seed: g.rng.next_u64(),
+            znormalize: true,
+            allow_self_match: false,
+            threads: 0,
+            s_range: None,
+        };
+
+        // a random append schedule: fill the window, then 3-5 batches
+        let batches = g.size(3, 5);
+        let deltas: Vec<usize> = (0..batches).map(|_| g.size(1, s)).collect();
+        let total = window + deltas.iter().sum::<usize>();
+        let pts = random_series(g, total);
+        // the kill lands after a random batch with >= 1 refresh behind it
+        let kill_after = g.size(0, batches - 2);
+
+        let mut straight = StreamingMonitor::new(params.clone(), window)
+            .map_err(|e| format!("{e:#}"))?
+            .with_name("wal");
+        let mut doomed = StreamingMonitor::new(params.clone(), window)
+            .map_err(|e| format!("{e:#}"))?
+            .with_name("wal");
+        straight.extend(&pts[..window]).map_err(|e| format!("{e:#}"))?;
+        doomed.extend(&pts[..window]).map_err(|e| format!("{e:#}"))?;
+        straight.refresh().map_err(|e| format!("{e:#}"))?;
+        doomed.refresh().map_err(|e| format!("{e:#}"))?;
+
+        let mut fed = window;
+        let mut revived: Option<StreamingMonitor> = None;
+        for (b, &delta) in deltas.iter().enumerate() {
+            let live: &mut StreamingMonitor = revived.as_mut().unwrap_or(&mut doomed);
+            straight
+                .extend(&pts[fed..fed + delta])
+                .map_err(|e| format!("{e:#}"))?;
+            live.extend(&pts[fed..fed + delta])
+                .map_err(|e| format!("{e:#}"))?;
+            fed += delta;
+            let a = straight.refresh().map_err(|e| format!("{e:#}"))?;
+            let c = live.refresh().map_err(|e| format!("{e:#}"))?;
+            updates_bitwise_equal(&format!("batch {b} (s={s})"), &a, &c)?;
+            if revived.is_some() {
+                // every post-restore refresh rides the restored warm
+                // profile: zero re-preparation, ever
+                prop_assert!(c.warm, "batch {b}: post-restore refresh was cold");
+                prop_assert!(
+                    c.prep_calls == 0,
+                    "batch {b}: restored monitor paid {} prep calls",
+                    c.prep_calls
+                );
+            }
+
+            if b == kill_after {
+                // kill: full state through the wire codec, then restore
+                let bytes = encode_monitor(&doomed.snapshot());
+                let snap = decode_monitor(&bytes).map_err(|e| format!("{e}"))?;
+                let m = StreamingMonitor::from_snapshot(snap)
+                    .map_err(|e| format!("restore refused: {e}"))?;
+                prop_assert!(m.is_warm(), "restored monitor lost its warmth");
+                prop_assert!(
+                    m.consumed() == straight.consumed(),
+                    "restored clock {} vs {}",
+                    m.consumed(),
+                    straight.consumed()
+                );
+                revived = Some(m);
+            }
+        }
+        let revived = revived.ok_or("kill point never reached")?;
+
+        // the cold comparator: a fresh monitor over the same final
+        // window pays preparation the restored one provably skips
+        let mut cold = StreamingMonitor::new(params, window)
+            .map_err(|e| format!("{e:#}"))?;
+        cold.extend(&pts).map_err(|e| format!("{e:#}"))?;
+        let cold_update = cold.refresh().map_err(|e| format!("{e:#}"))?;
+        prop_assert!(
+            cold_update.prep_calls > 0,
+            "cold restart unexpectedly paid no preparation"
+        );
+        prop_assert!(
+            revived.distance_calls() == straight.distance_calls(),
+            "cumulative call accounting diverged: {} vs {}",
+            revived.distance_calls(),
+            straight.distance_calls()
+        );
+        // the final warm refresh beat the cold restart over this window
+        let mut warm_final = straight;
+        let warm_update = warm_final.refresh().map_err(|e| format!("{e:#}"))?;
+        prop_assert!(
+            warm_update.distance_calls < cold_update.distance_calls,
+            "warm restart cost {} >= cold restart {} (s={s}, window={window})",
+            warm_update.distance_calls,
+            cold_update.distance_calls
+        );
+        Ok(())
+    });
+}
