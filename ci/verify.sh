@@ -45,7 +45,13 @@ cargo bench --no-run
 
 step "bench trajectory: quick sweep emits schema-valid JSON"
 BENCH_SMOKE="$(mktemp /tmp/hst_bench_smoke.XXXXXX.json)"
-trap 'rm -f "$BENCH_SMOKE"' EXIT
+TRACE_SMOKE="$(mktemp /tmp/hst_trace_smoke.XXXXXX.jsonl)"
+SERVE_PID=""
+cleanup() {
+    rm -f "$BENCH_SMOKE" "$TRACE_SMOKE"
+    [ -n "$SERVE_PID" ] && kill "$SERVE_PID" 2>/dev/null || true
+}
+trap cleanup EXIT
 cargo run -q --release --bin hst -- bench --quick --json "$BENCH_SMOKE"
 cargo run -q --release --bin hst -- bench --check "$BENCH_SMOKE"
 
@@ -82,6 +88,45 @@ for f in rust/tests/golden/*.hsts; do
     rm -f "$CORRUPT"
     break   # one fixture is enough for the negative path
 done
+
+step "obs: --trace emits a schema-valid span trace ('hst trace' gates it)"
+cargo run -q --release --bin hst -- discover 'ECG 15' --scale-div 8 --k 2 --trace "$TRACE_SMOKE"
+head -1 "$TRACE_SMOKE" | grep -q '"schema":"hst-trace/1"' || {
+    echo "FAIL: trace header line does not carry the hst-trace/1 schema"
+    exit 1
+}
+cargo run -q --release --bin hst -- trace "$TRACE_SMOKE"
+
+step "obs: service metrics smoke (submit, then 'metrics' in both formats)"
+OBS_PORT=$(( 20000 + RANDOM % 20000 ))
+cargo run -q --release --bin hst -- serve --addr "127.0.0.1:$OBS_PORT" --workers 1 &
+SERVE_PID=$!
+for _ in $(seq 1 100); do
+    if (exec 3<>"/dev/tcp/127.0.0.1/$OBS_PORT") 2>/dev/null; then break; fi
+    sleep 0.1
+done
+cargo run -q --release --bin hst -- submit --addr "127.0.0.1:$OBS_PORT" --dataset 'ECG 15' --algo hst >/dev/null
+exec 3<>"/dev/tcp/127.0.0.1/$OBS_PORT"
+printf '{"cmd":"metrics"}\n' >&3
+IFS= read -r METRICS_JSON <&3
+echo "$METRICS_JSON" | grep -q '"ok":true' || { echo "FAIL: metrics (json) not ok: $METRICS_JSON"; exit 1; }
+echo "$METRICS_JSON" | grep -q 'hst_job_latency_ms{engine=' || {
+    echo "FAIL: metrics (json) is missing the per-engine latency histogram"
+    exit 1
+}
+printf '{"cmd":"metrics","format":"prometheus"}\n' >&3
+IFS= read -r METRICS_PROM <&3
+echo "$METRICS_PROM" | grep -q '"ok":true' || { echo "FAIL: metrics (prometheus) not ok: $METRICS_PROM"; exit 1; }
+for sample in 'hst_jobs_completed_total{engine=' 'hst_job_latency_ms_bucket' 'hst_job_cps_count'; do
+    echo "$METRICS_PROM" | grep -q "$sample" || {
+        echo "FAIL: prometheus exposition is missing $sample"
+        exit 1
+    }
+done
+printf '{"cmd":"shutdown"}\n' >&3
+exec 3<&- 3>&-
+wait "$SERVE_PID" || true
+SERVE_PID=""
 
 echo
 echo "verify: all gates passed"

@@ -81,7 +81,7 @@ impl Algorithm for BruteForce {
         "brute"
     }
 
-    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
+    fn search(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         let s = params.sax.s;
         let n = ctx.series().num_sequences(s);
         ensure!(n >= 2, "series too short for s={s}");
@@ -93,6 +93,15 @@ impl Algorithm for BruteForce {
         ctx.notify_phase(self.name(), "search");
         let profile = Self::exact_profile(ctx, params, dist.as_ref())?;
         let discords = Self::discords_from_profile(&profile, s, params.k);
+        ctx.trace_pass(&crate::obs::PassEvent {
+            engine: self.name(),
+            phase: "search",
+            index: 0,
+            candidates: n as u64,
+            abandons: dist.abandons(),
+            calls: dist.calls(),
+            best: discords.first().map(|d| d.nnd).unwrap_or(f64::NAN),
+        });
         for (rank, d) in discords.iter().enumerate() {
             ctx.notify_discord(rank, d);
         }

@@ -60,6 +60,13 @@ pub struct DaddOutcome {
     pub phase1_survivors: usize,
     /// True when fewer than k discords met the range (r was too big).
     pub missing: bool,
+    /// Distance calls spent in phase 1 / phase 2 (deltas of the passed-in
+    /// session, so callers sharing one session across runs still get
+    /// per-run numbers). The trace layer reports these; they are not part
+    /// of the search result.
+    pub phase_calls: [u64; 2],
+    /// Early-abandoned calls per phase (same delta accounting).
+    pub phase_abandons: [u64; 2],
 }
 
 impl Dadd {
@@ -79,6 +86,8 @@ impl Dadd {
 
         // --- Phase 1: streaming candidate selection -------------------
         // `alive[c]` = candidate c not yet evicted.
+        let calls_before = dist.calls();
+        let abandons_before = dist.abandons();
         let mut cands: Vec<usize> = Vec::new();
         for x in 0..n {
             ctx.check(dist.calls())?;
@@ -108,6 +117,10 @@ impl Dadd {
             }
         }
         let phase1_survivors = cands.len();
+        let phase1_calls = dist.calls() - calls_before;
+        let phase1_abandons = dist.abandons() - abandons_before;
+        let calls_before = dist.calls();
+        let abandons_before = dist.abandons();
 
         // --- Phase 2: refinement over page-sized chunks ----------------
         let mut nnd: Vec<f64> = vec![f64::INFINITY; cands.len()];
@@ -171,6 +184,8 @@ impl Dadd {
             discords,
             phase1_survivors,
             missing,
+            phase_calls: [phase1_calls, dist.calls() - calls_before],
+            phase_abandons: [phase1_abandons, dist.abandons() - abandons_before],
         })
     }
 }
@@ -180,7 +195,7 @@ impl Algorithm for Dadd {
         "dadd"
     }
 
-    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
+    fn search(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         let s = params.sax.s;
         let n = ctx.series().num_sequences(s);
         ensure!(n >= 2, "series too short for s={s}");
@@ -192,6 +207,19 @@ impl Algorithm for Dadd {
         let dist = ctx.distance(&stats, params.distance_kind());
         ctx.notify_phase(self.name(), "search");
         let outcome = self.run_detailed(ctx, params, dist.as_ref())?;
+        let best = outcome.discords.first().map(|d| d.nnd).unwrap_or(f64::NAN);
+        let phase_candidates = [n as u64, outcome.phase1_survivors as u64];
+        for phase in 0..2 {
+            ctx.trace_pass(&crate::obs::PassEvent {
+                engine: self.name(),
+                phase: "search",
+                index: phase,
+                candidates: phase_candidates[phase],
+                abandons: outcome.phase_abandons[phase],
+                calls: outcome.phase_calls[phase],
+                best: if phase == 1 { best } else { f64::NAN },
+            });
+        }
         for (rank, d) in outcome.discords.iter().enumerate() {
             ctx.notify_discord(rank, d);
         }

@@ -123,7 +123,7 @@ impl Algorithm for HotSax {
         "hotsax"
     }
 
-    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
+    fn search(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         let s = params.sax.s;
         let n = ctx.series().num_sequences(s);
         ensure!(n >= 2, "series too short for s={s}");
@@ -141,7 +141,19 @@ impl Algorithm for HotSax {
         let mut zones = ExclusionZones::new();
         let mut discords = Vec::new();
         for rank in 0..params.k {
-            match find_one(ctx, dist.as_ref(), &idx, params, &zones, &mut rng)? {
+            let calls_before = dist.calls();
+            let abandons_before = dist.abandons();
+            let found = find_one(ctx, dist.as_ref(), &idx, params, &zones, &mut rng)?;
+            ctx.trace_pass(&crate::obs::PassEvent {
+                engine: self.name(),
+                phase: "search",
+                index: rank,
+                candidates: n as u64,
+                abandons: dist.abandons() - abandons_before,
+                calls: dist.calls() - calls_before,
+                best: found.as_ref().map(|d| d.nnd).unwrap_or(f64::NAN),
+            });
+            match found {
                 Some(d) => {
                     zones.add(d.position, s);
                     ctx.notify_discord(rank, &d);

@@ -346,13 +346,34 @@ impl HstSearch {
         // The bounded (~2N-call) preparation runs to completion; budget
         // and cancellation take effect from this checkpoint on.
         ctx.check(dist.calls())?;
+        ctx.trace_pass(&crate::obs::PassEvent {
+            engine: algo_name,
+            phase: "prepare",
+            index: 0,
+            candidates: n as u64,
+            abandons: dist.abandons(),
+            calls: prep_calls,
+            best: f64::NAN,
+        });
 
         ctx.notify_phase(algo_name, "search");
         let mut zones = ExclusionZones::new();
         let mut discords = Vec::new();
         for ki in 0..params.k {
-            match self.pass(ctx, dist, &idx, &mut profile, &zones, params, &mut rng, ki == 0)?
-            {
+            let calls_before = dist.calls();
+            let abandons_before = dist.abandons();
+            let found =
+                self.pass(ctx, dist, &idx, &mut profile, &zones, params, &mut rng, ki == 0)?;
+            ctx.trace_pass(&crate::obs::PassEvent {
+                engine: algo_name,
+                phase: "search",
+                index: ki,
+                candidates: n as u64,
+                abandons: dist.abandons() - abandons_before,
+                calls: dist.calls() - calls_before,
+                best: found.as_ref().map(|d| d.nnd).unwrap_or(f64::NAN),
+            });
+            match found {
                 Some(d) => {
                     zones.add(d.position, s);
                     ctx.notify_discord(ki, &d);
@@ -384,7 +405,7 @@ impl Algorithm for HstSearch {
         "hst"
     }
 
-    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
+    fn search(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         self.run_serial(ctx, params, self.name(), false)
     }
 }

@@ -242,7 +242,7 @@ impl Algorithm for HstPar {
         "hst-par"
     }
 
-    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
+    fn search(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         let threads = self.resolve_threads(params);
         if threads <= 1 {
             // one worker ⇒ the serial algorithm, bit-identical calls too;
@@ -287,6 +287,16 @@ impl Algorithm for HstPar {
         };
         let published = AtomicU64::new(prep_calls);
         ctx.check(prep_calls)?;
+        ctx.trace_pass(&crate::obs::PassEvent {
+            engine: self.name(),
+            phase: "prepare",
+            index: 0,
+            candidates: n as u64,
+            // per-worker abandon counters are not merged across the pool
+            abandons: 0,
+            calls: prep_calls,
+            best: f64::NAN,
+        });
 
         ctx.notify_phase(self.name(), "search");
         let mut zones = ExclusionZones::new();
@@ -307,6 +317,15 @@ impl Algorithm for HstPar {
                 &published,
             )?;
             total_calls += calls;
+            ctx.trace_pass(&crate::obs::PassEvent {
+                engine: self.name(),
+                phase: "search",
+                index: ki,
+                candidates: n as u64,
+                abandons: 0,
+                calls,
+                best: found.as_ref().map(|d| d.nnd).unwrap_or(f64::NAN),
+            });
             match found {
                 Some(d) => {
                     zones.add(d.position, s);

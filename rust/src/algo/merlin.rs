@@ -119,7 +119,7 @@ impl Merlin {
         let mut total_calls = 0u64;
         let mut recent: Vec<f64> = Vec::new(); // last discord nnds
 
-        for s in range.lengths() {
+        for (li, s) in range.lengths().enumerate() {
             // Budget is enforced cumulatively across lengths here; within
             // one length, DADD checks against the per-length session, so
             // the overshoot is bounded by one length's cost.
@@ -157,6 +157,17 @@ impl Merlin {
                 r *= if recent.is_empty() { 0.5 } else { 0.99 };
             };
             total_calls += dist.calls();
+            // one trace pass per scanned length: the whole r-schedule for
+            // this L, however many DRAG attempts it took
+            ctx.trace_pass(&crate::obs::PassEvent {
+                engine: "merlin",
+                phase: "search",
+                index: li,
+                candidates: stats.len() as u64,
+                abandons: dist.abandons(),
+                calls: dist.calls(),
+                best: found.nnd,
+            });
             recent.push(found.nnd);
             out.push(LengthDiscord {
                 s,
@@ -184,10 +195,11 @@ impl Algorithm for Merlin {
     /// (`nnd/√s` — the same scale `hst-vl` ranks on; raw nnd grows with
     /// √s, which made raw ranking favor longer lengths). Per-length raw
     /// results remain available via [`scan`](Self::scan).
-    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
+    fn search(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         let s = params.sax.s;
         ctx.check(0)?;
         let start = Instant::now();
+        ctx.notify_phase(self.name(), "prepare");
         let range = if self.max_len == 0 {
             params.s_range.unwrap_or_else(|| LengthRange::around(s))
         } else {
@@ -198,6 +210,7 @@ impl Algorithm for Merlin {
             max_len: range.max,
             step: range.step,
         };
+        ctx.notify_phase(self.name(), "search");
         let (found, calls) = scan_cfg.scan(ctx)?;
         let mut ranked: Vec<&LengthDiscord> = found.iter().collect();
         ranked.sort_by(|a, b| {

@@ -107,12 +107,35 @@ pub trait Algorithm {
     /// Short identifier ("hst", "hotsax", …).
     fn name(&self) -> &'static str;
 
+    /// The engine body: find the first `params.k` discords of the
+    /// context's series, reusing (and extending) the context's prepared
+    /// state. Implementors provide this; callers should prefer
+    /// [`run_ctx`](Self::run_ctx), which wraps it in a trace span.
+    fn search(&self, ctx: &SearchContext, params: &SearchParams)
+        -> Result<SearchReport>;
+
     /// Find the first `params.k` discords of the context's series,
     /// reusing (and extending) the context's prepared state. The primary
     /// entry point: drive many searches through one [`SearchContext`] to
     /// amortize preparation.
-    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams)
-        -> Result<SearchReport>;
+    ///
+    /// Provided: opens a search span on the context's
+    /// [`TraceSink`](crate::obs::TraceSink) (if any), delegates to
+    /// [`search`](Self::search), and closes the span with the report's
+    /// call accounting. Engines never open spans themselves, so internal
+    /// engine-to-engine reuse (e.g. `hst-par` falling back to serial
+    /// `hst`) cannot nest spans.
+    fn run_ctx(
+        &self,
+        ctx: &SearchContext,
+        params: &SearchParams,
+    ) -> Result<SearchReport> {
+        let n = ctx.series().num_sequences(params.sax.s);
+        ctx.trace_search_start(self.name(), n, params.sax.s, params.k);
+        let report = self.search(ctx, params)?;
+        ctx.trace_search_end(self.name(), report.distance_calls, report.prep_calls);
+        Ok(report)
+    }
 
     /// One-shot convenience: find the first `params.k` discords of `ts`
     /// through a throwaway context. Preparation is rebuilt — and the

@@ -107,7 +107,7 @@ impl Algorithm for ParallelScamp {
         "scamp-par"
     }
 
-    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
+    fn search(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         let s = params.sax.s;
         let ts = ctx.series();
         let n = ts.num_sequences(s);
@@ -123,6 +123,15 @@ impl Algorithm for ParallelScamp {
         let threads = ExecPolicy::new(params.threads).resolve();
         let (profile, pairs) = par_matrix_profile(ts, &stats, threads);
         let discords = BruteForce::discords_from_profile(&profile, s, params.k);
+        ctx.trace_pass(&crate::obs::PassEvent {
+            engine: self.name(),
+            phase: "search",
+            index: 0,
+            candidates: n as u64,
+            abandons: 0,
+            calls: pairs,
+            best: discords.first().map(|d| d.nnd).unwrap_or(f64::NAN),
+        });
         for (rank, d) in discords.iter().enumerate() {
             ctx.notify_discord(rank, d);
         }

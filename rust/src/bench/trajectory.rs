@@ -24,7 +24,12 @@
 //! fixture, `n` is the materialized series length in points, `s` the
 //! sequence length, `calls`/`prep_calls` the seed-averaged distance-call
 //! accounting, `cps` the paper's cost per sequence, `wall_ms` the
-//! seed-averaged wall clock. Fixtures are the Tables 1/3/6 registry
+//! seed-averaged wall clock. A record may additionally carry a
+//! `latency` object — the per-run wall-clock histogram summary
+//! (`count`/`sum`/`mean`/`p50`/`p90`/`p99`, the
+//! [`HistogramSnapshot::summary_json`](crate::obs::HistogramSnapshot::summary_json)
+//! shape the service `metrics` command also embeds); sweeps emit it,
+//! older files without it stay valid. Fixtures are the Tables 1/3/6 registry
 //! datasets materialized at a **bounded** length (the quadratic baselines
 //! `brute`/`brute-md`/`scamp` must stay tractable in one sweep) — the
 //! paper-scale runs stay the job of `hst table`. Fixture sizes are pinned
@@ -75,12 +80,17 @@ pub struct BenchRecord {
     pub prep_calls: u64,
     /// Seed-averaged wall clock in milliseconds.
     pub wall_ms: f64,
+    /// Optional per-run wall-clock histogram summary
+    /// (`count`/`sum`/`mean`/`p50`/`p90`/`p99`). `None` in files from
+    /// before the field existed.
+    pub latency: Option<Json>,
 }
 
 impl BenchRecord {
-    /// Serialize one record (all eight schema keys).
+    /// Serialize one record (the eight required schema keys, plus
+    /// `latency` when present).
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let j = Json::obj()
             .set("engine", self.engine.as_str())
             .set("table", self.table.as_str())
             .set("n", self.n)
@@ -88,7 +98,11 @@ impl BenchRecord {
             .set("calls", self.calls)
             .set("cps", self.cps)
             .set("prep_calls", self.prep_calls)
-            .set("wall_ms", self.wall_ms)
+            .set("wall_ms", self.wall_ms);
+        match &self.latency {
+            Some(l) => j.set("latency", l.clone()),
+            None => j,
+        }
     }
 
     /// Parse and validate one record (see [`validate`] for the rules).
@@ -116,6 +130,18 @@ impl BenchRecord {
                 .as_f64()
                 .ok_or_else(|| anyhow!("{k} must be a number"))
         };
+        let latency = match j.get("latency") {
+            None => None,
+            Some(l) => {
+                for k in ["count", "sum", "mean", "p50", "p90", "p99"] {
+                    ensure!(
+                        l.get(k).and_then(|v| v.as_f64()).is_some(),
+                        "latency summary missing numeric key {k:?}"
+                    );
+                }
+                Some(l.clone())
+            }
+        };
         let rec = BenchRecord {
             engine,
             table,
@@ -125,6 +151,7 @@ impl BenchRecord {
             cps: f("cps")?,
             prep_calls: u("prep_calls")?,
             wall_ms: f("wall_ms")?,
+            latency,
         };
         ensure!(rec.n > 0 && rec.s > 0, "n and s must be positive");
         ensure!(rec.cps > 0.0, "cps must be > 0 (got {})", rec.cps);
@@ -300,6 +327,11 @@ pub fn run_trajectory_filtered(
             let runs = cfg.runs.max(1);
             let (mut calls, mut prep, mut ms) = (0u128, 0u128, 0.0f64);
             let mut k = 1usize;
+            // per-cell latency histogram: one observation per run, so
+            // the record carries quantiles alongside the mean wall_ms
+            let obs = crate::obs::Registry::new();
+            let hist =
+                obs.histogram("bench_wall_ms", &crate::obs::LATENCY_BUCKETS_MS);
             for r in 0..runs {
                 let p = fx
                     .params
@@ -308,7 +340,9 @@ pub fn run_trajectory_filtered(
                 let t0 = Instant::now();
                 let rep = run_engine(engine, &fx.ts, &p, kernel)
                     .with_context(|| format!("{engine} on {}", fx.name))?;
-                ms += t0.elapsed().as_secs_f64() * 1e3;
+                let run_ms = t0.elapsed().as_secs_f64() * 1e3;
+                ms += run_ms;
+                hist.observe(run_ms);
                 calls += rep.distance_calls as u128;
                 prep += rep.prep_calls as u128;
                 k = rep.discords.len().max(1);
@@ -323,6 +357,7 @@ pub fn run_trajectory_filtered(
                 cps: cps(mean_calls, n_seq, k),
                 prep_calls: (prep as f64 / runs as f64).round() as u64,
                 wall_ms: ms / runs as f64,
+                latency: Some(hist.snapshot().summary_json()),
             });
         }
     }
@@ -396,6 +431,7 @@ mod tests {
             cps: 3.4,
             prep_calls: 720,
             wall_ms: 1.9,
+            latency: None,
         }
     }
 
@@ -404,6 +440,23 @@ mod tests {
         let r = record();
         let back = BenchRecord::from_json(&r.to_json()).unwrap();
         assert_eq!(r, back);
+        // with a latency summary attached, it roundtrips too
+        let mut r = record();
+        r.latency = Some(
+            Json::obj()
+                .set("count", 3u64)
+                .set("sum", 5.7)
+                .set("mean", 1.9)
+                .set("p50", 1.8)
+                .set("p90", 2.4)
+                .set("p99", 2.5),
+        );
+        let back = BenchRecord::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, back);
+        // a latency object missing a quantile key is rejected by name
+        let bad = r.to_json().set("latency", Json::obj().set("count", 3u64));
+        let err = BenchRecord::from_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("\"sum\""), "{err}");
     }
 
     #[test]
@@ -487,6 +540,12 @@ mod tests {
         for r in &back {
             assert!(r.cps > 0.0 && r.calls > 0, "{r:?}");
             assert!(r.n <= QUICK_CAP);
+            // sweeps emit the latency summary: one observation per run
+            let lat = r.latency.as_ref().expect("sweep records carry latency");
+            assert_eq!(
+                lat.get("count").unwrap().as_u64(),
+                Some(cfg.runs.max(1) as u64)
+            );
         }
     }
 }

@@ -17,7 +17,9 @@
 //!   [`CountingDistance`] by default, the `pjrt`-gated XLA pair engine
 //!   behind the same [`Distance`] trait on request;
 //! * cross-cutting run controls: a [`CancellationToken`], an optional
-//!   distance-call budget, and a [`SearchObserver`] progress hook.
+//!   distance-call budget, a [`SearchObserver`] progress hook, and an
+//!   optional span-shaped [`TraceSink`](crate::obs::TraceSink) that
+//!   receives the full search → phase → pass event stream.
 //!
 //! Engines consume a context through
 //! [`Algorithm::run_ctx`](crate::algo::Algorithm::run_ctx); the classic
@@ -50,6 +52,7 @@ use anyhow::{ensure, Result};
 use crate::config::SaxParams;
 use crate::discord::{Discord, NndProfile};
 use crate::dist::{Backend, CountingDistance, Distance, DistanceKind, Kernel};
+use crate::obs::{PassEvent, TraceSink};
 use crate::sax::SaxIndex;
 use crate::ts::{SeqStats, TimeSeries};
 
@@ -128,6 +131,7 @@ pub struct ContextBuilder {
     cancel: CancellationToken,
     budget: Option<u64>,
     observer: Option<Arc<dyn SearchObserver>>,
+    sink: Option<Arc<dyn TraceSink>>,
     prepare: Vec<SaxParams>,
 }
 
@@ -174,6 +178,16 @@ impl ContextBuilder {
         self
     }
 
+    /// Attach a span-shaped [`TraceSink`]. The sink receives the full
+    /// search → phase → pass event stream (see
+    /// [`obs::trace`](crate::obs::trace)); it only *reads* values the
+    /// engines already maintain, so attaching one never changes results
+    /// or call counts.
+    pub fn trace_sink(mut self, sink: Arc<dyn TraceSink>) -> ContextBuilder {
+        self.sink = Some(sink);
+        self
+    }
+
     /// Eagerly prepare stats + SAX index for `sax` at build time (useful
     /// when the context is built off the request path). Silently skipped
     /// when the series is shorter than `sax.s`.
@@ -191,6 +205,7 @@ impl ContextBuilder {
             cancel: self.cancel,
             budget: self.budget,
             observer: self.observer,
+            sink: self.sink,
             stats_cache: Mutex::new(HashMap::new()),
             index_cache: Mutex::new(HashMap::new()),
             profile_cache: Mutex::new(HashMap::new()),
@@ -219,6 +234,7 @@ pub struct SearchContext {
     cancel: CancellationToken,
     budget: Option<u64>,
     observer: Option<Arc<dyn SearchObserver>>,
+    sink: Option<Arc<dyn TraceSink>>,
     stats_cache: Mutex<HashMap<usize, Arc<SeqStats>>>,
     index_cache: Mutex<HashMap<SaxParams, Arc<SaxIndex>>>,
     profile_cache: Mutex<HashMap<ProfileKey, NndProfile>>,
@@ -244,6 +260,7 @@ impl SearchContext {
             cancel: CancellationToken::new(),
             budget: None,
             observer: None,
+            sink: None,
             prepare: Vec::new(),
         }
     }
@@ -427,17 +444,56 @@ impl SearchContext {
         out
     }
 
-    /// Notify the observer (if any) of a phase change.
+    /// Notify the observer and trace sink (if any) of a phase change.
     pub fn notify_phase(&self, engine: &str, phase: &str) {
         if let Some(obs) = &self.observer {
             obs.on_phase(engine, phase);
         }
+        if let Some(sink) = &self.sink {
+            sink.on_phase(engine, phase);
+        }
     }
 
-    /// Notify the observer (if any) of a confirmed discord.
+    /// Notify the observer and trace sink (if any) of a confirmed discord.
     pub fn notify_discord(&self, rank: usize, discord: &Discord) {
         if let Some(obs) = &self.observer {
             obs.on_discord(rank, discord);
+        }
+        if let Some(sink) = &self.sink {
+            sink.on_discord(rank, discord);
+        }
+    }
+
+    /// Is a trace sink attached? Engines may use this to skip assembling
+    /// pass events entirely on untraced runs.
+    pub fn has_trace(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Open a search span on the trace sink (if any). Emitted by the
+    /// provided [`Algorithm::run_ctx`](crate::algo::Algorithm::run_ctx)
+    /// wrapper, not by engines.
+    pub fn trace_search_start(&self, engine: &str, n: usize, s: usize, k: usize) {
+        if let Some(sink) = &self.sink {
+            sink.on_search_start(engine, n, s, k);
+        }
+    }
+
+    /// Report a completed pass to the trace sink (if any). `pass.calls`
+    /// is a *delta* — per span, the deltas must sum to the report's
+    /// `distance_calls` (checked by
+    /// [`validate_trace`](crate::obs::validate_trace)).
+    pub fn trace_pass(&self, pass: &PassEvent<'_>) {
+        if let Some(sink) = &self.sink {
+            sink.on_pass(pass);
+        }
+    }
+
+    /// Close a search span on the trace sink (if any) with the final
+    /// call accounting.
+    pub fn trace_search_end(&self, engine: &str, distance_calls: u64, prep_calls: u64) {
+        if let Some(sink) = &self.sink {
+            sink.on_search_end(engine, distance_calls, prep_calls);
         }
     }
 }

@@ -154,6 +154,14 @@ pub trait Distance {
     /// once, abandoned or not — the paper's accounting).
     fn calls(&self) -> u64;
 
+    /// Calls in this session that ended early-abandoned (the returned
+    /// value was a `>= cutoff` partial bound, not a guaranteed-exact
+    /// distance). Purely informational — the trace layer reports it;
+    /// backends without abandon accounting return 0.
+    fn abandons(&self) -> u64 {
+        0
+    }
+
     /// Early-abandoning distance between the sequences starting at `i`
     /// and `j`: exact when below `cutoff`, otherwise a partial bound that
     /// is `>= cutoff`.
@@ -181,6 +189,10 @@ impl Distance for CountingDistance<'_> {
 
     fn calls(&self) -> u64 {
         CountingDistance::calls(self)
+    }
+
+    fn abandons(&self) -> u64 {
+        CountingDistance::abandons(self)
     }
 
     fn dist_early(&self, i: usize, j: usize, cutoff: f64) -> f64 {
@@ -283,6 +295,7 @@ pub struct CountingDistance<'a> {
     kind: DistanceKind,
     kernel: Kernel,
     calls: Cell<u64>,
+    abandons: Cell<u64>,
 }
 
 impl<'a> CountingDistance<'a> {
@@ -313,6 +326,7 @@ impl<'a> CountingDistance<'a> {
             kind,
             kernel,
             calls: Cell::new(0),
+            abandons: Cell::new(0),
         }
     }
 
@@ -331,6 +345,14 @@ impl<'a> CountingDistance<'a> {
     /// or not — matching the paper's accounting).
     pub fn calls(&self) -> u64 {
         self.calls.get()
+    }
+
+    /// Number of calls so far that ended early-abandoned: the partial sum
+    /// proved `d >= cutoff`, so the returned value was a bound, not the
+    /// exact distance. A strict subset of [`calls`](Self::calls); observing
+    /// it never changes the evaluation itself.
+    pub fn abandons(&self) -> u64 {
+        self.abandons.get()
     }
 
     /// Exact distance between the sequences starting at `i` and `j`.
@@ -374,6 +396,9 @@ impl<'a> CountingDistance<'a> {
                 }
             }
         };
+        if acc > limit {
+            self.abandons.set(self.abandons.get() + 1);
+        }
         acc.sqrt()
     }
 }
@@ -470,6 +495,7 @@ mod tests {
         let _ = dist.dist_early(0, 200, 0.001); // abandons, still counted
         let _ = dist.dist_early(0, 300, f64::INFINITY);
         assert_eq!(dist.calls(), 3);
+        assert_eq!(dist.abandons(), 1, "only the cutoff-clipped call abandons");
     }
 
     #[test]

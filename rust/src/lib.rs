@@ -66,6 +66,7 @@ pub mod dist;
 pub mod exec;
 pub mod mdim;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod sax;
 pub mod service;
@@ -92,6 +93,9 @@ pub mod prelude {
     pub use crate::metrics::{
         self, cps, cps_per_channel, d_speedup, length_normalized_nnd,
         t_speedup,
+    };
+    pub use crate::obs::{
+        JsonlTraceWriter, PassEvent, Registry, TraceSink, TRACE_SCHEMA,
     };
     pub use crate::sax::{SaxIndex, SaxWord};
     pub use crate::snapshot::{ContextSnapshot, MonitorSnapshot, SnapshotError};

@@ -51,6 +51,7 @@ fn run(args: &Args) -> Result<()> {
         Some("serve") => serve(args),
         Some("submit") => submit(args),
         Some("snapshot") => snapshot(args),
+        Some("trace") => trace(args),
         Some("info") => info(args),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
         None => {
@@ -60,9 +61,10 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: hst <discover|table|bench|report|plot|merlin|vl|monitor|stream|mdim|generate|serve|submit|snapshot|info> [flags]
+const USAGE: &str = "usage: hst <discover|table|bench|report|plot|merlin|vl|monitor|stream|mdim|generate|serve|submit|snapshot|trace|info> [flags]
   hst discover 'ECG 108' --algo hst --k 3 --scale-div 8
   hst discover 'ECG 108' --algo hst-par --threads 4
+  hst discover 'ECG 108' --trace run.jsonl   (write an hst-trace/1 JSONL span trace)
   hst discover synthetic --noise 0.001 --n 20000 --s 120
   hst table all --scale-div 8 --runs 3
   hst table 4 --full
@@ -91,6 +93,7 @@ const USAGE: &str = "usage: hst <discover|table|bench|report|plot|merlin|vl|moni
   hst snapshot save --addr 127.0.0.1:7878 --dir snapshots   (persist warm state now)
   hst snapshot restore --addr 127.0.0.1:7878                (seed from --snapshot-dir)
   hst snapshot inspect snapshots/ctx_ecg-15_0123456789abcdef.hsts
+  hst trace run.jsonl                        (validate + summarize a trace file)
   hst info
 thread control: --threads N on discover/submit/table, or HST_THREADS env";
 
@@ -140,7 +143,30 @@ fn discover(args: &Args) -> Result<()> {
         .with_seed(args.get_u64("seed", 0))
         .with_threads(args.get_usize("threads", 0));
 
-    let report = engine.run(&ts, &params)?;
+    let report = match args.get("trace") {
+        Some(path) => {
+            // span-shaped JSONL trace of this one search (schema
+            // hst-trace/1; `hst trace FILE` validates it back)
+            let sink = std::sync::Arc::new(
+                hstime::obs::JsonlTraceWriter::create(std::path::Path::new(
+                    path,
+                ))?,
+            );
+            let dyn_sink: std::sync::Arc<dyn hstime::obs::TraceSink> =
+                std::sync::Arc::clone(&sink);
+            let ctx = hstime::context::SearchContext::builder(&ts)
+                .trace_sink(dyn_sink)
+                .build();
+            let report = engine.run_ctx(&ctx, &params)?;
+            let errors = sink.finish()?;
+            anyhow::ensure!(
+                errors == 0,
+                "{errors} trace events failed to write to {path}"
+            );
+            report
+        }
+        None => engine.run(&ts, &params)?,
+    };
     if args.has("json") {
         println!("{}", report.to_json().set("dataset", ts.name.as_str()));
     } else {
@@ -860,6 +886,19 @@ fn snapshot(args: &Args) -> Result<()> {
              or inspect)"
         ),
     }
+}
+
+fn trace(args: &Args) -> Result<()> {
+    let path = args
+        .positionals
+        .first()
+        .context("trace needs a file: hst trace run.jsonl")?;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path}"))?;
+    let summary = hstime::obs::validate_trace(&text)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    println!("{}", summary.to_json().set("file", path.as_str()));
+    Ok(())
 }
 
 fn info(args: &Args) -> Result<()> {

@@ -115,7 +115,7 @@ impl Algorithm for BruteMd {
     /// single-channel series (the one-channel aggregate is the Eq. 2
     /// distance bit for bit). Run controls, cached preparation, and warm
     /// profiles flow both ways (the shared `mdim::run_univariate` face).
-    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
+    fn search(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         super::run_univariate(self, ctx, params)
     }
 }

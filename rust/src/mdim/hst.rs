@@ -421,7 +421,7 @@ impl Algorithm for HstMd {
     /// with the Eq. 2 distance). Run controls, cached preparation, and
     /// warm profiles flow both ways (the shared `mdim::run_univariate`
     /// face).
-    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
+    fn search(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         super::run_univariate(self, ctx, params)
     }
 }

@@ -284,13 +284,29 @@ pub(crate) fn run_univariate(
     if let Some(p) = ctx.warm_profile(s, kind, params.allow_self_match) {
         mctx.store_warm_profile(s, kind, params.allow_self_match, &[0], p);
     }
+    ctx.notify_phase(engine.name(), "search");
     let report = engine.run_md(&mctx, &MdimParams::new(params.clone()))?;
     // Flow the refinement back (store merges by pointwise min, so the
     // caller's profile only ever tightens).
     if let Some(p) = mctx.warm_profile(s, kind, params.allow_self_match, &[0]) {
         ctx.store_warm_profile(s, kind, params.allow_self_match, p);
     }
-    Ok(report.into_search_report())
+    let sr = report.into_search_report();
+    for (rank, d) in sr.discords.iter().enumerate() {
+        ctx.notify_discord(rank, d);
+    }
+    // The inner run happens on the MdimContext, which carries no trace
+    // sink; one covering pass keeps the span's call sum exact.
+    ctx.trace_pass(&crate::obs::PassEvent {
+        engine: engine.name(),
+        phase: "search",
+        index: 0,
+        candidates: sr.n_sequences as u64,
+        abandons: 0,
+        calls: sr.distance_calls,
+        best: sr.discords.first().map(|d| d.nnd).unwrap_or(f64::NAN),
+    });
+    Ok(sr)
 }
 
 /// Canonical id of every multivariate engine. Each id also resolves

@@ -1,0 +1,41 @@
+//! Observability: the metrics registry and structured search tracing.
+//!
+//! The paper's central measurement claim — cost per sequence (Sec. 4.2) —
+//! is only auditable if you can see *where* the distance calls go:
+//! warm-up vs. passes, abandons vs. full evaluations, how the best-so-far
+//! bound evolves. This module turns those one-off bench assertions into
+//! continuously observable, machine-readable facts:
+//!
+//! * [`Registry`] — named counters, gauges, and fixed-bucket histograms.
+//!   Atomic and lock-free on the hot path (registration takes a mutex
+//!   once; recording touches only `AtomicU64`s behind an `Arc`);
+//!   [`Registry::snapshot`] gives a consistent, sorted read with
+//!   p50/p90/p99 derivation, rendered as JSON or Prometheus text
+//!   exposition.
+//! * [`TraceSink`] — the span-shaped extension of
+//!   [`SearchObserver`](crate::context::SearchObserver): search → phase →
+//!   pass events carrying candidates visited, early abandons, distance
+//!   calls, and the running best-so-far bound, with the prep vs. search
+//!   split explicit. [`JsonlTraceWriter`] streams the events as JSON
+//!   lines (schema [`TRACE_SCHEMA`], `hst ... --trace FILE`);
+//!   [`validate_trace`] checks a trace nests correctly and that its pass
+//!   call-counts sum to the report total.
+//!
+//! The hard invariant of the whole layer: **instrumentation never changes
+//! engine output or call counts**. Sinks only *read* values the engines
+//! already maintain; `tests/integration_obs.rs` enforces bit-identity
+//! (positions, nnd bits, distance/prep calls) between traced+metered and
+//! uninstrumented runs for every engine in
+//! [`ALL_ENGINES`](crate::algo::ALL_ENGINES).
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{
+    parse_prometheus, Counter, Gauge, Histogram, HistogramSnapshot,
+    MetricValue, Registry, Snapshot, LATENCY_BUCKETS_MS, SIZE_BUCKETS,
+};
+pub use trace::{
+    validate_trace, JsonlTraceWriter, PassEvent, TraceSink, TraceSummary,
+    TRACE_SCHEMA,
+};

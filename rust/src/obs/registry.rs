@@ -1,0 +1,721 @@
+//! The metrics registry: named counters, gauges, and fixed-bucket
+//! histograms with consistent snapshots and Prometheus/JSON exposition.
+//!
+//! Registration (name → handle) takes a mutex once per metric; every
+//! record after that is a relaxed atomic op on a handle the caller keeps,
+//! so the hot path never contends on the registry itself. Handles are
+//! idempotent: asking for the same `(name, label)` again returns the same
+//! underlying metric, which is what lets `CoordinatorStats` be a *view*
+//! over the registry instead of a second set of counters.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Default latency buckets, in milliseconds: sub-millisecond searches up
+/// to ten-second jobs, roughly 2.5× apart (the Prometheus default grid).
+pub const LATENCY_BUCKETS_MS: [f64; 14] = [
+    0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0,
+    1_000.0, 2_500.0, 10_000.0,
+];
+
+/// Default size buckets (dimensionless: cps values, counts): powers of
+/// two from 1 to 8192. A perfect-magic search (cps ≈ 2) lands in the
+/// second bucket; brute force walks off the top.
+pub const SIZE_BUCKETS: [f64; 14] = [
+    1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1_024.0,
+    2_048.0, 4_096.0, 8_192.0,
+];
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Raise the counter to `v` if it is below it (absorbing an external
+    /// monotonic source — e.g. the stream registry's own ingest atomics —
+    /// without ever moving backwards).
+    pub fn record_absolute(&self, v: u64) {
+        self.value.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge: a value that can go up and down (queue depths, open streams).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    /// Set the gauge.
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A fixed-bucket histogram. Bucket bounds are upper bounds (`le`), with
+/// an implicit `+Inf` bucket at the end; `observe` is two relaxed
+/// fetch-adds plus one CAS loop for the f64 sum — lock-free and
+/// wait-free except under sum contention.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<AtomicU64>, // one per bound, plus +Inf at the end
+    count: AtomicU64,
+    sum_bits: AtomicU64, // f64 bits, updated by CAS
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// A point-in-time copy of the histogram state.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut cumulative = Vec::with_capacity(self.counts.len());
+        let mut acc = 0u64;
+        for c in &self.counts {
+            acc += c.load(Ordering::Relaxed);
+            cumulative.push(acc);
+        }
+        HistogramSnapshot {
+            bounds: self.bounds.clone(),
+            cumulative,
+            count: self.count.load(Ordering::Relaxed),
+            sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// A consistent copy of one histogram: cumulative bucket counts
+/// (`cumulative[i]` = observations ≤ `bounds[i]`; the final entry is the
+/// `+Inf` bucket, equal to `count`), total count, and sum.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Bucket upper bounds (`le`), strictly increasing, `+Inf` implicit.
+    pub bounds: Vec<f64>,
+    /// Cumulative count per bucket, `+Inf` last.
+    pub cumulative: Vec<u64>,
+    /// Total observations.
+    pub count: u64,
+    /// Sum of all observed values.
+    pub sum: f64,
+}
+
+impl HistogramSnapshot {
+    /// Derive the `q`-quantile (`0 < q ≤ 1`) by linear interpolation
+    /// inside the bucket holding the target rank — the same estimate
+    /// Prometheus's `histogram_quantile` computes. Returns 0 when empty;
+    /// observations in the `+Inf` bucket clamp to the highest finite
+    /// bound (there is nothing better to interpolate against).
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q), "quantile must be in [0, 1]");
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = q * self.count as f64;
+        let idx = self
+            .cumulative
+            .iter()
+            .position(|&c| c as f64 >= rank)
+            .unwrap_or(self.cumulative.len() - 1);
+        if idx >= self.bounds.len() {
+            // +Inf bucket: clamp to the largest finite bound
+            return *self.bounds.last().unwrap();
+        }
+        let hi = self.bounds[idx];
+        let lo = if idx == 0 { 0.0 } else { self.bounds[idx - 1] };
+        let below = if idx == 0 { 0 } else { self.cumulative[idx - 1] };
+        let in_bucket = self.cumulative[idx] - below;
+        if in_bucket == 0 {
+            return hi;
+        }
+        lo + (hi - lo) * ((rank - below as f64) / in_bucket as f64)
+    }
+
+    /// p50 / p90 / p99 as a JSON object (plus count, sum, mean) — the
+    /// summary shape the bench trajectory and the `metrics` command both
+    /// embed.
+    pub fn summary_json(&self) -> Json {
+        let mean = if self.count > 0 {
+            self.sum / self.count as f64
+        } else {
+            0.0
+        };
+        Json::obj()
+            .set("count", self.count)
+            .set("sum", self.sum)
+            .set("mean", mean)
+            .set("p50", self.quantile(0.50))
+            .set("p90", self.quantile(0.90))
+            .set("p99", self.quantile(0.99))
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// Key of one metric instance: base name plus at most one label pair
+/// (`hst_job_latency_ms{engine="hst"}`). `BTreeMap` keeps snapshots in
+/// a deterministic order.
+type MetricKey = (String, Option<(String, String)>);
+
+/// The metrics registry (see the [module docs](self)).
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<BTreeMap<MetricKey, Metric>>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn entry<T, F: FnOnce() -> Metric>(
+        &self,
+        name: &str,
+        label: Option<(&str, &str)>,
+        make: F,
+        pick: impl FnOnce(&Metric) -> Option<Arc<T>>,
+    ) -> Arc<T> {
+        let key = (
+            name.to_string(),
+            label.map(|(k, v)| (k.to_string(), v.to_string())),
+        );
+        let mut g = self.inner.lock().unwrap();
+        let metric = g.entry(key).or_insert_with(make);
+        pick(metric).unwrap_or_else(|| {
+            panic!(
+                "metric `{name}` already registered as a {}",
+                metric.type_name()
+            )
+        })
+    }
+
+    /// The counter named `name`, registering it on first use.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.labeled_counter_opt(name, None)
+    }
+
+    /// The counter `name{key="val"}`, registering it on first use.
+    pub fn labeled_counter(&self, name: &str, key: &str, val: &str) -> Arc<Counter> {
+        self.labeled_counter_opt(name, Some((key, val)))
+    }
+
+    fn labeled_counter_opt(
+        &self,
+        name: &str,
+        label: Option<(&str, &str)>,
+    ) -> Arc<Counter> {
+        self.entry(
+            name,
+            label,
+            || Metric::Counter(Arc::new(Counter::default())),
+            |m| match m {
+                Metric::Counter(c) => Some(Arc::clone(c)),
+                _ => None,
+            },
+        )
+    }
+
+    /// The gauge named `name`, registering it on first use.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.entry(
+            name,
+            None,
+            || Metric::Gauge(Arc::new(Gauge::default())),
+            |m| match m {
+                Metric::Gauge(g) => Some(Arc::clone(g)),
+                _ => None,
+            },
+        )
+    }
+
+    /// The histogram named `name` with `bounds` as bucket upper bounds,
+    /// registering it on first use (later calls keep the first bounds).
+    pub fn histogram(&self, name: &str, bounds: &[f64]) -> Arc<Histogram> {
+        self.labeled_histogram_opt(name, None, bounds)
+    }
+
+    /// The histogram `name{key="val"}`, registering it on first use.
+    pub fn labeled_histogram(
+        &self,
+        name: &str,
+        key: &str,
+        val: &str,
+        bounds: &[f64],
+    ) -> Arc<Histogram> {
+        self.labeled_histogram_opt(name, Some((key, val)), bounds)
+    }
+
+    fn labeled_histogram_opt(
+        &self,
+        name: &str,
+        label: Option<(&str, &str)>,
+        bounds: &[f64],
+    ) -> Arc<Histogram> {
+        self.entry(
+            name,
+            label,
+            || Metric::Histogram(Arc::new(Histogram::new(bounds))),
+            |m| match m {
+                Metric::Histogram(h) => Some(Arc::clone(h)),
+                _ => None,
+            },
+        )
+    }
+
+    /// A consistent, sorted snapshot of every registered metric.
+    ///
+    /// "Consistent" per metric: each counter/gauge is one atomic load and
+    /// each histogram's buckets are summed in one pass — a histogram can
+    /// lag a concurrent `observe` by at most that one in-flight op, and a
+    /// snapshot never observes a partially-registered metric.
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        Snapshot {
+            metrics: g
+                .iter()
+                .map(|((name, label), metric)| MetricSnapshot {
+                    name: name.clone(),
+                    label: label.clone(),
+                    value: match metric {
+                        Metric::Counter(c) => MetricValue::Counter(c.get()),
+                        Metric::Gauge(v) => MetricValue::Gauge(v.get()),
+                        Metric::Histogram(h) => {
+                            MetricValue::Histogram(h.snapshot())
+                        }
+                    },
+                })
+                .collect(),
+        }
+    }
+
+    /// Base names of every registered metric, sorted and deduplicated
+    /// (label variants collapse onto one name). The docs-consistency
+    /// tests pin `docs/OBSERVABILITY.md`'s metric table against this.
+    pub fn names(&self) -> Vec<String> {
+        let g = self.inner.lock().unwrap();
+        let mut names: Vec<String> =
+            g.keys().map(|(name, _)| name.clone()).collect();
+        names.dedup();
+        names
+    }
+}
+
+/// One metric in a [`Snapshot`].
+#[derive(Debug, Clone)]
+pub struct MetricSnapshot {
+    /// Base metric name.
+    pub name: String,
+    /// Optional label pair.
+    pub label: Option<(String, String)>,
+    /// The value at snapshot time.
+    pub value: MetricValue,
+}
+
+/// The value of one metric at snapshot time.
+#[derive(Debug, Clone)]
+pub enum MetricValue {
+    /// Monotonic counter value.
+    Counter(u64),
+    /// Gauge value.
+    Gauge(u64),
+    /// Histogram state.
+    Histogram(HistogramSnapshot),
+}
+
+/// A consistent read of the whole registry (see [`Registry::snapshot`]),
+/// sorted by `(name, label)`.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// Every metric, in deterministic order.
+    pub metrics: Vec<MetricSnapshot>,
+}
+
+fn label_suffix(label: &Option<(String, String)>, extra: Option<(&str, String)>) -> String {
+    let mut pairs: Vec<String> = Vec::new();
+    if let Some((k, v)) = label {
+        pairs.push(format!("{k}=\"{v}\""));
+    }
+    if let Some((k, v)) = extra {
+        pairs.push(format!("{k}=\"{v}\""));
+    }
+    if pairs.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", pairs.join(","))
+    }
+}
+
+fn fmt_f64(v: f64) -> String {
+    // integers print without a fraction so counters round-trip exactly
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+impl Snapshot {
+    /// Render as Prometheus text exposition format (version 0.0.4): a
+    /// `# TYPE` line per base name, then one sample per value, histograms
+    /// expanded into `_bucket{le=…}` / `_sum` / `_count` series.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_type_for: Option<&str> = None;
+        for m in &self.metrics {
+            let type_name = match &m.value {
+                MetricValue::Counter(_) => "counter",
+                MetricValue::Gauge(_) => "gauge",
+                MetricValue::Histogram(_) => "histogram",
+            };
+            if last_type_for != Some(m.name.as_str()) {
+                out.push_str(&format!("# TYPE {} {}\n", m.name, type_name));
+                last_type_for = Some(m.name.as_str());
+            }
+            match &m.value {
+                MetricValue::Counter(v) | MetricValue::Gauge(v) => {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        m.name,
+                        label_suffix(&m.label, None),
+                        v
+                    ));
+                }
+                MetricValue::Histogram(h) => {
+                    for (i, c) in h.cumulative.iter().enumerate() {
+                        let le = if i < h.bounds.len() {
+                            fmt_f64(h.bounds[i])
+                        } else {
+                            "+Inf".to_string()
+                        };
+                        out.push_str(&format!(
+                            "{}_bucket{} {}\n",
+                            m.name,
+                            label_suffix(&m.label, Some(("le", le))),
+                            c
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{}_sum{} {}\n",
+                        m.name,
+                        label_suffix(&m.label, None),
+                        fmt_f64(h.sum)
+                    ));
+                    out.push_str(&format!(
+                        "{}_count{} {}\n",
+                        m.name,
+                        label_suffix(&m.label, None),
+                        h.count
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Render as a JSON object: metric name (with `{key="val"}` suffix
+    /// for labeled instances) → value; histograms become their
+    /// [`summary_json`](HistogramSnapshot::summary_json) plus raw
+    /// buckets.
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        for m in &self.metrics {
+            let key = format!("{}{}", m.name, label_suffix(&m.label, None));
+            let val = match &m.value {
+                MetricValue::Counter(v) => {
+                    Json::obj().set("type", "counter").set("value", *v)
+                }
+                MetricValue::Gauge(v) => {
+                    Json::obj().set("type", "gauge").set("value", *v)
+                }
+                MetricValue::Histogram(h) => {
+                    let buckets: Vec<Json> = h
+                        .bounds
+                        .iter()
+                        .map(|b| Json::from(*b))
+                        .collect();
+                    let counts: Vec<Json> = h
+                        .cumulative
+                        .iter()
+                        .map(|c| Json::from(*c))
+                        .collect();
+                    Json::obj()
+                        .set("type", "histogram")
+                        .set("summary", h.summary_json())
+                        .set("le", buckets)
+                        .set("cumulative", counts)
+                }
+            };
+            obj = obj.set(&key, val);
+        }
+        obj
+    }
+}
+
+/// Parse Prometheus text exposition back into `sample name (with
+/// labels) → value` pairs, skipping comments. Strict on shape — a line
+/// that is neither a comment nor `name[{labels}] value` is an error.
+/// This is the round-trip half of [`Snapshot::to_prometheus`]: the
+/// conformance tests (and `ci/verify.sh`'s metrics smoke) re-parse the
+/// service's exposition and compare it against the snapshot.
+pub fn parse_prometheus(text: &str) -> Result<BTreeMap<String, f64>, String> {
+    let mut out = BTreeMap::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {}: no value: {line:?}", ln + 1))?;
+        let v: f64 = value
+            .parse()
+            .map_err(|e| format!("line {}: bad value {value:?}: {e}", ln + 1))?;
+        if out.insert(name.to_string(), v).is_some() {
+            return Err(format!("line {}: duplicate sample {name:?}", ln + 1));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_register_once_and_accumulate() {
+        let r = Registry::new();
+        let a = r.counter("hst_test_total");
+        let b = r.counter("hst_test_total");
+        a.inc();
+        b.add(4);
+        assert_eq!(a.get(), 5, "handles must share one counter");
+        a.record_absolute(3);
+        assert_eq!(a.get(), 5, "record_absolute never moves backwards");
+        a.record_absolute(9);
+        assert_eq!(a.get(), 9);
+        let g = r.gauge("hst_test_depth");
+        g.set(7);
+        assert_eq!(r.gauge("hst_test_depth").get(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn type_conflicts_panic() {
+        let r = Registry::new();
+        let _ = r.counter("hst_conflict");
+        let _ = r.gauge("hst_conflict");
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::new(&[1.0, 2.0, 4.0, 8.0]);
+        for v in [0.5, 1.5, 1.5, 3.0, 7.0, 100.0] {
+            h.observe(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 6);
+        assert_eq!(s.cumulative, vec![1, 3, 4, 5, 6]);
+        assert!((s.sum - 113.5).abs() < 1e-9);
+        // p50: rank 3.0 falls in the (1,2] bucket → interpolated ≤ 2
+        let p50 = s.quantile(0.50);
+        assert!(p50 > 1.0 && p50 <= 2.0, "p50 = {p50}");
+        // p99: rank 5.94 falls in the +Inf bucket → clamps to 8
+        assert_eq!(s.quantile(0.99), 8.0);
+        // empty histogram
+        assert_eq!(Histogram::new(&[1.0]).snapshot().quantile(0.9), 0.0);
+    }
+
+    #[test]
+    fn quantile_interpolation_on_known_input() {
+        // 100 observations spread uniformly over (0, 10] in the single
+        // bucket (0, 10]: quantile(q) ≈ 10q by linear interpolation
+        let h = Histogram::new(&[10.0, 20.0]);
+        for i in 0..100 {
+            h.observe(0.05 + (i as f64) * 0.1);
+        }
+        let s = h.snapshot();
+        assert!((s.quantile(0.50) - 5.0).abs() < 1e-9);
+        assert!((s.quantile(0.99) - 9.9).abs() < 1e-9);
+        assert!((s.quantile(0.90) - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_renders_both_formats() {
+        let r = Registry::new();
+        r.counter("hst_b_total").add(2);
+        r.counter("hst_a_total").inc();
+        r.labeled_histogram("hst_lat_ms", "engine", "hst", &[1.0, 10.0])
+            .observe(3.0);
+        let snap = r.snapshot();
+        let names: Vec<&str> =
+            snap.metrics.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, vec!["hst_a_total", "hst_b_total", "hst_lat_ms"]);
+        let text = snap.to_prometheus();
+        assert!(text.contains("# TYPE hst_a_total counter"));
+        assert!(text.contains("hst_b_total 2"));
+        assert!(text.contains("hst_lat_ms_bucket{engine=\"hst\",le=\"10\"} 1"));
+        assert!(text.contains("hst_lat_ms_count{engine=\"hst\"} 1"));
+        let json = snap.to_json();
+        assert_eq!(
+            json.get("hst_a_total").unwrap().get("value").unwrap().as_u64(),
+            Some(1)
+        );
+        let hist = json.get("hst_lat_ms{engine=\"hst\"}").unwrap();
+        assert_eq!(
+            hist.get("summary").unwrap().get("count").unwrap().as_u64(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn prometheus_text_round_trips_the_snapshot() {
+        let r = Registry::new();
+        r.counter("hst_jobs_total").add(11);
+        r.gauge("hst_queued").set(3);
+        let h = r.labeled_histogram(
+            "hst_job_latency_ms",
+            "engine",
+            "hst",
+            &LATENCY_BUCKETS_MS,
+        );
+        for v in [0.3, 2.0, 40.0] {
+            h.observe(v);
+        }
+        let snap = r.snapshot();
+        let parsed = parse_prometheus(&snap.to_prometheus()).unwrap();
+        assert_eq!(parsed["hst_jobs_total"], 11.0);
+        assert_eq!(parsed["hst_queued"], 3.0);
+        assert_eq!(
+            parsed["hst_job_latency_ms_count{engine=\"hst\"}"],
+            3.0
+        );
+        assert_eq!(
+            parsed["hst_job_latency_ms_bucket{engine=\"hst\",le=\"+Inf\"}"],
+            3.0
+        );
+        assert_eq!(
+            parsed["hst_job_latency_ms_bucket{engine=\"hst\",le=\"0.5\"}"],
+            1.0
+        );
+        let sum = parsed["hst_job_latency_ms_sum{engine=\"hst\"}"];
+        assert!((sum - 42.3).abs() < 1e-9);
+        // every snapshot sample must appear in the parsed map
+        let sample_count: usize = snap
+            .metrics
+            .iter()
+            .map(|m| match &m.value {
+                MetricValue::Histogram(h) => h.cumulative.len() + 2,
+                _ => 1,
+            })
+            .sum();
+        assert_eq!(parsed.len(), sample_count);
+    }
+
+    #[test]
+    fn names_deduplicate_label_variants() {
+        let r = Registry::new();
+        r.labeled_counter("hst_x_total", "engine", "a").inc();
+        r.labeled_counter("hst_x_total", "engine", "b").inc();
+        r.counter("hst_y_total").inc();
+        assert_eq!(r.names(), vec!["hst_x_total", "hst_y_total"]);
+    }
+
+    #[test]
+    fn concurrent_observes_lose_nothing() {
+        let r = Arc::new(Registry::new());
+        let h = r.histogram("hst_conc_ms", &LATENCY_BUCKETS_MS);
+        let c = r.counter("hst_conc_total");
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let h = Arc::clone(&h);
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1_000 {
+                    h.observe((t * 1_000 + i) as f64 % 97.0);
+                    c.inc();
+                }
+            }));
+        }
+        for hnd in handles {
+            hnd.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 4_000);
+        assert_eq!(*s.cumulative.last().unwrap(), 4_000);
+        assert_eq!(c.get(), 4_000);
+    }
+}

@@ -1,0 +1,493 @@
+//! Structured search tracing: the span-shaped [`TraceSink`], the JSONL
+//! trace writer, and the trace validator.
+//!
+//! A trace is a flat stream of events with an implied span tree:
+//!
+//! ```text
+//! search_start ─┬─ phase "prepare" ── pass* ─┐
+//!               └─ phase "search"  ── pass* ─┴─ discord* ── search_end
+//! ```
+//!
+//! Every [`PassEvent`] carries the *delta* of distance calls spent inside
+//! it, so the pass call-counts of a well-formed trace sum exactly to the
+//! `distance_calls` its `search_end` reports — [`validate_trace`] checks
+//! that, and `ci/verify.sh` gates on it. Sinks are read-only by contract:
+//! they observe values the engines already maintain, never influence
+//! them (the observability-neutrality property of
+//! `tests/integration_obs.rs`).
+
+use std::io::Write;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::discord::Discord;
+use crate::util::json::Json;
+
+/// Schema identifier written as the first line of every JSONL trace.
+pub const TRACE_SCHEMA: &str = "hst-trace/1";
+
+/// One pass of an engine's outer loop (or one whole phase, for engines
+/// without a per-discord pass structure). All fields are deltas or
+/// point-in-time reads of state the engine maintains anyway.
+#[derive(Debug, Clone, Copy)]
+pub struct PassEvent<'a> {
+    /// Engine id (`"hst"`, `"brute"`, …).
+    pub engine: &'a str,
+    /// Phase this pass belongs to (`"prepare"` or `"search"`).
+    pub phase: &'a str,
+    /// 0-based pass index within the search (discord rank for the
+    /// per-discord engines, scan step for the variable-length ones).
+    pub index: usize,
+    /// Outer-loop candidates visited during the pass.
+    pub candidates: u64,
+    /// Early-abandoned distance evaluations during the pass (delta of
+    /// [`Distance::abandons`](crate::dist::Distance::abandons)).
+    pub abandons: u64,
+    /// Distance calls spent during the pass (delta of
+    /// [`Distance::calls`](crate::dist::Distance::calls)); pass deltas
+    /// sum to the report's `distance_calls`.
+    pub calls: u64,
+    /// Best-so-far bound when the pass ended (the discord's nnd for
+    /// per-discord passes); `NaN` when the engine tracks no bound.
+    pub best: f64,
+}
+
+/// The span-shaped extension of
+/// [`SearchObserver`](crate::context::SearchObserver): a sink receives
+/// the full search → phase → pass event stream. All methods default to
+/// no-ops, so the absent sink compiles to nothing observable on results
+/// and a partial sink implements only what it needs.
+pub trait TraceSink: Send + Sync {
+    /// A search span opened.
+    fn on_search_start(&self, _engine: &str, _n: usize, _s: usize, _k: usize) {}
+
+    /// The search entered a named phase (`"prepare"`, `"search"`).
+    fn on_phase(&self, _engine: &str, _phase: &str) {}
+
+    /// One outer-loop pass completed.
+    fn on_pass(&self, _pass: &PassEvent<'_>) {}
+
+    /// A discord was confirmed (`rank` is 0-based).
+    fn on_discord(&self, _rank: usize, _discord: &Discord) {}
+
+    /// The search span closed with its final call accounting.
+    fn on_search_end(&self, _engine: &str, _distance_calls: u64, _prep_calls: u64) {}
+}
+
+/// Streams trace events as JSON lines (schema [`TRACE_SCHEMA`]).
+///
+/// The first line is the schema header; every later line is one event
+/// object with an `"event"` discriminator. Writes go through one mutex —
+/// events are per-pass, not per-distance-call, so the lock is far off
+/// the hot path. IO errors are counted, not raised: a full disk must
+/// fail the trace, never the search.
+pub struct JsonlTraceWriter {
+    out: Mutex<Box<dyn Write + Send>>,
+    errors: Mutex<u64>,
+}
+
+impl JsonlTraceWriter {
+    /// Create (truncate) `path` and write the schema header.
+    pub fn create(path: &std::path::Path) -> Result<JsonlTraceWriter> {
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        Ok(JsonlTraceWriter::to_writer(Box::new(
+            std::io::BufWriter::new(file),
+        )))
+    }
+
+    /// Wrap any writer (tests trace into a `Vec<u8>` behind a pipe).
+    pub fn to_writer(mut w: Box<dyn Write + Send>) -> JsonlTraceWriter {
+        let header = Json::obj().set("schema", TRACE_SCHEMA);
+        let _ = writeln!(w, "{header}");
+        JsonlTraceWriter {
+            out: Mutex::new(w),
+            errors: Mutex::new(0),
+        }
+    }
+
+    fn emit(&self, event: Json) {
+        let mut out = self.out.lock().unwrap();
+        if writeln!(out, "{event}").is_err() {
+            *self.errors.lock().unwrap() += 1;
+        }
+    }
+
+    /// Flush the underlying writer; returns how many event writes failed
+    /// (0 for a healthy trace).
+    pub fn finish(&self) -> Result<u64> {
+        self.out.lock().unwrap().flush().context("flushing trace")?;
+        Ok(*self.errors.lock().unwrap())
+    }
+}
+
+/// Format an f64 for the trace: finite values verbatim, `NaN` as null
+/// (JSON has no NaN literal).
+fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+impl TraceSink for JsonlTraceWriter {
+    fn on_search_start(&self, engine: &str, n: usize, s: usize, k: usize) {
+        self.emit(
+            Json::obj()
+                .set("event", "search_start")
+                .set("engine", engine)
+                .set("n", n)
+                .set("s", s)
+                .set("k", k),
+        );
+    }
+
+    fn on_phase(&self, engine: &str, phase: &str) {
+        self.emit(
+            Json::obj()
+                .set("event", "phase")
+                .set("engine", engine)
+                .set("phase", phase),
+        );
+    }
+
+    fn on_pass(&self, pass: &PassEvent<'_>) {
+        self.emit(
+            Json::obj()
+                .set("event", "pass")
+                .set("engine", pass.engine)
+                .set("phase", pass.phase)
+                .set("index", pass.index)
+                .set("candidates", pass.candidates)
+                .set("abandons", pass.abandons)
+                .set("calls", pass.calls)
+                .set("best", num(pass.best)),
+        );
+    }
+
+    fn on_discord(&self, rank: usize, discord: &Discord) {
+        self.emit(
+            Json::obj()
+                .set("event", "discord")
+                .set("rank", rank)
+                .set("position", discord.position)
+                .set("neighbor", discord.neighbor)
+                .set("nnd", num(discord.nnd))
+                .set("nnd_bits", format!("{:016x}", discord.nnd.to_bits())),
+        );
+    }
+
+    fn on_search_end(&self, engine: &str, distance_calls: u64, prep_calls: u64) {
+        self.emit(
+            Json::obj()
+                .set("event", "search_end")
+                .set("engine", engine)
+                .set("distance_calls", distance_calls)
+                .set("prep_calls", prep_calls),
+        );
+    }
+}
+
+/// What [`validate_trace`] found in a well-formed trace.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSummary {
+    /// Completed search spans.
+    pub searches: usize,
+    /// Pass events across all spans.
+    pub passes: usize,
+    /// Discord events across all spans.
+    pub discords: usize,
+    /// Sum of `distance_calls` over every `search_end`.
+    pub distance_calls: u64,
+    /// Sum of `prep_calls` over every `search_end`.
+    pub prep_calls: u64,
+}
+
+impl TraceSummary {
+    /// Serialize (the `hst trace` CLI prints this).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("schema", TRACE_SCHEMA)
+            .set("searches", self.searches)
+            .set("passes", self.passes)
+            .set("discords", self.discords)
+            .set("distance_calls", self.distance_calls)
+            .set("prep_calls", self.prep_calls)
+    }
+}
+
+/// Validate a JSONL trace: the header carries [`TRACE_SCHEMA`], every
+/// line parses, spans nest (events only inside an open `search_start` …
+/// `search_end` pair, spans never interleave), and within each span the
+/// pass `calls` sum exactly to the `distance_calls` its `search_end`
+/// reports. Returns a [`TraceSummary`] on success.
+pub fn validate_trace(text: &str) -> Result<TraceSummary, String> {
+    let mut lines = text.lines().enumerate();
+    let (_, header) = lines.next().ok_or("empty trace")?;
+    let header = Json::parse(header).map_err(|e| format!("header: {e}"))?;
+    match header.get("schema").and_then(|s| s.as_str()) {
+        Some(TRACE_SCHEMA) => {}
+        Some(other) => {
+            return Err(format!(
+                "schema {other:?} (this validator speaks {TRACE_SCHEMA:?})"
+            ))
+        }
+        None => return Err("header line has no `schema` field".into()),
+    }
+    let mut summary = TraceSummary::default();
+    let mut open: Option<String> = None; // engine of the open span
+    let mut span_pass_calls: u64 = 0;
+    for (ln, line) in lines {
+        let ln = ln + 1;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ev = Json::parse(line).map_err(|e| format!("line {ln}: {e}"))?;
+        let kind = ev
+            .get("event")
+            .and_then(|e| e.as_str())
+            .ok_or(format!("line {ln}: no `event` field"))?;
+        let engine = ev.get("engine").and_then(|e| e.as_str());
+        match kind {
+            "search_start" => {
+                if let Some(o) = &open {
+                    return Err(format!(
+                        "line {ln}: search_start while `{o}` span is open \
+                         (spans must not interleave)"
+                    ));
+                }
+                open = Some(
+                    engine
+                        .ok_or(format!("line {ln}: search_start needs `engine`"))?
+                        .to_string(),
+                );
+                span_pass_calls = 0;
+            }
+            "phase" | "pass" | "discord" => {
+                let Some(o) = &open else {
+                    return Err(format!(
+                        "line {ln}: `{kind}` outside any search span"
+                    ));
+                };
+                if let Some(e) = engine {
+                    if e != o {
+                        return Err(format!(
+                            "line {ln}: `{kind}` names engine `{e}` inside \
+                             the `{o}` span"
+                        ));
+                    }
+                }
+                if kind == "pass" {
+                    let calls = ev
+                        .get("calls")
+                        .and_then(|c| c.as_u64())
+                        .ok_or(format!("line {ln}: pass needs `calls`"))?;
+                    span_pass_calls += calls;
+                    summary.passes += 1;
+                } else if kind == "discord" {
+                    let bits = ev
+                        .get("nnd_bits")
+                        .and_then(|b| b.as_str())
+                        .ok_or(format!("line {ln}: discord needs `nnd_bits`"))?;
+                    if bits.len() != 16
+                        || !bits.bytes().all(|b| b.is_ascii_hexdigit())
+                    {
+                        return Err(format!(
+                            "line {ln}: `nnd_bits` must be 16 hex chars, got \
+                             {bits:?}"
+                        ));
+                    }
+                    summary.discords += 1;
+                }
+            }
+            "search_end" => {
+                let Some(o) = open.take() else {
+                    return Err(format!(
+                        "line {ln}: search_end without search_start"
+                    ));
+                };
+                if let Some(e) = engine {
+                    if e != o {
+                        return Err(format!(
+                            "line {ln}: search_end names engine `{e}`, span \
+                             opened as `{o}`"
+                        ));
+                    }
+                }
+                let calls = ev
+                    .get("distance_calls")
+                    .and_then(|c| c.as_u64())
+                    .ok_or(format!("line {ln}: search_end needs `distance_calls`"))?;
+                if span_pass_calls != calls {
+                    return Err(format!(
+                        "line {ln}: pass calls sum to {span_pass_calls} but \
+                         search_end reports {calls} distance calls"
+                    ));
+                }
+                summary.distance_calls += calls;
+                summary.prep_calls += ev
+                    .get("prep_calls")
+                    .and_then(|c| c.as_u64())
+                    .unwrap_or(0);
+                summary.searches += 1;
+            }
+            other => {
+                return Err(format!("line {ln}: unknown event {other:?}"));
+            }
+        }
+    }
+    if let Some(o) = open {
+        return Err(format!("trace ends inside an open `{o}` span"));
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    /// A writer that shares its buffer so the test can read it back.
+    #[derive(Clone, Default)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn trace_of(events: impl FnOnce(&JsonlTraceWriter)) -> String {
+        let buf = SharedBuf::default();
+        let w = JsonlTraceWriter::to_writer(Box::new(buf.clone()));
+        events(&w);
+        assert_eq!(w.finish().unwrap(), 0);
+        String::from_utf8(buf.0.lock().unwrap().clone()).unwrap()
+    }
+
+    fn demo_discord() -> Discord {
+        Discord {
+            position: 120,
+            nnd: 1.5,
+            neighbor: 740,
+        }
+    }
+
+    #[test]
+    fn writer_emits_a_valid_trace() {
+        let text = trace_of(|w| {
+            w.on_search_start("hst", 1_000, 64, 1);
+            w.on_phase("hst", "prepare");
+            w.on_pass(&PassEvent {
+                engine: "hst",
+                phase: "prepare",
+                index: 0,
+                candidates: 1_000,
+                abandons: 0,
+                calls: 2_000,
+                best: f64::NAN,
+            });
+            w.on_phase("hst", "search");
+            w.on_pass(&PassEvent {
+                engine: "hst",
+                phase: "search",
+                index: 0,
+                candidates: 950,
+                abandons: 800,
+                calls: 1_234,
+                best: 1.5,
+            });
+            w.on_discord(0, &demo_discord());
+            w.on_search_end("hst", 3_234, 2_000);
+        });
+        assert!(text.starts_with("{\"schema\":\"hst-trace/1\"}\n"));
+        let s = validate_trace(&text).unwrap();
+        assert_eq!(s.searches, 1);
+        assert_eq!(s.passes, 2);
+        assert_eq!(s.discords, 1);
+        assert_eq!(s.distance_calls, 3_234);
+        assert_eq!(s.prep_calls, 2_000);
+    }
+
+    #[test]
+    fn validator_rejects_mismatched_call_sums() {
+        let text = trace_of(|w| {
+            w.on_search_start("hst", 100, 8, 1);
+            w.on_pass(&PassEvent {
+                engine: "hst",
+                phase: "search",
+                index: 0,
+                candidates: 10,
+                abandons: 0,
+                calls: 5,
+                best: 1.0,
+            });
+            w.on_search_end("hst", 6, 0);
+        });
+        let err = validate_trace(&text).unwrap_err();
+        assert!(err.contains("sum to 5"), "{err}");
+    }
+
+    #[test]
+    fn validator_rejects_structural_breaks() {
+        // event outside a span
+        let text = trace_of(|w| w.on_phase("hst", "search"));
+        assert!(validate_trace(&text).unwrap_err().contains("outside"));
+        // unterminated span
+        let text = trace_of(|w| w.on_search_start("hst", 10, 4, 1));
+        assert!(validate_trace(&text).unwrap_err().contains("open"));
+        // interleaved spans
+        let text = trace_of(|w| {
+            w.on_search_start("hst", 10, 4, 1);
+            w.on_search_start("brute", 10, 4, 1);
+        });
+        assert!(validate_trace(&text).unwrap_err().contains("interleave"));
+        // wrong engine inside a span
+        let text = trace_of(|w| {
+            w.on_search_start("hst", 10, 4, 1);
+            w.on_phase("brute", "search");
+        });
+        assert!(validate_trace(&text).unwrap_err().contains("brute"));
+        // wrong schema
+        assert!(validate_trace("{\"schema\":\"hst-trace/999\"}\n")
+            .unwrap_err()
+            .contains("hst-trace/1"));
+        assert!(validate_trace("").is_err());
+    }
+
+    #[test]
+    fn nan_best_serializes_as_null() {
+        let text = trace_of(|w| {
+            w.on_search_start("hst", 10, 4, 1);
+            w.on_pass(&PassEvent {
+                engine: "hst",
+                phase: "prepare",
+                index: 0,
+                candidates: 1,
+                abandons: 0,
+                calls: 0,
+                best: f64::NAN,
+            });
+            w.on_search_end("hst", 0, 0);
+        });
+        assert!(text.contains("\"best\":null"), "{text}");
+        validate_trace(&text).unwrap();
+    }
+
+    #[test]
+    fn empty_span_with_no_calls_validates() {
+        let text = trace_of(|w| {
+            w.on_search_start("brute", 0, 4, 1);
+            w.on_search_end("brute", 0, 0);
+        });
+        let s = validate_trace(&text).unwrap();
+        assert_eq!(s.searches, 1);
+        assert_eq!(s.passes, 0);
+    }
+}

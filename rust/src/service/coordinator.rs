@@ -11,7 +11,6 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -21,6 +20,7 @@ use crate::algo;
 use crate::config::{SaxParams, SearchParams};
 use crate::context::SearchContext;
 use crate::mdim::{self, MdimAlgorithm as _, MdimContext, MdimParams};
+use crate::obs::{Counter, Registry, LATENCY_BUCKETS_MS, SIZE_BUCKETS};
 use crate::snapshot::{self, store, ContextSnapshot, ProfileEntry};
 use crate::stream::StreamingMonitor;
 use crate::ts::{datasets, MultiSeries, TimeSeries};
@@ -584,14 +584,55 @@ pub struct CoordinatorStats {
     pub snapshot_profiles_seeded: u64,
 }
 
-/// Monotonic counters behind the `stats` snapshot fields.
-#[derive(Default)]
+/// Every metric name the service records into (or syncs at exposition
+/// into) the coordinator's [`Registry`] — the `metrics` protocol
+/// command exposes exactly these. `docs/OBSERVABILITY.md`'s metric
+/// table is pinned to this list by `tests/docs_consistency.rs`.
+pub const SERVICE_METRIC_NAMES: [&str; 16] = [
+    // counters (worker pool)
+    "hst_jobs_completed_total",
+    "hst_jobs_failed_total",
+    // per-engine histograms, recorded on every finished job
+    "hst_job_latency_ms",
+    "hst_job_cps",
+    // counters (snapshot subsystem; the `stats` fields are views of these)
+    "hst_snapshot_saves_total",
+    "hst_snapshot_restores_total",
+    "hst_snapshot_contexts_restored_total",
+    "hst_snapshot_streams_restored_total",
+    "hst_snapshot_profiles_seeded_total",
+    // counters absorbed from the stream registry's ingest atomics
+    "hst_stream_frames_rx_total",
+    "hst_stream_points_rx_total",
+    "hst_stream_frames_shed_total",
+    // gauges synced from live state at exposition time
+    "hst_jobs_queued",
+    "hst_jobs_running",
+    "hst_ctx_cache_entries",
+    "hst_streams_open",
+];
+
+/// Monotonic counters behind the `stats` snapshot fields — registry
+/// [`Counter`] handles, so `stats` and `metrics` report the same
+/// values from the same cells.
 struct SnapshotCounters {
-    saves: AtomicU64,
-    restores: AtomicU64,
-    contexts_restored: AtomicU64,
-    streams_restored: AtomicU64,
-    profiles_seeded: AtomicU64,
+    saves: Arc<Counter>,
+    restores: Arc<Counter>,
+    contexts_restored: Arc<Counter>,
+    streams_restored: Arc<Counter>,
+    profiles_seeded: Arc<Counter>,
+}
+
+impl SnapshotCounters {
+    fn new(obs: &Registry) -> SnapshotCounters {
+        SnapshotCounters {
+            saves: obs.counter("hst_snapshot_saves_total"),
+            restores: obs.counter("hst_snapshot_restores_total"),
+            contexts_restored: obs.counter("hst_snapshot_contexts_restored_total"),
+            streams_restored: obs.counter("hst_snapshot_streams_restored_total"),
+            profiles_seeded: obs.counter("hst_snapshot_profiles_seeded_total"),
+        }
+    }
 }
 
 /// What one [`Coordinator::snapshot_save`] wrote.
@@ -709,6 +750,7 @@ pub struct Coordinator {
     capacity: usize,
     streams: StreamRegistry,
     snaps: SnapshotCounters,
+    obs: Arc<Registry>,
 }
 
 impl Coordinator {
@@ -743,11 +785,13 @@ impl Coordinator {
             Condvar::new(),
         ));
         let cache = Arc::new(ContextCache::new(cfg.ctx_cache.max(1)));
+        let obs = Arc::new(Registry::new());
         let workers = (0..n_workers)
             .map(|_| {
                 let inner = Arc::clone(&inner);
                 let cache = Arc::clone(&cache);
-                std::thread::spawn(move || worker_loop(inner, cache))
+                let obs = Arc::clone(&obs);
+                std::thread::spawn(move || worker_loop(inner, cache, obs))
             })
             .collect();
         let streams = StreamRegistry::new(cfg.max_streams);
@@ -760,8 +804,43 @@ impl Coordinator {
             cache,
             capacity: cfg.capacity,
             streams,
-            snaps: SnapshotCounters::default(),
+            snaps: SnapshotCounters::new(&obs),
+            obs,
         }
+    }
+
+    /// The coordinator's metrics registry (the `metrics` protocol
+    /// command). Workers record per-engine job latency and cps
+    /// histograms here; the snapshot counters live here too.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.obs
+    }
+
+    /// Sync the point-in-time gauges (queue depth, running jobs,
+    /// context cache, open streams) and absorb the stream registry's
+    /// ingest counters into the registry, then return it for
+    /// snapshotting — the one call behind every `metrics` reply.
+    pub fn sync_registry(&self) -> &Arc<Registry> {
+        let st = self.stats();
+        self.obs.gauge("hst_jobs_queued").set(st.queued as u64);
+        self.obs.gauge("hst_jobs_running").set(st.running as u64);
+        self.obs
+            .gauge("hst_ctx_cache_entries")
+            .set(st.ctx_cache_entries as u64);
+        self.obs.gauge("hst_streams_open").set(st.streams as u64);
+        let ingest = self.streams.ingest_stats();
+        // record_absolute: the stream registry keeps its own monotonic
+        // atomics; absorbing by max never moves a counter backwards.
+        self.obs
+            .counter("hst_stream_frames_rx_total")
+            .record_absolute(ingest.frames_rx);
+        self.obs
+            .counter("hst_stream_points_rx_total")
+            .record_absolute(ingest.points_rx);
+        self.obs
+            .counter("hst_stream_frames_shed_total")
+            .record_absolute(ingest.frames_shed);
+        &self.obs
     }
 
     /// The per-stream monitor registry (the `stream_open` / `append` /
@@ -845,20 +924,13 @@ impl Coordinator {
             queue_capacity: self.capacity,
             ctx_cache_entries: self.cache.len(),
             streams: self.streams.len(),
-            snapshot_saves: self.snaps.saves.load(Ordering::Relaxed),
-            snapshot_restores: self.snaps.restores.load(Ordering::Relaxed),
-            snapshot_contexts_restored: self
-                .snaps
-                .contexts_restored
-                .load(Ordering::Relaxed),
-            snapshot_streams_restored: self
-                .snaps
-                .streams_restored
-                .load(Ordering::Relaxed),
-            snapshot_profiles_seeded: self
-                .snaps
-                .profiles_seeded
-                .load(Ordering::Relaxed),
+            // views over the obs registry: the `stats` reply and the
+            // `metrics` exposition read the same counter cells
+            snapshot_saves: self.snaps.saves.get(),
+            snapshot_restores: self.snaps.restores.get(),
+            snapshot_contexts_restored: self.snaps.contexts_restored.get(),
+            snapshot_streams_restored: self.snaps.streams_restored.get(),
+            snapshot_profiles_seeded: self.snaps.profiles_seeded.get(),
         }
     }
 
@@ -924,7 +996,7 @@ impl Coordinator {
             report.monitors += 1;
             report.files.push(name);
         }
-        self.snaps.saves.fetch_add(1, Ordering::Relaxed);
+        self.snaps.saves.inc();
         Ok(report)
     }
 
@@ -1000,12 +1072,10 @@ impl Coordinator {
                         report.contexts += 1;
                         report.profiles += c.profiles.len();
                         report.files.push(file);
-                        self.snaps
-                            .contexts_restored
-                            .fetch_add(1, Ordering::Relaxed);
+                        self.snaps.contexts_restored.inc();
                         self.snaps
                             .profiles_seeded
-                            .fetch_add(c.profiles.len() as u64, Ordering::Relaxed);
+                            .add(c.profiles.len() as u64);
                     } else {
                         report.skipped += 1;
                     }
@@ -1024,13 +1094,11 @@ impl Coordinator {
                     })?;
                     report.monitors += 1;
                     report.files.push(file);
-                    self.snaps
-                        .streams_restored
-                        .fetch_add(1, Ordering::Relaxed);
+                    self.snaps.streams_restored.inc();
                 }
             }
         }
-        self.snaps.restores.fetch_add(1, Ordering::Relaxed);
+        self.snaps.restores.inc();
         Ok(report)
     }
 
@@ -1100,7 +1168,11 @@ impl Coordinator {
     }
 }
 
-fn worker_loop(inner: Arc<(Mutex<Inner>, Condvar)>, cache: Arc<ContextCache>) {
+fn worker_loop(
+    inner: Arc<(Mutex<Inner>, Condvar)>,
+    cache: Arc<ContextCache>,
+    obs: Arc<Registry>,
+) {
     loop {
         let (id, spec) = {
             let (lock, cvar) = &*inner;
@@ -1117,11 +1189,13 @@ fn worker_loop(inner: Arc<(Mutex<Inner>, Condvar)>, cache: Arc<ContextCache>) {
                 g = cvar.wait(g).unwrap();
             }
         };
+        let started = std::time::Instant::now();
         let outcome = match &spec {
             Job::Search(spec) => run_job(spec, &cache),
             Job::Mdim(spec) => run_mdim_job(spec),
             Job::Vl(spec) => run_vl_job(spec, &cache),
         };
+        record_job_metrics(&obs, &outcome, started.elapsed());
         let (lock, _) = &*inner;
         let mut g = lock.lock().unwrap();
         g.running -= 1;
@@ -1129,6 +1203,46 @@ fn worker_loop(inner: Arc<(Mutex<Inner>, Condvar)>, cache: Arc<ContextCache>) {
             Ok(report) => JobState::Done(report),
             Err(e) => JobState::Failed(format!("{e:#}")),
         };
+    }
+}
+
+/// Per-job observability, recorded after the engine returns — never on
+/// the search hot path. The engine label comes from the *report* (the
+/// resolved registry id), not the request string, so label cardinality
+/// is bounded by the engine registry; failed jobs (which may carry an
+/// arbitrary requested name) count unlabeled.
+fn record_job_metrics(
+    obs: &Registry,
+    outcome: &Result<Json>,
+    elapsed: std::time::Duration,
+) {
+    match outcome {
+        Ok(report) => {
+            let engine = report
+                .get("algo")
+                .and_then(|a| a.as_str())
+                .unwrap_or("unknown")
+                .to_string();
+            obs.labeled_counter("hst_jobs_completed_total", "engine", &engine)
+                .inc();
+            obs.labeled_histogram(
+                "hst_job_latency_ms",
+                "engine",
+                &engine,
+                &LATENCY_BUCKETS_MS,
+            )
+            .observe(elapsed.as_secs_f64() * 1e3);
+            if let Some(cps) = report.get("cps").and_then(|c| c.as_f64()) {
+                obs.labeled_histogram(
+                    "hst_job_cps",
+                    "engine",
+                    &engine,
+                    &SIZE_BUCKETS,
+                )
+                .observe(cps);
+            }
+        }
+        Err(_) => obs.counter("hst_jobs_failed_total").inc(),
     }
 }
 

@@ -623,7 +623,7 @@ fn flush(conn: &mut Conn) -> bool {
 /// Every `cmd` the dispatcher accepts, in `docs/PROTOCOL.md` order.
 /// `tests/docs_consistency.rs` asserts the protocol document covers each
 /// of these, so the list and the doc cannot drift apart.
-pub const COMMANDS: [&str; 16] = [
+pub const COMMANDS: [&str; 17] = [
     "hello",
     "submit",
     "batch",
@@ -632,6 +632,7 @@ pub const COMMANDS: [&str; 16] = [
     "status",
     "wait",
     "stats",
+    "metrics",
     "list",
     "stream_open",
     "append",
@@ -897,6 +898,33 @@ fn dispatch(
                         st.snapshot_profiles_seeded,
                     ),
             )
+        }
+        Some("metrics") => {
+            if let Err(e) = check_fields(&req, &["cmd", "format"]) {
+                return reply(e);
+            }
+            let format = match req.get("format").map(|f| f.as_str()) {
+                None | Some(Some("json")) => "json",
+                Some(Some("prometheus")) => "prometheus",
+                _ => {
+                    return reply(err_reply(
+                        "field `format` must be \"json\" or \"prometheus\"",
+                    ))
+                }
+            };
+            // sync_registry refreshes the gauges and absorbs the stream
+            // ingest counters, so both formats expose one coherent view
+            let snapshot = coord.sync_registry().snapshot();
+            reply(match format {
+                "prometheus" => Json::obj()
+                    .set("ok", true)
+                    .set("format", "prometheus")
+                    .set("body", snapshot.to_prometheus()),
+                _ => Json::obj()
+                    .set("ok", true)
+                    .set("format", "json")
+                    .set("metrics", snapshot.to_json()),
+            })
         }
         Some("list") => {
             if let Err(e) = check_fields(&req, &["cmd"]) {

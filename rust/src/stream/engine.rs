@@ -32,7 +32,7 @@ impl Algorithm for HstStream {
         ENGINE_ID
     }
 
-    fn run_ctx(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
+    fn search(&self, ctx: &SearchContext, params: &SearchParams) -> Result<SearchReport> {
         // scalar_only: streaming exactness (bit-identity with cold serial
         // runs) requires the exact backend regardless of the context's
         // configured one.

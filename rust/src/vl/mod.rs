@@ -226,7 +226,7 @@ impl HstVl {
         let mut lengths: Vec<VlLength> = Vec::with_capacity(range.count());
         let mut vlc: Option<VlContext> = None;
         let mut prev_sax: Option<SaxParams> = None;
-        for s in range.lengths() {
+        for (li, s) in range.lengths().enumerate() {
             ctx.check(total_calls)?;
             let pl = Self::params_for_length(base, s);
             let mut transfer_calls = 0u64;
@@ -236,6 +236,18 @@ impl HstVl {
                     transfer_calls = v
                         .transfer_profile(ctx, psax.s, psax, s, total_calls)?;
                     total_calls += transfer_calls;
+                    // The transfer's exact re-evaluations are distance
+                    // calls of this span; a pass event keeps the trace's
+                    // per-span call sum equal to the report total.
+                    ctx.trace_pass(&crate::obs::PassEvent {
+                        engine: ENGINE_ID,
+                        phase: "prepare",
+                        index: li,
+                        candidates: ts.num_sequences(s) as u64,
+                        abandons: 0,
+                        calls: transfer_calls,
+                        best: f64::NAN,
+                    });
                     true
                 }
                 _ => {
@@ -289,7 +301,7 @@ impl Algorithm for HstVl {
     /// per-length preparation was paid (the cold first length).
     /// `n_sequences` counts windows at the longest scanned length, the
     /// one every scanned length's window count is bounded below by.
-    fn run_ctx(
+    fn search(
         &self,
         ctx: &SearchContext,
         params: &SearchParams,

@@ -298,6 +298,7 @@ fn protocol_doc_pins_the_snapshot_format() {
 fn architecture_doc_exists_and_is_linked() {
     let arch = repo_file("docs/ARCHITECTURE.md");
     assert!(arch.contains("stream"), "layer map must include the stream layer");
+    assert!(arch.contains("obs"), "layer map must include the obs layer");
     let readme = repo_file("README.md");
     assert!(
         readme.contains("docs/ARCHITECTURE.md"),
@@ -306,5 +307,78 @@ fn architecture_doc_exists_and_is_linked() {
     assert!(
         readme.contains("docs/PROTOCOL.md"),
         "README must link docs/PROTOCOL.md"
+    );
+}
+
+#[test]
+fn observability_doc_metric_table_matches_the_service_registry() {
+    use hstime::service::coordinator::SERVICE_METRIC_NAMES;
+
+    // Both directions between SERVICE_METRIC_NAMES and the doc's metric
+    // table: a metric the service records but the doc omits fails here,
+    // and so does a documented metric the service no longer emits.
+    let doc = repo_file("docs/OBSERVABILITY.md");
+    let section = doc
+        .split("### Service metrics")
+        .nth(1)
+        .expect("docs/OBSERVABILITY.md must keep its `### Service metrics` table");
+    let section = section.split("\n###").next().unwrap();
+    let rows: Vec<String> = section
+        .lines()
+        .filter(|l| l.starts_with("| `"))
+        .map(|l| {
+            l.trim_start_matches("| `")
+                .split('`')
+                .next()
+                .unwrap()
+                .to_string()
+        })
+        .collect();
+    assert_eq!(
+        rows.len(),
+        SERVICE_METRIC_NAMES.len(),
+        "metric table has {} rows but the service registers {} names \
+         ({rows:?} vs {SERVICE_METRIC_NAMES:?})",
+        rows.len(),
+        SERVICE_METRIC_NAMES.len()
+    );
+    for name in SERVICE_METRIC_NAMES {
+        assert!(
+            rows.iter().any(|r| r == name),
+            "service metric `{name}` is missing from the \
+             docs/OBSERVABILITY.md table"
+        );
+    }
+}
+
+#[test]
+fn observability_doc_pins_the_trace_schema_and_is_linked() {
+    use hstime::obs::TRACE_SCHEMA;
+
+    let doc = repo_file("docs/OBSERVABILITY.md");
+    assert!(
+        doc.contains(TRACE_SCHEMA),
+        "docs/OBSERVABILITY.md must name the trace schema ({TRACE_SCHEMA})"
+    );
+    // the event-by-event reference must cover the whole span shape
+    for event in ["search_start", "phase", "pass", "discord", "search_end"] {
+        assert!(
+            doc.contains(&format!("`{event}`")),
+            "docs/OBSERVABILITY.md must document the `{event}` event"
+        );
+    }
+    // and both CLI faces of the trace
+    assert!(
+        doc.contains("--trace"),
+        "docs/OBSERVABILITY.md must document the `--trace` flag"
+    );
+    assert!(
+        doc.contains("hst trace"),
+        "docs/OBSERVABILITY.md must document the `hst trace` validator"
+    );
+    let readme = repo_file("README.md");
+    assert!(
+        readme.contains("docs/OBSERVABILITY.md"),
+        "README must link docs/OBSERVABILITY.md"
     );
 }

@@ -1,0 +1,411 @@
+//! Observability integration: the layer's hard invariant and its two
+//! exposition surfaces.
+//!
+//! 1. **Neutrality** — attaching a trace sink must not change what any
+//!    engine computes: discord positions, exact nnd *bit patterns*,
+//!    `distance_calls`, and `prep_calls` are compared between a bare run
+//!    and a traced run for every engine in `ALL_ENGINES`. Sinks only
+//!    read values the engines already maintain; this test is what makes
+//!    that a property instead of a convention.
+//! 2. **Trace schema** — real engine runs must produce traces that
+//!    `validate_trace` accepts, with per-span pass call-sums equal to
+//!    the report totals (prep included) and one discord event per
+//!    reported discord.
+//! 3. **Service metrics** — the coordinator's registry carries the
+//!    per-engine latency/cps histograms and the `stats`-backing
+//!    counters, and the Prometheus text exposition round-trips the
+//!    snapshot through `parse_prometheus`. The TCP `metrics` command is
+//!    exercised end to end in both formats.
+
+use std::fmt::Write as _;
+use std::io::Write;
+use std::sync::{mpsc, Arc, Mutex};
+
+use hstime::algo::{self, Algorithm as _, SearchReport};
+use hstime::config::SearchParams;
+use hstime::context::SearchContext;
+use hstime::obs::{
+    parse_prometheus, validate_trace, JsonlTraceWriter, MetricValue, Snapshot,
+    TraceSink,
+};
+use hstime::service::{serve, Client, Coordinator, JobSpec, JobState};
+use hstime::ts::{generators, TimeSeries};
+use hstime::util::json::Json;
+
+/// A writer that shares its buffer so tests can read the trace back.
+#[derive(Clone, Default)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl SharedBuf {
+    fn text(&self) -> String {
+        String::from_utf8(self.0.lock().unwrap().clone()).unwrap()
+    }
+}
+
+/// Fixed-seed fixture shared by the neutrality and schema tests. Small
+/// enough that 14 engines × 2 runs stay fast, long enough that every
+/// engine does real pruning work. One thread, because at ≥ 2 workers the
+/// sharded engines' call *counts* legitimately vary with interleaving
+/// (see `algo::hst::par`) and this test compares counts bit for bit.
+fn fixture() -> (TimeSeries, SearchParams) {
+    (
+        TimeSeries::new("obs-ecg", generators::ecg_like(1_500, 110, 1, 42)),
+        SearchParams::new(96, 4, 4)
+            .with_discords(2)
+            .with_seed(7)
+            .with_threads(1),
+    )
+}
+
+/// Run one engine on a cold context, optionally with a trace sink
+/// attached. `dadd` has no default range, so it is calibrated from an
+/// HST run on a separate, sink-less context — identically in both arms,
+/// so the calibrated `r` cannot differ between bare and traced runs.
+fn run_engine(
+    engine: &str,
+    ts: &TimeSeries,
+    params: &SearchParams,
+    sink: Option<Arc<dyn TraceSink>>,
+) -> SearchReport {
+    let mut b = SearchContext::builder(ts);
+    if let Some(s) = sink {
+        b = b.trace_sink(s);
+    }
+    let ctx = b.build();
+    if engine == "dadd" {
+        let cal_ctx = SearchContext::builder(ts).build();
+        let hst = algo::hst::HstSearch::default()
+            .run_ctx(&cal_ctx, params)
+            .expect("hst calibration run");
+        let top = hst.discords.last().expect("calibration discord");
+        let dadd = algo::dadd::Dadd {
+            r: top.nnd * 0.99 * 0.999_999,
+            page_size: 10_000,
+        };
+        return dadd.run_ctx(&ctx, params).expect("dadd run");
+    }
+    algo::by_name(engine)
+        .unwrap_or_else(|| panic!("unknown engine {engine}"))
+        .run_ctx(&ctx, params)
+        .unwrap_or_else(|e| panic!("{engine} failed: {e:#}"))
+}
+
+/// Everything the neutrality property pins, in one comparable string:
+/// positions, neighbors, nnd bit patterns, and both call counters.
+fn fingerprint(engine: &str, rep: &SearchReport) -> String {
+    let mut line = format!(
+        "{engine} calls={} prep={}",
+        rep.distance_calls, rep.prep_calls
+    );
+    for d in &rep.discords {
+        write!(
+            line,
+            " {}:{}:{:016x}",
+            d.position,
+            d.neighbor,
+            d.nnd.to_bits()
+        )
+        .unwrap();
+    }
+    line
+}
+
+#[test]
+fn tracing_is_observationally_neutral_for_every_engine() {
+    let (ts, params) = fixture();
+    let mut failures = Vec::new();
+    for engine in algo::ALL_ENGINES {
+        let bare = run_engine(engine, &ts, &params, None);
+        let buf = SharedBuf::default();
+        let writer =
+            Arc::new(JsonlTraceWriter::to_writer(Box::new(buf.clone())));
+        let sink: Arc<dyn TraceSink> = Arc::clone(&writer);
+        let traced = run_engine(engine, &ts, &params, Some(sink));
+        assert_eq!(writer.finish().unwrap(), 0, "{engine}: trace IO failed");
+        let (want, got) = (fingerprint(engine, &bare), fingerprint(engine, &traced));
+        if want != got {
+            failures.push(format!(
+                "{engine}: tracing changed the search\n bare:   {want}\n traced: {got}"
+            ));
+        }
+        // while we have the per-engine trace in hand, it must be
+        // well-formed on its own: exactly one span, call sums exact
+        let summary = validate_trace(&buf.text())
+            .unwrap_or_else(|e| panic!("{engine}: invalid trace: {e}"));
+        assert_eq!(summary.searches, 1, "{engine}: expected one span");
+        assert_eq!(
+            summary.distance_calls, traced.distance_calls,
+            "{engine}: trace call total drifted from the report"
+        );
+        assert_eq!(
+            summary.prep_calls, traced.prep_calls,
+            "{engine}: trace prep total drifted from the report"
+        );
+        assert_eq!(
+            summary.discords,
+            traced.discords.len(),
+            "{engine}: discord events != reported discords"
+        );
+    }
+    assert!(failures.is_empty(), "{}", failures.join("\n"));
+}
+
+#[test]
+fn all_engine_traces_validate_through_one_writer() {
+    let (ts, params) = fixture();
+    let buf = SharedBuf::default();
+    let writer = Arc::new(JsonlTraceWriter::to_writer(Box::new(buf.clone())));
+    let sink: Arc<dyn TraceSink> = Arc::clone(&writer);
+    let mut total_calls = 0u64;
+    let mut total_prep = 0u64;
+    let mut total_discords = 0usize;
+    for engine in algo::ALL_ENGINES {
+        let rep = run_engine(engine, &ts, &params, Some(Arc::clone(&sink)));
+        total_calls += rep.distance_calls;
+        total_prep += rep.prep_calls;
+        total_discords += rep.discords.len();
+    }
+    assert_eq!(writer.finish().unwrap(), 0);
+    let summary = validate_trace(&buf.text()).expect("multi-engine trace");
+    assert_eq!(summary.searches, algo::ALL_ENGINES.len());
+    assert_eq!(summary.distance_calls, total_calls);
+    assert_eq!(summary.prep_calls, total_prep);
+    assert_eq!(summary.discords, total_discords);
+    assert!(summary.passes >= summary.searches);
+}
+
+/// Find one metric in a snapshot by name and optional label value.
+fn metric<'a>(
+    snap: &'a Snapshot,
+    name: &str,
+    label: Option<&str>,
+) -> &'a MetricValue {
+    snap.metrics
+        .iter()
+        .find(|m| {
+            m.name == name
+                && m.label.as_ref().map(|(_, v)| v.as_str()) == label
+        })
+        .map(|m| &m.value)
+        .unwrap_or_else(|| panic!("metric {name} (label {label:?}) not in snapshot"))
+}
+
+fn counter_value(v: &MetricValue) -> u64 {
+    match v {
+        MetricValue::Counter(c) => *c,
+        other => panic!("expected counter, got {other:?}"),
+    }
+}
+
+fn gauge_value(v: &MetricValue) -> u64 {
+    match v {
+        MetricValue::Gauge(g) => *g,
+        other => panic!("expected gauge, got {other:?}"),
+    }
+}
+
+fn quick_spec(algo: &str) -> JobSpec {
+    JobSpec {
+        dataset: "synthetic:noise=0.3,n=1500,seed=5".into(),
+        scale_div: 1,
+        algo: algo.into(),
+        params: SearchParams::new(64, 4, 4).with_discords(1).with_seed(7),
+    }
+}
+
+#[test]
+fn coordinator_registry_records_per_engine_job_metrics() {
+    let coord = Coordinator::start(2, 16);
+    for _ in 0..3 {
+        let id = coord.submit(quick_spec("hst")).unwrap();
+        assert!(matches!(coord.wait(id), Some(JobState::Done(_))));
+    }
+    let id = coord.submit(quick_spec("brute")).unwrap();
+    assert!(matches!(coord.wait(id), Some(JobState::Done(_))));
+
+    let snap = coord.sync_registry().snapshot();
+    assert_eq!(
+        counter_value(metric(&snap, "hst_jobs_completed_total", Some("hst"))),
+        3
+    );
+    assert_eq!(
+        counter_value(metric(&snap, "hst_jobs_completed_total", Some("brute"))),
+        1
+    );
+    match metric(&snap, "hst_job_latency_ms", Some("hst")) {
+        MetricValue::Histogram(h) => {
+            assert_eq!(h.count, 3, "one latency observation per hst job");
+            assert!(h.quantile(0.5) <= h.quantile(0.99), "p50 must not exceed p99");
+            let summary = h.summary_json();
+            assert_eq!(summary.get("count").unwrap().as_u64(), Some(3));
+            assert!(summary.get("p99").unwrap().as_f64().is_some());
+        }
+        other => panic!("latency must be a histogram, got {other:?}"),
+    }
+    match metric(&snap, "hst_job_cps", Some("hst")) {
+        MetricValue::Histogram(h) => assert_eq!(h.count, 3),
+        other => panic!("cps must be a histogram, got {other:?}"),
+    }
+
+    // satellite (b) regression: the `stats` fields are views over the
+    // same registry cells the `metrics` command exposes
+    let st = coord.stats();
+    assert_eq!(
+        counter_value(metric(&snap, "hst_snapshot_saves_total", None)),
+        st.snapshot_saves
+    );
+    assert_eq!(
+        counter_value(metric(&snap, "hst_snapshot_restores_total", None)),
+        st.snapshot_restores
+    );
+    assert_eq!(gauge_value(metric(&snap, "hst_jobs_queued", None)), st.queued as u64);
+    assert_eq!(
+        gauge_value(metric(&snap, "hst_ctx_cache_entries", None)),
+        st.ctx_cache_entries as u64
+    );
+    assert_eq!(gauge_value(metric(&snap, "hst_streams_open", None)), st.streams as u64);
+
+    coord.shutdown();
+}
+
+#[test]
+fn snapshot_counters_survive_the_stats_view_refactor() {
+    let dir = std::env::temp_dir().join(format!(
+        "hstime_obs_snap_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    let coord = Coordinator::start(1, 8);
+    let id = coord.submit(quick_spec("hst")).unwrap();
+    assert!(matches!(coord.wait(id), Some(JobState::Done(_))));
+    coord.snapshot_save(&dir).unwrap();
+    assert_eq!(coord.stats().snapshot_saves, 1);
+    let snap = coord.registry().snapshot();
+    assert_eq!(
+        counter_value(metric(&snap, "hst_snapshot_saves_total", None)),
+        1
+    );
+    coord.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn prometheus_text_round_trips_the_registry_snapshot() {
+    let coord = Coordinator::start(1, 8);
+    let id = coord.submit(quick_spec("hst")).unwrap();
+    assert!(matches!(coord.wait(id), Some(JobState::Done(_))));
+    let snap = coord.sync_registry().snapshot();
+    let parsed = parse_prometheus(&snap.to_prometheus()).expect("own exposition");
+
+    // every snapshot value must appear in the parsed text verbatim
+    for m in &snap.metrics {
+        let suffix = match &m.label {
+            Some((k, v)) => format!("{{{k}=\"{v}\"}}"),
+            None => String::new(),
+        };
+        match &m.value {
+            MetricValue::Counter(v) | MetricValue::Gauge(v) => {
+                let key = format!("{}{}", m.name, suffix);
+                assert_eq!(parsed.get(&key), Some(&(*v as f64)), "{key}");
+            }
+            MetricValue::Histogram(h) => {
+                let count_key = format!("{}_count{}", m.name, suffix);
+                assert_eq!(
+                    parsed.get(&count_key),
+                    Some(&(h.count as f64)),
+                    "{count_key}"
+                );
+                let sum_key = format!("{}_sum{}", m.name, suffix);
+                let sum = *parsed.get(&sum_key).unwrap_or_else(|| {
+                    panic!("{sum_key} missing from exposition")
+                });
+                assert!((sum - h.sum).abs() <= h.sum.abs() * 1e-9 + 1e-9, "{sum_key}");
+                // the +Inf bucket is cumulative over everything
+                let inf_key = format!("{}_bucket{{{}le=\"+Inf\"}}", m.name, match &m.label {
+                    Some((k, v)) => format!("{k}=\"{v}\","),
+                    None => String::new(),
+                });
+                assert_eq!(parsed.get(&inf_key), Some(&(h.count as f64)), "{inf_key}");
+            }
+        }
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn metrics_command_exposes_both_formats_over_tcp() {
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        serve("127.0.0.1:0", 1, 8, move |addr| {
+            tx.send(addr).unwrap();
+        })
+        .expect("serve failed");
+    });
+    let addr = rx.recv().unwrap();
+    let mut client = Client::connect(addr).unwrap();
+    let job = client
+        .submit(
+            Json::obj()
+                .set("cmd", "submit")
+                .set("dataset", "synthetic:noise=0.3,n=1500,seed=5")
+                .set("algo", "hst")
+                .set("params", Json::obj().set("s", 64u64).set("k", 1u64)),
+        )
+        .unwrap();
+    let reply = client.wait(job).unwrap();
+    assert_eq!(reply.get("state").unwrap().as_str(), Some("done"));
+
+    // JSON format: the latency histogram summary is directly queryable
+    let r = client.call(&Json::obj().set("cmd", "metrics")).unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    assert_eq!(r.get("format").unwrap().as_str(), Some("json"));
+    let metrics = r.get("metrics").unwrap();
+    let latency = metrics
+        .get("hst_job_latency_ms{engine=\"hst\"}")
+        .expect("per-engine latency histogram in metrics reply");
+    assert_eq!(latency.get("type").unwrap().as_str(), Some("histogram"));
+    let summary = latency.get("summary").unwrap();
+    assert_eq!(summary.get("count").unwrap().as_u64(), Some(1));
+    let completed = metrics
+        .get("hst_jobs_completed_total{engine=\"hst\"}")
+        .expect("completed counter");
+    assert_eq!(completed.get("value").unwrap().as_u64(), Some(1));
+
+    // Prometheus format: body is parseable text exposition
+    let r = client
+        .call(&Json::obj().set("cmd", "metrics").set("format", "prometheus"))
+        .unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(true));
+    let body = r.get("body").unwrap().as_str().unwrap();
+    let parsed = parse_prometheus(body).expect("service exposition");
+    assert_eq!(
+        parsed.get("hst_jobs_completed_total{engine=\"hst\"}"),
+        Some(&1.0)
+    );
+    assert_eq!(
+        parsed.get("hst_job_latency_ms_count{engine=\"hst\"}"),
+        Some(&1.0)
+    );
+
+    // bad format is rejected by name
+    let r = client
+        .call(&Json::obj().set("cmd", "metrics").set("format", "xml"))
+        .unwrap();
+    assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+
+    if let Ok(mut c) = Client::connect(addr) {
+        let _ = c.shutdown();
+    }
+    let _ = std::net::TcpStream::connect(addr);
+    let _ = handle.join();
+}
